@@ -1,0 +1,8 @@
+"""Pytest bootstrap: make `python/` importable so the prescribed
+`pytest python/tests/` invocation works from the repository root
+(the suite imports `compile.*`)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

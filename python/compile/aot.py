@@ -1,0 +1,357 @@
+"""AOT pipeline: lower every step function to HLO text + write the manifest.
+
+This is the ONLY place python touches the artifact directory.  After
+``make artifacts`` the rust binary is self-contained: it loads
+``artifacts/manifest.json``, compiles each ``*.hlo.txt`` on the PJRT CPU
+client, and never imports python again.
+
+Interchange is HLO **text** (not ``.serialize()``): jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifact naming: ``{step}__{sig}`` where sig joins each input's dims with
+'x' and inputs with '_', prefixing i32 inputs with 'i'.  rust constructs
+the same names (rust/src/runtime/registry.rs::art_name) — keep in sync.
+
+Usage:
+    python -m compile.aot --out ../artifacts --model bert-tiny \
+        --batch 2 --seq-len 64 --ring 4 --tp 2 [--linformer 32] [--seed 0]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import chain, configs, model, steps, tensorio
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(dims, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(dims), dtype)
+
+
+def art_name(step: str, in_specs) -> str:
+    parts = []
+    for s in in_specs:
+        pre = "i" if s.dtype == jnp.int32 else ""
+        parts.append(pre + "x".join(str(d) for d in s.shape))
+    return step + "__" + "_".join(parts)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# --------------------------------------------------------------------------
+# Step enumeration — must mirror exactly what the rust engines request.
+# --------------------------------------------------------------------------
+
+def _tuplify(fn):
+    """Wrap so every artifact returns a tuple (uniform unpacking in rust)."""
+    @functools.wraps(fn)
+    def wrapped(*args):
+        out = fn(*args)
+        return out if isinstance(out, tuple) else (out,)
+    return wrapped
+
+
+def attention_steps(b, z, lc, l_total, a):
+    """Ring attention step set.  For tensor parallelism lc == l_total and
+    z is the per-device head count — same artifacts, different shapes."""
+    qs = [b, z, lc, a]
+    ss = [b, z, lc, lc]
+    fl = [b, z, lc, l_total]
+    return [
+        ("scores_step", steps.scores_step, [spec(qs), spec(qs)]),
+        ("softmax_fwd", steps.softmax_fwd, [spec(fl)]),
+        ("av_step", steps.av_step, [spec(ss), spec(qs), spec(qs)]),
+        ("attn_dp_step", steps.attn_dp_step, [spec(qs), spec(qs)]),
+        ("softmax_bwd", steps.softmax_bwd, [spec(fl), spec(fl)]),
+        ("attn_dq_step", steps.attn_dq_step, [spec(ss), spec(qs), spec(qs)]),
+        ("attn_dk_step", steps.attn_dk_step, [spec(ss), spec(qs), spec(qs)]),
+        ("attn_dv_step", steps.attn_dv_step, [spec(ss), spec(qs), spec(qs)]),
+    ]
+
+
+def fused_steps(cfg, b, lc, z, a, fp):
+    """§Perf iteration 2 artifacts: fused qkv / add+ln / mlp.
+
+    ``z``/``a`` describe the (possibly head-split) layout; ``fp`` the
+    (possibly column-split) FFN width — so the same set instantiates the
+    sequence-parallel AND tensor-parallel engines.
+    """
+    h = cfg.hidden
+    m = b * lc
+    za = z * a
+    qs = [b, z, lc, a]
+    return [
+        (f"qkv_proj_b{b}",
+         functools.partial(steps.qkv_proj, b=b, z=z, a=a),
+         [spec([m, h]), spec([h, za]), spec([za]), spec([h, za]), spec([za]),
+          spec([h, za]), spec([za])]),
+        ("qkv_proj_bwd", steps.qkv_proj_bwd,
+         [spec([m, h]), spec([h, za]), spec([h, za]), spec([h, za]),
+          spec(qs), spec(qs), spec(qs)]),
+        ("add_ln_fwd", steps.add_ln_fwd,
+         [spec([m, h]), spec([m, h]), spec([h]), spec([h])]),
+        ("mlp_fwd", steps.mlp_fwd,
+         [spec([m, h]), spec([h, fp]), spec([fp]), spec([fp, h]), spec([h])]),
+        ("mlp_bwd", steps.mlp_bwd,
+         [spec([m, h]), spec([h, fp]), spec([fp]), spec([fp, h]), spec([h]),
+          spec([m, h])]),
+    ]
+
+
+def local_steps(cfg, b, lc, l_global, z, a):
+    """Per-token-slice layers shared by all engines (shapes differ only in
+    M = b * lc and the head split).  ``z``/``a`` describe the head layout
+    produced by to_heads; the hidden width of qkv outputs is z * a."""
+    h, f, v = cfg.hidden, cfg.ffn, cfg.vocab
+    m = b * lc
+    za = z * a
+    norm_mlm = float(b * l_global)
+    out = [
+        ("embed_fwd", steps.embed_fwd, [spec([b, lc], I32), spec([v, h]), spec([lc, h])]),
+        ("embed_bwd", steps.embed_bwd, [spec([b, lc], I32), spec([v, h]), spec([lc, h]), spec([m, h])]),
+        ("ln_fwd", steps.ln_fwd, [spec([m, h]), spec([h]), spec([h])]),
+        ("ln_bwd", steps.ln_bwd, [spec([m, h]), spec([h]), spec([h]), spec([m, h])]),
+        ("linear_fwd", steps.linear_fwd, [spec([m, h]), spec([h, za]), spec([za])]),
+        ("linear_bwd", steps.linear_bwd, [spec([m, h]), spec([h, za]), spec([za]), spec([m, za])]),
+        # attention out-projection: [m, za] x [za, h]
+        ("linear_fwd", steps.linear_fwd, [spec([m, za]), spec([za, h]), spec([h])]),
+        ("linear_bwd", steps.linear_bwd, [spec([m, za]), spec([za, h]), spec([h]), spec([m, h])]),
+        (f"to_heads_b{b}", functools.partial(steps.to_heads, b=b, z=z, a=a), [spec([m, za])]),
+        ("from_heads", steps.from_heads, [spec([b, z, lc, a])]),
+        ("add", steps.add, [spec([m, h]), spec([m, h])]),
+        ("bias_add", steps.bias_add, [spec([m, h]), spec([h])]),
+        ("mlm_loss", functools.partial(steps.mlm_loss, norm=norm_mlm),
+         [spec([m, h]), spec([v, h]), spec([v]), spec([m], I32), spec([m])]),
+        ("sop_loss", functools.partial(steps.sop_loss, batch=b, norm=float(b)),
+         [spec([m, h]), spec([2, h]), spec([2]), spec([b], I32)]),
+    ]
+    return out
+
+
+def mlp_steps(cfg, b, lc, fp):
+    """MLP GEMMs; fp is the (possibly column-split) FFN width."""
+    h = cfg.hidden
+    m = b * lc
+    return [
+        ("gelu_linear_fwd", steps.gelu_linear_fwd, [spec([m, h]), spec([h, fp]), spec([fp])]),
+        ("gelu_linear_bwd", steps.gelu_linear_bwd, [spec([m, h]), spec([h, fp]), spec([fp]), spec([m, fp])]),
+        ("linear_fwd", steps.linear_fwd, [spec([m, fp]), spec([fp, h]), spec([h])]),
+        ("linear_bwd", steps.linear_bwd, [spec([m, fp]), spec([fp, h]), spec([h]), spec([m, h])]),
+    ]
+
+
+def enumerate_seqpar(cfg, b, l, n):
+    """Artifacts for the sequence-parallel engine at ring size n."""
+    assert l % n == 0
+    lc = l // n
+    z, a = cfg.heads, cfg.head_dim
+    arts = []
+    arts += local_steps(cfg, b, lc, l, z, a)
+    arts += mlp_steps(cfg, b, lc, cfg.ffn)
+    arts += attention_steps(b, z, lc, l, a)
+    arts += fused_steps(cfg, b, lc, z, a, cfg.ffn)
+    return arts
+
+
+def enumerate_tensorpar(cfg, b, l, t):
+    """Artifacts for the Megatron baseline at TP size t (t=1 == serial)."""
+    assert cfg.heads % t == 0 and cfg.ffn % t == 0
+    zp = cfg.heads // t
+    fp = cfg.ffn // t
+    a = cfg.head_dim
+    arts = []
+    arts += local_steps(cfg, b, l, l, zp, a)
+    arts += mlp_steps(cfg, b, l, fp)
+    arts += attention_steps(b, zp, l, l, a)
+    arts += fused_steps(cfg, b, l, zp, a, fp)
+    return arts
+
+
+def enumerate_linformer(cfg, b, l, n, kproj):
+    """Forward-only Linformer + sequence parallelism (paper §4.3)."""
+    assert l % n == 0
+    lc = l // n
+    z, a = cfg.heads, cfg.head_dim
+    qs = [b, z, lc, a]
+    ks = [b, z, kproj, a]
+    sk = [b, z, lc, kproj]
+    return [
+        ("linformer_proj", steps.linformer_proj_step, [spec([kproj, lc]), spec(qs)]),
+        ("scores_step", steps.scores_step, [spec(qs), spec(ks)]),
+        ("softmax_fwd", steps.softmax_fwd, [spec(sk)]),
+        ("av_step", steps.av_step, [spec(sk), spec(ks), spec(qs)]),
+    ]
+
+
+# --------------------------------------------------------------------------
+# Lowering driver
+# --------------------------------------------------------------------------
+
+def lower_all(art_list, out_dir, manifest):
+    os.makedirs(out_dir, exist_ok=True)
+    for step_name, fn, in_specs in art_list:
+        name = art_name(step_name, in_specs)
+        if name in manifest["artifacts"]:
+            continue
+        wrapped = _tuplify(fn)
+        # keep_unused: several bwd steps take inputs whose VALUE the
+        # gradient doesn't need (e.g. ln_bwd's beta) — without this flag
+        # jax drops them from the HLO signature and the rust call site
+        # (which always passes the full manifest signature) would mismatch.
+        lowered = jax.jit(wrapped, keep_unused=True).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = name + ".hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(wrapped, *in_specs)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [
+                {"dims": list(s.shape), "dtype": "i32" if s.dtype == jnp.int32 else "f32"}
+                for s in in_specs
+            ],
+            "outputs": [
+                {"dims": list(s.shape), "dtype": "i32" if s.dtype == jnp.int32 else "f32"}
+                for s in out_shapes
+            ],
+        }
+        print(f"  lowered {name} ({len(text)} chars)")
+
+
+def export_params(cfg, seq_len, seed, out_dir, manifest):
+    pdir = os.path.join(out_dir, "params")
+    os.makedirs(pdir, exist_ok=True)
+    params = model.init_params(cfg, seq_len, seed)
+    for name, _shape in model.param_spec(cfg, seq_len):
+        safe = name.replace(".", "_")
+        tensorio.save(os.path.join(pdir, safe + ".tensor"), np.asarray(params[name]))
+        manifest["params"].append({
+            "name": name,
+            "dims": list(params[name].shape),
+            "file": f"params/{safe}.tensor",
+        })
+    return params
+
+
+def export_goldens(cfg, params, b, l, ring, out_dir, manifest, seed):
+    """Golden inputs + expected outputs from the validated python chain."""
+    gdir = os.path.join(out_dir, "goldens")
+    os.makedirs(gdir, exist_ok=True)
+    key = jax.random.PRNGKey(seed + 1000)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    ids = jax.random.randint(k1, (b, l), 4, cfg.vocab)
+    labels = jax.random.randint(k2, (b, l), 4, cfg.vocab)
+    mask = (jax.random.uniform(k3, (b, l)) < 0.15).astype(F32)
+    sop = jax.random.randint(k4, (b,), 0, 2)
+
+    res = chain.seqpar_forward_backward(params, ids, labels, mask, sop, cfg, ring)
+
+    def g(name, arr):
+        tensorio.save(os.path.join(gdir, name + ".tensor"), np.asarray(arr))
+        manifest["goldens"][name] = f"goldens/{name}.tensor"
+
+    g("ids", ids)
+    g("labels", labels)
+    g("mask", mask)
+    g("sop_labels", sop)
+    g("loss", np.array([res.loss, res.mlm, res.sop], np.float32))
+    for d, h in enumerate(res.hidden_chunks):
+        g(f"hidden_dev{d}", h)
+    for pname in ("layer0.wq", "mlm_b", "tok_emb"):
+        g("grad_" + pname.replace(".", "_"), res.grads[pname])
+
+    # quickstart goldens: one RSA attention call, chunked q/k/v + outputs
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(seed + 2000), 3)
+    z, a = cfg.heads, cfg.head_dim
+    lc = l // ring
+    from .kernels import ref
+    q = jax.random.normal(kq, (b, z, l, a), F32)
+    kk_ = jax.random.normal(kk, (b, z, l, a), F32)
+    vv = jax.random.normal(kv, (b, z, l, a), F32)
+    qc = [q[:, :, i * lc:(i + 1) * lc] for i in range(ring)]
+    kc = [kk_[:, :, i * lc:(i + 1) * lc] for i in range(ring)]
+    vc = [vv[:, :, i * lc:(i + 1) * lc] for i in range(ring)]
+    outs = ref.ring_attention(qc, kc, vc)
+    for i in range(ring):
+        g(f"qs_dev{i}", qc[i])
+        g(f"ks_dev{i}", kc[i])
+        g(f"vs_dev{i}", vc[i])
+        g(f"attn_out_dev{i}", outs[i])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--model", default="bert-tiny")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--ring", type=int, default=4)
+    ap.add_argument("--tp", type=int, default=2)
+    ap.add_argument("--linformer", type=int, default=0,
+                    help="Linformer projection dim K (0 = skip)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-goldens", action="store_true")
+    args = ap.parse_args()
+
+    cfg = configs.get(args.model)
+    manifest = {
+        "model": args.model,
+        "batch": args.batch,
+        "seq_len": args.seq_len,
+        "ring": args.ring,
+        "tp": args.tp,
+        "linformer_k": args.linformer,
+        "hidden": cfg.hidden,
+        "heads": cfg.heads,
+        "head_dim": cfg.head_dim,
+        "ffn": cfg.ffn,
+        "layers": cfg.layers,
+        "vocab": cfg.vocab,
+        "seed": args.seed,
+        "artifacts": {},
+        "params": [],
+        "goldens": {},
+    }
+
+    arts = []
+    arts += enumerate_seqpar(cfg, args.batch, args.seq_len, args.ring)
+    arts += enumerate_tensorpar(cfg, args.batch, args.seq_len, args.tp)
+    arts += enumerate_tensorpar(cfg, args.batch, args.seq_len, 1)  # serial
+    if args.linformer:
+        arts += enumerate_linformer(cfg, args.batch, args.seq_len, args.ring,
+                                    args.linformer)
+
+    print(f"lowering {args.model} B={args.batch} L={args.seq_len} "
+          f"ring={args.ring} tp={args.tp} ...")
+    lower_all(arts, args.out, manifest)
+    params = export_params(cfg, args.seq_len, args.seed, args.out, manifest)
+    if not args.skip_goldens:
+        export_goldens(cfg, params, args.batch, args.seq_len, args.ring,
+                       args.out, manifest, args.seed)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts, "
+          f"{len(manifest['params'])} params -> {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

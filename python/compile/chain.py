@@ -1,0 +1,370 @@
+"""Pure-python simulation of the rust coordinator's step/comm schedules.
+
+This module executes EXACTLY the chains the rust engines run — same step
+functions (``steps.py``), same ring rotations, same all-reduce points —
+with devices simulated sequentially.  It serves three purposes:
+
+1. Schedule validation: ``pytest`` compares these chains against
+   ``jax.grad`` of the monolithic model, so any schedule bug is caught
+   before it is re-implemented in rust.
+2. Golden export: ``aot.py`` runs the chain to produce the reference
+   outputs that ``examples/quickstart.rs`` and the rust integration tests
+   assert against.
+3. Living documentation of the wire protocol (what moves, when).
+
+Ring convention (matches rust/src/parallel/sequence):  at ring step ``t``
+(t = 0..N-1), device ``d`` holds the chunk ORIGINALLY OWNED by device
+``(d - t) mod N`` — chunks flow to the next-higher rank each step.
+Accumulators that "ride the ring" use the same rotation, so after N steps
+(N-1 sends) chunk i's accumulator is back home.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import steps
+from .configs import ModelConfig
+
+
+def chunk_owner(device: int, t: int, n: int) -> int:
+    """Who originally owns the chunk that device ``device`` holds at step t."""
+    return (device - t) % n
+
+
+# --------------------------------------------------------------------------
+# Sequence-parallel engine (the paper's contribution)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SeqParResult:
+    loss: float
+    mlm: float
+    sop: float
+    hidden_chunks: list            # final hidden per device [M, H]
+    grads: dict                    # name -> global grad (pos_emb assembled)
+
+
+def _rsa_forward(q, k_own, v_own, n_dev, dev, all_k, all_v):
+    """RSA stages 1+2 for one device; all_k/all_v give the ring's contents.
+
+    Returns (ctx, p) where p is stashed for backward.
+    """
+    lc = k_own.shape[2]
+    l = lc * n_dev
+    # stage 1: Ring-QK^T.  At step t we hold chunk (dev - t) % n.
+    parts = [None] * n_dev
+    for t in range(n_dev):
+        src = chunk_owner(dev, t, n_dev)
+        parts[src] = steps.scores_step(q, all_k[src])
+    s = jnp.concatenate(parts, axis=-1)      # [B, Z, Lc, L] in global order
+    p = steps.softmax_fwd(s)
+    # stage 2: Ring-AV, Eq. 4.
+    acc = jnp.zeros_like(q)
+    for t in range(n_dev):
+        src = chunk_owner(dev, t, n_dev)
+        p_i = p[..., src * lc:(src + 1) * lc]
+        acc = steps.av_step(p_i, all_v[src], acc)
+    return acc, p
+
+
+def _rsa_backward(d_ctx, q, p, all_k, all_v, n_dev, dev):
+    """Hand-scheduled RSA backward for one device.
+
+    Returns (dq, dk_contrib, dv_contrib) where dk_contrib[i] / dv_contrib[i]
+    are THIS device's additive contributions to chunk i's gradients (in rust
+    these ride the ring as accumulators; summing across devices here is the
+    same reduction).
+    """
+    lc = all_k[0].shape[2]
+    # ring pass of V: dP_i = dO V_i^T, and dV_i += P_i^T dO
+    dp_parts = [None] * n_dev
+    dv_contrib = [None] * n_dev
+    for t in range(n_dev):
+        src = chunk_owner(dev, t, n_dev)
+        dp_parts[src] = steps.attn_dp_step(d_ctx, all_v[src])
+        p_i = p[..., src * lc:(src + 1) * lc]
+        dv_contrib[src] = steps.attn_dv_step(p_i, d_ctx, jnp.zeros_like(all_v[src]))
+    dp = jnp.concatenate(dp_parts, axis=-1)
+    ds = steps.softmax_bwd(p, dp)
+    # ring pass of K: dQ += scale dS_i K_i, and dK_i += scale dS_i^T Q
+    dq = jnp.zeros_like(q)
+    dk_contrib = [None] * n_dev
+    for t in range(n_dev):
+        src = chunk_owner(dev, t, n_dev)
+        ds_i = ds[..., src * lc:(src + 1) * lc]
+        dq = steps.attn_dq_step(ds_i, all_k[src], dq)
+        dk_contrib[src] = steps.attn_dk_step(ds_i, q, jnp.zeros_like(all_k[src]))
+    return dq, dk_contrib, dv_contrib
+
+
+def seqpar_forward_backward(params, ids, labels, mask, sop_labels,
+                            cfg: ModelConfig, n_dev: int) -> SeqParResult:
+    """Run the full sequence-parallel schedule on n_dev simulated devices."""
+    b, l = ids.shape
+    assert l % n_dev == 0, "sequence length must divide the ring size"
+    lc = l // n_dev
+    z, a = cfg.heads, cfg.head_dim
+    norm_mlm = float(b * l)
+
+    ids_c = [ids[:, d * lc:(d + 1) * lc] for d in range(n_dev)]
+    lab_c = [labels[:, d * lc:(d + 1) * lc].reshape(-1) for d in range(n_dev)]
+    mask_c = [mask[:, d * lc:(d + 1) * lc].reshape(-1) for d in range(n_dev)]
+    pos_c = [params["pos_emb"][d * lc:(d + 1) * lc] for d in range(n_dev)]
+
+    # ---- forward ----------------------------------------------------------
+    x = [steps.embed_fwd(ids_c[d], params["tok_emb"], pos_c[d]) for d in range(n_dev)]
+    stash = []  # per layer: dict of per-device activation lists
+    for i in range(cfg.layers):
+        pfx = f"layer{i}."
+        st = {"x_in": x}
+        q, k, v = [], [], []
+        for d in range(n_dev):
+            q.append(steps.to_heads(steps.linear_fwd(x[d], params[pfx + "wq"], params[pfx + "bq"]), b, z, a))
+            k.append(steps.to_heads(steps.linear_fwd(x[d], params[pfx + "wk"], params[pfx + "bk"]), b, z, a))
+            v.append(steps.to_heads(steps.linear_fwd(x[d], params[pfx + "wv"], params[pfx + "bv"]), b, z, a))
+        st.update(q=q, k=k, v=v)
+        ctx, p = [], []
+        for d in range(n_dev):
+            c, pp = _rsa_forward(q[d], k[d], v[d], n_dev, d, k, v)
+            ctx.append(c)
+            p.append(pp)
+        st.update(ctx=ctx, p=p)
+        attn = [steps.linear_fwd(steps.from_heads(ctx[d]), params[pfx + "wo"], params[pfx + "bo"]) for d in range(n_dev)]
+        pre1 = [steps.add(x[d], attn[d]) for d in range(n_dev)]
+        xm = [steps.ln_fwd(pre1[d], params[pfx + "ln1_g"], params[pfx + "ln1_b"]) for d in range(n_dev)]
+        h = [steps.gelu_linear_fwd(xm[d], params[pfx + "w1"], params[pfx + "b1"]) for d in range(n_dev)]
+        m2 = [steps.linear_fwd(h[d], params[pfx + "w2"], params[pfx + "b2"]) for d in range(n_dev)]
+        pre2 = [steps.add(xm[d], m2[d]) for d in range(n_dev)]
+        x = [steps.ln_fwd(pre2[d], params[pfx + "ln2_g"], params[pfx + "ln2_b"]) for d in range(n_dev)]
+        st.update(pre1=pre1, xm=xm, h=h, pre2=pre2)
+        stash.append(st)
+
+    # ---- losses ------------------------------------------------------------
+    g = {name: jnp.zeros_like(p) for name, p in params.items()}
+    mlm_total = 0.0
+    dx = [None] * n_dev
+    for d in range(n_dev):
+        lo, dxd, dw, db = steps.mlm_loss(x[d], params["mlm_w"], params["mlm_b"],
+                                         lab_c[d], mask_c[d], norm_mlm)
+        mlm_total += float(lo)
+        dx[d] = dxd
+        g["mlm_w"] = g["mlm_w"] + dw
+        g["mlm_b"] = g["mlm_b"] + db
+    sop, dx0, dsw, dsb = steps.sop_loss(x[0], params["sop_w"], params["sop_b"],
+                                        sop_labels, b, float(b))
+    dx[0] = dx[0] + dx0
+    g["sop_w"] = g["sop_w"] + dsw
+    g["sop_b"] = g["sop_b"] + dsb
+
+    hidden = list(x)
+
+    # ---- backward ----------------------------------------------------------
+    for i in reversed(range(cfg.layers)):
+        pfx = f"layer{i}."
+        st = stash[i]
+        new_dx = [None] * n_dev
+        dq_flat, dk_all, dv_all = [None] * n_dev, [], []
+        # ln2 -> mlp -> ln1 local chains per device
+        d_pre2 = [None] * n_dev
+        for d in range(n_dev):
+            dpre, dg2, db2 = steps.ln_bwd(st["pre2"][d], params[pfx + "ln2_g"], params[pfx + "ln2_b"], dx[d])
+            g[pfx + "ln2_g"] = g[pfx + "ln2_g"] + dg2
+            g[pfx + "ln2_b"] = g[pfx + "ln2_b"] + db2
+            d_pre2[d] = dpre
+        dxm = [None] * n_dev
+        for d in range(n_dev):
+            dh, dw2, db2m = steps.linear_bwd(st["h"][d], params[pfx + "w2"], params[pfx + "b2"], d_pre2[d])
+            g[pfx + "w2"] = g[pfx + "w2"] + dw2
+            g[pfx + "b2"] = g[pfx + "b2"] + db2m
+            dxmlp, dw1, db1m = steps.gelu_linear_bwd(st["xm"][d], params[pfx + "w1"], params[pfx + "b1"], dh)
+            g[pfx + "w1"] = g[pfx + "w1"] + dw1
+            g[pfx + "b1"] = g[pfx + "b1"] + db1m
+            dxm[d] = steps.add(d_pre2[d], dxmlp)   # residual join
+        d_pre1 = [None] * n_dev
+        for d in range(n_dev):
+            dpre, dg1, db1 = steps.ln_bwd(st["pre1"][d], params[pfx + "ln1_g"], params[pfx + "ln1_b"], dxm[d])
+            g[pfx + "ln1_g"] = g[pfx + "ln1_g"] + dg1
+            g[pfx + "ln1_b"] = g[pfx + "ln1_b"] + db1
+            d_pre1[d] = dpre
+        # attention out-proj backward
+        d_ctx = [None] * n_dev
+        for d in range(n_dev):
+            dflat, dwo, dbo = steps.linear_bwd(steps.from_heads(st["ctx"][d]), params[pfx + "wo"], params[pfx + "bo"], d_pre1[d])
+            g[pfx + "wo"] = g[pfx + "wo"] + dwo
+            g[pfx + "bo"] = g[pfx + "bo"] + dbo
+            d_ctx[d] = steps.to_heads(dflat, b, z, a)
+        # RSA backward (ring)
+        dk_sum = [jnp.zeros_like(st["k"][d]) for d in range(n_dev)]
+        dv_sum = [jnp.zeros_like(st["v"][d]) for d in range(n_dev)]
+        dq = [None] * n_dev
+        for d in range(n_dev):
+            dqd, dkc, dvc = _rsa_backward(d_ctx[d], st["q"][d], st["p"][d], st["k"], st["v"], n_dev, d)
+            dq[d] = dqd
+            for i2 in range(n_dev):
+                dk_sum[i2] = dk_sum[i2] + dkc[i2]
+                dv_sum[i2] = dv_sum[i2] + dvc[i2]
+        # qkv projection backward + residual join
+        for d in range(n_dev):
+            xin = st["x_in"][d]
+            dxq, dwq, dbq = steps.linear_bwd(xin, params[pfx + "wq"], params[pfx + "bq"], steps.from_heads(dq[d]))
+            dxk, dwk, dbk = steps.linear_bwd(xin, params[pfx + "wk"], params[pfx + "bk"], steps.from_heads(dk_sum[d]))
+            dxv, dwv, dbv = steps.linear_bwd(xin, params[pfx + "wv"], params[pfx + "bv"], steps.from_heads(dv_sum[d]))
+            g[pfx + "wq"] = g[pfx + "wq"] + dwq
+            g[pfx + "bq"] = g[pfx + "bq"] + dbq
+            g[pfx + "wk"] = g[pfx + "wk"] + dwk
+            g[pfx + "bk"] = g[pfx + "bk"] + dbk
+            g[pfx + "wv"] = g[pfx + "wv"] + dwv
+            g[pfx + "bv"] = g[pfx + "bv"] + dbv
+            new_dx[d] = d_pre1[d] + dxq + dxk + dxv
+        dx = new_dx
+
+    # embeddings
+    pos_grads = []
+    for d in range(n_dev):
+        dtok, dpos = steps.embed_bwd(ids_c[d], params["tok_emb"], pos_c[d], dx[d])
+        g["tok_emb"] = g["tok_emb"] + dtok
+        pos_grads.append(dpos)
+    g["pos_emb"] = jnp.concatenate(pos_grads, axis=0)
+
+    total = mlm_total + float(sop)
+    return SeqParResult(total, mlm_total, float(sop), hidden, g)
+
+
+# --------------------------------------------------------------------------
+# Tensor-parallel baseline (Megatron-LM schedule)
+# --------------------------------------------------------------------------
+
+def tensorpar_forward_backward(params, ids, labels, mask, sop_labels,
+                               cfg: ModelConfig, n_dev: int):
+    """Megatron tensor-parallel schedule: attention heads and MLP columns
+    split over n_dev devices; all-reduce after each block's second GEMM
+    (forward) and at each block's input (backward).
+
+    Weight slices per device d:
+        wq/wk/wv columns  [H, Zp*A],  wo rows [Zp*A, H]
+        w1 columns [H, F/N],          w2 rows [F/N, H]
+    Replicated: embeddings, layernorms, biases of second GEMMs, heads.
+
+    Returns (loss, mlm, sop, hidden [B*L,H], grads dict in GLOBAL layout).
+    """
+    b, l = ids.shape
+    z, a, f = cfg.heads, cfg.head_dim, cfg.ffn
+    assert z % n_dev == 0, "heads must divide TP size (Megatron's cap)"
+    zp = z // n_dev
+    fp = f // n_dev
+    norm_mlm = float(b * l)
+
+    g = {name: jnp.zeros_like(p) for name, p in params.items()}
+
+    x = steps.embed_fwd(ids, params["tok_emb"], params["pos_emb"][:l])
+    stash = []
+    for i in range(cfg.layers):
+        pfx = f"layer{i}."
+        st = {"x_in": x}
+        q, k, v, ctx, p = [], [], [], [], []
+        for d in range(n_dev):
+            cols = slice(d * zp * a, (d + 1) * zp * a)
+            qd = steps.to_heads(steps.linear_fwd(x, params[pfx + "wq"][:, cols], params[pfx + "bq"][cols]), b, zp, a)
+            kd = steps.to_heads(steps.linear_fwd(x, params[pfx + "wk"][:, cols], params[pfx + "bk"][cols]), b, zp, a)
+            vd = steps.to_heads(steps.linear_fwd(x, params[pfx + "wv"][:, cols], params[pfx + "bv"][cols]), b, zp, a)
+            s = steps.scores_step(qd, kd)
+            pd = steps.softmax_fwd(s)
+            cd = steps.av_step(pd, vd, jnp.zeros_like(qd))
+            q.append(qd); k.append(kd); v.append(vd); p.append(pd); ctx.append(cd)
+        # row-split out proj: partial sums all-reduced, bias added once
+        partial = [
+            steps.linear_fwd(steps.from_heads(ctx[d]),
+                             params[pfx + "wo"][d * zp * a:(d + 1) * zp * a, :],
+                             jnp.zeros((cfg.hidden,), jnp.float32))
+            for d in range(n_dev)
+        ]
+        attn = steps.bias_add(sum(partial), params[pfx + "bo"])   # all-reduce
+        pre1 = steps.add(x, attn)
+        xm = steps.ln_fwd(pre1, params[pfx + "ln1_g"], params[pfx + "ln1_b"])
+        h = []
+        for d in range(n_dev):
+            cols = slice(d * fp, (d + 1) * fp)
+            h.append(steps.gelu_linear_fwd(xm, params[pfx + "w1"][:, cols], params[pfx + "b1"][cols]))
+        partial2 = [
+            steps.linear_fwd(h[d], params[pfx + "w2"][d * fp:(d + 1) * fp, :],
+                             jnp.zeros((cfg.hidden,), jnp.float32))
+            for d in range(n_dev)
+        ]
+        m2 = steps.bias_add(sum(partial2), params[pfx + "b2"])    # all-reduce
+        pre2 = steps.add(xm, m2)
+        x = steps.ln_fwd(pre2, params[pfx + "ln2_g"], params[pfx + "ln2_b"])
+        st.update(q=q, k=k, v=v, p=p, ctx=ctx, pre1=pre1, xm=xm, h=h, pre2=pre2)
+        stash.append(st)
+
+    # heads are replicated: compute once (device-identical).
+    lo, dx, dw, db = steps.mlm_loss(x, params["mlm_w"], params["mlm_b"],
+                                    labels.reshape(-1), mask.reshape(-1), norm_mlm)
+    g["mlm_w"] = dw
+    g["mlm_b"] = db
+    sop, dx0, dsw, dsb = steps.sop_loss(x, params["sop_w"], params["sop_b"],
+                                        sop_labels, b, float(b))
+    dx = dx + dx0
+    g["sop_w"] = dsw
+    g["sop_b"] = dsb
+
+    hidden = x
+
+    for i in reversed(range(cfg.layers)):
+        pfx = f"layer{i}."
+        st = stash[i]
+        dpre2, dg2, db2 = steps.ln_bwd(st["pre2"], params[pfx + "ln2_g"], params[pfx + "ln2_b"], dx)
+        g[pfx + "ln2_g"] = g[pfx + "ln2_g"] + dg2
+        g[pfx + "ln2_b"] = g[pfx + "ln2_b"] + db2
+        g[pfx + "b2"] = g[pfx + "b2"] + jnp.sum(dpre2, axis=0)
+        dxm_partial = []
+        for d in range(n_dev):
+            rows = slice(d * fp, (d + 1) * fp)
+            cols = slice(d * fp, (d + 1) * fp)
+            dh, dw2, _ = steps.linear_bwd(st["h"][d], params[pfx + "w2"][rows, :],
+                                          jnp.zeros((cfg.hidden,), jnp.float32), dpre2)
+            g[pfx + "w2"] = g[pfx + "w2"].at[rows, :].add(dw2)
+            dxd, dw1, db1m = steps.gelu_linear_bwd(st["xm"], params[pfx + "w1"][:, cols],
+                                                   params[pfx + "b1"][cols], dh)
+            g[pfx + "w1"] = g[pfx + "w1"].at[:, cols].add(dw1)
+            g[pfx + "b1"] = g[pfx + "b1"].at[cols].add(db1m)
+            dxm_partial.append(dxd)
+        dxm = sum(dxm_partial) + dpre2          # all-reduce + residual
+        dpre1, dg1, db1 = steps.ln_bwd(st["pre1"], params[pfx + "ln1_g"], params[pfx + "ln1_b"], dxm)
+        g[pfx + "ln1_g"] = g[pfx + "ln1_g"] + dg1
+        g[pfx + "ln1_b"] = g[pfx + "ln1_b"] + db1
+        g[pfx + "bo"] = g[pfx + "bo"] + jnp.sum(dpre1, axis=0)
+        dx_partial = []
+        for d in range(n_dev):
+            cols = slice(d * zp * a, (d + 1) * zp * a)
+            rows = cols
+            dflat, dwo, _ = steps.linear_bwd(steps.from_heads(st["ctx"][d]),
+                                             params[pfx + "wo"][rows, :],
+                                             jnp.zeros((cfg.hidden,), jnp.float32), dpre1)
+            g[pfx + "wo"] = g[pfx + "wo"].at[rows, :].add(dwo)
+            d_ctx = steps.to_heads(dflat, b, zp, a)
+            dp = steps.attn_dp_step(d_ctx, st["v"][d])
+            ds = steps.softmax_bwd(st["p"][d], dp)
+            dq = steps.attn_dq_step(ds, st["k"][d], jnp.zeros_like(st["q"][d]))
+            dk = steps.attn_dk_step(ds, st["q"][d], jnp.zeros_like(st["k"][d]))
+            dv = steps.attn_dv_step(st["p"][d], d_ctx, jnp.zeros_like(st["v"][d]))
+            dxq, dwq, dbq = steps.linear_bwd(st["x_in"], params[pfx + "wq"][:, cols], params[pfx + "bq"][cols], steps.from_heads(dq))
+            dxk, dwk, dbk = steps.linear_bwd(st["x_in"], params[pfx + "wk"][:, cols], params[pfx + "bk"][cols], steps.from_heads(dk))
+            dxv, dwv, dbv = steps.linear_bwd(st["x_in"], params[pfx + "wv"][:, cols], params[pfx + "bv"][cols], steps.from_heads(dv))
+            g[pfx + "wq"] = g[pfx + "wq"].at[:, cols].add(dwq)
+            g[pfx + "bq"] = g[pfx + "bq"].at[cols].add(dbq)
+            g[pfx + "wk"] = g[pfx + "wk"].at[:, cols].add(dwk)
+            g[pfx + "bk"] = g[pfx + "bk"].at[cols].add(dbk)
+            g[pfx + "wv"] = g[pfx + "wv"].at[:, cols].add(dwv)
+            g[pfx + "bv"] = g[pfx + "bv"].at[cols].add(dbv)
+            dx_partial.append(dxq + dxk + dxv)
+        dx = sum(dx_partial) + dpre1            # all-reduce + residual
+
+    dtok, dpos = steps.embed_bwd(ids, params["tok_emb"], params["pos_emb"][:l], dx)
+    g["tok_emb"] = g["tok_emb"] + dtok
+    g["pos_emb"] = dpos
+
+    return float(lo) + float(sop), float(lo), float(sop), hidden, g

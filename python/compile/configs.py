@@ -1,0 +1,61 @@
+"""Model configurations shared by the AOT pipeline and the tests.
+
+The *simulated* experiments (figures/tables) use BERT-Base/Large exactly as
+the paper; the *real-compute* path (artifacts executed by the rust runtime
+on the CPU PJRT client) uses the small configs so the end-to-end example
+finishes on one CPU host.  `bert-base` is still lowerable for anyone with
+more compute (see examples/train_bert.rs --model).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    layers: int
+    hidden: int          # H
+    heads: int           # Z
+    head_dim: int        # A  (H == Z * A for BERT)
+    vocab: int
+    max_len: int
+    ffn_mult: int = 4
+
+    @property
+    def ffn(self) -> int:
+        return self.ffn_mult * self.hidden
+
+    def params(self) -> int:
+        """Approximate parameter count (embeddings + blocks + heads)."""
+        h, f, v = self.hidden, self.ffn, self.vocab
+        per_layer = (
+            4 * h * h + 4 * h          # qkv + out proj (weights + biases)
+            + h * f + f + f * h + h    # mlp
+            + 4 * h                    # two layernorms
+        )
+        emb = v * h + self.max_len * h
+        heads = v * h + v + 2 * h + 2  # mlm head (untied) + sop head
+        return emb + self.layers * per_layer + heads
+
+
+CONFIGS = {
+    # Paper models (used analytically by the simulator, lowerable on demand).
+    "bert-base": ModelConfig("bert-base", 12, 768, 12, 64, 30522, 512),
+    "bert-large": ModelConfig("bert-large", 24, 1024, 16, 64, 30522, 512),
+    # Real-compute configs for the CPU testbed.
+    "bert-small": ModelConfig("bert-small", 4, 256, 4, 64, 8192, 512),
+    "bert-tiny": ModelConfig("bert-tiny", 2, 128, 2, 64, 1024, 256),
+}
+
+# Special token ids used by the synthetic corpus (rust/src/train/data.rs
+# must agree with these).
+PAD, CLS, SEP, MASK = 0, 1, 2, 3
+
+
+def get(name: str) -> ModelConfig:
+    try:
+        return CONFIGS[name]
+    except KeyError:
+        raise KeyError(f"unknown model config {name!r}; have {sorted(CONFIGS)}")

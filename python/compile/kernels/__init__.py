@@ -1,0 +1,22 @@
+"""L1 — Pallas kernels for the sequence-parallelism reproduction.
+
+Every kernel is authored against TPU constraints (VMEM-sized blocks, MXU
+tiles) but executed with ``interpret=True``; see DESIGN.md §4.
+"""
+
+from .ring_scores import ring_scores
+from .ring_av import ring_av
+from .softmax import softmax_rows
+from .mlp import gelu_linear, linear
+from .layernorm import layernorm
+from .linformer import linformer_project
+
+__all__ = [
+    "ring_scores",
+    "ring_av",
+    "softmax_rows",
+    "gelu_linear",
+    "linear",
+    "layernorm",
+    "linformer_project",
+]

@@ -1,0 +1,89 @@
+"""Shared helpers for the Pallas kernels (L1).
+
+All kernels in this package are written against TPU-style constraints —
+block shapes sized for a ~16 MiB VMEM scratchpad and MXU-aligned (multiples
+of 8x128 for f32, with the contraction dimension a multiple of the head
+size) — but are executed with ``interpret=True`` because the CPU PJRT
+client cannot run Mosaic custom-calls.  The block-shape logic is therefore
+*structural*: it determines the HBM<->VMEM schedule that would be used on a
+real TPU, and `vmem_bytes` lets the AOT pipeline report the estimated VMEM
+footprint per kernel (recorded in DESIGN.md / EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+# Target VMEM budget per core (bytes).  TPU v4 has 16 MiB per core; we keep
+# a safety margin for the compiler's own scratch.
+VMEM_BUDGET = 12 * 1024 * 1024
+
+# MXU systolic array native tile (rows x cols for f32 inputs).
+MXU_TILE = (8, 128)
+
+
+def largest_divisor_at_most(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is <= ``cap``.
+
+    Used to pick block sizes: Pallas grids require the block shape to divide
+    the array shape, and we want blocks as close to the MXU-friendly cap as
+    possible without padding.
+    """
+    if n <= 0:
+        raise ValueError(f"size must be positive, got {n}")
+    cap = max(1, min(cap, n))
+    for d in range(cap, 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def pick_block(n: int, preferred: int = 128) -> int:
+    """Pick a block size for dimension ``n`` close to ``preferred``."""
+    return largest_divisor_at_most(n, preferred)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelFootprint:
+    """Static VMEM/MXU estimate for one kernel configuration."""
+
+    name: str
+    block_shapes: tuple
+    vmem_bytes: int
+    mxu_flops_per_block: int
+    bytes_per_block: int
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        """FLOPs per byte moved HBM<->VMEM — roofline x-coordinate."""
+        if self.bytes_per_block == 0:
+            return float("inf")
+        return self.mxu_flops_per_block / self.bytes_per_block
+
+    def summary(self) -> str:
+        return (
+            f"{self.name}: blocks={self.block_shapes} "
+            f"vmem={self.vmem_bytes / 1024:.1f}KiB "
+            f"AI={self.arithmetic_intensity:.1f} flop/B"
+        )
+
+
+def vmem_bytes(*block_shapes, dtype_bytes: int = 4) -> int:
+    """Total VMEM held by a set of resident blocks."""
+    total = 0
+    for shape in block_shapes:
+        n = dtype_bytes
+        for d in shape:
+            n *= d
+        total += n
+    return total
+
+
+def assert_fits_vmem(name: str, *block_shapes, dtype_bytes: int = 4) -> int:
+    used = vmem_bytes(*block_shapes, dtype_bytes=dtype_bytes)
+    if used > VMEM_BUDGET:
+        raise ValueError(
+            f"kernel {name}: block working set {used} B exceeds VMEM budget "
+            f"{VMEM_BUDGET} B; shrink block shapes {block_shapes}"
+        )
+    return used

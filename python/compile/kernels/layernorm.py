@@ -1,0 +1,50 @@
+"""LayerNorm kernel (L1).
+
+Row-tiled layer normalization over the hidden dimension.  Under sequence
+parallelism LayerNorm is purely local (statistics are per-token, and each
+device owns whole tokens), so no communication is needed — contrast with
+Megatron where the hidden dim is intact too, but the surrounding GEMMs
+force all-reduces.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+EPS = 1e-5
+
+
+def _kernel(x_ref, g_ref, b_ref, o_ref):
+    x = x_ref[...]                       # [bm, H]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    norm = (x - mean) * jax.lax.rsqrt(var + EPS)
+    o_ref[...] = (norm * g_ref[...][None, :] + b_ref[...][None, :]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def layernorm(x, gamma, beta, *, block_m: int = 128):
+    """LayerNorm over the last axis.  x: [M, H]; gamma/beta: [H]."""
+    m, h = x.shape
+    if gamma.shape != (h,) or beta.shape != (h,):
+        raise ValueError(f"param shape mismatch: {gamma.shape} {beta.shape} vs H={h}")
+    bm = common.pick_block(m, block_m)
+    common.assert_fits_vmem("layernorm", (bm, h), (bm, h))
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((m, h), jnp.float32),
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, h), lambda i: (i, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, h), lambda i: (i, 0)),
+        interpret=True,
+    )(x, gamma, beta)

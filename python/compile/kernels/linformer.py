@@ -1,0 +1,64 @@
+"""Linformer projection kernel (L1) — sparse-attention extension.
+
+Paper §4.3 / Table 3: to push the sequence-length upper bound, keys and
+values are projected from length L down to a fixed dimension K before
+attention (Linformer).  Under sequence parallelism each device holds an
+E-chunk  E^n in R^{K x L/N}  of the projection matrix and computes a
+*partial* projection of its local chunk:
+
+    P^n = E^n @ X^n      with  X^n in [B, Z, L/N, A]  ->  [B, Z, K, A]
+
+The full projection  P = sum_n P^n  is assembled by one all-reduce in the
+rust coordinator (L3).  Every L-carrying term is divided by N (Table 3),
+which is what makes the length upper bound scale ~linearly with devices.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _kernel(e_ref, x_ref, o_ref):
+    e = e_ref[...]      # [K, Lc]
+    x = x_ref[0]        # [Lc, A]
+    o_ref[0] = jax.lax.dot_general(
+        e, x, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+@jax.jit
+def linformer_project(e, x):
+    """Partial Linformer projection of a local chunk.
+
+    Args:
+      e: [K, Lc] local slice of the projection matrix (Lc = L/N).
+      x: [B, Z, Lc, A] local key or value chunk.
+
+    Returns:
+      [B, Z, K, A] partial projection (summed across devices by L3).
+    """
+    k, lc = e.shape
+    b, z, lcx, a = x.shape
+    if lcx != lc:
+        raise ValueError(f"chunk length mismatch: E has {lc}, x has {lcx}")
+    common.assert_fits_vmem("linformer_project", (k, lc), (lc, a), (k, a))
+    xf = x.reshape(b * z, lc, a)
+    out = pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((b * z, k, a), jnp.float32),
+        grid=(b * z,),
+        in_specs=[
+            pl.BlockSpec((k, lc), lambda n: (0, 0)),
+            pl.BlockSpec((1, lc, a), lambda n: (n, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, k, a), lambda n: (n, 0, 0)),
+        interpret=True,
+    )(e, xf)
+    return out.reshape(b, z, k, a)

@@ -1,0 +1,93 @@
+"""Fused MLP kernels (L1).
+
+The Transformer MLP block (paper Eq. 2):  Y = GeLU(X A),  Z = Y B.
+
+Under sequence parallelism the MLP weights are REPLICATED (no column/row
+split — that is Megatron's trick) and each device runs the full block on
+its own L/N-token slice, which is exactly why the block needs zero
+communication (paper Table 1).  The kernels below therefore compute plain
+dense layers; what makes them L1-worthy is the fusion: GeLU is applied in
+the GEMM epilogue while the output tile is still in VMEM, saving one full
+HBM round-trip of the (L/N, 4H) activation.
+
+``gelu_linear``  : GeLU(x @ w + b)   — first MLP GEMM, fused activation
+``linear``       : x @ w + b         — second MLP GEMM / any projection
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _gelu(x):
+    # tanh-approximate GeLU, matching Megatron-LM's fused implementation.
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x * x * x)))
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str):
+    x = x_ref[...]          # [bm, H]
+    w = w_ref[...]          # [H, bn]
+    b = b_ref[...]          # [bn]
+    y = jax.lax.dot_general(
+        x, w, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) + b[None, :]
+    if activation == "gelu":
+        y = _gelu(y)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _call(x, w, b, activation, block_m, block_n):
+    m, h = x.shape
+    hw, n = w.shape
+    if hw != h or b.shape != (n,):
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}")
+    bm = common.pick_block(m, block_m)
+    bn = common.pick_block(n, block_n)
+    common.assert_fits_vmem("mlp", (bm, h), (h, bn), (bm, bn))
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, activation=activation),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, h), lambda i, j: (i, 0)),
+            pl.BlockSpec((h, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(x, w, b)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def gelu_linear(x, w, b, *, block_m: int = 128, block_n: int = 128):
+    """GeLU(x @ w + b) with the activation fused into the GEMM epilogue.
+
+    x: [M, H] (M = B * L/N tokens), w: [H, N], b: [N].
+    """
+    return _call(x, w, b, "gelu", block_m, block_n)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def linear(x, w, b, *, block_m: int = 128, block_n: int = 128):
+    """x @ w + b."""
+    return _call(x, w, b, "none", block_m, block_n)
+
+
+def footprint(m: int, h: int, n: int, block_m: int = 128, block_n: int = 128):
+    bm = common.pick_block(m, block_m)
+    bn = common.pick_block(n, block_n)
+    blocks = ((bm, h), (h, bn), (bm, bn))
+    return common.KernelFootprint(
+        name="mlp_gemm",
+        block_shapes=blocks,
+        vmem_bytes=common.vmem_bytes(*blocks),
+        mxu_flops_per_block=2 * bm * bn * h,
+        bytes_per_block=common.vmem_bytes(*blocks),
+    )

@@ -1,0 +1,93 @@
+"""Ring-AV step kernel (L1).
+
+One step of Ring Self-Attention stage 2 (paper §3.1, Fig. 2b, Eq. 4):
+
+    acc' = acc + s_i @ v_i
+
+Shapes (per device, per ring step):
+    s:   [B, Z, Lq, Lk]  the softmaxed score columns for the value chunk
+                         currently held (S_i^n after column splitting)
+    v:   [B, Z, Lk, A]   circulating value chunk
+    acc: [B, Z, Lq, A]   running output accumulator O^n
+
+The accumulator stays resident across ring steps.  On a real TPU the
+(bq, A) accumulator tile would stay in VMEM for the whole inner loop — the
+paper writes O^n back to HBM each step; fusing the accumulate into the
+GEMM epilogue is our BlockSpec-level improvement (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _kernel(s_ref, v_ref, acc_ref, o_ref):
+    s = s_ref[0]    # [bq, Lk]
+    v = v_ref[0]    # [Lk, A]
+    acc = acc_ref[0]  # [bq, A]
+    o = jax.lax.dot_general(
+        s,
+        v,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[0] = (acc + o).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q",))
+def ring_av(s, v, acc, *, block_q: int = 128):
+    """One accumulating S_i @ V_i step of RSA stage 2.
+
+    Args:
+      s:   [B, Z, Lq, Lk] softmax probabilities for this value chunk.
+      v:   [B, Z, Lk, A] circulating values.
+      acc: [B, Z, Lq, A] accumulator (zeros on the first step).
+
+    Returns:
+      [B, Z, Lq, A] updated accumulator.
+    """
+    b, z, lq, lk = s.shape
+    bv, zv, lkv, a = v.shape
+    if (b, z, lk) != (bv, zv, lkv):
+        raise ValueError(f"s/v shape mismatch: {s.shape} vs {v.shape}")
+    if acc.shape != (b, z, lq, a):
+        raise ValueError(f"acc shape {acc.shape} != {(b, z, lq, a)}")
+
+    bq = common.pick_block(lq, block_q)
+    common.assert_fits_vmem("ring_av", (bq, lk), (lk, a), (bq, a), (bq, a))
+
+    sf = s.reshape(b * z, lq, lk)
+    vf = v.reshape(b * z, lk, a)
+    af = acc.reshape(b * z, lq, a)
+    grid = (b * z, lq // bq)
+    out = pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((b * z, lq, a), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, lk), lambda n, i: (n, i, 0)),
+            pl.BlockSpec((1, lk, a), lambda n, i: (n, 0, 0)),
+            pl.BlockSpec((1, bq, a), lambda n, i: (n, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, a), lambda n, i: (n, i, 0)),
+        interpret=True,
+    )(sf, vf, af)
+    return out.reshape(b, z, lq, a)
+
+
+def footprint(lq: int, lk: int, a: int, block_q: int = 128):
+    bq = common.pick_block(lq, block_q)
+    blocks = ((bq, lk), (lk, a), (bq, a), (bq, a))
+    return common.KernelFootprint(
+        name="ring_av",
+        block_shapes=blocks,
+        vmem_bytes=common.vmem_bytes(*blocks),
+        mxu_flops_per_block=2 * bq * lk * a,
+        bytes_per_block=common.vmem_bytes(*blocks),
+    )

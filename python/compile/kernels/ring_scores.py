@@ -1,0 +1,95 @@
+"""Ring-QK^T step kernel (L1).
+
+One step of Ring Self-Attention stage 1 (paper §3.1, Fig. 2a): the local
+query chunk ``q`` scores against one circulating key chunk ``k``:
+
+    s = q @ k^T / sqrt(A)
+
+Shapes (per device, per ring step):
+    q: [B, Z, Lq, A]   local query chunk (Lq = L/N)
+    k: [B, Z, Lk, A]   key chunk currently held (own, then received N-1x)
+    s: [B, Z, Lq, Lk]  partial attention scores for this step
+
+The rust coordinator (L3) calls this executable N times per attention layer,
+rotating ``k`` around the ring between calls, and concatenates the partial
+scores along the last axis to assemble S^n in R^{Lq x L}.
+
+TPU mapping: grid over (B*Z, Lq/bq, Lk/bk); each program holds a
+(bq, A) query tile, a (bk, A) key tile and a (bq, bk) output tile in VMEM
+and issues one MXU contraction over A.  ``interpret=True`` on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _kernel(q_ref, k_ref, o_ref, *, scale: float):
+    q = q_ref[0]  # [bq, A]
+    k = k_ref[0]  # [bk, A]
+    s = jax.lax.dot_general(
+        q,
+        k,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[0] = (s * scale).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def ring_scores(q, k, *, block_q: int = 128, block_k: int = 128):
+    """Partial attention scores for one ring step.
+
+    Args:
+      q: [B, Z, Lq, A] local queries.
+      k: [B, Z, Lk, A] circulating keys.
+      block_q/block_k: preferred tile sizes along the two sequence dims.
+
+    Returns:
+      [B, Z, Lq, Lk] scaled scores (pre-softmax).
+    """
+    b, z, lq, a = q.shape
+    bk_, zk_, lk, ak = k.shape
+    if (b, z, a) != (bk_, zk_, ak):
+        raise ValueError(f"q/k shape mismatch: {q.shape} vs {k.shape}")
+    scale = 1.0 / (a ** 0.5)
+
+    bq = common.pick_block(lq, block_q)
+    bk = common.pick_block(lk, block_k)
+    common.assert_fits_vmem("ring_scores", (bq, a), (bk, a), (bq, bk))
+
+    qf = q.reshape(b * z, lq, a)
+    kf = k.reshape(b * z, lk, a)
+    grid = (b * z, lq // bq, lk // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale),
+        out_shape=jax.ShapeDtypeStruct((b * z, lq, lk), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, a), lambda n, i, j: (n, i, 0)),
+            pl.BlockSpec((1, bk, a), lambda n, i, j: (n, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, bk), lambda n, i, j: (n, i, j)),
+        interpret=True,
+    )(qf, kf)
+    return out.reshape(b, z, lq, lk)
+
+
+def footprint(lq: int, lk: int, a: int, block_q: int = 128, block_k: int = 128):
+    """Static VMEM/MXU estimate for DESIGN.md §Perf."""
+    bq = common.pick_block(lq, block_q)
+    bk = common.pick_block(lk, block_k)
+    blocks = ((bq, a), (bk, a), (bq, bk))
+    return common.KernelFootprint(
+        name="ring_scores",
+        block_shapes=blocks,
+        vmem_bytes=common.vmem_bytes(*blocks),
+        mxu_flops_per_block=2 * bq * bk * a,
+        bytes_per_block=common.vmem_bytes(*blocks),
+    )

@@ -1,0 +1,60 @@
+"""Numerically-stable row softmax kernel (L1).
+
+Applied to the assembled RSA score rows S^n in R^{Lq x L} after the
+Ring-QK^T stage completes (the full row is needed for an exact softmax;
+the streaming-max variant used by later ring-attention work is implemented
+as an extension in ``model.py::rsa_online`` and validated against this).
+
+Rows are tiled (``block_r`` rows per program) with the full row width
+resident: even at the paper's 114K-token upper bound a f32 row is 456 KiB,
+so a handful of rows fit VMEM comfortably.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _kernel(x_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r",))
+def softmax_rows(x, *, block_r: int = 8):
+    """Stable softmax over the last axis of ``x`` (any leading shape)."""
+    *lead, width = x.shape
+    rows = 1
+    for d in lead:
+        rows *= d
+    xf = x.reshape(rows, width)
+    br = common.pick_block(rows, block_r)
+    common.assert_fits_vmem("softmax_rows", (br, width), (br, width))
+    out = pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, width), jnp.float32),
+        grid=(rows // br,),
+        in_specs=[pl.BlockSpec((br, width), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, width), lambda i: (i, 0)),
+        interpret=True,
+    )(xf)
+    return out.reshape(*lead, width)
+
+
+def footprint(width: int, block_r: int = 8):
+    blocks = ((block_r, width), (block_r, width))
+    return common.KernelFootprint(
+        name="softmax_rows",
+        block_shapes=blocks,
+        vmem_bytes=common.vmem_bytes(*blocks),
+        mxu_flops_per_block=5 * block_r * width,  # max+sub+exp+sum+div (VPU)
+        bytes_per_block=common.vmem_bytes(*blocks),
+    )

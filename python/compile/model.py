@@ -1,0 +1,139 @@
+"""L2 — BERT model definition: parameter spec, init, and the monolithic
+pure-jnp reference used for goldens and gradient cross-checks.
+
+The *executed* model is the chain of ``steps.py`` artifacts that the rust
+coordinator drives; this file defines (a) the parameter inventory that both
+sides agree on (the manifest serializes it), (b) deterministic init so all
+engines start from identical weights, and (c) the monolithic forward/loss
+whose ``jax.grad`` is the ground truth the distributed chains must match.
+
+Architecture: post-LN BERT (as Megatron-LM's BERT):
+
+    x   = TokEmb[ids] + PosEmb
+    per layer:
+        a = MHA(x)                  # RSA under sequence parallelism
+        x = LN1(x + a)
+        m = W2 GeLU(W1 x)
+        x = LN2(x + m)
+    MLM head: logits = x W_mlm^T + b_mlm        (untied, as a linear head)
+    SOP head: logits = cls W_sop^T + b_sop      (from the CLS position)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import steps
+from .configs import ModelConfig
+from .kernels import ref
+
+
+# --------------------------------------------------------------------------
+# Parameter inventory
+# --------------------------------------------------------------------------
+
+def param_spec(cfg: ModelConfig, seq_len: int):
+    """Ordered (name, shape) list — the contract with the rust side.
+
+    ``pos_emb`` is sized to the run's sequence length (each device loads its
+    own slice; the monolithic reference uses the whole table).
+    """
+    h, f, v = cfg.hidden, cfg.ffn, cfg.vocab
+    spec = [
+        ("tok_emb", (v, h)),
+        ("pos_emb", (seq_len, h)),
+    ]
+    for i in range(cfg.layers):
+        p = f"layer{i}."
+        spec += [
+            (p + "wq", (h, h)), (p + "bq", (h,)),
+            (p + "wk", (h, h)), (p + "bk", (h,)),
+            (p + "wv", (h, h)), (p + "bv", (h,)),
+            (p + "wo", (h, h)), (p + "bo", (h,)),
+            (p + "ln1_g", (h,)), (p + "ln1_b", (h,)),
+            (p + "w1", (h, f)), (p + "b1", (f,)),
+            (p + "w2", (f, h)), (p + "b2", (h,)),
+            (p + "ln2_g", (h,)), (p + "ln2_b", (h,)),
+        ]
+    spec += [
+        ("mlm_w", (v, h)), ("mlm_b", (v,)),
+        ("sop_w", (2, h)), ("sop_b", (2,)),
+    ]
+    return spec
+
+
+def init_params(cfg: ModelConfig, seq_len: int, seed: int = 0):
+    """Deterministic init: N(0, 0.02) weights, zero biases, unit LN gains."""
+    spec = param_spec(cfg, seq_len)
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, shape in spec:
+        key, sub = jax.random.split(key)
+        if name.endswith(("_g",)) or name.endswith("ln1_g") or name.endswith("ln2_g"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif len(shape) == 1:
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Monolithic reference (ground truth for every engine)
+# --------------------------------------------------------------------------
+
+def _lin(x, w, b):
+    return x @ w + b[None, :]
+
+
+def _mha(params, prefix, x, b: int, z: int, a: int):
+    """Monolithic multi-head attention over the full sequence (pure jnp —
+    this is the autodiff ground truth, so no Pallas calls here)."""
+    q = steps.to_heads(_lin(x, params[prefix + "wq"], params[prefix + "bq"]), b, z, a)
+    k = steps.to_heads(_lin(x, params[prefix + "wk"], params[prefix + "bk"]), b, z, a)
+    v = steps.to_heads(_lin(x, params[prefix + "wv"], params[prefix + "bv"]), b, z, a)
+    ctx = ref.attention(q, k, v)
+    return _lin(steps.from_heads(ctx), params[prefix + "wo"], params[prefix + "bo"])
+
+
+def forward(params, ids, cfg: ModelConfig):
+    """Monolithic forward (pure jnp).  ids: [B, L] int32 -> [B*L, H]."""
+    b, l = ids.shape
+    z, a = cfg.heads, cfg.head_dim
+    x = steps.embed_fwd(ids, params["tok_emb"], params["pos_emb"][:l])
+    for i in range(cfg.layers):
+        p = f"layer{i}."
+        attn = _mha(params, p, x, b, z, a)
+        x = ref.layernorm(x + attn, params[p + "ln1_g"], params[p + "ln1_b"])
+        m = _lin(ref.gelu(_lin(x, params[p + "w1"], params[p + "b1"])),
+                 params[p + "w2"], params[p + "b2"])
+        x = ref.layernorm(x + m, params[p + "ln2_g"], params[p + "ln2_b"])
+    return x
+
+
+def loss(params, ids, labels, mask, sop_labels, cfg: ModelConfig):
+    """Monolithic MLM + SOP loss (the quantity every engine must agree on).
+
+    Normalizers: MLM by B*L (global constant — see steps.mlm_loss), SOP by B.
+    Returns (total, mlm, sop).
+    """
+    b, l = ids.shape
+    x = forward(params, ids, cfg)
+    logits = x @ params["mlm_w"].T + params["mlm_b"][None, :]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    per_tok = -jnp.take_along_axis(logp, labels.reshape(-1)[:, None], axis=-1)[:, 0]
+    mlm = jnp.sum(per_tok * mask.reshape(-1)) / float(b * l)
+
+    cls = x.reshape(b, l, -1)[:, 0, :]
+    sop_logits = cls @ params["sop_w"].T + params["sop_b"][None, :]
+    slogp = jax.nn.log_softmax(sop_logits, axis=-1)
+    sop = -jnp.mean(jnp.take_along_axis(slogp, sop_labels[:, None], axis=-1)[:, 0])
+    return mlm + sop, mlm, sop
+
+
+def grads(params, ids, labels, mask, sop_labels, cfg: ModelConfig):
+    """jax.grad of the monolithic loss — gradient ground truth."""
+    def f(p):
+        return loss(p, ids, labels, mask, sop_labels, cfg)[0]
+    return jax.grad(f)(params)

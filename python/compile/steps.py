@@ -1,0 +1,328 @@
+"""L2 — the step functions that become AOT artifacts.
+
+Each function here is one *step* of the per-device computation.  The rust
+coordinator (L3) chains these executables, inserting ring P2P / all-reduce
+exactly where the paper's schedule requires (DESIGN.md §3).  Granularity is
+chosen so that (a) all communication happens BETWEEN steps, in rust, and
+(b) the same step instantiates the sequence-parallel engine, the Megatron
+tensor-parallel baseline, and the serial engine — only the shapes differ.
+
+Backward steps:  for the local layers (layernorm, linears, embeddings,
+losses) we lower ``jax.vjp`` of the forward — the recompute-inside-vjp
+(rematerialization) keeps the artifact self-contained.  For the ring
+attention the backward is hand-scheduled (the whole point of the paper:
+gradients of K/V chunks must ride the ring back to their home device), so
+the bwd steps are explicit GEMMs:
+
+    forward:  S = scale * Q K^T (assembled over ring),  P = softmax(S),
+              O = sum_i P_i V_i                       (ring-accumulated)
+    backward: dP_i = dO V_i^T                         (ring pass of V)
+              dS   = P * (dP - rowsum(dP * P))        (local)
+              dQ  += scale * dS_i K_i                 (ring pass of K)
+              dK_i += scale * dS_i^T Q                (accumulator rides ring)
+              dV_i += P_i^T dO                        (accumulator rides ring)
+
+The pytest suite verifies that this chain, composed exactly as rust
+composes it, equals ``jax.grad`` of monolithic attention.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    gelu_linear,
+    layernorm,
+    linear,
+    linformer_project,
+    ring_av,
+    ring_scores,
+    softmax_rows,
+)
+from .kernels import ref
+
+# NOTE on backward authoring: ``pallas_call`` has no autodiff rule, so the
+# ``jax.vjp``-lowered backward steps differentiate the pure-jnp reference
+# implementations from ``kernels/ref.py`` — numerically identical to the
+# Pallas forwards (pytest asserts so) and the standard custom-VJP pairing.
+
+# --------------------------------------------------------------------------
+# Embeddings
+# --------------------------------------------------------------------------
+
+def embed_fwd(ids, tok_emb, pos_emb):
+    """Token + position embeddings for a local chunk.
+
+    ids: [B, Lc] int32; tok_emb: [V, H]; pos_emb: [Lc, H] (the device's
+    slice of the position table).  Returns x: [B*Lc, H].
+    """
+    b, lc = ids.shape
+    x = tok_emb[ids] + pos_emb[None, :, :]
+    return x.reshape(b * lc, -1)
+
+
+def embed_bwd(ids, tok_emb, pos_emb, dx):
+    """VJP of embed_fwd w.r.t. (tok_emb, pos_emb)."""
+    _, vjp = jax.vjp(lambda t, p: embed_fwd(ids, t, p), tok_emb, pos_emb)
+    return vjp(dx)
+
+
+# --------------------------------------------------------------------------
+# LayerNorm
+# --------------------------------------------------------------------------
+
+def ln_fwd(x, gamma, beta):
+    return layernorm(x, gamma, beta)
+
+
+def ln_bwd(x, gamma, beta, dy):
+    _, vjp = jax.vjp(ref.layernorm, x, gamma, beta)
+    return vjp(dy)  # (dx, dgamma, dbeta)
+
+
+# --------------------------------------------------------------------------
+# Linear / fused GeLU-linear (MLP + projections)
+# --------------------------------------------------------------------------
+
+def linear_fwd(x, w, b):
+    return linear(x, w, b)
+
+
+def linear_bwd(x, w, b, dy):
+    _, vjp = jax.vjp(lambda x, w, b: x @ w + b[None, :], x, w, b)
+    return vjp(dy)  # (dx, dw, db)
+
+
+def gelu_linear_fwd(x, w, b):
+    return gelu_linear(x, w, b)
+
+
+def gelu_linear_bwd(x, w, b, dy):
+    _, vjp = jax.vjp(lambda x, w, b: ref.gelu(x @ w + b[None, :]), x, w, b)
+    return vjp(dy)
+
+
+def add(a, b):
+    """Residual add (kept as its own artifact so the tensor-parallel engine
+    can apply it AFTER the all-reduce of partial outputs)."""
+    return a + b
+
+
+def bias_add(y, b):
+    """y[M, N] + b[N] — bias applied once after an all-reduce of partials."""
+    return y + b[None, :]
+
+
+def scale(x, s: float):
+    """x * s — used for gradient averaging (1/N) after all-reduce."""
+    return x * s
+
+
+# --------------------------------------------------------------------------
+# Head split / merge (layout lives in HLO, not rust)
+# --------------------------------------------------------------------------
+
+def to_heads(x, b: int, z: int, a: int):
+    """[B*Lc, Z*A] -> [B, Z, Lc, A]."""
+    m = x.shape[0]
+    lc = m // b
+    return x.reshape(b, lc, z, a).transpose(0, 2, 1, 3)
+
+
+def from_heads(x):
+    """[B, Z, Lc, A] -> [B*Lc, Z*A]."""
+    b, z, lc, a = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b * lc, z * a)
+
+
+# --------------------------------------------------------------------------
+# Fused steps (§Perf iteration 2)
+#
+# At bert-tiny the PJRT per-call overhead (~190µs) dominated the step time
+# (445 calls/step).  These fusions cut the call count ~30% without changing
+# any semantics: the composed artifacts equal the composition of the small
+# ones (pytest asserts so), and the engines stash exactly the same
+# activations the paper's memory analysis counts.
+# --------------------------------------------------------------------------
+
+def qkv_proj(x, wq, bq, wk, bk, wv, bv, b: int, z: int, a: int):
+    """Fused QKV projection + head split: 1 call instead of 6.
+
+    x: [M, H] -> three [B, Z, Lc, A] tensors.
+    """
+    q = to_heads(linear(x, wq, bq), b, z, a)
+    k = to_heads(linear(x, wk, bk), b, z, a)
+    v = to_heads(linear(x, wv, bv), b, z, a)
+    return q, k, v
+
+
+def qkv_proj_bwd(x, wq, wk, wv, dq, dk, dv):
+    """VJP of qkv_proj w.r.t. (x, weights, biases).
+
+    dq/dk/dv arrive in head layout [B, Z, Lc, A]; returns
+    (dx, dwq, dbq, dwk, dbk, dwv, dbv).
+    """
+    def f(x, wq, bq, wk, bk, wv, bv):
+        return (x @ wq + bq[None, :], x @ wk + bk[None, :], x @ wv + bv[None, :])
+
+    h = wq.shape[1]
+    zeros = jnp.zeros((h,), jnp.float32)
+    _, vjp = jax.vjp(f, x, wq, zeros, wk, zeros, wv, zeros)
+    cots = (from_heads(dq), from_heads(dk), from_heads(dv))
+    dx, dwq, dbq, dwk, dbk, dwv, dbv = vjp(cots)
+    return dx, dwq, dbq, dwk, dbk, dwv, dbv
+
+
+def add_ln_fwd(x, r, gamma, beta):
+    """Residual add + LayerNorm fused; also returns the pre-LN sum, which
+    the backward pass (plain ln_bwd) needs — same stash as unfused."""
+    pre = x + r
+    return layernorm(pre, gamma, beta), pre
+
+
+def mlp_fwd(x, w1, b1, w2, b2):
+    """Fused MLP block (Eq. 2): GeLU GEMM + second GEMM in one artifact."""
+    return linear(gelu_linear(x, w1, b1), w2, b2)
+
+
+def mlp_bwd(x, w1, b1, w2, b2, dy):
+    """VJP of the MLP block; rematerializes the hidden activation inside
+    (the engines no longer stash `h`, matching Megatron's recompute)."""
+    _, vjp = jax.vjp(ref.mlp, x, w1, b1, w2, b2)
+    return vjp(dy)  # (dx, dw1, db1, dw2, db2)
+
+
+# --------------------------------------------------------------------------
+# Ring Self-Attention — forward steps
+# --------------------------------------------------------------------------
+
+def scores_step(q, k):
+    """One Ring-QK^T step: [B,Z,Lq,A] x [B,Z,Lk,A] -> [B,Z,Lq,Lk]."""
+    return ring_scores(q, k)
+
+
+def softmax_fwd(s):
+    """Softmax over assembled rows [B,Z,Lc,L]."""
+    return softmax_rows(s)
+
+
+def av_step(p_i, v_i, acc):
+    """One Ring-AV step: acc + p_i @ v_i."""
+    return ring_av(p_i, v_i, acc)
+
+
+# --------------------------------------------------------------------------
+# Ring Self-Attention — backward steps (hand-scheduled; see module docs)
+# --------------------------------------------------------------------------
+
+def attn_dp_step(d_out, v_i):
+    """dP_i = dO @ V_i^T : [B,Z,Lq,A] x [B,Z,Lk,A] -> [B,Z,Lq,Lk]."""
+    return jnp.einsum("bzqa,bzka->bzqk", d_out, v_i)
+
+
+def softmax_bwd(p, dp):
+    """dS = P * (dP - rowsum(dP * P)) over full rows [B,Z,Lc,L]."""
+    inner = jnp.sum(dp * p, axis=-1, keepdims=True)
+    return p * (dp - inner)
+
+
+def attn_dq_step(ds_i, k_i, dq_acc):
+    """dQ += scale * dS_i @ K_i."""
+    a = k_i.shape[-1]
+    sc = 1.0 / jnp.sqrt(jnp.float32(a))
+    return dq_acc + sc * jnp.einsum("bzqk,bzka->bzqa", ds_i, k_i)
+
+
+def attn_dk_step(ds_i, q, dk_acc):
+    """dK_i += scale * dS_i^T @ Q  (accumulator rides the ring)."""
+    a = q.shape[-1]
+    sc = 1.0 / jnp.sqrt(jnp.float32(a))
+    return dk_acc + sc * jnp.einsum("bzqk,bzqa->bzka", ds_i, q)
+
+
+def attn_dv_step(p_i, d_out, dv_acc):
+    """dV_i += P_i^T @ dO  (accumulator rides the ring)."""
+    return dv_acc + jnp.einsum("bzqk,bzqa->bzka", p_i, d_out)
+
+
+# --------------------------------------------------------------------------
+# Linformer (sparse-attention extension, paper §4.3 / Table 3)
+# --------------------------------------------------------------------------
+
+def linformer_proj_step(e, x):
+    """Partial projection E^n X^n -> [B,Z,K,A]; all-reduced by L3."""
+    return linformer_project(e, x)
+
+
+def linformer_proj_bwd(e, x, dp):
+    """VJP of the partial projection w.r.t. (e, x)."""
+    _, vjp = jax.vjp(ref.linformer_project, e, x)
+    return vjp(dp)
+
+
+# --------------------------------------------------------------------------
+# Loss heads (forward + grad fused into one artifact each)
+# --------------------------------------------------------------------------
+
+def _xent_logits(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+
+
+def mlm_loss(x, w, b, labels, mask, norm: float):
+    """Masked-LM loss over a local chunk, plus input/param grads.
+
+    x: [M, H] final hidden states; w: [V, H]; b: [V]; labels: [M] int32;
+    mask: [M] f32 (1.0 at masked positions); norm: GLOBAL normalizer
+    (same constant on every device so that the all-reduced sum of
+    per-device losses/grads is the true global mean — keeps seq-par,
+    tensor-par and serial engines numerically identical).
+
+    Returns (loss, dx, dw, db).
+    """
+
+    def f(x, w, b):
+        logits = x @ w.T + b[None, :]
+        per_tok = _xent_logits(logits, labels) * mask
+        return jnp.sum(per_tok) / norm
+
+    loss, grads = jax.value_and_grad(f, argnums=(0, 1, 2))(x, w, b)
+    return (loss, *grads)
+
+
+def sop_loss(x, w, b, labels, batch: int, norm: float):
+    """Sentence-order-prediction loss from the CLS positions of a chunk.
+
+    x: [M, H] — the FIRST device's final hidden chunk (position 0 of every
+    sequence lives there under sequence parallelism; M = B * Lc); w: [2, H];
+    b: [2]; labels: [B] int32.  The CLS rows are x[b * Lc] — extracted
+    inside the artifact so the gradient dx lands back on the right rows.
+
+    Returns (loss, dx, dw, db) with dx: [M, H] (zero except CLS rows).
+    """
+    m = x.shape[0]
+    lc = m // batch
+
+    def f(x, w, b):
+        cls_h = x.reshape(batch, lc, -1)[:, 0, :]
+        logits = cls_h @ w.T + b[None, :]
+        return jnp.sum(_xent_logits(logits, labels)) / norm
+
+    loss, grads = jax.value_and_grad(f, argnums=(0, 1, 2))(x, w, b)
+    return (loss, *grads)
+
+
+# --------------------------------------------------------------------------
+# Optimizer (Adam step as an artifact: the update math runs in HLO too,
+# so the rust hot path stays orchestration-only)
+# --------------------------------------------------------------------------
+
+def adam_step(p, g, m, v, lr, beta1: float, beta2: float, eps: float, t):
+    """One Adam update.  lr: [] f32 (schedule computed in rust); t: [] f32
+    step count (1-based).  Returns (p', m', v')."""
+    m1 = beta1 * m + (1.0 - beta1) * g
+    v1 = beta2 * v + (1.0 - beta2) * g * g
+    mhat = m1 / (1.0 - beta1 ** t)
+    vhat = v1 / (1.0 - beta2 ** t)
+    return p - lr * mhat / (jnp.sqrt(vhat) + eps), m1, v1

@@ -1,0 +1,50 @@
+"""Binary tensor interchange between the python compile path and rust.
+
+Format (little-endian), implemented identically in rust/src/tensor/io.rs:
+
+    magic   b"SPT1"
+    dtype   u8      0 = f32, 1 = i32
+    ndim    u8
+    dims    u64 * ndim
+    data    dtype * prod(dims), C-order
+
+Used for initial parameters, golden inputs/outputs, and example data.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"SPT1"
+_DTYPES = {0: np.float32, 1: np.int32}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def save(path, arr) -> None:
+    arr = np.asarray(arr)
+    if arr.dtype not in _CODES:
+        if np.issubdtype(arr.dtype, np.floating):
+            arr = arr.astype(np.float32)
+        elif np.issubdtype(arr.dtype, np.integer):
+            arr = arr.astype(np.int32)
+        else:
+            raise TypeError(f"unsupported dtype {arr.dtype}")
+    code = _CODES[arr.dtype]
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<BB", code, arr.ndim))
+        f.write(struct.pack(f"<{arr.ndim}Q", *arr.shape))
+        f.write(np.ascontiguousarray(arr).tobytes())
+
+
+def load(path) -> np.ndarray:
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        code, ndim = struct.unpack("<BB", f.read(2))
+        dims = struct.unpack(f"<{ndim}Q", f.read(8 * ndim))
+        dtype = _DTYPES[code]
+        data = np.frombuffer(f.read(), dtype=dtype)
+    return data.reshape(dims)

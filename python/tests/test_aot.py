@@ -1,0 +1,132 @@
+"""AOT pipeline contract tests: naming, tensorio, artifact enumeration."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import aot, configs, steps, tensorio
+
+
+# ------------------------------------------------------------------ tensorio
+@settings(max_examples=20, deadline=None)
+@given(
+    shape=st.lists(st.integers(1, 8), min_size=0, max_size=4),
+    integer=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_tensorio_roundtrip(shape, integer, seed):
+    rng = np.random.default_rng(seed)
+    if integer:
+        arr = rng.integers(-1000, 1000, size=shape, dtype=np.int32)
+    else:
+        arr = rng.normal(size=shape).astype(np.float32)
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "t.tensor")
+        tensorio.save(p, arr)
+        back = tensorio.load(p)
+    np.testing.assert_array_equal(back, arr)
+    assert back.dtype == arr.dtype
+
+
+def test_tensorio_rejects_bad_magic(tmp_path):
+    p = tmp_path / "bad.tensor"
+    p.write_bytes(b"NOPE" + b"\x00" * 16)
+    with pytest.raises(ValueError):
+        tensorio.load(p)
+
+
+# ---------------------------------------------------------------- art naming
+def test_art_name_matches_rust_registry():
+    """These exact strings are asserted in rust/src/runtime/registry.rs —
+    the two sides must never drift."""
+    name = aot.art_name(
+        "linear_fwd",
+        [aot.spec([32, 128]), aot.spec([128, 512]), aot.spec([512])],
+    )
+    assert name == "linear_fwd__32x128_128x512_512"
+    name = aot.art_name(
+        "embed_fwd",
+        [aot.spec([2, 16], jnp.int32), aot.spec([1024, 128]), aot.spec([16, 128])],
+    )
+    assert name == "embed_fwd__i2x16_1024x128_16x128"
+
+
+# ---------------------------------------------------------- enumeration sanity
+def test_enumerations_cover_every_step_the_engines_call():
+    cfg = configs.get("bert-tiny")
+    arts = aot.enumerate_seqpar(cfg, 2, 64, 4)
+    names = {a[0] for a in arts}
+    needed = {
+        "embed_fwd", "embed_bwd", "ln_fwd", "ln_bwd", "linear_fwd", "linear_bwd",
+        "gelu_linear_fwd", "gelu_linear_bwd", "to_heads_b2", "from_heads",
+        "scores_step", "softmax_fwd", "av_step", "attn_dp_step", "softmax_bwd",
+        "attn_dq_step", "attn_dk_step", "attn_dv_step", "add", "bias_add",
+        "mlm_loss", "sop_loss",
+    }
+    missing = needed - names
+    assert not missing, f"seqpar enumeration missing {missing}"
+
+    tp = aot.enumerate_tensorpar(cfg, 2, 64, 2)
+    tp_names = {a[0] for a in tp}
+    assert needed - tp_names == set(), "tensorpar enumeration incomplete"
+
+
+def test_seqpar_enumeration_shapes_are_chunked():
+    cfg = configs.get("bert-tiny")
+    arts = aot.enumerate_seqpar(cfg, 2, 64, 4)
+    for step_name, _fn, specs in arts:
+        if step_name == "scores_step":
+            # q and k chunks: [B, Z, L/N, A]
+            assert specs[0].shape == (2, cfg.heads, 16, cfg.head_dim)
+        if step_name == "softmax_fwd":
+            # assembled rows: full L width
+            assert specs[0].shape[-1] == 64
+
+
+def test_linformer_enumeration_projects_length():
+    cfg = configs.get("bert-tiny")
+    arts = aot.enumerate_linformer(cfg, 2, 64, 4, 16)
+    by_name = {a[0]: a[2] for a in arts}
+    assert by_name["linformer_proj"][0].shape == (16, 16)  # [K, Lc]
+    assert by_name["softmax_fwd"][0].shape[-1] == 16       # rows are K wide
+
+
+# ------------------------------------------------------------ dedup by name
+def test_duplicate_shapes_dedup_to_one_artifact():
+    cfg = configs.get("bert-tiny")
+    arts = aot.enumerate_seqpar(cfg, 2, 64, 4) + aot.enumerate_seqpar(cfg, 2, 64, 4)
+    names = [aot.art_name(s, sp) for s, _f, sp in arts]
+    assert len(set(names)) < len(names)  # duplicates exist pre-dedup
+    # lower_all dedups via the manifest dict — simulate
+    manifest = {"artifacts": {}}
+    seen = set()
+    for n in names:
+        if n in manifest["artifacts"]:
+            continue
+        manifest["artifacts"][n] = True
+        seen.add(n)
+    assert len(seen) == len(set(names))
+
+
+# ----------------------------------------------------- loss normalizer logic
+def test_mlm_loss_normalizer_makes_chunks_additive():
+    """sum of per-chunk losses (norm = B*L_global) == monolithic mean —
+    the property the rust engines' loss aggregation relies on."""
+    key = jax.random.PRNGKey(0)
+    b, l, h, v = 2, 8, 16, 32
+    x = jax.random.normal(key, (b * l, h))
+    w = jax.random.normal(jax.random.PRNGKey(1), (v, h))
+    bias = jnp.zeros(v)
+    labels = jax.random.randint(jax.random.PRNGKey(2), (b * l,), 0, v)
+    mask = jnp.ones(b * l)
+    full, *_ = steps.mlm_loss(x, w, bias, labels, mask, float(b * l))
+    # chunked along tokens (per-batch-row blocks of l/2)
+    half = b * l // 2
+    lo1, *_ = steps.mlm_loss(x[:half], w, bias, labels[:half], mask[:half], float(b * l))
+    lo2, *_ = steps.mlm_loss(x[half:], w, bias, labels[half:], mask[half:], float(b * l))
+    np.testing.assert_allclose(lo1 + lo2, full, rtol=1e-5)

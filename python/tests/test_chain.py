@@ -1,0 +1,176 @@
+"""Schedule validation: the distributed chains vs monolithic ground truth.
+
+``chain.py`` executes the exact step/comm schedules the rust engines run.
+If these tests are green, every schedule bug left can only be a rust
+transcription bug — which the rust integration tests then catch against
+goldens exported from this same chain.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import chain, model, steps
+from compile.configs import ModelConfig
+from compile.kernels import ref
+
+CFG = ModelConfig("test-tiny", layers=2, hidden=64, heads=2, head_dim=32,
+                  vocab=128, max_len=64)
+
+
+def make_batch(b=2, l=16, seed=0):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    ids = jax.random.randint(k1, (b, l), 4, CFG.vocab)
+    labels = jax.random.randint(k2, (b, l), 4, CFG.vocab)
+    mask = (jax.random.uniform(k3, (b, l)) < 0.15).astype(jnp.float32)
+    sop = jax.random.randint(k4, (b,), 0, 2)
+    return ids, labels, mask, sop
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, seq_len=16, seed=1)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    return make_batch()
+
+
+# ------------------------------------------------------------------ RSA ring
+@pytest.mark.parametrize("n_dev", [1, 2, 4])
+def test_ring_attention_equals_monolithic(n_dev):
+    """ref.ring_attention (the L2 oracle) == monolithic attention."""
+    key = jax.random.PRNGKey(3)
+    kq, kk, kv = jax.random.split(key, 3)
+    b, z, l, a = 2, 2, 16, 8
+    q = jax.random.normal(kq, (b, z, l, a))
+    k = jax.random.normal(kk, (b, z, l, a))
+    v = jax.random.normal(kv, (b, z, l, a))
+    lc = l // n_dev
+    qc = [q[:, :, i * lc:(i + 1) * lc] for i in range(n_dev)]
+    kc = [k[:, :, i * lc:(i + 1) * lc] for i in range(n_dev)]
+    vc = [v[:, :, i * lc:(i + 1) * lc] for i in range(n_dev)]
+    outs = ref.ring_attention(qc, kc, vc)
+    want = ref.attention(q, k, v)
+    got = jnp.concatenate(outs, axis=2)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_rsa_backward_matches_jax_grad():
+    """The hand-scheduled RSA backward == jax.grad of monolithic attention."""
+    key = jax.random.PRNGKey(5)
+    kq, kk, kv, kd = jax.random.split(key, 4)
+    b, z, l, a, n_dev = 1, 2, 8, 16, 4
+    q = jax.random.normal(kq, (b, z, l, a))
+    k = jax.random.normal(kk, (b, z, l, a))
+    v = jax.random.normal(kv, (b, z, l, a))
+    d_out = jax.random.normal(kd, (b, z, l, a))
+
+    def f(q, k, v):
+        return jnp.sum(ref.attention(q, k, v) * d_out)
+
+    want_dq, want_dk, want_dv = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+
+    lc = l // n_dev
+    qc = [q[:, :, i * lc:(i + 1) * lc] for i in range(n_dev)]
+    kc = [k[:, :, i * lc:(i + 1) * lc] for i in range(n_dev)]
+    vc = [v[:, :, i * lc:(i + 1) * lc] for i in range(n_dev)]
+    dc = [d_out[:, :, i * lc:(i + 1) * lc] for i in range(n_dev)]
+
+    dq = [None] * n_dev
+    dk = [jnp.zeros_like(kc[i]) for i in range(n_dev)]
+    dv = [jnp.zeros_like(vc[i]) for i in range(n_dev)]
+    for dev in range(n_dev):
+        _, p = chain._rsa_forward(qc[dev], kc[dev], vc[dev], n_dev, dev, kc, vc)
+        dqd, dkc_, dvc_ = chain._rsa_backward(dc[dev], qc[dev], p, kc, vc, n_dev, dev)
+        dq[dev] = dqd
+        for i in range(n_dev):
+            dk[i] = dk[i] + dkc_[i]
+            dv[i] = dv[i] + dvc_[i]
+
+    np.testing.assert_allclose(jnp.concatenate(dq, 2), want_dq, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(jnp.concatenate(dk, 2), want_dk, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(jnp.concatenate(dv, 2), want_dv, rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------- seq-par full model
+@pytest.mark.parametrize("n_dev", [1, 2, 4])
+def test_seqpar_loss_matches_monolithic(params, batch, n_dev):
+    ids, labels, mask, sop = batch
+    want, want_mlm, want_sop = model.loss(params, ids, labels, mask, sop, CFG)
+    res = chain.seqpar_forward_backward(params, ids, labels, mask, sop, CFG, n_dev)
+    np.testing.assert_allclose(res.mlm, want_mlm, rtol=1e-4)
+    np.testing.assert_allclose(res.sop, want_sop, rtol=1e-4)
+    np.testing.assert_allclose(res.loss, want, rtol=1e-4)
+
+
+@pytest.mark.parametrize("n_dev", [2, 4])
+def test_seqpar_hidden_matches_monolithic(params, batch, n_dev):
+    ids, labels, mask, sop = batch
+    want = model.forward(params, ids, CFG)
+    res = chain.seqpar_forward_backward(params, ids, labels, mask, sop, CFG, n_dev)
+    b, l = ids.shape
+    got = jnp.concatenate(
+        [h.reshape(b, l // n_dev, -1) for h in res.hidden_chunks], axis=1
+    ).reshape(b * l, -1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n_dev", [2, 4])
+def test_seqpar_grads_match_jax_grad(params, batch, n_dev):
+    """The paper's implicit claim (Fig. 6): seq-par training == serial
+    training.  We check it exactly: every parameter gradient matches."""
+    ids, labels, mask, sop = batch
+    want = model.grads(params, ids, labels, mask, sop, CFG)
+    res = chain.seqpar_forward_backward(params, ids, labels, mask, sop, CFG, n_dev)
+    for name in want:
+        np.testing.assert_allclose(
+            res.grads[name], want[name], rtol=2e-3, atol=2e-4,
+            err_msg=f"grad mismatch for {name} at n_dev={n_dev}",
+        )
+
+
+# ----------------------------------------------------- tensor-par full model
+@pytest.mark.parametrize("n_dev", [1, 2])
+def test_tensorpar_loss_matches_monolithic(params, batch, n_dev):
+    ids, labels, mask, sop = batch
+    want, want_mlm, want_sop = model.loss(params, ids, labels, mask, sop, CFG)
+    total, mlm, sop_l, hidden, _ = chain.tensorpar_forward_backward(
+        params, ids, labels, mask, sop, CFG, n_dev)
+    np.testing.assert_allclose(mlm, want_mlm, rtol=1e-4)
+    np.testing.assert_allclose(sop_l, want_sop, rtol=1e-4)
+    want_h = model.forward(params, ids, CFG)
+    np.testing.assert_allclose(hidden, want_h, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n_dev", [2])
+def test_tensorpar_grads_match_jax_grad(params, batch, n_dev):
+    ids, labels, mask, sop = batch
+    want = model.grads(params, ids, labels, mask, sop, CFG)
+    *_, g = chain.tensorpar_forward_backward(params, ids, labels, mask, sop, CFG, n_dev)
+    for name in want:
+        np.testing.assert_allclose(
+            g[name], want[name], rtol=2e-3, atol=2e-4,
+            err_msg=f"grad mismatch for {name} at tp={n_dev}",
+        )
+
+
+# ------------------------------------------------------------------ adam step
+def test_adam_step_matches_reference():
+    key = jax.random.PRNGKey(9)
+    p = jax.random.normal(key, (32,))
+    gr = jax.random.normal(jax.random.PRNGKey(10), (32,))
+    m = jnp.zeros(32)
+    v = jnp.zeros(32)
+    lr, b1, b2, eps = 1e-3, 0.9, 0.999, 1e-8
+    p1, m1, v1 = steps.adam_step(p, gr, m, v, jnp.float32(lr), b1, b2, eps, jnp.float32(1.0))
+    # closed form for t=1
+    mhat = gr  # m1/(1-b1) = (1-b1)g/(1-b1)
+    vhat = gr * gr
+    np.testing.assert_allclose(p1, p - lr * mhat / (jnp.sqrt(vhat) + eps),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(m1, (1 - b1) * gr, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(v1, (1 - b2) * gr * gr, rtol=1e-5, atol=1e-7)

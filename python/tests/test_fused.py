@@ -1,0 +1,71 @@
+"""§Perf iteration 2: fused steps must equal the composition of the small
+steps they replace (semantics-preserving call-count optimization)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import steps
+
+
+def rand(seed, *shape):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+B, Z, LC, A, H, F = 2, 2, 8, 16, 32, 64
+
+
+def test_qkv_proj_equals_composition():
+    x = rand(0, B * LC, H)
+    ws = [rand(i + 1, H, Z * A) for i in range(3)]
+    bs = [rand(i + 4, Z * A) for i in range(3)]
+    q, k, v = steps.qkv_proj(x, ws[0], bs[0], ws[1], bs[1], ws[2], bs[2], b=B, z=Z, a=A)
+    for got, w, bias in zip((q, k, v), ws, bs):
+        want = steps.to_heads(x @ w + bias[None, :], B, Z, A)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_qkv_proj_bwd_matches_jax_grad():
+    x = rand(0, B * LC, H)
+    ws = [rand(i + 1, H, Z * A) for i in range(3)]
+    bs = [jnp.zeros(Z * A) for _ in range(3)]
+    dq, dk, dv = (rand(10 + i, B, Z, LC, A) for i in range(3))
+
+    def f(x, wq, bq, wk, bk, wv, bv):
+        q = steps.to_heads(x @ wq + bq[None, :], B, Z, A)
+        k = steps.to_heads(x @ wk + bk[None, :], B, Z, A)
+        v = steps.to_heads(x @ wv + bv[None, :], B, Z, A)
+        return jnp.sum(q * dq) + jnp.sum(k * dk) + jnp.sum(v * dv)
+
+    want = jax.grad(f, argnums=(0, 1, 2, 3, 4, 5, 6))(x, ws[0], bs[0], ws[1], bs[1], ws[2], bs[2])
+    got = steps.qkv_proj_bwd(x, ws[0], ws[1], ws[2], dq, dk, dv)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-4)
+
+
+def test_add_ln_equals_composition():
+    x, r = rand(0, B * LC, H), rand(1, B * LC, H)
+    g, b = rand(2, H), rand(3, H)
+    y, pre = steps.add_ln_fwd(x, r, g, b)
+    np.testing.assert_allclose(pre, x + r, rtol=1e-6)
+    np.testing.assert_allclose(y, steps.ln_fwd(x + r, g, b), rtol=1e-5, atol=1e-5)
+
+
+def test_mlp_fwd_bwd_match_composition():
+    x = rand(0, B * LC, H)
+    w1, b1 = rand(1, H, F), rand(2, F)
+    w2, b2 = rand(3, F, H), rand(4, H)
+    got = steps.mlp_fwd(x, w1, b1, w2, b2)
+    want = steps.linear_fwd(steps.gelu_linear_fwd(x, w1, b1), w2, b2)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    dy = rand(5, B * LC, H)
+
+    def f(x, w1, b1, w2, b2):
+        from compile.kernels import ref
+        return jnp.sum(ref.mlp(x, w1, b1, w2, b2) * dy)
+
+    want_g = jax.grad(f, argnums=(0, 1, 2, 3, 4))(x, w1, b1, w2, b2)
+    got_g = steps.mlp_bwd(x, w1, b1, w2, b2, dy)
+    for g, w in zip(got_g, want_g):
+        np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-4)

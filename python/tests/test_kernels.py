@@ -1,0 +1,240 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and the f32 dtype the artifacts use); each case
+asserts allclose against ref.py.  These tests are the core correctness
+signal for the compute layer — if they are green, the HLO the rust runtime
+executes is numerically the paper's computation.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    gelu_linear,
+    layernorm,
+    linear,
+    linformer_project,
+    ring_av,
+    ring_scores,
+    softmax_rows,
+)
+from compile.kernels import common, ref
+
+jax.config.update("jax_enable_x64", False)
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rand(key, *shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ---------------------------------------------------------------- ring_scores
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    z=st.integers(1, 4),
+    lq=st.sampled_from([4, 8, 16, 48]),
+    lk=st.sampled_from([4, 8, 32]),
+    a=st.sampled_from([8, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ring_scores_matches_ref(b, z, lq, lk, a, seed):
+    kq, kk = keys(seed, 2)
+    q = rand(kq, b, z, lq, a)
+    k = rand(kk, b, z, lk, a)
+    got = ring_scores(q, k)
+    want = ref.scores(q, k)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_ring_scores_scaling():
+    """Scores are scaled by 1/sqrt(A) exactly."""
+    q = jnp.ones((1, 1, 4, 16), jnp.float32)
+    k = jnp.ones((1, 1, 4, 16), jnp.float32)
+    got = ring_scores(q, k)
+    np.testing.assert_allclose(got, np.full((1, 1, 4, 4), 16 / 4.0), rtol=1e-6)
+
+
+def test_ring_scores_rejects_mismatched_heads():
+    q = jnp.zeros((1, 2, 4, 8), jnp.float32)
+    k = jnp.zeros((1, 3, 4, 8), jnp.float32)
+    with pytest.raises(ValueError):
+        ring_scores(q, k)
+
+
+# ------------------------------------------------------------------- ring_av
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 2),
+    z=st.integers(1, 4),
+    lq=st.sampled_from([4, 16, 48]),
+    lk=st.sampled_from([4, 8, 32]),
+    a=st.sampled_from([8, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ring_av_matches_ref(b, z, lq, lk, a, seed):
+    ks, kv, ka = keys(seed, 3)
+    s = rand(ks, b, z, lq, lk)
+    v = rand(kv, b, z, lk, a)
+    acc = rand(ka, b, z, lq, a)
+    got = ring_av(s, v, acc)
+    want = acc + ref.av(s, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_ring_av_zero_acc_is_plain_av():
+    ks, kv = keys(7, 2)
+    s = rand(ks, 1, 2, 8, 8)
+    v = rand(kv, 1, 2, 8, 16)
+    got = ring_av(s, v, jnp.zeros((1, 2, 8, 16), jnp.float32))
+    np.testing.assert_allclose(got, ref.av(s, v), rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------------- softmax
+@settings(**SETTINGS)
+@given(
+    rows=st.sampled_from([1, 3, 8, 40]),
+    width=st.sampled_from([2, 16, 512]),
+    scale=st.sampled_from([1.0, 10.0, 100.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_softmax_matches_ref(rows, width, scale, seed):
+    x = rand(keys(seed, 1)[0], rows, width) * scale
+    got = softmax_rows(x)
+    want = ref.softmax(x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_softmax_rows_sum_to_one():
+    x = rand(keys(3, 1)[0], 4, 2, 8, 64)  # 4-d leading shape
+    got = softmax_rows(x)
+    np.testing.assert_allclose(np.sum(got, -1), np.ones((4, 2, 8)), rtol=1e-5)
+
+
+def test_softmax_stable_at_large_magnitude():
+    """No overflow for logits ~ 1e4 (the stable-max path)."""
+    x = jnp.array([[1e4, 1e4 - 1.0, 0.0]], jnp.float32)
+    got = np.asarray(softmax_rows(x))
+    assert np.all(np.isfinite(got))
+    np.testing.assert_allclose(got, ref.softmax(x), rtol=1e-5, atol=1e-7)
+
+
+# ----------------------------------------------------------------------- mlp
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([4, 16, 96]),
+    h=st.sampled_from([8, 32, 128]),
+    n=st.sampled_from([8, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gelu_linear_matches_ref(m, h, n, seed):
+    kx, kw, kb = keys(seed, 3)
+    x, w, b = rand(kx, m, h), rand(kw, h, n), rand(kb, n)
+    got = gelu_linear(x, w, b)
+    want = ref.gelu(x @ w + b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([4, 96]),
+    h=st.sampled_from([8, 128]),
+    n=st.sampled_from([8, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_matches_ref(m, h, n, seed):
+    kx, kw, kb = keys(seed, 3)
+    x, w, b = rand(kx, m, h), rand(kw, h, n), rand(kb, n)
+    np.testing.assert_allclose(linear(x, w, b), x @ w + b, rtol=1e-4, atol=1e-4)
+
+
+def test_mlp_block_composition():
+    """gelu_linear + linear compose to the paper's Eq. 2 MLP block."""
+    kx, k1, k2, k3, k4 = keys(11, 5)
+    x = rand(kx, 32, 64)
+    w1, b1 = rand(k1, 64, 256), rand(k2, 256)
+    w2, b2 = rand(k3, 256, 64), rand(k4, 64)
+    got = linear(gelu_linear(x, w1, b1), w2, b2)
+    np.testing.assert_allclose(got, ref.mlp(x, w1, b1, w2, b2), rtol=1e-4, atol=1e-3)
+
+
+# ----------------------------------------------------------------- layernorm
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([1, 8, 96]),
+    h=st.sampled_from([8, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_layernorm_matches_ref(m, h, seed):
+    kx, kg, kb = keys(seed, 3)
+    x = rand(kx, m, h)
+    g = rand(kg, h)
+    b = rand(kb, h)
+    np.testing.assert_allclose(
+        layernorm(x, g, b), ref.layernorm(x, g, b), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_layernorm_output_stats():
+    """With unit gamma / zero beta, rows are standardized."""
+    x = rand(keys(5, 1)[0], 16, 128) * 3.0 + 7.0
+    out = np.asarray(layernorm(x, jnp.ones(128), jnp.zeros(128)))
+    np.testing.assert_allclose(out.mean(-1), np.zeros(16), atol=1e-5)
+    np.testing.assert_allclose(out.std(-1), np.ones(16), atol=1e-2)
+
+
+# ----------------------------------------------------------------- linformer
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 2),
+    z=st.integers(1, 3),
+    lc=st.sampled_from([4, 16]),
+    kproj=st.sampled_from([2, 8]),
+    a=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linformer_project_matches_ref(b, z, lc, kproj, a, seed):
+    ke, kx = keys(seed, 2)
+    e = rand(ke, kproj, lc)
+    x = rand(kx, b, z, lc, a)
+    np.testing.assert_allclose(
+        linformer_project(e, x), ref.linformer_project(e, x), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_linformer_partial_sum_equals_full_projection():
+    """sum_n E^n X^n == E X — the identity the L3 all-reduce relies on."""
+    n_dev, lc = 4, 8
+    l = n_dev * lc
+    ke, kx = keys(21, 2)
+    e = rand(ke, 16, l)
+    x = rand(kx, 2, 2, l, 32)
+    full = ref.linformer_project(e, x)
+    partial = sum(
+        ref.linformer_project(
+            e[:, i * lc:(i + 1) * lc], x[:, :, i * lc:(i + 1) * lc, :]
+        )
+        for i in range(n_dev)
+    )
+    np.testing.assert_allclose(partial, full, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- block math
+@given(n=st.integers(1, 4096), cap=st.integers(1, 512))
+@settings(max_examples=60, deadline=None)
+def test_pick_block_divides(n, cap):
+    b = common.largest_divisor_at_most(n, cap)
+    assert n % b == 0 and 1 <= b <= min(n, cap)
+
+
+def test_vmem_guard_rejects_oversized_blocks():
+    with pytest.raises(ValueError):
+        common.assert_fits_vmem("huge", (4096, 4096))  # 64 MiB > budget

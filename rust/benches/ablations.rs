@@ -1,0 +1,84 @@
+//! Bench: ablations over the design choices DESIGN.md calls out.
+//!
+//! 1. Ring-chunk granularity — communication volume & simulated step time
+//!    as the ring size grows at fixed work (the paper's "same comm as
+//!    Megatron" §3.2.2 claim, swept).
+//! 2. Pipeline boundary handling — Megatron's scatter+all-gather vs the
+//!    sequence-parallel direct send, over stage counts (the mechanism
+//!    behind Fig. 4b).
+//! 3. Microbatch count — bubble fraction vs boundary traffic trade-off.
+//!
+//!     cargo bench --bench ablations
+
+use seqpar::comm::{CommKind, Fabric, Meter};
+use seqpar::eval::bench::bench;
+use seqpar::model::BERT_BASE;
+use seqpar::parallel::pipeline::{boundary_bytes_megatron, boundary_bytes_seqpar, Schedule};
+use seqpar::simulator::{timing, Cluster, RunShape, Strategy};
+use seqpar::tensor::Tensor;
+
+fn main() {
+    let cluster = Cluster::default();
+
+    println!("=== ablation 1: ring size at fixed global work (B=64, L=512) ===");
+    println!("{:>4} {:>14} {:>14} {:>12}", "n", "SP bytes/layer", "TP bytes/layer", "SP/TP time");
+    for n in [2usize, 4, 8, 16, 32, 64] {
+        let shape = RunShape::new(BERT_BASE, 64, 512);
+        let sp = Strategy::Sequence { n };
+        if !sp.feasible(&BERT_BASE, 512) {
+            continue;
+        }
+        // paper closed form: both equal 8(N-1)·BZ(L/N)A elements
+        let chunk = (64 * 12 * (512 / n) * 64 * 4) as u64;
+        let sp_bytes = 8 * (n as u64 - 1) * chunk;
+        let sp_t = timing::step_time(&cluster, &shape, sp);
+        let tp_feasible = BERT_BASE.heads % n == 0;
+        let (tp_bytes, ratio) = if tp_feasible {
+            let c = (64 * 512 * 768 * 4) as u64;
+            let tp_bytes = 8 * (n as u64 - 1) * c / n as u64;
+            let tp_t = timing::step_time(&cluster, &shape, Strategy::Tensor { n });
+            (tp_bytes.to_string(), format!("{:.3}", sp_t / tp_t))
+        } else {
+            ("—".into(), "—".into())
+        };
+        println!("{n:>4} {sp_bytes:>14} {tp_bytes:>14} {ratio:>12}");
+    }
+    println!("(equal volumes at equal n — the §3.2.2 equivalence)");
+
+    println!("\n=== ablation 2: pipeline boundary bytes per microbatch (MP=4) ===");
+    println!("{:>6} {:>16} {:>16} {:>8}", "B", "megatron send+gather", "seqpar send", "saving");
+    for b in [8usize, 32, 128] {
+        let meg = boundary_bytes_megatron(b, 512, 768, 4);
+        let sp = boundary_bytes_seqpar(b, 512, 768, 4);
+        let m_total = meg.send + meg.gather;
+        let s_total = sp.send + sp.gather;
+        println!(
+            "{b:>6} {m_total:>16} {s_total:>16} {:>7.1}%",
+            100.0 * (m_total - s_total) as f64 / m_total as f64
+        );
+    }
+
+    println!("\n=== ablation 3: microbatches vs bubble (4 stages) ===");
+    println!("{:>8} {:>10} {:>14}", "micros", "bubble", "sim tok/s (SP4)");
+    for micros in [1usize, 2, 4, 8, 16, 32] {
+        let s = Schedule::gpipe(4, micros);
+        let shape = RunShape::new(BERT_BASE, 32, 512).with_pipeline(4, micros);
+        let tps = timing::tokens_per_sec(&cluster, &shape, Strategy::Sequence { n: 4 });
+        println!("{micros:>8} {:>10.3} {tps:>14.0}", s.bubble_fraction());
+    }
+
+    // fabric micro-benchmarks (the in-process substrate itself)
+    println!("\n=== fabric micro-benchmarks ===");
+    let meter = Meter::new();
+    let fabric = Fabric::new(8, meter);
+    let mut slots: Vec<Tensor> = (0..8).map(|_| Tensor::zeros(&[256 * 1024])).collect();
+    bench(3, 50, || {
+        fabric.ring_shift(&mut slots).unwrap();
+    })
+    .report("ring_shift 8 x 1MB");
+    bench(3, 20, || {
+        fabric.all_reduce_sum(&mut slots).unwrap();
+    })
+    .report("all_reduce 8 x 1MB");
+    let _ = fabric.meter.get(CommKind::RingP2p);
+}

@@ -1,0 +1,44 @@
+//! Bench: Fig. 3a/3b (BERT-Base) and Fig. 7a/7b (BERT-Large) —
+//! max batch size and throughput scaling along the tensor/sequence
+//! parallel size.  Prints the same series the paper plots, then times the
+//! generator itself.
+//!
+//!     cargo bench --bench fig3_batch_scaling [-- --model bert-large]
+
+use seqpar::eval::bench::bench;
+use seqpar::eval::figures;
+use seqpar::model::{BERT_BASE, BERT_LARGE};
+use seqpar::simulator::Cluster;
+
+fn main() {
+    let large = std::env::args().any(|a| a.contains("bert-large"));
+    let model = if large { BERT_LARGE } else { BERT_BASE };
+    let cluster = Cluster::default();
+
+    println!("=== Fig. {}a — {} max batch vs parallel size (L=512) ===",
+             if large { 7 } else { 3 }, model.name);
+    println!("{:>4} {:>12} {:>12} | {:>12} {:>12}", "n", "TP maxB", "SP maxB", "TP tok/s", "SP tok/s");
+    let rows = figures::fig3(&cluster, model);
+    for r in &rows {
+        println!(
+            "{:>4} {:>12} {:>12} | {:>12} {:>12}",
+            r.n,
+            r.tp_max_batch.map(|v| v.to_string()).unwrap_or("—".into()),
+            if r.sp_max_batch == 0 { "—".into() } else { r.sp_max_batch.to_string() },
+            r.tp_tokens_per_sec.map(|v| format!("{v:.0}")).unwrap_or("—".into()),
+            if r.sp_max_batch == 0 { "—".into() } else { format!("{:.0}", r.sp_tokens_per_sec) },
+        );
+    }
+    let tp_best = rows.iter().filter_map(|r| r.tp_max_batch).max().unwrap_or(1);
+    let sp64 = rows.iter().find(|r| r.n == 64).map(|r| r.sp_max_batch).unwrap_or(0);
+    println!(
+        "headline: SP@64 / best TP = {:.1}x   (paper: {} on 64 P100s)",
+        sp64 as f64 / tp_best.max(1) as f64,
+        if large { "10.2x" } else { "13.7x" }
+    );
+
+    bench(1, 10, || {
+        std::hint::black_box(figures::fig3(&cluster, model));
+    })
+    .report("fig3 sweep (13 strategy points, OOM search)");
+}

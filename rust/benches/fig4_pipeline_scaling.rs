@@ -1,0 +1,46 @@
+//! Bench: Fig. 4a/4b (Base) and Fig. 8a/8b (Large) — scaling along the
+//! pipeline-parallel size with the model-parallel size fixed at 4.
+//!
+//!     cargo bench --bench fig4_pipeline_scaling [-- --model bert-large]
+
+use seqpar::eval::bench::bench;
+use seqpar::eval::figures;
+use seqpar::model::{BERT_BASE, BERT_LARGE};
+use seqpar::parallel::pipeline::Schedule;
+use seqpar::simulator::Cluster;
+
+fn main() {
+    let large = std::env::args().any(|a| a.contains("bert-large"));
+    let model = if large { BERT_LARGE } else { BERT_BASE };
+    let cluster = Cluster::default();
+
+    println!("=== Fig. {}a/b — {} scaling along pipeline size (MP=4, micros=8) ===",
+             if large { 8 } else { 4 }, model.name);
+    println!("{:>6} {:>12} {:>12} | {:>12} {:>12}", "stages", "TP maxB", "SP maxB", "TP tok/s", "SP tok/s");
+    for r in figures::fig4(&cluster, model) {
+        println!(
+            "{:>6} {:>12} {:>12} | {:>12} {:>12}",
+            r.n,
+            r.tp_max_batch.map(|v| v.to_string()).unwrap_or("—".into()),
+            r.sp_max_batch,
+            r.tp_tokens_per_sec.map(|v| format!("{v:.0}")).unwrap_or("—".into()),
+            format!("{:.0}", r.sp_tokens_per_sec),
+        );
+    }
+    println!("(SP wins both: no split+all-gather at pipeline boundaries — §3.2.2)");
+
+    // the schedule itself, at the sizes the paper uses
+    for (stages, micros) in [(2usize, 8usize), (4, 8), (8, 8)] {
+        let s = Schedule::gpipe(stages, micros);
+        println!(
+            "gpipe {stages}x{micros}: bubble fraction {:.3}, makespan {} ticks",
+            s.bubble_fraction(),
+            s.makespan(2)
+        );
+    }
+
+    bench(1, 20, || {
+        std::hint::black_box(figures::fig4(&cluster, model));
+    })
+    .report("fig4 sweep (4 pipeline depths x 2 strategies)");
+}

@@ -1,0 +1,52 @@
+//! Bench: Fig. 5a (max sequence length, batch 64), Fig. 5b (sparse
+//! upper bound, batch 4), Fig. 9 (BERT-Large max length, batch 16).
+//!
+//!     cargo bench --bench fig5_seqlen [-- --model bert-large]
+
+use seqpar::eval::bench::bench;
+use seqpar::eval::figures;
+use seqpar::model::{BERT_BASE, BERT_LARGE};
+use seqpar::simulator::Cluster;
+
+fn main() {
+    let large = std::env::args().any(|a| a.contains("bert-large"));
+    let model = if large { BERT_LARGE } else { BERT_BASE };
+    let batch = if large { 16 } else { 64 };
+    let cluster = Cluster::default();
+
+    println!("=== Fig. {} — {} max sequence length vs devices (batch {batch}) ===",
+             if large { "9" } else { "5a" }, model.name);
+    println!("{:>4} {:>12} {:>12}", "n", "TP maxL", "SP maxL");
+    let rows = figures::fig5a(&cluster, model, batch);
+    for r in &rows {
+        println!(
+            "{:>4} {:>12} {:>12}",
+            r.n,
+            r.tp_max_len.map(|v| v.to_string()).unwrap_or("—".into()),
+            r.sp_max_len
+        );
+    }
+    let tp_best = rows.iter().filter_map(|r| r.tp_max_len).max().unwrap_or(1);
+    let sp64 = rows.iter().find(|r| r.n == 64).map(|r| r.sp_max_len).unwrap_or(0);
+    println!(
+        "headline: SP@64 / best TP = {:.1}x   (paper: {})",
+        sp64 as f64 / tp_best.max(1) as f64,
+        if large { "~2x" } else { "~3x, 1.4x at equal 16 GPUs" }
+    );
+
+    if !large {
+        println!("\n=== Fig. 5b — sparse-attention length upper bound (batch 4, K=256) ===");
+        println!("{:>4} {:>12} {:>12} {:>10}", "n", "dense", "sparse", "ideal");
+        let rows = figures::fig5b(&cluster, model);
+        let base = rows.first().map(|r| r.sparse_max_len).unwrap_or(0);
+        for r in &rows {
+            println!("{:>4} {:>12} {:>12} {:>10}", r.n, r.dense_max_len, r.sparse_max_len, base * r.n);
+        }
+        println!("(paper: >114K tokens @32 P100s — 27x beyond single-device sparse works)");
+    }
+
+    bench(1, 10, || {
+        std::hint::black_box(figures::fig5a(&cluster, model, batch));
+    })
+    .report("fig5a sweep (length OOM search per size)");
+}

@@ -1,0 +1,91 @@
+//! Bench: the REAL-COMPUTE hot path — one training step of each engine
+//! through the PJRT runtime, plus the per-stage RSA breakdown.  This is
+//! the instrument for the EXPERIMENTS.md §Perf iteration log.
+//!
+//!     make artifacts && cargo bench --bench rsa_hotpath
+
+use seqpar::comm::{Fabric, Meter};
+use seqpar::eval::bench::{bench, fmt_ns};
+use seqpar::model::params::ParamStore;
+use seqpar::parallel::sequence::SeqParEngine;
+use seqpar::parallel::tensorp::TensorParEngine;
+use seqpar::parallel::Engine;
+use seqpar::runtime::Runtime;
+use seqpar::tensor::Tensor;
+use seqpar::train::data::{Corpus, CorpusConfig};
+use seqpar::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("rsa_hotpath: artifacts/ missing — run `make artifacts`; skipping");
+        return Ok(());
+    }
+    let rt = Runtime::open(&dir)?;
+    let m = rt.manifest.clone();
+    let params = ParamStore::load(&dir, &m)?;
+    let mut corpus = Corpus::new(CorpusConfig::new(m.vocab, m.seq_len, m.batch), 3);
+    let batch = corpus.next_batch()?;
+    let tokens = (m.batch * m.seq_len) as f64;
+
+    println!(
+        "hot path @ {} (B={} L={} ring={} tp={})",
+        m.model, m.batch, m.seq_len, m.ring, m.tp
+    );
+
+    // ---- end-to-end steps -------------------------------------------------
+    let seq = SeqParEngine::new(&rt, Fabric::new(m.ring, Meter::new()))?;
+    let s = bench(2, 12, || {
+        std::hint::black_box(seq.forward_backward(&params, &batch).unwrap());
+    });
+    s.report("seq-par fwd+bwd step (real compute)");
+    println!("  -> {:.0} tokens/s real", tokens / (s.mean_ns / 1e9));
+
+    let serial = TensorParEngine::new(&rt, Fabric::new(1, Meter::new()))?;
+    let st = bench(2, 12, || {
+        std::hint::black_box(serial.forward_backward(&params, &batch).unwrap());
+    });
+    st.report("serial fwd+bwd step (real compute)");
+    println!("  -> {:.0} tokens/s real", tokens / (st.mean_ns / 1e9));
+
+    let tp = TensorParEngine::new(&rt, Fabric::new(m.tp, Meter::new()))?;
+    let tt = bench(2, 12, || {
+        std::hint::black_box(tp.forward_backward(&params, &batch).unwrap());
+    });
+    tt.report(&format!("tensor-par({}) fwd+bwd step (real compute)", m.tp));
+
+    // ---- RSA stage breakdown ----------------------------------------------
+    let (b, z, a) = (m.batch, m.heads, m.head_dim);
+    let lc = m.seq_len / m.ring;
+    let mut rng = Rng::new(5);
+    let chunks = |rng: &mut Rng| -> Vec<Tensor> {
+        (0..m.ring).map(|_| Tensor::randn(&[b, z, lc, a], 1.0, rng)).collect()
+    };
+    let q = chunks(&mut rng);
+    let k = chunks(&mut rng);
+    let v = chunks(&mut rng);
+    let rsa = bench(2, 16, || {
+        std::hint::black_box(seq.rsa_attention(&q, &k, &v).unwrap());
+    });
+    rsa.report("RSA attention only (ring QK^T + softmax + ring AV)");
+
+    // ---- orchestration overhead: fabric + host glue vs executable time ----
+    let stats0 = rt.stats();
+    let _ = seq.forward_backward(&params, &batch)?;
+    let stats1 = rt.stats();
+    let exec_ns = (stats1.exec_nanos - stats0.exec_nanos) as f64;
+    let calls = stats1.calls - stats0.calls;
+    println!(
+        "one seq-par step: {calls} artifact calls, {} inside executables, {} total -> orchestration overhead {:.1}%",
+        fmt_ns(exec_ns),
+        fmt_ns(s.mean_ns),
+        100.0 * (s.mean_ns - exec_ns).max(0.0) / s.mean_ns
+    );
+    println!(
+        "executable cache: {} compiled, {} calls total (hit rate {:.1}%)",
+        rt.cached_executables(),
+        stats1.calls,
+        100.0 * (1.0 - rt.cached_executables() as f64 / stats1.calls as f64)
+    );
+    Ok(())
+}

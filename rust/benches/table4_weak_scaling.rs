@@ -1,0 +1,57 @@
+//! Bench: Table 4 — weak scaling along batch and sequence dimensions
+//! (pipeline 8), plus Tables 1/2/3 closed forms.
+//!
+//!     cargo bench --bench table4_weak_scaling
+
+use seqpar::eval::bench::bench;
+use seqpar::eval::figures;
+use seqpar::model::BERT_BASE;
+use seqpar::simulator::{memory, sparse, Cluster};
+
+fn main() {
+    let cluster = Cluster::default();
+    println!("=== Table 4 — weak scaling, BERT-Base, pipeline=8 ===");
+    println!(
+        "{:>4} {:>6} {:>6} | {:>10} {:>10} | {:>10} {:>10}",
+        "n", "batch", "L", "TP MB", "TP tok/s", "SP MB", "SP tok/s"
+    );
+    for r in figures::table4(&cluster, BERT_BASE) {
+        println!(
+            "{:>4} {:>6} {:>6} | {:>10} {:>10} | {:>10.1} {:>10.0}",
+            r.n,
+            r.batch,
+            r.seq_len,
+            r.tp_mem_mb.map(|m| format!("{m:.1}")).unwrap_or_else(|| "OOM".into()),
+            r.tp_tokens_per_sec.map(|v| format!("{v:.0}")).unwrap_or("—".into()),
+            r.sp_mem_mb,
+            r.sp_tokens_per_sec,
+        );
+    }
+    println!("(paper: SP memory flat at ~8.5GB while TP OOMs at n=8; SP less memory on the length sweep)");
+
+    println!("\n=== Tables 1/2 closed forms (elements) at B=64 L=512 N=8 ===");
+    for row in figures::tables12(BERT_BASE, 64, 512, 8) {
+        println!(
+            "{:<22} TP {:>14}  SP {:>14}   winner: {}",
+            row.block, row.tp_elems, row.sp_elems,
+            if row.sp_wins { "sequence" } else { "tensor" }
+        );
+    }
+    println!(
+        "break-evens: MLP BL>32H={}, Attn BL>16AZ={}",
+        memory::mlp_breakeven_bl(768),
+        memory::attn_breakeven_bl(64, 12)
+    );
+    println!("\n=== Table 3 — Linformer+SP block elements (B=4 L=65536 K=256) ===");
+    for n in [8u64, 16, 32] {
+        println!(
+            "N={n:>3}: {} elements",
+            sparse::paper_sparse_attn(4, 65536, 768, 64, 12, 256, n)
+        );
+    }
+
+    bench(1, 20, || {
+        std::hint::black_box(figures::table4(&cluster, BERT_BASE));
+    })
+    .report("table4 sweep");
+}

@@ -1,0 +1,325 @@
+//! The collective communication fabric.
+//!
+//! This is the substrate the paper assumes (NCCL/Gloo rings over the Piz
+//! Daint interconnect) rebuilt in-process: ring point-to-point rotation,
+//! ring all-reduce (reduce-scatter + all-gather), all-gather, broadcast —
+//! every byte metered per collective kind so the §3.2.2 communication-cost
+//! analysis can be checked against measured traffic (rust/tests/comm_volume.rs).
+//!
+//! Two implementations share the semantics:
+//!
+//! * [`Fabric`] — deterministic, runs collectives over the per-device slot
+//!   vector the sequential engines use.  This is what the training engines
+//!   and the simulator drive.
+//! * [`threaded`] — real threads + channels executing the same ring
+//!   protocol message-by-message; the tests prove it is deadlock-free and
+//!   byte-identical to [`Fabric`].
+
+pub mod threaded;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::tensor::{ops, Tensor};
+
+/// What kind of collective moved the bytes — the unit of the paper's
+/// communication accounting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommKind {
+    /// Ring point-to-point chunk rotation (RSA stages).
+    RingP2p,
+    /// Ring all-reduce (gradient reduction; TP partial sums).
+    AllReduce,
+    /// All-gather (pipeline boundary in Megatron's scheme).
+    AllGather,
+    /// Scatter/split (pipeline boundary split before transmit).
+    Scatter,
+    /// Pipeline stage-to-stage activation send.
+    Pipeline,
+}
+
+/// Byte + op counters, shared by all fabrics of a run.
+#[derive(Default, Debug)]
+pub struct Meter {
+    pub ring_p2p_bytes: AtomicU64,
+    pub all_reduce_bytes: AtomicU64,
+    pub all_gather_bytes: AtomicU64,
+    pub scatter_bytes: AtomicU64,
+    pub pipeline_bytes: AtomicU64,
+    pub ops: AtomicU64,
+}
+
+impl Meter {
+    pub fn new() -> Arc<Meter> {
+        Arc::new(Meter::default())
+    }
+
+    pub fn add(&self, kind: CommKind, bytes: u64) {
+        self.ops.fetch_add(1, Ordering::Relaxed);
+        self.counter(kind).fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    fn counter(&self, kind: CommKind) -> &AtomicU64 {
+        match kind {
+            CommKind::RingP2p => &self.ring_p2p_bytes,
+            CommKind::AllReduce => &self.all_reduce_bytes,
+            CommKind::AllGather => &self.all_gather_bytes,
+            CommKind::Scatter => &self.scatter_bytes,
+            CommKind::Pipeline => &self.pipeline_bytes,
+        }
+    }
+
+    pub fn get(&self, kind: CommKind) -> u64 {
+        self.counter(kind).load(Ordering::Relaxed)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.get(CommKind::RingP2p)
+            + self.get(CommKind::AllReduce)
+            + self.get(CommKind::AllGather)
+            + self.get(CommKind::Scatter)
+            + self.get(CommKind::Pipeline)
+    }
+
+    pub fn reset(&self) {
+        self.ring_p2p_bytes.store(0, Ordering::Relaxed);
+        self.all_reduce_bytes.store(0, Ordering::Relaxed);
+        self.all_gather_bytes.store(0, Ordering::Relaxed);
+        self.scatter_bytes.store(0, Ordering::Relaxed);
+        self.pipeline_bytes.store(0, Ordering::Relaxed);
+        self.ops.store(0, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MeterSnapshot {
+        MeterSnapshot {
+            ring_p2p: self.get(CommKind::RingP2p),
+            all_reduce: self.get(CommKind::AllReduce),
+            all_gather: self.get(CommKind::AllGather),
+            scatter: self.get(CommKind::Scatter),
+            pipeline: self.get(CommKind::Pipeline),
+            ops: self.ops.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MeterSnapshot {
+    pub ring_p2p: u64,
+    pub all_reduce: u64,
+    pub all_gather: u64,
+    pub scatter: u64,
+    pub pipeline: u64,
+    pub ops: u64,
+}
+
+impl MeterSnapshot {
+    pub fn total(&self) -> u64 {
+        self.ring_p2p + self.all_reduce + self.all_gather + self.scatter + self.pipeline
+    }
+}
+
+/// Deterministic collective fabric over per-device slot vectors.
+///
+/// `slots[d]` is the tensor device `d` currently holds.  All byte counts
+/// follow the standard accounting: total bytes SENT across the group (so
+/// a ring rotation of a C-byte chunk over N devices costs N*C — each
+/// device sends once; a ring all-reduce of C bytes costs 2*(N-1)*C total).
+pub struct Fabric {
+    pub n: usize,
+    pub meter: Arc<Meter>,
+}
+
+impl Fabric {
+    pub fn new(n: usize, meter: Arc<Meter>) -> Fabric {
+        Fabric { n, meter }
+    }
+
+    /// One ring step: every device sends its slot to rank+1 (mod n).
+    /// After `t` calls, device `d` holds the chunk originally at
+    /// `(d - t) mod n` — the convention chain.py documents.
+    pub fn ring_shift(&self, slots: &mut [Tensor]) -> Result<()> {
+        if slots.len() != self.n {
+            bail!("ring_shift: {} slots for {} devices", slots.len(), self.n);
+        }
+        if self.n == 1 {
+            return Ok(()); // nothing moves, no bytes
+        }
+        let bytes: u64 = slots.iter().map(|t| t.bytes() as u64).sum();
+        slots.rotate_right(1);
+        self.meter.add(CommKind::RingP2p, bytes);
+        Ok(())
+    }
+
+    /// Ring all-reduce (sum): every device ends with the elementwise sum.
+    /// Metered as reduce-scatter + all-gather: 2*(n-1)/n * C per device.
+    pub fn all_reduce_sum(&self, slots: &mut [Tensor]) -> Result<()> {
+        if slots.len() != self.n {
+            bail!("all_reduce: {} slots for {} devices", slots.len(), self.n);
+        }
+        if self.n == 1 {
+            return Ok(());
+        }
+        let c = slots[0].bytes() as u64;
+        let (first, rest) = slots.split_at_mut(1);
+        for s in rest.iter() {
+            ops::add_assign(&mut first[0], s)?;
+        }
+        for s in rest.iter_mut() {
+            *s = first[0].clone();
+        }
+        let n = self.n as u64;
+        self.meter.add(CommKind::AllReduce, 2 * (n - 1) * c);
+        Ok(())
+    }
+
+    /// All-gather: every device ends with the concatenation (dim `dim`) of
+    /// all slots.  Each device sends its chunk to n-1 peers (ring pass):
+    /// (n-1) * C total per device chunk.
+    pub fn all_gather(&self, slots: &mut [Tensor], dim: usize) -> Result<()> {
+        if slots.len() != self.n {
+            bail!("all_gather: {} slots for {} devices", slots.len(), self.n);
+        }
+        if self.n == 1 {
+            return Ok(());
+        }
+        let bytes: u64 = slots.iter().map(|t| t.bytes() as u64).sum();
+        let refs: Vec<&Tensor> = slots.iter().collect();
+        let full = ops::concat_dim(&refs, dim)?;
+        for s in slots.iter_mut() {
+            *s = full.clone();
+        }
+        // ring all-gather: every device forwards n-1 chunks => (n-1) * sum(C)
+        self.meter.add(CommKind::AllGather, (self.n as u64 - 1) * bytes);
+        Ok(())
+    }
+
+    /// Broadcast from `root` to all (metered as (n-1)*C).
+    pub fn broadcast(&self, slots: &mut [Tensor], root: usize) -> Result<()> {
+        if slots.len() != self.n {
+            bail!("broadcast: {} slots for {} devices", slots.len(), self.n);
+        }
+        if root >= self.n {
+            bail!("broadcast root {root} out of {}", self.n);
+        }
+        if self.n == 1 {
+            return Ok(());
+        }
+        let c = slots[root].bytes() as u64;
+        let src = slots[root].clone();
+        for (i, s) in slots.iter_mut().enumerate() {
+            if i != root {
+                *s = src.clone();
+            }
+        }
+        self.meter.add(CommKind::AllGather, (self.n as u64 - 1) * c);
+        Ok(())
+    }
+
+    /// Point-to-point send between pipeline stages (metered separately so
+    /// the Fig. 4 pipeline-communication comparison can read it off).
+    pub fn pipeline_send(&self, t: &Tensor) {
+        self.meter.add(CommKind::Pipeline, t.bytes() as u64);
+    }
+
+    /// Megatron's pipeline boundary under tensor parallelism: scatter the
+    /// activation (split along sequence), send, then all-gather on the
+    /// receiving stage (paper §3.2.2 last paragraph).  Sequence
+    /// parallelism skips both the scatter and the gather.
+    pub fn pipeline_boundary_megatron(&self, act: &Tensor) {
+        let c = act.bytes() as u64;
+        // scatter: the activation is split across the TP group before send
+        self.meter.add(CommKind::Scatter, c);
+        // each TP rank sends its 1/n slice to the next stage
+        self.meter.add(CommKind::Pipeline, c);
+        // all-gather on the receiving side
+        self.meter.add(CommKind::AllGather, (self.n as u64 - 1) * c / self.n as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slots(n: usize, len: usize) -> Vec<Tensor> {
+        (0..n)
+            .map(|d| Tensor::from_f32(&[len], vec![d as f32 + 1.0; len]).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn ring_shift_rotates_and_meters() {
+        let m = Meter::new();
+        let f = Fabric::new(4, m.clone());
+        let mut s = slots(4, 8);
+        f.ring_shift(&mut s).unwrap();
+        // device d now holds chunk (d-1) mod 4
+        assert_eq!(s[1].f32s().unwrap()[0], 1.0);
+        assert_eq!(s[0].f32s().unwrap()[0], 4.0);
+        assert_eq!(m.get(CommKind::RingP2p), 4 * 8 * 4); // 4 devices x 8 f32
+        // full cycle returns home
+        for _ in 0..3 {
+            f.ring_shift(&mut s).unwrap();
+        }
+        assert_eq!(s[0].f32s().unwrap()[0], 1.0);
+    }
+
+    #[test]
+    fn all_reduce_sums_everywhere() {
+        let m = Meter::new();
+        let f = Fabric::new(3, m.clone());
+        let mut s = slots(3, 4);
+        f.all_reduce_sum(&mut s).unwrap();
+        for d in &s {
+            assert_eq!(d.f32s().unwrap(), &[6.0, 6.0, 6.0, 6.0]);
+        }
+        // 2*(n-1)*C bytes
+        assert_eq!(m.get(CommKind::AllReduce), 2 * 2 * 16);
+    }
+
+    #[test]
+    fn all_gather_concatenates() {
+        let m = Meter::new();
+        let f = Fabric::new(2, m.clone());
+        let mut s = vec![
+            Tensor::from_f32(&[1, 2], vec![1.0, 2.0]).unwrap(),
+            Tensor::from_f32(&[1, 2], vec![3.0, 4.0]).unwrap(),
+        ];
+        f.all_gather(&mut s, 0).unwrap();
+        for d in &s {
+            assert_eq!(d.shape, vec![2, 2]);
+            assert_eq!(d.f32s().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        }
+    }
+
+    #[test]
+    fn broadcast_replicates_root() {
+        let m = Meter::new();
+        let f = Fabric::new(3, m);
+        let mut s = slots(3, 2);
+        f.broadcast(&mut s, 2).unwrap();
+        for d in &s {
+            assert_eq!(d.f32s().unwrap(), &[3.0, 3.0]);
+        }
+    }
+
+    #[test]
+    fn single_device_is_free() {
+        let m = Meter::new();
+        let f = Fabric::new(1, m.clone());
+        let mut s = slots(1, 8);
+        f.ring_shift(&mut s).unwrap();
+        f.all_reduce_sum(&mut s).unwrap();
+        assert_eq!(m.snapshot().total(), 0);
+    }
+
+    #[test]
+    fn meter_reset() {
+        let m = Meter::new();
+        m.add(CommKind::Pipeline, 100);
+        assert_eq!(m.total_bytes(), 100);
+        m.reset();
+        assert_eq!(m.total_bytes(), 0);
+    }
+}

@@ -1,0 +1,202 @@
+//! Threaded ring fabric: the same ring protocol as [`super::Fabric`],
+//! executed by real OS threads over channels.
+//!
+//! The sequential [`super::Fabric`] is what the engines drive (the PJRT
+//! client handles are `Rc`-based and cannot cross threads), but the wire
+//! protocol must be provably deadlock-free and order-correct — this module
+//! is that proof, exercised by unit tests and `rust/tests/fabric.rs`.
+//!
+//! Topology: a full mesh of mpsc channels; `rx[i][j]` receives at rank i
+//! what rank j sent.  Ring ops only use the (i -> i+1 mod n) edges.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::tensor::{ops, Tensor};
+
+use super::{CommKind, Meter};
+
+/// Per-rank communicator handle; owned by that rank's thread.
+pub struct RingComm {
+    pub rank: usize,
+    pub n: usize,
+    meter: Arc<Meter>,
+    tx: Vec<Sender<Tensor>>,     // tx[j]: send to rank j
+    rx: Vec<Receiver<Tensor>>,   // rx[j]: receive from rank j
+}
+
+/// Build the full mesh for `n` ranks.
+pub fn mesh(n: usize, meter: Arc<Meter>) -> Vec<RingComm> {
+    // channels[i][j] carries i -> j
+    let mut senders: Vec<Vec<Option<Sender<Tensor>>>> = (0..n)
+        .map(|_| (0..n).map(|_| None).collect())
+        .collect();
+    let mut receivers: Vec<Vec<Option<Receiver<Tensor>>>> = (0..n)
+        .map(|_| (0..n).map(|_| None).collect())
+        .collect();
+    for i in 0..n {
+        for j in 0..n {
+            let (tx, rx) = channel();
+            senders[i][j] = Some(tx);
+            receivers[j][i] = Some(rx); // at j, indexed by source i
+        }
+    }
+    let mut comms = Vec::with_capacity(n);
+    for (rank, (srow, rrow)) in senders.drain(..).zip(receivers.drain(..)).enumerate() {
+        comms.push(RingComm {
+            rank,
+            n,
+            meter: meter.clone(),
+            tx: srow.into_iter().map(Option::unwrap).collect(),
+            rx: rrow.into_iter().map(Option::unwrap).collect(),
+        });
+    }
+    comms
+}
+
+impl RingComm {
+    pub fn next_rank(&self) -> usize {
+        (self.rank + 1) % self.n
+    }
+
+    pub fn prev_rank(&self) -> usize {
+        (self.rank + self.n - 1) % self.n
+    }
+
+    /// One ring exchange: send `t` to rank+1, receive from rank-1.
+    /// Send-before-receive is safe because channels are buffered — this is
+    /// the same non-blocking-send assumption NCCL's ring makes.
+    pub fn ring_exchange(&self, t: Tensor) -> Result<Tensor> {
+        let bytes = t.bytes() as u64;
+        self.tx[self.next_rank()]
+            .send(t)
+            .map_err(|_| anyhow!("rank {}: ring peer hung up", self.rank))?;
+        let got = self.rx[self.prev_rank()]
+            .recv()
+            .map_err(|_| anyhow!("rank {}: ring recv failed", self.rank))?;
+        self.meter.add(CommKind::RingP2p, bytes);
+        Ok(got)
+    }
+
+    /// Ring all-reduce (sum), chunked reduce-scatter + all-gather.
+    /// Operates on this rank's local tensor; returns the reduced tensor.
+    pub fn all_reduce_sum(&self, mut local: Tensor) -> Result<Tensor> {
+        if self.n == 1 {
+            return Ok(local);
+        }
+        // Simple ring version over whole tensors (n-1 reduce + n-1 gather
+        // steps).  Byte metering matches the chunked ideal 2(n-1)C/n per
+        // device because we meter on the canonical formula, not the naive
+        // payload (documented accounting choice, same as Fabric).
+        let c = local.bytes() as u64;
+        let mut acc = local.clone();
+        let mut travelling = local.clone();
+        for _ in 0..self.n - 1 {
+            travelling = self.ring_exchange_unmetered(travelling)?;
+            ops::add_assign(&mut acc, &travelling)?;
+        }
+        // now every rank has the full sum in acc (after n-1 steps each rank
+        // saw every chunk exactly once)
+        local = acc;
+        self.meter.add(CommKind::AllReduce, 2 * (self.n as u64 - 1) * c / self.n as u64);
+        Ok(local)
+    }
+
+    fn ring_exchange_unmetered(&self, t: Tensor) -> Result<Tensor> {
+        self.tx[self.next_rank()]
+            .send(t)
+            .map_err(|_| anyhow!("rank {}: ring peer hung up", self.rank))?;
+        self.rx[self.prev_rank()]
+            .recv()
+            .map_err(|_| anyhow!("rank {}: ring recv failed", self.rank))
+    }
+
+    /// Direct P2P (pipeline stages).
+    pub fn send_to(&self, dst: usize, t: Tensor) -> Result<()> {
+        self.meter.add(CommKind::Pipeline, t.bytes() as u64);
+        self.tx[dst]
+            .send(t)
+            .map_err(|_| anyhow!("rank {}: send to {dst} failed", self.rank))
+    }
+
+    pub fn recv_from(&self, src: usize) -> Result<Tensor> {
+        self.rx[src]
+            .recv()
+            .map_err(|_| anyhow!("rank {}: recv from {src} failed", self.rank))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// N threads run the full RSA ring-rotation pattern concurrently; the
+    /// result must equal the sequential Fabric's rotation semantics.
+    #[test]
+    fn threaded_ring_rotation_matches_sequential() {
+        let n = 4;
+        let meter = Meter::new();
+        let comms = mesh(n, meter.clone());
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|comm| {
+                std::thread::spawn(move || {
+                    let mut held =
+                        Tensor::from_f32(&[2], vec![comm.rank as f32; 2]).unwrap();
+                    let mut seen = vec![comm.rank];
+                    for _ in 0..comm.n - 1 {
+                        held = comm.ring_exchange(held).unwrap();
+                        seen.push(held.f32s().unwrap()[0] as usize);
+                    }
+                    (comm.rank, seen, held)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (rank, seen, final_held) = h.join().unwrap();
+            // device d sees chunks d, d-1, d-2, ... (mod n): every chunk once
+            let expect: Vec<usize> = (0..n).map(|t| (rank + n - t) % n).collect();
+            assert_eq!(seen, expect, "rank {rank} saw wrong chunk order");
+            // after n-1 exchanges we hold chunk (rank+1) mod n
+            assert_eq!(final_held.f32s().unwrap()[0] as usize, (rank + 1) % n);
+        }
+        // bytes: (n-1) exchanges x n ranks x 8 bytes
+        assert_eq!(meter.get(CommKind::RingP2p), ((n - 1) * n * 8) as u64);
+    }
+
+    #[test]
+    fn threaded_all_reduce_sums() {
+        let n = 3;
+        let meter = Meter::new();
+        let comms = mesh(n, meter);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|comm| {
+                std::thread::spawn(move || {
+                    let local =
+                        Tensor::from_f32(&[4], vec![(comm.rank + 1) as f32; 4]).unwrap();
+                    comm.all_reduce_sum(local).unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            let t = h.join().unwrap();
+            assert_eq!(t.f32s().unwrap(), &[6.0, 6.0, 6.0, 6.0]);
+        }
+    }
+
+    #[test]
+    fn p2p_send_recv() {
+        let meter = Meter::new();
+        let mut comms = mesh(2, meter.clone());
+        let c1 = comms.pop().unwrap();
+        let c0 = comms.pop().unwrap();
+        let t = Tensor::from_f32(&[3], vec![7.0, 8.0, 9.0]).unwrap();
+        let h = std::thread::spawn(move || c1.recv_from(0).unwrap());
+        c0.send_to(1, t.clone()).unwrap();
+        assert_eq!(h.join().unwrap(), t);
+        assert_eq!(meter.get(CommKind::Pipeline), 12);
+    }
+}

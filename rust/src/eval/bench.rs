@@ -1,0 +1,87 @@
+//! Minimal benchmark harness — criterion is unavailable offline.
+//!
+//! Warmup + N timed iterations, reporting mean / p50 / p95 / min.  The
+//! `cargo bench` targets (Cargo.toml `[[bench]]`, `harness = false`) use
+//! this to time the real hot paths and to regenerate the paper's
+//! figures/tables (benches print the same rows the paper reports).
+
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self, name: &str) {
+        println!(
+            "{name:<44} {:>6} iters  mean {:>12}  p50 {:>12}  p95 {:>12}  min {:>12}",
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.min_ns),
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3}µs", ns / 1e3)
+    } else {
+        format!("{ns:.0}ns")
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let idx = |q: f64| ((samples.len() as f64 - 1.0) * q) as usize;
+    BenchStats {
+        iters,
+        mean_ns: mean,
+        p50_ns: samples[idx(0.5)],
+        p95_ns: samples[idx(0.95)],
+        min_ns: samples[0],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_ordered() {
+        let s = bench(2, 32, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.min_ns <= s.p50_ns && s.p50_ns <= s.p95_ns);
+        assert_eq!(s.iters, 32);
+    }
+
+    #[test]
+    fn formats_units() {
+        assert!(fmt_ns(5.0).ends_with("ns"));
+        assert!(fmt_ns(5.0e3).ends_with("µs"));
+        assert!(fmt_ns(5.0e6).ends_with("ms"));
+        assert!(fmt_ns(5.0e9).ends_with('s'));
+    }
+}

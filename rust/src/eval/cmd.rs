@@ -1,0 +1,203 @@
+//! CLI subcommand implementations.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::comm::{Fabric, Meter};
+use crate::model::params::ParamStore;
+use crate::parallel::sequence::SeqParEngine;
+use crate::parallel::tensorp::TensorParEngine;
+use crate::parallel::{Batch, Engine};
+use crate::runtime::Runtime;
+use crate::tensor::{io, ops};
+use crate::train::data::{Corpus, CorpusConfig};
+use crate::train::trainer::{TrainConfig, Trainer};
+use crate::util::cli::Args;
+
+pub const HELP: &str = "\
+seqpar — Sequence Parallelism (Li et al., ACL 2023) reproduction
+
+USAGE:
+  seqpar <command> [flags]
+
+COMMANDS:
+  info      print manifest + runtime summary
+  verify    run the rust engines against the python-exported goldens
+  train     train with --engine seq|tensor|serial (Fig. 6 convergence)
+  sweep     regenerate a paper figure/table via the cluster simulator
+  help      this text
+
+COMMON FLAGS:
+  --artifacts DIR     artifact directory (default: artifacts)
+  --steps N           training steps (train; default 50)
+  --engine NAME       seq | tensor | serial (train; default seq)
+  --seed N            corpus seed (train; default 7)
+  --experiment ID     fig3a|fig3b|fig4a|fig4b|fig5a|fig5b|fig7|fig8|fig9|
+                      table4|tables (sweep)
+  --model NAME        bert-base | bert-large (sweep; default bert-base)
+";
+
+pub fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str_or("artifacts", "artifacts"))
+}
+
+pub fn info(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let rt = Runtime::open(&dir)?;
+    let m = &rt.manifest;
+    println!("manifest: {}", dir.join("manifest.json").display());
+    println!(
+        "model {}  layers={} H={} Z={} A={} FFN={} V={}",
+        m.model, m.layers, m.hidden, m.heads, m.head_dim, m.ffn, m.vocab
+    );
+    println!(
+        "run shapes: batch={} seq_len={} ring={} tp={} linformer_k={}",
+        m.batch, m.seq_len, m.ring, m.tp, m.linformer_k
+    );
+    println!("artifacts: {}", m.artifacts.len());
+    println!("params: {} tensors", m.params.len());
+    println!("goldens: {} tensors", m.goldens.len());
+    Ok(())
+}
+
+/// Load the golden batch exported by aot.py.
+pub fn golden_batch(rt: &Runtime, dir: &PathBuf) -> Result<Batch> {
+    let g = |name: &str| -> Result<_> {
+        let rel = rt
+            .manifest
+            .goldens
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("golden {name:?} missing"))?;
+        io::load(&dir.join(rel))
+    };
+    Ok(Batch {
+        ids: g("ids")?,
+        labels: g("labels")?,
+        mask: g("mask")?,
+        sop_labels: g("sop_labels")?,
+    })
+}
+
+pub fn verify(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let rt = Runtime::open(&dir)?;
+    let params = ParamStore::load(&dir, &rt.manifest)?;
+    let batch = golden_batch(&rt, &dir)?;
+    let n = rt.manifest.ring;
+    let tol = 2e-3f32;
+
+    // ---- sequence-parallel engine vs python chain goldens ---------------
+    let meter = Meter::new();
+    let engine = SeqParEngine::new(&rt, Fabric::new(n, meter.clone()))?;
+    let out = engine.forward_backward(&params, &batch)?;
+    let want_loss = io::load(&dir.join(&rt.manifest.goldens["loss"]))?;
+    let wl = want_loss.f32s()?;
+    println!(
+        "seq-par  loss {:.6} (golden {:.6})  mlm {:.6}/{:.6}  sop {:.6}/{:.6}",
+        out.loss, wl[0], out.mlm, wl[1], out.sop, wl[2]
+    );
+    if (out.loss - wl[0]).abs() > tol {
+        bail!("loss mismatch: {} vs golden {}", out.loss, wl[0]);
+    }
+    let mut worst = 0.0f32;
+    for d in 0..n {
+        let want = io::load(&dir.join(&rt.manifest.goldens[&format!("hidden_dev{d}")]))?;
+        let diff = ops::max_abs_diff(&out.hidden[d], &want)?;
+        worst = worst.max(diff);
+    }
+    println!("seq-par  hidden max|Δ| = {worst:.2e} over {n} devices");
+    if worst > tol {
+        bail!("hidden mismatch {worst}");
+    }
+    for gname in ["layer0.wq", "mlm_b", "tok_emb"] {
+        let file = &rt.manifest.goldens[&format!("grad_{}", gname.replace('.', "_"))];
+        let want = io::load(&dir.join(file))?;
+        let diff = ops::max_abs_diff(&out.grads.values[gname], &want)?;
+        println!("seq-par  grad[{gname}] max|Δ| = {diff:.2e}");
+        if diff > tol {
+            bail!("grad {gname} mismatch {diff}");
+        }
+    }
+    println!(
+        "seq-par  comm: ring_p2p={}B all_reduce={}B ({} ops)",
+        meter.get(crate::comm::CommKind::RingP2p),
+        meter.get(crate::comm::CommKind::AllReduce),
+        meter.snapshot().ops,
+    );
+
+    // ---- serial engine must agree with seq-par ---------------------------
+    let serial = TensorParEngine::new(&rt, Fabric::new(1, Meter::new()))?;
+    let sout = serial.forward_backward(&params, &batch)?;
+    println!("serial   loss {:.6}  (Δ vs seq-par {:.2e})", sout.loss, (sout.loss - out.loss).abs());
+    if (sout.loss - out.loss).abs() > tol {
+        bail!("serial/seq-par disagree: {} vs {}", sout.loss, out.loss);
+    }
+
+    // ---- tensor-parallel engine must agree too ---------------------------
+    let tp = rt.manifest.tp;
+    if tp > 1 {
+        let tpe = TensorParEngine::new(&rt, Fabric::new(tp, Meter::new()))?;
+        let tout = tpe.forward_backward(&params, &batch)?;
+        println!("tensor{tp}  loss {:.6}  (Δ vs serial {:.2e})", tout.loss, (tout.loss - sout.loss).abs());
+        if (tout.loss - sout.loss).abs() > tol {
+            bail!("tensor-par/serial disagree: {} vs {}", tout.loss, sout.loss);
+        }
+    }
+    let stats = rt.stats();
+    println!(
+        "runtime: {} executables compiled, {} calls, compile {:.2}s, exec {:.2}s",
+        rt.cached_executables(),
+        stats.calls,
+        stats.compile_nanos as f64 / 1e9,
+        stats.exec_nanos as f64 / 1e9,
+    );
+    println!("VERIFY OK");
+    Ok(())
+}
+
+pub fn train(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let rt = Runtime::open(&dir)?;
+    let mut params = ParamStore::load(&dir, &rt.manifest)?;
+    let steps = args.usize_or("steps", 50)? as u64;
+    let seed = args.usize_or("seed", 7)? as u64;
+    let engine_name = args.str_or("engine", "seq").to_string();
+    let m = &rt.manifest;
+    let mut corpus = Corpus::new(CorpusConfig::new(m.vocab, m.seq_len, m.batch), seed);
+    let cfg = TrainConfig {
+        steps,
+        warmup: (steps / 10).max(1),
+        peak_lr: args.f64_or("lr", 1e-3)? as f32,
+        log_every: args.usize_or("log-every", 10)? as u64,
+    };
+    let meter = Meter::new();
+    match engine_name.as_str() {
+        "seq" => {
+            let e = SeqParEngine::new(&rt, Fabric::new(m.ring, meter.clone()))?;
+            let mut trainer = Trainer::new(&e, &params, cfg);
+            trainer.run(&mut params, || corpus.next_batch(), false)?;
+        }
+        "tensor" => {
+            let e = TensorParEngine::new(&rt, Fabric::new(m.tp, meter.clone()))?;
+            let mut trainer = Trainer::new(&e, &params, cfg);
+            trainer.run(&mut params, || corpus.next_batch(), false)?;
+        }
+        "serial" => {
+            let e = TensorParEngine::new(&rt, Fabric::new(1, meter.clone()))?;
+            let mut trainer = Trainer::new(&e, &params, cfg);
+            trainer.run(&mut params, || corpus.next_batch(), false)?;
+        }
+        other => bail!("unknown --engine {other:?} (seq|tensor|serial)"),
+    }
+    let s = meter.snapshot();
+    println!(
+        "comm totals: ring_p2p={} all_reduce={} all_gather={} pipeline={} ({} ops)",
+        s.ring_p2p, s.all_reduce, s.all_gather, s.pipeline, s.ops
+    );
+    Ok(())
+}
+
+pub fn sweep(args: &Args) -> Result<()> {
+    crate::eval::sweep::run(args)
+}

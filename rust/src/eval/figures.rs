@@ -1,0 +1,286 @@
+//! Figure/table data generators — one function per paper artifact.
+//!
+//! Each returns plain rows (testable without capturing stdout); the
+//! `sweep` command formats them.  The paper's concrete claims are encoded
+//! in rust/tests/paper_claims.rs against these generators.
+
+use crate::model::ModelConfig;
+use crate::simulator::{memory, search, sparse, timing, Cluster, RunShape, Strategy};
+
+/// Candidate parallel sizes the paper sweeps (1..64 devices).
+pub const SIZES: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
+
+/// TP sizes feasible for a model (divisors of the head count, the
+/// Megatron cap the paper highlights: max 12 for Base, 16 for Large).
+pub fn tp_sizes(cfg: &ModelConfig) -> Vec<usize> {
+    (1..=cfg.heads)
+        .filter(|n| cfg.heads % n == 0 && cfg.ffn() % n == 0)
+        .collect()
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct ScalingRow {
+    pub n: usize,
+    pub tp_max_batch: Option<usize>,
+    pub sp_max_batch: usize,
+    pub tp_tokens_per_sec: Option<f64>,
+    pub sp_tokens_per_sec: f64,
+}
+
+/// Fig. 3 (BERT-Base) / Fig. 7 (BERT-Large): max batch + throughput while
+/// scaling the tensor/sequence parallel size.  L = 512, no pipeline.
+/// Throughput is measured at the per-strategy max batch (how the paper
+/// saturates each configuration).
+/// Sweep grid: the power-of-two sizes plus TP's feasible sizes (so the
+/// paper's comparison points — TP@12 for Base, TP@16 for Large — appear).
+fn grid(cfg: &ModelConfig) -> Vec<usize> {
+    let mut v: Vec<usize> = SIZES.to_vec();
+    v.extend(tp_sizes(cfg));
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+pub fn fig3(cluster: &Cluster, model: ModelConfig) -> Vec<ScalingRow> {
+    let l = 512;
+    let tps = tp_sizes(&model);
+    grid(&model)
+        .iter()
+        .map(|&n| {
+            let sp = Strategy::Sequence { n };
+            let sp_max = search::max_batch(cluster, model, l, 1, 1, sp);
+            let sp_tps = timing::tokens_per_sec(
+                cluster,
+                &RunShape::new(model, sp_max.max(1), l),
+                sp,
+            );
+            let (tp_max, tp_tps) = if tps.contains(&n) {
+                let tp = Strategy::Tensor { n };
+                let mb = search::max_batch(cluster, model, l, 1, 1, tp);
+                let t = timing::tokens_per_sec(
+                    cluster,
+                    &RunShape::new(model, mb.max(1), l),
+                    tp,
+                );
+                (Some(mb), Some(t))
+            } else {
+                (None, None)
+            };
+            ScalingRow {
+                n,
+                tp_max_batch: tp_max,
+                sp_max_batch: sp_max,
+                tp_tokens_per_sec: tp_tps,
+                sp_tokens_per_sec: sp_tps,
+            }
+        })
+        .collect()
+}
+
+/// Fig. 4 (Base) / Fig. 8 (Large): MP size fixed at 4, scale pipeline.
+pub fn fig4(cluster: &Cluster, model: ModelConfig) -> Vec<ScalingRow> {
+    let l = 512;
+    let micros = 8;
+    [1usize, 2, 4, 8]
+        .iter()
+        .map(|&stages| {
+            let sp = Strategy::Sequence { n: 4 };
+            let tp = Strategy::Tensor { n: 4 };
+            let sp_max = search::max_batch(cluster, model, l, stages, micros, sp);
+            let tp_max = search::max_batch(cluster, model, l, stages, micros, tp);
+            let sp_tps = timing::tokens_per_sec(
+                cluster,
+                &RunShape::new(model, sp_max.max(1), l).with_pipeline(stages, micros),
+                sp,
+            );
+            let tp_tps = timing::tokens_per_sec(
+                cluster,
+                &RunShape::new(model, tp_max.max(1), l).with_pipeline(stages, micros),
+                tp,
+            );
+            ScalingRow {
+                n: stages,
+                tp_max_batch: Some(tp_max),
+                sp_max_batch: sp_max,
+                tp_tokens_per_sec: Some(tp_tps),
+                sp_tokens_per_sec: sp_tps,
+            }
+        })
+        .collect()
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct SeqLenRow {
+    pub n: usize,
+    pub tp_max_len: Option<usize>,
+    pub sp_max_len: usize,
+}
+
+/// Fig. 5a (Base, batch 64) / Fig. 9 (Large, batch 16): max sequence
+/// length while scaling devices.
+pub fn fig5a(cluster: &Cluster, model: ModelConfig, batch: usize) -> Vec<SeqLenRow> {
+    let tps = tp_sizes(&model);
+    grid(&model)
+        .iter()
+        .map(|&n| {
+            let sp_len =
+                search::max_seq_len(cluster, model, batch, 1, 1, Strategy::Sequence { n }, 64);
+            let tp_len = if tps.contains(&n) {
+                Some(search::max_seq_len(
+                    cluster, model, batch, 1, 1, Strategy::Tensor { n }, 64,
+                ))
+            } else {
+                None
+            };
+            SeqLenRow { n, tp_max_len: tp_len, sp_max_len: sp_len }
+        })
+        .collect()
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct SparseRow {
+    pub n: usize,
+    pub dense_max_len: usize,
+    pub sparse_max_len: usize,
+}
+
+/// Fig. 5b: sequence length upper bound, dense vs Linformer sparse
+/// attention under sequence parallelism (batch 4, K = 256).
+pub fn fig5b(cluster: &Cluster, model: ModelConfig) -> Vec<SparseRow> {
+    [1usize, 2, 4, 8, 16, 32]
+        .iter()
+        .map(|&n| SparseRow {
+            n,
+            dense_max_len: search::max_seq_len(
+                cluster, model, 4, 1, 1, Strategy::Sequence { n }, 64,
+            ),
+            sparse_max_len: sparse::max_seq_len_linformer(cluster, model, 4, n, 256, 64),
+        })
+        .collect()
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct WeakScalingRow {
+    pub n: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub tp_mem_mb: Option<f64>,
+    pub tp_tokens_per_sec: Option<f64>,
+    pub sp_mem_mb: f64,
+    pub sp_tokens_per_sec: f64,
+}
+
+/// Table 4: weak scaling.  Two sweeps: batch-dim (B = 64·n, L = 512) and
+/// sequence-dim (B = 64, L = 256·n).  Pipeline size 8 as in the paper.
+pub fn table4(cluster: &Cluster, model: ModelConfig) -> Vec<WeakScalingRow> {
+    let tps = tp_sizes(&model);
+    let mut rows = Vec::new();
+    let mut push = |n: usize, batch: usize, seq_len: usize| {
+        let shape = RunShape::new(model, batch, seq_len).with_pipeline(8, 8);
+        let sp = Strategy::Sequence { n };
+        let sp_bytes = memory::peak_bytes(&shape, sp);
+        let sp_fit = sp_bytes <= cluster.gpu_mem;
+        let (tp_mem, tp_tps) = if tps.contains(&n) {
+            let tp = Strategy::Tensor { n };
+            let bytes = memory::peak_bytes(&shape, tp);
+            if bytes <= cluster.gpu_mem {
+                (
+                    Some(bytes as f64 / (1 << 20) as f64),
+                    Some(timing::tokens_per_sec(cluster, &shape, tp)),
+                )
+            } else {
+                (None, None) // OOM — exactly what Table 4 reports at n=8
+            }
+        } else {
+            (None, None)
+        };
+        rows.push(WeakScalingRow {
+            n,
+            batch,
+            seq_len,
+            tp_mem_mb: tp_mem,
+            tp_tokens_per_sec: tp_tps,
+            sp_mem_mb: sp_bytes as f64 / (1 << 20) as f64,
+            sp_tokens_per_sec: if sp_fit {
+                timing::tokens_per_sec(cluster, &shape, sp)
+            } else {
+                0.0
+            },
+        });
+    };
+    for n in [1usize, 2, 4, 8] {
+        push(n, 64 * n, 512); // batch-dimension weak scaling
+    }
+    for n in [1usize, 2, 4, 8] {
+        push(n, 64, 256 * n); // sequence-dimension weak scaling
+    }
+    rows
+}
+
+/// Tables 1 & 2: the closed-form memory comparison at a given shape.
+#[derive(Clone, Copy, Debug)]
+pub struct FormulaRow {
+    pub block: &'static str,
+    pub tp_elems: u64,
+    pub sp_elems: u64,
+    pub sp_wins: bool,
+}
+
+pub fn tables12(model: ModelConfig, b: u64, l: u64, n: u64) -> [FormulaRow; 2] {
+    let (h, a, z) = (model.hidden as u64, model.head_dim as u64, model.heads as u64);
+    let mlp_tp = memory::paper_mlp_tensor(b, l, h, n);
+    let mlp_sp = memory::paper_mlp_sequence(b, l, h, n);
+    let at_tp = memory::paper_attn_tensor(b, l, h, a, z, n);
+    let at_sp = memory::paper_attn_sequence(b, l, h, a, z, n);
+    [
+        FormulaRow { block: "MLP (Table 1)", tp_elems: mlp_tp, sp_elems: mlp_sp, sp_wins: mlp_sp < mlp_tp },
+        FormulaRow { block: "Attention (Table 2)", tp_elems: at_tp, sp_elems: at_sp, sp_wins: at_sp < at_tp },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{BERT_BASE, BERT_LARGE};
+
+    #[test]
+    fn tp_sizes_capped_at_head_count() {
+        assert_eq!(tp_sizes(&BERT_BASE), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(tp_sizes(&BERT_LARGE), vec![1, 2, 4, 8, 16]);
+    }
+
+    #[test]
+    fn fig3_sp_extends_past_tp_cap() {
+        let rows = fig3(&Cluster::default(), BERT_BASE);
+        let at64 = rows.iter().find(|r| r.n == 64).unwrap();
+        assert!(at64.tp_max_batch.is_none(), "TP cannot reach 64 on 12 heads");
+        assert!(at64.sp_max_batch > 0);
+    }
+
+    #[test]
+    fn fig5b_sparse_dominates_dense() {
+        for row in fig5b(&Cluster::default(), BERT_BASE) {
+            assert!(row.sparse_max_len >= row.dense_max_len, "{row:?}");
+        }
+    }
+
+    #[test]
+    fn table4_tp_ooms_at_8_sp_does_not() {
+        let rows = table4(&Cluster::default(), BERT_BASE);
+        let batch8 = rows.iter().find(|r| r.n == 8 && r.seq_len == 512).unwrap();
+        assert!(batch8.tp_mem_mb.is_none(), "paper Table 4: TP OOMs at n=8");
+        assert!(batch8.sp_mem_mb > 0.0 && batch8.sp_tokens_per_sec > 0.0);
+    }
+
+    #[test]
+    fn table4_sp_memory_flat_in_batch_sweep() {
+        let rows = table4(&Cluster::default(), BERT_BASE);
+        let batch_rows: Vec<_> = rows.iter().filter(|r| r.seq_len == 512).collect();
+        let first = batch_rows.first().unwrap().sp_mem_mb;
+        let last = batch_rows.last().unwrap().sp_mem_mb;
+        assert!(
+            (last / first) < 1.35,
+            "SP memory should stay ~constant: {first} -> {last} MB"
+        );
+    }
+}

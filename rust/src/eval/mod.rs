@@ -1,0 +1,7 @@
+//! Experiment harness: regenerates every figure and table of the paper
+//! (see DESIGN.md §5 for the index) and hosts the CLI subcommands.
+
+pub mod bench;
+pub mod cmd;
+pub mod figures;
+pub mod sweep;

@@ -1,0 +1,195 @@
+//! `seqpar sweep --experiment <id>` — print a paper figure/table.
+
+use anyhow::{bail, Result};
+
+use crate::model::by_name;
+use crate::simulator::Cluster;
+use crate::util::cli::Args;
+
+use super::figures;
+
+fn fmt_opt_usize(v: Option<usize>) -> String {
+    v.map(|x| x.to_string()).unwrap_or_else(|| "—".into())
+}
+
+fn fmt_opt_f64(v: Option<f64>) -> String {
+    v.map(|x| format!("{x:.0}")).unwrap_or_else(|| "—".into())
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let exp = args.str_or("experiment", "all").to_string();
+    let cluster = Cluster::default();
+    match exp.as_str() {
+        "fig3a" | "fig3b" | "fig3" | "fig7" => fig3(&cluster, args),
+        "fig4a" | "fig4b" | "fig4" | "fig8" => fig4(&cluster, args),
+        "fig5a" | "fig9" => fig5a(&cluster, args),
+        "fig5b" => fig5b(&cluster, args),
+        "table4" => table4(&cluster, args),
+        "tables" => tables12(args),
+        "all" => {
+            fig3(&cluster, args)?;
+            println!();
+            fig4(&cluster, args)?;
+            println!();
+            fig5a(&cluster, args)?;
+            println!();
+            fig5b(&cluster, args)?;
+            println!();
+            table4(&cluster, args)?;
+            println!();
+            tables12(args)
+        }
+        other => bail!("unknown --experiment {other:?}"),
+    }
+}
+
+fn model_of(args: &Args) -> Result<crate::model::ModelConfig> {
+    by_name(args.str_or("model", "bert-base"))
+}
+
+fn fig3(cluster: &Cluster, args: &Args) -> Result<()> {
+    let model = model_of(args)?;
+    let fig = if model.name == "bert-large" { "Fig. 7" } else { "Fig. 3" };
+    println!("=== {fig}a/b — {} max batch & throughput vs parallel size (L=512) ===", model.name);
+    println!("{:>4} | {:>12} {:>12} | {:>12} {:>12}", "n", "TP maxB", "SP maxB", "TP tok/s", "SP tok/s");
+    let rows = figures::fig3(cluster, model);
+    for r in &rows {
+        // SP is infeasible when n does not divide L=512 (the paper's own
+        // divisibility requirement) — shown as "—" like TP past its cap.
+        let (sp_b, sp_t) = if r.sp_max_batch == 0 {
+            ("—".to_string(), "—".to_string())
+        } else {
+            (r.sp_max_batch.to_string(), format!("{:.0}", r.sp_tokens_per_sec))
+        };
+        println!(
+            "{:>4} | {:>12} {:>12} | {:>12} {:>12}",
+            r.n,
+            fmt_opt_usize(r.tp_max_batch),
+            sp_b,
+            fmt_opt_f64(r.tp_tokens_per_sec),
+            sp_t,
+        );
+    }
+    // headline ratio (paper: 13.7x for Base SP@64 vs TP@12)
+    let tp_best = rows
+        .iter()
+        .filter_map(|r| r.tp_max_batch)
+        .max()
+        .unwrap_or(1)
+        .max(1);
+    let sp64 = rows.iter().find(|r| r.n == 64).map(|r| r.sp_max_batch).unwrap_or(0);
+    println!(
+        "SP@64 / best-TP max batch = {:.1}x   (paper: 13.7x Base, 10.2x Large)",
+        sp64 as f64 / tp_best as f64
+    );
+    Ok(())
+}
+
+fn fig4(cluster: &Cluster, args: &Args) -> Result<()> {
+    let model = model_of(args)?;
+    let fig = if model.name == "bert-large" { "Fig. 8" } else { "Fig. 4" };
+    println!("=== {fig}a/b — {} scaling along pipeline size (MP=4, L=512, micros=8) ===", model.name);
+    println!("{:>6} | {:>12} {:>12} | {:>12} {:>12}", "stages", "TP maxB", "SP maxB", "TP tok/s", "SP tok/s");
+    for r in figures::fig4(cluster, model) {
+        println!(
+            "{:>6} | {:>12} {:>12} | {:>12} {:>12}",
+            r.n,
+            fmt_opt_usize(r.tp_max_batch),
+            r.sp_max_batch,
+            fmt_opt_f64(r.tp_tokens_per_sec),
+            format!("{:.0}", r.sp_tokens_per_sec),
+        );
+    }
+    println!("(SP's pipeline boundary skips Megatron's split+all-gather — §3.2.2)");
+    Ok(())
+}
+
+fn fig5a(cluster: &Cluster, args: &Args) -> Result<()> {
+    let model = model_of(args)?;
+    let (fig, batch) = if model.name == "bert-large" { ("Fig. 9", 16) } else { ("Fig. 5a", 64) };
+    println!("=== {fig} — {} max sequence length vs devices (batch={batch}) ===", model.name);
+    println!("{:>4} | {:>12} {:>12}", "n", "TP maxL", "SP maxL");
+    let rows = figures::fig5a(cluster, model, batch);
+    for r in &rows {
+        println!("{:>4} | {:>12} {:>12}", r.n, fmt_opt_usize(r.tp_max_len), r.sp_max_len);
+    }
+    let tp_best = rows.iter().filter_map(|r| r.tp_max_len).max().unwrap_or(1).max(1);
+    let sp64 = rows.iter().find(|r| r.n == 64).map(|r| r.sp_max_len).unwrap_or(0);
+    println!(
+        "SP@64 / best-TP max length = {:.1}x   (paper: ~3x Base, ~2x Large)",
+        sp64 as f64 / tp_best as f64
+    );
+    Ok(())
+}
+
+fn fig5b(cluster: &Cluster, args: &Args) -> Result<()> {
+    let model = model_of(args)?;
+    println!("=== Fig. 5b — {} sequence length upper bound, batch=4 (Linformer K=256) ===", model.name);
+    println!("{:>4} | {:>12} {:>12} {:>10}", "n", "dense maxL", "sparse maxL", "ideal");
+    let rows = figures::fig5b(cluster, model);
+    let base = rows.first().map(|r| r.sparse_max_len).unwrap_or(0);
+    for r in &rows {
+        println!(
+            "{:>4} | {:>12} {:>12} {:>10}",
+            r.n, r.dense_max_len, r.sparse_max_len, base * r.n
+        );
+    }
+    if let Some(last) = rows.last() {
+        println!(
+            "sparse @{} devices: {} tokens  (paper: >114K on 32 P100s)",
+            last.n, last.sparse_max_len
+        );
+    }
+    Ok(())
+}
+
+fn table4(cluster: &Cluster, args: &Args) -> Result<()> {
+    let model = model_of(args)?;
+    println!("=== Table 4 — weak scaling (pipeline=8) — {} ===", model.name);
+    println!(
+        "{:>4} {:>6} {:>6} | {:>10} {:>10} | {:>10} {:>10}",
+        "n", "batch", "L", "TP MB", "TP tok/s", "SP MB", "SP tok/s"
+    );
+    for r in figures::table4(cluster, model) {
+        println!(
+            "{:>4} {:>6} {:>6} | {:>10} {:>10} | {:>10.1} {:>10.0}",
+            r.n,
+            r.batch,
+            r.seq_len,
+            r.tp_mem_mb.map(|m| format!("{m:.1}")).unwrap_or_else(|| "OOM".into()),
+            fmt_opt_f64(r.tp_tokens_per_sec),
+            r.sp_mem_mb,
+            r.sp_tokens_per_sec,
+        );
+    }
+    Ok(())
+}
+
+fn tables12(args: &Args) -> Result<()> {
+    let model = model_of(args)?;
+    let (b, l, n) = (
+        args.usize_or("batch", 64)? as u64,
+        args.usize_or("seq-len", 512)? as u64,
+        args.usize_or("mp", 8)? as u64,
+    );
+    println!("=== Tables 1 & 2 — closed-form memory (elements), {} B={b} L={l} N={n} ===", model.name);
+    for row in figures::tables12(model, b, l, n) {
+        println!(
+            "{:<22} TP {:>14}  SP {:>14}   winner: {}",
+            row.block,
+            row.tp_elems,
+            row.sp_elems,
+            if row.sp_wins { "sequence" } else { "tensor" }
+        );
+    }
+    let h = model.hidden as u64;
+    let (a, z) = (model.head_dim as u64, model.heads as u64);
+    println!(
+        "break-evens: MLP BL > 32H = {}  (BL = {});  Attn BL > 16AZ = {}  (BL = {})",
+        crate::simulator::memory::mlp_breakeven_bl(h),
+        b * l,
+        crate::simulator::memory::attn_breakeven_bl(a, z),
+        b * l
+    );
+    Ok(())
+}

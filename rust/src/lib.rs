@@ -1,0 +1,43 @@
+//! # seqpar — Sequence Parallelism from a system perspective
+//!
+//! A rust + JAX + Pallas reproduction of *"Sequence Parallelism: Long
+//! Sequence Training from System Perspective"* (Li et al., ACL 2023).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`), lowered at build
+//!   time into the HLO artifacts.
+//! * **L2** — JAX step functions (`python/compile/steps.py`) defining the
+//!   per-device computation; `make artifacts` AOT-lowers them to
+//!   `artifacts/*.hlo.txt`.
+//! * **L3** — this crate: loads the artifacts via the PJRT C API and
+//!   orchestrates them across simulated devices with the paper's
+//!   Ring Self-Attention schedule, the Megatron tensor-parallel baseline,
+//!   GPipe-style pipeline parallelism and data parallelism (4D).
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! binary is self-contained.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`tensor`] — host tensors + the SPT1 interchange format
+//! * [`comm`] — the collective fabric (ring P2P, all-reduce, …) + meters
+//! * [`runtime`] — PJRT client, artifact registry, executable cache
+//! * [`model`] — transformer config, parameter store
+//! * [`parallel`] — the engines: sequence (RSA), tensor (Megatron),
+//!   pipeline (GPipe), data; and the 4D topology
+//! * [`train`] — Adam, LR schedule, losses bookkeeping, synthetic corpus
+//! * [`simulator`] — P100-cluster memory/time model for the paper's
+//!   64-GPU experiments (see DESIGN.md §2 on the substitution)
+//! * [`eval`] — experiment harness regenerating every figure and table
+//! * [`util`] — offline-build substrates: JSON, CLI, PRNG, mini-proptest
+
+pub mod comm;
+pub mod eval;
+pub mod model;
+pub mod parallel;
+pub mod runtime;
+pub mod simulator;
+pub mod tensor;
+pub mod train;
+pub mod util;

@@ -1,0 +1,31 @@
+//! seqpar — the coordinator CLI (leader entrypoint).
+//!
+//! Subcommands (each maps to a DESIGN.md experiment or utility):
+//!
+//! ```text
+//! seqpar info                         # manifest + runtime summary
+//! seqpar verify                       # rust engines vs python goldens
+//! seqpar train [--engine seq|tensor|serial] [--steps N] ...
+//! seqpar sweep --experiment fig3a ... # simulator-backed paper figures
+//! ```
+//!
+//! Run `seqpar help` for the full flag reference.
+
+use anyhow::Result;
+
+use seqpar::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "info" => seqpar::eval::cmd::info(&args),
+        "verify" => seqpar::eval::cmd::verify(&args),
+        "train" => seqpar::eval::cmd::train(&args),
+        "sweep" => seqpar::eval::cmd::sweep(&args),
+        "help" | _ => {
+            print!("{}", seqpar::eval::cmd::HELP);
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Model configuration and the parameter store.
+//!
+//! Mirrors `python/compile/configs.py` and `model.py::param_spec`: the
+//! engines address parameters by the same names the manifest exports, and
+//! all engines of a run share one [`ParamStore`] loaded from the artifact
+//! directory so that every comparison starts from identical weights.
+
+pub mod params;
+
+use anyhow::{bail, Result};
+
+/// Transformer hyper-parameters (paper notation: H, Z, A, plus depth/V).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub layers: usize,
+    pub hidden: usize,   // H
+    pub heads: usize,    // Z
+    pub head_dim: usize, // A
+    pub vocab: usize,
+    pub max_len: usize,
+    pub ffn_mult: usize,
+}
+
+impl ModelConfig {
+    pub const fn ffn(&self) -> usize {
+        self.ffn_mult * self.hidden
+    }
+
+    /// Approximate parameter count (embeddings + blocks + heads) — must
+    /// agree with configs.py::ModelConfig.params.
+    pub fn params(&self) -> usize {
+        let (h, f, v) = (self.hidden, self.ffn(), self.vocab);
+        let per_layer = 4 * h * h + 4 * h + h * f + f + f * h + h + 4 * h;
+        let emb = v * h + self.max_len * h;
+        let heads = v * h + v + 2 * h + 2;
+        emb + self.layers * per_layer + heads
+    }
+}
+
+/// The paper's models plus the CPU-testbed configs (configs.py mirror).
+pub const BERT_BASE: ModelConfig = ModelConfig {
+    name: "bert-base", layers: 12, hidden: 768, heads: 12, head_dim: 64,
+    vocab: 30522, max_len: 512, ffn_mult: 4,
+};
+
+pub const BERT_LARGE: ModelConfig = ModelConfig {
+    name: "bert-large", layers: 24, hidden: 1024, heads: 16, head_dim: 64,
+    vocab: 30522, max_len: 512, ffn_mult: 4,
+};
+
+pub const BERT_SMALL: ModelConfig = ModelConfig {
+    name: "bert-small", layers: 4, hidden: 256, heads: 4, head_dim: 64,
+    vocab: 8192, max_len: 512, ffn_mult: 4,
+};
+
+pub const BERT_TINY: ModelConfig = ModelConfig {
+    name: "bert-tiny", layers: 2, hidden: 128, heads: 2, head_dim: 64,
+    vocab: 1024, max_len: 256, ffn_mult: 4,
+};
+
+pub fn by_name(name: &str) -> Result<ModelConfig> {
+    Ok(match name {
+        "bert-base" => BERT_BASE,
+        "bert-large" => BERT_LARGE,
+        "bert-small" => BERT_SMALL,
+        "bert-tiny" => BERT_TINY,
+        _ => bail!("unknown model {name:?} (have bert-base/large/small/tiny)"),
+    })
+}
+
+/// Ordered parameter inventory for a run at sequence length `seq_len` —
+/// the exact mirror of model.py::param_spec.
+pub fn param_spec(cfg: &ModelConfig, seq_len: usize) -> Vec<(String, Vec<usize>)> {
+    let (h, f, v) = (cfg.hidden, cfg.ffn(), cfg.vocab);
+    let mut spec: Vec<(String, Vec<usize>)> = vec![
+        ("tok_emb".into(), vec![v, h]),
+        ("pos_emb".into(), vec![seq_len, h]),
+    ];
+    for i in 0..cfg.layers {
+        let p = format!("layer{i}.");
+        for (n, s) in [
+            ("wq", vec![h, h]), ("bq", vec![h]),
+            ("wk", vec![h, h]), ("bk", vec![h]),
+            ("wv", vec![h, h]), ("bv", vec![h]),
+            ("wo", vec![h, h]), ("bo", vec![h]),
+            ("ln1_g", vec![h]), ("ln1_b", vec![h]),
+            ("w1", vec![h, f]), ("b1", vec![f]),
+            ("w2", vec![f, h]), ("b2", vec![h]),
+            ("ln2_g", vec![h]), ("ln2_b", vec![h]),
+        ] {
+            spec.push((format!("{p}{n}"), s));
+        }
+    }
+    spec.push(("mlm_w".into(), vec![v, h]));
+    spec.push(("mlm_b".into(), vec![v]));
+    spec.push(("sop_w".into(), vec![2, h]));
+    spec.push(("sop_b".into(), vec![2]));
+    spec
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bert_base_is_about_110m() {
+        let p = BERT_BASE.params();
+        assert!(
+            (100_000_000..135_000_000).contains(&p),
+            "BERT-Base params {p}"
+        );
+    }
+
+    #[test]
+    fn bert_large_is_about_340m() {
+        let p = BERT_LARGE.params();
+        assert!(
+            (320_000_000..370_000_000).contains(&p),
+            "BERT-Large params {p}"
+        );
+    }
+
+    #[test]
+    fn heads_times_head_dim_is_hidden() {
+        for cfg in [BERT_BASE, BERT_LARGE, BERT_SMALL, BERT_TINY] {
+            assert_eq!(cfg.heads * cfg.head_dim, cfg.hidden, "{}", cfg.name);
+        }
+    }
+
+    #[test]
+    fn spec_matches_python_inventory_size() {
+        // 2 embeddings + 16 per layer + 4 heads
+        let spec = param_spec(&BERT_TINY, 64);
+        assert_eq!(spec.len(), 2 + 16 * BERT_TINY.layers + 4);
+        assert_eq!(spec[0].1, vec![1024, 128]);
+        assert_eq!(spec[1].1, vec![64, 128]);
+    }
+}

@@ -1,0 +1,90 @@
+//! Parameter store: named tensors + Adam state, loaded from artifacts.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::Manifest;
+use crate::tensor::{io, Tensor};
+
+/// Named parameter set.  Under sequence parallelism all parameters are
+/// replicated (that is the point of the scheme), so one store serves all
+/// simulated devices; per-device *slices* (pos_emb, TP weight shards) are
+/// produced by the engines on the fly.
+#[derive(Clone, Debug, Default)]
+pub struct ParamStore {
+    pub values: BTreeMap<String, Tensor>,
+}
+
+impl ParamStore {
+    /// Load the initial parameters exported by aot.py.
+    pub fn load(dir: &Path, manifest: &Manifest) -> Result<ParamStore> {
+        let mut values = BTreeMap::new();
+        for p in &manifest.params {
+            let t = io::load(&dir.join(&p.file))?;
+            if t.shape != p.dims {
+                anyhow::bail!(
+                    "param {}: file has shape {:?}, manifest says {:?}",
+                    p.name, t.shape, p.dims
+                );
+            }
+            values.insert(p.name.clone(), t);
+        }
+        Ok(ParamStore { values })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.values
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown parameter {name:?}"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        self.values
+            .get_mut(name)
+            .ok_or_else(|| anyhow!("unknown parameter {name:?}"))
+    }
+
+    /// Zero-filled gradient/optimizer-state buffers matching this store.
+    pub fn zeros_like(&self) -> ParamStore {
+        ParamStore {
+            values: self
+                .values
+                .iter()
+                .map(|(k, v)| (k.clone(), Tensor::zeros(&v.shape)))
+                .collect(),
+        }
+    }
+
+    pub fn total_elements(&self) -> usize {
+        self.values.values().map(|t| t.numel()).sum()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.values.values().map(|t| t.bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_like_matches_shapes() {
+        let mut s = ParamStore::default();
+        s.values.insert("a".into(), Tensor::zeros(&[2, 3]));
+        s.values.insert("b".into(), Tensor::zeros(&[4]));
+        let z = s.zeros_like();
+        assert_eq!(z.values["a"].shape, vec![2, 3]);
+        assert_eq!(z.values["b"].shape, vec![4]);
+        assert_eq!(s.total_elements(), 10);
+        assert_eq!(s.total_bytes(), 40);
+    }
+
+    #[test]
+    fn get_unknown_errors() {
+        let s = ParamStore::default();
+        assert!(s.get("nope").is_err());
+    }
+}

@@ -1,0 +1,59 @@
+//! Data parallelism: replicas process independent (micro)batches and
+//! all-reduce averaged gradients.
+//!
+//! The artifact shapes fix the per-replica batch size, so the wrapper runs
+//! the inner engine once per replica on that replica's batch — exactly the
+//! semantics of DP ranks — and reduces gradients through the metered
+//! fabric.  Composes with either inner engine, which is how the paper's
+//! "combine data parallelism and tensor parallelism to scale Megatron up
+//! to 64 GPUs" comparison point (Fig. 3a) is built.
+
+use anyhow::{bail, Result};
+
+use crate::comm::Fabric;
+use crate::model::params::ParamStore;
+use crate::tensor::ops;
+
+use super::{Batch, Engine, StepOutput};
+
+pub struct DataParallel<'e, E: Engine> {
+    pub inner: &'e E,
+    pub fabric: Fabric, // the DP group (size = number of replicas)
+}
+
+impl<'e, E: Engine> DataParallel<'e, E> {
+    pub fn new(inner: &'e E, fabric: Fabric) -> Self {
+        DataParallel { inner, fabric }
+    }
+
+    /// One DP step: `batches[r]` is replica r's batch.  Returns the
+    /// all-reduced (averaged) gradients and the mean loss.
+    pub fn step(&self, params: &ParamStore, batches: &[Batch]) -> Result<StepOutput> {
+        let n = self.fabric.n;
+        if batches.len() != n {
+            bail!("data parallelism over {n} replicas needs {n} batches, got {}", batches.len());
+        }
+        let mut outs = Vec::with_capacity(n);
+        for b in batches {
+            outs.push(self.inner.forward_backward(params, b)?);
+        }
+        // gradient all-reduce per parameter through the metered fabric
+        let names: Vec<String> = outs[0].grads.values.keys().cloned().collect();
+        let mut reduced = outs[0].grads.zeros_like();
+        for name in &names {
+            let mut slots: Vec<_> = outs
+                .iter()
+                .map(|o| o.grads.values[name].clone())
+                .collect();
+            self.fabric.all_reduce_sum(&mut slots)?;
+            let mut g = slots.pop().unwrap();
+            ops::scale_assign(&mut g, 1.0 / n as f32)?;
+            *reduced.get_mut(name)? = g;
+        }
+        let loss = outs.iter().map(|o| o.loss).sum::<f32>() / n as f32;
+        let mlm = outs.iter().map(|o| o.mlm).sum::<f32>() / n as f32;
+        let sop = outs.iter().map(|o| o.sop).sum::<f32>() / n as f32;
+        let hidden = outs.remove(0).hidden;
+        Ok(StepOutput { loss, mlm, sop, grads: reduced, hidden })
+    }
+}

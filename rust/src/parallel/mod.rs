@@ -1,0 +1,69 @@
+//! The parallelism engines.
+//!
+//! * [`sequence`] — the paper's contribution: Ring Self-Attention sequence
+//!   parallelism (forward + hand-scheduled backward).
+//! * [`tensorp`] — the Megatron-LM tensor-parallel baseline.
+//! * [`pipeline`] — GPipe-style micro-batch pipeline scheduler, composable
+//!   with both of the above (paper §4.2 "scaling with pipeline parallelism").
+//! * [`data`] — data parallelism (gradient all-reduce across replicas).
+//! * [`topology`] — the 4D device mesh gluing them together.
+//!
+//! All engines run their simulated devices sequentially (the PJRT client
+//! handle is thread-local by construction) but drive the REAL collective
+//! fabric for every exchange, so communication volume and schedule are the
+//! paper's — see `comm::Meter` and rust/tests/comm_volume.rs.
+
+pub mod data;
+pub mod pipeline;
+pub mod sequence;
+pub mod tensorp;
+pub mod topology;
+
+use anyhow::Result;
+
+use crate::model::params::ParamStore;
+use crate::runtime::{registry, Runtime};
+use crate::tensor::Tensor;
+
+/// One training batch (global view; engines shard it themselves).
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub ids: Tensor,        // [B, L] i32
+    pub labels: Tensor,     // [B, L] i32 (MLM targets at masked positions)
+    pub mask: Tensor,       // [B, L] f32 (1.0 where masked)
+    pub sop_labels: Tensor, // [B] i32
+}
+
+/// Result of one forward+backward over a batch.
+#[derive(Debug)]
+pub struct StepOutput {
+    pub loss: f32,
+    pub mlm: f32,
+    pub sop: f32,
+    /// Parameter gradients in GLOBAL layout (already reduced across the
+    /// parallel group — ready for the optimizer).
+    pub grads: ParamStore,
+    /// Final hidden states, one chunk per device (sequence engines) or a
+    /// single full tensor (tensor/serial engines).
+    pub hidden: Vec<Tensor>,
+}
+
+/// A training engine: one parallelism strategy over one runtime.
+pub trait Engine {
+    fn name(&self) -> &'static str;
+    /// Number of simulated devices in the parallel group.
+    fn group_size(&self) -> usize;
+    fn forward_backward(&self, params: &ParamStore, batch: &Batch) -> Result<StepOutput>;
+}
+
+/// Shared helper: execute a step artifact, resolving the name from the
+/// actual input tensors (mirror of aot.py naming).
+pub(crate) fn call(rt: &Runtime, step: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let name = registry::art_name_for(step, inputs);
+    rt.call(&name, inputs)
+}
+
+pub(crate) fn call1(rt: &Runtime, step: &str, inputs: &[&Tensor]) -> Result<Tensor> {
+    let name = registry::art_name_for(step, inputs);
+    rt.call1(&name, inputs)
+}

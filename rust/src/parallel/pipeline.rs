@@ -1,0 +1,170 @@
+//! Pipeline parallelism: the GPipe micro-batch schedule (paper §2).
+//!
+//! Used two ways:
+//!
+//! 1. [`Schedule`] computes the exact micro-batch timeline (which stage
+//!    runs which microbatch when, bubble fraction) — the timing input for
+//!    the Fig. 4 throughput comparison.
+//! 2. [`boundary_bytes`] accounts the stage-boundary activation traffic,
+//!    where the paper's observation lives: Megatron must SPLIT the
+//!    activation before sending and ALL-GATHER after (its tensor shards
+//!    all hold the full sequence), while sequence parallelism sends its
+//!    already-split sub-sequence chunk directly — one less all-gather per
+//!    boundary (paper §3.2.2, last paragraph).
+//!
+//! The memory side (why fewer stages = more activation memory per device)
+//! is handled by `simulator::memory`, which charges `layers/stages` of
+//! activations per device.
+
+/// One cell of the pipeline timeline: stage `s` runs microbatch `m`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Cell {
+    pub stage: usize,
+    pub micro: usize,
+    /// Clock tick at which this cell starts (unit: one stage-time).
+    pub start: usize,
+    pub forward: bool,
+}
+
+/// GPipe schedule: all-forward then all-backward, synchronous flush.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub stages: usize,
+    pub micros: usize,
+    pub cells: Vec<Cell>,
+}
+
+impl Schedule {
+    pub fn gpipe(stages: usize, micros: usize) -> Schedule {
+        assert!(stages >= 1 && micros >= 1);
+        let mut cells = Vec::with_capacity(2 * stages * micros);
+        // forward wave: stage s starts microbatch m at tick m + s
+        for s in 0..stages {
+            for m in 0..micros {
+                cells.push(Cell { stage: s, micro: m, start: m + s, forward: true });
+            }
+        }
+        // backward wave: starts after the last forward leaves the pipe;
+        // stage order reversed.  Backward of micro m on stage s starts at
+        // fwd_makespan + m + (stages - 1 - s).
+        let fwd_makespan = micros + stages - 1;
+        for s in (0..stages).rev() {
+            for m in 0..micros {
+                cells.push(Cell {
+                    stage: s,
+                    micro: m,
+                    start: fwd_makespan + m + (stages - 1 - s),
+                    forward: false,
+                });
+            }
+        }
+        Schedule { stages, micros, cells }
+    }
+
+    /// Total ticks until the last backward cell finishes (bwd cells take
+    /// `bwd_cost` ticks each; GPipe convention bwd ~ 2x fwd).
+    pub fn makespan(&self, bwd_cost: usize) -> usize {
+        self.cells
+            .iter()
+            .map(|c| c.start + if c.forward { 1 } else { bwd_cost })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Fraction of stage-time lost to the bubble (fwd+bwd, bwd_cost=1):
+    /// (s-1) idle slots at each end per wave.
+    pub fn bubble_fraction(&self) -> f64 {
+        let useful = 2.0 * self.micros as f64;
+        let total = useful + 2.0 * (self.stages as f64 - 1.0);
+        1.0 - useful / total
+    }
+
+    /// Sanity: no stage runs two cells at the same tick.
+    pub fn is_conflict_free(&self, bwd_cost: usize) -> bool {
+        for a in &self.cells {
+            let a_end = a.start + if a.forward { 1 } else { bwd_cost };
+            for b in &self.cells {
+                if (a.stage, a.micro, a.forward) == (b.stage, b.micro, b.forward) {
+                    continue;
+                }
+                if a.stage == b.stage {
+                    let b_end = b.start + if b.forward { 1 } else { bwd_cost };
+                    if a.start < b_end && b.start < a_end {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Stage-boundary activation traffic per microbatch, in bytes, for an
+/// activation of `b * l * h` f32 elements split over `mp` tensor/sequence
+/// ranks.
+///
+/// Megatron (tensor parallelism): every rank holds the full `[b, l, h]`
+/// activation; to save bandwidth it scatters to `1/mp` slices, sends, and
+/// all-gathers on the receiving stage (paper §3.2.2): the send is C/mp per
+/// rank (C total) but the all-gather adds (mp-1)/mp * C per rank on the
+/// receive side.
+///
+/// Sequence parallelism: each rank owns `[b, l/mp, h]` already — it just
+/// sends its chunk: C/mp per rank, no scatter, no gather.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BoundaryBytes {
+    pub send: u64,
+    pub gather: u64,
+}
+
+pub fn boundary_bytes_megatron(b: usize, l: usize, h: usize, mp: usize) -> BoundaryBytes {
+    let c = (b * l * h * 4) as u64;
+    BoundaryBytes { send: c, gather: (mp as u64 - 1) * c / mp as u64 }
+}
+
+pub fn boundary_bytes_seqpar(b: usize, l: usize, h: usize, _mp: usize) -> BoundaryBytes {
+    let c = (b * l * h * 4) as u64;
+    BoundaryBytes { send: c, gather: 0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpipe_timeline_shape() {
+        let s = Schedule::gpipe(4, 8);
+        assert_eq!(s.cells.len(), 2 * 4 * 8);
+        // first forward cell of stage 0 at tick 0; of stage 3 at tick 3
+        assert!(s.cells.contains(&Cell { stage: 0, micro: 0, start: 0, forward: true }));
+        assert!(s.cells.contains(&Cell { stage: 3, micro: 0, start: 3, forward: true }));
+        // forward makespan is micros + stages - 1
+        let fwd_last = s.cells.iter().filter(|c| c.forward).map(|c| c.start + 1).max();
+        assert_eq!(fwd_last, Some(8 + 4 - 1 + 1 - 1 + 0)); // 11 ticks, ends at 11
+    }
+
+    #[test]
+    fn gpipe_is_conflict_free() {
+        for (st, mi) in [(1, 1), (2, 4), (4, 8), (8, 2)] {
+            let s = Schedule::gpipe(st, mi);
+            assert!(s.is_conflict_free(1), "conflict at stages={st} micros={mi}");
+        }
+    }
+
+    #[test]
+    fn bubble_shrinks_with_more_microbatches() {
+        let few = Schedule::gpipe(4, 2).bubble_fraction();
+        let many = Schedule::gpipe(4, 32).bubble_fraction();
+        assert!(many < few);
+        assert!(Schedule::gpipe(1, 8).bubble_fraction() < 1e-12);
+    }
+
+    #[test]
+    fn seqpar_boundary_saves_the_gather() {
+        let meg = boundary_bytes_megatron(4, 512, 768, 4);
+        let seq = boundary_bytes_seqpar(4, 512, 768, 4);
+        assert_eq!(meg.send, seq.send);
+        assert!(meg.gather > 0);
+        assert_eq!(seq.gather, 0);
+    }
+}

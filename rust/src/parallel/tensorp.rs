@@ -1,0 +1,292 @@
+//! Tensor parallelism — the Megatron-LM baseline (paper §2, Eq. 3).
+//!
+//! Attention heads and MLP columns are split across the group; every
+//! device holds the FULL sequence.  Communication: one all-reduce after
+//! each block's second GEMM in forward, and one at each block's input in
+//! backward (the conjugate f/g operators).
+//!
+//! Schedule transcription of `python/compile/chain.py::
+//! tensorpar_forward_backward` (validated against `jax.grad`).  Weight
+//! shards are sliced host-side from the global parameter store; gradient
+//! shards are scattered back into global layout, so the optimizer and the
+//! convergence comparison (Fig. 6) see identical parameter state across
+//! engines.
+//!
+//! Replicated computations (embeddings, LayerNorms, heads — identical on
+//! every rank since their inputs are replicated) are executed once in this
+//! sequential simulation; the cluster simulator charges their memory and
+//! time per-device, as Megatron does.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::comm::Fabric;
+use crate::model::params::ParamStore;
+use crate::runtime::Runtime;
+use crate::tensor::{ops, Tensor};
+
+use super::{call, call1, Batch, Engine, StepOutput};
+
+struct LayerStash {
+    x_in: Tensor,
+    q: Vec<Tensor>,
+    k: Vec<Tensor>,
+    v: Vec<Tensor>,
+    p: Vec<Tensor>,
+    ctx: Vec<Tensor>,
+    pre1: Tensor,
+    xm: Tensor,
+    h: Vec<Tensor>,
+    pre2: Tensor,
+}
+
+pub struct TensorParEngine<'rt> {
+    rt: &'rt Runtime,
+    pub fabric: Fabric,
+    pub t: usize, // TP degree
+    b: usize,
+    l: usize,
+    layers: usize,
+    hidden: usize,
+    heads: usize,
+    head_dim: usize,
+    ffn: usize,
+    to_heads_step: String,
+}
+
+impl<'rt> TensorParEngine<'rt> {
+    /// `t == 1` is the serial engine (no splitting, no communication).
+    pub fn new(rt: &'rt Runtime, fabric: Fabric) -> Result<TensorParEngine<'rt>> {
+        let m = &rt.manifest;
+        let t = fabric.n;
+        if m.heads % t != 0 {
+            // This is exactly Megatron's scaling cap the paper exploits
+            // (tensor parallel size <= number of attention heads).
+            bail!(
+                "tensor parallelism size {t} must divide the head count {} \
+                 (Megatron's limit — paper §4.2)",
+                m.heads
+            );
+        }
+        if m.ffn % t != 0 {
+            bail!("TP size {t} must divide FFN width {}", m.ffn);
+        }
+        if t != 1 && t != m.tp {
+            bail!(
+                "artifacts were lowered for tp={} (and serial tp=1); got {t}",
+                m.tp
+            );
+        }
+        Ok(TensorParEngine {
+            rt,
+            fabric,
+            t,
+            b: m.batch,
+            l: m.seq_len,
+            layers: m.layers,
+            hidden: m.hidden,
+            heads: m.heads,
+            head_dim: m.head_dim,
+            ffn: m.ffn,
+            to_heads_step: format!("to_heads_b{}", m.batch),
+        })
+    }
+
+    fn zp(&self) -> usize {
+        self.heads / self.t
+    }
+
+    fn fp(&self) -> usize {
+        self.ffn / self.t
+    }
+
+    /// Column range of rank `d` in the head-split projections.
+    fn head_cols(&self, d: usize) -> (usize, usize) {
+        let w = self.zp() * self.head_dim;
+        (d * w, (d + 1) * w)
+    }
+
+    fn ffn_cols(&self, d: usize) -> (usize, usize) {
+        (d * self.fp(), (d + 1) * self.fp())
+    }
+}
+
+impl<'rt> Engine for TensorParEngine<'rt> {
+    fn name(&self) -> &'static str {
+        if self.t == 1 { "serial" } else { "tensor-parallel" }
+    }
+
+    fn group_size(&self) -> usize {
+        self.t
+    }
+
+    fn forward_backward(&self, params: &ParamStore, batch: &Batch) -> Result<StepOutput> {
+        let rt = self.rt;
+        let (t, b, l, h) = (self.t, self.b, self.l, self.hidden);
+        let m = b * l;
+        let p_of = |name: &str| params.get(name);
+        let zero_h = Tensor::zeros(&[h]);
+
+        let ids = &batch.ids;
+        let labels = batch.labels.clone().reshaped(&[m])?;
+        let mask = batch.mask.clone().reshaped(&[m])?;
+        let pos = ops::slice_dim0(p_of("pos_emb")?, 0, l)?;
+        let tok = p_of("tok_emb")?;
+
+        // ---- forward (x replicated across the TP group) -------------------
+        let mut x = call1(rt, "embed_fwd", &[ids, tok, &pos])?;
+        let mut stashes = Vec::with_capacity(self.layers);
+        for li in 0..self.layers {
+            let pf = |s: &str| format!("layer{li}.{s}");
+            let x_in = x.clone();
+            let mut q = Vec::new();
+            let mut k = Vec::new();
+            let mut v = Vec::new();
+            let mut ctx = Vec::new();
+            let mut p = Vec::new();
+            let mut partial = Vec::new();
+            for d in 0..t {
+                let (lo, hi) = self.head_cols(d);
+                let wq = ops::slice_last(p_of(&pf("wq"))?, lo, hi)?;
+                let bq = ops::slice_dim0(p_of(&pf("bq"))?, lo, hi)?;
+                let wk = ops::slice_last(p_of(&pf("wk"))?, lo, hi)?;
+                let bk = ops::slice_dim0(p_of(&pf("bk"))?, lo, hi)?;
+                let wv = ops::slice_last(p_of(&pf("wv"))?, lo, hi)?;
+                let bv = ops::slice_dim0(p_of(&pf("bv"))?, lo, hi)?;
+                let qd = call1(rt, &self.to_heads_step, &[&call1(rt, "linear_fwd", &[&x, &wq, &bq])?])?;
+                let kd = call1(rt, &self.to_heads_step, &[&call1(rt, "linear_fwd", &[&x, &wk, &bk])?])?;
+                let vd = call1(rt, &self.to_heads_step, &[&call1(rt, "linear_fwd", &[&x, &wv, &bv])?])?;
+                let s = call1(rt, "scores_step", &[&qd, &kd])?;
+                let pd = call1(rt, "softmax_fwd", &[&s])?;
+                let acc0 = Tensor::zeros(&qd.shape);
+                let cd = call1(rt, "av_step", &[&pd, &vd, &acc0])?;
+                let wo = ops::slice_dim0(p_of(&pf("wo"))?, lo, hi)?;
+                let flat = call1(rt, "from_heads", &[&cd])?;
+                partial.push(call1(rt, "linear_fwd", &[&flat, &wo, &zero_h])?);
+                q.push(qd); k.push(kd); v.push(vd); p.push(pd); ctx.push(cd);
+            }
+            // all-reduce the row-split output projection partials (g op)
+            self.fabric.all_reduce_sum(&mut partial)?;
+            let attn = call1(rt, "bias_add", &[&partial[0], p_of(&pf("bo"))?])?;
+            let pre1 = call1(rt, "add", &[&x, &attn])?;
+            let xm = call1(rt, "ln_fwd", &[&pre1, p_of(&pf("ln1_g"))?, p_of(&pf("ln1_b"))?])?;
+            let mut hs = Vec::new();
+            let mut partial2 = Vec::new();
+            for d in 0..t {
+                let (lo, hi) = self.ffn_cols(d);
+                let w1 = ops::slice_last(p_of(&pf("w1"))?, lo, hi)?;
+                let b1 = ops::slice_dim0(p_of(&pf("b1"))?, lo, hi)?;
+                let hd = call1(rt, "gelu_linear_fwd", &[&xm, &w1, &b1])?;
+                let w2 = ops::slice_dim0(p_of(&pf("w2"))?, lo, hi)?;
+                partial2.push(call1(rt, "linear_fwd", &[&hd, &w2, &zero_h])?);
+                hs.push(hd);
+            }
+            self.fabric.all_reduce_sum(&mut partial2)?;
+            let m2 = call1(rt, "bias_add", &[&partial2[0], p_of(&pf("b2"))?])?;
+            let pre2 = call1(rt, "add", &[&xm, &m2])?;
+            x = call1(rt, "ln_fwd", &[&pre2, p_of(&pf("ln2_g"))?, p_of(&pf("ln2_b"))?])?;
+            stashes.push(LayerStash { x_in, q, k, v, p, ctx, pre1, xm, h: hs, pre2 });
+        }
+
+        // ---- heads (replicated) -------------------------------------------
+        let mut grads = params.zeros_like();
+        let out = call(rt, "mlm_loss", &[&x, p_of("mlm_w")?, p_of("mlm_b")?, &labels, &mask])?;
+        let [mlm_lo, mut dx, dw, db]: [Tensor; 4] =
+            out.try_into().map_err(|_| anyhow!("mlm_loss arity"))?;
+        let mlm = mlm_lo.scalar_f32()?;
+        ops::add_assign(grads.get_mut("mlm_w")?, &dw)?;
+        ops::add_assign(grads.get_mut("mlm_b")?, &db)?;
+        let out = call(rt, "sop_loss", &[&x, p_of("sop_w")?, p_of("sop_b")?, &batch.sop_labels])?;
+        let [sop_lo, dx0, dsw, dsb]: [Tensor; 4] =
+            out.try_into().map_err(|_| anyhow!("sop_loss arity"))?;
+        let sop = sop_lo.scalar_f32()?;
+        ops::add_assign(&mut dx, &dx0)?;
+        ops::add_assign(grads.get_mut("sop_w")?, &dsw)?;
+        ops::add_assign(grads.get_mut("sop_b")?, &dsb)?;
+
+        let hidden = vec![x];
+
+        // ---- backward -------------------------------------------------------
+        for li in (0..self.layers).rev() {
+            let pf = |s: &str| format!("layer{li}.{s}");
+            let st = &stashes[li];
+            let out = call(rt, "ln_bwd", &[&st.pre2, p_of(&pf("ln2_g"))?, p_of(&pf("ln2_b"))?, &dx])?;
+            let [d_pre2, dg2, db2]: [Tensor; 3] =
+                out.try_into().map_err(|_| anyhow!("ln_bwd arity"))?;
+            ops::add_assign(grads.get_mut(&pf("ln2_g"))?, &dg2)?;
+            ops::add_assign(grads.get_mut(&pf("ln2_b"))?, &db2)?;
+            ops::add_assign(grads.get_mut(&pf("b2"))?, &ops::sum_rows(&d_pre2)?)?;
+            let mut dxm_partial = Vec::with_capacity(t);
+            for d in 0..t {
+                let (lo, hi) = self.ffn_cols(d);
+                let w2 = ops::slice_dim0(p_of(&pf("w2"))?, lo, hi)?;
+                let out = call(rt, "linear_bwd", &[&st.h[d], &w2, &zero_h, &d_pre2])?;
+                let [dh, dw2, _db2]: [Tensor; 3] =
+                    out.try_into().map_err(|_| anyhow!("linear_bwd arity"))?;
+                ops::add_into_dim0(grads.get_mut(&pf("w2"))?, &dw2, lo)?;
+                let w1 = ops::slice_last(p_of(&pf("w1"))?, lo, hi)?;
+                let b1 = ops::slice_dim0(p_of(&pf("b1"))?, lo, hi)?;
+                let out = call(rt, "gelu_linear_bwd", &[&st.xm, &w1, &b1, &dh])?;
+                let [dxd, dw1, db1]: [Tensor; 3] =
+                    out.try_into().map_err(|_| anyhow!("gelu_linear_bwd arity"))?;
+                ops::add_into_last(grads.get_mut(&pf("w1"))?, &dw1, lo)?;
+                ops::add_into_dim0(grads.get_mut(&pf("b1"))?, &db1, lo)?;
+                dxm_partial.push(dxd);
+            }
+            // all-reduce dx at the block input (f op backward) + residual
+            self.fabric.all_reduce_sum(&mut dxm_partial)?;
+            let dxm = call1(rt, "add", &[&dxm_partial[0], &d_pre2])?;
+
+            let out = call(rt, "ln_bwd", &[&st.pre1, p_of(&pf("ln1_g"))?, p_of(&pf("ln1_b"))?, &dxm])?;
+            let [d_pre1, dg1, db1]: [Tensor; 3] =
+                out.try_into().map_err(|_| anyhow!("ln_bwd arity"))?;
+            ops::add_assign(grads.get_mut(&pf("ln1_g"))?, &dg1)?;
+            ops::add_assign(grads.get_mut(&pf("ln1_b"))?, &db1)?;
+            ops::add_assign(grads.get_mut(&pf("bo"))?, &ops::sum_rows(&d_pre1)?)?;
+
+            let mut dx_partial = Vec::with_capacity(t);
+            for d in 0..t {
+                let (lo, hi) = self.head_cols(d);
+                let wo = ops::slice_dim0(p_of(&pf("wo"))?, lo, hi)?;
+                let flat = call1(rt, "from_heads", &[&st.ctx[d]])?;
+                let out = call(rt, "linear_bwd", &[&flat, &wo, &zero_h, &d_pre1])?;
+                let [dflat, dwo, _dbo]: [Tensor; 3] =
+                    out.try_into().map_err(|_| anyhow!("linear_bwd arity"))?;
+                ops::add_into_dim0(grads.get_mut(&pf("wo"))?, &dwo, lo)?;
+                let d_ctx = call1(rt, &self.to_heads_step, &[&dflat])?;
+                let dp = call1(rt, "attn_dp_step", &[&d_ctx, &st.v[d]])?;
+                let ds = call1(rt, "softmax_bwd", &[&st.p[d], &dp])?;
+                let z0 = Tensor::zeros(&st.q[d].shape);
+                let dq = call1(rt, "attn_dq_step", &[&ds, &st.k[d], &z0])?;
+                let dk = call1(rt, "attn_dk_step", &[&ds, &st.q[d], &z0])?;
+                let dv = call1(rt, "attn_dv_step", &[&st.p[d], &d_ctx, &z0])?;
+                let mut dx_d: Option<Tensor> = None;
+                for (wname, bname, dt) in [("wq", "bq", &dq), ("wk", "bk", &dk), ("wv", "bv", &dv)] {
+                    let w = ops::slice_last(p_of(&pf(wname))?, lo, hi)?;
+                    let bb = ops::slice_dim0(p_of(&pf(bname))?, lo, hi)?;
+                    let flat = call1(rt, "from_heads", &[dt])?;
+                    let out = call(rt, "linear_bwd", &[&st.x_in, &w, &bb, &flat])?;
+                    let [dxp, dw, dbp]: [Tensor; 3] =
+                        out.try_into().map_err(|_| anyhow!("linear_bwd arity"))?;
+                    ops::add_into_last(grads.get_mut(&pf(wname))?, &dw, lo)?;
+                    ops::add_into_dim0(grads.get_mut(&pf(bname))?, &dbp, lo)?;
+                    match &mut dx_d {
+                        None => dx_d = Some(dxp),
+                        Some(acc) => ops::add_assign(acc, &dxp)?,
+                    }
+                }
+                dx_partial.push(dx_d.unwrap());
+            }
+            self.fabric.all_reduce_sum(&mut dx_partial)?;
+            dx = call1(rt, "add", &[&dx_partial[0], &d_pre1])?;
+        }
+
+        // embeddings (replicated: identical on every rank, computed once)
+        let out = call(rt, "embed_bwd", &[ids, tok, &pos, &dx])?;
+        let [dtok, dpos]: [Tensor; 2] =
+            out.try_into().map_err(|_| anyhow!("embed_bwd arity"))?;
+        ops::add_assign(grads.get_mut("tok_emb")?, &dtok)?;
+        ops::add_into_dim0(grads.get_mut("pos_emb")?, &dpos, 0)?;
+
+        Ok(StepOutput { loss: mlm + sop, mlm, sop, grads, hidden })
+    }
+}

@@ -1,0 +1,149 @@
+//! 4D device mesh: data × pipeline × (tensor | sequence) parallelism.
+//!
+//! The paper's headline compatibility claim: sequence parallelism slots
+//! into the same mesh position Megatron's tensor parallelism occupies, so
+//! the familiar DP×PP×MP factorization becomes DP×PP×SP — "4D parallelism"
+//! with the batch, depth, and sequence dimensions all sharded.
+//!
+//! Rank layout (innermost-fastest, Megatron convention):
+//!     global = ((dp * PP) + pp) * MP + mp
+
+use anyhow::{bail, Result};
+
+/// Which strategy occupies the innermost (model-parallel) axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MpKind {
+    Tensor,
+    Sequence,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Mesh {
+    pub dp: usize,
+    pub pp: usize,
+    pub mp: usize,
+    pub kind: MpKind,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Coord {
+    pub dp: usize,
+    pub pp: usize,
+    pub mp: usize,
+}
+
+impl Mesh {
+    pub fn new(dp: usize, pp: usize, mp: usize, kind: MpKind) -> Result<Mesh> {
+        if dp == 0 || pp == 0 || mp == 0 {
+            bail!("mesh axes must be positive: dp={dp} pp={pp} mp={mp}");
+        }
+        Ok(Mesh { dp, pp, mp, kind })
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.dp * self.pp * self.mp
+    }
+
+    pub fn coord(&self, rank: usize) -> Result<Coord> {
+        if rank >= self.world_size() {
+            bail!("rank {rank} out of world {}", self.world_size());
+        }
+        Ok(Coord {
+            mp: rank % self.mp,
+            pp: (rank / self.mp) % self.pp,
+            dp: rank / (self.mp * self.pp),
+        })
+    }
+
+    pub fn rank(&self, c: Coord) -> usize {
+        (c.dp * self.pp + c.pp) * self.mp + c.mp
+    }
+
+    /// All ranks sharing this rank's (dp, pp) — its model-parallel group
+    /// (the ring, under sequence parallelism).
+    pub fn mp_group(&self, rank: usize) -> Result<Vec<usize>> {
+        let c = self.coord(rank)?;
+        Ok((0..self.mp)
+            .map(|mp| self.rank(Coord { mp, ..c }))
+            .collect())
+    }
+
+    /// All ranks sharing (dp, mp) — the pipeline this rank belongs to.
+    pub fn pp_group(&self, rank: usize) -> Result<Vec<usize>> {
+        let c = self.coord(rank)?;
+        Ok((0..self.pp)
+            .map(|pp| self.rank(Coord { pp, ..c }))
+            .collect())
+    }
+
+    /// All ranks sharing (pp, mp) — the data-parallel replica group.
+    pub fn dp_group(&self, rank: usize) -> Result<Vec<usize>> {
+        let c = self.coord(rank)?;
+        Ok((0..self.dp)
+            .map(|dp| self.rank(Coord { dp, ..c }))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn rank_coord_roundtrip() {
+        let m = Mesh::new(2, 4, 8, MpKind::Sequence).unwrap();
+        for r in 0..m.world_size() {
+            assert_eq!(m.rank(m.coord(r).unwrap()), r);
+        }
+    }
+
+    #[test]
+    fn groups_partition_the_world() {
+        Prop::new(32, 7).check("mesh groups partition", |rng| {
+            let dp = 1 + rng.below(3) as usize;
+            let pp = 1 + rng.below(3) as usize;
+            let mp = 1 + rng.below(4) as usize;
+            let m = Mesh::new(dp, pp, mp, MpKind::Tensor).map_err(|e| e.to_string())?;
+            for axis in 0..3 {
+                let mut seen = vec![0usize; m.world_size()];
+                for r in 0..m.world_size() {
+                    let group = match axis {
+                        0 => m.mp_group(r),
+                        1 => m.pp_group(r),
+                        _ => m.dp_group(r),
+                    }
+                    .map_err(|e| e.to_string())?;
+                    if !group.contains(&r) {
+                        return Err(format!("rank {r} missing from its own group"));
+                    }
+                    for g in group {
+                        seen[g] += 1;
+                    }
+                }
+                // each rank appears in exactly group_len groups-membership counts
+                let expect = match axis {
+                    0 => mp,
+                    1 => pp,
+                    _ => dp,
+                };
+                if seen.iter().any(|&c| c != expect) {
+                    return Err(format!("axis {axis}: membership counts {seen:?} != {expect}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mp_group_is_contiguous() {
+        let m = Mesh::new(2, 2, 4, MpKind::Sequence).unwrap();
+        assert_eq!(m.mp_group(0).unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(m.mp_group(5).unwrap(), vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn zero_axis_rejected() {
+        assert!(Mesh::new(0, 1, 1, MpKind::Tensor).is_err());
+    }
+}

@@ -1,0 +1,197 @@
+//! Manifest parsing — the contract `aot.py` writes.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::DType;
+use crate::util::json::{self, Value};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub dims: Vec<usize>,
+    pub dtype: DType,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub file: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model: String,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub ring: usize,
+    pub tp: usize,
+    pub linformer_k: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    pub layers: usize,
+    pub vocab: usize,
+    pub seed: usize,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub params: Vec<ParamSpec>,
+    pub goldens: BTreeMap<String, String>,
+}
+
+fn io_spec(v: &Value) -> Result<IoSpec> {
+    let dims = v
+        .req("dims")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("dims not an array"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = match v.req("dtype")?.as_str() {
+        Some("f32") => DType::F32,
+        Some("i32") => DType::I32,
+        other => bail!("unknown dtype {other:?}"),
+    };
+    Ok(IoSpec { dims, dtype })
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let num = |k: &str| -> Result<usize> {
+            v.req(k)?
+                .as_usize()
+                .ok_or_else(|| anyhow!("manifest key {k} not a number"))
+        };
+        let mut artifacts = BTreeMap::new();
+        for (name, spec) in v
+            .req("artifacts")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("artifacts not an object"))?
+        {
+            let inputs = spec
+                .req("inputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("inputs not an array"))?
+                .iter()
+                .map(io_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = spec
+                .req("outputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("outputs not an array"))?
+                .iter()
+                .map(io_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let file = spec
+                .req("file")?
+                .as_str()
+                .ok_or_else(|| anyhow!("file not a string"))?
+                .to_string();
+            artifacts.insert(name.clone(), ArtifactSpec { file, inputs, outputs });
+        }
+        let mut params = Vec::new();
+        for p in v
+            .req("params")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("params not an array"))?
+        {
+            params.push(ParamSpec {
+                name: p.req("name")?.as_str().unwrap_or_default().to_string(),
+                dims: p
+                    .req("dims")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("param dims"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<Vec<_>>>()?,
+                file: p.req("file")?.as_str().unwrap_or_default().to_string(),
+            });
+        }
+        let mut goldens = BTreeMap::new();
+        if let Some(g) = v.get("goldens").and_then(|g| g.as_obj()) {
+            for (k, val) in g {
+                if let Some(s) = val.as_str() {
+                    goldens.insert(k.clone(), s.to_string());
+                }
+            }
+        }
+        Ok(Manifest {
+            model: v
+                .req("model")?
+                .as_str()
+                .ok_or_else(|| anyhow!("model not a string"))?
+                .to_string(),
+            batch: num("batch")?,
+            seq_len: num("seq_len")?,
+            ring: num("ring")?,
+            tp: num("tp")?,
+            linformer_k: num("linformer_k")?,
+            hidden: num("hidden")?,
+            heads: num("heads")?,
+            head_dim: num("head_dim")?,
+            ffn: num("ffn")?,
+            layers: num("layers")?,
+            vocab: num("vocab")?,
+            seed: num("seed")?,
+            artifacts,
+            params,
+            goldens,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "model": "bert-tiny", "batch": 2, "seq_len": 64, "ring": 4, "tp": 2,
+        "linformer_k": 0, "hidden": 128, "heads": 2, "head_dim": 64,
+        "ffn": 512, "layers": 2, "vocab": 1024, "seed": 0,
+        "artifacts": {
+            "add__32x128_32x128": {
+                "file": "add__32x128_32x128.hlo.txt",
+                "inputs": [{"dims": [32, 128], "dtype": "f32"},
+                           {"dims": [32, 128], "dtype": "f32"}],
+                "outputs": [{"dims": [32, 128], "dtype": "f32"}]
+            }
+        },
+        "params": [{"name": "tok_emb", "dims": [1024, 128],
+                    "file": "params/tok_emb.tensor"}],
+        "goldens": {"ids": "goldens/ids.tensor"}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.model, "bert-tiny");
+        assert_eq!(m.ring, 4);
+        let a = &m.artifacts["add__32x128_32x128"];
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].dims, vec![32, 128]);
+        assert_eq!(a.inputs[0].dtype, DType::F32);
+        assert_eq!(m.params[0].name, "tok_emb");
+        assert_eq!(m.goldens["ids"], "goldens/ids.tensor");
+    }
+
+    #[test]
+    fn missing_key_is_an_error() {
+        assert!(Manifest::parse(r#"{"model": "x"}"#).is_err());
+    }
+}

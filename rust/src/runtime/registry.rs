@@ -1,0 +1,64 @@
+//! Artifact-name construction — the mirror of `aot.py::art_name`.
+//!
+//! `{step}__{sig}` where sig joins each input's dims with 'x' and inputs
+//! with '_', prefixing i32 inputs with 'i'.  The engines build names from
+//! the shapes they are about to feed, so a config/manifest mismatch is
+//! caught by name lookup before any execution happens.
+
+use crate::tensor::Tensor;
+
+/// Shape signature for one input.
+fn sig(dims: &[usize], int: bool) -> String {
+    let body = dims
+        .iter()
+        .map(|d| d.to_string())
+        .collect::<Vec<_>>()
+        .join("x");
+    if int {
+        format!("i{body}")
+    } else {
+        body
+    }
+}
+
+/// Build an artifact name from explicit (dims, is_i32) pairs.
+pub fn art_name(step: &str, inputs: &[(&[usize], bool)]) -> String {
+    let parts: Vec<String> = inputs.iter().map(|(d, i)| sig(d, *i)).collect();
+    format!("{step}__{}", parts.join("_"))
+}
+
+/// Build an artifact name from actual tensors (the common path).
+pub fn art_name_for(step: &str, inputs: &[&Tensor]) -> String {
+    let parts: Vec<String> = inputs
+        .iter()
+        .map(|t| sig(&t.shape, matches!(t.dtype(), crate::tensor::DType::I32)))
+        .collect();
+    format!("{step}__{}", parts.join("_"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_aot_naming() {
+        // aot.py: art_name("linear_fwd", [spec([32,128]), spec([128,512]), spec([512])])
+        //   == "linear_fwd__32x128_128x512_512"
+        assert_eq!(
+            art_name("linear_fwd", &[(&[32, 128], false), (&[128, 512], false), (&[512], false)]),
+            "linear_fwd__32x128_128x512_512"
+        );
+        // i32 input prefix
+        assert_eq!(
+            art_name("embed_fwd", &[(&[2, 16], true), (&[1024, 128], false), (&[16, 128], false)]),
+            "embed_fwd__i2x16_1024x128_16x128"
+        );
+    }
+
+    #[test]
+    fn from_tensors() {
+        let x = Tensor::zeros(&[4, 8]);
+        let ids = Tensor::from_i32(&[4], vec![0; 4]).unwrap();
+        assert_eq!(art_name_for("f", &[&ids, &x]), "f__i4_4x8");
+    }
+}

@@ -1,0 +1,111 @@
+//! The P100-cluster simulator.
+//!
+//! The paper's scaling experiments ran on up to 64 NVIDIA P100s (16 GB) on
+//! Piz Daint.  We have one CPU host, so the *scale* dimension is
+//! reproduced by this simulator (DESIGN.md §2 documents the substitution):
+//!
+//! * [`memory`] — a per-device byte LEDGER enumerating every tensor the
+//!   real engines allocate (parameters + grads + Adam states, per-layer
+//!   activation stashes — the same `LayerStash` fields the rust engines
+//!   keep — and transients).  "OOM" = ledger exceeds 16 GiB.  The paper's
+//!   Tables 1–2 closed forms are implemented alongside and tested to agree
+//!   with the ledger's corresponding terms.
+//! * [`timing`] — an analytic step-time model (GEMM flops at calibrated
+//!   P100 efficiency + collective bytes over the interconnect + pipeline
+//!   bubble), giving the tokens/sec curves of Figs. 3b/4b/7b/8b.
+//! * [`search`] — max-batch / max-seq-len searches under the memory budget
+//!   (Figs. 3a/4a/5a/7a/8a/9).
+//! * [`sparse`] — the Linformer + sequence-parallelism memory model
+//!   (Table 3) and the Fig. 5b length upper bound.
+
+pub mod memory;
+pub mod search;
+pub mod sparse;
+pub mod timing;
+
+use crate::model::ModelConfig;
+
+/// Hardware constants of the simulated testbed.
+#[derive(Clone, Copy, Debug)]
+pub struct Cluster {
+    /// Device memory budget (bytes).  P100: 16 GB.
+    pub gpu_mem: u64,
+    /// Peak FLOP/s.  P100: 18.7e12 fp16 / 9.3e12 fp32 (paper-era Megatron
+    /// trains BERT in fp16 via apex; we model the fp16 peak).
+    pub peak_flops: f64,
+    /// Achieved-fraction for transformer GEMMs at these sizes (calibrated
+    /// so serial BERT-Base tokens/s lands near Table 4 row 1: ~9.9k tok/s).
+    pub efficiency: f64,
+    /// Interconnect bandwidth per link, bytes/s (Piz Daint Aries ~ 8 GB/s).
+    pub link_bw: f64,
+    /// Per-message latency, seconds.
+    pub latency: f64,
+}
+
+impl Default for Cluster {
+    fn default() -> Self {
+        Cluster {
+            gpu_mem: 16 * (1 << 30),
+            peak_flops: 18.7e12,
+            efficiency: 0.35,
+            link_bw: 8.0e9,
+            latency: 5.0e-6,
+        }
+    }
+}
+
+/// Which model-parallel strategy occupies the devices.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Megatron tensor parallelism of size n (must divide heads & FFN).
+    Tensor { n: usize },
+    /// Sequence parallelism of size n (must divide the sequence length).
+    Sequence { n: usize },
+}
+
+impl Strategy {
+    pub fn n(&self) -> usize {
+        match self {
+            Strategy::Tensor { n } | Strategy::Sequence { n } => *n,
+        }
+    }
+
+    /// Is this strategy feasible for the model/run shape at all?
+    /// Encodes Megatron's head-count cap the paper exploits (§4.2).
+    pub fn feasible(&self, cfg: &ModelConfig, seq_len: usize) -> bool {
+        match self {
+            Strategy::Tensor { n } => cfg.heads % n == 0 && cfg.ffn() % n == 0 && *n <= cfg.heads,
+            Strategy::Sequence { n } => seq_len % n == 0,
+        }
+    }
+}
+
+/// One simulated run shape.
+#[derive(Clone, Copy, Debug)]
+pub struct RunShape {
+    pub model: ModelConfig,
+    pub batch: usize,
+    pub seq_len: usize,
+    /// Pipeline stages (1 = no pipeline).  Layers are split evenly.
+    pub pipeline: usize,
+    /// Micro-batches per pipeline flush (GPipe).
+    pub micros: usize,
+}
+
+impl RunShape {
+    pub fn new(model: ModelConfig, batch: usize, seq_len: usize) -> RunShape {
+        RunShape { model, batch, seq_len, pipeline: 1, micros: 1 }
+    }
+
+    pub fn with_pipeline(mut self, stages: usize, micros: usize) -> RunShape {
+        self.pipeline = stages;
+        self.micros = micros;
+        self
+    }
+
+    /// Layers resident on one pipeline stage (ceil division — the paper
+    /// balances stages evenly, BERT layer counts divide cleanly).
+    pub fn layers_per_stage(&self) -> usize {
+        self.model.layers.div_ceil(self.pipeline)
+    }
+}

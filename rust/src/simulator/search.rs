@@ -1,0 +1,159 @@
+//! Max-batch / max-sequence-length searches under the device memory budget
+//! (the paper's Figs. 3a, 4a, 5a, 7a, 8a, 9 are all searches of this kind:
+//! "increase until CUDA OOM").
+
+use super::{memory, Cluster, RunShape, Strategy};
+use crate::model::ModelConfig;
+
+/// Does this run shape fit in device memory under the strategy?
+pub fn fits(cluster: &Cluster, shape: &RunShape, strategy: Strategy) -> bool {
+    strategy.feasible(&shape.model, shape.seq_len)
+        && memory::peak_bytes(shape, strategy) <= cluster.gpu_mem
+}
+
+/// Largest batch size that fits (exponential probe + binary search).
+/// Returns 0 if even batch 1 OOMs.
+pub fn max_batch(
+    cluster: &Cluster,
+    model: ModelConfig,
+    seq_len: usize,
+    pipeline: usize,
+    micros: usize,
+    strategy: Strategy,
+) -> usize {
+    let shape = |b: usize| {
+        RunShape::new(model, b, seq_len).with_pipeline(pipeline, micros)
+    };
+    if !fits(cluster, &shape(1), strategy) {
+        return 0;
+    }
+    let mut hi = 1usize;
+    while fits(cluster, &shape(hi * 2), strategy) {
+        hi *= 2;
+        if hi > 1 << 22 {
+            break; // guard absurd growth
+        }
+    }
+    let mut lo = hi; // lo fits
+    let mut top = hi * 2; // top does not
+    while top - lo > 1 {
+        let mid = (lo + top) / 2;
+        if fits(cluster, &shape(mid), strategy) {
+            lo = mid;
+        } else {
+            top = mid;
+        }
+    }
+    lo
+}
+
+/// Largest sequence length that fits, searched over multiples of `step`
+/// (sequence parallelism additionally requires L % N == 0, which holds
+/// when step is a multiple of N).
+pub fn max_seq_len(
+    cluster: &Cluster,
+    model: ModelConfig,
+    batch: usize,
+    pipeline: usize,
+    micros: usize,
+    strategy: Strategy,
+    step: usize,
+) -> usize {
+    let step = match strategy {
+        Strategy::Sequence { n } => step.max(1).next_multiple_of(n),
+        _ => step.max(1),
+    };
+    let shape = |l: usize| {
+        RunShape::new(model, batch, l).with_pipeline(pipeline, micros)
+    };
+    if !fits(cluster, &shape(step), strategy) {
+        return 0;
+    }
+    let mut hi = 1usize;
+    while fits(cluster, &shape(hi * 2 * step), strategy) {
+        hi *= 2;
+        if hi > 1 << 22 {
+            break;
+        }
+    }
+    let mut lo = hi;
+    let mut top = hi * 2;
+    while top - lo > 1 {
+        let mid = (lo + top) / 2;
+        if fits(cluster, &shape(mid * step), strategy) {
+            lo = mid;
+        } else {
+            top = mid;
+        }
+    }
+    lo * step
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::BERT_BASE;
+    use crate::util::prop::Prop;
+
+    fn c() -> Cluster {
+        Cluster::default()
+    }
+
+    #[test]
+    fn seqpar_max_batch_grows_with_devices() {
+        // Fig. 3a: SP max batch rises with ring size.
+        let b4 = max_batch(&c(), BERT_BASE, 512, 1, 1, Strategy::Sequence { n: 4 });
+        let b16 = max_batch(&c(), BERT_BASE, 512, 1, 1, Strategy::Sequence { n: 16 });
+        let b64 = max_batch(&c(), BERT_BASE, 512, 1, 1, Strategy::Sequence { n: 64 });
+        assert!(b4 > 0 && b16 > b4 && b64 > b16, "{b4} {b16} {b64}");
+    }
+
+    #[test]
+    fn tensor_parallelism_capped_by_heads() {
+        // BERT-Base has 12 heads: TP 16 infeasible, TP 12 fine (§4.2).
+        assert_eq!(
+            max_batch(&c(), BERT_BASE, 512, 1, 1, Strategy::Tensor { n: 16 }),
+            0
+        );
+        assert!(max_batch(&c(), BERT_BASE, 512, 1, 1, Strategy::Tensor { n: 12 }) > 0);
+    }
+
+    #[test]
+    fn headline_13_7x_direction() {
+        // Fig. 3a headline: SP@64 vs TP@12 max batch should be a large
+        // multiple (paper: 13.7x on hardware).
+        let sp64 = max_batch(&c(), BERT_BASE, 512, 1, 1, Strategy::Sequence { n: 64 });
+        let tp12 = max_batch(&c(), BERT_BASE, 512, 1, 1, Strategy::Tensor { n: 12 });
+        let ratio = sp64 as f64 / tp12 as f64;
+        assert!(ratio > 4.0, "SP@64 / TP@12 batch ratio only {ratio}");
+    }
+
+    #[test]
+    fn max_seq_len_respects_ring_divisibility() {
+        Prop::new(24, 5).check("seqlen divisible by ring", |rng| {
+            let n = 1usize << rng.below(5);
+            let l = max_seq_len(&c(), BERT_BASE, 4, 1, 1, Strategy::Sequence { n }, 32);
+            if l == 0 || l % n == 0 {
+                Ok(())
+            } else {
+                Err(format!("L={l} not divisible by ring {n}"))
+            }
+        });
+    }
+
+    #[test]
+    fn search_result_is_tight() {
+        Prop::new(16, 9).check("max_batch is maximal", |rng| {
+            let n = 1usize << rng.below(4);
+            let strat = Strategy::Sequence { n };
+            let b = max_batch(&c(), BERT_BASE, 512, 1, 1, strat);
+            let fits_b = fits(&c(), &RunShape::new(BERT_BASE, b, 512), strat);
+            let fits_b1 = fits(&c(), &RunShape::new(BERT_BASE, b + 1, 512), strat);
+            if fits_b && !fits_b1 {
+                Ok(())
+            } else {
+                Err(format!("n={n}: b={b} fits={fits_b}, b+1 fits={fits_b1}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,198 @@
+//! Analytic step-time model: GEMM flops at calibrated efficiency +
+//! collective traffic over the interconnect + pipeline bubble.
+//!
+//! Not a cycle simulator — a roofline-style schedule model.  Its job is
+//! the SHAPE of the paper's throughput curves (who wins, where curves
+//! bend), not absolute numbers; the calibration constant is chosen once so
+//! the serial BERT-Base point lands near Table 4's measured ~9.9k tok/s,
+//! then never touched per-experiment.
+
+use super::{Cluster, RunShape, Strategy};
+use crate::parallel::pipeline::{boundary_bytes_megatron, boundary_bytes_seqpar, Schedule};
+
+/// Forward GEMM flops for one transformer layer on ONE device.
+fn layer_flops(shape: &RunShape, strategy: Strategy) -> f64 {
+    let m = &shape.model;
+    let (h, f) = (m.hidden as f64, m.ffn() as f64);
+    let (z, a) = (m.heads as f64, m.head_dim as f64);
+    let b = shape.batch as f64;
+    let l = shape.seq_len as f64;
+    match strategy {
+        Strategy::Sequence { n } => {
+            let n = n as f64;
+            let tok = b * l / n;
+            // qkv + out proj on the chunk; attention spans the FULL row
+            // (the ring brings every key/value chunk through the device)
+            2.0 * tok * h * h * 4.0
+                + 2.0 * b * z * (l / n) * l * a * 2.0  // scores + AV
+                + 2.0 * tok * h * f * 2.0 // mlp
+        }
+        Strategy::Tensor { n } => {
+            let n = n as f64;
+            let tok = b * l;
+            2.0 * tok * h * (h / n) * 4.0
+                + 2.0 * b * (z / n) * l * l * a * 2.0
+                + 2.0 * tok * h * (f / n) * 2.0
+        }
+    }
+}
+
+/// Bytes each device sends per layer, forward+backward.
+fn layer_comm_bytes(shape: &RunShape, strategy: Strategy) -> f64 {
+    let m = &shape.model;
+    let h = m.hidden as f64;
+    let (z, a) = (m.heads as f64, m.head_dim as f64);
+    let b = shape.batch as f64;
+    let l = shape.seq_len as f64;
+    match strategy {
+        Strategy::Sequence { n } => {
+            let n_ = n as f64;
+            if n == 1 {
+                return 0.0;
+            }
+            // §3.2.2: 2(N-1) chunk sends fwd + 6(N-1) bwd, chunk = BZ(L/N)A
+            // — exactly equal to Megatron's total below (the paper's point).
+            let chunk = b * z * (l / n_) * a * 4.0;
+            8.0 * (n_ - 1.0) * chunk
+        }
+        Strategy::Tensor { n } => {
+            let n_ = n as f64;
+            if n == 1 {
+                return 0.0;
+            }
+            // 4 ring all-reduces (2 fwd + 2 bwd) of the [B, L, H] activation:
+            // 2(N-1)/N * C each
+            let c = b * l * h * 4.0;
+            4.0 * 2.0 * (n_ - 1.0) / n_ * c
+        }
+    }
+}
+
+/// Per-layer collective COUNT (latency term).
+fn layer_comm_msgs(_shape: &RunShape, strategy: Strategy) -> f64 {
+    match strategy {
+        Strategy::Sequence { n } => {
+            if n == 1 { 0.0 } else { 8.0 * (n - 1) as f64 }
+        }
+        Strategy::Tensor { n } => {
+            if n == 1 { 0.0 } else { 4.0 * 2.0 * (n - 1) as f64 }
+        }
+    }
+}
+
+/// Seconds for one optimizer step (fwd + bwd over all layers + pipeline).
+pub fn step_time(cluster: &Cluster, shape: &RunShape, strategy: Strategy) -> f64 {
+    let layers = shape.model.layers as f64;
+    let achieved = cluster.peak_flops * cluster.efficiency;
+    // backward ~ 2x forward flops
+    let compute_per_layer = 3.0 * layer_flops(shape, strategy) / achieved;
+    let comm_per_layer = layer_comm_bytes(shape, strategy) / cluster.link_bw
+        + layer_comm_msgs(shape, strategy) * cluster.latency;
+    let per_layer = compute_per_layer + comm_per_layer;
+
+    if shape.pipeline <= 1 {
+        return layers * per_layer;
+    }
+    // GPipe: per-microbatch stage time, bubble from the schedule, plus the
+    // stage-boundary traffic (where SP saves Megatron's split+gather).
+    let stages = shape.pipeline;
+    let micros = shape.micros.max(1);
+    let stage_layers = layers / stages as f64;
+    let micro_stage_time = stage_layers * per_layer / micros as f64;
+    let sched = Schedule::gpipe(stages, micros);
+    let ticks = sched.makespan(2) as f64 / 3.0; // fwd=1 bwd=2 normalized
+    let pipe_time = ticks * micro_stage_time;
+    let mp = strategy.n();
+    let bnd = match strategy {
+        Strategy::Tensor { .. } => {
+            boundary_bytes_megatron(shape.batch, shape.seq_len, shape.model.hidden, mp)
+        }
+        Strategy::Sequence { .. } => {
+            boundary_bytes_seqpar(shape.batch, shape.seq_len, shape.model.hidden, mp)
+        }
+    };
+    let bnd_bytes = (bnd.send + bnd.gather) as f64 / mp as f64;
+    let boundary_time =
+        (stages - 1) as f64 * (bnd_bytes / cluster.link_bw + cluster.latency) * 2.0; // fwd+bwd
+    pipe_time + boundary_time
+}
+
+/// Tokens processed per second for the GLOBAL batch.
+pub fn tokens_per_sec(cluster: &Cluster, shape: &RunShape, strategy: Strategy) -> f64 {
+    let tokens = (shape.batch * shape.seq_len) as f64;
+    tokens / step_time(cluster, shape, strategy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::BERT_BASE;
+
+    fn cluster() -> Cluster {
+        Cluster::default()
+    }
+
+    #[test]
+    fn serial_baseline_near_table4() {
+        // Table 4 row 1: parallel size 1, batch 64, L=512 → ~9.9k tokens/s.
+        let shape = RunShape::new(BERT_BASE, 64, 512);
+        let tps = tokens_per_sec(&cluster(), &shape, Strategy::Sequence { n: 1 });
+        assert!(
+            (5_000.0..20_000.0).contains(&tps),
+            "serial BERT-Base {tps} tok/s should be near the paper's ~9.9k"
+        );
+    }
+
+    #[test]
+    fn throughput_scales_with_devices() {
+        // Table 4: 2 devices ~1.5x, 4 devices ~2.1x (sub-linear but rising)
+        let c = cluster();
+        let shape = |b| RunShape::new(BERT_BASE, b, 512);
+        let t1 = tokens_per_sec(&c, &shape(64), Strategy::Sequence { n: 1 });
+        let t2 = tokens_per_sec(&c, &shape(128), Strategy::Sequence { n: 2 });
+        let t4 = tokens_per_sec(&c, &shape(256), Strategy::Sequence { n: 4 });
+        assert!(t2 > 1.2 * t1, "2-device weak scaling {t2} vs {t1}");
+        assert!(t4 > t2, "4-device {t4} vs {t2}");
+        assert!(t2 < 2.0 * t1, "comm must cost something");
+    }
+
+    #[test]
+    fn comparable_throughput_same_parallel_size() {
+        // Fig. 3b: SP ≈ TP at the same parallel size (within ~25%).
+        let c = cluster();
+        let shape = RunShape::new(BERT_BASE, 16, 512);
+        for n in [2usize, 4] {
+            let sp = tokens_per_sec(&c, &shape, Strategy::Sequence { n });
+            let tp = tokens_per_sec(&c, &shape, Strategy::Tensor { n });
+            let ratio = sp / tp;
+            assert!((0.6..1.6).contains(&ratio), "n={n}: SP/TP ratio {ratio}");
+        }
+    }
+
+    #[test]
+    fn seqpar_pipeline_beats_megatron_pipeline() {
+        // Fig. 4b: with MP size 4 fixed, SP throughput >= TP as stages grow
+        // (Megatron pays split+gather at each boundary).
+        let c = cluster();
+        for stages in [2usize, 4, 8] {
+            let shape = RunShape::new(BERT_BASE, 32, 512).with_pipeline(stages, 8);
+            let sp = step_time(&c, &shape, Strategy::Sequence { n: 4 });
+            let tp = step_time(&c, &shape, Strategy::Tensor { n: 4 });
+            assert!(
+                sp <= tp,
+                "stages={stages}: SP {sp}s should not exceed TP {tp}s"
+            );
+        }
+    }
+
+    #[test]
+    fn more_microbatches_less_bubble_time() {
+        let c = cluster();
+        let few = RunShape::new(BERT_BASE, 32, 512).with_pipeline(4, 2);
+        let many = RunShape::new(BERT_BASE, 32, 512).with_pipeline(4, 16);
+        assert!(
+            step_time(&c, &many, Strategy::Sequence { n: 4 })
+                < step_time(&c, &few, Strategy::Sequence { n: 4 })
+        );
+    }
+}

@@ -1,0 +1,114 @@
+//! SPT1 binary tensor interchange (mirror of python/compile/tensorio.py).
+//!
+//! Layout (little-endian):
+//!   magic  b"SPT1" | dtype u8 (0=f32, 1=i32) | ndim u8 | dims u64*ndim | data
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{TData, Tensor};
+
+const MAGIC: &[u8; 4] = b"SPT1";
+
+pub fn save(path: &Path, t: &Tensor) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    f.write_all(MAGIC)?;
+    let code: u8 = match t.data {
+        TData::F32(_) => 0,
+        TData::I32(_) => 1,
+    };
+    f.write_all(&[code, t.shape.len() as u8])?;
+    for &d in &t.shape {
+        f.write_all(&(d as u64).to_le_bytes())?;
+    }
+    match &t.data {
+        TData::F32(v) => {
+            for x in v {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        TData::I32(v) => {
+            for x in v {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<Tensor> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: bad magic {magic:?}", path.display());
+    }
+    let mut hdr = [0u8; 2];
+    f.read_exact(&mut hdr)?;
+    let (code, ndim) = (hdr[0], hdr[1] as usize);
+    let mut shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        let mut b = [0u8; 8];
+        f.read_exact(&mut b)?;
+        shape.push(u64::from_le_bytes(b) as usize);
+    }
+    let numel: usize = shape.iter().product();
+    let mut raw = vec![0u8; numel * 4];
+    f.read_exact(&mut raw)?;
+    let data = match code {
+        0 => TData::F32(
+            raw.chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        ),
+        1 => TData::I32(
+            raw.chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        ),
+        _ => bail!("{}: unknown dtype code {code}", path.display()),
+    };
+    Ok(Tensor { shape, data })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32_and_i32() {
+        let dir = std::env::temp_dir();
+        let t = Tensor::from_f32(&[2, 3], vec![1.5, -2.0, 0.0, 3.25, 4.0, -0.5]).unwrap();
+        let p = dir.join("spt1_test_f32.tensor");
+        save(&p, &t).unwrap();
+        assert_eq!(load(&p).unwrap(), t);
+
+        let i = Tensor::from_i32(&[4], vec![-7, 0, 1, i32::MAX]).unwrap();
+        let p2 = dir.join("spt1_test_i32.tensor");
+        save(&p2, &i).unwrap();
+        assert_eq!(load(&p2).unwrap(), i);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir();
+        let p = dir.join("spt1_bad.tensor");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let dir = std::env::temp_dir();
+        let t = Tensor::scalar(42.5);
+        let p = dir.join("spt1_scalar.tensor");
+        save(&p, &t).unwrap();
+        let r = load(&p).unwrap();
+        assert_eq!(r.shape, Vec::<usize>::new());
+        assert_eq!(r.scalar_f32().unwrap(), 42.5);
+    }
+}

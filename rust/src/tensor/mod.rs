@@ -1,0 +1,169 @@
+//! Host tensors.
+//!
+//! The coordinator moves data between artifacts, the ring fabric, and the
+//! optimizer as plain host buffers (the PJRT CPU client shares the host
+//! address space, so "device" buffers are host memory anyway).  Two dtypes
+//! are enough for the whole system: `f32` activations/params and `i32`
+//! ids/labels — mirroring the SPT1 interchange format.
+
+pub mod io;
+pub mod ops;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TData,
+}
+
+impl Tensor {
+    // ---------------------------------------------------------- constructors
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: TData::F32(vec![0.0; shape.iter().product()]),
+        }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            bail!("shape {shape:?} needs {n} elements, got {}", data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data: TData::F32(data) })
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            bail!("shape {shape:?} needs {n} elements, got {}", data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data: TData::I32(data) })
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: TData::F32(vec![v]) }
+    }
+
+    /// N(0, std) init from the deterministic PRNG.
+    pub fn randn(shape: &[usize], std: f32, rng: &mut crate::util::rng::Rng) -> Tensor {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.normal() as f32 * std).collect();
+        Tensor { shape: shape.to_vec(), data: TData::F32(data) }
+    }
+
+    // --------------------------------------------------------------- access
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            TData::F32(_) => DType::F32,
+            TData::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Bytes this tensor occupies (both dtypes are 4-byte).
+    pub fn bytes(&self) -> usize {
+        self.numel() * 4
+    }
+
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match &self.data {
+            TData::F32(v) => Ok(v),
+            TData::I32(_) => bail!("expected f32 tensor, got i32 (shape {:?})", self.shape),
+        }
+    }
+
+    pub fn f32s_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            TData::F32(v) => Ok(v),
+            TData::I32(_) => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match &self.data {
+            TData::I32(v) => Ok(v),
+            TData::F32(_) => bail!("expected i32 tensor, got f32 (shape {:?})", self.shape),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let d = self.f32s()?;
+        if d.len() != 1 {
+            bail!("expected scalar, shape is {:?}", self.shape);
+        }
+        Ok(d[0])
+    }
+
+    /// Reinterpret with a new shape of equal element count (zero-copy).
+    pub fn reshaped(mut self, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.numel() {
+            bail!("cannot reshape {:?} -> {shape:?}", self.shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn constructors_validate_shape() {
+        assert!(Tensor::from_f32(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::from_f32(&[2, 3], vec![0.0; 5]).is_err());
+        assert!(Tensor::from_i32(&[2], vec![1, 2]).is_ok());
+    }
+
+    #[test]
+    fn dtype_accessors_guard() {
+        let f = Tensor::zeros(&[2]);
+        assert!(f.f32s().is_ok());
+        assert!(f.i32s().is_err());
+        let i = Tensor::from_i32(&[1], vec![3]).unwrap();
+        assert!(i.i32s().is_ok());
+        assert!(i.f32s().is_err());
+    }
+
+    #[test]
+    fn randn_is_deterministic_and_scaled() {
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let a = Tensor::randn(&[64, 64], 0.02, &mut r1);
+        let b = Tensor::randn(&[64, 64], 0.02, &mut r2);
+        assert_eq!(a, b);
+        let std = {
+            let v = a.f32s().unwrap();
+            let m: f32 = v.iter().sum::<f32>() / v.len() as f32;
+            (v.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / v.len() as f32).sqrt()
+        };
+        assert!((std - 0.02).abs() < 0.002, "std {std}");
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_f32(&[2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        let r = t.clone().reshaped(&[3, 2]).unwrap();
+        assert_eq!(r.f32s().unwrap(), t.f32s().unwrap());
+        assert!(t.reshaped(&[4, 2]).is_err());
+    }
+}

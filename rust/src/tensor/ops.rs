@@ -1,0 +1,343 @@
+//! Host-side tensor ops used by the coordinator.
+//!
+//! Heavy math lives in the HLO artifacts; what remains host-side is the
+//! glue the ring schedule needs — slicing score rows per chunk, assembling
+//! full rows from ring parts, and elementwise accumulation for gradient
+//! reduction.  Everything here is O(bytes) copies or adds, no GEMMs.
+
+use anyhow::{bail, Result};
+
+use super::Tensor;
+
+/// Slice the LAST dimension: rows keep their order, columns `[lo, hi)`.
+/// Used to cut `P[..., i*Lc..(i+1)*Lc]` for the Ring-AV stage.
+pub fn slice_last(t: &Tensor, lo: usize, hi: usize) -> Result<Tensor> {
+    let last = *t.shape.last().ok_or_else(|| anyhow::anyhow!("scalar has no last dim"))?;
+    if lo >= hi || hi > last {
+        bail!("slice [{lo}, {hi}) out of last dim {last}");
+    }
+    let rows: usize = t.shape[..t.shape.len() - 1].iter().product();
+    let width = hi - lo;
+    let src = t.f32s()?;
+    let mut out = Vec::with_capacity(rows * width);
+    for r in 0..rows {
+        let base = r * last;
+        out.extend_from_slice(&src[base + lo..base + hi]);
+    }
+    let mut shape = t.shape.clone();
+    *shape.last_mut().unwrap() = width;
+    Tensor::from_f32(&shape, out)
+}
+
+/// Concatenate along the LAST dimension.  Used to assemble the full score
+/// rows `S^n in R^{Lc x L}` from the N ring parts.
+pub fn concat_last(parts: &[&Tensor]) -> Result<Tensor> {
+    if parts.is_empty() {
+        bail!("concat of zero tensors");
+    }
+    let lead = &parts[0].shape[..parts[0].shape.len() - 1];
+    for p in parts {
+        if &p.shape[..p.shape.len() - 1] != lead {
+            bail!(
+                "concat_last: leading dims differ: {:?} vs {:?}",
+                parts[0].shape, p.shape
+            );
+        }
+    }
+    let rows: usize = lead.iter().product();
+    let widths: Vec<usize> = parts.iter().map(|p| *p.shape.last().unwrap()).collect();
+    let total: usize = widths.iter().sum();
+    let mut out = Vec::with_capacity(rows * total);
+    let srcs: Vec<&[f32]> = parts
+        .iter()
+        .map(|p| p.f32s())
+        .collect::<Result<_>>()?;
+    for r in 0..rows {
+        for (src, w) in srcs.iter().zip(&widths) {
+            out.extend_from_slice(&src[r * w..(r + 1) * w]);
+        }
+    }
+    let mut shape = lead.to_vec();
+    shape.push(total);
+    Tensor::from_f32(&shape, out)
+}
+
+/// Concatenate along dimension `dim` (used to reassemble hidden states
+/// `[B, Lc, H]` chunks into `[B, L, H]` for verification).
+pub fn concat_dim(parts: &[&Tensor], dim: usize) -> Result<Tensor> {
+    if parts.is_empty() {
+        bail!("concat of zero tensors");
+    }
+    let nd = parts[0].shape.len();
+    if dim >= nd {
+        bail!("concat dim {dim} out of rank {nd}");
+    }
+    // treat as [outer, dim, inner]
+    let outer: usize = parts[0].shape[..dim].iter().product();
+    let inner: usize = parts[0].shape[dim + 1..].iter().product();
+    for p in parts {
+        if p.shape.len() != nd
+            || p.shape[..dim] != parts[0].shape[..dim]
+            || p.shape[dim + 1..] != parts[0].shape[dim + 1..]
+        {
+            bail!("concat_dim: incompatible shapes {:?} vs {:?}", parts[0].shape, p.shape);
+        }
+    }
+    let dims: Vec<usize> = parts.iter().map(|p| p.shape[dim]).collect();
+    let total: usize = dims.iter().sum();
+    let srcs: Vec<&[f32]> = parts.iter().map(|p| p.f32s()).collect::<Result<_>>()?;
+    let mut out = Vec::with_capacity(outer * total * inner);
+    for o in 0..outer {
+        for (src, &d) in srcs.iter().zip(&dims) {
+            let base = o * d * inner;
+            out.extend_from_slice(&src[base..base + d * inner]);
+        }
+    }
+    let mut shape = parts[0].shape.clone();
+    shape[dim] = total;
+    Tensor::from_f32(&shape, out)
+}
+
+/// Slice the FIRST dimension: rows `[lo, hi)` (contiguous copy).
+/// Used to cut per-device position-embedding slices and Megatron row-split
+/// weight shards.
+pub fn slice_dim0(t: &Tensor, lo: usize, hi: usize) -> Result<Tensor> {
+    let first = *t.shape.first().ok_or_else(|| anyhow::anyhow!("scalar has no dims"))?;
+    if lo >= hi || hi > first {
+        bail!("slice_dim0 [{lo}, {hi}) out of first dim {first}");
+    }
+    let inner: usize = t.shape[1..].iter().product();
+    let mut shape = t.shape.clone();
+    shape[0] = hi - lo;
+    match &t.data {
+        super::TData::F32(src) => {
+            Tensor::from_f32(&shape, src[lo * inner..hi * inner].to_vec())
+        }
+        super::TData::I32(src) => {
+            Tensor::from_i32(&shape, src[lo * inner..hi * inner].to_vec())
+        }
+    }
+}
+
+/// `dst[lo..hi, ...] += src` over the first dimension (gradient scatter
+/// for row-split weight shards and pos-emb slices).
+pub fn add_into_dim0(dst: &mut Tensor, src: &Tensor, lo: usize) -> Result<()> {
+    let inner: usize = dst.shape[1..].iter().product();
+    if src.shape[1..] != dst.shape[1..] {
+        bail!("add_into_dim0 inner mismatch: {:?} vs {:?}", src.shape, dst.shape);
+    }
+    let rows = src.shape[0];
+    if lo + rows > dst.shape[0] {
+        bail!("add_into_dim0 rows [{lo}, {}) out of {}", lo + rows, dst.shape[0]);
+    }
+    let s = src.f32s()?.to_vec();
+    let d = dst.f32s_mut()?;
+    for (i, v) in s.iter().enumerate() {
+        d[lo * inner + i] += v;
+    }
+    Ok(())
+}
+
+/// `dst[..., lo..hi] += src` over the last dimension (gradient scatter for
+/// column-split weight shards).
+pub fn add_into_last(dst: &mut Tensor, src: &Tensor, lo: usize) -> Result<()> {
+    let dlast = *dst.shape.last().unwrap();
+    let slast = *src.shape.last().unwrap();
+    if dst.shape[..dst.shape.len() - 1] != src.shape[..src.shape.len() - 1] {
+        bail!("add_into_last lead mismatch: {:?} vs {:?}", src.shape, dst.shape);
+    }
+    if lo + slast > dlast {
+        bail!("add_into_last cols [{lo}, {}) out of {dlast}", lo + slast);
+    }
+    let rows: usize = dst.shape[..dst.shape.len() - 1].iter().product();
+    let s = src.f32s()?.to_vec();
+    let d = dst.f32s_mut()?;
+    for r in 0..rows {
+        for c in 0..slast {
+            d[r * dlast + lo + c] += s[r * slast + c];
+        }
+    }
+    Ok(())
+}
+
+/// `dst += src` elementwise (gradient accumulation; all-reduce reduction).
+pub fn add_assign(dst: &mut Tensor, src: &Tensor) -> Result<()> {
+    if dst.shape != src.shape {
+        bail!("add_assign shape mismatch: {:?} vs {:?}", dst.shape, src.shape);
+    }
+    let s = src.f32s()?.to_vec(); // split borrows
+    for (d, s) in dst.f32s_mut()?.iter_mut().zip(s) {
+        *d += s;
+    }
+    Ok(())
+}
+
+/// `dst *= c` elementwise (gradient averaging).
+pub fn scale_assign(dst: &mut Tensor, c: f32) -> Result<()> {
+    for d in dst.f32s_mut()? {
+        *d *= c;
+    }
+    Ok(())
+}
+
+/// Column-wise sum of a [M, N] tensor -> [N] (bias gradients).
+pub fn sum_rows(t: &Tensor) -> Result<Tensor> {
+    if t.shape.len() != 2 {
+        bail!("sum_rows needs rank 2, got {:?}", t.shape);
+    }
+    let (m, n) = (t.shape[0], t.shape[1]);
+    let src = t.f32s()?;
+    let mut out = vec![0.0f32; n];
+    for r in 0..m {
+        for c in 0..n {
+            out[c] += src[r * n + c];
+        }
+    }
+    Tensor::from_f32(&[n], out)
+}
+
+/// Max |a - b| — the verification metric for golden comparisons.
+pub fn max_abs_diff(a: &Tensor, b: &Tensor) -> Result<f32> {
+    if a.shape != b.shape {
+        bail!("max_abs_diff shape mismatch: {:?} vs {:?}", a.shape, b.shape);
+    }
+    Ok(a.f32s()?
+        .iter()
+        .zip(b.f32s()?)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max))
+}
+
+/// Split a `[B, L, ...]`-shaped tensor into `n` chunks along dim 1.
+/// This is the input router: how the coordinator shards a batch of
+/// sequences across the ring devices.
+pub fn chunk_dim1(t: &Tensor, n: usize) -> Result<Vec<Tensor>> {
+    if t.shape.len() < 2 {
+        bail!("chunk_dim1 needs rank >= 2, got {:?}", t.shape);
+    }
+    let l = t.shape[1];
+    if l % n != 0 {
+        bail!("dim1 {l} not divisible by {n} devices");
+    }
+    let lc = l / n;
+    let b = t.shape[0];
+    let inner: usize = t.shape[2..].iter().product();
+    let mut chunks = Vec::with_capacity(n);
+    match &t.data {
+        super::TData::F32(src) => {
+            for c in 0..n {
+                let mut out = Vec::with_capacity(b * lc * inner);
+                for bi in 0..b {
+                    let base = (bi * l + c * lc) * inner;
+                    out.extend_from_slice(&src[base..base + lc * inner]);
+                }
+                let mut shape = t.shape.clone();
+                shape[1] = lc;
+                chunks.push(Tensor::from_f32(&shape, out)?);
+            }
+        }
+        super::TData::I32(src) => {
+            for c in 0..n {
+                let mut out = Vec::with_capacity(b * lc * inner);
+                for bi in 0..b {
+                    let base = (bi * l + c * lc) * inner;
+                    out.extend_from_slice(&src[base..base + lc * inner]);
+                }
+                let mut shape = t.shape.clone();
+                shape[1] = lc;
+                chunks.push(Tensor::from_i32(&shape, out)?);
+            }
+        }
+    }
+    Ok(chunks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t2x4() -> Tensor {
+        Tensor::from_f32(&[2, 4], (0..8).map(|i| i as f32).collect()).unwrap()
+    }
+
+    #[test]
+    fn slice_last_cuts_columns() {
+        let s = slice_last(&t2x4(), 1, 3).unwrap();
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.f32s().unwrap(), &[1.0, 2.0, 5.0, 6.0]);
+        assert!(slice_last(&t2x4(), 3, 3).is_err());
+        assert!(slice_last(&t2x4(), 2, 5).is_err());
+    }
+
+    #[test]
+    fn concat_last_inverts_slicing() {
+        let t = t2x4();
+        let a = slice_last(&t, 0, 2).unwrap();
+        let b = slice_last(&t, 2, 4).unwrap();
+        assert_eq!(concat_last(&[&a, &b]).unwrap(), t);
+    }
+
+    #[test]
+    fn concat_dim_middle() {
+        // [1,2,2] ++ [1,1,2] along dim 1
+        let a = Tensor::from_f32(&[1, 2, 2], vec![0., 1., 2., 3.]).unwrap();
+        let b = Tensor::from_f32(&[1, 1, 2], vec![9., 8.]).unwrap();
+        let c = concat_dim(&[&a, &b], 1).unwrap();
+        assert_eq!(c.shape, vec![1, 3, 2]);
+        assert_eq!(c.f32s().unwrap(), &[0., 1., 2., 3., 9., 8.]);
+    }
+
+    #[test]
+    fn chunk_dim1_shards_sequences() {
+        // [2 batch, 4 seq] i32 ids
+        let t = Tensor::from_i32(&[2, 4], (0..8).collect()).unwrap();
+        let c = chunk_dim1(&t, 2).unwrap();
+        assert_eq!(c.len(), 2);
+        assert_eq!(c[0].i32s().unwrap(), &[0, 1, 4, 5]);
+        assert_eq!(c[1].i32s().unwrap(), &[2, 3, 6, 7]);
+        assert!(chunk_dim1(&t, 3).is_err());
+    }
+
+    #[test]
+    fn chunk_then_concat_roundtrip_f32() {
+        let t = Tensor::from_f32(&[2, 6, 3], (0..36).map(|i| i as f32).collect()).unwrap();
+        let chunks = chunk_dim1(&t, 3).unwrap();
+        let refs: Vec<&Tensor> = chunks.iter().collect();
+        assert_eq!(concat_dim(&refs, 1).unwrap(), t);
+    }
+
+    #[test]
+    fn slice_dim0_and_scatter_roundtrip() {
+        let t = Tensor::from_f32(&[4, 2], (0..8).map(|i| i as f32).collect()).unwrap();
+        let s = slice_dim0(&t, 1, 3).unwrap();
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.f32s().unwrap(), &[2.0, 3.0, 4.0, 5.0]);
+        let mut z = Tensor::zeros(&[4, 2]);
+        add_into_dim0(&mut z, &s, 1).unwrap();
+        assert_eq!(z.f32s().unwrap(), &[0., 0., 2., 3., 4., 5., 0., 0.]);
+        // i32 slicing too (ids)
+        let i = Tensor::from_i32(&[3], vec![7, 8, 9]).unwrap();
+        assert_eq!(slice_dim0(&i, 2, 3).unwrap().i32s().unwrap(), &[9]);
+    }
+
+    #[test]
+    fn add_into_last_scatters_columns() {
+        let t = t2x4();
+        let s = slice_last(&t, 1, 3).unwrap();
+        let mut z = Tensor::zeros(&[2, 4]);
+        add_into_last(&mut z, &s, 1).unwrap();
+        assert_eq!(z.f32s().unwrap(), &[0., 1., 2., 0., 0., 5., 6., 0.]);
+        assert!(add_into_last(&mut z, &s, 3).is_err());
+    }
+
+    #[test]
+    fn add_scale_maxdiff() {
+        let mut a = t2x4();
+        let b = t2x4();
+        add_assign(&mut a, &b).unwrap();
+        scale_assign(&mut a, 0.5).unwrap();
+        assert_eq!(max_abs_diff(&a, &b).unwrap(), 0.0);
+        let c = Tensor::zeros(&[2, 4]);
+        assert_eq!(max_abs_diff(&a, &c).unwrap(), 7.0);
+    }
+}

@@ -1,0 +1,150 @@
+//! Checkpointing: save/restore parameters + Adam state + step counter.
+//!
+//! Layout (SPT1 tensors + a small JSON index):
+//!
+//! ```text
+//! <dir>/checkpoint.json        {"step": N, "params": [names...]}
+//! <dir>/params/<name>.tensor
+//! <dir>/adam_m/<name>.tensor
+//! <dir>/adam_v/<name>.tensor
+//! ```
+//!
+//! Engines are stateless, so a checkpoint fully determines the run; the
+//! resume test asserts bit-identical continuation.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::params::ParamStore;
+use crate::tensor::io;
+use crate::util::json::{self, Value};
+
+#[derive(Debug)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub params: ParamStore,
+    pub adam_m: ParamStore,
+    pub adam_v: ParamStore,
+}
+
+fn save_store(dir: &Path, sub: &str, store: &ParamStore) -> Result<()> {
+    let d = dir.join(sub);
+    std::fs::create_dir_all(&d)?;
+    for (name, t) in &store.values {
+        io::save(&d.join(format!("{}.tensor", name.replace('.', "_"))), t)?;
+    }
+    Ok(())
+}
+
+fn load_store(dir: &Path, sub: &str, names: &[String]) -> Result<ParamStore> {
+    let d = dir.join(sub);
+    let mut values = BTreeMap::new();
+    for name in names {
+        let t = io::load(&d.join(format!("{}.tensor", name.replace('.', "_"))))
+            .with_context(|| format!("loading {sub}/{name}"))?;
+        values.insert(name.clone(), t);
+    }
+    Ok(ParamStore { values })
+}
+
+pub fn save(dir: &Path, ckpt: &Checkpoint) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    save_store(dir, "params", &ckpt.params)?;
+    save_store(dir, "adam_m", &ckpt.adam_m)?;
+    save_store(dir, "adam_v", &ckpt.adam_v)?;
+    let mut obj = BTreeMap::new();
+    obj.insert("step".to_string(), Value::Num(ckpt.step as f64));
+    obj.insert(
+        "params".to_string(),
+        Value::Arr(
+            ckpt.params
+                .values
+                .keys()
+                .map(|k| Value::Str(k.clone()))
+                .collect(),
+        ),
+    );
+    std::fs::write(dir.join("checkpoint.json"), json::encode(&Value::Obj(obj)))?;
+    Ok(())
+}
+
+pub fn load(dir: &Path) -> Result<Checkpoint> {
+    let text = std::fs::read_to_string(dir.join("checkpoint.json"))
+        .with_context(|| format!("no checkpoint at {}", dir.display()))?;
+    let v = json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let step = v
+        .req("step")?
+        .as_f64()
+        .ok_or_else(|| anyhow::anyhow!("bad step"))? as u64;
+    let names: Vec<String> = v
+        .req("params")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("bad params list"))?
+        .iter()
+        .map(|s| {
+            s.as_str()
+                .map(String::from)
+                .ok_or_else(|| anyhow::anyhow!("bad param name"))
+        })
+        .collect::<Result<_>>()?;
+    if names.is_empty() {
+        bail!("checkpoint lists no parameters");
+    }
+    Ok(Checkpoint {
+        step,
+        params: load_store(dir, "params", &names)?,
+        adam_m: load_store(dir, "adam_m", &names)?,
+        adam_v: load_store(dir, "adam_v", &names)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn store(seed: u64) -> ParamStore {
+        let mut rng = Rng::new(seed);
+        let mut s = ParamStore::default();
+        s.values.insert("layer0.wq".into(), Tensor::randn(&[8, 8], 0.1, &mut rng));
+        s.values.insert("bias".into(), Tensor::randn(&[8], 0.1, &mut rng));
+        s
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let dir = std::env::temp_dir().join("seqpar_ckpt_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ckpt = Checkpoint {
+            step: 42,
+            params: store(1),
+            adam_m: store(2),
+            adam_v: store(3),
+        };
+        save(&dir, &ckpt).unwrap();
+        let back = load(&dir).unwrap();
+        assert_eq!(back.step, 42);
+        assert_eq!(back.params.values, ckpt.params.values);
+        assert_eq!(back.adam_m.values, ckpt.adam_m.values);
+        assert_eq!(back.adam_v.values, ckpt.adam_v.values);
+    }
+
+    #[test]
+    fn missing_checkpoint_errors_with_path() {
+        let err = load(Path::new("/nonexistent/ckpt")).unwrap_err().to_string();
+        assert!(err.contains("/nonexistent/ckpt"), "{err}");
+    }
+
+    #[test]
+    fn dotted_names_are_file_safe() {
+        let dir = std::env::temp_dir().join("seqpar_ckpt_dots");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ckpt = Checkpoint { step: 0, params: store(5), adam_m: store(6), adam_v: store(7) };
+        save(&dir, &ckpt).unwrap();
+        assert!(dir.join("params/layer0_wq.tensor").exists());
+        assert!(load(&dir).is_ok());
+    }
+}

@@ -1,0 +1,220 @@
+//! Synthetic pre-training corpus: Zipf-distributed token stream with
+//! local structure, MLM masking, and SOP pair construction.
+//!
+//! Substitutes the paper's Wikipedia corpus (DESIGN.md §2): the Fig. 6
+//! convergence experiment only needs a learnable distribution on which the
+//! engines' loss curves can be compared — learnability comes from (a) the
+//! Zipf unigram skew and (b) a first-order Markov "topic chain" that makes
+//! context informative, so MLM loss genuinely decreases.
+//!
+//! Special ids match python/compile/configs.py: PAD=0, CLS=1, SEP=2, MASK=3.
+
+use anyhow::Result;
+
+use crate::parallel::Batch;
+use crate::tensor::Tensor;
+use crate::util::rng::{harmonic, Rng};
+
+pub const PAD: i32 = 0;
+pub const CLS: i32 = 1;
+pub const SEP: i32 = 2;
+pub const MASK: i32 = 3;
+pub const N_SPECIAL: i32 = 4;
+
+#[derive(Clone, Debug)]
+pub struct CorpusConfig {
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub mask_prob: f64,
+    pub zipf_s: f64,
+    /// Probability of continuing the current "topic" (token neighborhood);
+    /// gives the corpus learnable bigram structure.
+    pub topic_stickiness: f64,
+}
+
+impl CorpusConfig {
+    pub fn new(vocab: usize, seq_len: usize, batch: usize) -> CorpusConfig {
+        CorpusConfig {
+            vocab,
+            seq_len,
+            batch,
+            mask_prob: 0.15,
+            zipf_s: 1.1,
+            topic_stickiness: 0.8,
+        }
+    }
+}
+
+pub struct Corpus {
+    cfg: CorpusConfig,
+    rng: Rng,
+    harm: f64,
+}
+
+impl Corpus {
+    pub fn new(cfg: CorpusConfig, seed: u64) -> Corpus {
+        let harm = harmonic(cfg.vocab - N_SPECIAL as usize, cfg.zipf_s);
+        Corpus { cfg, rng: Rng::new(seed), harm }
+    }
+
+    fn sample_token(&mut self, prev: i32) -> i32 {
+        let n_norm = self.cfg.vocab - N_SPECIAL as usize;
+        if prev >= N_SPECIAL && self.rng.uniform() < self.cfg.topic_stickiness {
+            // stay in the neighborhood of the previous token (topic chain)
+            let base = prev - N_SPECIAL;
+            let jitter = self.rng.below(16) as i32 - 8;
+            let tok = (base + jitter).rem_euclid(n_norm as i32);
+            tok + N_SPECIAL
+        } else {
+            self.rng.zipf(n_norm, self.cfg.zipf_s, self.harm) as i32 + N_SPECIAL
+        }
+    }
+
+    /// One "sentence" of `len` content tokens.
+    fn sentence(&mut self, len: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(len);
+        let mut prev = -1;
+        for _ in 0..len {
+            let t = self.sample_token(prev);
+            out.push(t);
+            prev = t;
+        }
+        out
+    }
+
+    /// Build a batch: `[CLS] sent_a [SEP] sent_b [SEP]`, with sent_b either
+    /// the true continuation (label 0) or swapped with sent_a (label 1 —
+    /// the Sentence Order Prediction objective), then 15% MLM masking.
+    pub fn next_batch(&mut self) -> Result<Batch> {
+        let (b, l, v) = (self.cfg.batch, self.cfg.seq_len, self.cfg.vocab as i32);
+        let content = l - 3; // CLS + 2 SEP
+        let half = content / 2;
+        let rest = content - half;
+        let mut ids = Vec::with_capacity(b * l);
+        let mut labels = Vec::with_capacity(b * l);
+        let mut mask = Vec::with_capacity(b * l);
+        let mut sop = Vec::with_capacity(b);
+        for _ in 0..b {
+            let a = self.sentence(half);
+            // continuation: reuse the topic chain from a's last token
+            let mut bb = Vec::with_capacity(rest);
+            let mut prev = *a.last().unwrap();
+            for _ in 0..rest {
+                let t = self.sample_token(prev);
+                bb.push(t);
+                prev = t;
+            }
+            let swapped = self.rng.uniform() < 0.5;
+            sop.push(if swapped { 1 } else { 0 });
+            let (first, second): (&[i32], &[i32]) =
+                if swapped { (&bb, &a) } else { (&a, &bb) };
+            let mut seq = Vec::with_capacity(l);
+            seq.push(CLS);
+            seq.extend_from_slice(first);
+            seq.push(SEP);
+            seq.extend_from_slice(second);
+            seq.push(SEP);
+            debug_assert_eq!(seq.len(), l);
+            // MLM masking (BERT recipe: 80% MASK / 10% random / 10% keep)
+            for (pos, tok) in seq.iter_mut().enumerate() {
+                let maskable = *tok >= N_SPECIAL;
+                if maskable && self.rng.uniform() < self.cfg.mask_prob {
+                    labels.push(*tok);
+                    mask.push(1.0f32);
+                    let r = self.rng.uniform();
+                    if r < 0.8 {
+                        *tok = MASK;
+                    } else if r < 0.9 {
+                        *tok = self.rng.below((v - N_SPECIAL) as u64) as i32 + N_SPECIAL;
+                    } // else keep
+                } else {
+                    labels.push(N_SPECIAL); // ignored (mask = 0)
+                    mask.push(0.0);
+                }
+                let _ = pos;
+            }
+            ids.extend_from_slice(&seq);
+        }
+        Ok(Batch {
+            ids: Tensor::from_i32(&[b, l], ids)?,
+            labels: Tensor::from_i32(&[b, l], labels)?,
+            mask: Tensor::from_f32(&[b, l], mask)?,
+            sop_labels: Tensor::from_i32(&[b], sop)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> Corpus {
+        Corpus::new(CorpusConfig::new(1024, 64, 4), 42)
+    }
+
+    #[test]
+    fn batch_shapes_and_ranges() {
+        let mut c = corpus();
+        let b = c.next_batch().unwrap();
+        assert_eq!(b.ids.shape, vec![4, 64]);
+        assert_eq!(b.labels.shape, vec![4, 64]);
+        assert_eq!(b.mask.shape, vec![4, 64]);
+        assert_eq!(b.sop_labels.shape, vec![4]);
+        for &t in b.ids.i32s().unwrap() {
+            assert!((0..1024).contains(&t), "token {t} out of vocab");
+        }
+        for &s in b.sop_labels.i32s().unwrap() {
+            assert!(s == 0 || s == 1);
+        }
+    }
+
+    #[test]
+    fn mask_rate_near_15_percent() {
+        let mut c = Corpus::new(CorpusConfig::new(1024, 256, 16), 7);
+        let b = c.next_batch().unwrap();
+        let m = b.mask.f32s().unwrap();
+        let rate = m.iter().sum::<f32>() / m.len() as f32;
+        assert!((0.08..0.22).contains(&rate), "mask rate {rate}");
+    }
+
+    #[test]
+    fn masked_positions_have_real_labels() {
+        let mut c = corpus();
+        let b = c.next_batch().unwrap();
+        let ids = b.ids.i32s().unwrap();
+        let labels = b.labels.i32s().unwrap();
+        let mask = b.mask.f32s().unwrap();
+        for i in 0..ids.len() {
+            if mask[i] > 0.0 {
+                assert!(labels[i] >= N_SPECIAL, "masked label {}", labels[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn sequences_start_with_cls() {
+        let mut c = corpus();
+        let b = c.next_batch().unwrap();
+        let ids = b.ids.i32s().unwrap();
+        for s in 0..4 {
+            // CLS is never maskable, so position 0 survives masking
+            assert_eq!(ids[s * 64], CLS);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = corpus();
+        let mut b = corpus();
+        assert_eq!(a.next_batch().unwrap().ids, b.next_batch().unwrap().ids);
+    }
+
+    #[test]
+    fn sop_labels_balanced() {
+        let mut c = Corpus::new(CorpusConfig::new(1024, 64, 64), 3);
+        let b = c.next_batch().unwrap();
+        let ones: i32 = b.sop_labels.i32s().unwrap().iter().sum();
+        assert!((10..=54).contains(&ones), "sop balance {ones}/64");
+    }
+}

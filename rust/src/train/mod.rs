@@ -1,0 +1,6 @@
+//! Training: optimizer, LR schedule, synthetic corpus, and the loop.
+
+pub mod checkpoint;
+pub mod data;
+pub mod optim;
+pub mod trainer;

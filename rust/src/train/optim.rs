@@ -1,0 +1,152 @@
+//! Adam optimizer + linear warmup/decay schedule (Megatron defaults).
+//!
+//! Runs host-side over the replicated [`ParamStore`]: the update is
+//! identical on every simulated device (gradients are already reduced), so
+//! one update serves the group — exactly the semantics of replicated-state
+//! training the paper assumes (it uses Megatron's Adam, §3.2.1).
+
+use anyhow::Result;
+
+use crate::model::params::ParamStore;
+
+#[derive(Clone, Copy, Debug)]
+pub struct AdamConfig {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        AdamConfig { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.0 }
+    }
+}
+
+pub struct Adam {
+    pub cfg: AdamConfig,
+    m: ParamStore,
+    v: ParamStore,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(params: &ParamStore, cfg: AdamConfig) -> Adam {
+        Adam { cfg, m: params.zeros_like(), v: params.zeros_like(), t: 0 }
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.t
+    }
+
+    /// Expose moment estimates + step for checkpointing.
+    pub fn state(&self) -> (&ParamStore, &ParamStore, u64) {
+        (&self.m, &self.v, self.t)
+    }
+
+    /// Rebuild from a checkpoint (see `train::checkpoint`).
+    pub fn from_state(cfg: AdamConfig, m: ParamStore, v: ParamStore, t: u64) -> Adam {
+        Adam { cfg, m, v, t }
+    }
+
+    /// One update: `p -= lr * m_hat / (sqrt(v_hat) + eps)`.
+    pub fn step(&mut self, params: &mut ParamStore, grads: &ParamStore, lr: f32) -> Result<()> {
+        self.t += 1;
+        let t = self.t as f32;
+        let (b1, b2, eps, wd) = (self.cfg.beta1, self.cfg.beta2, self.cfg.eps, self.cfg.weight_decay);
+        let bc1 = 1.0 - b1.powf(t);
+        let bc2 = 1.0 - b2.powf(t);
+        for (name, p) in params.values.iter_mut() {
+            let g = grads.values[name].f32s()?;
+            let m = self.m.values.get_mut(name).unwrap().f32s_mut()?;
+            let v = self.v.values.get_mut(name).unwrap().f32s_mut()?;
+            let pd = p.f32s_mut()?;
+            for i in 0..pd.len() {
+                let gi = g[i] + wd * pd[i];
+                m[i] = b1 * m[i] + (1.0 - b1) * gi;
+                v[i] = b2 * v[i] + (1.0 - b2) * gi * gi;
+                let mhat = m[i] / bc1;
+                let vhat = v[i] / bc2;
+                pd[i] -= lr * mhat / (vhat.sqrt() + eps);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Linear warmup to `peak`, then linear decay to zero at `total` steps.
+pub fn lr_schedule(step: u64, warmup: u64, total: u64, peak: f32) -> f32 {
+    if total == 0 {
+        return peak;
+    }
+    if step < warmup {
+        return peak * (step + 1) as f32 / warmup.max(1) as f32;
+    }
+    let rest = (total.saturating_sub(step)) as f32 / (total.saturating_sub(warmup)).max(1) as f32;
+    peak * rest.max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn store(vals: &[f32]) -> ParamStore {
+        let mut s = ParamStore::default();
+        s.values.insert(
+            "w".into(),
+            Tensor::from_f32(&[vals.len()], vals.to_vec()).unwrap(),
+        );
+        s
+    }
+
+    #[test]
+    fn first_step_matches_closed_form() {
+        let mut p = store(&[1.0, -2.0]);
+        let g = store(&[0.5, -0.25]);
+        let mut adam = Adam::new(&p, AdamConfig::default());
+        adam.step(&mut p, &g, 1e-3).unwrap();
+        // t=1: mhat = g, vhat = g^2  =>  p -= lr * g/|g| = lr * sign(g)
+        let w = p.values["w"].f32s().unwrap();
+        assert!((w[0] - (1.0 - 1e-3)).abs() < 1e-5, "{w:?}");
+        assert!((w[1] - (-2.0 + 1e-3)).abs() < 1e-5, "{w:?}");
+    }
+
+    #[test]
+    fn descends_a_quadratic() {
+        // minimize f(w) = (w - 3)^2 / 2; grad = w - 3
+        let mut p = store(&[0.0]);
+        let mut adam = Adam::new(&p, AdamConfig::default());
+        for _ in 0..2000 {
+            let w = p.values["w"].f32s().unwrap()[0];
+            let g = store(&[w - 3.0]);
+            adam.step(&mut p, &g, 0.01).unwrap();
+        }
+        let w = p.values["w"].f32s().unwrap()[0];
+        assert!((w - 3.0).abs() < 0.05, "converged to {w}");
+    }
+
+    #[test]
+    fn schedule_warms_up_and_decays() {
+        let peak = 1e-4;
+        assert!(lr_schedule(0, 10, 100, peak) < peak * 0.2);
+        assert!((lr_schedule(9, 10, 100, peak) - peak).abs() < 1e-9); // 1 ulp slack
+        assert!(lr_schedule(50, 10, 100, peak) < peak);
+        assert!(lr_schedule(99, 10, 100, peak) < peak * 0.05);
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let mut p = store(&[10.0]);
+        let g = store(&[0.0]);
+        let mut adam = Adam::new(
+            &p,
+            AdamConfig { weight_decay: 0.1, ..AdamConfig::default() },
+        );
+        for _ in 0..50 {
+            adam.step(&mut p, &g, 0.01).unwrap();
+        }
+        assert!(p.values["w"].f32s().unwrap()[0] < 10.0);
+    }
+}

@@ -1,0 +1,86 @@
+//! The training loop: engine-agnostic, logs the Fig. 6 loss curves.
+
+use anyhow::Result;
+
+use crate::model::params::ParamStore;
+use crate::parallel::{Batch, Engine};
+
+use super::optim::{lr_schedule, Adam, AdamConfig};
+
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub steps: u64,
+    pub warmup: u64,
+    pub peak_lr: f32,
+    pub log_every: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { steps: 100, warmup: 10, peak_lr: 1e-3, log_every: 10 }
+    }
+}
+
+/// One logged point of the loss curve.
+#[derive(Clone, Copy, Debug)]
+pub struct LogPoint {
+    pub step: u64,
+    pub loss: f32,
+    pub mlm: f32,
+    pub sop: f32,
+    pub lr: f32,
+    pub tokens_per_sec: f64,
+}
+
+pub struct Trainer<'e, E: Engine> {
+    pub engine: &'e E,
+    pub cfg: TrainConfig,
+    pub adam: Adam,
+}
+
+impl<'e, E: Engine> Trainer<'e, E> {
+    pub fn new(engine: &'e E, params: &ParamStore, cfg: TrainConfig) -> Trainer<'e, E> {
+        Trainer { engine, cfg, adam: Adam::new(params, AdamConfig::default()) }
+    }
+
+    /// Train over batches produced by `next_batch`; returns the loss curve.
+    pub fn run<F>(
+        &mut self,
+        params: &mut ParamStore,
+        mut next_batch: F,
+        quiet: bool,
+    ) -> Result<Vec<LogPoint>>
+    where
+        F: FnMut() -> Result<Batch>,
+    {
+        let mut curve = Vec::new();
+        for step in 0..self.cfg.steps {
+            let batch = next_batch()?;
+            let tokens = (batch.ids.numel()) as f64;
+            let t0 = std::time::Instant::now();
+            let out = self.engine.forward_backward(params, &batch)?;
+            let lr = lr_schedule(step, self.cfg.warmup, self.cfg.steps, self.cfg.peak_lr);
+            self.adam.step(params, &out.grads, lr)?;
+            let dt = t0.elapsed().as_secs_f64();
+            let point = LogPoint {
+                step,
+                loss: out.loss,
+                mlm: out.mlm,
+                sop: out.sop,
+                lr,
+                tokens_per_sec: tokens / dt.max(1e-9),
+            };
+            if step % self.cfg.log_every == 0 || step + 1 == self.cfg.steps {
+                if !quiet {
+                    println!(
+                        "[{}] step {:>5}  loss {:.4}  mlm {:.4}  sop {:.4}  lr {:.2e}  {:>8.0} tok/s",
+                        self.engine.name(), step, point.loss, point.mlm, point.sop,
+                        lr, point.tokens_per_sec
+                    );
+                }
+                curve.push(point);
+            }
+        }
+        Ok(curve)
+    }
+}

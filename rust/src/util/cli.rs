@@ -1,0 +1,127 @@
+//! Tiny CLI argument parser — clap is unavailable in the offline build.
+//!
+//! Supports `--flag`, `--key value`, and `--key=value`; everything else is
+//! a positional.  Typed getters parse on access and report the offending
+//! flag on error.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    present: Vec<String>,
+}
+
+impl Args {
+    pub fn parse_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                    out.present.push(k.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                    out.present.push(stripped.to_string());
+                } else {
+                    out.flags.insert(stripped.to_string(), String::new());
+                    out.present.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.str_opt(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    /// Comma-separated usize list, e.g. `--sizes 1,2,4,8`.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> anyhow::Result<Vec<usize>> {
+        match self.flags.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|p| !p.trim().is_empty())
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--{key}: bad integer {p:?}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_key_value_and_flags() {
+        // convention: positionals first — a bare flag greedily takes the
+        // next non-flag token as its value, so `--verbose out.json` would
+        // bind them together.
+        let a = args("train out.json --steps 10 --model=bert-tiny --verbose");
+        assert_eq!(a.positional, vec!["train", "out.json"]);
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 10);
+        assert_eq!(a.str_or("model", ""), "bert-tiny");
+        assert!(a.has("verbose"));
+        assert_eq!(a.usize_or("absent", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn type_errors_name_the_flag() {
+        let a = args("--steps ten");
+        let err = a.usize_or("steps", 0).unwrap_err().to_string();
+        assert!(err.contains("--steps"), "{err}");
+    }
+
+    #[test]
+    fn parses_lists() {
+        let a = args("--sizes 1,2, 4");
+        // note: "4" after the space is positional; list parsing is on the value
+        assert_eq!(a.usize_list_or("sizes", &[]).unwrap(), vec![1, 2]);
+        let b = args("--sizes 1,2,4");
+        assert_eq!(b.usize_list_or("sizes", &[]).unwrap(), vec![1, 2, 4]);
+    }
+}

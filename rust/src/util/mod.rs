@@ -1,0 +1,12 @@
+//! Offline-build substrates.
+//!
+//! The build environment vendors only the `xla` crate and its transitive
+//! deps, so the conveniences a networked project would pull from crates.io
+//! are implemented here: a JSON parser ([`json`]), a CLI argument parser
+//! ([`cli`]), a deterministic PRNG ([`rng`]), and a miniature
+//! property-testing harness ([`prop`]) standing in for proptest.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

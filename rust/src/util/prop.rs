@@ -1,0 +1,80 @@
+//! Miniature property-testing harness — proptest is unavailable offline.
+//!
+//! Runs a property over many randomized cases from a deterministic seed;
+//! on failure it reports the case index and seed so the exact case can be
+//! replayed (`Prop::replay`).  No shrinking — cases are kept small enough
+//! to be readable directly.
+//!
+//! Used by the coordinator invariants tests (routing, chunking, collective
+//! correctness, ledger-vs-formula) — see rust/tests/.
+
+use crate::util::rng::Rng;
+
+pub struct Prop {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Prop {
+    fn default() -> Self {
+        Prop { cases: 64, seed: 0x5e9_9a11e1 }
+    }
+}
+
+impl Prop {
+    pub fn new(cases: usize, seed: u64) -> Self {
+        Prop { cases, seed }
+    }
+
+    /// Run `property` over `cases` randomized cases.  The property gets a
+    /// per-case RNG; `Err` fails the run with replay info.
+    pub fn check<F>(&self, name: &str, mut property: F)
+    where
+        F: FnMut(&mut Rng) -> Result<(), String>,
+    {
+        for case in 0..self.cases {
+            let mut rng = Rng::new(self.seed.wrapping_add(case as u64));
+            if let Err(msg) = property(&mut rng) {
+                panic!(
+                    "property {name:?} failed at case {case}/{} (seed {}): {msg}\n\
+                     replay with Prop::replay({name:?}, {}, {case}, ...)",
+                    self.cases, self.seed, self.seed
+                );
+            }
+        }
+    }
+
+    /// Re-run a single failing case by index.
+    pub fn replay<F>(name: &str, seed: u64, case: usize, mut property: F)
+    where
+        F: FnMut(&mut Rng) -> Result<(), String>,
+    {
+        let mut rng = Rng::new(seed.wrapping_add(case as u64));
+        if let Err(msg) = property(&mut rng) {
+            panic!("replayed property {name:?} case {case}: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        Prop::new(16, 1).check("u64 plus zero", |rng| {
+            let x = rng.next_u64();
+            if x.wrapping_add(0) == x {
+                Ok(())
+            } else {
+                Err(format!("{x} + 0 != {x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always fails\"")]
+    fn reports_failing_case() {
+        Prop::new(4, 2).check("always fails", |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,144 @@
+//! Integration: the three engines are numerically interchangeable.
+//!
+//! The paper's correctness story (Fig. 6 / Appendix B) rests on sequence
+//! parallelism computing THE SAME training step as the baselines.  These
+//! tests drive all engines over random batches and assert losses, hidden
+//! states, and every parameter gradient agree — not just trends.
+
+use std::path::PathBuf;
+
+use seqpar::comm::{Fabric, Meter};
+use seqpar::model::params::ParamStore;
+use seqpar::parallel::sequence::SeqParEngine;
+use seqpar::parallel::tensorp::TensorParEngine;
+use seqpar::parallel::{Batch, Engine};
+use seqpar::runtime::Runtime;
+use seqpar::tensor::ops;
+use seqpar::train::data::{Corpus, CorpusConfig};
+use seqpar::train::optim::{Adam, AdamConfig};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn batch_for(rt: &Runtime, seed: u64) -> Batch {
+    let m = &rt.manifest;
+    Corpus::new(CorpusConfig::new(m.vocab, m.seq_len, m.batch), seed)
+        .next_batch()
+        .unwrap()
+}
+
+const TOL: f32 = 2e-3;
+
+#[test]
+fn engines_agree_on_losses_and_grads() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let rt = Runtime::open(&dir).unwrap();
+    let params = ParamStore::load(&dir, &rt.manifest).unwrap();
+    for seed in [10u64, 11, 12] {
+        let batch = batch_for(&rt, seed);
+        let seq = SeqParEngine::new(&rt, Fabric::new(rt.manifest.ring, Meter::new())).unwrap();
+        let serial = TensorParEngine::new(&rt, Fabric::new(1, Meter::new())).unwrap();
+        let tp = TensorParEngine::new(&rt, Fabric::new(rt.manifest.tp, Meter::new())).unwrap();
+
+        let a = seq.forward_backward(&params, &batch).unwrap();
+        let b = serial.forward_backward(&params, &batch).unwrap();
+        let c = tp.forward_backward(&params, &batch).unwrap();
+
+        assert!((a.loss - b.loss).abs() < TOL, "seed {seed}: seq {} vs serial {}", a.loss, b.loss);
+        assert!((c.loss - b.loss).abs() < TOL, "seed {seed}: tp {} vs serial {}", c.loss, b.loss);
+
+        for (name, g) in &b.grads.values {
+            let da = ops::max_abs_diff(&a.grads.values[name], g).unwrap();
+            assert!(da < TOL, "seed {seed}: grad {name} seq vs serial Δ={da}");
+            let dc = ops::max_abs_diff(&c.grads.values[name], g).unwrap();
+            assert!(dc < TOL, "seed {seed}: grad {name} tp vs serial Δ={dc}");
+        }
+
+        // hidden states: seq chunks reassemble to the serial tensor
+        let m = &rt.manifest;
+        let lc = m.seq_len / m.ring;
+        let chunks3d: Vec<_> = a
+            .hidden
+            .iter()
+            .map(|h| h.clone().reshaped(&[m.batch, lc, m.hidden]).unwrap())
+            .collect();
+        let refs: Vec<_> = chunks3d.iter().collect();
+        let full = ops::concat_dim(&refs, 1)
+            .unwrap()
+            .reshaped(&[m.batch * m.seq_len, m.hidden])
+            .unwrap();
+        let dh = ops::max_abs_diff(&full, &b.hidden[0]).unwrap();
+        assert!(dh < TOL, "seed {seed}: hidden Δ={dh}");
+    }
+}
+
+#[test]
+fn sgd_trajectories_stay_locked() {
+    // Three Adam steps with each engine from the same init: parameters
+    // must remain identical (the strong version of Fig. 6).
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let rt = Runtime::open(&dir).unwrap();
+    let mut p_seq = ParamStore::load(&dir, &rt.manifest).unwrap();
+    let mut p_ser = ParamStore::load(&dir, &rt.manifest).unwrap();
+    let seq = SeqParEngine::new(&rt, Fabric::new(rt.manifest.ring, Meter::new())).unwrap();
+    let serial = TensorParEngine::new(&rt, Fabric::new(1, Meter::new())).unwrap();
+    let mut adam_a = Adam::new(&p_seq, AdamConfig::default());
+    let mut adam_b = Adam::new(&p_ser, AdamConfig::default());
+    for step in 0..3u64 {
+        let batch = batch_for(&rt, 100 + step);
+        let oa = seq.forward_backward(&p_seq, &batch).unwrap();
+        let ob = serial.forward_backward(&p_ser, &batch).unwrap();
+        adam_a.step(&mut p_seq, &oa.grads, 1e-3).unwrap();
+        adam_b.step(&mut p_ser, &ob.grads, 1e-3).unwrap();
+    }
+    let mut worst = (String::new(), 0.0f32);
+    for (name, a) in &p_seq.values {
+        let d = ops::max_abs_diff(a, &p_ser.values[name]).unwrap();
+        if d > worst.1 {
+            worst = (name.clone(), d);
+        }
+    }
+    assert!(
+        worst.1 < 5e-3,
+        "after 3 Adam steps params diverged: {} Δ={}",
+        worst.0,
+        worst.1
+    );
+}
+
+#[test]
+fn data_parallel_composes_with_sequence_parallel() {
+    // 4D story: DP(2) over SP(ring) — averaged grads equal the average of
+    // two independent SP steps.
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let rt = Runtime::open(&dir).unwrap();
+    let params = ParamStore::load(&dir, &rt.manifest).unwrap();
+    let seq = SeqParEngine::new(&rt, Fabric::new(rt.manifest.ring, Meter::new())).unwrap();
+    let dp = seqpar::parallel::data::DataParallel::new(&seq, Fabric::new(2, Meter::new()));
+    let b1 = batch_for(&rt, 31);
+    let b2 = batch_for(&rt, 32);
+    let out = dp.step(&params, &[b1.clone(), b2.clone()]).unwrap();
+
+    let o1 = seq.forward_backward(&params, &b1).unwrap();
+    let o2 = seq.forward_backward(&params, &b2).unwrap();
+    let want_loss = (o1.loss + o2.loss) / 2.0;
+    assert!((out.loss - want_loss).abs() < 1e-4);
+    for (name, g) in &out.grads.values {
+        let mut avg = o1.grads.values[name].clone();
+        ops::add_assign(&mut avg, &o2.grads.values[name]).unwrap();
+        ops::scale_assign(&mut avg, 0.5).unwrap();
+        let d = ops::max_abs_diff(g, &avg).unwrap();
+        assert!(d < 1e-5, "DP grad {name} Δ={d}");
+    }
+}

@@ -1,0 +1,230 @@
+//! Integration: the paper's quantitative claims, checked against the
+//! figure generators (artifact-free — pure simulator).
+//!
+//! We do not expect to match the P100 testbed's absolute numbers; these
+//! tests pin the SHAPE of each result: who wins, roughly by how much,
+//! where the caps and crossovers fall (DESIGN.md §2, §5).
+
+use seqpar::eval::figures;
+use seqpar::model::{BERT_BASE, BERT_LARGE};
+use seqpar::simulator::{memory, search, Cluster, RunShape, Strategy};
+use seqpar::util::prop::Prop;
+
+fn cluster() -> Cluster {
+    Cluster::default()
+}
+
+// --------------------------------------------------------------- Fig. 3a
+#[test]
+fn fig3a_sp64_vs_tp12_batch_ratio_near_13_7() {
+    let rows = figures::fig3(&cluster(), BERT_BASE);
+    let tp_best = rows.iter().filter_map(|r| r.tp_max_batch).max().unwrap();
+    let sp64 = rows.iter().find(|r| r.n == 64).unwrap().sp_max_batch;
+    let ratio = sp64 as f64 / tp_best as f64;
+    // paper: 13.7x — accept the right order of magnitude
+    assert!((6.0..30.0).contains(&ratio), "batch ratio {ratio} (paper 13.7x)");
+}
+
+#[test]
+fn fig3a_tp_stops_at_12_sp_reaches_64() {
+    let rows = figures::fig3(&cluster(), BERT_BASE);
+    assert!(rows.iter().any(|r| r.n == 12 && r.tp_max_batch.is_some()));
+    assert!(rows
+        .iter()
+        .filter(|r| r.n > 12)
+        .all(|r| r.tp_max_batch.is_none()));
+    assert!(rows.iter().any(|r| r.n == 64 && r.sp_max_batch > 0));
+}
+
+// --------------------------------------------------------------- Fig. 3b
+#[test]
+fn fig3b_throughput_comparable_at_same_size() {
+    let rows = figures::fig3(&cluster(), BERT_BASE);
+    for r in rows.iter().filter(|r| r.tp_tokens_per_sec.is_some() && r.sp_max_batch > 0) {
+        let ratio = r.sp_tokens_per_sec / r.tp_tokens_per_sec.unwrap();
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "n={}: SP/TP throughput ratio {ratio}",
+            r.n
+        );
+    }
+}
+
+// --------------------------------------------------------------- Fig. 4
+#[test]
+fn fig4_sp_wins_batch_and_throughput_across_pipeline_depths() {
+    for model in [BERT_BASE, BERT_LARGE] {
+        for r in figures::fig4(&cluster(), model) {
+            assert!(
+                r.sp_max_batch >= r.tp_max_batch.unwrap(),
+                "{}: stage {} batch", model.name, r.n
+            );
+            assert!(
+                r.sp_tokens_per_sec >= 0.95 * r.tp_tokens_per_sec.unwrap(),
+                "{}: stage {} throughput", model.name, r.n
+            );
+        }
+    }
+}
+
+// --------------------------------------------------------------- Fig. 5a
+#[test]
+fn fig5a_length_ratio_and_equal_16_gpu_point() {
+    let rows = figures::fig5a(&cluster(), BERT_BASE, 64);
+    let tp_best = rows.iter().filter_map(|r| r.tp_max_len).max().unwrap();
+    let sp64 = rows.iter().find(|r| r.n == 64).unwrap().sp_max_len;
+    let ratio = sp64 as f64 / tp_best as f64;
+    assert!((2.0..12.0).contains(&ratio), "length ratio {ratio} (paper ~3x)");
+    // paper: at the same 16 GPUs SP reaches 1.4x TP's length.  TP can't
+    // use 16 on BERT-Base, so compare at the shared feasible size 12 vs
+    // SP@16 — SP must be ahead.
+    let sp16 = rows.iter().find(|r| r.n == 16).unwrap().sp_max_len;
+    assert!(sp16 as f64 >= 1.2 * tp_best as f64, "SP@16 {sp16} vs TP@12 {tp_best}");
+}
+
+// --------------------------------------------------------------- Fig. 9
+#[test]
+fn fig9_bert_large_length_ratio_near_2x() {
+    let rows = figures::fig5a(&cluster(), BERT_LARGE, 16);
+    let tp_best = rows.iter().filter_map(|r| r.tp_max_len).max().unwrap();
+    let sp64 = rows.iter().find(|r| r.n == 64).unwrap().sp_max_len;
+    let ratio = sp64 as f64 / tp_best as f64;
+    assert!((1.5..8.0).contains(&ratio), "Large length ratio {ratio} (paper ~2x)");
+}
+
+// --------------------------------------------------------------- Fig. 5b
+#[test]
+fn fig5b_sparse_reaches_100k_plus_at_32_devices() {
+    let rows = figures::fig5b(&cluster(), BERT_BASE);
+    let at32 = rows.iter().find(|r| r.n == 32).unwrap();
+    assert!(
+        at32.sparse_max_len >= 100_000,
+        "sparse@32 = {} (paper: >114K)",
+        at32.sparse_max_len
+    );
+    // near-ideal scaling: doubling devices ~doubles the bound (>=1.8x)
+    for w in rows.windows(2) {
+        let r = w[1].sparse_max_len as f64 / w[0].sparse_max_len as f64;
+        assert!(r > 1.7, "sparse scaling step {:?} -> {:?} only {r}", w[0].n, w[1].n);
+    }
+}
+
+#[test]
+fn fig5b_27x_beyond_single_device_sparse() {
+    let rows = figures::fig5b(&cluster(), BERT_BASE);
+    let single = rows.iter().find(|r| r.n == 1).unwrap().sparse_max_len;
+    let at32 = rows.iter().find(|r| r.n == 32).unwrap().sparse_max_len;
+    assert!(
+        at32 as f64 / single as f64 > 16.0,
+        "sparse@32 {at32} vs single-device {single} (paper: 27x)"
+    );
+}
+
+// --------------------------------------------------------------- Table 4
+#[test]
+fn table4_sp_constant_memory_tp_ooms() {
+    let rows = figures::table4(&cluster(), BERT_BASE);
+    let batch_sweep: Vec<_> = rows.iter().filter(|r| r.seq_len == 512 && r.batch >= 64).collect();
+    // SP memory flat (paper: 8477 -> 8490 MB)
+    let first = batch_sweep.first().unwrap().sp_mem_mb;
+    for r in &batch_sweep {
+        assert!(r.sp_mem_mb / first < 1.1, "SP memory should stay flat");
+    }
+    // TP eventually OOMs in the batch sweep (paper: at n=8)
+    assert!(batch_sweep.iter().any(|r| r.tp_mem_mb.is_none()), "TP should OOM");
+    // length sweep: SP uses less memory than TP wherever both fit
+    for r in rows.iter().filter(|r| r.batch == 64 && r.seq_len > 256) {
+        if let Some(tp) = r.tp_mem_mb {
+            assert!(r.sp_mem_mb <= tp, "L={}: SP {} vs TP {tp}", r.seq_len, r.sp_mem_mb);
+        }
+    }
+}
+
+// ------------------------------------------------------------ Tables 1/2
+#[test]
+fn breakeven_properties_hold_across_shapes() {
+    Prop::new(64, 33).check("table 1/2 break-evens", |rng| {
+        let h = 64 * (1 + rng.below(16));
+        let z = 1 + rng.below(16);
+        let a = 64u64;
+        // n >= 2: at N=1 both Table-1 forms reduce to 32H² + 5BLH (equal).
+        let n = 2 + rng.below(15);
+        let bl_small = rng.below(32 * h) + 1;
+        let bl_big = 32 * h + 16 * a * z + rng.below(1 << 20) + 1;
+        // Eq. 5 direction: big BL -> SP wins the MLP block
+        if memory::paper_mlp_sequence(1, bl_big, h, n) >= memory::paper_mlp_tensor(1, bl_big, h, n)
+        {
+            return Err(format!("SP should win MLP at BL={bl_big} H={h} N={n}"));
+        }
+        // small BL and N>1 -> TP wins
+        if n > 1
+            && bl_small < 16 * h
+            && memory::paper_mlp_sequence(1, bl_small, h, n)
+                <= memory::paper_mlp_tensor(1, bl_small, h, n)
+        {
+            return Err(format!("TP should win MLP at BL={bl_small} H={h} N={n}"));
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------- §4.2 cap claim
+#[test]
+fn megatron_cap_is_heads_seqpar_cap_is_length() {
+    // "tensor parallelism size is a maximum of 12 for BERT Base" and
+    // "only the sequence length is required to be divisible" (§4.2).
+    assert!(!Strategy::Tensor { n: 24 }.feasible(&BERT_BASE, 512));
+    assert!(Strategy::Tensor { n: 12 }.feasible(&BERT_BASE, 512));
+    assert!(Strategy::Sequence { n: 64 }.feasible(&BERT_BASE, 512));
+    assert!(!Strategy::Sequence { n: 3 }.feasible(&BERT_BASE, 512));
+    assert!(Strategy::Tensor { n: 16 }.feasible(&BERT_LARGE, 512));
+    assert!(!Strategy::Tensor { n: 32 }.feasible(&BERT_LARGE, 512));
+}
+
+// ----------------------------------------------------- search invariants
+#[test]
+fn oom_search_monotone_in_memory_budget() {
+    Prop::new(24, 77).check("bigger GPU -> bigger batch", |rng| {
+        let n = 1usize << rng.below(5);
+        let mut small = cluster();
+        small.gpu_mem = 8 * (1 << 30);
+        let mut big = cluster();
+        big.gpu_mem = 32 * (1 << 30);
+        let strat = Strategy::Sequence { n };
+        let bs = search::max_batch(&small, BERT_BASE, 512, 1, 1, strat);
+        let bb = search::max_batch(&big, BERT_BASE, 512, 1, 1, strat);
+        if bb >= bs {
+            Ok(())
+        } else {
+            Err(format!("n={n}: 32GB batch {bb} < 8GB batch {bs}"))
+        }
+    });
+}
+
+#[test]
+fn fig5a_gap_widens_with_32gb_gpus() {
+    // paper §4.3: "the gap is expected to widen if we use 32GB GPUs"
+    let c16 = cluster();
+    let mut c32 = cluster();
+    c32.gpu_mem = 32 * (1 << 30);
+    let gap = |c: &Cluster| {
+        let sp = search::max_seq_len(c, BERT_BASE, 64, 1, 1, Strategy::Sequence { n: 16 }, 64);
+        let tp = search::max_seq_len(c, BERT_BASE, 64, 1, 1, Strategy::Tensor { n: 4 }, 64);
+        sp as i64 - tp as i64
+    };
+    assert!(gap(&c32) > gap(&c16), "absolute length gap should widen at 32GB");
+}
+
+#[test]
+fn ledger_vs_paper_quadratic_share() {
+    // The score-matrix share of activation memory grows with L — the
+    // motivation of the whole paper.  Check the ledger reproduces it.
+    let short = RunShape::new(BERT_BASE, 8, 256);
+    let long = RunShape::new(BERT_BASE, 8, 4096);
+    let f = |s: &RunShape| {
+        let total = memory::layer_stash_elems(s, Strategy::Sequence { n: 8 }) as f64;
+        let quad = (8 * 12 * (s.seq_len / 8) * s.seq_len) as f64;
+        quad / total
+    };
+    assert!(f(&long) > 2.0 * f(&short), "quadratic share must dominate at long L");
+}

@@ -1,0 +1,104 @@
+//! Integration: failure injection on the runtime/manifest layer.
+//!
+//! A coordinator that silently mis-executes is worse than one that
+//! crashes: every orchestration error (wrong shape, unknown artifact,
+//! truncated manifest) must fail loudly and NAME the artifact.
+
+use std::path::PathBuf;
+
+use seqpar::runtime::{Manifest, Runtime};
+use seqpar::tensor::Tensor;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn wrong_shape_errors_with_artifact_name() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let rt = Runtime::open(&dir).unwrap();
+    // pick any artifact and feed it a wrong-shaped first input
+    let (name, spec) = rt.manifest.artifacts.iter().next().unwrap();
+    let mut inputs: Vec<Tensor> = spec
+        .inputs
+        .iter()
+        .map(|io| match io.dtype {
+            seqpar::tensor::DType::F32 => Tensor::zeros(&io.dims),
+            seqpar::tensor::DType::I32 => {
+                Tensor::from_i32(&io.dims, vec![0; io.dims.iter().product()]).unwrap()
+            }
+        })
+        .collect();
+    inputs[0] = Tensor::zeros(&[3, 5, 7]); // wrong
+    let refs: Vec<&Tensor> = inputs.iter().collect();
+    let err = rt.call(name, &refs).unwrap_err().to_string();
+    assert!(err.contains(name.split("__").next().unwrap()), "error should name the artifact: {err}");
+}
+
+#[test]
+fn unknown_artifact_suggests_rebuilding() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let rt = Runtime::open(&dir).unwrap();
+    let err = rt.call("nonexistent__1x1", &[]).unwrap_err().to_string();
+    assert!(err.contains("not in manifest"), "{err}");
+}
+
+#[test]
+fn wrong_arity_is_rejected_before_execution() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let rt = Runtime::open(&dir).unwrap();
+    let (name, _) = rt.manifest.artifacts.iter().next().unwrap();
+    let err = rt.call(name, &[]).unwrap_err().to_string();
+    assert!(err.contains("inputs"), "{err}");
+}
+
+#[test]
+fn manifest_rejects_truncation() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    let truncated = &text[..text.len() / 2];
+    assert!(Manifest::parse(truncated).is_err());
+    // and a structurally-valid but incomplete document
+    assert!(Manifest::parse("{\"model\": \"x\"}").is_err());
+}
+
+#[test]
+fn missing_artifact_file_fails_at_first_use_not_open() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    // copy manifest into a temp dir WITHOUT the hlo files: open succeeds
+    // (lazy compile), first call fails cleanly.
+    let tmp = std::env::temp_dir().join("seqpar_missing_artifacts");
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(&tmp).unwrap();
+    std::fs::copy(dir.join("manifest.json"), tmp.join("manifest.json")).unwrap();
+    let rt = Runtime::open(&tmp).unwrap();
+    let (name, spec) = rt.manifest.artifacts.iter().next().unwrap();
+    let inputs: Vec<Tensor> = spec
+        .inputs
+        .iter()
+        .map(|io| match io.dtype {
+            seqpar::tensor::DType::F32 => Tensor::zeros(&io.dims),
+            seqpar::tensor::DType::I32 => {
+                Tensor::from_i32(&io.dims, vec![0; io.dims.iter().product()]).unwrap()
+            }
+        })
+        .collect();
+    let refs: Vec<&Tensor> = inputs.iter().collect();
+    assert!(rt.call(name, &refs).is_err());
+}
