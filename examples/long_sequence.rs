@@ -3,36 +3,32 @@
 //! Two parts:
 //!
 //! 1. REAL COMPUTE — runs the Linformer + sequence-parallelism attention
-//!    path through the PJRT artifacts: each device projects its local K/V
-//!    chunk with its slice of the projection matrix, the partial
-//!    projections are all-reduced (Table 3's communication), and attention
-//!    runs against the fixed-K projected keys.  Verifies the distributed
-//!    projection identity  Σₙ Eⁿ Xⁿ = E X  numerically.
+//!    path on the native backend (no artifacts needed): each device
+//!    projects its local K/V chunk with its slice of the projection
+//!    matrix, the partial projections are all-reduced (Table 3's
+//!    communication), and attention runs against the fixed-K projected
+//!    keys.  Verifies the distributed projection identity
+//!    Σₙ Eⁿ Xⁿ = E X  numerically.
 //!
 //! 2. SCALE — prints the Fig. 5b sequence-length upper-bound table from
 //!    the cluster simulator (the 114K-tokens-on-32-P100s headline).
 //!
-//!     make artifacts && cargo run --release --example long_sequence
+//!     cargo run --release --example long_sequence
 
 use anyhow::Result;
 
+use seqpar::backend::native::NativeConfig;
 use seqpar::comm::{Fabric, Meter};
 use seqpar::model::BERT_BASE;
 use seqpar::runtime::{registry, Runtime};
-use seqpar::simulator::{sparse, search, Cluster, Strategy};
+use seqpar::simulator::{search, sparse, Cluster, Strategy};
 use seqpar::tensor::{ops, Tensor};
 use seqpar::util::rng::Rng;
 
 fn main() -> Result<()> {
-    let dir = std::path::PathBuf::from(
-        std::env::args().nth(1).unwrap_or_else(|| "artifacts".into()),
-    );
-    let rt = Runtime::open(&dir)?;
-    let m = &rt.manifest;
-    anyhow::ensure!(
-        m.linformer_k > 0,
-        "artifacts were built without --linformer; re-run `make artifacts`"
-    );
+    let rt = Runtime::native(NativeConfig { linformer_k: 8, ..NativeConfig::tiny() })?;
+    let m = rt.manifest().clone();
+    anyhow::ensure!(m.linformer_k > 0, "native config must set linformer_k");
     let (b, n, z, a) = (m.batch, m.ring, m.heads, m.head_dim);
     let lc = m.seq_len / n;
     let kp = m.linformer_k;
@@ -40,7 +36,7 @@ fn main() -> Result<()> {
         "Linformer + sequence parallelism: ring of {n}, chunk {lc} tokens, projection K={kp}"
     );
 
-    // ---- part 1: real compute through the artifacts ---------------------
+    // ---- part 1: real compute through the native kernels -----------------
     let mut rng = Rng::new(11);
     let chunk = |rng: &mut Rng| Tensor::randn(&[b, z, lc, a], 1.0, rng);
     let q: Vec<Tensor> = (0..n).map(|_| chunk(&mut rng)).collect();

@@ -1,47 +1,63 @@
 //! Quickstart: Ring Self-Attention across 4 simulated devices.
 //!
-//! Loads the AOT artifacts, chunks a batch of queries/keys/values along
-//! the sequence dimension, runs the paper's RSA (ring-QK^T → softmax →
-//! ring-AV) through the PJRT runtime, and checks the result against the
-//! monolithic-attention golden exported by the python compile path.
+//! Runs entirely on the native backend — no artifacts, no python.  A
+//! random batch of queries/keys/values is chunked along the sequence
+//! dimension, the paper's RSA (ring-QK^T → softmax → ring-AV) computes
+//! per-device attention, and the result is checked against monolithic
+//! full-sequence attention computed through the same backend's serial
+//! step kernels.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 
 use anyhow::Result;
 
+use seqpar::backend::native::NativeConfig;
 use seqpar::comm::{CommKind, Fabric, Meter};
 use seqpar::parallel::sequence::SeqParEngine;
-use seqpar::runtime::Runtime;
-use seqpar::tensor::{io, ops};
+use seqpar::runtime::{registry, Runtime};
+use seqpar::tensor::{ops, Tensor};
+use seqpar::util::rng::Rng;
 
 fn main() -> Result<()> {
-    let dir = std::path::PathBuf::from(
-        std::env::args().nth(1).unwrap_or_else(|| "artifacts".into()),
-    );
-    let rt = Runtime::open(&dir)?;
-    let n = rt.manifest.ring;
+    let rt = Runtime::native(NativeConfig::tiny())?;
+    let m = rt.manifest().clone();
+    let n = m.ring;
+    let (b, z, a, l) = (m.batch, m.heads, m.head_dim, m.seq_len);
+    let lc = l / n;
     println!(
-        "model {}  ring size {}  (chunk = {} of {} tokens)",
-        rt.manifest.model,
-        n,
-        rt.manifest.seq_len / n,
-        rt.manifest.seq_len
+        "model {}  ring size {n}  (chunk = {lc} of {l} tokens, backend {})",
+        m.model,
+        rt.backend_name()
     );
 
-    // golden q/k/v chunks + expected outputs, exported by aot.py from the
-    // pure-jnp reference (ref.ring_attention == monolithic attention).
-    let load = |name: &str| io::load(&dir.join(&rt.manifest.goldens[name]));
-    let mut q = Vec::new();
-    let mut k = Vec::new();
-    let mut v = Vec::new();
-    let mut want = Vec::new();
-    for d in 0..n {
-        q.push(load(&format!("qs_dev{d}"))?);
-        k.push(load(&format!("ks_dev{d}"))?);
-        v.push(load(&format!("vs_dev{d}"))?);
-        want.push(load(&format!("attn_out_dev{d}"))?);
-    }
+    // random full-length q/k/v, then chunked along the sequence dim
+    let mut rng = Rng::new(1);
+    let q_full = Tensor::randn(&[b, z, l, a], 1.0, &mut rng);
+    let k_full = Tensor::randn(&[b, z, l, a], 1.0, &mut rng);
+    let v_full = Tensor::randn(&[b, z, l, a], 1.0, &mut rng);
+    let chunk = |t: &Tensor| -> Result<Vec<Tensor>> {
+        let flat = t.clone().reshaped(&[b * z, l, a])?;
+        ops::chunk_dim1(&flat, n)?
+            .into_iter()
+            .map(|c| c.reshaped(&[b, z, lc, a]))
+            .collect()
+    };
+    let q = chunk(&q_full)?;
+    let k = chunk(&k_full)?;
+    let v = chunk(&v_full)?;
 
+    // monolithic reference through the serial-shape kernels of the SAME
+    // backend: scores -> softmax -> AV over the full sequence
+    let call1 = |step: &str, inputs: &[&Tensor]| -> Result<Tensor> {
+        rt.call1(&registry::art_name_for(step, inputs), inputs)
+    };
+    let s = call1("scores_step", &[&q_full, &k_full])?;
+    let p = call1("softmax_fwd", &[&s])?;
+    let acc = Tensor::zeros(&[b, z, l, a]);
+    let mono = call1("av_step", &[&p, &v_full, &acc])?;
+    let want = chunk(&mono)?;
+
+    // the distributed version through the metered ring
     let meter = Meter::new();
     let engine = SeqParEngine::new(&rt, Fabric::new(n, meter.clone()))?;
     let out = engine.rsa_attention(&q, &k, &v)?;
@@ -49,7 +65,10 @@ fn main() -> Result<()> {
     let mut worst = 0.0f32;
     for d in 0..n {
         let diff = ops::max_abs_diff(&out[d], &want[d])?;
-        println!("device {d}: attention chunk {:?}, max|Δ| vs golden = {diff:.2e}", out[d].shape);
+        println!(
+            "device {d}: attention chunk {:?}, max|Δ| vs monolithic = {diff:.2e}",
+            out[d].shape
+        );
         worst = worst.max(diff);
     }
     println!(
@@ -57,7 +76,7 @@ fn main() -> Result<()> {
         meter.get(CommKind::RingP2p),
         meter.snapshot().ops
     );
-    anyhow::ensure!(worst < 1e-4, "RSA output diverged from golden: {worst}");
+    anyhow::ensure!(worst < 1e-4, "RSA output diverged from monolithic: {worst}");
     println!("quickstart OK — distributed RSA == monolithic attention");
     Ok(())
 }

@@ -3,15 +3,19 @@
 //! SAME INITIALIZATION on the same synthetic corpus, and show the loss
 //! curves coincide — the paper's convergence-correctness experiment.
 //!
-//!     make artifacts && cargo run --release --example train_bert -- --steps 200
+//! Runs on the native backend: no artifacts, no python.
 //!
-//! Flags: --steps N (default 200), --seed S, --artifacts DIR, --lr F,
-//!        --engines seq,serial,tensor (default seq,serial)
+//!     cargo run --release --example train_bert -- --steps 200
+//!
+//! Flags: --steps N (default 200), --seed S, --lr F,
+//!        --model NAME (default bert-tiny), --batch N, --seq-len N,
+//!        --ring N, --tp N, --engines seq,serial,tensor (default seq,serial)
 //!
 //! The run is recorded in EXPERIMENTS.md §Fig6.
 
 use anyhow::Result;
 
+use seqpar::backend::native::NativeConfig;
 use seqpar::comm::{Fabric, Meter};
 use seqpar::model::params::ParamStore;
 use seqpar::parallel::sequence::SeqParEngine;
@@ -22,16 +26,11 @@ use seqpar::train::data::{Corpus, CorpusConfig};
 use seqpar::train::trainer::{LogPoint, TrainConfig, Trainer};
 use seqpar::util::cli::Args;
 
-fn run_engine(
-    rt: &Runtime,
-    dir: &std::path::Path,
-    which: &str,
-    cfg: TrainConfig,
-    seed: u64,
-) -> Result<Vec<LogPoint>> {
+fn run_engine(rt: &Runtime, which: &str, cfg: TrainConfig, seed: u64) -> Result<Vec<LogPoint>> {
     // fresh params + fresh corpus per engine: identical starting point
-    let mut params = ParamStore::load(dir, &rt.manifest)?;
-    let m = &rt.manifest;
+    // (synthetic init is deterministic in the manifest seed)
+    let mut params = ParamStore::synthetic(rt.manifest());
+    let m = rt.manifest().clone();
     let mut corpus = Corpus::new(CorpusConfig::new(m.vocab, m.seq_len, m.batch), seed);
     let meter = Meter::new();
     let curve = match which {
@@ -63,7 +62,6 @@ fn run_engine(
 
 fn main() -> Result<()> {
     let args = Args::parse_env();
-    let dir = std::path::PathBuf::from(args.str_or("artifacts", "artifacts"));
     let steps = args.usize_or("steps", 200)? as u64;
     let seed = args.usize_or("seed", 7)? as u64;
     let engines: Vec<String> = args
@@ -71,10 +69,23 @@ fn main() -> Result<()> {
         .split(',')
         .map(|s| s.trim().to_string())
         .collect();
-    let rt = Runtime::open(&dir)?;
+    let ncfg = NativeConfig {
+        model: seqpar::model::by_name(args.str_or("model", "bert-tiny"))?,
+        batch: args.usize_or("batch", 2)?,
+        seq_len: args.usize_or("seq-len", 64)?,
+        ring: args.usize_or("ring", 4)?,
+        tp: args.usize_or("tp", 2)?,
+        linformer_k: 0,
+        seed: args.usize_or("init-seed", 0)? as u64,
+    };
+    let rt = Runtime::native(ncfg)?;
     println!(
-        "training {} (L={}, B={}) for {} steps on the synthetic Zipf corpus",
-        rt.manifest.model, rt.manifest.seq_len, rt.manifest.batch, steps
+        "training {} (L={}, B={}) for {} steps on the synthetic Zipf corpus [{} backend]",
+        rt.manifest().model,
+        rt.manifest().seq_len,
+        rt.manifest().batch,
+        steps,
+        rt.backend_name()
     );
     let cfg = TrainConfig {
         steps,
@@ -85,7 +96,7 @@ fn main() -> Result<()> {
 
     let mut curves: Vec<(String, Vec<LogPoint>)> = Vec::new();
     for e in &engines {
-        curves.push((e.clone(), run_engine(&rt, &dir, e, cfg, seed)?));
+        curves.push((e.clone(), run_engine(&rt, e, cfg, seed)?));
     }
 
     // Fig. 6 claim: the engines' curves coincide (same math, same data).

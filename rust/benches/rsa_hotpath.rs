@@ -1,9 +1,14 @@
 //! Bench: the REAL-COMPUTE hot path — one training step of each engine
-//! through the PJRT runtime, plus the per-stage RSA breakdown.  This is
+//! through the native backend, plus the per-stage RSA breakdown.  This is
 //! the instrument for the EXPERIMENTS.md §Perf iteration log.
 //!
-//!     make artifacts && cargo bench --bench rsa_hotpath
+//!     cargo bench --bench rsa_hotpath
+//!
+//! No artifacts needed: the native backend synthesizes its manifest.  (To
+//! profile the PJRT path instead, build with `--features backend-xla` and
+//! run `seqpar verify --backend xla`.)
 
+use seqpar::backend::native::NativeConfig;
 use seqpar::comm::{Fabric, Meter};
 use seqpar::eval::bench::{bench, fmt_ns};
 use seqpar::model::params::ParamStore;
@@ -16,21 +21,23 @@ use seqpar::train::data::{Corpus, CorpusConfig};
 use seqpar::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let dir = std::path::PathBuf::from("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("rsa_hotpath: artifacts/ missing — run `make artifacts`; skipping");
-        return Ok(());
-    }
-    let rt = Runtime::open(&dir)?;
-    let m = rt.manifest.clone();
-    let params = ParamStore::load(&dir, &m)?;
+    // a meatier shape than the test default so the kernels dominate
+    let cfg = NativeConfig { seq_len: 64, ..NativeConfig::tiny() };
+    let rt = Runtime::native(cfg)?;
+    let m = rt.manifest().clone();
+    let params = ParamStore::synthetic(&m);
     let mut corpus = Corpus::new(CorpusConfig::new(m.vocab, m.seq_len, m.batch), 3);
     let batch = corpus.next_batch()?;
     let tokens = (m.batch * m.seq_len) as f64;
 
     println!(
-        "hot path @ {} (B={} L={} ring={} tp={})",
-        m.model, m.batch, m.seq_len, m.ring, m.tp
+        "hot path @ {} [{} backend] (B={} L={} ring={} tp={})",
+        m.model,
+        rt.backend_name(),
+        m.batch,
+        m.seq_len,
+        m.ring,
+        m.tp
     );
 
     // ---- end-to-end steps -------------------------------------------------
@@ -69,23 +76,22 @@ fn main() -> anyhow::Result<()> {
     });
     rsa.report("RSA attention only (ring QK^T + softmax + ring AV)");
 
-    // ---- orchestration overhead: fabric + host glue vs executable time ----
+    // ---- orchestration overhead: fabric + host glue vs kernel time --------
     let stats0 = rt.stats();
     let _ = seq.forward_backward(&params, &batch)?;
     let stats1 = rt.stats();
     let exec_ns = (stats1.exec_nanos - stats0.exec_nanos) as f64;
     let calls = stats1.calls - stats0.calls;
     println!(
-        "one seq-par step: {calls} artifact calls, {} inside executables, {} total -> orchestration overhead {:.1}%",
+        "one seq-par step: {calls} kernel calls, {} inside kernels, {} total -> orchestration overhead {:.1}%",
         fmt_ns(exec_ns),
         fmt_ns(s.mean_ns),
         100.0 * (s.mean_ns - exec_ns).max(0.0) / s.mean_ns
     );
     println!(
-        "executable cache: {} compiled, {} calls total (hit rate {:.1}%)",
+        "distinct kernels dispatched: {} over {} calls",
         rt.cached_executables(),
         stats1.calls,
-        100.0 * (1.0 - rt.cached_executables() as f64 / stats1.calls as f64)
     );
     Ok(())
 }

@@ -1,0 +1,17 @@
+//! Execution backends implementing [`crate::runtime::Executor`].
+//!
+//! * [`native`] — pure-rust f32 kernels + a synthetic in-memory manifest;
+//!   the default: engines, tests and benches run with zero artifacts.
+//! * [`xla_pjrt`] (feature `backend-xla`) — the original PJRT path: loads
+//!   `artifacts/*.hlo.txt` lowered by `python/compile/aot.py` and executes
+//!   them on the PJRT CPU client.
+//!
+//! Both backends validate every call against the same [`Manifest`]
+//! shape contract, so an engine that runs on one runs on the other.
+//!
+//! [`Manifest`]: crate::runtime::Manifest
+
+pub mod native;
+
+#[cfg(feature = "backend-xla")]
+pub mod xla_pjrt;

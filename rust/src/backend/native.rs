@@ -1,0 +1,1359 @@
+//! Pure-rust executor: every manifest step as an in-process f32 kernel.
+//!
+//! This backend makes the whole system self-contained — engines, tests and
+//! benches run with **zero external artifacts**.  It mirrors the AOT
+//! pipeline exactly:
+//!
+//! * the artifact *names* are enumerated the same way `aot.py` enumerates
+//!   them (`enumerate_seqpar` + `enumerate_tensorpar(tp)` +
+//!   `enumerate_tensorpar(1)` + optional Linformer), so a config mismatch
+//!   between an engine and the backend is still caught by name lookup;
+//! * the kernel *semantics* are the `python/compile/kernels/ref.py`
+//!   oracles: scaled `QK^T/sqrt(A)` scores, max-subtracted softmax,
+//!   `EPS = 1e-5` LayerNorm, tanh-approximate GeLU, and the hand-scheduled
+//!   ring-attention backward GEMMs of `steps.py`;
+//! * static parameters that `aot.py` bakes into an artifact at lowering
+//!   time (the `to_heads`/`qkv_proj` head layout, the loss normalizers)
+//!   are baked into the per-artifact [`Kernel`] descriptor here.
+//!
+//! Everything is plain row-major f32 on the host — no BLAS, no threads —
+//! which keeps the backend dependency-free and deterministic.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::model::{self, ModelConfig};
+use crate::runtime::{
+    registry, validate_inputs, ArtifactSpec, IoSpec, Manifest, ParamSpec, RuntimeStats,
+};
+use crate::tensor::{DType, Tensor};
+
+const LN_EPS: f32 = 1e-5;
+const GELU_C0: f32 = 0.797_884_56;
+const GELU_C1: f32 = 0.044715;
+
+/// Run-shape configuration for a synthetic (artifact-free) manifest.
+#[derive(Clone, Copy, Debug)]
+pub struct NativeConfig {
+    pub model: ModelConfig,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub ring: usize,
+    pub tp: usize,
+    /// Linformer projection dim K (0 = skip those artifacts).
+    pub linformer_k: usize,
+    pub seed: u64,
+}
+
+impl NativeConfig {
+    /// The CI / test default: bert-tiny at a short sequence, ring of 4.
+    pub fn tiny() -> NativeConfig {
+        NativeConfig {
+            model: model::BERT_TINY,
+            batch: 2,
+            seq_len: 32,
+            ring: 4,
+            tp: 2,
+            linformer_k: 0,
+            seed: 0,
+        }
+    }
+}
+
+/// One registered artifact's kernel identity + lowering-time constants.
+#[derive(Clone, Copy, Debug)]
+enum Kernel {
+    EmbedFwd,
+    EmbedBwd,
+    LnFwd,
+    LnBwd,
+    LinearFwd,
+    LinearBwd,
+    GeluLinearFwd,
+    GeluLinearBwd,
+    Add,
+    BiasAdd,
+    ToHeads { b: usize, z: usize, a: usize },
+    FromHeads,
+    QkvProj { b: usize, z: usize, a: usize },
+    QkvProjBwd,
+    AddLnFwd,
+    MlpFwd,
+    MlpBwd,
+    ScoresStep,
+    SoftmaxFwd,
+    SoftmaxBwd,
+    AvStep,
+    AttnDpStep,
+    AttnDqStep,
+    AttnDkStep,
+    AttnDvStep,
+    LinformerProj,
+    MlmLoss { norm: f32 },
+    SopLoss { batch: usize, norm: f32 },
+}
+
+pub struct NativeBackend {
+    manifest: Manifest,
+    kernels: HashMap<String, Kernel>,
+    stats: RefCell<RuntimeStats>,
+    used: RefCell<BTreeSet<String>>,
+}
+
+// ---------------------------------------------------------------- registry
+
+struct Reg {
+    artifacts: BTreeMap<String, ArtifactSpec>,
+    kernels: HashMap<String, Kernel>,
+}
+
+fn fio(dims: &[usize]) -> IoSpec {
+    IoSpec { dims: dims.to_vec(), dtype: DType::F32 }
+}
+
+fn iio(dims: &[usize]) -> IoSpec {
+    IoSpec { dims: dims.to_vec(), dtype: DType::I32 }
+}
+
+impl Reg {
+    fn new() -> Reg {
+        Reg { artifacts: BTreeMap::new(), kernels: HashMap::new() }
+    }
+
+    /// Register one artifact (skip if an identical name already exists —
+    /// the same dedup rule `aot.py::lower_all` applies).
+    fn add(&mut self, step: &str, kernel: Kernel, inputs: Vec<IoSpec>) -> Result<()> {
+        let sig: Vec<(&[usize], bool)> = inputs
+            .iter()
+            .map(|s| (s.dims.as_slice(), s.dtype == DType::I32))
+            .collect();
+        let name = registry::art_name(step, &sig);
+        if self.artifacts.contains_key(&name) {
+            return Ok(());
+        }
+        let outputs = infer_outputs(kernel, &inputs)
+            .map_err(|e| anyhow!("registering {name}: {e}"))?;
+        self.artifacts
+            .insert(name.clone(), ArtifactSpec { file: String::new(), inputs, outputs });
+        self.kernels.insert(name, kernel);
+        Ok(())
+    }
+}
+
+/// Output shapes of a kernel given its input specs — the native mirror of
+/// `jax.eval_shape` in `aot.py`.
+fn infer_outputs(kernel: Kernel, ins: &[IoSpec]) -> Result<Vec<IoSpec>> {
+    let d = |i: usize| -> Result<&Vec<usize>> {
+        ins.get(i)
+            .map(|s| &s.dims)
+            .ok_or_else(|| anyhow!("kernel needs input {i}, got {}", ins.len()))
+    };
+    Ok(match kernel {
+        Kernel::EmbedFwd => {
+            let (ids, tok) = (d(0)?, d(1)?);
+            vec![fio(&[ids[0] * ids[1], tok[1]])]
+        }
+        Kernel::EmbedBwd => vec![fio(d(1)?), fio(d(2)?)],
+        Kernel::LnFwd => vec![fio(d(0)?)],
+        Kernel::LnBwd => vec![fio(d(0)?), fio(d(1)?), fio(d(2)?)],
+        Kernel::LinearFwd | Kernel::GeluLinearFwd => {
+            let (x, w) = (d(0)?, d(1)?);
+            vec![fio(&[x[0], w[1]])]
+        }
+        Kernel::LinearBwd | Kernel::GeluLinearBwd => {
+            vec![fio(d(0)?), fio(d(1)?), fio(d(2)?)]
+        }
+        Kernel::Add | Kernel::BiasAdd | Kernel::SoftmaxFwd | Kernel::SoftmaxBwd => {
+            vec![fio(d(0)?)]
+        }
+        Kernel::ToHeads { b, z, a } => {
+            let x = d(0)?;
+            vec![fio(&[b, z, x[0] / b, a])]
+        }
+        Kernel::FromHeads => {
+            let x = d(0)?;
+            vec![fio(&[x[0] * x[2], x[1] * x[3]])]
+        }
+        Kernel::QkvProj { b, z, a } => {
+            let x = d(0)?;
+            let hs = fio(&[b, z, x[0] / b, a]);
+            vec![hs.clone(), hs.clone(), hs]
+        }
+        Kernel::QkvProjBwd => {
+            let (x, w) = (d(0)?, d(1)?);
+            let za = w[1];
+            vec![
+                fio(x),
+                fio(&[w[0], za]),
+                fio(&[za]),
+                fio(&[w[0], za]),
+                fio(&[za]),
+                fio(&[w[0], za]),
+                fio(&[za]),
+            ]
+        }
+        Kernel::AddLnFwd => vec![fio(d(0)?), fio(d(0)?)],
+        Kernel::MlpFwd => vec![fio(d(0)?)],
+        Kernel::MlpBwd => {
+            vec![fio(d(0)?), fio(d(1)?), fio(d(2)?), fio(d(3)?), fio(d(4)?)]
+        }
+        Kernel::ScoresStep | Kernel::AttnDpStep => {
+            let (q, k) = (d(0)?, d(1)?);
+            vec![fio(&[q[0], q[1], q[2], k[2]])]
+        }
+        Kernel::AvStep | Kernel::AttnDqStep | Kernel::AttnDkStep | Kernel::AttnDvStep => {
+            vec![fio(d(2)?)]
+        }
+        Kernel::LinformerProj => {
+            let (e, x) = (d(0)?, d(1)?);
+            vec![fio(&[x[0], x[1], e[0], x[3]])]
+        }
+        Kernel::MlmLoss { .. } => {
+            let (x, w) = (d(0)?, d(1)?);
+            vec![fio(&[]), fio(x), fio(w), fio(&[w[0]])]
+        }
+        Kernel::SopLoss { .. } => {
+            let (x, w) = (d(0)?, d(1)?);
+            vec![fio(&[]), fio(x), fio(w), fio(&[w[0]])]
+        }
+    })
+}
+
+// ------------------------------------------------- aot.py step enumeration
+
+fn attention_steps(reg: &mut Reg, b: usize, z: usize, lc: usize, l_total: usize, a: usize) -> Result<()> {
+    let qs = [b, z, lc, a];
+    let ss = [b, z, lc, lc];
+    let fl = [b, z, lc, l_total];
+    reg.add("scores_step", Kernel::ScoresStep, vec![fio(&qs), fio(&qs)])?;
+    reg.add("softmax_fwd", Kernel::SoftmaxFwd, vec![fio(&fl)])?;
+    reg.add("av_step", Kernel::AvStep, vec![fio(&ss), fio(&qs), fio(&qs)])?;
+    reg.add("attn_dp_step", Kernel::AttnDpStep, vec![fio(&qs), fio(&qs)])?;
+    reg.add("softmax_bwd", Kernel::SoftmaxBwd, vec![fio(&fl), fio(&fl)])?;
+    reg.add("attn_dq_step", Kernel::AttnDqStep, vec![fio(&ss), fio(&qs), fio(&qs)])?;
+    reg.add("attn_dk_step", Kernel::AttnDkStep, vec![fio(&ss), fio(&qs), fio(&qs)])?;
+    reg.add("attn_dv_step", Kernel::AttnDvStep, vec![fio(&ss), fio(&qs), fio(&qs)])?;
+    Ok(())
+}
+
+fn fused_steps(reg: &mut Reg, h: usize, b: usize, lc: usize, z: usize, a: usize, fp: usize) -> Result<()> {
+    let m = b * lc;
+    let za = z * a;
+    let qs = [b, z, lc, a];
+    reg.add(
+        &format!("qkv_proj_b{b}"),
+        Kernel::QkvProj { b, z, a },
+        vec![fio(&[m, h]), fio(&[h, za]), fio(&[za]), fio(&[h, za]), fio(&[za]), fio(&[h, za]), fio(&[za])],
+    )?;
+    reg.add(
+        "qkv_proj_bwd",
+        Kernel::QkvProjBwd,
+        vec![fio(&[m, h]), fio(&[h, za]), fio(&[h, za]), fio(&[h, za]), fio(&qs), fio(&qs), fio(&qs)],
+    )?;
+    reg.add(
+        "add_ln_fwd",
+        Kernel::AddLnFwd,
+        vec![fio(&[m, h]), fio(&[m, h]), fio(&[h]), fio(&[h])],
+    )?;
+    reg.add(
+        "mlp_fwd",
+        Kernel::MlpFwd,
+        vec![fio(&[m, h]), fio(&[h, fp]), fio(&[fp]), fio(&[fp, h]), fio(&[h])],
+    )?;
+    reg.add(
+        "mlp_bwd",
+        Kernel::MlpBwd,
+        vec![fio(&[m, h]), fio(&[h, fp]), fio(&[fp]), fio(&[fp, h]), fio(&[h]), fio(&[m, h])],
+    )?;
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn local_steps(
+    reg: &mut Reg,
+    h: usize,
+    v: usize,
+    b: usize,
+    lc: usize,
+    l_global: usize,
+    z: usize,
+    a: usize,
+) -> Result<()> {
+    let m = b * lc;
+    let za = z * a;
+    reg.add("embed_fwd", Kernel::EmbedFwd, vec![iio(&[b, lc]), fio(&[v, h]), fio(&[lc, h])])?;
+    reg.add(
+        "embed_bwd",
+        Kernel::EmbedBwd,
+        vec![iio(&[b, lc]), fio(&[v, h]), fio(&[lc, h]), fio(&[m, h])],
+    )?;
+    reg.add("ln_fwd", Kernel::LnFwd, vec![fio(&[m, h]), fio(&[h]), fio(&[h])])?;
+    reg.add("ln_bwd", Kernel::LnBwd, vec![fio(&[m, h]), fio(&[h]), fio(&[h]), fio(&[m, h])])?;
+    reg.add("linear_fwd", Kernel::LinearFwd, vec![fio(&[m, h]), fio(&[h, za]), fio(&[za])])?;
+    reg.add(
+        "linear_bwd",
+        Kernel::LinearBwd,
+        vec![fio(&[m, h]), fio(&[h, za]), fio(&[za]), fio(&[m, za])],
+    )?;
+    reg.add("linear_fwd", Kernel::LinearFwd, vec![fio(&[m, za]), fio(&[za, h]), fio(&[h])])?;
+    reg.add(
+        "linear_bwd",
+        Kernel::LinearBwd,
+        vec![fio(&[m, za]), fio(&[za, h]), fio(&[h]), fio(&[m, h])],
+    )?;
+    reg.add(&format!("to_heads_b{b}"), Kernel::ToHeads { b, z, a }, vec![fio(&[m, za])])?;
+    reg.add("from_heads", Kernel::FromHeads, vec![fio(&[b, z, lc, a])])?;
+    reg.add("add", Kernel::Add, vec![fio(&[m, h]), fio(&[m, h])])?;
+    reg.add("bias_add", Kernel::BiasAdd, vec![fio(&[m, h]), fio(&[h])])?;
+    reg.add(
+        "mlm_loss",
+        Kernel::MlmLoss { norm: (b * l_global) as f32 },
+        vec![fio(&[m, h]), fio(&[v, h]), fio(&[v]), iio(&[m]), fio(&[m])],
+    )?;
+    reg.add(
+        "sop_loss",
+        Kernel::SopLoss { batch: b, norm: b as f32 },
+        vec![fio(&[m, h]), fio(&[2, h]), fio(&[2]), iio(&[b])],
+    )?;
+    Ok(())
+}
+
+fn mlp_steps(reg: &mut Reg, h: usize, b: usize, lc: usize, fp: usize) -> Result<()> {
+    let m = b * lc;
+    reg.add("gelu_linear_fwd", Kernel::GeluLinearFwd, vec![fio(&[m, h]), fio(&[h, fp]), fio(&[fp])])?;
+    reg.add(
+        "gelu_linear_bwd",
+        Kernel::GeluLinearBwd,
+        vec![fio(&[m, h]), fio(&[h, fp]), fio(&[fp]), fio(&[m, fp])],
+    )?;
+    reg.add("linear_fwd", Kernel::LinearFwd, vec![fio(&[m, fp]), fio(&[fp, h]), fio(&[h])])?;
+    reg.add(
+        "linear_bwd",
+        Kernel::LinearBwd,
+        vec![fio(&[m, fp]), fio(&[fp, h]), fio(&[h]), fio(&[m, h])],
+    )?;
+    Ok(())
+}
+
+fn enumerate_seqpar(reg: &mut Reg, cfg: &NativeConfig) -> Result<()> {
+    let m = &cfg.model;
+    let (h, v) = (m.hidden, m.vocab);
+    let lc = cfg.seq_len / cfg.ring;
+    let (z, a) = (m.heads, m.head_dim);
+    local_steps(reg, h, v, cfg.batch, lc, cfg.seq_len, z, a)?;
+    mlp_steps(reg, h, cfg.batch, lc, m.ffn())?;
+    attention_steps(reg, cfg.batch, z, lc, cfg.seq_len, a)?;
+    fused_steps(reg, h, cfg.batch, lc, z, a, m.ffn())?;
+    Ok(())
+}
+
+fn enumerate_tensorpar(reg: &mut Reg, cfg: &NativeConfig, t: usize) -> Result<()> {
+    let m = &cfg.model;
+    let (h, v, l) = (m.hidden, m.vocab, cfg.seq_len);
+    let zp = m.heads / t;
+    let fp = m.ffn() / t;
+    let a = m.head_dim;
+    local_steps(reg, h, v, cfg.batch, l, l, zp, a)?;
+    mlp_steps(reg, h, cfg.batch, l, fp)?;
+    attention_steps(reg, cfg.batch, zp, l, l, a)?;
+    fused_steps(reg, h, cfg.batch, l, zp, a, fp)?;
+    Ok(())
+}
+
+fn enumerate_linformer(reg: &mut Reg, cfg: &NativeConfig) -> Result<()> {
+    let m = &cfg.model;
+    let lc = cfg.seq_len / cfg.ring;
+    let (z, a, kp) = (m.heads, m.head_dim, cfg.linformer_k);
+    let qs = [cfg.batch, z, lc, a];
+    let ks = [cfg.batch, z, kp, a];
+    let sk = [cfg.batch, z, lc, kp];
+    reg.add("linformer_proj", Kernel::LinformerProj, vec![fio(&[kp, lc]), fio(&qs)])?;
+    reg.add("scores_step", Kernel::ScoresStep, vec![fio(&qs), fio(&ks)])?;
+    reg.add("softmax_fwd", Kernel::SoftmaxFwd, vec![fio(&sk)])?;
+    reg.add("av_step", Kernel::AvStep, vec![fio(&sk), fio(&ks), fio(&qs)])?;
+    Ok(())
+}
+
+// ----------------------------------------------------------------- backend
+
+impl NativeBackend {
+    pub fn new(cfg: NativeConfig) -> Result<NativeBackend> {
+        let m = &cfg.model;
+        if cfg.ring == 0 || cfg.tp == 0 || cfg.batch == 0 {
+            bail!("ring/tp/batch must be >= 1");
+        }
+        if cfg.seq_len % cfg.ring != 0 {
+            bail!("seq_len {} not divisible by ring size {}", cfg.seq_len, cfg.ring);
+        }
+        if m.heads % cfg.tp != 0 {
+            bail!("tp {} must divide head count {}", cfg.tp, m.heads);
+        }
+        if m.ffn() % cfg.tp != 0 {
+            bail!("tp {} must divide FFN width {}", cfg.tp, m.ffn());
+        }
+        if m.heads * m.head_dim != m.hidden {
+            bail!("model {}: heads*head_dim != hidden", m.name);
+        }
+        let mut reg = Reg::new();
+        enumerate_seqpar(&mut reg, &cfg)?;
+        enumerate_tensorpar(&mut reg, &cfg, cfg.tp)?;
+        enumerate_tensorpar(&mut reg, &cfg, 1)?;
+        if cfg.linformer_k > 0 {
+            enumerate_linformer(&mut reg, &cfg)?;
+        }
+        let params = model::param_spec(m, cfg.seq_len)
+            .into_iter()
+            .map(|(name, dims)| ParamSpec { name, dims, file: String::new() })
+            .collect();
+        let manifest = Manifest {
+            model: m.name.to_string(),
+            batch: cfg.batch,
+            seq_len: cfg.seq_len,
+            ring: cfg.ring,
+            tp: cfg.tp,
+            linformer_k: cfg.linformer_k,
+            hidden: m.hidden,
+            heads: m.heads,
+            head_dim: m.head_dim,
+            ffn: m.ffn(),
+            layers: m.layers,
+            vocab: m.vocab,
+            seed: cfg.seed as usize,
+            artifacts: reg.artifacts,
+            params,
+            goldens: BTreeMap::new(),
+        };
+        Ok(NativeBackend {
+            manifest,
+            kernels: reg.kernels,
+            stats: RefCell::new(RuntimeStats::default()),
+            used: RefCell::new(BTreeSet::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        *self.stats.borrow()
+    }
+
+    /// Number of distinct kernels dispatched so far (the native analogue
+    /// of the XLA backend's compiled-executable cache).
+    pub fn cached_executables(&self) -> usize {
+        self.used.borrow().len()
+    }
+
+    pub fn call(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest — engine and backend disagree on shapes"))?;
+        validate_inputs(name, spec, inputs)?;
+        let kernel = *self
+            .kernels
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} has no native kernel"))?;
+        let t0 = Instant::now();
+        let out = dispatch(kernel, inputs).map_err(|e| anyhow!("{name}: {e}"))?;
+        if out.len() != spec.outputs.len() {
+            bail!("{name}: kernel returned {} outputs, manifest says {}", out.len(), spec.outputs.len());
+        }
+        for (i, (t, io)) in out.iter().zip(&spec.outputs).enumerate() {
+            if t.shape != io.dims || t.dtype() != io.dtype {
+                bail!(
+                    "{name}: output {i} is {:?}/{:?}, manifest wants {:?}/{:?}",
+                    t.shape, t.dtype(), io.dims, io.dtype
+                );
+            }
+        }
+        {
+            let mut st = self.stats.borrow_mut();
+            st.calls += 1;
+            st.exec_nanos += t0.elapsed().as_nanos() as u64;
+        }
+        if !self.used.borrow().contains(name) {
+            self.used.borrow_mut().insert(name.to_string());
+        }
+        Ok(out)
+    }
+}
+
+// ------------------------------------------------------------ math helpers
+
+/// C[m,n] = A[m,k] @ B[k,n].
+fn mm_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av != 0.0 {
+                let brow = &b[p * n..(p + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// C[m,n] = A[m,k] @ B[n,k]^T.
+fn mm_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut s = 0.0f32;
+            for (&x, &y) in arow.iter().zip(brow) {
+                s += x * y;
+            }
+            out[i * n + j] = s;
+        }
+    }
+    out
+}
+
+/// C[m,n] = A[r,m]^T @ B[r,n] (sum over the shared leading dim `r`).
+fn mm_tn(a: &[f32], b: &[f32], r: usize, m: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for row in 0..r {
+        let arow = &a[row * m..(row + 1) * m];
+        let brow = &b[row * n..(row + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av != 0.0 {
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn colsum(x: &[f32], m: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n];
+    for r in 0..m {
+        for c in 0..n {
+            out[c] += x[r * n + c];
+        }
+    }
+    out
+}
+
+fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (GELU_C0 * (x + GELU_C1 * x * x * x)).tanh())
+}
+
+fn dgelu(x: f32) -> f32 {
+    let u = GELU_C0 * (x + GELU_C1 * x * x * x);
+    let t = u.tanh();
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * GELU_C0 * (1.0 + 3.0 * GELU_C1 * x * x)
+}
+
+/// Leading batch (B*Z) and trailing (rows, cols) of a rank-4 tensor.
+fn bz_split(shape: &[usize]) -> (usize, usize, usize) {
+    (shape[0] * shape[1], shape[2], shape[3])
+}
+
+// ---------------------------------------------------------------- kernels
+
+fn k_linear_fwd(x: &Tensor, w: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (m, k) = (x.shape[0], x.shape[1]);
+    let n = w.shape[1];
+    let mut y = mm_nn(x.f32s()?, w.f32s()?, m, k, n);
+    let bd = b.f32s()?;
+    for r in 0..m {
+        for c in 0..n {
+            y[r * n + c] += bd[c];
+        }
+    }
+    Tensor::from_f32(&[m, n], y)
+}
+
+fn k_linear_bwd(x: &Tensor, w: &Tensor, dy: &Tensor) -> Result<(Tensor, Tensor, Tensor)> {
+    let (m, k) = (x.shape[0], x.shape[1]);
+    let n = w.shape[1];
+    let dyd = dy.f32s()?;
+    let dx = mm_nt(dyd, w.f32s()?, m, n, k);
+    let dw = mm_tn(x.f32s()?, dyd, m, k, n);
+    let db = colsum(dyd, m, n);
+    Ok((
+        Tensor::from_f32(&[m, k], dx)?,
+        Tensor::from_f32(&[k, n], dw)?,
+        Tensor::from_f32(&[n], db)?,
+    ))
+}
+
+fn k_gelu_linear_fwd(x: &Tensor, w: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let mut y = k_linear_fwd(x, w, b)?;
+    for v in y.f32s_mut()? {
+        *v = gelu(*v);
+    }
+    Ok(y)
+}
+
+fn k_gelu_linear_bwd(x: &Tensor, w: &Tensor, b: &Tensor, dy: &Tensor) -> Result<(Tensor, Tensor, Tensor)> {
+    let u = k_linear_fwd(x, w, b)?; // pre-activation, rematerialized
+    let (m, n) = (u.shape[0], u.shape[1]);
+    let ud = u.f32s()?;
+    let dyd = dy.f32s()?;
+    let mut dz = vec![0.0f32; m * n];
+    for i in 0..m * n {
+        dz[i] = dyd[i] * dgelu(ud[i]);
+    }
+    let k = x.shape[1];
+    let dx = mm_nt(&dz, w.f32s()?, m, n, k);
+    let dw = mm_tn(x.f32s()?, &dz, m, k, n);
+    let db = colsum(&dz, m, n);
+    Ok((
+        Tensor::from_f32(&[m, k], dx)?,
+        Tensor::from_f32(&[k, n], dw)?,
+        Tensor::from_f32(&[n], db)?,
+    ))
+}
+
+fn layernorm_rows(x: &[f32], gamma: &[f32], beta: &[f32], m: usize, h: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * h];
+    for r in 0..m {
+        let row = &x[r * h..(r + 1) * h];
+        let mean = row.iter().sum::<f32>() / h as f32;
+        let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / h as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        let orow = &mut out[r * h..(r + 1) * h];
+        for c in 0..h {
+            orow[c] = (row[c] - mean) * inv * gamma[c] + beta[c];
+        }
+    }
+    out
+}
+
+fn k_ln_fwd(x: &Tensor, g: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (m, h) = (x.shape[0], x.shape[1]);
+    let y = layernorm_rows(x.f32s()?, g.f32s()?, b.f32s()?, m, h);
+    Tensor::from_f32(&[m, h], y)
+}
+
+fn k_ln_bwd(x: &Tensor, g: &Tensor, dy: &Tensor) -> Result<(Tensor, Tensor, Tensor)> {
+    let (m, h) = (x.shape[0], x.shape[1]);
+    let xd = x.f32s()?;
+    let gd = g.f32s()?;
+    let dyd = dy.f32s()?;
+    let mut dx = vec![0.0f32; m * h];
+    let mut dgamma = vec![0.0f32; h];
+    let mut dbeta = vec![0.0f32; h];
+    for r in 0..m {
+        let row = &xd[r * h..(r + 1) * h];
+        let dyr = &dyd[r * h..(r + 1) * h];
+        let mean = row.iter().sum::<f32>() / h as f32;
+        let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / h as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        // xhat = (x - mean) * inv;  grad through gamma: hvec = dy * gamma
+        let mut mh = 0.0f32; // mean of hvec
+        let mut mhx = 0.0f32; // mean of hvec * xhat
+        for c in 0..h {
+            let xhat = (row[c] - mean) * inv;
+            let hv = dyr[c] * gd[c];
+            mh += hv;
+            mhx += hv * xhat;
+            dgamma[c] += dyr[c] * xhat;
+            dbeta[c] += dyr[c];
+        }
+        mh /= h as f32;
+        mhx /= h as f32;
+        let dxr = &mut dx[r * h..(r + 1) * h];
+        for c in 0..h {
+            let xhat = (row[c] - mean) * inv;
+            let hv = dyr[c] * gd[c];
+            dxr[c] = (hv - mh - xhat * mhx) * inv;
+        }
+    }
+    Ok((
+        Tensor::from_f32(&[m, h], dx)?,
+        Tensor::from_f32(&[h], dgamma)?,
+        Tensor::from_f32(&[h], dbeta)?,
+    ))
+}
+
+fn k_to_heads(x: &Tensor, b: usize, z: usize, a: usize) -> Result<Tensor> {
+    let m = x.shape[0];
+    let za = x.shape[1];
+    let lc = m / b;
+    let xd = x.f32s()?;
+    let mut out = vec![0.0f32; m * za];
+    for bi in 0..b {
+        for li in 0..lc {
+            for zi in 0..z {
+                let src = (bi * lc + li) * za + zi * a;
+                let dst = ((bi * z + zi) * lc + li) * a;
+                out[dst..dst + a].copy_from_slice(&xd[src..src + a]);
+            }
+        }
+    }
+    Tensor::from_f32(&[b, z, lc, a], out)
+}
+
+fn k_from_heads(x: &Tensor) -> Result<Tensor> {
+    let (b, z, lc, a) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let za = z * a;
+    let xd = x.f32s()?;
+    let mut out = vec![0.0f32; b * lc * za];
+    for bi in 0..b {
+        for zi in 0..z {
+            for li in 0..lc {
+                let src = ((bi * z + zi) * lc + li) * a;
+                let dst = (bi * lc + li) * za + zi * a;
+                out[dst..dst + a].copy_from_slice(&xd[src..src + a]);
+            }
+        }
+    }
+    Tensor::from_f32(&[b * lc, za], out)
+}
+
+fn k_scores(q: &Tensor, k: &Tensor) -> Result<Tensor> {
+    let (bz, lq, a) = bz_split(&q.shape);
+    let lk = k.shape[2];
+    let scale = 1.0 / (a as f32).sqrt();
+    let qd = q.f32s()?;
+    let kd = k.f32s()?;
+    let mut out = vec![0.0f32; bz * lq * lk];
+    for g in 0..bz {
+        let s = mm_nt(&qd[g * lq * a..(g + 1) * lq * a], &kd[g * lk * a..(g + 1) * lk * a], lq, a, lk);
+        let orow = &mut out[g * lq * lk..(g + 1) * lq * lk];
+        for (o, v) in orow.iter_mut().zip(s) {
+            *o = v * scale;
+        }
+    }
+    Tensor::from_f32(&[q.shape[0], q.shape[1], lq, lk], out)
+}
+
+fn k_softmax_fwd(s: &Tensor) -> Result<Tensor> {
+    let w = *s.shape.last().unwrap();
+    let rows = s.numel() / w;
+    let sd = s.f32s()?;
+    let mut out = vec![0.0f32; rows * w];
+    for r in 0..rows {
+        let row = &sd[r * w..(r + 1) * w];
+        let mx = row.iter().fold(f32::NEG_INFINITY, |acc, &v| acc.max(v));
+        let orow = &mut out[r * w..(r + 1) * w];
+        let mut sum = 0.0f32;
+        for c in 0..w {
+            let e = (row[c] - mx).exp();
+            orow[c] = e;
+            sum += e;
+        }
+        for o in orow.iter_mut() {
+            *o /= sum;
+        }
+    }
+    Tensor::from_f32(&s.shape, out)
+}
+
+fn k_softmax_bwd(p: &Tensor, dp: &Tensor) -> Result<Tensor> {
+    let w = *p.shape.last().unwrap();
+    let rows = p.numel() / w;
+    let pd = p.f32s()?;
+    let dpd = dp.f32s()?;
+    let mut out = vec![0.0f32; rows * w];
+    for r in 0..rows {
+        let prow = &pd[r * w..(r + 1) * w];
+        let dprow = &dpd[r * w..(r + 1) * w];
+        let inner: f32 = prow.iter().zip(dprow).map(|(&a, &b)| a * b).sum();
+        let orow = &mut out[r * w..(r + 1) * w];
+        for c in 0..w {
+            orow[c] = prow[c] * (dprow[c] - inner);
+        }
+    }
+    Tensor::from_f32(&p.shape, out)
+}
+
+/// acc + P @ V over the leading B*Z groups.
+fn k_av(p: &Tensor, v: &Tensor, acc: &Tensor) -> Result<Tensor> {
+    let (bz, lq, lk) = bz_split(&p.shape);
+    let a = v.shape[3];
+    let pd = p.f32s()?;
+    let vd = v.f32s()?;
+    let mut out = acc.f32s()?.to_vec();
+    for g in 0..bz {
+        let c = mm_nn(&pd[g * lq * lk..(g + 1) * lq * lk], &vd[g * lk * a..(g + 1) * lk * a], lq, lk, a);
+        let orow = &mut out[g * lq * a..(g + 1) * lq * a];
+        for (o, x) in orow.iter_mut().zip(c) {
+            *o += x;
+        }
+    }
+    Tensor::from_f32(&acc.shape, out)
+}
+
+/// dP = dO @ V^T over the leading B*Z groups (unscaled).
+fn k_attn_dp(d_out: &Tensor, v: &Tensor) -> Result<Tensor> {
+    let (bz, lq, a) = bz_split(&d_out.shape);
+    let lk = v.shape[2];
+    let dd = d_out.f32s()?;
+    let vd = v.f32s()?;
+    let mut out = vec![0.0f32; bz * lq * lk];
+    for g in 0..bz {
+        let c = mm_nt(&dd[g * lq * a..(g + 1) * lq * a], &vd[g * lk * a..(g + 1) * lk * a], lq, a, lk);
+        out[g * lq * lk..(g + 1) * lq * lk].copy_from_slice(&c);
+    }
+    Tensor::from_f32(&[d_out.shape[0], d_out.shape[1], lq, lk], out)
+}
+
+/// dQ_acc + scale * dS @ K.
+fn k_attn_dq(ds: &Tensor, k: &Tensor, acc: &Tensor) -> Result<Tensor> {
+    let (bz, lq, lk) = bz_split(&ds.shape);
+    let a = k.shape[3];
+    let scale = 1.0 / (a as f32).sqrt();
+    let dsd = ds.f32s()?;
+    let kd = k.f32s()?;
+    let mut out = acc.f32s()?.to_vec();
+    for g in 0..bz {
+        let c = mm_nn(&dsd[g * lq * lk..(g + 1) * lq * lk], &kd[g * lk * a..(g + 1) * lk * a], lq, lk, a);
+        let orow = &mut out[g * lq * a..(g + 1) * lq * a];
+        for (o, x) in orow.iter_mut().zip(c) {
+            *o += scale * x;
+        }
+    }
+    Tensor::from_f32(&acc.shape, out)
+}
+
+/// dK_acc + scale * dS^T @ Q.
+fn k_attn_dk(ds: &Tensor, q: &Tensor, acc: &Tensor) -> Result<Tensor> {
+    let (bz, lq, lk) = bz_split(&ds.shape);
+    let a = q.shape[3];
+    let scale = 1.0 / (a as f32).sqrt();
+    let dsd = ds.f32s()?;
+    let qd = q.f32s()?;
+    let mut out = acc.f32s()?.to_vec();
+    for g in 0..bz {
+        let c = mm_tn(&dsd[g * lq * lk..(g + 1) * lq * lk], &qd[g * lq * a..(g + 1) * lq * a], lq, lk, a);
+        let orow = &mut out[g * lk * a..(g + 1) * lk * a];
+        for (o, x) in orow.iter_mut().zip(c) {
+            *o += scale * x;
+        }
+    }
+    Tensor::from_f32(&acc.shape, out)
+}
+
+/// dV_acc + P^T @ dO.
+fn k_attn_dv(p: &Tensor, d_out: &Tensor, acc: &Tensor) -> Result<Tensor> {
+    let (bz, lq, lk) = bz_split(&p.shape);
+    let a = d_out.shape[3];
+    let pd = p.f32s()?;
+    let dd = d_out.f32s()?;
+    let mut out = acc.f32s()?.to_vec();
+    for g in 0..bz {
+        let c = mm_tn(&pd[g * lq * lk..(g + 1) * lq * lk], &dd[g * lq * a..(g + 1) * lq * a], lq, lk, a);
+        let orow = &mut out[g * lk * a..(g + 1) * lk * a];
+        for (o, x) in orow.iter_mut().zip(c) {
+            *o += x;
+        }
+    }
+    Tensor::from_f32(&acc.shape, out)
+}
+
+fn k_embed_fwd(ids: &Tensor, tok: &Tensor, pos: &Tensor) -> Result<Tensor> {
+    let (b, lc) = (ids.shape[0], ids.shape[1]);
+    let (v, h) = (tok.shape[0], tok.shape[1]);
+    let idd = ids.i32s()?;
+    let td = tok.f32s()?;
+    let pd = pos.f32s()?;
+    let mut out = vec![0.0f32; b * lc * h];
+    for bi in 0..b {
+        for li in 0..lc {
+            let id = idd[bi * lc + li];
+            if id < 0 || id as usize >= v {
+                bail!("token id {id} out of vocab {v}");
+            }
+            let trow = &td[id as usize * h..(id as usize + 1) * h];
+            let prow = &pd[li * h..(li + 1) * h];
+            let orow = &mut out[(bi * lc + li) * h..(bi * lc + li + 1) * h];
+            for c in 0..h {
+                orow[c] = trow[c] + prow[c];
+            }
+        }
+    }
+    Tensor::from_f32(&[b * lc, h], out)
+}
+
+fn k_embed_bwd(ids: &Tensor, tok: &Tensor, pos: &Tensor, dx: &Tensor) -> Result<(Tensor, Tensor)> {
+    let (b, lc) = (ids.shape[0], ids.shape[1]);
+    let (v, h) = (tok.shape[0], tok.shape[1]);
+    let idd = ids.i32s()?;
+    let dxd = dx.f32s()?;
+    let mut dtok = vec![0.0f32; v * h];
+    let mut dpos = vec![0.0f32; lc * h];
+    for bi in 0..b {
+        for li in 0..lc {
+            let id = idd[bi * lc + li];
+            if id < 0 || id as usize >= v {
+                bail!("token id {id} out of vocab {v}");
+            }
+            let drow = &dxd[(bi * lc + li) * h..(bi * lc + li + 1) * h];
+            let trow = &mut dtok[id as usize * h..(id as usize + 1) * h];
+            for c in 0..h {
+                trow[c] += drow[c];
+            }
+            let prow = &mut dpos[li * h..(li + 1) * h];
+            for c in 0..h {
+                prow[c] += drow[c];
+            }
+        }
+    }
+    let _ = pos;
+    Ok((Tensor::from_f32(&[v, h], dtok)?, Tensor::from_f32(&[lc, h], dpos)?))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn k_mlm_loss(
+    x: &Tensor,
+    w: &Tensor,
+    b: &Tensor,
+    labels: &Tensor,
+    mask: &Tensor,
+    norm: f32,
+) -> Result<(Tensor, Tensor, Tensor, Tensor)> {
+    let (m, h) = (x.shape[0], x.shape[1]);
+    let v = w.shape[0];
+    let xd = x.f32s()?;
+    let wd = w.f32s()?;
+    let bd = b.f32s()?;
+    let ld = labels.i32s()?;
+    let md = mask.f32s()?;
+    let mut loss = 0.0f32;
+    let mut dx = vec![0.0f32; m * h];
+    let mut dw = vec![0.0f32; v * h];
+    let mut db = vec![0.0f32; v];
+    let mut logits = vec![0.0f32; v];
+    for r in 0..m {
+        let mk = md[r];
+        if mk == 0.0 {
+            continue; // per_tok is masked out: zero loss AND zero grads
+        }
+        let lab = ld[r];
+        if lab < 0 || lab as usize >= v {
+            bail!("label {lab} out of vocab {v}");
+        }
+        let lab = lab as usize;
+        let xr = &xd[r * h..(r + 1) * h];
+        for j in 0..v {
+            let wr = &wd[j * h..(j + 1) * h];
+            let mut s = bd[j];
+            for (&a, &b) in xr.iter().zip(wr) {
+                s += a * b;
+            }
+            logits[j] = s;
+        }
+        let mx = logits.iter().fold(f32::NEG_INFINITY, |acc, &v| acc.max(v));
+        let sum: f32 = logits.iter().map(|&l| (l - mx).exp()).sum();
+        let lse = mx + sum.ln();
+        loss += (lse - logits[lab]) * mk;
+        let coef = mk / norm;
+        let dxr = &mut dx[r * h..(r + 1) * h];
+        for j in 0..v {
+            let mut g = (logits[j] - lse).exp() * coef; // softmax * coef
+            if j == lab {
+                g -= coef;
+            }
+            db[j] += g;
+            let wr = &wd[j * h..(j + 1) * h];
+            let dwr = &mut dw[j * h..(j + 1) * h];
+            for c in 0..h {
+                dxr[c] += g * wr[c];
+                dwr[c] += g * xr[c];
+            }
+        }
+    }
+    loss /= norm;
+    Ok((
+        Tensor::scalar(loss),
+        Tensor::from_f32(&[m, h], dx)?,
+        Tensor::from_f32(&[v, h], dw)?,
+        Tensor::from_f32(&[v], db)?,
+    ))
+}
+
+fn k_sop_loss(
+    x: &Tensor,
+    w: &Tensor,
+    b: &Tensor,
+    labels: &Tensor,
+    batch: usize,
+    norm: f32,
+) -> Result<(Tensor, Tensor, Tensor, Tensor)> {
+    let (m, h) = (x.shape[0], x.shape[1]);
+    let lc = m / batch;
+    let xd = x.f32s()?;
+    let wd = w.f32s()?;
+    let bd = b.f32s()?;
+    let ld = labels.i32s()?;
+    let mut loss = 0.0f32;
+    let mut dx = vec![0.0f32; m * h];
+    let mut dw = vec![0.0f32; 2 * h];
+    let mut db = vec![0.0f32; 2];
+    for bi in 0..batch {
+        let lab = ld[bi];
+        if !(0..2).contains(&lab) {
+            bail!("SOP label {lab} not in {{0, 1}}");
+        }
+        let lab = lab as usize;
+        let cls = &xd[bi * lc * h..(bi * lc + 1) * h];
+        let mut logits = [bd[0], bd[1]];
+        for j in 0..2 {
+            let wr = &wd[j * h..(j + 1) * h];
+            for (&a, &b) in cls.iter().zip(wr) {
+                logits[j] += a * b;
+            }
+        }
+        let mx = logits[0].max(logits[1]);
+        let sum = (logits[0] - mx).exp() + (logits[1] - mx).exp();
+        let lse = mx + sum.ln();
+        loss += lse - logits[lab];
+        let dxr = &mut dx[bi * lc * h..(bi * lc + 1) * h];
+        for j in 0..2 {
+            let mut g = (logits[j] - lse).exp() / norm;
+            if j == lab {
+                g -= 1.0 / norm;
+            }
+            db[j] += g;
+            let wr = &wd[j * h..(j + 1) * h];
+            let dwr = &mut dw[j * h..(j + 1) * h];
+            for c in 0..h {
+                dxr[c] += g * wr[c];
+                dwr[c] += g * cls[c];
+            }
+        }
+    }
+    loss /= norm;
+    Ok((
+        Tensor::scalar(loss),
+        Tensor::from_f32(&[m, h], dx)?,
+        Tensor::from_f32(&[2, h], dw)?,
+        Tensor::from_f32(&[2], db)?,
+    ))
+}
+
+fn k_linformer_proj(e: &Tensor, x: &Tensor) -> Result<Tensor> {
+    let (kp, lc) = (e.shape[0], e.shape[1]);
+    let (b, z, _lx, a) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let ed = e.f32s()?;
+    let xd = x.f32s()?;
+    let mut out = vec![0.0f32; b * z * kp * a];
+    for g in 0..b * z {
+        let c = mm_nn(ed, &xd[g * lc * a..(g + 1) * lc * a], kp, lc, a);
+        out[g * kp * a..(g + 1) * kp * a].copy_from_slice(&c);
+    }
+    Tensor::from_f32(&[b, z, kp, a], out)
+}
+
+// --------------------------------------------------------------- dispatch
+
+fn dispatch(kernel: Kernel, ins: &[&Tensor]) -> Result<Vec<Tensor>> {
+    Ok(match kernel {
+        Kernel::EmbedFwd => vec![k_embed_fwd(ins[0], ins[1], ins[2])?],
+        Kernel::EmbedBwd => {
+            let (dtok, dpos) = k_embed_bwd(ins[0], ins[1], ins[2], ins[3])?;
+            vec![dtok, dpos]
+        }
+        Kernel::LnFwd => vec![k_ln_fwd(ins[0], ins[1], ins[2])?],
+        Kernel::LnBwd => {
+            let (dx, dg, db) = k_ln_bwd(ins[0], ins[1], ins[3])?;
+            vec![dx, dg, db]
+        }
+        Kernel::LinearFwd => vec![k_linear_fwd(ins[0], ins[1], ins[2])?],
+        Kernel::LinearBwd => {
+            let (dx, dw, db) = k_linear_bwd(ins[0], ins[1], ins[3])?;
+            vec![dx, dw, db]
+        }
+        Kernel::GeluLinearFwd => vec![k_gelu_linear_fwd(ins[0], ins[1], ins[2])?],
+        Kernel::GeluLinearBwd => {
+            let (dx, dw, db) = k_gelu_linear_bwd(ins[0], ins[1], ins[2], ins[3])?;
+            vec![dx, dw, db]
+        }
+        Kernel::Add => {
+            let a = ins[0].f32s()?;
+            let b = ins[1].f32s()?;
+            let out: Vec<f32> = a.iter().zip(b).map(|(&x, &y)| x + y).collect();
+            vec![Tensor::from_f32(&ins[0].shape, out)?]
+        }
+        Kernel::BiasAdd => {
+            let (m, n) = (ins[0].shape[0], ins[0].shape[1]);
+            let y = ins[0].f32s()?;
+            let b = ins[1].f32s()?;
+            let mut out = y.to_vec();
+            for r in 0..m {
+                for c in 0..n {
+                    out[r * n + c] += b[c];
+                }
+            }
+            vec![Tensor::from_f32(&[m, n], out)?]
+        }
+        Kernel::ToHeads { b, z, a } => vec![k_to_heads(ins[0], b, z, a)?],
+        Kernel::FromHeads => vec![k_from_heads(ins[0])?],
+        Kernel::QkvProj { b, z, a } => {
+            let q = k_to_heads(&k_linear_fwd(ins[0], ins[1], ins[2])?, b, z, a)?;
+            let k = k_to_heads(&k_linear_fwd(ins[0], ins[3], ins[4])?, b, z, a)?;
+            let v = k_to_heads(&k_linear_fwd(ins[0], ins[5], ins[6])?, b, z, a)?;
+            vec![q, k, v]
+        }
+        Kernel::QkvProjBwd => {
+            let (x, wq, wk, wv) = (ins[0], ins[1], ins[2], ins[3]);
+            let (m, h) = (x.shape[0], x.shape[1]);
+            let za = wq.shape[1];
+            let mut dx = vec![0.0f32; m * h];
+            let mut outs: Vec<Tensor> = Vec::with_capacity(7);
+            for (w, dhead) in [(wq, ins[4]), (wk, ins[5]), (wv, ins[6])] {
+                let flat = k_from_heads(dhead)?;
+                let fd = flat.f32s()?;
+                let dxp = mm_nt(fd, w.f32s()?, m, za, h);
+                for (o, v) in dx.iter_mut().zip(dxp) {
+                    *o += v;
+                }
+                let dw = mm_tn(x.f32s()?, fd, m, h, za);
+                let db = colsum(fd, m, za);
+                outs.push(Tensor::from_f32(&[h, za], dw)?);
+                outs.push(Tensor::from_f32(&[za], db)?);
+            }
+            let mut res = vec![Tensor::from_f32(&[m, h], dx)?];
+            res.extend(outs);
+            res
+        }
+        Kernel::AddLnFwd => {
+            let a = ins[0].f32s()?;
+            let r = ins[1].f32s()?;
+            let pre: Vec<f32> = a.iter().zip(r).map(|(&x, &y)| x + y).collect();
+            let pre = Tensor::from_f32(&ins[0].shape, pre)?;
+            let y = k_ln_fwd(&pre, ins[2], ins[3])?;
+            vec![y, pre]
+        }
+        Kernel::MlpFwd => {
+            let hmid = k_gelu_linear_fwd(ins[0], ins[1], ins[2])?;
+            vec![k_linear_fwd(&hmid, ins[3], ins[4])?]
+        }
+        Kernel::MlpBwd => {
+            let (x, w1, b1, w2, dy) = (ins[0], ins[1], ins[2], ins[3], ins[5]);
+            let hmid = k_gelu_linear_fwd(x, w1, b1)?; // rematerialized
+            let (dh, dw2, db2) = k_linear_bwd(&hmid, w2, dy)?;
+            let (dx, dw1, db1) = k_gelu_linear_bwd(x, w1, b1, &dh)?;
+            vec![dx, dw1, db1, dw2, db2]
+        }
+        Kernel::ScoresStep => vec![k_scores(ins[0], ins[1])?],
+        Kernel::SoftmaxFwd => vec![k_softmax_fwd(ins[0])?],
+        Kernel::SoftmaxBwd => vec![k_softmax_bwd(ins[0], ins[1])?],
+        Kernel::AvStep => vec![k_av(ins[0], ins[1], ins[2])?],
+        Kernel::AttnDpStep => vec![k_attn_dp(ins[0], ins[1])?],
+        Kernel::AttnDqStep => vec![k_attn_dq(ins[0], ins[1], ins[2])?],
+        Kernel::AttnDkStep => vec![k_attn_dk(ins[0], ins[1], ins[2])?],
+        Kernel::AttnDvStep => vec![k_attn_dv(ins[0], ins[1], ins[2])?],
+        Kernel::LinformerProj => vec![k_linformer_proj(ins[0], ins[1])?],
+        Kernel::MlmLoss { norm } => {
+            let (lo, dx, dw, db) = k_mlm_loss(ins[0], ins[1], ins[2], ins[3], ins[4], norm)?;
+            vec![lo, dx, dw, db]
+        }
+        Kernel::SopLoss { batch, norm } => {
+            let (lo, dx, dw, db) = k_sop_loss(ins[0], ins[1], ins[2], ins[3], batch, norm)?;
+            vec![lo, dx, dw, db]
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randn(shape: &[usize], rng: &mut Rng) -> Tensor {
+        Tensor::randn(shape, 1.0, rng)
+    }
+
+    /// Central finite difference of a scalar-valued function of one input
+    /// tensor, compared against an analytic gradient.
+    fn check_grad<F>(x: &Tensor, analytic: &Tensor, f: F, tol: f32)
+    where
+        F: Fn(&Tensor) -> f32,
+    {
+        let eps = 1e-2f32;
+        let n = x.numel();
+        // probe a handful of coordinates, not all (speed)
+        let stride = (n / 17).max(1);
+        for i in (0..n).step_by(stride) {
+            let mut xp = x.clone();
+            xp.f32s_mut().unwrap()[i] += eps;
+            let mut xm = x.clone();
+            xm.f32s_mut().unwrap()[i] -= eps;
+            let fd = (f(&xp) - f(&xm)) / (2.0 * eps);
+            let an = analytic.f32s().unwrap()[i];
+            assert!(
+                (fd - an).abs() < tol * (1.0 + an.abs()),
+                "coord {i}: finite-diff {fd} vs analytic {an}"
+            );
+        }
+    }
+
+    #[test]
+    fn linear_bwd_matches_finite_difference() {
+        let mut rng = Rng::new(7);
+        let x = randn(&[3, 4], &mut rng);
+        let w = randn(&[4, 5], &mut rng);
+        let b = randn(&[5], &mut rng);
+        let dy = randn(&[3, 5], &mut rng);
+        let (dx, dw, db) = k_linear_bwd(&x, &w, &dy).unwrap();
+        // scalar objective: sum(linear(x, w, b) * dy)
+        let obj_x = |t: &Tensor| {
+            let y = k_linear_fwd(t, &w, &b).unwrap();
+            y.f32s().unwrap().iter().zip(dy.f32s().unwrap()).map(|(&a, &g)| a * g).sum()
+        };
+        check_grad(&x, &dx, obj_x, 1e-2);
+        let obj_w = |t: &Tensor| {
+            let y = k_linear_fwd(&x, t, &b).unwrap();
+            y.f32s().unwrap().iter().zip(dy.f32s().unwrap()).map(|(&a, &g)| a * g).sum()
+        };
+        check_grad(&w, &dw, obj_w, 1e-2);
+        let obj_b = |t: &Tensor| {
+            let y = k_linear_fwd(&x, &w, t).unwrap();
+            y.f32s().unwrap().iter().zip(dy.f32s().unwrap()).map(|(&a, &g)| a * g).sum()
+        };
+        check_grad(&b, &db, obj_b, 1e-2);
+    }
+
+    #[test]
+    fn ln_bwd_matches_finite_difference() {
+        let mut rng = Rng::new(11);
+        let x = randn(&[4, 8], &mut rng);
+        let g = randn(&[8], &mut rng);
+        let be = randn(&[8], &mut rng);
+        let dy = randn(&[4, 8], &mut rng);
+        let (dx, dgamma, dbeta) = k_ln_bwd(&x, &g, &dy).unwrap();
+        let obj = |t: &Tensor| -> f32 {
+            let y = k_ln_fwd(t, &g, &be).unwrap();
+            y.f32s().unwrap().iter().zip(dy.f32s().unwrap()).map(|(&a, &gg)| a * gg).sum()
+        };
+        check_grad(&x, &dx, obj, 2e-2);
+        let obj_g = |t: &Tensor| -> f32 {
+            let y = k_ln_fwd(&x, t, &be).unwrap();
+            y.f32s().unwrap().iter().zip(dy.f32s().unwrap()).map(|(&a, &gg)| a * gg).sum()
+        };
+        check_grad(&g, &dgamma, obj_g, 2e-2);
+        let obj_b = |t: &Tensor| -> f32 {
+            let y = k_ln_fwd(&x, &g, t).unwrap();
+            y.f32s().unwrap().iter().zip(dy.f32s().unwrap()).map(|(&a, &gg)| a * gg).sum()
+        };
+        check_grad(&be, &dbeta, obj_b, 2e-2);
+    }
+
+    #[test]
+    fn mlp_bwd_matches_finite_difference() {
+        let mut rng = Rng::new(13);
+        let x = randn(&[3, 4], &mut rng);
+        let w1 = randn(&[4, 6], &mut rng);
+        let b1 = randn(&[6], &mut rng);
+        let w2 = randn(&[6, 4], &mut rng);
+        let b2 = randn(&[4], &mut rng);
+        let dy = randn(&[3, 4], &mut rng);
+        let outs = dispatch(Kernel::MlpBwd, &[&x, &w1, &b1, &w2, &b2, &dy]).unwrap();
+        let fwd = |x: &Tensor, w1: &Tensor, b1: &Tensor, w2: &Tensor, b2: &Tensor| -> f32 {
+            let h = k_gelu_linear_fwd(x, w1, b1).unwrap();
+            let y = k_linear_fwd(&h, w2, b2).unwrap();
+            y.f32s().unwrap().iter().zip(dy.f32s().unwrap()).map(|(&a, &g)| a * g).sum()
+        };
+        check_grad(&x, &outs[0], |t| fwd(t, &w1, &b1, &w2, &b2), 2e-2);
+        check_grad(&w1, &outs[1], |t| fwd(&x, t, &b1, &w2, &b2), 2e-2);
+        check_grad(&b1, &outs[2], |t| fwd(&x, &w1, t, &w2, &b2), 2e-2);
+        check_grad(&w2, &outs[3], |t| fwd(&x, &w1, &b1, t, &b2), 2e-2);
+        check_grad(&b2, &outs[4], |t| fwd(&x, &w1, &b1, &w2, t), 2e-2);
+    }
+
+    #[test]
+    fn softmax_bwd_matches_finite_difference() {
+        let mut rng = Rng::new(17);
+        let s = randn(&[1, 1, 3, 5], &mut rng);
+        let dp = randn(&[1, 1, 3, 5], &mut rng);
+        let p = k_softmax_fwd(&s).unwrap();
+        let ds = k_softmax_bwd(&p, &dp).unwrap();
+        let obj = |t: &Tensor| -> f32 {
+            let p = k_softmax_fwd(t).unwrap();
+            p.f32s().unwrap().iter().zip(dp.f32s().unwrap()).map(|(&a, &g)| a * g).sum()
+        };
+        check_grad(&s, &ds, obj, 2e-2);
+    }
+
+    #[test]
+    fn mlm_loss_grads_match_finite_difference() {
+        let mut rng = Rng::new(19);
+        let (m, h, v) = (4usize, 6usize, 9usize);
+        let x = randn(&[m, h], &mut rng);
+        let w = randn(&[v, h], &mut rng);
+        let b = randn(&[v], &mut rng);
+        let labels = Tensor::from_i32(&[m], vec![1, 4, 0, 7]).unwrap();
+        let mask = Tensor::from_f32(&[m], vec![1.0, 0.0, 1.0, 1.0]).unwrap();
+        let norm = 8.0f32;
+        let (_, dx, dw, db) = k_mlm_loss(&x, &w, &b, &labels, &mask, norm).unwrap();
+        let loss_of = |x: &Tensor, w: &Tensor, b: &Tensor| -> f32 {
+            k_mlm_loss(x, w, b, &labels, &mask, norm).unwrap().0.scalar_f32().unwrap()
+        };
+        check_grad(&x, &dx, |t| loss_of(t, &w, &b), 2e-2);
+        check_grad(&w, &dw, |t| loss_of(&x, t, &b), 2e-2);
+        check_grad(&b, &db, |t| loss_of(&x, &w, t), 2e-2);
+    }
+
+    #[test]
+    fn sop_loss_grads_match_finite_difference() {
+        let mut rng = Rng::new(23);
+        let (batch, lc, h) = (2usize, 3usize, 5usize);
+        let x = randn(&[batch * lc, h], &mut rng);
+        let w = randn(&[2, h], &mut rng);
+        let b = randn(&[2], &mut rng);
+        let labels = Tensor::from_i32(&[batch], vec![1, 0]).unwrap();
+        let (_, dx, dw, db) = k_sop_loss(&x, &w, &b, &labels, batch, batch as f32).unwrap();
+        let loss_of = |x: &Tensor, w: &Tensor, b: &Tensor| -> f32 {
+            k_sop_loss(x, w, b, &labels, batch, batch as f32).unwrap().0.scalar_f32().unwrap()
+        };
+        check_grad(&x, &dx, |t| loss_of(t, &w, &b), 2e-2);
+        check_grad(&w, &dw, |t| loss_of(&x, t, &b), 2e-2);
+        check_grad(&b, &db, |t| loss_of(&x, &w, t), 2e-2);
+    }
+
+    #[test]
+    fn to_heads_from_heads_roundtrip() {
+        let mut rng = Rng::new(29);
+        let (b, z, lc, a) = (2usize, 3usize, 4usize, 5usize);
+        let x = randn(&[b * lc, z * a], &mut rng);
+        let heads = k_to_heads(&x, b, z, a).unwrap();
+        assert_eq!(heads.shape, vec![b, z, lc, a]);
+        let back = k_from_heads(&heads).unwrap();
+        assert_eq!(back, x);
+    }
+
+    #[test]
+    fn backend_registers_and_validates() {
+        let be = NativeBackend::new(NativeConfig::tiny()).unwrap();
+        assert!(!be.manifest().artifacts.is_empty());
+        assert!(be.call("nonexistent__1x1", &[]).unwrap_err().to_string().contains("not in manifest"));
+        // wrong arity on a real artifact
+        let (name, _) = be.manifest().artifacts.iter().next().unwrap();
+        let name = name.clone();
+        let err = be.call(&name, &[]).unwrap_err().to_string();
+        assert!(err.contains("inputs"), "{err}");
+    }
+
+    #[test]
+    fn embed_roundtrip_grads() {
+        // dtok scatters exactly the rows of dx; dpos sums over batch
+        let ids = Tensor::from_i32(&[2, 2], vec![1, 0, 1, 2]).unwrap();
+        let tok = Tensor::zeros(&[3, 2]);
+        let pos = Tensor::zeros(&[2, 2]);
+        let dx = Tensor::from_f32(&[4, 2], (0..8).map(|i| i as f32).collect()).unwrap();
+        let (dtok, dpos) = k_embed_bwd(&ids, &tok, &pos, &dx).unwrap();
+        // id 1 appears at rows 0 and 2 of dx
+        assert_eq!(dtok.f32s().unwrap(), &[2.0, 3.0, 4.0 + 0.0, 5.0 + 1.0, 6.0, 7.0]);
+        // position 0 rows: 0 and 2; position 1 rows: 1 and 3
+        assert_eq!(dpos.f32s().unwrap(), &[0.0 + 4.0, 1.0 + 5.0, 2.0 + 6.0, 3.0 + 7.0]);
+    }
+}

@@ -1,0 +1,179 @@
+//! PJRT executor: load the AOT artifacts and execute them (feature
+//! `backend-xla`).
+//!
+//! `aot.py` lowers every L2 step function to HLO **text** (xla_extension
+//! 0.5.1 rejects jax>=0.5 serialized protos — 64-bit instruction ids; the
+//! text parser reassigns ids) and writes `manifest.json` describing each
+//! artifact's input/output shapes.  This module:
+//!
+//! * parses the manifest ([`Manifest`]),
+//! * compiles artifacts on the PJRT CPU client **lazily** and caches the
+//!   loaded executables (one compile per artifact per process, ever),
+//! * converts between host [`Tensor`]s and `xla::Literal`s,
+//! * validates every call against the manifest shapes — a shape mismatch
+//!   is an orchestration bug and fails loudly with the artifact name.
+//!
+//! The default build links an offline stub of the `xla` crate (see
+//! `rust/xla-stub/`); point the `xla` dependency at a real xla-rs checkout
+//! to execute HLO for real.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::{validate_inputs, IoSpec, Manifest, RuntimeStats};
+use crate::tensor::{DType, TData, Tensor};
+
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl XlaRuntime {
+    /// Open the artifact directory (must contain `manifest.json`).
+    pub fn open(dir: &Path) -> Result<XlaRuntime> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        Ok(XlaRuntime {
+            client,
+            manifest,
+            dir: dir.to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        *self.stats.borrow()
+    }
+
+    /// Number of distinct executables compiled so far.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest — re-run `make artifacts` with matching config"))?;
+        let path = self.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e}"))?;
+        let exe = Rc::new(exe);
+        {
+            let mut st = self.stats.borrow_mut();
+            st.compiles += 1;
+            st.compile_nanos += t0.elapsed().as_nanos() as u64;
+        }
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute artifact `name` on `inputs`; returns the output tuple.
+    pub fn call(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
+            .clone();
+        validate_inputs(name, &spec, inputs)?;
+        let exe = self.executable(name)?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| to_literal(t))
+            .collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {name}: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e}"))?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.calls += 1;
+            st.exec_nanos += t0.elapsed().as_nanos() as u64;
+        }
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {name}: {e}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "{name}: artifact returned {} outputs, manifest says {}",
+                parts.len(),
+                spec.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&spec.outputs)
+            .map(|(lit, io)| from_literal(&lit, io))
+            .collect()
+    }
+}
+
+fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    // Single-copy path: build the literal directly at its final shape
+    // (§Perf iteration 1 — the vec1+reshape route copied twice and cost
+    // ~8% of step time at bert-tiny; see EXPERIMENTS.md §Perf).
+    let (ty, bytes): (xla::ElementType, &[u8]) = match &t.data {
+        TData::F32(v) => (xla::ElementType::F32, bytemuck_f32(v)),
+        TData::I32(v) => (xla::ElementType::S32, bytemuck_i32(v)),
+    };
+    xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, bytes)
+        .map_err(|e| anyhow!("literal for shape {:?}: {e}", t.shape))
+}
+
+fn bytemuck_f32(v: &[f32]) -> &[u8] {
+    // safe: f32 has no padding/invalid bit patterns as bytes
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn bytemuck_i32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn from_literal(lit: &xla::Literal, io: &IoSpec) -> Result<Tensor> {
+    match io.dtype {
+        DType::F32 => {
+            let v = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("literal -> f32 vec: {e}"))?;
+            Tensor::from_f32(&io.dims, v)
+        }
+        DType::I32 => {
+            let v = lit
+                .to_vec::<i32>()
+                .map_err(|e| anyhow!("literal -> i32 vec: {e}"))?;
+            Tensor::from_i32(&io.dims, v)
+        }
+    }
+}

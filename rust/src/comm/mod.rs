@@ -34,6 +34,8 @@ pub enum CommKind {
     AllReduce,
     /// All-gather (pipeline boundary in Megatron's scheme).
     AllGather,
+    /// Root-to-all replication (parameter init / checkpoint restore).
+    Broadcast,
     /// Scatter/split (pipeline boundary split before transmit).
     Scatter,
     /// Pipeline stage-to-stage activation send.
@@ -46,6 +48,7 @@ pub struct Meter {
     pub ring_p2p_bytes: AtomicU64,
     pub all_reduce_bytes: AtomicU64,
     pub all_gather_bytes: AtomicU64,
+    pub broadcast_bytes: AtomicU64,
     pub scatter_bytes: AtomicU64,
     pub pipeline_bytes: AtomicU64,
     pub ops: AtomicU64,
@@ -66,6 +69,7 @@ impl Meter {
             CommKind::RingP2p => &self.ring_p2p_bytes,
             CommKind::AllReduce => &self.all_reduce_bytes,
             CommKind::AllGather => &self.all_gather_bytes,
+            CommKind::Broadcast => &self.broadcast_bytes,
             CommKind::Scatter => &self.scatter_bytes,
             CommKind::Pipeline => &self.pipeline_bytes,
         }
@@ -79,6 +83,7 @@ impl Meter {
         self.get(CommKind::RingP2p)
             + self.get(CommKind::AllReduce)
             + self.get(CommKind::AllGather)
+            + self.get(CommKind::Broadcast)
             + self.get(CommKind::Scatter)
             + self.get(CommKind::Pipeline)
     }
@@ -87,6 +92,7 @@ impl Meter {
         self.ring_p2p_bytes.store(0, Ordering::Relaxed);
         self.all_reduce_bytes.store(0, Ordering::Relaxed);
         self.all_gather_bytes.store(0, Ordering::Relaxed);
+        self.broadcast_bytes.store(0, Ordering::Relaxed);
         self.scatter_bytes.store(0, Ordering::Relaxed);
         self.pipeline_bytes.store(0, Ordering::Relaxed);
         self.ops.store(0, Ordering::Relaxed);
@@ -97,6 +103,7 @@ impl Meter {
             ring_p2p: self.get(CommKind::RingP2p),
             all_reduce: self.get(CommKind::AllReduce),
             all_gather: self.get(CommKind::AllGather),
+            broadcast: self.get(CommKind::Broadcast),
             scatter: self.get(CommKind::Scatter),
             pipeline: self.get(CommKind::Pipeline),
             ops: self.ops.load(Ordering::Relaxed),
@@ -109,6 +116,7 @@ pub struct MeterSnapshot {
     pub ring_p2p: u64,
     pub all_reduce: u64,
     pub all_gather: u64,
+    pub broadcast: u64,
     pub scatter: u64,
     pub pipeline: u64,
     pub ops: u64,
@@ -116,7 +124,12 @@ pub struct MeterSnapshot {
 
 impl MeterSnapshot {
     pub fn total(&self) -> u64 {
-        self.ring_p2p + self.all_reduce + self.all_gather + self.scatter + self.pipeline
+        self.ring_p2p
+            + self.all_reduce
+            + self.all_gather
+            + self.broadcast
+            + self.scatter
+            + self.pipeline
     }
 }
 
@@ -195,7 +208,9 @@ impl Fabric {
         Ok(())
     }
 
-    /// Broadcast from `root` to all (metered as (n-1)*C).
+    /// Broadcast from `root` to all (metered as (n-1)*C under its own
+    /// [`CommKind::Broadcast`] counter so collective accounting never
+    /// conflates it with all-gather traffic).
     pub fn broadcast(&self, slots: &mut [Tensor], root: usize) -> Result<()> {
         if slots.len() != self.n {
             bail!("broadcast: {} slots for {} devices", slots.len(), self.n);
@@ -213,7 +228,7 @@ impl Fabric {
                 *s = src.clone();
             }
         }
-        self.meter.add(CommKind::AllGather, (self.n as u64 - 1) * c);
+        self.meter.add(CommKind::Broadcast, (self.n as u64 - 1) * c);
         Ok(())
     }
 
@@ -296,12 +311,16 @@ mod tests {
     #[test]
     fn broadcast_replicates_root() {
         let m = Meter::new();
-        let f = Fabric::new(3, m);
+        let f = Fabric::new(3, m.clone());
         let mut s = slots(3, 2);
         f.broadcast(&mut s, 2).unwrap();
         for d in &s {
             assert_eq!(d.f32s().unwrap(), &[3.0, 3.0]);
         }
+        // metered under its own counter: (n-1) * C bytes, no all-gather
+        assert_eq!(m.get(CommKind::Broadcast), 2 * 2 * 4);
+        assert_eq!(m.get(CommKind::AllGather), 0);
+        assert_eq!(m.snapshot().broadcast, 2 * 2 * 4);
     }
 
     #[test]

@@ -4,6 +4,7 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
+use crate::backend::native::NativeConfig;
 use crate::comm::{Fabric, Meter};
 use crate::model::params::ParamStore;
 use crate::parallel::sequence::SeqParEngine;
@@ -23,30 +24,81 @@ USAGE:
 
 COMMANDS:
   info      print manifest + runtime summary
-  verify    run the rust engines against the python-exported goldens
+  verify    check RSA == serial == tensor-parallel (and goldens, if any)
   train     train with --engine seq|tensor|serial (Fig. 6 convergence)
   sweep     regenerate a paper figure/table via the cluster simulator
   help      this text
 
+BACKEND FLAGS:
+  --backend MODE      native | xla | auto (default auto: xla when
+                      artifacts/manifest.json exists and the build has the
+                      backend-xla feature, otherwise native)
+  --artifacts DIR     artifact directory for the xla backend (default:
+                      artifacts)
+  --model NAME        native run shape (default bert-tiny)
+  --batch N --seq-len N --ring N --tp N --linformer K --init-seed N
+                      native run shape (defaults 2/32/4/2/0/0)
+
 COMMON FLAGS:
-  --artifacts DIR     artifact directory (default: artifacts)
   --steps N           training steps (train; default 50)
   --engine NAME       seq | tensor | serial (train; default seq)
-  --seed N            corpus seed (train; default 7)
+  --seed N            corpus seed (train/verify; default 7)
   --experiment ID     fig3a|fig3b|fig4a|fig4b|fig5a|fig5b|fig7|fig8|fig9|
                       table4|tables (sweep)
-  --model NAME        bert-base | bert-large (sweep; default bert-base)
+  --model NAME        sweep simulates bert-base | bert-large
+                      (default bert-base; distinct from the native
+                      backend's run-shape --model above)
 ";
 
 pub fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.str_or("artifacts", "artifacts"))
 }
 
-pub fn info(args: &Args) -> Result<()> {
+fn native_config(args: &Args) -> Result<NativeConfig> {
+    Ok(NativeConfig {
+        model: crate::model::by_name(args.str_or("model", "bert-tiny"))?,
+        batch: args.usize_or("batch", 2)?,
+        seq_len: args.usize_or("seq-len", 32)?,
+        ring: args.usize_or("ring", 4)?,
+        tp: args.usize_or("tp", 2)?,
+        linformer_k: args.usize_or("linformer", 0)?,
+        seed: args.usize_or("init-seed", 0)? as u64,
+    })
+}
+
+/// Pick a backend per `--backend`; returns the artifact dir when the XLA
+/// path was chosen (params/goldens are loaded from it).
+pub fn open_runtime(args: &Args) -> Result<(Runtime, Option<PathBuf>)> {
     let dir = artifacts_dir(args);
-    let rt = Runtime::open(&dir)?;
-    let m = &rt.manifest;
-    println!("manifest: {}", dir.join("manifest.json").display());
+    let use_xla = match args.str_or("backend", "auto") {
+        "xla" => true,
+        "native" => false,
+        "auto" => dir.join("manifest.json").exists() && cfg!(feature = "backend-xla"),
+        other => bail!("unknown --backend {other:?} (native|xla|auto)"),
+    };
+    if use_xla {
+        Ok((Runtime::open(&dir)?, Some(dir)))
+    } else {
+        Ok((Runtime::native(native_config(args)?)?, None))
+    }
+}
+
+/// Parameters for a runtime: exported `.tensor` files when artifact-backed,
+/// seeded synthetic init otherwise.
+pub fn load_params(rt: &Runtime, dir: &Option<PathBuf>) -> Result<ParamStore> {
+    match dir {
+        Some(d) => ParamStore::load(d, rt.manifest()),
+        None => Ok(ParamStore::synthetic(rt.manifest())),
+    }
+}
+
+pub fn info(args: &Args) -> Result<()> {
+    let (rt, dir) = open_runtime(args)?;
+    let m = rt.manifest();
+    match &dir {
+        Some(d) => println!("backend {}  manifest {}", rt.backend_name(), d.join("manifest.json").display()),
+        None => println!("backend {}  manifest synthesized in-memory", rt.backend_name()),
+    }
     println!(
         "model {}  layers={} H={} Z={} A={} FFN={} V={}",
         m.model, m.layers, m.hidden, m.heads, m.head_dim, m.ffn, m.vocab
@@ -61,11 +113,11 @@ pub fn info(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Load the golden batch exported by aot.py.
+/// Load the golden batch exported by aot.py (artifact-backed runs only).
 pub fn golden_batch(rt: &Runtime, dir: &PathBuf) -> Result<Batch> {
     let g = |name: &str| -> Result<_> {
         let rel = rt
-            .manifest
+            .manifest()
             .goldens
             .get(name)
             .ok_or_else(|| anyhow::anyhow!("golden {name:?} missing"))?;
@@ -79,22 +131,100 @@ pub fn golden_batch(rt: &Runtime, dir: &PathBuf) -> Result<Batch> {
     })
 }
 
-pub fn verify(args: &Args) -> Result<()> {
-    let dir = artifacts_dir(args);
-    let rt = Runtime::open(&dir)?;
-    let params = ParamStore::load(&dir, &rt.manifest)?;
-    let batch = golden_batch(&rt, &dir)?;
-    let n = rt.manifest.ring;
+/// The cross-engine half of `verify`: RSA == serial == tensor-parallel on
+/// losses, every gradient, and the reassembled hidden states.  Runs on
+/// either backend — this is the paper's Fig. 6 / Appendix B claim.
+/// `a` is the seq-par step output (computed once by the caller, shared
+/// with the golden comparison) and `meter` its ring fabric's meter.
+fn verify_cross_engine(
+    rt: &Runtime,
+    params: &ParamStore,
+    batch: &Batch,
+    a: &crate::parallel::StepOutput,
+    meter: &std::sync::Arc<crate::comm::Meter>,
+) -> Result<()> {
+    let m = rt.manifest().clone();
     let tol = 2e-3f32;
 
-    // ---- sequence-parallel engine vs python chain goldens ---------------
-    let meter = Meter::new();
-    let engine = SeqParEngine::new(&rt, Fabric::new(n, meter.clone()))?;
-    let out = engine.forward_backward(&params, &batch)?;
-    let want_loss = io::load(&dir.join(&rt.manifest.goldens["loss"]))?;
+    let serial = TensorParEngine::new(rt, Fabric::new(1, Meter::new()))?;
+    let b = serial.forward_backward(params, batch)?;
+    println!(
+        "seq-par  loss {:.6}   serial loss {:.6}   Δ {:.2e}",
+        a.loss,
+        b.loss,
+        (a.loss - b.loss).abs()
+    );
+    if (a.loss - b.loss).abs() > tol {
+        bail!("seq-par/serial disagree: {} vs {}", a.loss, b.loss);
+    }
+    let mut worst = (String::new(), 0.0f32);
+    for (name, g) in &b.grads.values {
+        let d = ops::max_abs_diff(&a.grads.values[name], g)?;
+        if d > worst.1 {
+            worst = (name.clone(), d);
+        }
+    }
+    println!("seq-par vs serial: worst grad Δ = {:.2e} ({})", worst.1, worst.0);
+    if worst.1 > tol {
+        bail!("grad {} diverged: Δ={}", worst.0, worst.1);
+    }
+
+    // hidden states: seq chunks reassemble to the serial tensor
+    let lc = m.seq_len / m.ring;
+    let chunks3d: Vec<_> = a
+        .hidden
+        .iter()
+        .map(|h| h.clone().reshaped(&[m.batch, lc, m.hidden]).unwrap())
+        .collect();
+    let refs: Vec<_> = chunks3d.iter().collect();
+    let full = ops::concat_dim(&refs, 1)?
+        .reshaped(&[m.batch * m.seq_len, m.hidden])?;
+    let dh = ops::max_abs_diff(&full, &b.hidden[0])?;
+    println!("hidden chunks reassemble: max|Δ| = {dh:.2e}");
+    if dh > tol {
+        bail!("hidden mismatch {dh}");
+    }
+
+    if m.tp > 1 {
+        let tpe = TensorParEngine::new(rt, Fabric::new(m.tp, Meter::new()))?;
+        let c = tpe.forward_backward(params, batch)?;
+        println!(
+            "tensor{}  loss {:.6}   Δ vs serial {:.2e}",
+            m.tp,
+            c.loss,
+            (c.loss - b.loss).abs()
+        );
+        if (c.loss - b.loss).abs() > tol {
+            bail!("tensor-par/serial disagree: {} vs {}", c.loss, b.loss);
+        }
+        for (name, g) in &b.grads.values {
+            let d = ops::max_abs_diff(&c.grads.values[name], g)?;
+            if d > tol {
+                bail!("tensor-par grad {name} diverged: Δ={d}");
+            }
+        }
+    }
+
+    println!(
+        "seq-par comm: ring_p2p={}B all_reduce={}B ({} ops)",
+        meter.get(crate::comm::CommKind::RingP2p),
+        meter.get(crate::comm::CommKind::AllReduce),
+        meter.snapshot().ops,
+    );
+    Ok(())
+}
+
+/// Golden comparison against the python-exported chain outputs (only
+/// available when an artifact directory supplied the goldens).  Reuses
+/// the seq-par step output the caller already computed.
+fn verify_goldens(rt: &Runtime, dir: &PathBuf, out: &crate::parallel::StepOutput) -> Result<()> {
+    let m = rt.manifest().clone();
+    let tol = 2e-3f32;
+    let n = m.ring;
+    let want_loss = io::load(&dir.join(&m.goldens["loss"]))?;
     let wl = want_loss.f32s()?;
     println!(
-        "seq-par  loss {:.6} (golden {:.6})  mlm {:.6}/{:.6}  sop {:.6}/{:.6}",
+        "goldens: loss {:.6} (want {:.6})  mlm {:.6}/{:.6}  sop {:.6}/{:.6}",
         out.loss, wl[0], out.mlm, wl[1], out.sop, wl[2]
     );
     if (out.loss - wl[0]).abs() > tol {
@@ -102,51 +232,56 @@ pub fn verify(args: &Args) -> Result<()> {
     }
     let mut worst = 0.0f32;
     for d in 0..n {
-        let want = io::load(&dir.join(&rt.manifest.goldens[&format!("hidden_dev{d}")]))?;
-        let diff = ops::max_abs_diff(&out.hidden[d], &want)?;
-        worst = worst.max(diff);
+        let want = io::load(&dir.join(&m.goldens[&format!("hidden_dev{d}")]))?;
+        worst = worst.max(ops::max_abs_diff(&out.hidden[d], &want)?);
     }
-    println!("seq-par  hidden max|Δ| = {worst:.2e} over {n} devices");
+    println!("goldens: hidden max|Δ| = {worst:.2e} over {n} devices");
     if worst > tol {
         bail!("hidden mismatch {worst}");
     }
     for gname in ["layer0.wq", "mlm_b", "tok_emb"] {
-        let file = &rt.manifest.goldens[&format!("grad_{}", gname.replace('.', "_"))];
+        let file = &m.goldens[&format!("grad_{}", gname.replace('.', "_"))];
         let want = io::load(&dir.join(file))?;
         let diff = ops::max_abs_diff(&out.grads.values[gname], &want)?;
-        println!("seq-par  grad[{gname}] max|Δ| = {diff:.2e}");
+        println!("goldens: grad[{gname}] max|Δ| = {diff:.2e}");
         if diff > tol {
             bail!("grad {gname} mismatch {diff}");
         }
     }
-    println!(
-        "seq-par  comm: ring_p2p={}B all_reduce={}B ({} ops)",
-        meter.get(crate::comm::CommKind::RingP2p),
-        meter.get(crate::comm::CommKind::AllReduce),
-        meter.snapshot().ops,
-    );
+    Ok(())
+}
 
-    // ---- serial engine must agree with seq-par ---------------------------
-    let serial = TensorParEngine::new(&rt, Fabric::new(1, Meter::new()))?;
-    let sout = serial.forward_backward(&params, &batch)?;
-    println!("serial   loss {:.6}  (Δ vs seq-par {:.2e})", sout.loss, (sout.loss - out.loss).abs());
-    if (sout.loss - out.loss).abs() > tol {
-        bail!("serial/seq-par disagree: {} vs {}", sout.loss, out.loss);
-    }
+pub fn verify(args: &Args) -> Result<()> {
+    let (rt, dir) = open_runtime(args)?;
+    let params = load_params(&rt, &dir)?;
+    println!("backend: {}", rt.backend_name());
 
-    // ---- tensor-parallel engine must agree too ---------------------------
-    let tp = rt.manifest.tp;
-    if tp > 1 {
-        let tpe = TensorParEngine::new(&rt, Fabric::new(tp, Meter::new()))?;
-        let tout = tpe.forward_backward(&params, &batch)?;
-        println!("tensor{tp}  loss {:.6}  (Δ vs serial {:.2e})", tout.loss, (tout.loss - sout.loss).abs());
-        if (tout.loss - sout.loss).abs() > tol {
-            bail!("tensor-par/serial disagree: {} vs {}", tout.loss, sout.loss);
+    // batch: the exported golden batch when available, synthetic otherwise
+    let batch = match &dir {
+        Some(d) if !rt.manifest().goldens.is_empty() => golden_batch(&rt, d)?,
+        _ => {
+            let m = rt.manifest();
+            let seed = args.usize_or("seed", 7)? as u64;
+            Corpus::new(CorpusConfig::new(m.vocab, m.seq_len, m.batch), seed).next_batch()?
+        }
+    };
+
+    // one seq-par step, shared by the golden check and the cross-engine
+    // comparison (it is the expensive half of verify)
+    let meter = Meter::new();
+    let seq = SeqParEngine::new(&rt, Fabric::new(rt.manifest().ring, meter.clone()))?;
+    let seq_out = seq.forward_backward(&params, &batch)?;
+
+    if let Some(d) = &dir {
+        if !rt.manifest().goldens.is_empty() {
+            verify_goldens(&rt, d, &seq_out)?;
         }
     }
+    verify_cross_engine(&rt, &params, &batch, &seq_out, &meter)?;
+
     let stats = rt.stats();
     println!(
-        "runtime: {} executables compiled, {} calls, compile {:.2}s, exec {:.2}s",
+        "runtime: {} executables, {} calls, compile {:.2}s, exec {:.2}s",
         rt.cached_executables(),
         stats.calls,
         stats.compile_nanos as f64 / 1e9,
@@ -157,13 +292,12 @@ pub fn verify(args: &Args) -> Result<()> {
 }
 
 pub fn train(args: &Args) -> Result<()> {
-    let dir = artifacts_dir(args);
-    let rt = Runtime::open(&dir)?;
-    let mut params = ParamStore::load(&dir, &rt.manifest)?;
+    let (rt, dir) = open_runtime(args)?;
+    let mut params = load_params(&rt, &dir)?;
     let steps = args.usize_or("steps", 50)? as u64;
     let seed = args.usize_or("seed", 7)? as u64;
     let engine_name = args.str_or("engine", "seq").to_string();
-    let m = &rt.manifest;
+    let m = rt.manifest().clone();
     let mut corpus = Corpus::new(CorpusConfig::new(m.vocab, m.seq_len, m.batch), seed);
     let cfg = TrainConfig {
         steps,
@@ -192,8 +326,8 @@ pub fn train(args: &Args) -> Result<()> {
     }
     let s = meter.snapshot();
     println!(
-        "comm totals: ring_p2p={} all_reduce={} all_gather={} pipeline={} ({} ops)",
-        s.ring_p2p, s.all_reduce, s.all_gather, s.pipeline, s.ops
+        "comm totals: ring_p2p={} all_reduce={} all_gather={} broadcast={} pipeline={} ({} ops)",
+        s.ring_p2p, s.all_reduce, s.all_gather, s.broadcast, s.pipeline, s.ops
     );
     Ok(())
 }

@@ -1,29 +1,34 @@
 //! # seqpar — Sequence Parallelism from a system perspective
 //!
-//! A rust + JAX + Pallas reproduction of *"Sequence Parallelism: Long
-//! Sequence Training from System Perspective"* (Li et al., ACL 2023).
+//! A rust reproduction of *"Sequence Parallelism: Long Sequence Training
+//! from System Perspective"* (Li et al., ACL 2023) with two interchangeable
+//! execution backends behind one [`runtime::Executor`] contract:
 //!
-//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//! * **native** (default) — ~20 pure-rust f32 kernels matching the manifest
+//!   step signatures, plus a synthetic in-memory manifest and seeded
+//!   parameter init.  Engines, tests and benches run with **zero external
+//!   artifacts**: `cargo test` exercises the full RSA ≡ serial ≡
+//!   tensor-parallel equivalence out of the box.
+//! * **xla-pjrt** (feature `backend-xla`) — the three-layer AOT stack:
+//!   Pallas kernels (`python/compile/kernels/`) and JAX step functions
+//!   (`python/compile/steps.py`) are lowered by `make artifacts` to HLO
+//!   text, which this crate compiles on the PJRT CPU client and
+//!   orchestrates.  Python never runs on the request path.
 //!
-//! * **L1** — Pallas kernels (`python/compile/kernels/`), lowered at build
-//!   time into the HLO artifacts.
-//! * **L2** — JAX step functions (`python/compile/steps.py`) defining the
-//!   per-device computation; `make artifacts` AOT-lowers them to
-//!   `artifacts/*.hlo.txt`.
-//! * **L3** — this crate: loads the artifacts via the PJRT C API and
-//!   orchestrates them across simulated devices with the paper's
-//!   Ring Self-Attention schedule, the Megatron tensor-parallel baseline,
-//!   GPipe-style pipeline parallelism and data parallelism (4D).
-//!
-//! Python never runs on the request path: after `make artifacts` the
-//! binary is self-contained.
+//! Either way the crate is the **coordinator**: it chains step executables
+//! across simulated devices with the paper's Ring Self-Attention schedule,
+//! the Megatron tensor-parallel baseline, GPipe-style pipeline parallelism
+//! and data parallelism (4D).
 //!
 //! Module map (see DESIGN.md for the full inventory):
 //!
 //! * [`tensor`] — host tensors + the SPT1 interchange format
 //! * [`comm`] — the collective fabric (ring P2P, all-reduce, …) + meters
-//! * [`runtime`] — PJRT client, artifact registry, executable cache
-//! * [`model`] — transformer config, parameter store
+//! * [`runtime`] — the [`runtime::Executor`] trait, manifest contract,
+//!   artifact-name registry, and the [`runtime::Runtime`] backend enum
+//! * [`backend`] — the executors: `native` (pure rust) and `xla_pjrt`
+//!   (PJRT artifact runner, feature-gated)
+//! * [`model`] — transformer config, parameter store (+ seeded init)
 //! * [`parallel`] — the engines: sequence (RSA), tensor (Megatron),
 //!   pipeline (GPipe), data; and the 4D topology
 //! * [`train`] — Adam, LR schedule, losses bookkeeping, synthetic corpus
@@ -32,6 +37,7 @@
 //! * [`eval`] — experiment harness regenerating every figure and table
 //! * [`util`] — offline-build substrates: JSON, CLI, PRNG, mini-proptest
 
+pub mod backend;
 pub mod comm;
 pub mod eval;
 pub mod model;

@@ -1,4 +1,5 @@
-//! Parameter store: named tensors + Adam state, loaded from artifacts.
+//! Parameter store: named tensors + Adam state, loaded from artifacts or
+//! synthesized from a seeded deterministic init.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -7,6 +8,7 @@ use anyhow::{anyhow, Result};
 
 use crate::runtime::Manifest;
 use crate::tensor::{io, Tensor};
+use crate::util::rng::Rng;
 
 /// Named parameter set.  Under sequence parallelism all parameters are
 /// replicated (that is the point of the scheme), so one store serves all
@@ -32,6 +34,35 @@ impl ParamStore {
             values.insert(p.name.clone(), t);
         }
         Ok(ParamStore { values })
+    }
+
+    /// Seeded deterministic init from a manifest's parameter inventory —
+    /// the artifact-free mirror of `model.py::init_params`: N(0, 0.02)
+    /// weights, zero biases, unit LayerNorm gains.  Every engine started
+    /// from the same manifest sees identical weights (the Fig. 6
+    /// precondition), no exported `.tensor` files needed.
+    pub fn synthetic(manifest: &Manifest) -> ParamStore {
+        // the manifest's parameter inventory IS the spec (native manifests
+        // fill it from model::param_spec; aot.py exports the same list)
+        let spec: Vec<(String, Vec<usize>)> = manifest
+            .params
+            .iter()
+            .map(|p| (p.name.clone(), p.dims.clone()))
+            .collect();
+        let mut rng = Rng::new(manifest.seed as u64);
+        let mut values = BTreeMap::new();
+        for (name, dims) in spec {
+            let t = if name.ends_with("_g") {
+                let n: usize = dims.iter().product();
+                Tensor::from_f32(&dims, vec![1.0; n]).expect("spec shape")
+            } else if dims.len() == 1 {
+                Tensor::zeros(&dims)
+            } else {
+                Tensor::randn(&dims, 0.02, &mut rng)
+            };
+            values.insert(name, t);
+        }
+        ParamStore { values }
     }
 
     pub fn get(&self, name: &str) -> Result<&Tensor> {
@@ -86,5 +117,22 @@ mod tests {
     fn get_unknown_errors() {
         let s = ParamStore::default();
         assert!(s.get("nope").is_err());
+    }
+
+    #[test]
+    fn synthetic_init_is_deterministic_and_structured() {
+        use crate::backend::native::{NativeBackend, NativeConfig};
+        let be = NativeBackend::new(NativeConfig::tiny()).unwrap();
+        let a = ParamStore::synthetic(be.manifest());
+        let b = ParamStore::synthetic(be.manifest());
+        assert_eq!(a.values.len(), b.values.len());
+        for (name, t) in &a.values {
+            assert_eq!(t, &b.values[name], "param {name} not deterministic");
+        }
+        // LN gains are ones, biases zero, weights non-trivial
+        assert!(a.values["layer0.ln1_g"].f32s().unwrap().iter().all(|&v| v == 1.0));
+        assert!(a.values["layer0.bq"].f32s().unwrap().iter().all(|&v| v == 0.0));
+        assert!(a.values["layer0.wq"].f32s().unwrap().iter().any(|&v| v != 0.0));
+        assert_eq!(a.values["tok_emb"].shape, vec![1024, 128]);
     }
 }

@@ -57,7 +57,9 @@ pub trait Engine {
 }
 
 /// Shared helper: execute a step artifact, resolving the name from the
-/// actual input tensors (mirror of aot.py naming).
+/// actual input tensors (mirror of aot.py naming).  Works against either
+/// backend of the [`Runtime`] enum — the name lookup is what catches a
+/// config mismatch between an engine and the backend's manifest.
 pub(crate) fn call(rt: &Runtime, step: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
     let name = registry::art_name_for(step, inputs);
     rt.call(&name, inputs)

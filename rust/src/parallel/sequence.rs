@@ -62,7 +62,7 @@ pub struct SeqParEngine<'rt> {
 
 impl<'rt> SeqParEngine<'rt> {
     pub fn new(rt: &'rt Runtime, fabric: Fabric) -> Result<SeqParEngine<'rt>> {
-        let m = &rt.manifest;
+        let m = rt.manifest();
         let n = fabric.n;
         if m.seq_len % n != 0 {
             bail!("seq_len {} not divisible by ring size {n}", m.seq_len);
@@ -185,9 +185,13 @@ impl<'rt> SeqParEngine<'rt> {
                 dv_slots[d] =
                     call1(self.rt, "attn_dv_step", &[&p_i, &d_ctx[d], &dv_slots[d]])?;
             }
-            // shift v together with its gradient accumulator; the final
-            // shift (t = n-1) delivers each dV_i home to device i.
-            self.fabric.ring_shift(&mut v_slots)?;
+            // The V chunks only need n-1 shifts (a final rotation would
+            // just return them home, pure wasted traffic); the dV
+            // accumulators take all n — the last shift delivers each dV_i
+            // to its home device (§3.2.2).
+            if t + 1 < n {
+                self.fabric.ring_shift(&mut v_slots)?;
+            }
             self.fabric.ring_shift(&mut dv_slots)?;
         }
         // ---- local softmax backward over full rows ---------------------
@@ -209,7 +213,11 @@ impl<'rt> SeqParEngine<'rt> {
                 dq[d] = call1(self.rt, "attn_dq_step", &[&ds_i, &k_slots[d], &dq[d]])?;
                 dk_slots[d] = call1(self.rt, "attn_dk_step", &[&ds_i, &q[d], &dk_slots[d]])?;
             }
-            self.fabric.ring_shift(&mut k_slots)?;
+            // Same asymmetry as the V pass: K data shifts n-1 times, the
+            // dK accumulators ride all n shifts home.
+            if t + 1 < n {
+                self.fabric.ring_shift(&mut k_slots)?;
+            }
             self.fabric.ring_shift(&mut dk_slots)?;
         }
         Ok((dq, dk_slots, dv_slots))

@@ -56,7 +56,7 @@ pub struct TensorParEngine<'rt> {
 impl<'rt> TensorParEngine<'rt> {
     /// `t == 1` is the serial engine (no splitting, no communication).
     pub fn new(rt: &'rt Runtime, fabric: Fabric) -> Result<TensorParEngine<'rt>> {
-        let m = &rt.manifest;
+        let m = rt.manifest();
         let t = fabric.n;
         if m.heads % t != 0 {
             // This is exactly Megatron's scaling cap the paper exploits

@@ -1,31 +1,32 @@
-//! PJRT runtime: load the AOT artifacts and execute them.
+//! The executor layer: manifest contract + backend dispatch.
 //!
-//! `aot.py` lowers every L2 step function to HLO **text** (xla_extension
-//! 0.5.1 rejects jax>=0.5 serialized protos — 64-bit instruction ids; the
-//! text parser reassigns ids) and writes `manifest.json` describing each
-//! artifact's input/output shapes.  This module:
+//! A *manifest* describes every step artifact's input/output shapes; an
+//! [`Executor`] runs named artifacts against that contract.  Two backends
+//! implement it (see [`crate::backend`]):
 //!
-//! * parses the manifest ([`Manifest`]),
-//! * compiles artifacts on the PJRT CPU client **lazily** and caches the
-//!   loaded executables (one compile per artifact per process, ever),
-//! * converts between host [`Tensor`]s and `xla::Literal`s,
-//! * validates every call against the manifest shapes — a shape mismatch
-//!   is an orchestration bug and fails loudly with the artifact name.
+//! * the **native** backend — pure-rust f32 kernels over a synthetic
+//!   in-memory manifest; the default, needs no external files;
+//! * the **XLA/PJRT** backend (feature `backend-xla`) — compiles the
+//!   `artifacts/*.hlo.txt` lowered by `python/compile/aot.py`.
+//!
+//! [`Runtime`] is the enum the engines hold: one concrete type, either
+//! backend inside.  Every call is validated against the manifest shapes —
+//! a mismatch is an orchestration bug and fails loudly with the artifact
+//! name ([`validate_inputs`]).
 
 pub mod manifest;
 pub mod registry;
 
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::rc::Rc;
-use std::time::Instant;
+use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Result};
 
-pub use manifest::{ArtifactSpec, IoSpec, Manifest};
+pub use manifest::{ArtifactSpec, IoSpec, Manifest, ParamSpec};
 
-use crate::tensor::{DType, TData, Tensor};
+use crate::backend::native::{NativeBackend, NativeConfig};
+#[cfg(feature = "backend-xla")]
+use crate::backend::xla_pjrt::XlaRuntime;
+use crate::tensor::Tensor;
 
 /// Execution statistics (perf pass + tests read these).
 #[derive(Clone, Copy, Debug, Default)]
@@ -36,171 +37,157 @@ pub struct RuntimeStats {
     pub exec_nanos: u64,
 }
 
-pub struct Runtime {
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    dir: PathBuf,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
-    stats: RefCell<RuntimeStats>,
-}
+/// An executor runs manifest-described step artifacts.
+///
+/// The contract every backend upholds: `call` validates inputs against the
+/// manifest entry (arity, dims, dtype) before executing, and the returned
+/// tensors match the entry's output specs exactly.
+pub trait Executor {
+    fn manifest(&self) -> &Manifest;
 
-impl Runtime {
-    /// Open the artifact directory (must contain `manifest.json`).
-    pub fn open(dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(&dir.join("manifest.json"))
-            .with_context(|| format!("loading manifest from {}", dir.display()))?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
-        Ok(Runtime {
-            client,
-            manifest,
-            dir: dir.to_path_buf(),
-            cache: RefCell::new(HashMap::new()),
-            stats: RefCell::new(RuntimeStats::default()),
-        })
-    }
-
-    pub fn stats(&self) -> RuntimeStats {
-        *self.stats.borrow()
-    }
-
-    /// Number of distinct executables compiled so far.
-    pub fn cached_executables(&self) -> usize {
-        self.cache.borrow().len()
-    }
-
-    fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
-            return Ok(e.clone());
-        }
-        let spec = self
-            .manifest
-            .artifacts
-            .get(name)
-            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest — re-run `make artifacts` with matching config"))?;
-        let path = self.dir.join(&spec.file);
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {name}: {e}"))?;
-        let exe = Rc::new(exe);
-        {
-            let mut st = self.stats.borrow_mut();
-            st.compiles += 1;
-            st.compile_nanos += t0.elapsed().as_nanos() as u64;
-        }
-        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
-        Ok(exe)
-    }
-
-    /// Execute artifact `name` on `inputs`; returns the output tuple.
-    pub fn call(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
-        let spec = self
-            .manifest
-            .artifacts
-            .get(name)
-            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
-            .clone();
-        if inputs.len() != spec.inputs.len() {
-            bail!(
-                "{name}: expected {} inputs, got {}",
-                spec.inputs.len(),
-                inputs.len()
-            );
-        }
-        for (i, (t, io)) in inputs.iter().zip(&spec.inputs).enumerate() {
-            if t.shape != io.dims || t.dtype() != io.dtype {
-                bail!(
-                    "{name}: input {i} is {:?}/{:?}, manifest wants {:?}/{:?}",
-                    t.shape, t.dtype(), io.dims, io.dtype
-                );
-            }
-        }
-        let exe = self.executable(name)?;
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| to_literal(t))
-            .collect::<Result<_>>()?;
-        let t0 = Instant::now();
-        let result = exe
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| anyhow!("execute {name}: {e}"))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch {name}: {e}"))?;
-        {
-            let mut st = self.stats.borrow_mut();
-            st.calls += 1;
-            st.exec_nanos += t0.elapsed().as_nanos() as u64;
-        }
-        // aot.py lowers with return_tuple=True: always a tuple.
-        let parts = tuple
-            .to_tuple()
-            .map_err(|e| anyhow!("untuple {name}: {e}"))?;
-        if parts.len() != spec.outputs.len() {
-            bail!(
-                "{name}: artifact returned {} outputs, manifest says {}",
-                parts.len(),
-                spec.outputs.len()
-            );
-        }
-        parts
-            .into_iter()
-            .zip(&spec.outputs)
-            .map(|(lit, io)| from_literal(&lit, io))
-            .collect()
-    }
+    fn call(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>>;
 
     /// Convenience: call an artifact that returns exactly one tensor.
-    pub fn call1(&self, name: &str, inputs: &[&Tensor]) -> Result<Tensor> {
+    fn call1(&self, name: &str, inputs: &[&Tensor]) -> Result<Tensor> {
         let mut out = self.call(name, inputs)?;
         if out.len() != 1 {
             bail!("{name}: expected 1 output, got {}", out.len());
         }
         Ok(out.pop().unwrap())
     }
+
+    fn stats(&self) -> RuntimeStats {
+        RuntimeStats::default()
+    }
+
+    /// Distinct executables compiled / kernels dispatched so far.
+    fn cached_executables(&self) -> usize {
+        0
+    }
 }
 
-fn to_literal(t: &Tensor) -> Result<xla::Literal> {
-    // Single-copy path: build the literal directly at its final shape
-    // (§Perf iteration 1 — the vec1+reshape route copied twice and cost
-    // ~8% of step time at bert-tiny; see EXPERIMENTS.md §Perf).
-    let (ty, bytes): (xla::ElementType, &[u8]) = match &t.data {
-        TData::F32(v) => (xla::ElementType::F32, bytemuck_f32(v)),
-        TData::I32(v) => (xla::ElementType::S32, bytemuck_i32(v)),
-    };
-    xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, bytes)
-        .map_err(|e| anyhow!("literal for shape {:?}: {e}", t.shape))
-}
-
-fn bytemuck_f32(v: &[f32]) -> &[u8] {
-    // safe: f32 has no padding/invalid bit patterns as bytes
-    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
-}
-
-fn bytemuck_i32(v: &[i32]) -> &[u8] {
-    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
-}
-
-fn from_literal(lit: &xla::Literal, io: &IoSpec) -> Result<Tensor> {
-    match io.dtype {
-        DType::F32 => {
-            let v = lit
-                .to_vec::<f32>()
-                .map_err(|e| anyhow!("literal -> f32 vec: {e}"))?;
-            Tensor::from_f32(&io.dims, v)
+/// Shared manifest-shape validation: arity, dims, dtype — the error names
+/// the artifact so orchestration bugs surface immediately.
+pub fn validate_inputs(name: &str, spec: &ArtifactSpec, inputs: &[&Tensor]) -> Result<()> {
+    if inputs.len() != spec.inputs.len() {
+        bail!(
+            "{name}: expected {} inputs, got {}",
+            spec.inputs.len(),
+            inputs.len()
+        );
+    }
+    for (i, (t, io)) in inputs.iter().zip(&spec.inputs).enumerate() {
+        if t.shape != io.dims || t.dtype() != io.dtype {
+            bail!(
+                "{name}: input {i} is {:?}/{:?}, manifest wants {:?}/{:?}",
+                t.shape, t.dtype(), io.dims, io.dtype
+            );
         }
-        DType::I32 => {
-            let v = lit
-                .to_vec::<i32>()
-                .map_err(|e| anyhow!("literal -> i32 vec: {e}"))?;
-            Tensor::from_i32(&io.dims, v)
+    }
+    Ok(())
+}
+
+/// The backend the engines drive: enum dispatch over the executors.
+pub enum Runtime {
+    Native(NativeBackend),
+    #[cfg(feature = "backend-xla")]
+    Xla(XlaRuntime),
+}
+
+impl Runtime {
+    /// Build the artifact-free native backend for a run-shape config.
+    pub fn native(cfg: NativeConfig) -> Result<Runtime> {
+        Ok(Runtime::Native(NativeBackend::new(cfg)?))
+    }
+
+    /// Open an artifact directory on the PJRT backend.
+    #[cfg(feature = "backend-xla")]
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        Ok(Runtime::Xla(XlaRuntime::open(dir)?))
+    }
+
+    /// Without the `backend-xla` feature there is nothing that can execute
+    /// HLO artifacts — fail with a pointer at the two ways out.
+    #[cfg(not(feature = "backend-xla"))]
+    pub fn open(_dir: &Path) -> Result<Runtime> {
+        bail!(
+            "this build has no XLA backend; rebuild with `--features backend-xla` \
+             to load HLO artifacts, or use the native backend (Runtime::native)"
+        )
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        match self {
+            Runtime::Native(_) => "native",
+            #[cfg(feature = "backend-xla")]
+            Runtime::Xla(_) => "xla-pjrt",
         }
+    }
+
+    /// The active backend as a trait object — the single dispatch point;
+    /// every inherent convenience method below routes through it.
+    pub fn backend(&self) -> &dyn Executor {
+        match self {
+            Runtime::Native(b) => b,
+            #[cfg(feature = "backend-xla")]
+            Runtime::Xla(b) => b,
+        }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        self.backend().manifest()
+    }
+
+    pub fn call(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.backend().call(name, inputs)
+    }
+
+    pub fn call1(&self, name: &str, inputs: &[&Tensor]) -> Result<Tensor> {
+        self.backend().call1(name, inputs)
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.backend().stats()
+    }
+
+    pub fn cached_executables(&self) -> usize {
+        self.backend().cached_executables()
+    }
+}
+
+impl Executor for NativeBackend {
+    fn manifest(&self) -> &Manifest {
+        NativeBackend::manifest(self)
+    }
+
+    fn call(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        NativeBackend::call(self, name, inputs)
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        NativeBackend::stats(self)
+    }
+
+    fn cached_executables(&self) -> usize {
+        NativeBackend::cached_executables(self)
+    }
+}
+
+#[cfg(feature = "backend-xla")]
+impl Executor for XlaRuntime {
+    fn manifest(&self) -> &Manifest {
+        XlaRuntime::manifest(self)
+    }
+
+    fn call(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        XlaRuntime::call(self, name, inputs)
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        XlaRuntime::stats(self)
+    }
+
+    fn cached_executables(&self) -> usize {
+        XlaRuntime::cached_executables(self)
     }
 }

@@ -4,9 +4,12 @@
 //! parallelism computing THE SAME training step as the baselines.  These
 //! tests drive all engines over random batches and assert losses, hidden
 //! states, and every parameter gradient agree — not just trends.
+//!
+//! They run on the native backend by default (no artifacts needed; this is
+//! what CI executes).  The artifact-backed variant of the same checks is
+//! compiled behind the `backend-xla` feature at the bottom of the file.
 
-use std::path::PathBuf;
-
+use seqpar::backend::native::NativeConfig;
 use seqpar::comm::{Fabric, Meter};
 use seqpar::model::params::ParamStore;
 use seqpar::parallel::sequence::SeqParEngine;
@@ -17,13 +20,12 @@ use seqpar::tensor::ops;
 use seqpar::train::data::{Corpus, CorpusConfig};
 use seqpar::train::optim::{Adam, AdamConfig};
 
-fn artifacts() -> Option<PathBuf> {
-    let dir = PathBuf::from("artifacts");
-    dir.join("manifest.json").exists().then_some(dir)
+fn runtime() -> Runtime {
+    Runtime::native(NativeConfig::tiny()).unwrap()
 }
 
 fn batch_for(rt: &Runtime, seed: u64) -> Batch {
-    let m = &rt.manifest;
+    let m = rt.manifest();
     Corpus::new(CorpusConfig::new(m.vocab, m.seq_len, m.batch), seed)
         .next_batch()
         .unwrap()
@@ -33,17 +35,14 @@ const TOL: f32 = 2e-3;
 
 #[test]
 fn engines_agree_on_losses_and_grads() {
-    let Some(dir) = artifacts() else {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    };
-    let rt = Runtime::open(&dir).unwrap();
-    let params = ParamStore::load(&dir, &rt.manifest).unwrap();
+    let rt = runtime();
+    let params = ParamStore::synthetic(rt.manifest());
     for seed in [10u64, 11, 12] {
         let batch = batch_for(&rt, seed);
-        let seq = SeqParEngine::new(&rt, Fabric::new(rt.manifest.ring, Meter::new())).unwrap();
+        let m = rt.manifest().clone();
+        let seq = SeqParEngine::new(&rt, Fabric::new(m.ring, Meter::new())).unwrap();
         let serial = TensorParEngine::new(&rt, Fabric::new(1, Meter::new())).unwrap();
-        let tp = TensorParEngine::new(&rt, Fabric::new(rt.manifest.tp, Meter::new())).unwrap();
+        let tp = TensorParEngine::new(&rt, Fabric::new(m.tp, Meter::new())).unwrap();
 
         let a = seq.forward_backward(&params, &batch).unwrap();
         let b = serial.forward_backward(&params, &batch).unwrap();
@@ -60,7 +59,6 @@ fn engines_agree_on_losses_and_grads() {
         }
 
         // hidden states: seq chunks reassemble to the serial tensor
-        let m = &rt.manifest;
         let lc = m.seq_len / m.ring;
         let chunks3d: Vec<_> = a
             .hidden
@@ -81,14 +79,11 @@ fn engines_agree_on_losses_and_grads() {
 fn sgd_trajectories_stay_locked() {
     // Three Adam steps with each engine from the same init: parameters
     // must remain identical (the strong version of Fig. 6).
-    let Some(dir) = artifacts() else {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    };
-    let rt = Runtime::open(&dir).unwrap();
-    let mut p_seq = ParamStore::load(&dir, &rt.manifest).unwrap();
-    let mut p_ser = ParamStore::load(&dir, &rt.manifest).unwrap();
-    let seq = SeqParEngine::new(&rt, Fabric::new(rt.manifest.ring, Meter::new())).unwrap();
+    let rt = runtime();
+    let mut p_seq = ParamStore::synthetic(rt.manifest());
+    let mut p_ser = ParamStore::synthetic(rt.manifest());
+    let m = rt.manifest().clone();
+    let seq = SeqParEngine::new(&rt, Fabric::new(m.ring, Meter::new())).unwrap();
     let serial = TensorParEngine::new(&rt, Fabric::new(1, Meter::new())).unwrap();
     let mut adam_a = Adam::new(&p_seq, AdamConfig::default());
     let mut adam_b = Adam::new(&p_ser, AdamConfig::default());
@@ -118,13 +113,10 @@ fn sgd_trajectories_stay_locked() {
 fn data_parallel_composes_with_sequence_parallel() {
     // 4D story: DP(2) over SP(ring) — averaged grads equal the average of
     // two independent SP steps.
-    let Some(dir) = artifacts() else {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    };
-    let rt = Runtime::open(&dir).unwrap();
-    let params = ParamStore::load(&dir, &rt.manifest).unwrap();
-    let seq = SeqParEngine::new(&rt, Fabric::new(rt.manifest.ring, Meter::new())).unwrap();
+    let rt = runtime();
+    let params = ParamStore::synthetic(rt.manifest());
+    let m = rt.manifest().clone();
+    let seq = SeqParEngine::new(&rt, Fabric::new(m.ring, Meter::new())).unwrap();
     let dp = seqpar::parallel::data::DataParallel::new(&seq, Fabric::new(2, Meter::new()));
     let b1 = batch_for(&rt, 31);
     let b2 = batch_for(&rt, 32);
@@ -140,5 +132,50 @@ fn data_parallel_composes_with_sequence_parallel() {
         ops::scale_assign(&mut avg, 0.5).unwrap();
         let d = ops::max_abs_diff(g, &avg).unwrap();
         assert!(d < 1e-5, "DP grad {name} Δ={d}");
+    }
+}
+
+#[test]
+fn engine_rejects_mismatched_group_size() {
+    // the manifest pins ring/tp; an engine asking for a different group
+    // must fail at construction, not mid-schedule
+    let rt = runtime();
+    let ring = rt.manifest().ring;
+    assert!(SeqParEngine::new(&rt, Fabric::new(ring + 1, Meter::new())).is_err());
+    let heads = rt.manifest().heads;
+    assert!(TensorParEngine::new(&rt, Fabric::new(heads + 1, Meter::new())).is_err());
+}
+
+/// Artifact-backed variant: the same equivalence over the PJRT backend.
+/// Skips (with a note) when `artifacts/manifest.json` is absent.
+#[cfg(feature = "backend-xla")]
+mod xla_artifacts {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts() -> Option<PathBuf> {
+        let dir = PathBuf::from("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn engines_agree_on_artifacts() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let rt = Runtime::open(&dir).unwrap();
+        let params = ParamStore::load(&dir, rt.manifest()).unwrap();
+        let batch = batch_for(&rt, 10);
+        let m = rt.manifest().clone();
+        let seq = SeqParEngine::new(&rt, Fabric::new(m.ring, Meter::new())).unwrap();
+        let serial = TensorParEngine::new(&rt, Fabric::new(1, Meter::new())).unwrap();
+        let a = seq.forward_backward(&params, &batch).unwrap();
+        let b = serial.forward_backward(&params, &batch).unwrap();
+        assert!((a.loss - b.loss).abs() < TOL, "seq {} vs serial {}", a.loss, b.loss);
+        for (name, g) in &b.grads.values {
+            let d = ops::max_abs_diff(&a.grads.values[name], g).unwrap();
+            assert!(d < TOL, "grad {name} Δ={d}");
+        }
     }
 }

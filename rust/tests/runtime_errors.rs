@@ -1,29 +1,22 @@
-//! Integration: failure injection on the runtime/manifest layer.
+//! Integration: failure injection on the executor/manifest layer.
 //!
 //! A coordinator that silently mis-executes is worse than one that
 //! crashes: every orchestration error (wrong shape, unknown artifact,
-//! truncated manifest) must fail loudly and NAME the artifact.
+//! truncated manifest) must fail loudly and NAME the artifact.  The
+//! native backend enforces the same manifest contract as the PJRT one,
+//! so these run with zero artifacts.
 
-use std::path::PathBuf;
-
+use seqpar::backend::native::NativeConfig;
 use seqpar::runtime::{Manifest, Runtime};
 use seqpar::tensor::Tensor;
 
-fn artifacts() -> Option<PathBuf> {
-    let dir = PathBuf::from("artifacts");
-    dir.join("manifest.json").exists().then_some(dir)
+fn runtime() -> Runtime {
+    Runtime::native(NativeConfig::tiny()).unwrap()
 }
 
-#[test]
-fn wrong_shape_errors_with_artifact_name() {
-    let Some(dir) = artifacts() else {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    };
-    let rt = Runtime::open(&dir).unwrap();
-    // pick any artifact and feed it a wrong-shaped first input
-    let (name, spec) = rt.manifest.artifacts.iter().next().unwrap();
-    let mut inputs: Vec<Tensor> = spec
+/// Zero-filled inputs matching an artifact's spec.
+fn inputs_for(rt: &Runtime, name: &str) -> Vec<Tensor> {
+    rt.manifest().artifacts[name]
         .inputs
         .iter()
         .map(|io| match io.dtype {
@@ -32,73 +25,125 @@ fn wrong_shape_errors_with_artifact_name() {
                 Tensor::from_i32(&io.dims, vec![0; io.dims.iter().product()]).unwrap()
             }
         })
-        .collect();
-    inputs[0] = Tensor::zeros(&[3, 5, 7]); // wrong
-    let refs: Vec<&Tensor> = inputs.iter().collect();
-    let err = rt.call(name, &refs).unwrap_err().to_string();
-    assert!(err.contains(name.split("__").next().unwrap()), "error should name the artifact: {err}");
+        .collect()
 }
 
 #[test]
-fn unknown_artifact_suggests_rebuilding() {
-    let Some(dir) = artifacts() else {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    };
-    let rt = Runtime::open(&dir).unwrap();
+fn wrong_shape_errors_with_artifact_name() {
+    let rt = runtime();
+    // pick any artifact and feed it a wrong-shaped first input
+    let name = rt.manifest().artifacts.keys().next().unwrap().clone();
+    let mut inputs = inputs_for(&rt, &name);
+    inputs[0] = Tensor::zeros(&[3, 5, 7]); // wrong
+    let refs: Vec<&Tensor> = inputs.iter().collect();
+    let err = rt.call(&name, &refs).unwrap_err().to_string();
+    assert!(
+        err.contains(name.split("__").next().unwrap()),
+        "error should name the artifact: {err}"
+    );
+}
+
+#[test]
+fn unknown_artifact_is_rejected() {
+    let rt = runtime();
     let err = rt.call("nonexistent__1x1", &[]).unwrap_err().to_string();
     assert!(err.contains("not in manifest"), "{err}");
 }
 
 #[test]
 fn wrong_arity_is_rejected_before_execution() {
-    let Some(dir) = artifacts() else {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    };
-    let rt = Runtime::open(&dir).unwrap();
-    let (name, _) = rt.manifest.artifacts.iter().next().unwrap();
-    let err = rt.call(name, &[]).unwrap_err().to_string();
+    let rt = runtime();
+    let name = rt.manifest().artifacts.keys().next().unwrap().clone();
+    let err = rt.call(&name, &[]).unwrap_err().to_string();
     assert!(err.contains("inputs"), "{err}");
 }
 
 #[test]
-fn manifest_rejects_truncation() {
-    let Some(dir) = artifacts() else {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    };
-    let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
-    let truncated = &text[..text.len() / 2];
-    assert!(Manifest::parse(truncated).is_err());
-    // and a structurally-valid but incomplete document
-    assert!(Manifest::parse("{\"model\": \"x\"}").is_err());
+fn wrong_dtype_is_rejected() {
+    let rt = runtime();
+    // embed_fwd's first input must be i32 ids; hand it f32 of the right shape
+    let name = rt
+        .manifest()
+        .artifacts
+        .keys()
+        .find(|n| n.starts_with("embed_fwd__"))
+        .unwrap()
+        .clone();
+    let mut inputs = inputs_for(&rt, &name);
+    inputs[0] = Tensor::zeros(&rt.manifest().artifacts[&name].inputs[0].dims.clone());
+    let refs: Vec<&Tensor> = inputs.iter().collect();
+    let err = rt.call(&name, &refs).unwrap_err().to_string();
+    assert!(err.contains("embed_fwd"), "{err}");
 }
 
 #[test]
-fn missing_artifact_file_fails_at_first_use_not_open() {
-    let Some(dir) = artifacts() else {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    };
-    // copy manifest into a temp dir WITHOUT the hlo files: open succeeds
-    // (lazy compile), first call fails cleanly.
-    let tmp = std::env::temp_dir().join("seqpar_missing_artifacts");
-    let _ = std::fs::remove_dir_all(&tmp);
-    std::fs::create_dir_all(&tmp).unwrap();
-    std::fs::copy(dir.join("manifest.json"), tmp.join("manifest.json")).unwrap();
-    let rt = Runtime::open(&tmp).unwrap();
-    let (name, spec) = rt.manifest.artifacts.iter().next().unwrap();
-    let inputs: Vec<Tensor> = spec
-        .inputs
-        .iter()
-        .map(|io| match io.dtype {
-            seqpar::tensor::DType::F32 => Tensor::zeros(&io.dims),
-            seqpar::tensor::DType::I32 => {
-                Tensor::from_i32(&io.dims, vec![0; io.dims.iter().product()]).unwrap()
-            }
-        })
-        .collect();
-    let refs: Vec<&Tensor> = inputs.iter().collect();
-    assert!(rt.call(name, &refs).is_err());
+fn every_artifact_executes_on_valid_zero_inputs() {
+    // The native backend's output shapes must match its own manifest for
+    // every registered artifact — dispatch, compute, and re-validate.
+    let rt = runtime();
+    let names: Vec<String> = rt.manifest().artifacts.keys().cloned().collect();
+    for name in names {
+        let inputs = inputs_for(&rt, &name);
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let out = rt
+            .call(&name, &refs)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        let spec = &rt.manifest().artifacts[&name];
+        assert_eq!(out.len(), spec.outputs.len(), "{name}: output arity");
+        for (t, io) in out.iter().zip(&spec.outputs) {
+            assert_eq!(t.shape, io.dims, "{name}: output shape");
+        }
+    }
+}
+
+#[test]
+fn manifest_rejects_truncation() {
+    // a structurally-valid but incomplete document must fail to parse
+    assert!(Manifest::parse("{\"model\": \"x\"}").is_err());
+    // and a syntactically-truncated one
+    assert!(Manifest::parse("{\"model\": \"x\", \"batch\": 2, \"art").is_err());
+}
+
+#[test]
+fn open_without_feature_or_artifacts_fails_helpfully() {
+    // Without backend-xla, Runtime::open must explain itself; with it,
+    // opening a missing directory must fail on the manifest.
+    let err = Runtime::open(std::path::Path::new("/definitely/not/here"))
+        .unwrap_err()
+        .to_string();
+    assert!(
+        err.contains("backend-xla") || err.contains("manifest"),
+        "unhelpful error: {err}"
+    );
+}
+
+/// Artifact-backed error-path checks (PJRT backend, lazy compile).
+#[cfg(feature = "backend-xla")]
+mod xla_artifacts {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts() -> Option<PathBuf> {
+        let dir = PathBuf::from("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn missing_artifact_file_fails_at_first_use_not_open() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        // copy manifest into a temp dir WITHOUT the hlo files: open
+        // succeeds (lazy compile), first call fails cleanly.
+        let tmp = std::env::temp_dir().join("seqpar_missing_artifacts");
+        let _ = std::fs::remove_dir_all(&tmp);
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::copy(dir.join("manifest.json"), tmp.join("manifest.json")).unwrap();
+        let rt = Runtime::open(&tmp).unwrap();
+        let name = rt.manifest().artifacts.keys().next().unwrap().clone();
+        let inputs = inputs_for(&rt, &name);
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        assert!(rt.call(&name, &refs).is_err());
+    }
 }

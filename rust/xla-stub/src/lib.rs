@@ -1,0 +1,105 @@
+//! Offline stub of the `xla` crate (the xla-rs PJRT bindings).
+//!
+//! The `backend-xla` feature of `seqpar` compiles against exactly this API
+//! surface.  The stub keeps that feature *buildable* in environments with
+//! no vendored xla-rs: every entry point returns a descriptive error at
+//! runtime instead of executing HLO.  To run the real PJRT path, point the
+//! `xla` dependency in `rust/Cargo.toml` at an xla-rs checkout — the
+//! signatures below mirror the subset of its API that
+//! `seqpar::backend::xla_pjrt` uses.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type standing in for `xla::Error`; `Display` is all seqpar needs.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "xla stub: this build links the offline xla stub; point the `xla` \
+         dependency in rust/Cargo.toml at a real xla-rs checkout to enable \
+         the PJRT backend (or use the default native backend)"
+            .to_string(),
+    ))
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Marker for element types `Literal::to_vec` can extract.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+pub struct PjRtClient(());
+pub struct PjRtLoadedExecutable(());
+pub struct PjRtBuffer(());
+pub struct HloModuleProto(());
+pub struct XlaComputation(());
+pub struct Literal(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+}
