@@ -10,19 +10,31 @@
 //!    keys.  Verifies the distributed projection identity
 //!    Σₙ Eⁿ Xⁿ = E X  numerically.
 //!
-//! 2. SCALE — prints the Fig. 5b sequence-length upper-bound table from
+//! 2. THREADS (optional, `--threads N`) — runs one dense RSA training
+//!    step both ways on a ring of N: sequentially simulated
+//!    (`SeqParEngine`) and genuinely parallel with one OS thread per rank
+//!    (`exec::DistRunner`), printing the wall-clock for each and checking
+//!    the losses agree.
+//!
+//! 3. SCALE — prints the Fig. 5b sequence-length upper-bound table from
 //!    the cluster simulator (the 114K-tokens-on-32-P100s headline).
 //!
-//!     cargo run --release --example long_sequence
+//!     cargo run --release --example long_sequence [-- --threads 4]
 
 use anyhow::Result;
 
 use seqpar::backend::native::NativeConfig;
 use seqpar::comm::{Fabric, Meter};
+use seqpar::exec::DistRunner;
+use seqpar::model::params::ParamStore;
 use seqpar::model::BERT_BASE;
+use seqpar::parallel::sequence::SeqParEngine;
+use seqpar::parallel::Engine;
 use seqpar::runtime::{registry, Runtime};
 use seqpar::simulator::{search, sparse, Cluster, Strategy};
 use seqpar::tensor::{ops, Tensor};
+use seqpar::train::data::{Corpus, CorpusConfig};
+use seqpar::util::cli::Args;
 use seqpar::util::rng::Rng;
 
 fn main() -> Result<()> {
@@ -92,7 +104,36 @@ fn main() -> Result<()> {
         meter.get(seqpar::comm::CommKind::RingP2p),
     );
 
-    // ---- part 2: the Fig. 5b upper bound at cluster scale -----------------
+    // ---- part 2 (optional): threaded execution ---------------------------
+    let threads = Args::parse_env().usize_or("threads", 0)?;
+    if threads > 0 {
+        let sl = 64usize;
+        anyhow::ensure!(sl % threads == 0, "--threads {threads} must divide seq_len {sl}");
+        println!("\n=== threaded execution: ring of {threads}, one OS thread per rank ===");
+        let rt2 = Runtime::native(NativeConfig { seq_len: sl, ring: threads, ..NativeConfig::tiny() })?;
+        let m2 = rt2.manifest().clone();
+        let params = ParamStore::synthetic(&m2);
+        let batch =
+            Corpus::new(CorpusConfig::new(m2.vocab, m2.seq_len, m2.batch), 7).next_batch()?;
+
+        let seq_engine = SeqParEngine::new(&rt2, Fabric::new(threads, Meter::new()))?;
+        let t0 = std::time::Instant::now();
+        let a = seq_engine.forward_backward(&params, &batch)?;
+        let seq_dt = t0.elapsed();
+
+        let dist = DistRunner::new(&rt2, Meter::new())?;
+        let t0 = std::time::Instant::now();
+        let b = dist.forward_backward(&params, &batch)?;
+        let thr_dt = t0.elapsed();
+
+        println!(
+            "sequential sim {seq_dt:?}   threaded {thr_dt:?}   Δloss {:.2e}",
+            (a.loss - b.loss).abs()
+        );
+        anyhow::ensure!((a.loss - b.loss).abs() < 1e-4, "threaded loss diverged");
+    }
+
+    // ---- part 3: the Fig. 5b upper bound at cluster scale -----------------
     let cluster = Cluster::default();
     println!("\n=== Fig. 5b — BERT-Base length upper bound (batch 4, K=256, 16GB P100) ===");
     println!("{:>8} {:>12} {:>14}", "devices", "dense maxL", "sparse maxL");

@@ -1,0 +1,124 @@
+//! Bench: wall-clock win of REAL threads over the sequential simulation.
+//!
+//! For n ∈ {1, 2, 4, 8} ring ranks, times one forward+backward step of:
+//!
+//! * `serial`   — the single-device engine (no ring, the lower bound on
+//!                work);
+//! * `seq-sim`  — `SeqParEngine`, all n ranks simulated on one thread
+//!                over the `Fabric` slot view;
+//! * `threaded` — `exec::DistRunner`, one OS thread per rank over real
+//!                ring P2P.
+//!
+//! seq-sim and threaded run the SAME per-rank step code and the same
+//! total compute; the ratio between them is pure execution-layer win
+//! (cores × overlap).  Results land in `BENCH_dist.json` for the perf
+//! trajectory.
+//!
+//!     cargo bench --bench dist_speedup
+//!     cargo bench --bench dist_speedup -- --iters 3 --warmup 1   # CI smoke
+//!
+//! Flags: --iters N --warmup N --sizes 1,2,4,8 --seq-len L --out PATH
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use seqpar::backend::native::NativeConfig;
+use seqpar::comm::{Fabric, Meter};
+use seqpar::eval::bench::{bench, fmt_ns};
+use seqpar::exec::DistRunner;
+use seqpar::model::params::ParamStore;
+use seqpar::parallel::sequence::SeqParEngine;
+use seqpar::parallel::tensorp::TensorParEngine;
+use seqpar::parallel::Engine;
+use seqpar::runtime::Runtime;
+use seqpar::train::data::{Corpus, CorpusConfig};
+use seqpar::util::cli::Args;
+use seqpar::util::json::{encode, Value};
+
+fn num(v: f64) -> Value {
+    Value::Num(v)
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let iters = args.usize_or("iters", 8)?;
+    let warmup = args.usize_or("warmup", 2)?;
+    let sizes = args.usize_list_or("sizes", &[1, 2, 4, 8])?;
+    let seq_len = args.usize_or("seq-len", 64)?;
+    let out_path = args.str_or("out", "BENCH_dist.json").to_string();
+
+    let batch = NativeConfig::tiny().batch;
+    let cores = std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(1);
+    println!(
+        "dist_speedup @ bert-tiny (L={seq_len}, {cores} cores, {iters} iters + {warmup} warmup)"
+    );
+    println!(
+        "{:>4} {:>14} {:>14} {:>14} {:>10}",
+        "n", "serial", "seq-sim", "threaded", "speedup"
+    );
+
+    let mut rows: Vec<Value> = Vec::new();
+    for &n in &sizes {
+        if seq_len % n != 0 {
+            println!("{n:>4} skipped: seq_len {seq_len} not divisible by {n}");
+            continue;
+        }
+        let cfg = NativeConfig { seq_len, ring: n, ..NativeConfig::tiny() };
+        let rt = Runtime::native(cfg)?;
+        let m = rt.manifest().clone();
+        let params = ParamStore::synthetic(&m);
+        let batch = Corpus::new(CorpusConfig::new(m.vocab, m.seq_len, m.batch), 3)
+            .next_batch()?;
+
+        let serial = TensorParEngine::new(&rt, Fabric::new(1, Meter::new()))?;
+        let s = bench(warmup, iters, || {
+            std::hint::black_box(serial.forward_backward(&params, &batch).unwrap());
+        });
+
+        let seq = SeqParEngine::new(&rt, Fabric::new(n, Meter::new()))?;
+        let q = bench(warmup, iters, || {
+            std::hint::black_box(seq.forward_backward(&params, &batch).unwrap());
+        });
+
+        let dist = DistRunner::new(&rt, Meter::new())?;
+        let t = bench(warmup, iters, || {
+            std::hint::black_box(dist.forward_backward(&params, &batch).unwrap());
+        });
+
+        // seq-sim and threaded do identical work; this ratio is the
+        // execution-layer speedup the threaded runner buys.
+        let speedup = q.mean_ns / t.mean_ns;
+        println!(
+            "{n:>4} {:>14} {:>14} {:>14} {speedup:>9.2}x",
+            fmt_ns(s.mean_ns),
+            fmt_ns(q.mean_ns),
+            fmt_ns(t.mean_ns),
+        );
+
+        let mut row = BTreeMap::new();
+        row.insert("n".to_string(), num(n as f64));
+        row.insert("serial_mean_ns".to_string(), num(s.mean_ns));
+        row.insert("seqsim_mean_ns".to_string(), num(q.mean_ns));
+        row.insert("threaded_mean_ns".to_string(), num(t.mean_ns));
+        row.insert("serial_min_ns".to_string(), num(s.min_ns));
+        row.insert("seqsim_min_ns".to_string(), num(q.min_ns));
+        row.insert("threaded_min_ns".to_string(), num(t.min_ns));
+        row.insert("threaded_speedup_vs_seqsim".to_string(), num(speedup));
+        rows.push(Value::Obj(row));
+    }
+
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Value::Str("dist_speedup".to_string()));
+    top.insert("model".to_string(), Value::Str("bert-tiny".to_string()));
+    top.insert("batch".to_string(), num(batch as f64));
+    top.insert("seq_len".to_string(), num(seq_len as f64));
+    top.insert("cores".to_string(), num(cores as f64));
+    top.insert("iters".to_string(), num(iters as f64));
+    top.insert("rows".to_string(), Value::Arr(rows));
+    std::fs::write(&out_path, encode(&Value::Obj(top)))?;
+    println!("wrote {out_path}");
+    Ok(())
+}

@@ -16,11 +16,14 @@
 //!   time (the `to_heads`/`qkv_proj` head layout, the loss normalizers)
 //!   are baked into the per-artifact [`Kernel`] descriptor here.
 //!
-//! Everything is plain row-major f32 on the host — no BLAS, no threads —
-//! which keeps the backend dependency-free and deterministic.
+//! Everything is plain row-major f32 on the host — no BLAS, no hidden
+//! kernel-level threading — which keeps the backend dependency-free and
+//! deterministic.  The backend itself is `Send + Sync` (stats are atomic),
+//! so `exec::DistRunner` can drive one kernel stream per rank thread.
 
-use std::cell::RefCell;
 use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
@@ -99,8 +102,11 @@ enum Kernel {
 pub struct NativeBackend {
     manifest: Manifest,
     kernels: HashMap<String, Kernel>,
-    stats: RefCell<RuntimeStats>,
-    used: RefCell<BTreeSet<String>>,
+    // Counters use atomics/locks (not RefCell) so the backend is Sync and
+    // one instance can serve every rank thread of exec::DistRunner.
+    calls: AtomicU64,
+    exec_nanos: AtomicU64,
+    used: Mutex<BTreeSet<String>>,
 }
 
 // ---------------------------------------------------------------- registry
@@ -429,8 +435,9 @@ impl NativeBackend {
         Ok(NativeBackend {
             manifest,
             kernels: reg.kernels,
-            stats: RefCell::new(RuntimeStats::default()),
-            used: RefCell::new(BTreeSet::new()),
+            calls: AtomicU64::new(0),
+            exec_nanos: AtomicU64::new(0),
+            used: Mutex::new(BTreeSet::new()),
         })
     }
 
@@ -439,13 +446,18 @@ impl NativeBackend {
     }
 
     pub fn stats(&self) -> RuntimeStats {
-        *self.stats.borrow()
+        RuntimeStats {
+            compiles: 0,
+            calls: self.calls.load(Ordering::Relaxed),
+            compile_nanos: 0,
+            exec_nanos: self.exec_nanos.load(Ordering::Relaxed),
+        }
     }
 
     /// Number of distinct kernels dispatched so far (the native analogue
     /// of the XLA backend's compiled-executable cache).
     pub fn cached_executables(&self) -> usize {
-        self.used.borrow().len()
+        self.used.lock().unwrap().len()
     }
 
     pub fn call(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
@@ -472,13 +484,14 @@ impl NativeBackend {
                 );
             }
         }
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.exec_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         {
-            let mut st = self.stats.borrow_mut();
-            st.calls += 1;
-            st.exec_nanos += t0.elapsed().as_nanos() as u64;
-        }
-        if !self.used.borrow().contains(name) {
-            self.used.borrow_mut().insert(name.to_string());
+            let mut used = self.used.lock().unwrap();
+            if !used.contains(name) {
+                used.insert(name.to_string());
+            }
         }
         Ok(out)
     }

@@ -6,14 +6,16 @@
 //! every byte metered per collective kind so the §3.2.2 communication-cost
 //! analysis can be checked against measured traffic (rust/tests/comm_volume.rs).
 //!
-//! Two implementations share the semantics:
+//! Two implementations share the semantics behind the [`Collective`]
+//! trait:
 //!
 //! * [`Fabric`] — deterministic, runs collectives over the per-device slot
-//!   vector the sequential engines use.  This is what the training engines
-//!   and the simulator drive.
-//! * [`threaded`] — real threads + channels executing the same ring
-//!   protocol message-by-message; the tests prove it is deadlock-free and
-//!   byte-identical to [`Fabric`].
+//!   vector; one call executes the whole group.  This is what the
+//!   sequential engines and the simulator drive.
+//! * [`threaded::RingComm`] — real per-rank communicators over channels
+//!   executing the same ring protocol message-by-message; one OS thread
+//!   per rank (`exec::DistRunner`).  The tests prove it is deadlock-free
+//!   and byte-identical to [`Fabric`].
 
 pub mod threaded;
 
@@ -133,6 +135,50 @@ impl MeterSnapshot {
     }
 }
 
+/// A rank-set view of the collective fabric — the abstraction the
+/// per-rank step logic in `parallel::sequence` is written against, so the
+/// SAME code runs either sequentially simulated or genuinely threaded.
+///
+/// A view *executes* some set of global ranks and holds one tensor slot
+/// per executed rank ([`Collective::local_ranks`], in slot order):
+///
+/// * [`Fabric`] executes ALL `n` ranks on the calling thread — `slots`
+///   has length `n` and collectives are plain slot-vector permutations;
+/// * [`threaded::RingComm`] executes exactly ONE rank — `slots` has
+///   length 1 and every collective is real P2P traffic against the peer
+///   rank threads, which must be calling the same collective.
+///
+/// Semantics agree by construction (`rust/tests/fabric.rs` and
+/// `rust/tests/dist_equivalence.rs` prove it): after `t` ring shifts the
+/// slot of global rank `d` holds the chunk originally owned by
+/// `(d - t) mod n`, gathers concatenate in global rank order, and byte
+/// metering agrees byte-for-byte between the two implementations.  One
+/// caveat: the threaded ring all-reduce accumulates in each rank's
+/// arrival order, so reduced values match the sequential ones (and each
+/// other) up to f32 reduction-order rounding — any single rank's result
+/// is still bit-deterministic across runs.
+pub trait Collective {
+    /// Global ring size.
+    fn world(&self) -> usize;
+
+    /// Global ranks this view executes, in slot order.
+    fn local_ranks(&self) -> Vec<usize>;
+
+    /// One ring step: every rank's slot moves to rank+1 (mod n); the slot
+    /// of rank-1 arrives.
+    fn ring_shift(&self, slots: &mut [Tensor]) -> Result<()>;
+
+    /// Every slot replaced by the elementwise sum over all global ranks.
+    fn all_reduce_sum(&self, slots: &mut [Tensor]) -> Result<()>;
+
+    /// Every slot replaced by the rank-order concatenation (dim `dim`) of
+    /// all global ranks' slots.
+    fn all_gather(&self, slots: &mut [Tensor], dim: usize) -> Result<()>;
+
+    /// Every slot replaced by global rank `root`'s slot.
+    fn broadcast(&self, slots: &mut [Tensor], root: usize) -> Result<()>;
+}
+
 /// Deterministic collective fabric over per-device slot vectors.
 ///
 /// `slots[d]` is the tensor device `d` currently holds.  All byte counts
@@ -166,7 +212,8 @@ impl Fabric {
     }
 
     /// Ring all-reduce (sum): every device ends with the elementwise sum.
-    /// Metered as reduce-scatter + all-gather: 2*(n-1)/n * C per device.
+    /// Metered as reduce-scatter + all-gather, group total: 2*(n-1)*C
+    /// (i.e. 2*(n-1)/n * C sent per device).
     pub fn all_reduce_sum(&self, slots: &mut [Tensor]) -> Result<()> {
         if slots.len() != self.n {
             bail!("all_reduce: {} slots for {} devices", slots.len(), self.n);
@@ -250,6 +297,33 @@ impl Fabric {
         self.meter.add(CommKind::Pipeline, c);
         // all-gather on the receiving side
         self.meter.add(CommKind::AllGather, (self.n as u64 - 1) * c / self.n as u64);
+    }
+}
+
+/// The sequential slot view: one `Fabric` call executes all `n` ranks.
+impl Collective for Fabric {
+    fn world(&self) -> usize {
+        self.n
+    }
+
+    fn local_ranks(&self) -> Vec<usize> {
+        (0..self.n).collect()
+    }
+
+    fn ring_shift(&self, slots: &mut [Tensor]) -> Result<()> {
+        Fabric::ring_shift(self, slots)
+    }
+
+    fn all_reduce_sum(&self, slots: &mut [Tensor]) -> Result<()> {
+        Fabric::all_reduce_sum(self, slots)
+    }
+
+    fn all_gather(&self, slots: &mut [Tensor], dim: usize) -> Result<()> {
+        Fabric::all_gather(self, slots, dim)
+    }
+
+    fn broadcast(&self, slots: &mut [Tensor], root: usize) -> Result<()> {
+        Fabric::broadcast(self, slots, root)
     }
 }
 

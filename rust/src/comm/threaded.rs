@@ -1,22 +1,35 @@
 //! Threaded ring fabric: the same ring protocol as [`super::Fabric`],
 //! executed by real OS threads over channels.
 //!
-//! The sequential [`super::Fabric`] is what the engines drive (the PJRT
-//! client handles are `Rc`-based and cannot cross threads), but the wire
-//! protocol must be provably deadlock-free and order-correct — this module
-//! is that proof, exercised by unit tests and `rust/tests/fabric.rs`.
+//! This is the communication layer of `exec::DistRunner`: every rank runs
+//! on its own OS thread and drives its own [`RingComm`], so RSA's ring
+//! exchanges are genuinely concurrent P2P messages.  (Only the `Rc`-based
+//! PJRT backend behind the `backend-xla` feature still forces sequential
+//! per-device simulation; the default native backend is `Sync` and runs
+//! threaded.)  The unit tests here plus `rust/tests/fabric.rs` and
+//! `rust/tests/dist_equivalence.rs` prove the protocol is deadlock-free,
+//! order-correct, and byte-metered identically to the sequential
+//! [`super::Fabric`].
 //!
 //! Topology: a full mesh of mpsc channels; `rx[i][j]` receives at rank i
-//! what rank j sent.  Ring ops only use the (i -> i+1 mod n) edges.
+//! what rank j sent.  Ring ops only use the (i -> i+1 mod n) edges; the
+//! direct edges carry pipeline sends and broadcast.
+//!
+//! Metering convention: ring P2P is metered per send (summing to the
+//! group total the [`super::Fabric`] slot rotation records in one add);
+//! the formula-metered collectives (all-reduce, all-gather, broadcast)
+//! are metered ONCE per group call — at rank 0 / the root — with the same
+//! canonical group-total formulas `Fabric` uses, so sequential and
+//! threaded meters agree byte-for-byte AND op-for-op.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::tensor::{ops, Tensor};
 
-use super::{CommKind, Meter};
+use super::{Collective, CommKind, Meter};
 
 /// Per-rank communicator handle; owned by that rank's thread.
 pub struct RingComm {
@@ -82,26 +95,92 @@ impl RingComm {
 
     /// Ring all-reduce (sum), chunked reduce-scatter + all-gather.
     /// Operates on this rank's local tensor; returns the reduced tensor.
-    pub fn all_reduce_sum(&self, mut local: Tensor) -> Result<Tensor> {
+    pub fn all_reduce_sum(&self, local: Tensor) -> Result<Tensor> {
         if self.n == 1 {
             return Ok(local);
         }
         // Simple ring version over whole tensors (n-1 reduce + n-1 gather
-        // steps).  Byte metering matches the chunked ideal 2(n-1)C/n per
-        // device because we meter on the canonical formula, not the naive
-        // payload (documented accounting choice, same as Fabric).
+        // steps).  Metered once (at rank 0) on the canonical group-total
+        // formula 2(n-1)C — not the naive payload — exactly matching the
+        // single add Fabric::all_reduce_sum records (documented accounting
+        // choice; rust/tests/dist_equivalence.rs pins the parity).
+        //
+        // NOTE: rank r accumulates in arrival order r, r-1, ..., r+1, so
+        // the per-rank sums agree up to f32 reduction-order rounding, not
+        // bit-for-bit (each rank's own result IS bit-deterministic).
         let c = local.bytes() as u64;
-        let mut acc = local.clone();
         let mut travelling = local.clone();
+        let mut acc = local;
         for _ in 0..self.n - 1 {
             travelling = self.ring_exchange_unmetered(travelling)?;
             ops::add_assign(&mut acc, &travelling)?;
         }
         // now every rank has the full sum in acc (after n-1 steps each rank
         // saw every chunk exactly once)
-        local = acc;
-        self.meter.add(CommKind::AllReduce, 2 * (self.n as u64 - 1) * c / self.n as u64);
-        Ok(local)
+        if self.rank == 0 {
+            self.meter.add(CommKind::AllReduce, 2 * (self.n as u64 - 1) * c);
+        }
+        Ok(acc)
+    }
+
+    /// Ring all-gather: returns the rank-order concatenation (dim `dim`)
+    /// of every rank's `local`.  Metered at rank 0 as (n-1) * total chunk
+    /// bytes — the Fabric::all_gather group-total formula.
+    pub fn all_gather(&self, local: Tensor, dim: usize) -> Result<Tensor> {
+        if self.n == 1 {
+            return Ok(local);
+        }
+        let mut parts: Vec<Option<Tensor>> = (0..self.n).map(|_| None).collect();
+        let mut held = local.clone();
+        parts[self.rank] = Some(local);
+        for t in 1..self.n {
+            held = self.ring_exchange_unmetered(held)?;
+            // after t shifts we hold the chunk originally at (rank - t) mod n
+            let origin = (self.rank + self.n - t) % self.n;
+            if parts[origin].is_some() {
+                bail!("rank {}: all_gather saw chunk {origin} twice", self.rank);
+            }
+            parts[origin] = Some(held.clone());
+        }
+        let owned: Vec<Tensor> = parts
+            .into_iter()
+            .map(|o| o.ok_or_else(|| anyhow!("rank {}: all_gather missed a chunk", self.rank)))
+            .collect::<Result<_>>()?;
+        if self.rank == 0 {
+            let total: u64 = owned.iter().map(|t| t.bytes() as u64).sum();
+            self.meter.add(CommKind::AllGather, (self.n as u64 - 1) * total);
+        }
+        let refs: Vec<&Tensor> = owned.iter().collect();
+        ops::concat_dim(&refs, dim)
+    }
+
+    /// Broadcast from `root`: the root's tensor replaces every rank's
+    /// `local`.  Uses the direct mesh edges (root sends n-1 copies) and is
+    /// metered at the root as (n-1)*C under [`CommKind::Broadcast`] —
+    /// matching Fabric::broadcast's accounting.
+    pub fn broadcast(&self, local: Tensor, root: usize) -> Result<Tensor> {
+        if root >= self.n {
+            bail!("broadcast root {root} out of {}", self.n);
+        }
+        if self.n == 1 {
+            return Ok(local);
+        }
+        if self.rank == root {
+            let c = local.bytes() as u64;
+            for dst in 0..self.n {
+                if dst != root {
+                    self.tx[dst]
+                        .send(local.clone())
+                        .map_err(|_| anyhow!("rank {}: broadcast peer {dst} hung up", self.rank))?;
+                }
+            }
+            self.meter.add(CommKind::Broadcast, (self.n as u64 - 1) * c);
+            Ok(local)
+        } else {
+            self.rx[root]
+                .recv()
+                .map_err(|_| anyhow!("rank {}: broadcast recv from {root} failed", self.rank))
+        }
     }
 
     fn ring_exchange_unmetered(&self, t: Tensor) -> Result<Tensor> {
@@ -125,6 +204,63 @@ impl RingComm {
         self.rx[src]
             .recv()
             .map_err(|_| anyhow!("rank {}: recv from {src} failed", self.rank))
+    }
+}
+
+/// Take the single local slot, leaving a cheap placeholder.
+fn take_slot(comm: &RingComm, slots: &mut [Tensor]) -> Result<Tensor> {
+    if slots.len() != 1 {
+        bail!(
+            "rank {}: per-rank view holds exactly 1 slot, got {}",
+            comm.rank,
+            slots.len()
+        );
+    }
+    Ok(std::mem::replace(&mut slots[0], Tensor::zeros(&[])))
+}
+
+/// The per-rank threaded view: this communicator executes exactly one
+/// global rank; every collective is real traffic against the peer rank
+/// threads (which must be inside the same collective call).
+impl Collective for RingComm {
+    fn world(&self) -> usize {
+        self.n
+    }
+
+    fn local_ranks(&self) -> Vec<usize> {
+        vec![self.rank]
+    }
+
+    fn ring_shift(&self, slots: &mut [Tensor]) -> Result<()> {
+        if self.n == 1 {
+            // nothing moves, no bytes — mirrors Fabric::ring_shift so the
+            // n=1 meters agree (the inherent collectives already no-op)
+            if slots.len() != 1 {
+                bail!("rank 0: per-rank view holds exactly 1 slot, got {}", slots.len());
+            }
+            return Ok(());
+        }
+        let t = take_slot(self, slots)?;
+        slots[0] = self.ring_exchange(t)?;
+        Ok(())
+    }
+
+    fn all_reduce_sum(&self, slots: &mut [Tensor]) -> Result<()> {
+        let t = take_slot(self, slots)?;
+        slots[0] = RingComm::all_reduce_sum(self, t)?;
+        Ok(())
+    }
+
+    fn all_gather(&self, slots: &mut [Tensor], dim: usize) -> Result<()> {
+        let t = take_slot(self, slots)?;
+        slots[0] = RingComm::all_gather(self, t, dim)?;
+        Ok(())
+    }
+
+    fn broadcast(&self, slots: &mut [Tensor], root: usize) -> Result<()> {
+        let t = take_slot(self, slots)?;
+        slots[0] = RingComm::broadcast(self, t, root)?;
+        Ok(())
     }
 }
 
@@ -185,6 +321,93 @@ mod tests {
             let t = h.join().unwrap();
             assert_eq!(t.f32s().unwrap(), &[6.0, 6.0, 6.0, 6.0]);
         }
+    }
+
+    #[test]
+    fn threaded_all_gather_concatenates_in_rank_order() {
+        let n = 4;
+        let meter = Meter::new();
+        let comms = mesh(n, meter.clone());
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|comm| {
+                std::thread::spawn(move || {
+                    let local =
+                        Tensor::from_f32(&[1, 2], vec![comm.rank as f32; 2]).unwrap();
+                    comm.all_gather(local, 0).unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            let t = h.join().unwrap();
+            assert_eq!(t.shape, vec![4, 2]);
+            assert_eq!(
+                t.f32s().unwrap(),
+                &[0.0, 0.0, 1.0, 1.0, 2.0, 2.0, 3.0, 3.0]
+            );
+        }
+        // metered once (rank 0), group total: (n-1) * sum of chunk bytes
+        assert_eq!(meter.get(CommKind::AllGather), 3 * 4 * 8);
+    }
+
+    #[test]
+    fn threaded_broadcast_replicates_root() {
+        let n = 3;
+        let meter = Meter::new();
+        let comms = mesh(n, meter.clone());
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|comm| {
+                std::thread::spawn(move || {
+                    let local =
+                        Tensor::from_f32(&[2], vec![comm.rank as f32; 2]).unwrap();
+                    comm.broadcast(local, 1).unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap().f32s().unwrap(), &[1.0, 1.0]);
+        }
+        // metered once (the root), under its own counter: (n-1) * C bytes
+        assert_eq!(meter.get(CommKind::Broadcast), 2 * 2 * 4);
+        assert_eq!(meter.get(CommKind::AllGather), 0);
+    }
+
+    /// The formula-metered collectives must land the SAME counters as the
+    /// sequential Fabric — byte-for-byte and op-for-op.
+    #[test]
+    fn collective_metering_matches_fabric() {
+        let n = 4;
+        let len = 6;
+        let mk = |d: usize| Tensor::from_f32(&[len], vec![d as f32; len]).unwrap();
+
+        let fab_meter = Meter::new();
+        let fabric = crate::comm::Fabric::new(n, fab_meter.clone());
+        let mut slots: Vec<Tensor> = (0..n).map(mk).collect();
+        fabric.all_reduce_sum(&mut slots).unwrap();
+        let mut slots: Vec<Tensor> = (0..n).map(mk).collect();
+        fabric.all_gather(&mut slots, 0).unwrap();
+        let mut slots: Vec<Tensor> = (0..n).map(mk).collect();
+        fabric.broadcast(&mut slots, 2).unwrap();
+
+        let thr_meter = Meter::new();
+        let comms = mesh(n, thr_meter.clone());
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|comm| {
+                std::thread::spawn(move || {
+                    let d = comm.rank;
+                    let t = Tensor::from_f32(&[6], vec![d as f32; 6]).unwrap();
+                    comm.all_reduce_sum(t.clone()).unwrap();
+                    comm.all_gather(t.clone(), 0).unwrap();
+                    comm.broadcast(t, 2).unwrap();
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(fab_meter.snapshot(), thr_meter.snapshot());
     }
 
     #[test]

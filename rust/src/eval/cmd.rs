@@ -6,6 +6,7 @@ use anyhow::{bail, Result};
 
 use crate::backend::native::NativeConfig;
 use crate::comm::{Fabric, Meter};
+use crate::exec::DistRunner;
 use crate::model::params::ParamStore;
 use crate::parallel::sequence::SeqParEngine;
 use crate::parallel::tensorp::TensorParEngine;
@@ -42,6 +43,10 @@ BACKEND FLAGS:
 COMMON FLAGS:
   --steps N           training steps (train; default 50)
   --engine NAME       seq | tensor | serial (train; default seq)
+  --threads N         run `train --engine seq` on N OS threads — one per
+                      ring rank via exec::DistRunner (native backend
+                      only; implies --ring N, since rank count must equal
+                      the ring size the manifest was built for)
   --seed N            corpus seed (train/verify; default 7)
   --experiment ID     fig3a|fig3b|fig4a|fig4b|fig5a|fig5b|fig7|fig8|fig9|
                       table4|tables (sweep)
@@ -55,11 +60,26 @@ pub fn artifacts_dir(args: &Args) -> PathBuf {
 }
 
 fn native_config(args: &Args) -> Result<NativeConfig> {
+    // --threads N runs the ranks on N OS threads; the rank count must
+    // equal the ring size the manifest is built for, so the flag also
+    // sets the ring (and conflicts with a disagreeing --ring).
+    let threads = args.usize_or("threads", 0)?;
+    let ring = if threads > 0 {
+        if args.has("ring") && args.usize_or("ring", threads)? != threads {
+            bail!(
+                "--threads {threads} conflicts with --ring {} (rank count must equal ring size)",
+                args.usize_or("ring", 0)?
+            );
+        }
+        threads
+    } else {
+        args.usize_or("ring", 4)?
+    };
     Ok(NativeConfig {
         model: crate::model::by_name(args.str_or("model", "bert-tiny"))?,
         batch: args.usize_or("batch", 2)?,
         seq_len: args.usize_or("seq-len", 32)?,
-        ring: args.usize_or("ring", 4)?,
+        ring,
         tp: args.usize_or("tp", 2)?,
         linformer_k: args.usize_or("linformer", 0)?,
         seed: args.usize_or("init-seed", 0)? as u64,
@@ -305,8 +325,18 @@ pub fn train(args: &Args) -> Result<()> {
         peak_lr: args.f64_or("lr", 1e-3)? as f32,
         log_every: args.usize_or("log-every", 10)? as u64,
     };
+    let threads = args.usize_or("threads", 0)?;
+    if threads > 0 && engine_name != "seq" {
+        bail!("--threads applies to --engine seq (got --engine {engine_name})");
+    }
     let meter = Meter::new();
     match engine_name.as_str() {
+        "seq" if threads > 0 => {
+            let e = DistRunner::new(&rt, meter.clone())?;
+            println!("threaded execution: {} ranks, one OS thread each", e.n);
+            let mut trainer = Trainer::new(&e, &params, cfg);
+            trainer.run(&mut params, || corpus.next_batch(), false)?;
+        }
         "seq" => {
             let e = SeqParEngine::new(&rt, Fabric::new(m.ring, meter.clone()))?;
             let mut trainer = Trainer::new(&e, &params, cfg);

@@ -1,0 +1,32 @@
+//! `exec` — the threaded distributed execution layer.
+//!
+//! Everything below `parallel` *simulates* a device group on one thread:
+//! correct schedules, correct metered traffic, zero wall-clock overlap.
+//! This module is the step from simulator to system — the paper's actual
+//! premise of N devices each working on its own sequence chunk while K/V
+//! chunks stream around the ring:
+//!
+//! * [`DistRunner`] spawns **one OS thread per rank**; each thread owns
+//!   its shard of the batch and drives the full per-rank step
+//!   (`qkv → ring score accumulation → ring context → MLP →
+//!   hand-scheduled ring backward`) against its own
+//!   [`crate::comm::threaded::RingComm`];
+//! * ring exchanges are real P2P messages between concurrently running
+//!   threads, so RSA stages 1–2 (and the backward rings) overlap compute
+//!   with communication exactly the way Ring Attention-style systems do;
+//! * parameter gradients are combined with a threaded ring
+//!   `all_reduce_sum`, after which every rank holds the global sums.
+//!
+//! The per-rank step logic is the SAME function the sequential
+//! [`crate::parallel::sequence::SeqParEngine`] drives over the `Fabric`
+//! slot view — `rust/tests/dist_equivalence.rs` pins loss/grad agreement
+//! (and byte-for-byte meter agreement) between the two executions, and
+//! `benches/dist_speedup.rs` measures the wall-clock win.
+//!
+//! Requires a `Send + Sync` backend: the default native backend qualifies;
+//! the `backend-xla` PJRT backend (Rc-based, thread-local handles) is
+//! rejected at construction with a pointer at `--backend native`.
+
+mod runner;
+
+pub use runner::DistRunner;

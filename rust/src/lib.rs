@@ -23,7 +23,10 @@
 //! Module map (see DESIGN.md for the full inventory):
 //!
 //! * [`tensor`] — host tensors + the SPT1 interchange format
-//! * [`comm`] — the collective fabric (ring P2P, all-reduce, …) + meters
+//! * [`comm`] — the collective fabric (ring P2P, all-reduce, …) + meters,
+//!   sequential ([`comm::Fabric`]) and threaded ([`comm::threaded`])
+//! * [`exec`] — the threaded distributed runner: one OS thread per rank
+//!   over real ring P2P ([`exec::DistRunner`])
 //! * [`runtime`] — the [`runtime::Executor`] trait, manifest contract,
 //!   artifact-name registry, and the [`runtime::Runtime`] backend enum
 //! * [`backend`] — the executors: `native` (pure rust) and `xla_pjrt`
@@ -40,6 +43,7 @@
 pub mod backend;
 pub mod comm;
 pub mod eval;
+pub mod exec;
 pub mod model;
 pub mod parallel;
 pub mod runtime;

@@ -8,10 +8,14 @@
 //! * [`data`] — data parallelism (gradient all-reduce across replicas).
 //! * [`topology`] — the 4D device mesh gluing them together.
 //!
-//! All engines run their simulated devices sequentially (the PJRT client
-//! handle is thread-local by construction) but drive the REAL collective
-//! fabric for every exchange, so communication volume and schedule are the
-//! paper's — see `comm::Meter` and rust/tests/comm_volume.rs.
+//! The engines here simulate their devices sequentially on one thread but
+//! drive the REAL collective fabric for every exchange, so communication
+//! volume and schedule are the paper's — see `comm::Meter` and
+//! rust/tests/comm_volume.rs.  Sequential execution is a *requirement*
+//! only for the `backend-xla` feature (PJRT client handles are `Rc`-based
+//! and thread-local); on the default native backend the same per-rank
+//! step logic also runs genuinely parallel, one OS thread per rank, via
+//! [`crate::exec::DistRunner`].
 
 pub mod data;
 pub mod pipeline;
@@ -57,15 +61,33 @@ pub trait Engine {
 }
 
 /// Shared helper: execute a step artifact, resolving the name from the
-/// actual input tensors (mirror of aot.py naming).  Works against either
-/// backend of the [`Runtime`] enum — the name lookup is what catches a
-/// config mismatch between an engine and the backend's manifest.
-pub(crate) fn call(rt: &Runtime, step: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+/// actual input tensors (mirror of aot.py naming).  Works against any
+/// [`crate::runtime::Executor`] — the name lookup is what catches a
+/// config mismatch between an engine and the backend's manifest.  The
+/// executor-typed variants exist so per-rank threads (which share one
+/// `&dyn Executor + Sync` backend, not a `&Runtime`) use the same path.
+pub(crate) fn call_on(
+    ex: &dyn crate::runtime::Executor,
+    step: &str,
+    inputs: &[&Tensor],
+) -> Result<Vec<Tensor>> {
     let name = registry::art_name_for(step, inputs);
-    rt.call(&name, inputs)
+    ex.call(&name, inputs)
+}
+
+pub(crate) fn call1_on(
+    ex: &dyn crate::runtime::Executor,
+    step: &str,
+    inputs: &[&Tensor],
+) -> Result<Tensor> {
+    let name = registry::art_name_for(step, inputs);
+    ex.call1(&name, inputs)
+}
+
+pub(crate) fn call(rt: &Runtime, step: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    call_on(rt.backend(), step, inputs)
 }
 
 pub(crate) fn call1(rt: &Runtime, step: &str, inputs: &[&Tensor]) -> Result<Tensor> {
-    let name = registry::art_name_for(step, inputs);
-    rt.call1(&name, inputs)
+    call1_on(rt.backend(), step, inputs)
 }

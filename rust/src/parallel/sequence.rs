@@ -13,27 +13,84 @@
 //!   and carrying `dKᵢ` home).  This is the "2 ring-P2P + gradient
 //!   accumulation" schedule of §3.2.2.
 //!
-//! Every exchange goes through the metered fabric; the schedule is the
-//! exact transcription of the validated python chain
-//! (`python/compile/chain.py` — tested against `jax.grad`), with the ring
-//! made explicit as slot-vector rotations.
+//! The per-rank step logic ([`seqpar_step`]) is written once against the
+//! [`Collective`] rank-set view and executed two ways:
+//!
+//! * [`SeqParEngine`] drives it over the sequential [`Fabric`] slot view —
+//!   all ranks simulated deterministically on the calling thread, rings as
+//!   slot-vector rotations (the schedule is the exact transcription of the
+//!   validated python chain `python/compile/chain.py`, tested against
+//!   `jax.grad`);
+//! * `exec::DistRunner` runs the SAME function on one OS thread per rank
+//!   over `comm::threaded::RingComm`, so the ring exchanges are real
+//!   concurrent P2P messages and the step is wall-clock parallel.
+//!
+//! Every exchange goes through the metered fabric either way, with
+//! identical byte accounting.
 //!
 //! Ring convention: after `t` shifts device `d` holds the chunk originally
 //! owned by `(d - t) mod n`.
 
 use anyhow::{bail, Result};
 
-use crate::comm::{CommKind, Fabric};
+use crate::comm::{Collective, Fabric};
 use crate::model::params::ParamStore;
-use crate::runtime::Runtime;
+use crate::runtime::{Executor, Manifest, Runtime};
 use crate::tensor::{ops, Tensor};
 
-use super::{call, call1, Batch, Engine, StepOutput};
+use super::{call1_on, call_on, Batch, Engine, StepOutput};
+
+/// Run-shape constants + size-suffixed step names, derived once from the
+/// manifest and shared by every rank (sequential or threaded).
+#[derive(Clone, Debug)]
+pub(crate) struct StepShape {
+    pub n: usize,
+    pub b: usize,
+    pub lc: usize,
+    pub layers: usize,
+    pub to_heads_step: String,
+    pub qkv_step: String,
+}
+
+impl StepShape {
+    pub(crate) fn from_manifest(m: &Manifest) -> Result<StepShape> {
+        let n = m.ring;
+        if m.seq_len % n != 0 {
+            bail!("seq_len {} not divisible by ring size {n}", m.seq_len);
+        }
+        Ok(StepShape {
+            n,
+            b: m.batch,
+            lc: m.seq_len / n,
+            layers: m.layers,
+            to_heads_step: format!("to_heads_b{}", m.batch),
+            qkv_step: format!("qkv_proj_b{}", m.batch),
+        })
+    }
+}
+
+/// What one collective view produces for the ranks it executes: the
+/// sequential [`Fabric`] view yields the whole group's output; a threaded
+/// per-rank view yields that rank's share (loss partials, its hidden
+/// chunk) plus the globally all-reduced gradients.
+pub(crate) struct RankOutput {
+    /// MLM loss contribution of the executed ranks' tokens.
+    pub mlm: f32,
+    /// SOP loss (non-zero only on the view that executes rank 0).
+    pub sop: f32,
+    /// Final hidden states, one chunk per executed rank.
+    pub hidden: Vec<Tensor>,
+    /// Parameter gradients AFTER the cross-ring all-reduce, in global
+    /// layout.  Every rank holds the same sums up to f32 reduction-order
+    /// rounding (the threaded ring accumulates in per-rank arrival
+    /// order); each rank's own copy is bit-deterministic.
+    pub grads: ParamStore,
+}
 
 /// Per-layer forward activations stashed for the backward pass (one entry
-/// per device).  This is exactly the paper's activation memory: note there
-/// is NO stash of remote K/V chunks — they are re-circulated in backward,
-/// which is what makes the scheme memory-efficient.
+/// per executed rank).  This is exactly the paper's activation memory:
+/// note there is NO stash of remote K/V chunks — they are re-circulated in
+/// backward, which is what makes the scheme memory-efficient.
 struct LayerStash {
     x_in: Vec<Tensor>,
     q: Vec<Tensor>,
@@ -48,54 +105,400 @@ struct LayerStash {
     // rematerializes it (§Perf iteration 2), matching Megatron's recompute.
 }
 
+/// RSA stages 1+2 for the view's ranks.  `q/k/v[li]` is the local chunk of
+/// the li-th executed rank.  Returns (ctx, p) per executed rank.
+#[allow(clippy::needless_range_loop)] // loops index several rank-parallel vecs
+pub(crate) fn rsa_forward_on(
+    ex: &dyn Executor,
+    view: &dyn Collective,
+    sh: &StepShape,
+    q: &[Tensor],
+    k: &[Tensor],
+    v: &[Tensor],
+) -> Result<(Vec<Tensor>, Vec<Tensor>)> {
+    let n = sh.n;
+    let ranks = view.local_ranks();
+    let ln = ranks.len();
+    if q.len() != ln || k.len() != ln || v.len() != ln {
+        bail!("rsa_forward: need {ln} local chunks, got {}/{}/{}", q.len(), k.len(), v.len());
+    }
+    // ---- stage 1: Ring-QK^T --------------------------------------
+    // score parts indexed by ORIGIN chunk so concat restores global order
+    let mut parts: Vec<Vec<Option<Tensor>>> = (0..ln).map(|_| vec![None; n]).collect();
+    let mut k_slots: Vec<Tensor> = k.to_vec();
+    for t in 0..n {
+        for (li, &d) in ranks.iter().enumerate() {
+            let src = (d + n - t) % n;
+            parts[li][src] = Some(call1_on(ex, "scores_step", &[&q[li], &k_slots[li]])?);
+        }
+        if t + 1 < n {
+            view.ring_shift(&mut k_slots)?;
+        }
+    }
+    let mut p = Vec::with_capacity(ln);
+    for li in 0..ln {
+        let owned: Vec<Tensor> = parts[li].iter_mut().map(|o| o.take().unwrap()).collect();
+        let refs: Vec<&Tensor> = owned.iter().collect();
+        let s = ops::concat_last(&refs)?;
+        p.push(call1_on(ex, "softmax_fwd", &[&s])?);
+    }
+    // ---- stage 2: Ring-AV (Eq. 4) --------------------------------
+    let mut v_slots: Vec<Tensor> = v.to_vec();
+    let mut acc: Vec<Tensor> = q.iter().map(|t| Tensor::zeros(&t.shape)).collect();
+    for t in 0..n {
+        for (li, &d) in ranks.iter().enumerate() {
+            let src = (d + n - t) % n;
+            let p_i = ops::slice_last(&p[li], src * sh.lc, (src + 1) * sh.lc)?;
+            acc[li] = call1_on(ex, "av_step", &[&p_i, &v_slots[li], &acc[li]])?;
+        }
+        if t + 1 < n {
+            view.ring_shift(&mut v_slots)?;
+        }
+    }
+    Ok((acc, p))
+}
+
+/// RSA backward for the view's ranks.  Returns (dq, dk, dv) per executed
+/// rank with dk/dv already delivered back to their home ranks (the
+/// accumulators ride the ring).
+#[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+fn rsa_backward_on(
+    ex: &dyn Executor,
+    view: &dyn Collective,
+    sh: &StepShape,
+    d_ctx: &[Tensor],
+    q: &[Tensor],
+    p: &[Tensor],
+    k: &[Tensor],
+    v: &[Tensor],
+) -> Result<(Vec<Tensor>, Vec<Tensor>, Vec<Tensor>)> {
+    let n = sh.n;
+    let ranks = view.local_ranks();
+    let ln = ranks.len();
+    // ---- ring pass of V: dP parts + dV accumulators ride along ----
+    let mut v_slots: Vec<Tensor> = v.to_vec();
+    let mut dv_slots: Vec<Tensor> = v.iter().map(|t| Tensor::zeros(&t.shape)).collect();
+    let mut dp_parts: Vec<Vec<Option<Tensor>>> = (0..ln).map(|_| vec![None; n]).collect();
+    for t in 0..n {
+        for (li, &d) in ranks.iter().enumerate() {
+            let src = (d + n - t) % n;
+            dp_parts[li][src] =
+                Some(call1_on(ex, "attn_dp_step", &[&d_ctx[li], &v_slots[li]])?);
+            let p_i = ops::slice_last(&p[li], src * sh.lc, (src + 1) * sh.lc)?;
+            dv_slots[li] =
+                call1_on(ex, "attn_dv_step", &[&p_i, &d_ctx[li], &dv_slots[li]])?;
+        }
+        // The V chunks only need n-1 shifts (a final rotation would
+        // just return them home, pure wasted traffic); the dV
+        // accumulators take all n — the last shift delivers each dV_i
+        // to its home rank (§3.2.2).
+        if t + 1 < n {
+            view.ring_shift(&mut v_slots)?;
+        }
+        view.ring_shift(&mut dv_slots)?;
+    }
+    // ---- local softmax backward over full rows ---------------------
+    let mut ds = Vec::with_capacity(ln);
+    for li in 0..ln {
+        let owned: Vec<Tensor> = dp_parts[li].iter_mut().map(|o| o.take().unwrap()).collect();
+        let refs: Vec<&Tensor> = owned.iter().collect();
+        let dp = ops::concat_last(&refs)?;
+        ds.push(call1_on(ex, "softmax_bwd", &[&p[li], &dp])?);
+    }
+    // ---- ring pass of K: dQ accumulation + dK accumulators ---------
+    let mut k_slots: Vec<Tensor> = k.to_vec();
+    let mut dk_slots: Vec<Tensor> = k.iter().map(|t| Tensor::zeros(&t.shape)).collect();
+    let mut dq: Vec<Tensor> = q.iter().map(|t| Tensor::zeros(&t.shape)).collect();
+    for t in 0..n {
+        for (li, &d) in ranks.iter().enumerate() {
+            let src = (d + n - t) % n;
+            let ds_i = ops::slice_last(&ds[li], src * sh.lc, (src + 1) * sh.lc)?;
+            dq[li] = call1_on(ex, "attn_dq_step", &[&ds_i, &k_slots[li], &dq[li]])?;
+            dk_slots[li] = call1_on(ex, "attn_dk_step", &[&ds_i, &q[li], &dk_slots[li]])?;
+        }
+        // Same asymmetry as the V pass: K data shifts n-1 times, the
+        // dK accumulators ride all n shifts home.
+        if t + 1 < n {
+            view.ring_shift(&mut k_slots)?;
+        }
+        view.ring_shift(&mut dk_slots)?;
+    }
+    Ok((dq, dk_slots, dv_slots))
+}
+
+/// One full forward+backward step of the sequence-parallel transformer,
+/// executed for the ranks of `view`.  This is the function every rank
+/// runs — sequentially simulated under the [`Fabric`] slot view, or on
+/// its own OS thread under a `RingComm` per-rank view — and it finishes
+/// with the cross-ring gradient all-reduce, so the returned grads are the
+/// global sums on every rank.
+#[allow(clippy::needless_range_loop)] // loops index several rank-parallel vecs
+pub(crate) fn seqpar_step(
+    ex: &dyn Executor,
+    view: &dyn Collective,
+    sh: &StepShape,
+    params: &ParamStore,
+    batch: &Batch,
+) -> Result<RankOutput> {
+    let (n, b, lc) = (sh.n, sh.b, sh.lc);
+    let ranks = view.local_ranks();
+    let ln = ranks.len();
+    let p_of = |name: &str| params.get(name);
+
+    // ---- shard the batch along the sequence dimension ---------------
+    // (chunking is cheap; every rank slices the global batch the same way
+    // and keeps only its own chunks, indexed by GLOBAL rank)
+    let ids_c = ops::chunk_dim1(&batch.ids, n)?;
+    let labels_c: Vec<Tensor> = ops::chunk_dim1(&batch.labels, n)?
+        .into_iter()
+        .map(|t| t.reshaped(&[b * lc]).unwrap())
+        .collect();
+    let mask_c: Vec<Tensor> = ops::chunk_dim1(&batch.mask, n)?
+        .into_iter()
+        .map(|t| t.reshaped(&[b * lc]).unwrap())
+        .collect();
+    let pos = p_of("pos_emb")?;
+    let pos_c: Vec<Tensor> = (0..n)
+        .map(|d| ops::slice_dim0(pos, d * lc, (d + 1) * lc))
+        .collect::<Result<_>>()?;
+
+    // ---- forward ----------------------------------------------------
+    let tok = p_of("tok_emb")?;
+    let mut x: Vec<Tensor> = ranks
+        .iter()
+        .map(|&d| call1_on(ex, "embed_fwd", &[&ids_c[d], tok, &pos_c[d]]))
+        .collect::<Result<_>>()?;
+
+    let mut stashes: Vec<LayerStash> = Vec::with_capacity(sh.layers);
+    for layer in 0..sh.layers {
+        let pf = |s: &str| format!("layer{layer}.{s}");
+        let (wq, bq) = (p_of(&pf("wq"))?, p_of(&pf("bq"))?);
+        let (wk, bk) = (p_of(&pf("wk"))?, p_of(&pf("bk"))?);
+        let (wv, bv) = (p_of(&pf("wv"))?, p_of(&pf("bv"))?);
+        let mut q = Vec::new();
+        let mut k = Vec::new();
+        let mut v = Vec::new();
+        for li in 0..ln {
+            // fused QKV projection + head split (1 call, was 6)
+            let out = call_on(ex, &sh.qkv_step, &[&x[li], wq, bq, wk, bk, wv, bv])?;
+            let [qd, kd, vd]: [Tensor; 3] =
+                out.try_into().map_err(|_| anyhow::anyhow!("qkv_proj arity"))?;
+            q.push(qd);
+            k.push(kd);
+            v.push(vd);
+        }
+        let (ctx, p) = rsa_forward_on(ex, view, sh, &q, &k, &v)?;
+        let (wo, bo) = (p_of(&pf("wo"))?, p_of(&pf("bo"))?);
+        let (g1, be1) = (p_of(&pf("ln1_g"))?, p_of(&pf("ln1_b"))?);
+        let mut pre1 = Vec::new();
+        let mut xm = Vec::new();
+        for li in 0..ln {
+            let flat = call1_on(ex, "from_heads", &[&ctx[li]])?;
+            let attn = call1_on(ex, "linear_fwd", &[&flat, wo, bo])?;
+            // fused residual-add + LayerNorm (also returns the pre-LN
+            // sum, the same stash the unfused path kept)
+            let out = call_on(ex, "add_ln_fwd", &[&x[li], &attn, g1, be1])?;
+            let [y, pre]: [Tensor; 2] =
+                out.try_into().map_err(|_| anyhow::anyhow!("add_ln arity"))?;
+            xm.push(y);
+            pre1.push(pre);
+        }
+        let (w1, b1) = (p_of(&pf("w1"))?, p_of(&pf("b1"))?);
+        let (w2, b2) = (p_of(&pf("w2"))?, p_of(&pf("b2"))?);
+        let (g2, be2) = (p_of(&pf("ln2_g"))?, p_of(&pf("ln2_b"))?);
+        let mut pre2 = Vec::new();
+        let mut x_next = Vec::new();
+        for li in 0..ln {
+            // fused MLP block (hidden activation rematerialized in bwd)
+            let m2 = call1_on(ex, "mlp_fwd", &[&xm[li], w1, b1, w2, b2])?;
+            let out = call_on(ex, "add_ln_fwd", &[&xm[li], &m2, g2, be2])?;
+            let [y, pre]: [Tensor; 2] =
+                out.try_into().map_err(|_| anyhow::anyhow!("add_ln arity"))?;
+            x_next.push(y);
+            pre2.push(pre);
+        }
+        stashes.push(LayerStash {
+            x_in: std::mem::replace(&mut x, x_next),
+            q, k, v, p, ctx, pre1, xm, pre2,
+        });
+    }
+
+    // ---- losses -------------------------------------------------------
+    // Every executed rank accumulates into its OWN grad store; the
+    // cross-ring all-reduce at the bottom combines them.  Under the
+    // sequential view this deliberately holds all n stores at once — the
+    // same per-rank gradient memory the real device group holds — where
+    // the old engine shortcut summed into one store and only metered.
+    let mut grads: Vec<ParamStore> = (0..ln).map(|_| params.zeros_like()).collect();
+    let (mlm_w, mlm_b) = (p_of("mlm_w")?, p_of("mlm_b")?);
+    let mut mlm_total = 0.0f32;
+    let mut dx: Vec<Tensor> = Vec::with_capacity(ln);
+    for li in 0..ln {
+        let d = ranks[li];
+        let out = call_on(ex, "mlm_loss", &[&x[li], mlm_w, mlm_b, &labels_c[d], &mask_c[d]])?;
+        let [lo, dxd, dw, db]: [Tensor; 4] = out
+            .try_into()
+            .map_err(|_| anyhow::anyhow!("mlm_loss arity"))?;
+        mlm_total += lo.scalar_f32()?;
+        dx.push(dxd);
+        ops::add_assign(grads[li].get_mut("mlm_w")?, &dw)?;
+        ops::add_assign(grads[li].get_mut("mlm_b")?, &db)?;
+    }
+    // SOP head lives on rank 0 (it owns every sequence's CLS token).
+    let mut sop = 0.0f32;
+    if let Some(li0) = ranks.iter().position(|&d| d == 0) {
+        let (sop_w, sop_b) = (p_of("sop_w")?, p_of("sop_b")?);
+        let out = call_on(ex, "sop_loss", &[&x[li0], sop_w, sop_b, &batch.sop_labels])?;
+        let [sop_lo, dx0, dsw, dsb]: [Tensor; 4] = out
+            .try_into()
+            .map_err(|_| anyhow::anyhow!("sop_loss arity"))?;
+        sop = sop_lo.scalar_f32()?;
+        ops::add_assign(&mut dx[li0], &dx0)?;
+        ops::add_assign(grads[li0].get_mut("sop_w")?, &dsw)?;
+        ops::add_assign(grads[li0].get_mut("sop_b")?, &dsb)?;
+    }
+
+    let hidden = x;
+
+    // ---- backward ------------------------------------------------------
+    for layer in (0..sh.layers).rev() {
+        let pf = |s: &str| format!("layer{layer}.{s}");
+        let st = &stashes[layer];
+        // LN2
+        let (g2, be2) = (p_of(&pf("ln2_g"))?, p_of(&pf("ln2_b"))?);
+        let mut d_pre2 = Vec::with_capacity(ln);
+        for li in 0..ln {
+            let out = call_on(ex, "ln_bwd", &[&st.pre2[li], g2, be2, &dx[li]])?;
+            let [dp, dg, db]: [Tensor; 3] =
+                out.try_into().map_err(|_| anyhow::anyhow!("ln_bwd arity"))?;
+            ops::add_assign(grads[li].get_mut(&pf("ln2_g"))?, &dg)?;
+            ops::add_assign(grads[li].get_mut(&pf("ln2_b"))?, &db)?;
+            d_pre2.push(dp);
+        }
+        // MLP (fused bwd: rematerializes the hidden activation inside)
+        let (w1, b1) = (p_of(&pf("w1"))?, p_of(&pf("b1"))?);
+        let (w2, b2) = (p_of(&pf("w2"))?, p_of(&pf("b2"))?);
+        let mut dxm = Vec::with_capacity(ln);
+        for li in 0..ln {
+            let out = call_on(ex, "mlp_bwd", &[&st.xm[li], w1, b1, w2, b2, &d_pre2[li]])?;
+            let [dxmlp, dw1, db1, dw2, db2]: [Tensor; 5] =
+                out.try_into().map_err(|_| anyhow::anyhow!("mlp_bwd arity"))?;
+            ops::add_assign(grads[li].get_mut(&pf("w1"))?, &dw1)?;
+            ops::add_assign(grads[li].get_mut(&pf("b1"))?, &db1)?;
+            ops::add_assign(grads[li].get_mut(&pf("w2"))?, &dw2)?;
+            ops::add_assign(grads[li].get_mut(&pf("b2"))?, &db2)?;
+            dxm.push(call1_on(ex, "add", &[&d_pre2[li], &dxmlp])?); // residual join
+        }
+        // LN1
+        let (g1, be1) = (p_of(&pf("ln1_g"))?, p_of(&pf("ln1_b"))?);
+        let mut d_pre1 = Vec::with_capacity(ln);
+        for li in 0..ln {
+            let out = call_on(ex, "ln_bwd", &[&st.pre1[li], g1, be1, &dxm[li]])?;
+            let [dp, dg, db]: [Tensor; 3] =
+                out.try_into().map_err(|_| anyhow::anyhow!("ln_bwd arity"))?;
+            ops::add_assign(grads[li].get_mut(&pf("ln1_g"))?, &dg)?;
+            ops::add_assign(grads[li].get_mut(&pf("ln1_b"))?, &db)?;
+            d_pre1.push(dp);
+        }
+        // attention out-projection
+        let (wo, bo) = (p_of(&pf("wo"))?, p_of(&pf("bo"))?);
+        let mut d_ctx = Vec::with_capacity(ln);
+        for li in 0..ln {
+            let flat = call1_on(ex, "from_heads", &[&st.ctx[li]])?;
+            let out = call_on(ex, "linear_bwd", &[&flat, wo, bo, &d_pre1[li]])?;
+            let [dflat, dwo, dbo]: [Tensor; 3] =
+                out.try_into().map_err(|_| anyhow::anyhow!("linear_bwd arity"))?;
+            ops::add_assign(grads[li].get_mut(&pf("wo"))?, &dwo)?;
+            ops::add_assign(grads[li].get_mut(&pf("bo"))?, &dbo)?;
+            d_ctx.push(call1_on(ex, &sh.to_heads_step, &[&dflat])?);
+        }
+        // RSA backward (the ring)
+        let (dq, dk, dv) = rsa_backward_on(ex, view, sh, &d_ctx, &st.q, &st.p, &st.k, &st.v)?;
+        // fused qkv backward (1 call, was 6) + residual join
+        let (wq, wk, wv) = (p_of(&pf("wq"))?, p_of(&pf("wk"))?, p_of(&pf("wv"))?);
+        let mut new_dx = Vec::with_capacity(ln);
+        for li in 0..ln {
+            let out = call_on(
+                ex,
+                "qkv_proj_bwd",
+                &[&st.x_in[li], wq, wk, wv, &dq[li], &dk[li], &dv[li]],
+            )?;
+            let [dxp, dwq, dbq, dwk, dbk, dwv, dbv]: [Tensor; 7] = out
+                .try_into()
+                .map_err(|_| anyhow::anyhow!("qkv_proj_bwd arity"))?;
+            for (gname, g) in [
+                ("wq", dwq), ("bq", dbq), ("wk", dwk),
+                ("bk", dbk), ("wv", dwv), ("bv", dbv),
+            ] {
+                ops::add_assign(grads[li].get_mut(&pf(gname))?, &g)?;
+            }
+            let mut dx_d = d_pre1[li].clone();
+            ops::add_assign(&mut dx_d, &dxp)?;
+            new_dx.push(dx_d);
+        }
+        dx = new_dx;
+    }
+
+    // embeddings
+    for li in 0..ln {
+        let d = ranks[li];
+        let out = call_on(ex, "embed_bwd", &[&ids_c[d], tok, &pos_c[d], &dx[li]])?;
+        let [dtok, dpos]: [Tensor; 2] =
+            out.try_into().map_err(|_| anyhow::anyhow!("embed_bwd arity"))?;
+        ops::add_assign(grads[li].get_mut("tok_emb")?, &dtok)?;
+        ops::add_into_dim0(grads[li].get_mut("pos_emb")?, &dpos, d * lc)?;
+    }
+
+    // Parameter-gradient all-reduce across the ring group: each rank
+    // computed grads from its own tokens; after the reduce every rank
+    // holds the global sum, ready for the optimizer.  Metered on the
+    // canonical ring formula — 2(n-1)·C total per tensor, the same group
+    // accounting Fabric and RingComm share (rust/tests/comm_volume.rs).
+    if n > 1 {
+        let names: Vec<String> = grads[0].values.keys().cloned().collect();
+        for name in &names {
+            let mut slots: Vec<Tensor> = grads
+                .iter_mut()
+                .map(|g| std::mem::replace(g.values.get_mut(name).unwrap(), Tensor::zeros(&[])))
+                .collect();
+            view.all_reduce_sum(&mut slots)?;
+            for (g, t) in grads.iter_mut().zip(slots) {
+                *g.values.get_mut(name).unwrap() = t;
+            }
+        }
+    }
+
+    Ok(RankOutput {
+        mlm: mlm_total,
+        sop,
+        hidden,
+        grads: grads.swap_remove(0),
+    })
+}
+
+/// The sequential sequence-parallel engine: simulates all `n` ring ranks
+/// deterministically on the calling thread over the [`Fabric`] slot view.
+/// (For genuinely concurrent ranks over the same step logic, see
+/// `exec::DistRunner`.)
 pub struct SeqParEngine<'rt> {
     rt: &'rt Runtime,
     pub fabric: Fabric,
     pub n: usize,
-    b: usize,
-    l: usize,
-    lc: usize,
-    layers: usize,
-    to_heads_step: String,
-    qkv_step: String,
+    shape: StepShape,
 }
 
 impl<'rt> SeqParEngine<'rt> {
     pub fn new(rt: &'rt Runtime, fabric: Fabric) -> Result<SeqParEngine<'rt>> {
         let m = rt.manifest();
         let n = fabric.n;
-        if m.seq_len % n != 0 {
-            bail!("seq_len {} not divisible by ring size {n}", m.seq_len);
-        }
         if m.ring != n {
             bail!(
                 "artifacts were lowered for ring={}, engine asked for {n}; re-run `make artifacts`",
                 m.ring
             );
         }
-        Ok(SeqParEngine {
-            rt,
-            fabric,
-            n,
-            b: m.batch,
-            l: m.seq_len,
-            lc: m.seq_len / n,
-            layers: m.layers,
-            to_heads_step: format!("to_heads_b{}", m.batch),
-            qkv_step: format!("qkv_proj_b{}", m.batch),
-        })
-    }
-
-    fn to_heads(&self, x: &Tensor) -> Result<Tensor> {
-        call1(self.rt, &self.to_heads_step, &[x])
-    }
-
-    fn from_heads(&self, x: &Tensor) -> Result<Tensor> {
-        call1(self.rt, "from_heads", &[x])
-    }
-
-    fn linear(&self, x: &Tensor, w: &Tensor, b: &Tensor) -> Result<Tensor> {
-        call1(self.rt, "linear_fwd", &[x, w, b])
+        let shape = StepShape::from_manifest(m)?;
+        Ok(SeqParEngine { rt, fabric, n, shape })
     }
 
     /// Public API: Ring Self-Attention over pre-chunked q/k/v.
@@ -112,115 +515,7 @@ impl<'rt> SeqParEngine<'rt> {
         if q.len() != self.n || k.len() != self.n || v.len() != self.n {
             bail!("rsa_attention: need {} chunks, got {}/{}/{}", self.n, q.len(), k.len(), v.len());
         }
-        Ok(self.rsa_forward(q, k, v)?.0)
-    }
-
-    /// RSA stages 1+2 for all devices.  `q/k/v[d]` are the local chunks.
-    /// Returns (ctx, p) per device.
-    fn rsa_forward(
-        &self,
-        q: &[Tensor],
-        k: &[Tensor],
-        v: &[Tensor],
-    ) -> Result<(Vec<Tensor>, Vec<Tensor>)> {
-        let n = self.n;
-        // ---- stage 1: Ring-QK^T --------------------------------------
-        // score parts indexed by ORIGIN chunk so concat restores global order
-        let mut parts: Vec<Vec<Option<Tensor>>> = (0..n).map(|_| vec![None; n]).collect();
-        let mut k_slots: Vec<Tensor> = k.to_vec();
-        for t in 0..n {
-            for d in 0..n {
-                let src = (d + n - t) % n;
-                parts[d][src] = Some(call1(self.rt, "scores_step", &[&q[d], &k_slots[d]])?);
-            }
-            if t + 1 < n {
-                self.fabric.ring_shift(&mut k_slots)?;
-            }
-        }
-        let mut p = Vec::with_capacity(n);
-        for d in 0..n {
-            let owned: Vec<Tensor> = parts[d].iter_mut().map(|o| o.take().unwrap()).collect();
-            let refs: Vec<&Tensor> = owned.iter().collect();
-            let s = ops::concat_last(&refs)?;
-            p.push(call1(self.rt, "softmax_fwd", &[&s])?);
-        }
-        // ---- stage 2: Ring-AV (Eq. 4) --------------------------------
-        let mut v_slots: Vec<Tensor> = v.to_vec();
-        let mut acc: Vec<Tensor> = q.iter().map(|t| Tensor::zeros(&t.shape)).collect();
-        for t in 0..n {
-            for d in 0..n {
-                let src = (d + n - t) % n;
-                let p_i = ops::slice_last(&p[d], src * self.lc, (src + 1) * self.lc)?;
-                acc[d] = call1(self.rt, "av_step", &[&p_i, &v_slots[d], &acc[d]])?;
-            }
-            if t + 1 < n {
-                self.fabric.ring_shift(&mut v_slots)?;
-            }
-        }
-        Ok((acc, p))
-    }
-
-    /// RSA backward for all devices.  Returns (dq, dk, dv) per device with
-    /// dk/dv already delivered back to their home devices (the
-    /// accumulators ride the ring).
-    fn rsa_backward(
-        &self,
-        d_ctx: &[Tensor],
-        q: &[Tensor],
-        p: &[Tensor],
-        k: &[Tensor],
-        v: &[Tensor],
-    ) -> Result<(Vec<Tensor>, Vec<Tensor>, Vec<Tensor>)> {
-        let n = self.n;
-        // ---- ring pass of V: dP parts + dV accumulators ride along ----
-        let mut v_slots: Vec<Tensor> = v.to_vec();
-        let mut dv_slots: Vec<Tensor> = v.iter().map(|t| Tensor::zeros(&t.shape)).collect();
-        let mut dp_parts: Vec<Vec<Option<Tensor>>> = (0..n).map(|_| vec![None; n]).collect();
-        for t in 0..n {
-            for d in 0..n {
-                let src = (d + n - t) % n;
-                dp_parts[d][src] =
-                    Some(call1(self.rt, "attn_dp_step", &[&d_ctx[d], &v_slots[d]])?);
-                let p_i = ops::slice_last(&p[d], src * self.lc, (src + 1) * self.lc)?;
-                dv_slots[d] =
-                    call1(self.rt, "attn_dv_step", &[&p_i, &d_ctx[d], &dv_slots[d]])?;
-            }
-            // The V chunks only need n-1 shifts (a final rotation would
-            // just return them home, pure wasted traffic); the dV
-            // accumulators take all n — the last shift delivers each dV_i
-            // to its home device (§3.2.2).
-            if t + 1 < n {
-                self.fabric.ring_shift(&mut v_slots)?;
-            }
-            self.fabric.ring_shift(&mut dv_slots)?;
-        }
-        // ---- local softmax backward over full rows ---------------------
-        let mut ds = Vec::with_capacity(n);
-        for d in 0..n {
-            let owned: Vec<Tensor> = dp_parts[d].iter_mut().map(|o| o.take().unwrap()).collect();
-            let refs: Vec<&Tensor> = owned.iter().collect();
-            let dp = ops::concat_last(&refs)?;
-            ds.push(call1(self.rt, "softmax_bwd", &[&p[d], &dp])?);
-        }
-        // ---- ring pass of K: dQ accumulation + dK accumulators ---------
-        let mut k_slots: Vec<Tensor> = k.to_vec();
-        let mut dk_slots: Vec<Tensor> = k.iter().map(|t| Tensor::zeros(&t.shape)).collect();
-        let mut dq: Vec<Tensor> = q.iter().map(|t| Tensor::zeros(&t.shape)).collect();
-        for t in 0..n {
-            for d in 0..n {
-                let src = (d + n - t) % n;
-                let ds_i = ops::slice_last(&ds[d], src * self.lc, (src + 1) * self.lc)?;
-                dq[d] = call1(self.rt, "attn_dq_step", &[&ds_i, &k_slots[d], &dq[d]])?;
-                dk_slots[d] = call1(self.rt, "attn_dk_step", &[&ds_i, &q[d], &dk_slots[d]])?;
-            }
-            // Same asymmetry as the V pass: K data shifts n-1 times, the
-            // dK accumulators ride all n shifts home.
-            if t + 1 < n {
-                self.fabric.ring_shift(&mut k_slots)?;
-            }
-            self.fabric.ring_shift(&mut dk_slots)?;
-        }
-        Ok((dq, dk_slots, dv_slots))
+        Ok(rsa_forward_on(self.rt.backend(), &self.fabric, &self.shape, q, k, v)?.0)
     }
 }
 
@@ -234,218 +529,13 @@ impl<'rt> Engine for SeqParEngine<'rt> {
     }
 
     fn forward_backward(&self, params: &ParamStore, batch: &Batch) -> Result<StepOutput> {
-        let (n, b, l, lc) = (self.n, self.b, self.l, self.lc);
-        let rt = self.rt;
-        let p_of = |name: &str| params.get(name);
-
-        // ---- shard the batch along the sequence dimension ---------------
-        let ids_c = ops::chunk_dim1(&batch.ids, n)?;
-        let labels_c: Vec<Tensor> = ops::chunk_dim1(&batch.labels, n)?
-            .into_iter()
-            .map(|t| t.reshaped(&[b * lc]).unwrap())
-            .collect();
-        let mask_c: Vec<Tensor> = ops::chunk_dim1(&batch.mask, n)?
-            .into_iter()
-            .map(|t| t.reshaped(&[b * lc]).unwrap())
-            .collect();
-        let pos = p_of("pos_emb")?;
-        let pos_c: Vec<Tensor> = (0..n)
-            .map(|d| ops::slice_dim0(pos, d * lc, (d + 1) * lc))
-            .collect::<Result<_>>()?;
-
-        // ---- forward ----------------------------------------------------
-        let tok = p_of("tok_emb")?;
-        let mut x: Vec<Tensor> = (0..n)
-            .map(|d| call1(rt, "embed_fwd", &[&ids_c[d], tok, &pos_c[d]]))
-            .collect::<Result<_>>()?;
-
-        let mut stashes: Vec<LayerStash> = Vec::with_capacity(self.layers);
-        for li in 0..self.layers {
-            let pf = |s: &str| format!("layer{li}.{s}");
-            let (wq, bq) = (p_of(&pf("wq"))?, p_of(&pf("bq"))?);
-            let (wk, bk) = (p_of(&pf("wk"))?, p_of(&pf("bk"))?);
-            let (wv, bv) = (p_of(&pf("wv"))?, p_of(&pf("bv"))?);
-            let mut q = Vec::new();
-            let mut k = Vec::new();
-            let mut v = Vec::new();
-            for d in 0..n {
-                // fused QKV projection + head split (1 call, was 6)
-                let out = call(rt, &self.qkv_step, &[&x[d], wq, bq, wk, bk, wv, bv])?;
-                let [qd, kd, vd]: [Tensor; 3] =
-                    out.try_into().map_err(|_| anyhow::anyhow!("qkv_proj arity"))?;
-                q.push(qd);
-                k.push(kd);
-                v.push(vd);
-            }
-            let (ctx, p) = self.rsa_forward(&q, &k, &v)?;
-            let (wo, bo) = (p_of(&pf("wo"))?, p_of(&pf("bo"))?);
-            let (g1, be1) = (p_of(&pf("ln1_g"))?, p_of(&pf("ln1_b"))?);
-            let mut pre1 = Vec::new();
-            let mut xm = Vec::new();
-            for d in 0..n {
-                let attn = self.linear(&self.from_heads(&ctx[d])?, wo, bo)?;
-                // fused residual-add + LayerNorm (also returns the pre-LN
-                // sum, the same stash the unfused path kept)
-                let out = call(rt, "add_ln_fwd", &[&x[d], &attn, g1, be1])?;
-                let [y, pre]: [Tensor; 2] =
-                    out.try_into().map_err(|_| anyhow::anyhow!("add_ln arity"))?;
-                xm.push(y);
-                pre1.push(pre);
-            }
-            let (w1, b1) = (p_of(&pf("w1"))?, p_of(&pf("b1"))?);
-            let (w2, b2) = (p_of(&pf("w2"))?, p_of(&pf("b2"))?);
-            let (g2, be2) = (p_of(&pf("ln2_g"))?, p_of(&pf("ln2_b"))?);
-            let mut pre2 = Vec::new();
-            let mut x_next = Vec::new();
-            for d in 0..n {
-                // fused MLP block (hidden activation rematerialized in bwd)
-                let m2 = call1(rt, "mlp_fwd", &[&xm[d], w1, b1, w2, b2])?;
-                let out = call(rt, "add_ln_fwd", &[&xm[d], &m2, g2, be2])?;
-                let [y, pre]: [Tensor; 2] =
-                    out.try_into().map_err(|_| anyhow::anyhow!("add_ln arity"))?;
-                x_next.push(y);
-                pre2.push(pre);
-            }
-            stashes.push(LayerStash {
-                x_in: std::mem::replace(&mut x, x_next),
-                q, k, v, p, ctx, pre1, xm, pre2,
-            });
-        }
-
-        // ---- losses -------------------------------------------------------
-        let mut grads = params.zeros_like();
-        let (mlm_w, mlm_b) = (p_of("mlm_w")?, p_of("mlm_b")?);
-        let mut mlm_total = 0.0f32;
-        let mut dx: Vec<Tensor> = Vec::with_capacity(n);
-        for d in 0..n {
-            let out = call(rt, "mlm_loss", &[&x[d], mlm_w, mlm_b, &labels_c[d], &mask_c[d]])?;
-            let [lo, dxd, dw, db]: [Tensor; 4] = out
-                .try_into()
-                .map_err(|_| anyhow::anyhow!("mlm_loss arity"))?;
-            mlm_total += lo.scalar_f32()?;
-            dx.push(dxd);
-            ops::add_assign(grads.get_mut("mlm_w")?, &dw)?;
-            ops::add_assign(grads.get_mut("mlm_b")?, &db)?;
-        }
-        // SOP head lives on device 0 (it owns every sequence's CLS token).
-        let (sop_w, sop_b) = (p_of("sop_w")?, p_of("sop_b")?);
-        let out = call(rt, "sop_loss", &[&x[0], sop_w, sop_b, &batch.sop_labels])?;
-        let [sop_lo, dx0, dsw, dsb]: [Tensor; 4] = out
-            .try_into()
-            .map_err(|_| anyhow::anyhow!("sop_loss arity"))?;
-        let sop = sop_lo.scalar_f32()?;
-        ops::add_assign(&mut dx[0], &dx0)?;
-        ops::add_assign(grads.get_mut("sop_w")?, &dsw)?;
-        ops::add_assign(grads.get_mut("sop_b")?, &dsb)?;
-
-        let hidden = x;
-
-        // ---- backward ------------------------------------------------------
-        for li in (0..self.layers).rev() {
-            let pf = |s: &str| format!("layer{li}.{s}");
-            let st = &stashes[li];
-            // LN2
-            let (g2, be2) = (p_of(&pf("ln2_g"))?, p_of(&pf("ln2_b"))?);
-            let mut d_pre2 = Vec::with_capacity(n);
-            for d in 0..n {
-                let out = call(rt, "ln_bwd", &[&st.pre2[d], g2, be2, &dx[d]])?;
-                let [dp, dg, db]: [Tensor; 3] =
-                    out.try_into().map_err(|_| anyhow::anyhow!("ln_bwd arity"))?;
-                ops::add_assign(grads.get_mut(&pf("ln2_g"))?, &dg)?;
-                ops::add_assign(grads.get_mut(&pf("ln2_b"))?, &db)?;
-                d_pre2.push(dp);
-            }
-            // MLP (fused bwd: rematerializes the hidden activation inside)
-            let (w1, b1) = (p_of(&pf("w1"))?, p_of(&pf("b1"))?);
-            let (w2, b2) = (p_of(&pf("w2"))?, p_of(&pf("b2"))?);
-            let mut dxm = Vec::with_capacity(n);
-            for d in 0..n {
-                let out = call(rt, "mlp_bwd", &[&st.xm[d], w1, b1, w2, b2, &d_pre2[d]])?;
-                let [dxmlp, dw1, db1, dw2, db2]: [Tensor; 5] =
-                    out.try_into().map_err(|_| anyhow::anyhow!("mlp_bwd arity"))?;
-                ops::add_assign(grads.get_mut(&pf("w1"))?, &dw1)?;
-                ops::add_assign(grads.get_mut(&pf("b1"))?, &db1)?;
-                ops::add_assign(grads.get_mut(&pf("w2"))?, &dw2)?;
-                ops::add_assign(grads.get_mut(&pf("b2"))?, &db2)?;
-                dxm.push(call1(rt, "add", &[&d_pre2[d], &dxmlp])?); // residual join
-            }
-            // LN1
-            let (g1, be1) = (p_of(&pf("ln1_g"))?, p_of(&pf("ln1_b"))?);
-            let mut d_pre1 = Vec::with_capacity(n);
-            for d in 0..n {
-                let out = call(rt, "ln_bwd", &[&st.pre1[d], g1, be1, &dxm[d]])?;
-                let [dp, dg, db]: [Tensor; 3] =
-                    out.try_into().map_err(|_| anyhow::anyhow!("ln_bwd arity"))?;
-                ops::add_assign(grads.get_mut(&pf("ln1_g"))?, &dg)?;
-                ops::add_assign(grads.get_mut(&pf("ln1_b"))?, &db)?;
-                d_pre1.push(dp);
-            }
-            // attention out-projection
-            let (wo, bo) = (p_of(&pf("wo"))?, p_of(&pf("bo"))?);
-            let mut d_ctx = Vec::with_capacity(n);
-            for d in 0..n {
-                let flat = self.from_heads(&st.ctx[d])?;
-                let out = call(rt, "linear_bwd", &[&flat, wo, bo, &d_pre1[d]])?;
-                let [dflat, dwo, dbo]: [Tensor; 3] =
-                    out.try_into().map_err(|_| anyhow::anyhow!("linear_bwd arity"))?;
-                ops::add_assign(grads.get_mut(&pf("wo"))?, &dwo)?;
-                ops::add_assign(grads.get_mut(&pf("bo"))?, &dbo)?;
-                d_ctx.push(self.to_heads(&dflat)?);
-            }
-            // RSA backward (the ring)
-            let (dq, dk, dv) = self.rsa_backward(&d_ctx, &st.q, &st.p, &st.k, &st.v)?;
-            // fused qkv backward (1 call, was 6) + residual join
-            let (wq, wk, wv) = (p_of(&pf("wq"))?, p_of(&pf("wk"))?, p_of(&pf("wv"))?);
-            let mut new_dx = Vec::with_capacity(n);
-            for d in 0..n {
-                let out = call(
-                    rt,
-                    "qkv_proj_bwd",
-                    &[&st.x_in[d], wq, wk, wv, &dq[d], &dk[d], &dv[d]],
-                )?;
-                let [dxp, dwq, dbq, dwk, dbk, dwv, dbv]: [Tensor; 7] = out
-                    .try_into()
-                    .map_err(|_| anyhow::anyhow!("qkv_proj_bwd arity"))?;
-                for (gname, g) in [
-                    ("wq", dwq), ("bq", dbq), ("wk", dwk),
-                    ("bk", dbk), ("wv", dwv), ("bv", dbv),
-                ] {
-                    ops::add_assign(grads.get_mut(&pf(gname))?, &g)?;
-                }
-                let mut dx_d = d_pre1[d].clone();
-                ops::add_assign(&mut dx_d, &dxp)?;
-                new_dx.push(dx_d);
-            }
-            dx = new_dx;
-        }
-
-        // embeddings
-        for d in 0..n {
-            let out = call(rt, "embed_bwd", &[&ids_c[d], tok, &pos_c[d], &dx[d]])?;
-            let [dtok, dpos]: [Tensor; 2] =
-                out.try_into().map_err(|_| anyhow::anyhow!("embed_bwd arity"))?;
-            ops::add_assign(grads.get_mut("tok_emb")?, &dtok)?;
-            ops::add_into_dim0(grads.get_mut("pos_emb")?, &dpos, d * lc)?;
-        }
-
-        // Parameter-gradient reduction across the ring group: each device
-        // computed grads from its own tokens; the sum is the global grad.
-        // The sequential simulation already summed — meter the all-reduce
-        // the real cluster would perform (ring: 2(n-1)/n * bytes).
-        if n > 1 {
-            let param_bytes: u64 = grads.values.values().map(|t| t.bytes() as u64).sum();
-            self.fabric
-                .meter
-                .add(CommKind::AllReduce, 2 * (n as u64 - 1) * param_bytes / n as u64);
-        }
-
-        let _ = l; // (kept for symmetry with the python chain signature)
+        let out = seqpar_step(self.rt.backend(), &self.fabric, &self.shape, params, batch)?;
         Ok(StepOutput {
-            loss: mlm_total + sop,
-            mlm: mlm_total,
-            sop,
-            grads,
-            hidden,
+            loss: out.mlm + out.sop,
+            mlm: out.mlm,
+            sop: out.sop,
+            grads: out.grads,
+            hidden: out.hidden,
         })
     }
 }

@@ -134,6 +134,23 @@ impl Runtime {
         }
     }
 
+    /// The active backend as a *thread-shareable* executor, for engines
+    /// that run one OS thread per rank (`exec::DistRunner`).  The native
+    /// backend is `Send + Sync`; the PJRT backend's `Rc`-based client
+    /// handles are thread-local by construction, so it refuses here (but
+    /// stays fully usable on the sequential engines).
+    pub fn sync_backend(&self) -> Result<&(dyn Executor + Sync)> {
+        match self {
+            Runtime::Native(b) => Ok(b),
+            #[cfg(feature = "backend-xla")]
+            Runtime::Xla(_) => bail!(
+                "the xla-pjrt backend holds Rc-based PJRT handles and cannot \
+                 cross threads; threaded execution needs the native backend \
+                 (run with --backend native)"
+            ),
+        }
+    }
+
     pub fn manifest(&self) -> &Manifest {
         self.backend().manifest()
     }

@@ -74,12 +74,16 @@ fn gradient_allreduce_metered() {
     let engine = SeqParEngine::new(&rt, Fabric::new(m.ring, meter.clone())).unwrap();
     let out = engine.forward_backward(&params, &batch).unwrap();
 
-    // ring all-reduce of all parameter grads: 2(n-1)/n * bytes
+    // ring all-reduce of every parameter-grad tensor, group-total
+    // accounting (Fabric convention: 2(n-1)·C bytes sent across the group
+    // per tensor — summing over tensors gives 2(n-1) · param_bytes).  The
+    // threaded RingComm meters the identical totals, which is what makes
+    // sequential and threaded runs comparable byte-for-byte.
     let n = m.ring as u64;
     let param_bytes: u64 = out.grads.values.values().map(|t| t.bytes() as u64).sum();
     assert_eq!(
         meter.get(CommKind::AllReduce),
-        2 * (n - 1) * param_bytes / n,
+        2 * (n - 1) * param_bytes,
         "gradient all-reduce accounting"
     );
 }

@@ -1,0 +1,179 @@
+//! Integration: the threaded `exec::DistRunner` computes THE SAME training
+//! step as the sequential engines.
+//!
+//! For n ∈ {2, 4, 8} ranks on the native backend: loss, every parameter
+//! gradient, and the per-rank hidden chunks of the threaded runner match
+//! both the sequential `SeqParEngine` and the serial (single-device)
+//! engine within 1e-4.  Two extra properties the threaded path must hold:
+//!
+//! * determinism — same seed, two runs ⇒ bit-identical results, no matter
+//!   how the OS schedules the rank threads (the dataflow, not the thread
+//!   interleaving, decides every float);
+//! * meter parity — sequential and threaded runs record byte-identical
+//!   ring-P2P and all-reduce traffic.
+
+use seqpar::backend::native::NativeConfig;
+use seqpar::comm::{CommKind, Fabric, Meter};
+use seqpar::exec::DistRunner;
+use seqpar::model::params::ParamStore;
+use seqpar::parallel::sequence::SeqParEngine;
+use seqpar::parallel::tensorp::TensorParEngine;
+use seqpar::parallel::{Batch, Engine, StepOutput};
+use seqpar::runtime::Runtime;
+use seqpar::tensor::ops;
+use seqpar::train::data::{Corpus, CorpusConfig};
+
+const TOL: f32 = 1e-4;
+
+fn runtime(n: usize) -> Runtime {
+    Runtime::native(NativeConfig { ring: n, ..NativeConfig::tiny() }).unwrap()
+}
+
+fn batch_for(rt: &Runtime, seed: u64) -> Batch {
+    let m = rt.manifest();
+    Corpus::new(CorpusConfig::new(m.vocab, m.seq_len, m.batch), seed)
+        .next_batch()
+        .unwrap()
+}
+
+fn assert_grads_close(tag: &str, a: &StepOutput, b: &StepOutput, tol: f32) {
+    for (name, g) in &b.grads.values {
+        let d = ops::max_abs_diff(&a.grads.values[name], g).unwrap();
+        assert!(d < tol, "{tag}: grad {name} diverged, Δ={d}");
+    }
+}
+
+#[test]
+fn threaded_matches_sequential_and_serial() {
+    for n in [2usize, 4, 8] {
+        let rt = runtime(n);
+        let m = rt.manifest().clone();
+        let params = ParamStore::synthetic(&m);
+        let batch = batch_for(&rt, 21);
+
+        let serial = TensorParEngine::new(&rt, Fabric::new(1, Meter::new())).unwrap();
+        let s = serial.forward_backward(&params, &batch).unwrap();
+
+        let seq = SeqParEngine::new(&rt, Fabric::new(n, Meter::new())).unwrap();
+        let q = seq.forward_backward(&params, &batch).unwrap();
+
+        let dist = DistRunner::new(&rt, Meter::new()).unwrap();
+        assert_eq!(dist.n, n);
+        let t = dist.forward_backward(&params, &batch).unwrap();
+
+        assert!(
+            (t.loss - s.loss).abs() < TOL,
+            "n={n}: threaded loss {} vs serial {}",
+            t.loss,
+            s.loss
+        );
+        assert!(
+            (t.loss - q.loss).abs() < TOL,
+            "n={n}: threaded loss {} vs sequential {}",
+            t.loss,
+            q.loss
+        );
+        assert_grads_close(&format!("n={n} threaded vs serial"), &t, &s, TOL);
+        assert_grads_close(&format!("n={n} threaded vs sequential"), &t, &q, TOL);
+
+        // hidden chunks: identical per-rank dataflow ⇒ match the
+        // sequential simulation chunk by chunk...
+        assert_eq!(t.hidden.len(), n);
+        for (d, (th, qh)) in t.hidden.iter().zip(&q.hidden).enumerate() {
+            let diff = ops::max_abs_diff(th, qh).unwrap();
+            assert!(diff < TOL, "n={n}: hidden chunk {d} diverged, Δ={diff}");
+        }
+        // ...and reassemble to the serial hidden states
+        let lc = m.seq_len / n;
+        let chunks3d: Vec<_> = t
+            .hidden
+            .iter()
+            .map(|h| h.clone().reshaped(&[m.batch, lc, m.hidden]).unwrap())
+            .collect();
+        let refs: Vec<_> = chunks3d.iter().collect();
+        let full = ops::concat_dim(&refs, 1)
+            .unwrap()
+            .reshaped(&[m.batch * m.seq_len, m.hidden])
+            .unwrap();
+        let dh = ops::max_abs_diff(&full, &s.hidden[0]).unwrap();
+        assert!(dh < TOL, "n={n}: reassembled hidden vs serial Δ={dh}");
+    }
+}
+
+/// Same seed, two threaded runs ⇒ identical bits, regardless of how the
+/// OS interleaves the rank threads.
+#[test]
+fn threaded_run_is_deterministic() {
+    let n = 4;
+    let rt = runtime(n);
+    let params = ParamStore::synthetic(rt.manifest());
+    let batch = batch_for(&rt, 33);
+
+    let dist = DistRunner::new(&rt, Meter::new()).unwrap();
+    let a = dist.forward_backward(&params, &batch).unwrap();
+    let b = dist.forward_backward(&params, &batch).unwrap();
+
+    assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss not bit-stable");
+    assert_eq!(a.mlm.to_bits(), b.mlm.to_bits(), "mlm not bit-stable");
+    assert_eq!(a.sop.to_bits(), b.sop.to_bits(), "sop not bit-stable");
+    for (name, g) in &a.grads.values {
+        assert_eq!(g, &b.grads.values[name], "grad {name} not bit-stable");
+    }
+    for (d, (ha, hb)) in a.hidden.iter().zip(&b.hidden).enumerate() {
+        assert_eq!(ha, hb, "hidden chunk {d} not bit-stable");
+    }
+}
+
+/// Sequential simulation and threaded execution meter the SAME traffic —
+/// byte-for-byte per collective kind (the accounting contract both
+/// implementations of `comm::Collective` share).
+#[test]
+fn threaded_and_sequential_meters_agree() {
+    for n in [2usize, 4] {
+        let rt = runtime(n);
+        let params = ParamStore::synthetic(rt.manifest());
+        let batch = batch_for(&rt, 5);
+
+        let seq_meter = Meter::new();
+        let seq = SeqParEngine::new(&rt, Fabric::new(n, seq_meter.clone())).unwrap();
+        seq.forward_backward(&params, &batch).unwrap();
+
+        let thr_meter = Meter::new();
+        let dist = DistRunner::new(&rt, thr_meter.clone()).unwrap();
+        dist.forward_backward(&params, &batch).unwrap();
+
+        for kind in [
+            CommKind::RingP2p,
+            CommKind::AllReduce,
+            CommKind::AllGather,
+            CommKind::Broadcast,
+            CommKind::Pipeline,
+        ] {
+            assert_eq!(
+                seq_meter.get(kind),
+                thr_meter.get(kind),
+                "n={n}: {kind:?} bytes differ (sequential {} vs threaded {})",
+                seq_meter.get(kind),
+                thr_meter.get(kind)
+            );
+        }
+    }
+}
+
+/// The runner refuses gracefully when the manifest ring size does not
+/// divide the sequence — same contract as the sequential engine.
+#[test]
+fn runner_validates_shapes() {
+    // valid: the manifest ring is reported as the rank count
+    let rt = runtime(4);
+    let d = DistRunner::new(&rt, Meter::new()).unwrap();
+    assert_eq!(d.group_size(), 4);
+    assert_eq!(d.name(), "seq-par-threaded");
+    // invalid: seq_len 32 with ring 5 must be refused up front by the
+    // runner (and by the sequential engine) even if the backend itself
+    // can synthesize a manifest for that shape
+    if let Ok(bad) = Runtime::native(NativeConfig { ring: 5, ..NativeConfig::tiny() }) {
+        assert!(DistRunner::new(&bad, Meter::new()).is_err());
+        assert!(SeqParEngine::new(&bad, Fabric::new(5, Meter::new())).is_err());
+    }
+}

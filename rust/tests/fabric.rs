@@ -1,10 +1,14 @@
 //! Integration: the threaded ring fabric is semantically identical to the
-//! sequential fabric the engines drive — same rotation order, same
-//! reductions, same metered bytes — and deadlock-free under concurrency.
+//! sequential fabric — same rotation order, same reductions, same metered
+//! bytes — and deadlock-free under concurrency.
 //!
-//! (The engines run devices sequentially because PJRT handles are
-//! thread-local; this suite is the proof that the WIRE PROTOCOL itself is
-//! sound, i.e. the sequential fabric isn't hiding an impossible schedule.)
+//! (This suite proves the WIRE PROTOCOL itself is sound, message by
+//! message — the foundation `exec::DistRunner` builds its per-rank
+//! threads on.  Only the `backend-xla` feature still forces sequential
+//! per-device simulation, its PJRT handles being thread-local; the
+//! default native backend runs both ways, and
+//! `rust/tests/dist_equivalence.rs` checks the full training step agrees
+//! between them.)
 
 use seqpar::comm::threaded::mesh;
 use seqpar::comm::{CommKind, Fabric, Meter};
