@@ -76,6 +76,7 @@ fn main() -> Result<()> {
         ring: args.usize_or("ring", 4)?,
         tp: args.usize_or("tp", 2)?,
         linformer_k: 0,
+        block_w: 0,
         seed: args.usize_or("init-seed", 0)? as u64,
     };
     let rt = Runtime::native(ncfg)?;

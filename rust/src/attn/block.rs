@@ -1,0 +1,401 @@
+//! Blockwise-sparse Ring Self-Attention with comm-skipping.
+//!
+//! The mask is defined at TOKEN level — position `i` attends `j` iff
+//! `j <= i && i - j < w` (block-causal band of `w` tokens) — so the same
+//! `--attn block:W` run computes identical attention at every ring size
+//! (the serial ring-of-1 reference applies the full `[L, L]` mask; a ring
+//! of n applies the same mask chunk by chunk).  What IS ring-size
+//! dependent is the execution plan derived from the mask:
+//!
+//! * **reachability** — query chunk `dst` needs key chunk `src` iff some
+//!   token pair inside the pair of chunks is unmasked; unreachable pairs
+//!   skip their score/context/backward kernels entirely;
+//! * **hop counts** — chunk `src` only travels `h(src) = max reachable
+//!   dst − src` ring hops; the skip-aware
+//!   [`Collective::ring_shift_sparse`] sends nothing for dead chunks
+//!   (that is the §4.3 "sparse attention removes communication" claim
+//!   made executable);
+//! * **gradient homing** — each consumer's dK/dV partial is delivered
+//!   straight to the owner with [`Collective::reduce_chunks_home`]
+//!   instead of riding an accumulator around the whole ring.
+//!
+//! Per layer the ring traffic is exactly
+//! `4·Σ h(src) + 2·Σ (consumers(src) − 1)` chunk-sends
+//! ([`BlockPlan::chunk_sends_per_layer`]) versus dense RSA's
+//! `(2(n−1) + (4n−2))·n` — `rust/tests/comm_volume.rs` pins both.
+
+use std::collections::BTreeSet;
+
+use anyhow::{bail, Result};
+
+use crate::comm::Collective;
+use crate::parallel::call1_on;
+use crate::parallel::sequence::StepShape;
+use crate::runtime::Executor;
+use crate::tensor::{ops, Tensor};
+
+use super::AttnStash;
+
+/// Additive mask value for forbidden positions: finite (no NaN if a whole
+/// row were masked) but large enough that `exp(s + NEG - max)` underflows
+/// to exactly 0.0 for any realistic score.
+pub const NEG: f32 = -1.0e30;
+
+/// Static execution plan for one (n, Lc, w) blockwise run — reachability,
+/// hop counts, per-rank masks.  Shared by every rank (the schedule is
+/// global knowledge, which is what lets the threaded ranks agree on which
+/// hops carry no message).
+#[derive(Debug)]
+pub struct BlockPlan {
+    pub n: usize,
+    pub lc: usize,
+    pub w: usize,
+    /// reach[dst][src]: does query chunk dst need key chunk src?
+    reach: Vec<Vec<bool>>,
+    /// hops[src] = max reachable dst − src (how far the chunk travels).
+    pub hops: Vec<usize>,
+    /// consumers[src]: ranks with reach[dst][src], ascending.
+    pub consumers: Vec<Vec<usize>>,
+    /// srcs[dst]: reachable key chunks, ascending (the concat layout).
+    srcs: Vec<Vec<usize>>,
+    /// masks[dst]: additive token mask `[Lc, width(dst)]` over the
+    /// reachable concatenation.
+    masks: Vec<Tensor>,
+}
+
+/// Chunk pair (dst, src) reachable iff the closest token pair is in the
+/// band: min(i - j) = (dst - src - 1)·lc + 1 for src < dst.
+fn chunk_reachable(dst: usize, src: usize, lc: usize, w: usize) -> bool {
+    src == dst || (src < dst && (dst - src - 1) * lc + 1 <= w - 1)
+}
+
+impl BlockPlan {
+    pub fn new(n: usize, lc: usize, w: usize) -> BlockPlan {
+        assert!(n >= 1 && lc >= 1 && w >= 1, "BlockPlan needs n, lc, w >= 1");
+        let reachable = |dst: usize, src: usize| chunk_reachable(dst, src, lc, w);
+        let reach: Vec<Vec<bool>> =
+            (0..n).map(|dst| (0..n).map(|src| reachable(dst, src)).collect()).collect();
+        let hops: Vec<usize> = (0..n)
+            .map(|src| (src..n).filter(|&dst| reach[dst][src]).map(|dst| dst - src).max().unwrap_or(0))
+            .collect();
+        let consumers: Vec<Vec<usize>> = (0..n)
+            .map(|src| (0..n).filter(|&dst| reach[dst][src]).collect())
+            .collect();
+        let srcs: Vec<Vec<usize>> = (0..n)
+            .map(|dst| (0..n).filter(|&src| reach[dst][src]).collect())
+            .collect();
+        let masks = (0..n)
+            .map(|dst| {
+                let width = srcs[dst].len() * lc;
+                let mut m = vec![NEG; lc * width];
+                for il in 0..lc {
+                    let i = dst * lc + il;
+                    for (idx, &src) in srcs[dst].iter().enumerate() {
+                        for jl in 0..lc {
+                            let j = src * lc + jl;
+                            if j <= i && i - j < w {
+                                m[il * width + idx * lc + jl] = 0.0;
+                            }
+                        }
+                    }
+                }
+                Tensor::from_f32(&[lc, width], m).expect("mask shape")
+            })
+            .collect();
+        BlockPlan { n, lc, w, reach, hops, consumers, srcs, masks }
+    }
+
+    pub fn reach(&self, dst: usize, src: usize) -> bool {
+        self.reach[dst][src]
+    }
+
+    /// Reachable concat width for rank `dst` (columns of its score rows).
+    pub fn width(&self, dst: usize) -> usize {
+        self.srcs[dst].len() * self.lc
+    }
+
+    /// All distinct score widths across ranks (kernel registration).
+    pub fn distinct_widths(&self) -> BTreeSet<usize> {
+        (0..self.n).map(|d| self.width(d)).collect()
+    }
+
+    /// [`BlockPlan::distinct_widths`] from the reachability rule alone —
+    /// for kernel registration, which only needs the widths and should
+    /// not materialize the O(L·width) mask tensors a full plan carries.
+    pub fn distinct_widths_for(n: usize, lc: usize, w: usize) -> BTreeSet<usize> {
+        assert!(n >= 1 && lc >= 1 && w >= 1, "distinct_widths_for needs n, lc, w >= 1");
+        (0..n)
+            .map(|dst| (0..n).filter(|&src| chunk_reachable(dst, src, lc, w)).count() * lc)
+            .collect()
+    }
+
+    pub fn mask(&self, dst: usize) -> &Tensor {
+        &self.masks[dst]
+    }
+
+    /// Column offset of key chunk `src` inside rank `dst`'s reachable
+    /// concatenation (None when unreachable).
+    pub fn col_offset(&self, dst: usize, src: usize) -> Option<usize> {
+        self.srcs[dst].iter().position(|&s| s == src).map(|idx| idx * self.lc)
+    }
+
+    /// Liveness vector for the shift after ring step `t`, indexed by the
+    /// HOLDING rank: rank d currently holds chunk (d − t) mod n, which is
+    /// transmitted onward iff it has a consumer more than t hops from
+    /// home.
+    pub fn live_at(&self, t: usize) -> Vec<bool> {
+        (0..self.n).map(|d| t < self.hops[(d + self.n - t) % self.n]).collect()
+    }
+
+    /// Ring steps the schedule actually needs: every reachable (dst, src)
+    /// pair sits at ring distance `dst − src ≤ h(src) ≤ max hops`, so no
+    /// compute happens past step `max hops` and no chunk is live past the
+    /// shift before it — the loops stop there instead of sweeping all `n`
+    /// dead iterations (bit-identical results, same sends).
+    pub fn steps(&self) -> usize {
+        self.n.min(self.hops.iter().copied().max().unwrap_or(0) + 1)
+    }
+
+    /// Ring chunk-sends per layer under the skip-aware schedule:
+    /// `4·Σ h(src)` data hops (K and V travel their reachable span in
+    /// forward AND backward) plus `2·Σ (|consumers(src)| − 1)` direct
+    /// dK/dV gradient deliveries.  Dense RSA's counterpart is
+    /// `(2(n−1) + (4n−2))·n` (rust/tests/comm_volume.rs checks both).
+    pub fn chunk_sends_per_layer(&self) -> u64 {
+        let h: u64 = self.hops.iter().map(|&x| x as u64).sum();
+        let deliveries: u64 =
+            self.consumers.iter().map(|c| (c.len() as u64).saturating_sub(1)).sum();
+        4 * h + 2 * deliveries
+    }
+}
+
+fn plan_of(sh: &StepShape) -> Result<&BlockPlan> {
+    sh.plan
+        .as_deref()
+        .ok_or_else(|| anyhow::anyhow!("block attention needs a BlockPlan in the step shape"))
+}
+
+/// Blockwise forward: ring-QK^T and ring-AV over live hops only, masked
+/// softmax over the reachable concatenation.
+#[allow(clippy::needless_range_loop)]
+pub(crate) fn forward_on(
+    ex: &dyn Executor,
+    view: &dyn Collective,
+    sh: &StepShape,
+    q: &[Tensor],
+    k: &[Tensor],
+    v: &[Tensor],
+) -> Result<(Vec<Tensor>, AttnStash)> {
+    let plan = plan_of(sh)?;
+    let n = sh.n;
+    let ranks = view.local_ranks();
+    let ln = ranks.len();
+    if q.len() != ln || k.len() != ln || v.len() != ln {
+        bail!("block forward: need {ln} local chunks, got {}/{}/{}", q.len(), k.len(), v.len());
+    }
+    // ---- stage 1: ring-QK^T over reachable pairs --------------------
+    let steps = plan.steps();
+    let mut parts: Vec<Vec<Option<Tensor>>> = (0..ln).map(|_| vec![None; n]).collect();
+    let mut k_slots: Vec<Tensor> = k.to_vec();
+    for t in 0..steps {
+        for (li, &d) in ranks.iter().enumerate() {
+            let src = (d + n - t) % n;
+            if plan.reach(d, src) {
+                parts[li][src] = Some(call1_on(ex, "scores_step", &[&q[li], &k_slots[li]])?);
+            }
+        }
+        if t + 1 < steps {
+            view.ring_shift_sparse(&mut k_slots, &plan.live_at(t))?;
+        }
+    }
+    // masked softmax over the reachable concatenation (ascending src)
+    let mut p = Vec::with_capacity(ln);
+    for li in 0..ln {
+        let owned: Vec<Tensor> = parts[li].iter_mut().filter_map(|o| o.take()).collect();
+        let refs: Vec<&Tensor> = owned.iter().collect();
+        let s = ops::concat_last(&refs)?;
+        p.push(call1_on(ex, "masked_softmax_fwd", &[&s, plan.mask(ranks[li])])?);
+    }
+    // ---- stage 2: ring-AV over the same live hops -------------------
+    let mut v_slots: Vec<Tensor> = v.to_vec();
+    let mut acc: Vec<Tensor> = q.iter().map(|t| Tensor::zeros(&t.shape)).collect();
+    for t in 0..steps {
+        for (li, &d) in ranks.iter().enumerate() {
+            let src = (d + n - t) % n;
+            if let Some(off) = plan.col_offset(d, src) {
+                let p_i = ops::slice_last(&p[li], off, off + sh.lc)?;
+                acc[li] = call1_on(ex, "av_step", &[&p_i, &v_slots[li], &acc[li]])?;
+            }
+        }
+        if t + 1 < steps {
+            view.ring_shift_sparse(&mut v_slots, &plan.live_at(t))?;
+        }
+    }
+    Ok((acc, AttnStash::Block { p }))
+}
+
+/// Blockwise backward: the V and K data re-circulate over live hops only;
+/// each consumer's dV/dK partial is delivered straight home instead of
+/// riding an accumulator the full ring.
+#[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+pub(crate) fn backward_on(
+    ex: &dyn Executor,
+    view: &dyn Collective,
+    sh: &StepShape,
+    d_ctx: &[Tensor],
+    q: &[Tensor],
+    p: &[Tensor],
+    k: &[Tensor],
+    v: &[Tensor],
+) -> Result<(Vec<Tensor>, Vec<Tensor>, Vec<Tensor>)> {
+    let plan = plan_of(sh)?;
+    let n = sh.n;
+    let ranks = view.local_ranks();
+    let ln = ranks.len();
+    // ---- ring pass of V: dP parts + per-consumer dV partials --------
+    let steps = plan.steps();
+    let mut v_slots: Vec<Tensor> = v.to_vec();
+    let mut dp_parts: Vec<Vec<Option<Tensor>>> = (0..ln).map(|_| vec![None; n]).collect();
+    let mut dv_parts: Vec<Vec<Option<Tensor>>> = (0..ln).map(|_| vec![None; n]).collect();
+    for t in 0..steps {
+        for (li, &d) in ranks.iter().enumerate() {
+            let src = (d + n - t) % n;
+            if let Some(off) = plan.col_offset(d, src) {
+                dp_parts[li][src] =
+                    Some(call1_on(ex, "attn_dp_step", &[&d_ctx[li], &v_slots[li]])?);
+                let p_i = ops::slice_last(&p[li], off, off + sh.lc)?;
+                let zero = Tensor::zeros(&v[li].shape);
+                dv_parts[li][src] =
+                    Some(call1_on(ex, "attn_dv_step", &[&p_i, &d_ctx[li], &zero])?);
+            }
+        }
+        if t + 1 < steps {
+            view.ring_shift_sparse(&mut v_slots, &plan.live_at(t))?;
+        }
+    }
+    let dv = view.reduce_chunks_home(dv_parts, &plan.consumers)?;
+    // ---- local softmax backward over the reachable columns ----------
+    let mut ds = Vec::with_capacity(ln);
+    for li in 0..ln {
+        let owned: Vec<Tensor> = dp_parts[li].iter_mut().filter_map(|o| o.take()).collect();
+        let refs: Vec<&Tensor> = owned.iter().collect();
+        let dp = ops::concat_last(&refs)?;
+        ds.push(call1_on(ex, "softmax_bwd", &[&p[li], &dp])?);
+    }
+    // ---- ring pass of K: dQ accumulation + per-consumer dK partials -
+    let mut k_slots: Vec<Tensor> = k.to_vec();
+    let mut dk_parts: Vec<Vec<Option<Tensor>>> = (0..ln).map(|_| vec![None; n]).collect();
+    let mut dq: Vec<Tensor> = q.iter().map(|t| Tensor::zeros(&t.shape)).collect();
+    for t in 0..steps {
+        for (li, &d) in ranks.iter().enumerate() {
+            let src = (d + n - t) % n;
+            if let Some(off) = plan.col_offset(d, src) {
+                let ds_i = ops::slice_last(&ds[li], off, off + sh.lc)?;
+                dq[li] = call1_on(ex, "attn_dq_step", &[&ds_i, &k_slots[li], &dq[li]])?;
+                let zero = Tensor::zeros(&k[li].shape);
+                dk_parts[li][src] =
+                    Some(call1_on(ex, "attn_dk_step", &[&ds_i, &q[li], &zero])?);
+            }
+        }
+        if t + 1 < steps {
+            view.ring_shift_sparse(&mut k_slots, &plan.live_at(t))?;
+        }
+    }
+    let dk = view.reduce_chunks_home(dk_parts, &plan.consumers)?;
+    Ok((dq, dk, dv))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reachability_is_causal_banded() {
+        // n=4, lc=8, w=8: diagonal + first subdiagonal only
+        let p = BlockPlan::new(4, 8, 8);
+        for dst in 0..4 {
+            for src in 0..4 {
+                let want = src == dst || (src + 1 == dst);
+                assert_eq!(p.reach(dst, src), want, "reach({dst},{src})");
+            }
+        }
+        assert_eq!(p.hops, vec![1, 1, 1, 0]);
+        assert_eq!(p.consumers[0], vec![0, 1]);
+        assert_eq!(p.consumers[3], vec![3]);
+        // 4·H + 2·Σ(consumers−1) = 4·3 + 2·3
+        assert_eq!(p.chunk_sends_per_layer(), 18);
+    }
+
+    #[test]
+    fn wide_window_reaches_full_causal() {
+        let p = BlockPlan::new(4, 8, 32);
+        for dst in 0..4 {
+            for src in 0..4 {
+                assert_eq!(p.reach(dst, src), src <= dst);
+            }
+        }
+        // full causal: H = Σ (n−1−src) = 6, deliveries = Σ dst = 6
+        assert_eq!(p.chunk_sends_per_layer(), 4 * 6 + 2 * 6);
+    }
+
+    #[test]
+    fn masks_allow_exactly_the_band() {
+        let p = BlockPlan::new(2, 4, 3);
+        // rank 1 reaches chunks {0, 1}: width 8
+        let m = p.mask(1);
+        assert_eq!(m.shape, vec![4, 8]);
+        let md = m.f32s().unwrap();
+        for il in 0..4 {
+            let i = 4 + il;
+            for j in 0..8 {
+                let want = j <= i && i - j < 3;
+                assert_eq!(md[il * 8 + j] == 0.0, want, "mask[{il},{j}]");
+            }
+        }
+        // every row keeps its diagonal
+        for il in 0..4 {
+            assert_eq!(md[il * 8 + 4 + il], 0.0);
+        }
+    }
+
+    #[test]
+    fn liveness_follows_hop_counts() {
+        let p = BlockPlan::new(4, 8, 8); // hops = [1,1,1,0]
+        // before shift t=0 every chunk with hops>0 is at home and live
+        assert_eq!(p.live_at(0), vec![true, true, true, false]);
+        // after one hop nothing needs to travel further
+        assert_eq!(p.live_at(1), vec![false, false, false, false]);
+    }
+
+    #[test]
+    fn registration_widths_match_the_full_plan() {
+        // the mask-free width enumeration (kernel registration) must agree
+        // with the materialized plan for every shape
+        for (n, lc, w) in [(4, 8, 8), (2, 4, 3), (4, 4, 16), (3, 5, 6), (1, 8, 4)] {
+            assert_eq!(
+                BlockPlan::distinct_widths_for(n, lc, w),
+                BlockPlan::new(n, lc, w).distinct_widths(),
+                "widths diverged at n={n} lc={lc} w={w}"
+            );
+        }
+    }
+
+    #[test]
+    fn steps_stop_at_the_longest_hop() {
+        // band of one subdiagonal: 2 steps (compute at t ∈ {0, 1}) no
+        // matter the ring size; full causal needs all n
+        assert_eq!(BlockPlan::new(4, 8, 8).steps(), 2);
+        assert_eq!(BlockPlan::new(6, 4, 5).steps(), 2);
+        assert_eq!(BlockPlan::new(4, 8, 32).steps(), 4);
+        assert_eq!(BlockPlan::new(4, 8, 1).steps(), 1); // diagonal only
+    }
+
+    #[test]
+    fn single_rank_plan_is_local_only() {
+        let p = BlockPlan::new(1, 16, 5);
+        assert!(p.reach(0, 0));
+        assert_eq!(p.hops, vec![0]);
+        assert_eq!(p.chunk_sends_per_layer(), 0);
+        assert_eq!(p.width(0), 16);
+    }
+}

@@ -1,0 +1,141 @@
+//! Dense Ring Self-Attention — the paper's §3 schedule.
+//!
+//! * forward stage 1 — key chunks rotate around the ring N-1 times; each
+//!   device accumulates its score rows `S^n ∈ R^{Lc×L}`;
+//! * forward stage 2 — value chunks rotate; `O^n = Σᵢ SᵢⁿVᵢ` (Eq. 4);
+//! * backward — value chunks rotate again (computing `dPᵢ` and carrying
+//!   the `dVᵢ` accumulators home), then key chunks rotate (computing `dQ`
+//!   and carrying `dKᵢ` home).  This is the "2 ring-P2P + gradient
+//!   accumulation" schedule of §3.2.2.
+//!
+//! Ring convention: after `t` shifts device `d` holds the chunk originally
+//! owned by `(d - t) mod n`.
+
+use anyhow::{bail, Result};
+
+use crate::comm::Collective;
+use crate::parallel::call1_on;
+use crate::parallel::sequence::StepShape;
+use crate::runtime::Executor;
+use crate::tensor::{ops, Tensor};
+
+/// RSA stages 1+2 for the view's ranks.  `q/k/v[li]` is the local chunk of
+/// the li-th executed rank.  Returns (ctx, p) per executed rank.
+#[allow(clippy::needless_range_loop)] // loops index several rank-parallel vecs
+pub(crate) fn rsa_forward_on(
+    ex: &dyn Executor,
+    view: &dyn Collective,
+    sh: &StepShape,
+    q: &[Tensor],
+    k: &[Tensor],
+    v: &[Tensor],
+) -> Result<(Vec<Tensor>, Vec<Tensor>)> {
+    let n = sh.n;
+    let ranks = view.local_ranks();
+    let ln = ranks.len();
+    if q.len() != ln || k.len() != ln || v.len() != ln {
+        bail!("rsa_forward: need {ln} local chunks, got {}/{}/{}", q.len(), k.len(), v.len());
+    }
+    // ---- stage 1: Ring-QK^T --------------------------------------
+    // score parts indexed by ORIGIN chunk so concat restores global order
+    let mut parts: Vec<Vec<Option<Tensor>>> = (0..ln).map(|_| vec![None; n]).collect();
+    let mut k_slots: Vec<Tensor> = k.to_vec();
+    for t in 0..n {
+        for (li, &d) in ranks.iter().enumerate() {
+            let src = (d + n - t) % n;
+            parts[li][src] = Some(call1_on(ex, "scores_step", &[&q[li], &k_slots[li]])?);
+        }
+        if t + 1 < n {
+            view.ring_shift(&mut k_slots)?;
+        }
+    }
+    let mut p = Vec::with_capacity(ln);
+    for li in 0..ln {
+        let owned: Vec<Tensor> = parts[li].iter_mut().map(|o| o.take().unwrap()).collect();
+        let refs: Vec<&Tensor> = owned.iter().collect();
+        let s = ops::concat_last(&refs)?;
+        p.push(call1_on(ex, "softmax_fwd", &[&s])?);
+    }
+    // ---- stage 2: Ring-AV (Eq. 4) --------------------------------
+    let mut v_slots: Vec<Tensor> = v.to_vec();
+    let mut acc: Vec<Tensor> = q.iter().map(|t| Tensor::zeros(&t.shape)).collect();
+    for t in 0..n {
+        for (li, &d) in ranks.iter().enumerate() {
+            let src = (d + n - t) % n;
+            let p_i = ops::slice_last(&p[li], src * sh.lc, (src + 1) * sh.lc)?;
+            acc[li] = call1_on(ex, "av_step", &[&p_i, &v_slots[li], &acc[li]])?;
+        }
+        if t + 1 < n {
+            view.ring_shift(&mut v_slots)?;
+        }
+    }
+    Ok((acc, p))
+}
+
+/// RSA backward for the view's ranks.  Returns (dq, dk, dv) per executed
+/// rank with dk/dv already delivered back to their home ranks (the
+/// accumulators ride the ring).
+#[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+pub(crate) fn rsa_backward_on(
+    ex: &dyn Executor,
+    view: &dyn Collective,
+    sh: &StepShape,
+    d_ctx: &[Tensor],
+    q: &[Tensor],
+    p: &[Tensor],
+    k: &[Tensor],
+    v: &[Tensor],
+) -> Result<(Vec<Tensor>, Vec<Tensor>, Vec<Tensor>)> {
+    let n = sh.n;
+    let ranks = view.local_ranks();
+    let ln = ranks.len();
+    // ---- ring pass of V: dP parts + dV accumulators ride along ----
+    let mut v_slots: Vec<Tensor> = v.to_vec();
+    let mut dv_slots: Vec<Tensor> = v.iter().map(|t| Tensor::zeros(&t.shape)).collect();
+    let mut dp_parts: Vec<Vec<Option<Tensor>>> = (0..ln).map(|_| vec![None; n]).collect();
+    for t in 0..n {
+        for (li, &d) in ranks.iter().enumerate() {
+            let src = (d + n - t) % n;
+            dp_parts[li][src] =
+                Some(call1_on(ex, "attn_dp_step", &[&d_ctx[li], &v_slots[li]])?);
+            let p_i = ops::slice_last(&p[li], src * sh.lc, (src + 1) * sh.lc)?;
+            dv_slots[li] =
+                call1_on(ex, "attn_dv_step", &[&p_i, &d_ctx[li], &dv_slots[li]])?;
+        }
+        // The V chunks only need n-1 shifts (a final rotation would
+        // just return them home, pure wasted traffic); the dV
+        // accumulators take all n — the last shift delivers each dV_i
+        // to its home rank (§3.2.2).
+        if t + 1 < n {
+            view.ring_shift(&mut v_slots)?;
+        }
+        view.ring_shift(&mut dv_slots)?;
+    }
+    // ---- local softmax backward over full rows ---------------------
+    let mut ds = Vec::with_capacity(ln);
+    for li in 0..ln {
+        let owned: Vec<Tensor> = dp_parts[li].iter_mut().map(|o| o.take().unwrap()).collect();
+        let refs: Vec<&Tensor> = owned.iter().collect();
+        let dp = ops::concat_last(&refs)?;
+        ds.push(call1_on(ex, "softmax_bwd", &[&p[li], &dp])?);
+    }
+    // ---- ring pass of K: dQ accumulation + dK accumulators ---------
+    let mut k_slots: Vec<Tensor> = k.to_vec();
+    let mut dk_slots: Vec<Tensor> = k.iter().map(|t| Tensor::zeros(&t.shape)).collect();
+    let mut dq: Vec<Tensor> = q.iter().map(|t| Tensor::zeros(&t.shape)).collect();
+    for t in 0..n {
+        for (li, &d) in ranks.iter().enumerate() {
+            let src = (d + n - t) % n;
+            let ds_i = ops::slice_last(&ds[li], src * sh.lc, (src + 1) * sh.lc)?;
+            dq[li] = call1_on(ex, "attn_dq_step", &[&ds_i, &k_slots[li], &dq[li]])?;
+            dk_slots[li] = call1_on(ex, "attn_dk_step", &[&ds_i, &q[li], &dk_slots[li]])?;
+        }
+        // Same asymmetry as the V pass: K data shifts n-1 times, the
+        // dK accumulators ride all n shifts home.
+        if t + 1 < n {
+            view.ring_shift(&mut k_slots)?;
+        }
+        view.ring_shift(&mut dk_slots)?;
+    }
+    Ok((dq, dk_slots, dv_slots))
+}

@@ -1,0 +1,145 @@
+//! Linformer attention under sequence parallelism (paper §4.3, Table 3).
+//!
+//! The shared projections `E_k`/`E_v ∈ R^{k×L}` collapse the sequence
+//! axis of K and V to a fixed `k` rows.  Under sequence parallelism the
+//! projection is a partial sum over devices:
+//!
+//! `K̃ = Σ_d  E_k[:, d·Lc:(d+1)·Lc] @ K_d`
+//!
+//! so each rank projects its OWN chunk with its slice of E and the
+//! `[B, Z, k, A]` partials are combined **once** per layer with an
+//! all-reduce (reduce-scatter + all-gather) — no ring rotation of K/V at
+//! all, and the communicated volume is independent of L.  That is exactly
+//! the Table 3 regime: every L-carrying term is divided by N while the
+//! attention communication stops growing with L (`simulator::sparse`
+//! models the same accounting analytically; `benches/sparse_seqlen.rs`
+//! cross-checks the two).
+//!
+//! Backward mirrors it: dK̃/dṼ partials are all-reduced (each rank's
+//! loss depends on the shared K̃/Ṽ), then pushed through the projection
+//! locally — dK_d = E_d^T @ dK̃ and dE_d = dK̃ @ K_d^T, the E-slice
+//! gradient landing in the rank's grad store like the pos_emb slice.
+
+use anyhow::{bail, Result};
+
+use crate::comm::Collective;
+use crate::model::params::ParamStore;
+use crate::parallel::{call1_on, call_on};
+use crate::parallel::sequence::StepShape;
+use crate::runtime::Executor;
+use crate::tensor::{ops, Tensor};
+
+use super::{AttnStash, LINFORMER_EK, LINFORMER_EV};
+
+/// Project the view's local K-or-V chunks with the matching E slices and
+/// all-reduce the partials: every executed rank ends with the full
+/// projected `[B, Z, k, A]` tensor.
+fn project_all(
+    ex: &dyn Executor,
+    view: &dyn Collective,
+    sh: &StepShape,
+    e_full: &Tensor,
+    x: &[Tensor],
+) -> Result<Vec<Tensor>> {
+    let ranks = view.local_ranks();
+    let mut parts = Vec::with_capacity(ranks.len());
+    for (li, &d) in ranks.iter().enumerate() {
+        let e_d = ops::slice_last(e_full, d * sh.lc, (d + 1) * sh.lc)?;
+        parts.push(call1_on(ex, "linformer_proj", &[&e_d, &x[li]])?);
+    }
+    view.all_reduce_sum(&mut parts)?;
+    Ok(parts)
+}
+
+/// Linformer forward for the view's ranks: project-and-reduce K̃/Ṽ, then
+/// attention is purely local (`[Lc, k]` score rows, no ring).
+pub(crate) fn forward_on(
+    ex: &dyn Executor,
+    view: &dyn Collective,
+    sh: &StepShape,
+    params: &ParamStore,
+    q: &[Tensor],
+    k: &[Tensor],
+    v: &[Tensor],
+) -> Result<(Vec<Tensor>, AttnStash)> {
+    let ranks = view.local_ranks();
+    let ln = ranks.len();
+    if q.len() != ln || k.len() != ln || v.len() != ln {
+        bail!("linformer forward: need {ln} local chunks, got {}/{}/{}", q.len(), k.len(), v.len());
+    }
+    let kt = project_all(ex, view, sh, params.get(LINFORMER_EK)?, k)?;
+    let vt = project_all(ex, view, sh, params.get(LINFORMER_EV)?, v)?;
+    let mut p = Vec::with_capacity(ln);
+    let mut ctx = Vec::with_capacity(ln);
+    for li in 0..ln {
+        let s = call1_on(ex, "scores_step", &[&q[li], &kt[li]])?;
+        let pl = call1_on(ex, "softmax_fwd", &[&s])?;
+        let zero = Tensor::zeros(&q[li].shape);
+        ctx.push(call1_on(ex, "av_step", &[&pl, &vt[li], &zero])?);
+        p.push(pl);
+    }
+    Ok((ctx, AttnStash::Linformer { p, kt, vt }))
+}
+
+/// Linformer backward: local attention grads, all-reduce of the shared
+/// dK̃/dṼ, then the projection backward producing dK/dV for the local
+/// chunk plus the E-slice gradients (accumulated into `grads`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn backward_on(
+    ex: &dyn Executor,
+    view: &dyn Collective,
+    sh: &StepShape,
+    params: &ParamStore,
+    p: &[Tensor],
+    kt: &[Tensor],
+    vt: &[Tensor],
+    d_ctx: &[Tensor],
+    q: &[Tensor],
+    k: &[Tensor],
+    v: &[Tensor],
+    grads: &mut [ParamStore],
+) -> Result<(Vec<Tensor>, Vec<Tensor>, Vec<Tensor>)> {
+    let ranks = view.local_ranks();
+    let ln = ranks.len();
+    if grads.len() != ln {
+        bail!("linformer backward: {ln} ranks but {} grad stores", grads.len());
+    }
+    let mut dq = Vec::with_capacity(ln);
+    let mut dkt = Vec::with_capacity(ln);
+    let mut dvt = Vec::with_capacity(ln);
+    for li in 0..ln {
+        let dp = call1_on(ex, "attn_dp_step", &[&d_ctx[li], &vt[li]])?;
+        let zero_kv = Tensor::zeros(&kt[li].shape);
+        dvt.push(call1_on(ex, "attn_dv_step", &[&p[li], &d_ctx[li], &zero_kv])?);
+        let ds = call1_on(ex, "softmax_bwd", &[&p[li], &dp])?;
+        let zero_q = Tensor::zeros(&q[li].shape);
+        dq.push(call1_on(ex, "attn_dq_step", &[&ds, &kt[li], &zero_q])?);
+        let zero_kv = Tensor::zeros(&kt[li].shape);
+        dkt.push(call1_on(ex, "attn_dk_step", &[&ds, &q[li], &zero_kv])?);
+    }
+    // the projected K̃/Ṽ are shared: total gradient is the sum of every
+    // rank's contribution
+    view.all_reduce_sum(&mut dkt)?;
+    view.all_reduce_sum(&mut dvt)?;
+    // projection backward, per rank: dX_d = E_d^T @ dX̃, dE_d = dX̃ @ X_d^T
+    let ek = params.get(LINFORMER_EK)?;
+    let ev = params.get(LINFORMER_EV)?;
+    let mut dk = Vec::with_capacity(ln);
+    let mut dv = Vec::with_capacity(ln);
+    for (li, &d) in ranks.iter().enumerate() {
+        let (lo, hi) = (d * sh.lc, (d + 1) * sh.lc);
+        let e_d = ops::slice_last(ek, lo, hi)?;
+        let out = call_on(ex, "linformer_proj_bwd", &[&e_d, &k[li], &dkt[li]])?;
+        let [dkd, dek]: [Tensor; 2] =
+            out.try_into().map_err(|_| anyhow::anyhow!("linformer_proj_bwd arity"))?;
+        dk.push(dkd);
+        ops::add_into_last(grads[li].get_mut(LINFORMER_EK)?, &dek, lo)?;
+        let e_d = ops::slice_last(ev, lo, hi)?;
+        let out = call_on(ex, "linformer_proj_bwd", &[&e_d, &v[li], &dvt[li]])?;
+        let [dvd, dev]: [Tensor; 2] =
+            out.try_into().map_err(|_| anyhow::anyhow!("linformer_proj_bwd arity"))?;
+        dv.push(dvd);
+        ops::add_into_last(grads[li].get_mut(LINFORMER_EV)?, &dev, lo)?;
+    }
+    Ok((dq, dk, dv))
+}

@@ -1,0 +1,197 @@
+//! `attn` — executable attention patterns for sequence parallelism.
+//!
+//! The paper's headline claim (§4.3, Table 3, Fig. 5b) is that sequence
+//! parallelism composed with *sparse* attention removes the single-device
+//! sequence-length ceiling.  `simulator::sparse` models that analytically;
+//! this subsystem makes it executable: every pattern has a forward and a
+//! hand-scheduled backward that run identically under the sequential
+//! [`crate::comm::Fabric`] slot view and the threaded per-rank
+//! [`crate::comm::threaded::RingComm`] (`exec::DistRunner`).
+//!
+//! Patterns ([`AttnPattern`], selected with `--attn` on the CLI):
+//!
+//! * [`dense`] — full Ring Self-Attention, the paper's §3 schedule
+//!   (K and V chunks rotate the whole ring every layer);
+//! * [`linformer`] — the §4.3 Linformer composition: shared `E_k`/`E_v`
+//!   projections collapse the L-long K/V axis to a fixed `k`, so the ring
+//!   disappears entirely — each rank projects its own chunk and the
+//!   `[B, Z, k, A]` partial sums are combined **once** per layer with an
+//!   all-reduce (reduce-scatter + all-gather) whose size is independent
+//!   of L, exactly the Table 3 communication profile;
+//! * [`block`] — token-level block-causal banded masks: per-(dst, src)
+//!   chunk reachability is precomputed ([`block::BlockPlan`]), fully
+//!   masked ring hops send nothing and skip their score/context kernels
+//!   (the skip-aware [`crate::comm::Collective::ring_shift_sparse`]), and
+//!   the dK/dV partials are delivered straight home
+//!   ([`crate::comm::Collective::reduce_chunks_home`]) instead of riding
+//!   the full ring.  The `Meter` records the reduced volume; the
+//!   skip-aware closed form is pinned by `rust/tests/comm_volume.rs`.
+//!
+//! The per-rank step logic in `parallel::sequence::seqpar_step` dispatches
+//! through [`forward_on`]/[`backward_on`]; `rust/tests/dist_equivalence.rs`
+//! proves threaded == sequential == serial (ring of 1) for every pattern.
+
+pub mod block;
+pub mod dense;
+pub mod linformer;
+
+use anyhow::{bail, Result};
+
+use crate::comm::Collective;
+use crate::model::params::ParamStore;
+use crate::parallel::sequence::StepShape;
+use crate::runtime::Executor;
+use crate::tensor::Tensor;
+
+/// Which attention pattern the sequence-parallel step executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttnPattern {
+    /// Full Ring Self-Attention (the paper's §3 schedule).
+    Dense,
+    /// Linformer: K/V projected to `k` rows by the shared E_k/E_v
+    /// parameters; communication is one all-reduce per tensor per layer,
+    /// independent of sequence length (§4.3, Table 3).
+    Linformer { k: usize },
+    /// Token-level block-causal band: position i attends j iff
+    /// `j <= i && i - j < w` (window of `w` tokens).  Fully masked ring
+    /// hops skip both compute and communication.
+    Block { w: usize },
+}
+
+impl AttnPattern {
+    /// Parse the CLI surface: `dense | linformer:K | block:W`.
+    pub fn parse(s: &str) -> Result<AttnPattern> {
+        if s == "dense" {
+            return Ok(AttnPattern::Dense);
+        }
+        if let Some(k) = s.strip_prefix("linformer:") {
+            let k: usize = k.parse().map_err(|_| anyhow::anyhow!("bad --attn {s:?}"))?;
+            if k == 0 {
+                bail!("--attn linformer:K needs K >= 1");
+            }
+            return Ok(AttnPattern::Linformer { k });
+        }
+        if let Some(w) = s.strip_prefix("block:") {
+            let w: usize = w.parse().map_err(|_| anyhow::anyhow!("bad --attn {s:?}"))?;
+            if w == 0 {
+                bail!("--attn block:W needs W >= 1 (every token attends at least itself)");
+            }
+            return Ok(AttnPattern::Block { w });
+        }
+        bail!("unknown --attn {s:?} (dense | linformer:K | block:W)")
+    }
+
+    /// The CLI spelling of this pattern.
+    pub fn label(&self) -> String {
+        match self {
+            AttnPattern::Dense => "dense".to_string(),
+            AttnPattern::Linformer { k } => format!("linformer:{k}"),
+            AttnPattern::Block { w } => format!("block:{w}"),
+        }
+    }
+
+    pub fn is_dense(&self) -> bool {
+        matches!(self, AttnPattern::Dense)
+    }
+
+    /// The backend knobs this pattern needs at manifest-lowering time:
+    /// `(linformer_k, block_w)` for `NativeConfig` — the single place the
+    /// pattern→config mapping lives (CLI, benches and tests all route
+    /// through it, so a new pattern cannot silently miss one of them).
+    pub fn native_knobs(&self) -> (usize, usize) {
+        match *self {
+            AttnPattern::Dense => (0, 0),
+            AttnPattern::Linformer { k } => (k, 0),
+            AttnPattern::Block { w } => (0, w),
+        }
+    }
+}
+
+/// Forward activations the backward pass needs, per pattern.  One entry
+/// per executed rank in every vector.
+pub(crate) enum AttnStash {
+    /// Softmax probs over the full rows `[B, Z, Lc, L]`.
+    Dense { p: Vec<Tensor> },
+    /// Probs `[B, Z, Lc, k]` plus the (replicated) projected K̃/Ṽ
+    /// `[B, Z, k, A]` — kept instead of remote K/V chunks.
+    Linformer { p: Vec<Tensor>, kt: Vec<Tensor>, vt: Vec<Tensor> },
+    /// Probs over the reachable concatenation `[B, Z, Lc, r(d)·Lc]`.
+    Block { p: Vec<Tensor> },
+}
+
+/// Attention forward for the view's ranks, dispatched on the shape's
+/// pattern.  `q/k/v[li]` is the local chunk of the li-th executed rank;
+/// returns the per-rank context plus the pattern's backward stash.
+pub(crate) fn forward_on(
+    ex: &dyn Executor,
+    view: &dyn Collective,
+    sh: &StepShape,
+    params: &ParamStore,
+    q: &[Tensor],
+    k: &[Tensor],
+    v: &[Tensor],
+) -> Result<(Vec<Tensor>, AttnStash)> {
+    match sh.pattern {
+        AttnPattern::Dense => {
+            let (ctx, p) = dense::rsa_forward_on(ex, view, sh, q, k, v)?;
+            Ok((ctx, AttnStash::Dense { p }))
+        }
+        AttnPattern::Linformer { .. } => linformer::forward_on(ex, view, sh, params, q, k, v),
+        AttnPattern::Block { .. } => block::forward_on(ex, view, sh, q, k, v),
+    }
+}
+
+/// Attention backward for the view's ranks.  Returns (dq, dk, dv) per
+/// executed rank with dk/dv already delivered to their home ranks;
+/// pattern-owned parameter gradients (the Linformer projections) are
+/// accumulated into `grads` directly.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn backward_on(
+    ex: &dyn Executor,
+    view: &dyn Collective,
+    sh: &StepShape,
+    params: &ParamStore,
+    stash: &AttnStash,
+    d_ctx: &[Tensor],
+    q: &[Tensor],
+    k: &[Tensor],
+    v: &[Tensor],
+    grads: &mut [ParamStore],
+) -> Result<(Vec<Tensor>, Vec<Tensor>, Vec<Tensor>)> {
+    match (sh.pattern, stash) {
+        (AttnPattern::Dense, AttnStash::Dense { p }) => {
+            dense::rsa_backward_on(ex, view, sh, d_ctx, q, p, k, v)
+        }
+        (AttnPattern::Linformer { .. }, AttnStash::Linformer { p, kt, vt }) => {
+            linformer::backward_on(ex, view, sh, params, p, kt, vt, d_ctx, q, k, v, grads)
+        }
+        (AttnPattern::Block { .. }, AttnStash::Block { p }) => {
+            block::backward_on(ex, view, sh, d_ctx, q, p, k, v)
+        }
+        _ => bail!("attention stash does not match pattern {:?}", sh.pattern),
+    }
+}
+
+/// Names of the shared Linformer projection parameters (shape `[k, L]`,
+/// sliced `[k, Lc]` per device like `pos_emb`).
+pub const LINFORMER_EK: &str = "linformer_ek";
+pub const LINFORMER_EV: &str = "linformer_ev";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips() {
+        for s in ["dense", "linformer:64", "block:128"] {
+            assert_eq!(AttnPattern::parse(s).unwrap().label(), s);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_bad_inputs() {
+        for s in ["", "linformer", "linformer:", "linformer:0", "block:0", "block:x", "sparse"] {
+            assert!(AttnPattern::parse(s).is_err(), "{s:?} should not parse");
+        }
+    }
+}

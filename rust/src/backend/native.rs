@@ -48,6 +48,9 @@ pub struct NativeConfig {
     pub tp: usize,
     /// Linformer projection dim K (0 = skip those artifacts).
     pub linformer_k: usize,
+    /// Blockwise-causal band width in TOKENS (0 = skip the masked-softmax
+    /// artifacts; `--attn block:W`).
+    pub block_w: usize,
     pub seed: u64,
 }
 
@@ -61,6 +64,7 @@ impl NativeConfig {
             ring: 4,
             tp: 2,
             linformer_k: 0,
+            block_w: 0,
             seed: 0,
         }
     }
@@ -89,12 +93,14 @@ enum Kernel {
     ScoresStep,
     SoftmaxFwd,
     SoftmaxBwd,
+    MaskedSoftmaxFwd,
     AvStep,
     AttnDpStep,
     AttnDqStep,
     AttnDkStep,
     AttnDvStep,
     LinformerProj,
+    LinformerProjBwd,
     MlmLoss { norm: f32 },
     SopLoss { batch: usize, norm: f32 },
 }
@@ -172,7 +178,11 @@ fn infer_outputs(kernel: Kernel, ins: &[IoSpec]) -> Result<Vec<IoSpec>> {
         Kernel::LinearBwd | Kernel::GeluLinearBwd => {
             vec![fio(d(0)?), fio(d(1)?), fio(d(2)?)]
         }
-        Kernel::Add | Kernel::BiasAdd | Kernel::SoftmaxFwd | Kernel::SoftmaxBwd => {
+        Kernel::Add
+        | Kernel::BiasAdd
+        | Kernel::SoftmaxFwd
+        | Kernel::SoftmaxBwd
+        | Kernel::MaskedSoftmaxFwd => {
             vec![fio(d(0)?)]
         }
         Kernel::ToHeads { b, z, a } => {
@@ -217,6 +227,7 @@ fn infer_outputs(kernel: Kernel, ins: &[IoSpec]) -> Result<Vec<IoSpec>> {
             let (e, x) = (d(0)?, d(1)?);
             vec![fio(&[x[0], x[1], e[0], x[3]])]
         }
+        Kernel::LinformerProjBwd => vec![fio(d(1)?), fio(d(0)?)],
         Kernel::MlmLoss { .. } => {
             let (x, w) = (d(0)?, d(1)?);
             vec![fio(&[]), fio(x), fio(w), fio(&[w[0]])]
@@ -380,6 +391,38 @@ fn enumerate_linformer(reg: &mut Reg, cfg: &NativeConfig) -> Result<()> {
     reg.add("scores_step", Kernel::ScoresStep, vec![fio(&qs), fio(&ks)])?;
     reg.add("softmax_fwd", Kernel::SoftmaxFwd, vec![fio(&sk)])?;
     reg.add("av_step", Kernel::AvStep, vec![fio(&sk), fio(&ks), fio(&qs)])?;
+    // backward of the executable Linformer path (attn::linformer)
+    reg.add(
+        "linformer_proj_bwd",
+        Kernel::LinformerProjBwd,
+        vec![fio(&[kp, lc]), fio(&qs), fio(&ks)],
+    )?;
+    reg.add("softmax_bwd", Kernel::SoftmaxBwd, vec![fio(&sk), fio(&sk)])?;
+    reg.add("attn_dp_step", Kernel::AttnDpStep, vec![fio(&qs), fio(&ks)])?;
+    reg.add("attn_dq_step", Kernel::AttnDqStep, vec![fio(&sk), fio(&ks), fio(&qs)])?;
+    reg.add("attn_dk_step", Kernel::AttnDkStep, vec![fio(&sk), fio(&qs), fio(&ks)])?;
+    reg.add("attn_dv_step", Kernel::AttnDvStep, vec![fio(&sk), fio(&qs), fio(&ks)])?;
+    Ok(())
+}
+
+/// Blockwise-sparse artifacts: per-rank masked softmax over the reachable
+/// concatenation (widths depend on the plan, deduped by signature).  The
+/// score/context/backward step kernels reuse the dense chunk shapes.
+fn enumerate_block(reg: &mut Reg, cfg: &NativeConfig) -> Result<()> {
+    let m = &cfg.model;
+    let lc = cfg.seq_len / cfg.ring;
+    let z = m.heads;
+    // widths only — the full plan (with its mask tensors) is built once,
+    // at engine construction (StepShape::from_manifest_with)
+    for w in crate::attn::block::BlockPlan::distinct_widths_for(cfg.ring, lc, cfg.block_w) {
+        let rows = [cfg.batch, z, lc, w];
+        reg.add(
+            "masked_softmax_fwd",
+            Kernel::MaskedSoftmaxFwd,
+            vec![fio(&rows), fio(&[lc, w])],
+        )?;
+        reg.add("softmax_bwd", Kernel::SoftmaxBwd, vec![fio(&rows), fio(&rows)])?;
+    }
     Ok(())
 }
 
@@ -410,10 +453,24 @@ impl NativeBackend {
         if cfg.linformer_k > 0 {
             enumerate_linformer(&mut reg, &cfg)?;
         }
-        let params = model::param_spec(m, cfg.seq_len)
+        if cfg.block_w > 0 {
+            enumerate_block(&mut reg, &cfg)?;
+        }
+        let mut params: Vec<ParamSpec> = model::param_spec(m, cfg.seq_len)
             .into_iter()
             .map(|(name, dims)| ParamSpec { name, dims, file: String::new() })
             .collect();
+        if cfg.linformer_k > 0 {
+            // shared Linformer projections [K, L], sliced [K, Lc] per
+            // device like pos_emb (attn::linformer)
+            for name in [crate::attn::LINFORMER_EK, crate::attn::LINFORMER_EV] {
+                params.push(ParamSpec {
+                    name: name.to_string(),
+                    dims: vec![cfg.linformer_k, cfg.seq_len],
+                    file: String::new(),
+                });
+            }
+        }
         let manifest = Manifest {
             model: m.name.to_string(),
             batch: cfg.batch,
@@ -421,6 +478,7 @@ impl NativeBackend {
             ring: cfg.ring,
             tp: cfg.tp,
             linformer_k: cfg.linformer_k,
+            block_w: cfg.block_w,
             hidden: m.hidden,
             heads: m.heads,
             head_dim: m.head_dim,
@@ -770,6 +828,42 @@ fn k_softmax_fwd(s: &Tensor) -> Result<Tensor> {
     Tensor::from_f32(&s.shape, out)
 }
 
+/// Softmax over `s + mask`, the mask broadcast over the leading B*Z
+/// groups (mask is `[Lc, W]`, rows are `[B, Z, Lc, W]`).  Forbidden
+/// entries carry a large-negative additive term, so their probabilities
+/// underflow to exactly 0 and the backward is plain `softmax_bwd` on the
+/// returned probs (the mask takes no gradient).
+fn k_masked_softmax(s: &Tensor, mask: &Tensor) -> Result<Tensor> {
+    let w = *s.shape.last().unwrap();
+    let lc = mask.shape[0];
+    if mask.shape[1] != w {
+        bail!("mask width {} vs score width {w}", mask.shape[1]);
+    }
+    let rows = s.numel() / w;
+    let sd = s.f32s()?;
+    let md = mask.f32s()?;
+    let mut out = vec![0.0f32; rows * w];
+    for r in 0..rows {
+        let row = &sd[r * w..(r + 1) * w];
+        let mrow = &md[(r % lc) * w..(r % lc + 1) * w];
+        let mx = row
+            .iter()
+            .zip(mrow)
+            .fold(f32::NEG_INFINITY, |acc, (&v, &m)| acc.max(v + m));
+        let orow = &mut out[r * w..(r + 1) * w];
+        let mut sum = 0.0f32;
+        for c in 0..w {
+            let e = (row[c] + mrow[c] - mx).exp();
+            orow[c] = e;
+            sum += e;
+        }
+        for o in orow.iter_mut() {
+            *o /= sum;
+        }
+    }
+    Tensor::from_f32(&s.shape, out)
+}
+
 fn k_softmax_bwd(p: &Tensor, dp: &Tensor) -> Result<Tensor> {
     let w = *p.shape.last().unwrap();
     let rows = p.numel() / w;
@@ -1066,6 +1160,33 @@ fn k_linformer_proj(e: &Tensor, x: &Tensor) -> Result<Tensor> {
     Tensor::from_f32(&[b, z, kp, a], out)
 }
 
+/// Backward of [`k_linformer_proj`] (`y_g = E @ x_g` per B*Z group):
+/// `dx_g = E^T @ dy_g`, `dE = Σ_g dy_g @ x_g^T` (the projection is shared
+/// across batch and heads, so its gradient sums over the groups).
+fn k_linformer_proj_bwd(e: &Tensor, x: &Tensor, dy: &Tensor) -> Result<(Tensor, Tensor)> {
+    let (kp, lc) = (e.shape[0], e.shape[1]);
+    let (b, z, _lx, a) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let ed = e.f32s()?;
+    let xd = x.f32s()?;
+    let dyd = dy.f32s()?;
+    let mut dx = vec![0.0f32; b * z * lc * a];
+    let mut de = vec![0.0f32; kp * lc];
+    for g in 0..b * z {
+        let dy_g = &dyd[g * kp * a..(g + 1) * kp * a];
+        let c = mm_tn(ed, dy_g, kp, lc, a);
+        dx[g * lc * a..(g + 1) * lc * a].copy_from_slice(&c);
+        let x_g = &xd[g * lc * a..(g + 1) * lc * a];
+        let d = mm_nt(dy_g, x_g, kp, a, lc);
+        for (o, v) in de.iter_mut().zip(d) {
+            *o += v;
+        }
+    }
+    Ok((
+        Tensor::from_f32(&x.shape, dx)?,
+        Tensor::from_f32(&[kp, lc], de)?,
+    ))
+}
+
 // --------------------------------------------------------------- dispatch
 
 fn dispatch(kernel: Kernel, ins: &[&Tensor]) -> Result<Vec<Tensor>> {
@@ -1160,12 +1281,17 @@ fn dispatch(kernel: Kernel, ins: &[&Tensor]) -> Result<Vec<Tensor>> {
         Kernel::ScoresStep => vec![k_scores(ins[0], ins[1])?],
         Kernel::SoftmaxFwd => vec![k_softmax_fwd(ins[0])?],
         Kernel::SoftmaxBwd => vec![k_softmax_bwd(ins[0], ins[1])?],
+        Kernel::MaskedSoftmaxFwd => vec![k_masked_softmax(ins[0], ins[1])?],
         Kernel::AvStep => vec![k_av(ins[0], ins[1], ins[2])?],
         Kernel::AttnDpStep => vec![k_attn_dp(ins[0], ins[1])?],
         Kernel::AttnDqStep => vec![k_attn_dq(ins[0], ins[1], ins[2])?],
         Kernel::AttnDkStep => vec![k_attn_dk(ins[0], ins[1], ins[2])?],
         Kernel::AttnDvStep => vec![k_attn_dv(ins[0], ins[1], ins[2])?],
         Kernel::LinformerProj => vec![k_linformer_proj(ins[0], ins[1])?],
+        Kernel::LinformerProjBwd => {
+            let (dx, de) = k_linformer_proj_bwd(ins[0], ins[1], ins[2])?;
+            vec![dx, de]
+        }
         Kernel::MlmLoss { norm } => {
             let (lo, dx, dw, db) = k_mlm_loss(ins[0], ins[1], ins[2], ins[3], ins[4], norm)?;
             vec![lo, dx, dw, db]
@@ -1295,6 +1421,61 @@ mod tests {
             p.f32s().unwrap().iter().zip(dp.f32s().unwrap()).map(|(&a, &g)| a * g).sum()
         };
         check_grad(&s, &ds, obj, 2e-2);
+    }
+
+    #[test]
+    fn masked_softmax_bwd_matches_finite_difference() {
+        // backward of masked softmax IS softmax_bwd on the masked probs
+        // (the mask is additive and takes no gradient) — check it against
+        // finite differences of the masked forward, including at masked
+        // coordinates where both sides must be exactly insensitive.
+        let mut rng = Rng::new(31);
+        let s = randn(&[1, 2, 3, 6], &mut rng);
+        let dp = randn(&[1, 2, 3, 6], &mut rng);
+        // block-causal-ish mask rows with a mix of open and closed slots
+        let mut m = vec![crate::attn::block::NEG; 3 * 6];
+        for (i, row_open) in [(0usize, 2usize), (1, 4), (2, 6)] {
+            for j in 0..row_open {
+                m[i * 6 + j] = 0.0;
+            }
+        }
+        let mask = Tensor::from_f32(&[3, 6], m).unwrap();
+        let p = k_masked_softmax(&s, &mask).unwrap();
+        // masked entries produce exactly zero probability
+        for r in 0..2 * 3 {
+            let row = &p.f32s().unwrap()[r * 6..(r + 1) * 6];
+            let open = [2, 4, 6][r % 3];
+            for (j, &v) in row.iter().enumerate() {
+                assert_eq!(v == 0.0, j >= open, "row {r} col {j}");
+            }
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        }
+        let ds = k_softmax_bwd(&p, &dp).unwrap();
+        let obj = |t: &Tensor| -> f32 {
+            let p = k_masked_softmax(t, &mask).unwrap();
+            p.f32s().unwrap().iter().zip(dp.f32s().unwrap()).map(|(&a, &g)| a * g).sum()
+        };
+        check_grad(&s, &ds, obj, 2e-2);
+    }
+
+    #[test]
+    fn linformer_proj_bwd_matches_finite_difference() {
+        let mut rng = Rng::new(37);
+        let (kp, lc, a) = (3usize, 5usize, 4usize);
+        let e = randn(&[kp, lc], &mut rng);
+        let x = randn(&[2, 1, lc, a], &mut rng);
+        let dy = randn(&[2, 1, kp, a], &mut rng);
+        let (dx, de) = k_linformer_proj_bwd(&e, &x, &dy).unwrap();
+        let obj_x = |t: &Tensor| -> f32 {
+            let y = k_linformer_proj(&e, t).unwrap();
+            y.f32s().unwrap().iter().zip(dy.f32s().unwrap()).map(|(&a, &g)| a * g).sum()
+        };
+        check_grad(&x, &dx, obj_x, 2e-2);
+        let obj_e = |t: &Tensor| -> f32 {
+            let y = k_linformer_proj(t, &x).unwrap();
+            y.f32s().unwrap().iter().zip(dy.f32s().unwrap()).map(|(&a, &g)| a * g).sum()
+        };
+        check_grad(&e, &de, obj_e, 2e-2);
     }
 
     #[test]

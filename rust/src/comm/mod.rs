@@ -177,6 +177,30 @@ pub trait Collective {
 
     /// Every slot replaced by global rank `root`'s slot.
     fn broadcast(&self, slots: &mut [Tensor], root: usize) -> Result<()>;
+
+    /// Skip-aware ring step for blockwise-sparse attention.  `live[d]`
+    /// (indexed by GLOBAL rank, derived from the static block plan so
+    /// every rank agrees) says whether the chunk currently held by rank
+    /// `d` is still needed downstream: live chunks move to rank d+1 and
+    /// are metered; dead chunks are dropped — the hop carries NO message
+    /// and the receiving slot becomes an empty placeholder that the plan
+    /// guarantees is never read.
+    fn ring_shift_sparse(&self, slots: &mut [Tensor], live: &[bool]) -> Result<()>;
+
+    /// Sparse gradient homing: `parts[li][src]` is executed rank li's
+    /// contribution to origin chunk `src`'s gradient (`Some` exactly
+    /// where the mask made li a consumer of src).  `consumers[src]`
+    /// lists the consuming global ranks ascending — identical on every
+    /// rank.  Each off-home contribution is delivered straight to the
+    /// owner (one metered ring-P2P chunk-send) and summed there in
+    /// ascending consumer order; returns each executed rank's summed
+    /// gradient for its OWN chunk.  This replaces dense RSA's
+    /// accumulator-rides-the-whole-ring schedule for masked patterns.
+    fn reduce_chunks_home(
+        &self,
+        parts: Vec<Vec<Option<Tensor>>>,
+        consumers: &[Vec<usize>],
+    ) -> Result<Vec<Tensor>>;
 }
 
 /// Deterministic collective fabric over per-device slot vectors.
@@ -279,6 +303,87 @@ impl Fabric {
         Ok(())
     }
 
+    /// Skip-aware ring step (see [`Collective::ring_shift_sparse`]): only
+    /// live slots rotate and are metered; a rank whose predecessor's
+    /// chunk died receives an empty placeholder.
+    pub fn ring_shift_sparse(&self, slots: &mut [Tensor], live: &[bool]) -> Result<()> {
+        if slots.len() != self.n || live.len() != self.n {
+            bail!(
+                "ring_shift_sparse: {} slots / {} live flags for {} devices",
+                slots.len(),
+                live.len(),
+                self.n
+            );
+        }
+        if self.n == 1 {
+            return Ok(());
+        }
+        let bytes: u64 = slots
+            .iter()
+            .zip(live)
+            .filter(|(_, &l)| l)
+            .map(|(t, _)| t.bytes() as u64)
+            .sum();
+        let old: Vec<Tensor> = slots
+            .iter_mut()
+            .map(|s| std::mem::replace(s, Tensor::zeros(&[])))
+            .collect();
+        for (d, t) in old.into_iter().enumerate() {
+            if live[d] {
+                slots[(d + 1) % self.n] = t;
+            }
+        }
+        if bytes > 0 {
+            self.meter.add(CommKind::RingP2p, bytes);
+        }
+        Ok(())
+    }
+
+    /// Sparse gradient homing (see [`Collective::reduce_chunks_home`]):
+    /// sums each chunk's contributions in ascending consumer order,
+    /// metering one chunk-send per off-home contribution.
+    pub fn reduce_chunks_home(
+        &self,
+        mut parts: Vec<Vec<Option<Tensor>>>,
+        consumers: &[Vec<usize>],
+    ) -> Result<Vec<Tensor>> {
+        if parts.len() != self.n || consumers.len() != self.n {
+            bail!(
+                "reduce_chunks_home: {} part rows / {} consumer lists for {} devices",
+                parts.len(),
+                consumers.len(),
+                self.n
+            );
+        }
+        let mut bytes = 0u64;
+        let mut out = Vec::with_capacity(self.n);
+        for src in 0..self.n {
+            let mut acc: Option<Tensor> = None;
+            for dst in 0..self.n {
+                // own the contribution — `parts` was passed by value
+                let part = parts[dst][src].take();
+                if part.is_some() != consumers[src].contains(&dst) {
+                    bail!("reduce_chunks_home: rank {dst} disagrees with the consumer plan for chunk {src}");
+                }
+                let Some(t) = part else { continue };
+                if dst != src {
+                    bytes += t.bytes() as u64;
+                }
+                match &mut acc {
+                    None => acc = Some(t),
+                    Some(a) => ops::add_assign(a, &t)?,
+                }
+            }
+            out.push(acc.ok_or_else(|| {
+                anyhow::anyhow!("reduce_chunks_home: chunk {src} has no consumers")
+            })?);
+        }
+        if bytes > 0 {
+            self.meter.add(CommKind::RingP2p, bytes);
+        }
+        Ok(out)
+    }
+
     /// Point-to-point send between pipeline stages (metered separately so
     /// the Fig. 4 pipeline-communication comparison can read it off).
     pub fn pipeline_send(&self, t: &Tensor) {
@@ -324,6 +429,18 @@ impl Collective for Fabric {
 
     fn broadcast(&self, slots: &mut [Tensor], root: usize) -> Result<()> {
         Fabric::broadcast(self, slots, root)
+    }
+
+    fn ring_shift_sparse(&self, slots: &mut [Tensor], live: &[bool]) -> Result<()> {
+        Fabric::ring_shift_sparse(self, slots, live)
+    }
+
+    fn reduce_chunks_home(
+        &self,
+        parts: Vec<Vec<Option<Tensor>>>,
+        consumers: &[Vec<usize>],
+    ) -> Result<Vec<Tensor>> {
+        Fabric::reduce_chunks_home(self, parts, consumers)
     }
 }
 
@@ -405,6 +522,61 @@ mod tests {
         f.ring_shift(&mut s).unwrap();
         f.all_reduce_sum(&mut s).unwrap();
         assert_eq!(m.snapshot().total(), 0);
+    }
+
+    #[test]
+    fn sparse_ring_shift_moves_only_live_chunks() {
+        let m = Meter::new();
+        let f = Fabric::new(4, m.clone());
+        let mut s = slots(4, 8);
+        // chunks at ranks 0 and 2 are live; 1 and 3 die on this hop
+        f.ring_shift_sparse(&mut s, &[true, false, true, false]).unwrap();
+        assert_eq!(s[1].f32s().unwrap()[0], 1.0); // received 0's chunk
+        assert_eq!(s[3].f32s().unwrap()[0], 3.0); // received 2's chunk
+        assert_eq!(s[0].numel(), 1); // dead placeholder (3's chunk dropped)
+        assert_eq!(s[2].numel(), 1);
+        // only the two live sends are metered
+        assert_eq!(m.get(CommKind::RingP2p), 2 * 8 * 4);
+    }
+
+    #[test]
+    fn sparse_ring_shift_all_dead_is_free() {
+        let m = Meter::new();
+        let f = Fabric::new(3, m.clone());
+        let mut s = slots(3, 4);
+        f.ring_shift_sparse(&mut s, &[false, false, false]).unwrap();
+        assert_eq!(m.snapshot().total(), 0);
+        assert_eq!(m.snapshot().ops, 0);
+    }
+
+    #[test]
+    fn reduce_chunks_home_sums_and_meters_off_home_sends() {
+        let m = Meter::new();
+        let f = Fabric::new(3, m.clone());
+        let t = |v: f32| Tensor::from_f32(&[2], vec![v; 2]).unwrap();
+        // chunk 0 consumed by {0, 1}; chunk 1 by {1, 2}; chunk 2 by {2}
+        let parts = vec![
+            vec![Some(t(1.0)), None, None],
+            vec![Some(t(2.0)), Some(t(3.0)), None],
+            vec![None, Some(t(4.0)), Some(t(5.0))],
+        ];
+        let consumers = vec![vec![0, 1], vec![1, 2], vec![2]];
+        let out = f.reduce_chunks_home(parts, &consumers).unwrap();
+        assert_eq!(out[0].f32s().unwrap(), &[3.0, 3.0]);
+        assert_eq!(out[1].f32s().unwrap(), &[7.0, 7.0]);
+        assert_eq!(out[2].f32s().unwrap(), &[5.0, 5.0]);
+        // two off-home contributions of 8 bytes each
+        assert_eq!(m.get(CommKind::RingP2p), 2 * 8);
+    }
+
+    #[test]
+    fn reduce_chunks_home_rejects_plan_mismatch() {
+        let f = Fabric::new(2, Meter::new());
+        let t = Tensor::from_f32(&[1], vec![1.0]).unwrap();
+        let parts = vec![vec![Some(t.clone()), None], vec![None, Some(t)]];
+        // plan claims rank 1 consumes chunk 0, but rank 1 sent nothing
+        let consumers = vec![vec![0, 1], vec![1]];
+        assert!(f.reduce_chunks_home(parts, &consumers).is_err());
     }
 
     #[test]

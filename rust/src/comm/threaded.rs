@@ -262,6 +262,96 @@ impl Collective for RingComm {
         slots[0] = RingComm::broadcast(self, t, root)?;
         Ok(())
     }
+
+    /// Skip-aware ring step: the static plan tells every rank both
+    /// whether it sends (its own chunk is live) and whether it will
+    /// receive (its predecessor's chunk is live) — no control message is
+    /// needed for a skipped hop, which is the whole point.
+    fn ring_shift_sparse(&self, slots: &mut [Tensor], live: &[bool]) -> Result<()> {
+        if live.len() != self.n {
+            bail!("rank {}: {} live flags for {} ranks", self.rank, live.len(), self.n);
+        }
+        let t = take_slot(self, slots)?;
+        if self.n == 1 {
+            slots[0] = t;
+            return Ok(());
+        }
+        if live[self.rank] {
+            let bytes = t.bytes() as u64;
+            self.tx[self.next_rank()]
+                .send(t)
+                .map_err(|_| anyhow!("rank {}: ring peer hung up", self.rank))?;
+            self.meter.add(CommKind::RingP2p, bytes);
+        }
+        slots[0] = if live[self.prev_rank()] {
+            self.rx[self.prev_rank()]
+                .recv()
+                .map_err(|_| anyhow!("rank {}: ring recv failed", self.rank))?
+        } else {
+            Tensor::zeros(&[]) // dead hop: placeholder, never read
+        };
+        Ok(())
+    }
+
+    /// Sparse gradient homing: fire every off-home contribution at its
+    /// owner over the direct mesh edges (buffered, so no ordering
+    /// deadlock), then collect this rank's own chunk in ascending
+    /// consumer order — the SAME summation order the sequential Fabric
+    /// uses, so the two executions stay bit-comparable per rank.
+    fn reduce_chunks_home(
+        &self,
+        mut parts: Vec<Vec<Option<Tensor>>>,
+        consumers: &[Vec<usize>],
+    ) -> Result<Vec<Tensor>> {
+        if parts.len() != 1 {
+            bail!("rank {}: per-rank view holds 1 part row, got {}", self.rank, parts.len());
+        }
+        if consumers.len() != self.n {
+            bail!("rank {}: {} consumer lists for {} ranks", self.rank, consumers.len(), self.n);
+        }
+        let mut mine = parts.pop().unwrap();
+        if mine.len() != self.n {
+            bail!("rank {}: {} chunk parts for {} ranks", self.rank, mine.len(), self.n);
+        }
+        for (src, part) in mine.iter().enumerate() {
+            if part.is_some() != consumers[src].contains(&self.rank) {
+                bail!("rank {}: contribution set disagrees with the consumer plan for chunk {src}", self.rank);
+            }
+        }
+        // send phase: off-home contributions, ascending destination
+        for src in 0..self.n {
+            if src == self.rank {
+                continue;
+            }
+            if let Some(t) = mine[src].take() {
+                self.meter.add(CommKind::RingP2p, t.bytes() as u64);
+                self.tx[src]
+                    .send(t)
+                    .map_err(|_| anyhow!("rank {}: grad delivery to {src} failed", self.rank))?;
+            }
+        }
+        // collect phase: my own chunk, ascending consumer order
+        let mut acc: Option<Tensor> = None;
+        for &dst in &consumers[self.rank] {
+            let t = if dst == self.rank {
+                mine[self.rank]
+                    .take()
+                    .ok_or_else(|| anyhow!("rank {}: missing own contribution", self.rank))?
+            } else {
+                self.rx[dst]
+                    .recv()
+                    .map_err(|_| anyhow!("rank {}: grad recv from {dst} failed", self.rank))?
+            };
+            match &mut acc {
+                None => acc = Some(t),
+                Some(a) => ops::add_assign(a, &t)?,
+            }
+        }
+        let home = acc.ok_or_else(|| {
+            anyhow!("rank {}: chunk {} has no consumers", self.rank, self.rank)
+        })?;
+        Ok(vec![home])
+    }
 }
 
 #[cfg(test)]
@@ -408,6 +498,84 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(fab_meter.snapshot(), thr_meter.snapshot());
+    }
+
+    /// Threaded sparse ring shift: same chunk movement and the same
+    /// metered bytes as the sequential Fabric for the same live pattern.
+    #[test]
+    fn sparse_ring_shift_matches_fabric() {
+        let n = 4;
+        let live = [true, false, true, false];
+
+        let fab_meter = Meter::new();
+        let fabric = crate::comm::Fabric::new(n, fab_meter.clone());
+        let mut slots: Vec<Tensor> = (0..n)
+            .map(|d| Tensor::from_f32(&[2], vec![d as f32; 2]).unwrap())
+            .collect();
+        fabric.ring_shift_sparse(&mut slots, &live).unwrap();
+
+        let thr_meter = Meter::new();
+        let comms = mesh(n, thr_meter.clone());
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|comm| {
+                std::thread::spawn(move || {
+                    let mut s =
+                        vec![Tensor::from_f32(&[2], vec![comm.rank as f32; 2]).unwrap()];
+                    Collective::ring_shift_sparse(&comm, &mut s, &live).unwrap();
+                    (comm.rank, s.pop().unwrap())
+                })
+            })
+            .collect();
+        for h in handles {
+            let (rank, got) = h.join().unwrap();
+            assert_eq!(got, slots[rank], "rank {rank} diverged from Fabric");
+        }
+        assert_eq!(fab_meter.get(CommKind::RingP2p), 2 * 2 * 4);
+        assert_eq!(thr_meter.get(CommKind::RingP2p), fab_meter.get(CommKind::RingP2p));
+    }
+
+    /// Threaded gradient homing: same sums (ascending consumer order) and
+    /// the same metered bytes as the sequential Fabric.
+    #[test]
+    fn reduce_chunks_home_matches_fabric() {
+        let n = 3;
+        // chunk 0 consumed by {0,1}; chunk 1 by {1,2}; chunk 2 by {2}
+        let consumers = vec![vec![0usize, 1], vec![1, 2], vec![2]];
+        let part_of = |dst: usize, src: usize| {
+            Tensor::from_f32(&[2], vec![(10 * dst + src) as f32; 2]).unwrap()
+        };
+        let parts_for = |dst: usize| -> Vec<Option<Tensor>> {
+            (0..n)
+                .map(|src| consumers[src].contains(&dst).then(|| part_of(dst, src)))
+                .collect()
+        };
+
+        let fab_meter = Meter::new();
+        let fabric = crate::comm::Fabric::new(n, fab_meter.clone());
+        let want = fabric
+            .reduce_chunks_home((0..n).map(parts_for).collect(), &consumers)
+            .unwrap();
+
+        let thr_meter = Meter::new();
+        let comms = mesh(n, thr_meter.clone());
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|comm| {
+                let consumers = consumers.clone();
+                let parts = vec![parts_for(comm.rank)];
+                std::thread::spawn(move || {
+                    let out =
+                        Collective::reduce_chunks_home(&comm, parts, &consumers).unwrap();
+                    (comm.rank, out.into_iter().next().unwrap())
+                })
+            })
+            .collect();
+        for h in handles {
+            let (rank, got) = h.join().unwrap();
+            assert_eq!(got, want[rank], "rank {rank} home grad diverged");
+        }
+        assert_eq!(thr_meter.get(CommKind::RingP2p), fab_meter.get(CommKind::RingP2p));
     }
 
     #[test]

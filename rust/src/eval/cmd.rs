@@ -4,6 +4,7 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
+use crate::attn::AttnPattern;
 use crate::backend::native::NativeConfig;
 use crate::comm::{Fabric, Meter};
 use crate::exec::DistRunner;
@@ -38,11 +39,21 @@ BACKEND FLAGS:
                       artifacts)
   --model NAME        native run shape (default bert-tiny)
   --batch N --seq-len N --ring N --tp N --linformer K --init-seed N
-                      native run shape (defaults 2/32/4/2/0/0)
+                      native run shape (defaults 2/32/4/2/0/0).
+                      --linformer K registers the projection kernels AND
+                      adds the trainable E_k/E_v params; prefer
+                      --attn linformer:K, which implies it
 
 COMMON FLAGS:
   --steps N           training steps (train; default 50)
   --engine NAME       seq | tensor | serial (train; default seq)
+  --attn PATTERN      dense | linformer:K | block:W — attention pattern
+                      for --engine seq (default dense).  linformer:K
+                      projects K/V to K rows (one L-independent all-reduce
+                      per layer instead of the ring); block:W applies a
+                      token-level causal band of W tokens and skips both
+                      the kernels and the ring hops of fully masked
+                      chunk pairs (see README \"Sparse attention\")
   --threads N         run `train --engine seq` on N OS threads — one per
                       ring rank via exec::DistRunner (native backend
                       only; implies --ring N, since rank count must equal
@@ -75,15 +86,34 @@ fn native_config(args: &Args) -> Result<NativeConfig> {
     } else {
         args.usize_or("ring", 4)?
     };
+    // --attn decides which sparse kernels the backend registers; the
+    // standalone --linformer K flag (predates --attn) is still honoured
+    // when no pattern asks for a different K.  NOTE: linformer_k > 0 now
+    // also adds the E_k/E_v projection parameters to the manifest (the
+    // executable path trains them); under a dense pattern they sit idle
+    // with zero gradients — harmless, but they do ride the gradient
+    // all-reduce, so don't set --linformer on a dense run you are
+    // metering.
+    let pattern = attn_pattern(args)?;
+    let (mut linformer_k, block_w) = pattern.native_knobs();
+    if linformer_k == 0 {
+        linformer_k = args.usize_or("linformer", 0)?;
+    }
     Ok(NativeConfig {
         model: crate::model::by_name(args.str_or("model", "bert-tiny"))?,
         batch: args.usize_or("batch", 2)?,
         seq_len: args.usize_or("seq-len", 32)?,
         ring,
         tp: args.usize_or("tp", 2)?,
-        linformer_k: args.usize_or("linformer", 0)?,
+        linformer_k,
+        block_w,
         seed: args.usize_or("init-seed", 0)? as u64,
     })
+}
+
+/// The `--attn` pattern (train/bench surface; default dense).
+pub fn attn_pattern(args: &Args) -> Result<AttnPattern> {
+    AttnPattern::parse(args.str_or("attn", "dense"))
 }
 
 /// Pick a backend per `--backend`; returns the artifact dir when the XLA
@@ -124,8 +154,8 @@ pub fn info(args: &Args) -> Result<()> {
         m.model, m.layers, m.hidden, m.heads, m.head_dim, m.ffn, m.vocab
     );
     println!(
-        "run shapes: batch={} seq_len={} ring={} tp={} linformer_k={}",
-        m.batch, m.seq_len, m.ring, m.tp, m.linformer_k
+        "run shapes: batch={} seq_len={} ring={} tp={} linformer_k={} block_w={}",
+        m.batch, m.seq_len, m.ring, m.tp, m.linformer_k, m.block_w
     );
     println!("artifacts: {}", m.artifacts.len());
     println!("params: {} tensors", m.params.len());
@@ -329,16 +359,30 @@ pub fn train(args: &Args) -> Result<()> {
     if threads > 0 && engine_name != "seq" {
         bail!("--threads applies to --engine seq (got --engine {engine_name})");
     }
+    let pattern = attn_pattern(args)?;
+    if !pattern.is_dense() && engine_name != "seq" {
+        bail!(
+            "--attn {} applies to --engine seq (got --engine {engine_name})",
+            pattern.label()
+        );
+    }
     let meter = Meter::new();
     match engine_name.as_str() {
         "seq" if threads > 0 => {
-            let e = DistRunner::new(&rt, meter.clone())?;
-            println!("threaded execution: {} ranks, one OS thread each", e.n);
+            let e = DistRunner::with_pattern(&rt, meter.clone(), pattern)?;
+            println!(
+                "threaded execution: {} ranks, one OS thread each, attn {}",
+                e.n,
+                pattern.label()
+            );
             let mut trainer = Trainer::new(&e, &params, cfg);
             trainer.run(&mut params, || corpus.next_batch(), false)?;
         }
         "seq" => {
-            let e = SeqParEngine::new(&rt, Fabric::new(m.ring, meter.clone()))?;
+            if !pattern.is_dense() {
+                println!("attention pattern: {}", pattern.label());
+            }
+            let e = SeqParEngine::with_pattern(&rt, Fabric::new(m.ring, meter.clone()), pattern)?;
             let mut trainer = Trainer::new(&e, &params, cfg);
             trainer.run(&mut params, || corpus.next_batch(), false)?;
         }

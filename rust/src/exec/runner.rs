@@ -34,8 +34,18 @@ impl<'rt> DistRunner<'rt> {
     /// ring size — the chunk shapes every artifact was lowered for).
     /// Fails up front when the backend cannot cross threads (xla-pjrt).
     pub fn new(rt: &'rt Runtime, meter: Arc<Meter>) -> Result<DistRunner<'rt>> {
+        DistRunner::with_pattern(rt, meter, crate::attn::AttnPattern::Dense)
+    }
+
+    /// Build the runner with a specific attention pattern (`--attn`); the
+    /// manifest must carry the matching kernels (linformer_k / block_w).
+    pub fn with_pattern(
+        rt: &'rt Runtime,
+        meter: Arc<Meter>,
+        pattern: crate::attn::AttnPattern,
+    ) -> Result<DistRunner<'rt>> {
         rt.sync_backend()?; // threaded execution needs a Send + Sync backend
-        let shape = StepShape::from_manifest(rt.manifest())?;
+        let shape = StepShape::from_manifest_with(rt.manifest(), pattern)?;
         let n = shape.n;
         Ok(DistRunner { rt, n, meter, shape })
     }

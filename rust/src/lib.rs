@@ -23,6 +23,8 @@
 //! Module map (see DESIGN.md for the full inventory):
 //!
 //! * [`tensor`] — host tensors + the SPT1 interchange format
+//! * [`attn`] — executable attention patterns (dense RSA, Linformer,
+//!   blockwise masks with comm-skipping) behind [`attn::AttnPattern`]
 //! * [`comm`] — the collective fabric (ring P2P, all-reduce, …) + meters,
 //!   sequential ([`comm::Fabric`]) and threaded ([`comm::threaded`])
 //! * [`exec`] — the threaded distributed runner: one OS thread per rank
@@ -40,6 +42,7 @@
 //! * [`eval`] — experiment harness regenerating every figure and table
 //! * [`util`] — offline-build substrates: JSON, CLI, PRNG, mini-proptest
 
+pub mod attn;
 pub mod backend;
 pub mod comm;
 pub mod eval;

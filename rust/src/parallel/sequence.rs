@@ -31,8 +31,11 @@
 //! Ring convention: after `t` shifts device `d` holds the chunk originally
 //! owned by `(d - t) mod n`.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
+use crate::attn::{self, block::BlockPlan, AttnPattern, AttnStash};
 use crate::comm::{Collective, Fabric};
 use crate::model::params::ParamStore;
 use crate::runtime::{Executor, Manifest, Runtime};
@@ -40,8 +43,9 @@ use crate::tensor::{ops, Tensor};
 
 use super::{call1_on, call_on, Batch, Engine, StepOutput};
 
-/// Run-shape constants + size-suffixed step names, derived once from the
-/// manifest and shared by every rank (sequential or threaded).
+/// Run-shape constants + size-suffixed step names + the attention pattern,
+/// derived once from the manifest and shared by every rank (sequential or
+/// threaded).
 #[derive(Clone, Debug)]
 pub(crate) struct StepShape {
     pub n: usize,
@@ -50,21 +54,54 @@ pub(crate) struct StepShape {
     pub layers: usize,
     pub to_heads_step: String,
     pub qkv_step: String,
+    /// Which attention the step executes (see [`crate::attn`]).
+    pub pattern: AttnPattern,
+    /// Precomputed reachability/mask plan (Block pattern only); Arc'd so
+    /// every rank thread shares the one set of mask tensors.
+    pub plan: Option<Arc<BlockPlan>>,
 }
 
 impl StepShape {
-    pub(crate) fn from_manifest(m: &Manifest) -> Result<StepShape> {
+    /// Build the shape for a specific attention pattern, validating that
+    /// the manifest was lowered with the matching kernels registered.
+    pub(crate) fn from_manifest_with(m: &Manifest, pattern: AttnPattern) -> Result<StepShape> {
         let n = m.ring;
         if m.seq_len % n != 0 {
             bail!("seq_len {} not divisible by ring size {n}", m.seq_len);
         }
+        let lc = m.seq_len / n;
+        let plan = match pattern {
+            AttnPattern::Dense => None,
+            AttnPattern::Linformer { k } => {
+                if m.linformer_k != k {
+                    bail!(
+                        "manifest was lowered with linformer_k={}, engine asked for linformer:{k} \
+                         (set --linformer/--attn consistently so the projection kernels exist)",
+                        m.linformer_k
+                    );
+                }
+                None
+            }
+            AttnPattern::Block { w } => {
+                if m.block_w != w {
+                    bail!(
+                        "manifest was lowered with block_w={}, engine asked for block:{w} \
+                         (set --attn when building the backend so the masked kernels exist)",
+                        m.block_w
+                    );
+                }
+                Some(Arc::new(BlockPlan::new(n, lc, w)))
+            }
+        };
         Ok(StepShape {
             n,
             b: m.batch,
-            lc: m.seq_len / n,
+            lc,
             layers: m.layers,
             to_heads_step: format!("to_heads_b{}", m.batch),
             qkv_step: format!("qkv_proj_b{}", m.batch),
+            pattern,
+            plan,
         })
     }
 }
@@ -96,134 +133,13 @@ struct LayerStash {
     q: Vec<Tensor>,
     k: Vec<Tensor>,
     v: Vec<Tensor>,
-    p: Vec<Tensor>,    // softmax probs [B, Z, Lc, L]
+    attn: AttnStash,   // pattern-specific stash (probs, projected K̃/Ṽ)
     ctx: Vec<Tensor>,  // attention context [B, Z, Lc, A]
     pre1: Vec<Tensor>, // x + attn (LN1 input)
     xm: Vec<Tensor>,   // LN1 output
     pre2: Vec<Tensor>, // xm + mlp (LN2 input)
     // NOTE: the MLP hidden activation is NOT stashed — mlp_bwd
     // rematerializes it (§Perf iteration 2), matching Megatron's recompute.
-}
-
-/// RSA stages 1+2 for the view's ranks.  `q/k/v[li]` is the local chunk of
-/// the li-th executed rank.  Returns (ctx, p) per executed rank.
-#[allow(clippy::needless_range_loop)] // loops index several rank-parallel vecs
-pub(crate) fn rsa_forward_on(
-    ex: &dyn Executor,
-    view: &dyn Collective,
-    sh: &StepShape,
-    q: &[Tensor],
-    k: &[Tensor],
-    v: &[Tensor],
-) -> Result<(Vec<Tensor>, Vec<Tensor>)> {
-    let n = sh.n;
-    let ranks = view.local_ranks();
-    let ln = ranks.len();
-    if q.len() != ln || k.len() != ln || v.len() != ln {
-        bail!("rsa_forward: need {ln} local chunks, got {}/{}/{}", q.len(), k.len(), v.len());
-    }
-    // ---- stage 1: Ring-QK^T --------------------------------------
-    // score parts indexed by ORIGIN chunk so concat restores global order
-    let mut parts: Vec<Vec<Option<Tensor>>> = (0..ln).map(|_| vec![None; n]).collect();
-    let mut k_slots: Vec<Tensor> = k.to_vec();
-    for t in 0..n {
-        for (li, &d) in ranks.iter().enumerate() {
-            let src = (d + n - t) % n;
-            parts[li][src] = Some(call1_on(ex, "scores_step", &[&q[li], &k_slots[li]])?);
-        }
-        if t + 1 < n {
-            view.ring_shift(&mut k_slots)?;
-        }
-    }
-    let mut p = Vec::with_capacity(ln);
-    for li in 0..ln {
-        let owned: Vec<Tensor> = parts[li].iter_mut().map(|o| o.take().unwrap()).collect();
-        let refs: Vec<&Tensor> = owned.iter().collect();
-        let s = ops::concat_last(&refs)?;
-        p.push(call1_on(ex, "softmax_fwd", &[&s])?);
-    }
-    // ---- stage 2: Ring-AV (Eq. 4) --------------------------------
-    let mut v_slots: Vec<Tensor> = v.to_vec();
-    let mut acc: Vec<Tensor> = q.iter().map(|t| Tensor::zeros(&t.shape)).collect();
-    for t in 0..n {
-        for (li, &d) in ranks.iter().enumerate() {
-            let src = (d + n - t) % n;
-            let p_i = ops::slice_last(&p[li], src * sh.lc, (src + 1) * sh.lc)?;
-            acc[li] = call1_on(ex, "av_step", &[&p_i, &v_slots[li], &acc[li]])?;
-        }
-        if t + 1 < n {
-            view.ring_shift(&mut v_slots)?;
-        }
-    }
-    Ok((acc, p))
-}
-
-/// RSA backward for the view's ranks.  Returns (dq, dk, dv) per executed
-/// rank with dk/dv already delivered back to their home ranks (the
-/// accumulators ride the ring).
-#[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
-fn rsa_backward_on(
-    ex: &dyn Executor,
-    view: &dyn Collective,
-    sh: &StepShape,
-    d_ctx: &[Tensor],
-    q: &[Tensor],
-    p: &[Tensor],
-    k: &[Tensor],
-    v: &[Tensor],
-) -> Result<(Vec<Tensor>, Vec<Tensor>, Vec<Tensor>)> {
-    let n = sh.n;
-    let ranks = view.local_ranks();
-    let ln = ranks.len();
-    // ---- ring pass of V: dP parts + dV accumulators ride along ----
-    let mut v_slots: Vec<Tensor> = v.to_vec();
-    let mut dv_slots: Vec<Tensor> = v.iter().map(|t| Tensor::zeros(&t.shape)).collect();
-    let mut dp_parts: Vec<Vec<Option<Tensor>>> = (0..ln).map(|_| vec![None; n]).collect();
-    for t in 0..n {
-        for (li, &d) in ranks.iter().enumerate() {
-            let src = (d + n - t) % n;
-            dp_parts[li][src] =
-                Some(call1_on(ex, "attn_dp_step", &[&d_ctx[li], &v_slots[li]])?);
-            let p_i = ops::slice_last(&p[li], src * sh.lc, (src + 1) * sh.lc)?;
-            dv_slots[li] =
-                call1_on(ex, "attn_dv_step", &[&p_i, &d_ctx[li], &dv_slots[li]])?;
-        }
-        // The V chunks only need n-1 shifts (a final rotation would
-        // just return them home, pure wasted traffic); the dV
-        // accumulators take all n — the last shift delivers each dV_i
-        // to its home rank (§3.2.2).
-        if t + 1 < n {
-            view.ring_shift(&mut v_slots)?;
-        }
-        view.ring_shift(&mut dv_slots)?;
-    }
-    // ---- local softmax backward over full rows ---------------------
-    let mut ds = Vec::with_capacity(ln);
-    for li in 0..ln {
-        let owned: Vec<Tensor> = dp_parts[li].iter_mut().map(|o| o.take().unwrap()).collect();
-        let refs: Vec<&Tensor> = owned.iter().collect();
-        let dp = ops::concat_last(&refs)?;
-        ds.push(call1_on(ex, "softmax_bwd", &[&p[li], &dp])?);
-    }
-    // ---- ring pass of K: dQ accumulation + dK accumulators ---------
-    let mut k_slots: Vec<Tensor> = k.to_vec();
-    let mut dk_slots: Vec<Tensor> = k.iter().map(|t| Tensor::zeros(&t.shape)).collect();
-    let mut dq: Vec<Tensor> = q.iter().map(|t| Tensor::zeros(&t.shape)).collect();
-    for t in 0..n {
-        for (li, &d) in ranks.iter().enumerate() {
-            let src = (d + n - t) % n;
-            let ds_i = ops::slice_last(&ds[li], src * sh.lc, (src + 1) * sh.lc)?;
-            dq[li] = call1_on(ex, "attn_dq_step", &[&ds_i, &k_slots[li], &dq[li]])?;
-            dk_slots[li] = call1_on(ex, "attn_dk_step", &[&ds_i, &q[li], &dk_slots[li]])?;
-        }
-        // Same asymmetry as the V pass: K data shifts n-1 times, the
-        // dK accumulators ride all n shifts home.
-        if t + 1 < n {
-            view.ring_shift(&mut k_slots)?;
-        }
-        view.ring_shift(&mut dk_slots)?;
-    }
-    Ok((dq, dk_slots, dv_slots))
 }
 
 /// One full forward+backward step of the sequence-parallel transformer,
@@ -287,7 +203,7 @@ pub(crate) fn seqpar_step(
             k.push(kd);
             v.push(vd);
         }
-        let (ctx, p) = rsa_forward_on(ex, view, sh, &q, &k, &v)?;
+        let (ctx, astash) = attn::forward_on(ex, view, sh, params, &q, &k, &v)?;
         let (wo, bo) = (p_of(&pf("wo"))?, p_of(&pf("bo"))?);
         let (g1, be1) = (p_of(&pf("ln1_g"))?, p_of(&pf("ln1_b"))?);
         let mut pre1 = Vec::new();
@@ -319,7 +235,7 @@ pub(crate) fn seqpar_step(
         }
         stashes.push(LayerStash {
             x_in: std::mem::replace(&mut x, x_next),
-            q, k, v, p, ctx, pre1, xm, pre2,
+            q, k, v, attn: astash, ctx, pre1, xm, pre2,
         });
     }
 
@@ -412,8 +328,10 @@ pub(crate) fn seqpar_step(
             ops::add_assign(grads[li].get_mut(&pf("bo"))?, &dbo)?;
             d_ctx.push(call1_on(ex, &sh.to_heads_step, &[&dflat])?);
         }
-        // RSA backward (the ring)
-        let (dq, dk, dv) = rsa_backward_on(ex, view, sh, &d_ctx, &st.q, &st.p, &st.k, &st.v)?;
+        // attention backward (ring / projected / masked, per pattern)
+        let (dq, dk, dv) = attn::backward_on(
+            ex, view, sh, params, &st.attn, &d_ctx, &st.q, &st.k, &st.v, &mut grads,
+        )?;
         // fused qkv backward (1 call, was 6) + residual join
         let (wq, wk, wv) = (p_of(&pf("wq"))?, p_of(&pf("wk"))?, p_of(&pf("wv"))?);
         let mut new_dx = Vec::with_capacity(ln);
@@ -489,6 +407,17 @@ pub struct SeqParEngine<'rt> {
 
 impl<'rt> SeqParEngine<'rt> {
     pub fn new(rt: &'rt Runtime, fabric: Fabric) -> Result<SeqParEngine<'rt>> {
+        SeqParEngine::with_pattern(rt, fabric, AttnPattern::Dense)
+    }
+
+    /// Build the engine with a specific attention pattern (`--attn` on
+    /// the CLI); the manifest must have been lowered with the matching
+    /// kernels (linformer_k / block_w).
+    pub fn with_pattern(
+        rt: &'rt Runtime,
+        fabric: Fabric,
+        pattern: AttnPattern,
+    ) -> Result<SeqParEngine<'rt>> {
         let m = rt.manifest();
         let n = fabric.n;
         if m.ring != n {
@@ -497,15 +426,22 @@ impl<'rt> SeqParEngine<'rt> {
                 m.ring
             );
         }
-        let shape = StepShape::from_manifest(m)?;
+        let shape = StepShape::from_manifest_with(m, pattern)?;
         Ok(SeqParEngine { rt, fabric, n, shape })
     }
 
-    /// Public API: Ring Self-Attention over pre-chunked q/k/v.
+    /// The attention pattern this engine executes.
+    pub fn pattern(&self) -> AttnPattern {
+        self.shape.pattern
+    }
+
+    /// Public API: dense Ring Self-Attention over pre-chunked q/k/v.
     ///
     /// `q/k/v[d]` are device d's local `[B, Z, L/N, A]` chunks; returns the
     /// per-device attention outputs.  This is the paper's Eq. 4 surface —
-    /// what a downstream user embeds into their own model code.
+    /// what a downstream user embeds into their own model code.  (Always
+    /// the dense ring regardless of the engine's training pattern; the
+    /// sparse patterns are driven through `forward_backward`.)
     pub fn rsa_attention(
         &self,
         q: &[Tensor],
@@ -515,7 +451,7 @@ impl<'rt> SeqParEngine<'rt> {
         if q.len() != self.n || k.len() != self.n || v.len() != self.n {
             bail!("rsa_attention: need {} chunks, got {}/{}/{}", self.n, q.len(), k.len(), v.len());
         }
-        Ok(rsa_forward_on(self.rt.backend(), &self.fabric, &self.shape, q, k, v)?.0)
+        Ok(attn::dense::rsa_forward_on(self.rt.backend(), &self.fabric, &self.shape, q, k, v)?.0)
     }
 }
 

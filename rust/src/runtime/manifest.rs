@@ -36,6 +36,9 @@ pub struct Manifest {
     pub ring: usize,
     pub tp: usize,
     pub linformer_k: usize,
+    /// Blockwise-causal band width in tokens (0 = no masked-softmax
+    /// artifacts; optional in the JSON — aot.py predates it).
+    pub block_w: usize,
     pub hidden: usize,
     pub heads: usize,
     pub head_dim: usize,
@@ -142,6 +145,7 @@ impl Manifest {
             ring: num("ring")?,
             tp: num("tp")?,
             linformer_k: num("linformer_k")?,
+            block_w: v.get("block_w").and_then(|x| x.as_usize()).unwrap_or(0),
             hidden: num("hidden")?,
             heads: num("heads")?,
             head_dim: num("head_dim")?,
@@ -182,6 +186,8 @@ mod tests {
         let m = Manifest::parse(SAMPLE).unwrap();
         assert_eq!(m.model, "bert-tiny");
         assert_eq!(m.ring, 4);
+        // block_w is optional (predates aot.py) and defaults to 0
+        assert_eq!(m.block_w, 0);
         let a = &m.artifacts["add__32x128_32x128"];
         assert_eq!(a.inputs.len(), 2);
         assert_eq!(a.inputs[0].dims, vec![32, 128]);

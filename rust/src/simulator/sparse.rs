@@ -45,7 +45,14 @@ pub fn peak_bytes_linformer(shape: &RunShape, n: usize, k_proj: usize) -> u64 {
     dense.param_state + proj_params + layers * stash * 4 + transients * 4
 }
 
-/// Largest sequence length (multiples of `step`) under Linformer + SP.
+/// Largest sequence length under Linformer + SP, searched over multiples
+/// of `step`.
+///
+/// Sequence parallelism needs `L % n == 0`, so `step` is first rounded UP
+/// to a multiple of `n` (a `step` the caller picked without thinking
+/// about the ring still yields a valid ring-divisible answer — the
+/// returned length is a multiple of BOTH the rounded step and `n`).
+/// Returns 0 when even one rounded step does not fit.
 pub fn max_seq_len_linformer(
     cluster: &Cluster,
     model: crate::model::ModelConfig,
@@ -54,6 +61,7 @@ pub fn max_seq_len_linformer(
     k_proj: usize,
     step: usize,
 ) -> usize {
+    let n = n.max(1);
     let step = step.max(1).next_multiple_of(n);
     let fits = |l: usize| {
         let shape = RunShape::new(model, batch, l);
@@ -62,12 +70,11 @@ pub fn max_seq_len_linformer(
     if !fits(step) {
         return 0;
     }
+    // exponential probe (guard before the multiply so the probe cannot
+    // overflow on absurd budgets), then binary search on step multiples
     let mut hi = 1usize;
-    while fits(hi * 2 * step) {
+    while hi <= 1 << 24 && fits(hi * 2 * step) {
         hi *= 2;
-        if hi > 1 << 24 {
-            break;
-        }
     }
     let (mut lo, mut top) = (hi, hi * 2);
     while top - lo > 1 {
@@ -120,6 +127,43 @@ mod tests {
             l32 >= 64_000,
             "sparse+SP @32 devices reaches only {l32} tokens (paper: 114K)"
         );
+    }
+
+    #[test]
+    fn step_rounds_up_when_n_does_not_divide_it() {
+        // step=100 with n=48 rounds to 144: the answer must be a multiple
+        // of the ROUNDED step (and therefore of n — the SP divisibility
+        // requirement) even though the caller's step was ring-oblivious.
+        let c = Cluster::default();
+        let l = max_seq_len_linformer(&c, BERT_BASE, 4, 48, 256, 100);
+        assert!(l > 0);
+        assert_eq!(l % 48, 0, "result {l} must be ring-divisible");
+        assert_eq!(l % 144, 0, "result {l} must be a multiple of the rounded step");
+        // maximality at the rounded-step granularity
+        let shape_fits = |len: usize| {
+            peak_bytes_linformer(&RunShape::new(BERT_BASE, 4, len), 48, 256) <= c.gpu_mem
+        };
+        assert!(shape_fits(l));
+        assert!(!shape_fits(l + 144), "{l} + one step should OOM");
+    }
+
+    #[test]
+    fn l_not_multiple_of_n_is_never_probed() {
+        // step already a multiple of n: identical answer to an equivalent
+        // unrounded call (regression for the step-rounding path)
+        let c = Cluster::default();
+        let a = max_seq_len_linformer(&c, BERT_BASE, 4, 8, 256, 256);
+        let b = max_seq_len_linformer(&c, BERT_BASE, 4, 8, 256, 255); // rounds to 256
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn too_small_budget_returns_zero() {
+        // fits(step) == false early return: a 1-byte device holds nothing
+        let c = Cluster { gpu_mem: 1, ..Cluster::default() };
+        assert_eq!(max_seq_len_linformer(&c, BERT_BASE, 4, 8, 256, 256), 0);
+        // and a degenerate step=0 / n=0 call neither panics nor divides by 0
+        assert_eq!(max_seq_len_linformer(&c, BERT_BASE, 4, 0, 256, 0), 0);
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! * meter parity — sequential and threaded runs record byte-identical
 //!   ring-P2P and all-reduce traffic.
 
+use seqpar::attn::AttnPattern;
 use seqpar::backend::native::NativeConfig;
 use seqpar::comm::{CommKind, Fabric, Meter};
 use seqpar::exec::DistRunner;
@@ -156,6 +157,116 @@ fn threaded_and_sequential_meters_agree() {
                 seq_meter.get(kind),
                 thr_meter.get(kind)
             );
+        }
+    }
+}
+
+/// The sparse patterns hold the same three-way equivalence: for
+/// `--attn linformer:K` and `--attn block:W` at n ∈ {2, 4}, the threaded
+/// runner, the sequential simulation, and a serial reference (the SAME
+/// pattern on a ring of 1 — both patterns are token-level definitions, so
+/// the mathematics is ring-size invariant) agree on loss, every gradient
+/// (including the Linformer E_k/E_v projections), and the hidden chunks;
+/// and sequential vs threaded meters agree byte-for-byte per collective.
+#[test]
+fn sparse_patterns_threaded_matches_sequential_and_serial() {
+    for pattern in [AttnPattern::Linformer { k: 8 }, AttnPattern::Block { w: 8 }] {
+        let (linformer_k, block_w) = pattern.native_knobs();
+        // serial reference: ring of 1, same pattern, same weights (the
+        // param inventory is ring-independent, so synthetic init agrees)
+        let rt1 = Runtime::native(NativeConfig {
+            ring: 1,
+            linformer_k,
+            block_w,
+            ..NativeConfig::tiny()
+        })
+        .unwrap();
+        let params1 = ParamStore::synthetic(rt1.manifest());
+        let batch = batch_for(&rt1, 17);
+        let serial = SeqParEngine::with_pattern(&rt1, Fabric::new(1, Meter::new()), pattern)
+            .unwrap();
+        let s = serial.forward_backward(&params1, &batch).unwrap();
+
+        for n in [2usize, 4] {
+            let tag = format!("attn={} n={n}", pattern.label());
+            let rt = Runtime::native(NativeConfig {
+                ring: n,
+                linformer_k,
+                block_w,
+                ..NativeConfig::tiny()
+            })
+            .unwrap();
+            let m = rt.manifest().clone();
+            let params = ParamStore::synthetic(&m);
+            for (name, t) in &params.values {
+                assert_eq!(t, &params1.values[name], "{tag}: init param {name} differs");
+            }
+
+            let seq_meter = Meter::new();
+            let seq =
+                SeqParEngine::with_pattern(&rt, Fabric::new(n, seq_meter.clone()), pattern)
+                    .unwrap();
+            let q = seq.forward_backward(&params, &batch).unwrap();
+
+            let thr_meter = Meter::new();
+            let dist = DistRunner::with_pattern(&rt, thr_meter.clone(), pattern).unwrap();
+            let t = dist.forward_backward(&params, &batch).unwrap();
+
+            assert!(
+                (t.loss - s.loss).abs() < TOL,
+                "{tag}: threaded loss {} vs serial {}",
+                t.loss,
+                s.loss
+            );
+            assert!(
+                (t.loss - q.loss).abs() < TOL,
+                "{tag}: threaded loss {} vs sequential {}",
+                t.loss,
+                q.loss
+            );
+            assert_grads_close(&format!("{tag} threaded vs serial"), &t, &s, TOL);
+            assert_grads_close(&format!("{tag} threaded vs sequential"), &t, &q, TOL);
+            if linformer_k > 0 {
+                // the new projection params actually receive gradient
+                let ek = &t.grads.values["linformer_ek"];
+                assert!(
+                    ek.f32s().unwrap().iter().any(|&v| v != 0.0),
+                    "{tag}: E_k gradient is all zero"
+                );
+            }
+
+            // hidden chunks reassemble to the serial hidden states
+            assert_eq!(t.hidden.len(), n);
+            let lc = m.seq_len / n;
+            let chunks3d: Vec<_> = t
+                .hidden
+                .iter()
+                .map(|h| h.clone().reshaped(&[m.batch, lc, m.hidden]).unwrap())
+                .collect();
+            let refs: Vec<_> = chunks3d.iter().collect();
+            let full = ops::concat_dim(&refs, 1)
+                .unwrap()
+                .reshaped(&[m.batch * m.seq_len, m.hidden])
+                .unwrap();
+            let dh = ops::max_abs_diff(&full, &s.hidden[0]).unwrap();
+            assert!(dh < TOL, "{tag}: reassembled hidden vs serial Δ={dh}");
+
+            // meter parity, byte-for-byte per collective kind
+            for kind in [
+                CommKind::RingP2p,
+                CommKind::AllReduce,
+                CommKind::AllGather,
+                CommKind::Broadcast,
+                CommKind::Pipeline,
+            ] {
+                assert_eq!(
+                    seq_meter.get(kind),
+                    thr_meter.get(kind),
+                    "{tag}: {kind:?} bytes differ (sequential {} vs threaded {})",
+                    seq_meter.get(kind),
+                    thr_meter.get(kind)
+                );
+            }
         }
     }
 }
