@@ -46,14 +46,20 @@ fn main() {
     println!("(equal volumes at equal n — the §3.2.2 equivalence)");
 
     println!("\n=== ablation 2: pipeline boundary bytes per microbatch (MP=4) ===");
-    println!("{:>6} {:>16} {:>16} {:>8}", "B", "megatron send+gather", "seqpar send", "saving");
+    println!(
+        "{:>6} {:>24} {:>16} {:>8}",
+        "B", "megatron scat+send+gath", "seqpar send", "saving"
+    );
     for b in [8usize, 32, 128] {
         let meg = boundary_bytes_megatron(b, 512, 768, 4);
         let sp = boundary_bytes_seqpar(b, 512, 768, 4);
-        let m_total = meg.send + meg.gather;
+        // the executable boundary (exec::mesh) also meters the scatter,
+        // which costs exactly the send volume — include it so this table
+        // agrees with the measured BENCH_mesh.json boundary totals
+        let m_total = meg.send + meg.send + meg.gather;
         let s_total = sp.send + sp.gather;
         println!(
-            "{b:>6} {m_total:>16} {s_total:>16} {:>7.1}%",
+            "{b:>6} {m_total:>24} {s_total:>16} {:>7.1}%",
             100.0 * (m_total - s_total) as f64 / m_total as f64
         );
     }

@@ -1,0 +1,157 @@
+//! Bench: the executable 4D mesh — DP×PP×SP vs the DP×PP×TP baseline.
+//!
+//! For each mesh shape in the matrix, times one full mesh training step
+//! (threaded `exec::MeshRunner`, one OS thread per coordinate) for both
+//! model-parallel kinds and records the metered traffic, separating the
+//! stage-boundary counters (Pipeline / AllGather / Scatter) where the
+//! paper's §3.2.2 claim lives: SP sends its already-split chunk, TP pays
+//! scatter + all-gather on top.  The bench asserts the claim on the
+//! measured bytes — strictly fewer boundary bytes for SP at every
+//! pipelined shape — and writes `BENCH_mesh.json` for the trajectory.
+//!
+//!     cargo bench --bench mesh_4d
+//!     cargo bench --bench mesh_4d -- --iters 2 --warmup 1   # CI smoke
+//!
+//! Flags: --iters N --warmup N --micros M --seq-len L --out PATH
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use seqpar::backend::native::NativeConfig;
+use seqpar::comm::{CommKind, Meter};
+use seqpar::eval::bench::{bench, fmt_ns};
+use seqpar::exec::{MeshRunner, MeshStep};
+use seqpar::model::params::ParamStore;
+use seqpar::parallel::topology::{Mesh, MpKind};
+use seqpar::parallel::Batch;
+use seqpar::runtime::Runtime;
+use seqpar::train::data::{Corpus, CorpusConfig};
+use seqpar::util::cli::Args;
+use seqpar::util::json::{encode, Value};
+
+fn num(v: f64) -> Value {
+    Value::Num(v)
+}
+
+const SHAPES: [(usize, usize, usize); 4] = [(1, 1, 4), (2, 1, 2), (1, 2, 2), (2, 2, 2)];
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let iters = args.usize_or("iters", 6)?;
+    let warmup = args.usize_or("warmup", 1)?;
+    let micros = args.usize_or("micros", 2)?;
+    let seq_len = args.usize_or("seq-len", 32)?;
+    let out_path = args.str_or("out", "BENCH_mesh.json").to_string();
+
+    let cores = std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(1);
+    println!(
+        "mesh_4d @ bert-tiny (L={seq_len}, micros={micros}, {cores} cores, {iters} iters + {warmup} warmup)"
+    );
+    println!(
+        "{:>10} {:>6} {:>14} {:>12} {:>12} {:>12}",
+        "mesh", "world", "step", "boundary", "ring+ar", "bubble"
+    );
+
+    let mut rows: Vec<Value> = Vec::new();
+    // boundary totals per (dp,pp,mp) shape, to assert SP < TP at the end
+    let mut boundary: BTreeMap<(usize, usize, usize, bool), u64> = BTreeMap::new();
+    for (dp, pp, mp) in SHAPES {
+        for kind in [MpKind::Sequence, MpKind::Tensor] {
+            let mesh = Mesh::new(dp, pp, mp, kind)?;
+            let cfg = NativeConfig { seq_len, ..NativeConfig::tiny() }.for_mesh(&mesh);
+            if kind == MpKind::Tensor && cfg.model.heads % mp != 0 {
+                println!(
+                    "{:>10} {:>6} skipped: Megatron's cap (mp {mp} > {} heads)",
+                    mesh.label(),
+                    cfg.model.heads
+                );
+                continue;
+            }
+            let rt = Runtime::native(cfg)?;
+            let m = rt.manifest().clone();
+            let params = ParamStore::synthetic(&m);
+            let mut corpus = Corpus::new(CorpusConfig::new(m.vocab, m.seq_len, m.batch), 3);
+            let batches: Vec<Vec<Batch>> = (0..dp)
+                .map(|_| (0..micros).map(|_| corpus.next_batch()).collect::<Result<_>>())
+                .collect::<Result<_>>()?;
+
+            let meter = Meter::new();
+            let runner = MeshRunner::new(&rt, mesh, micros, meter.clone())?;
+            // one metered step for the traffic columns
+            meter.reset();
+            runner.step(&params, &batches)?;
+            let snap = meter.snapshot();
+            let bnd = snap.pipeline + snap.all_gather + snap.scatter;
+            boundary.insert((dp, pp, mp, kind == MpKind::Sequence), bnd);
+
+            let t = bench(warmup, iters, || {
+                std::hint::black_box(runner.step(&params, &batches).unwrap());
+            });
+            let bubble = seqpar::parallel::pipeline::Schedule::gpipe(pp, micros).bubble_fraction();
+            println!(
+                "{:>10} {:>6} {:>14} {:>12} {:>12} {:>12.3}",
+                mesh.label(),
+                mesh.world_size(),
+                fmt_ns(t.mean_ns),
+                bnd,
+                snap.ring_p2p + snap.all_reduce,
+                bubble,
+            );
+
+            let mut row = BTreeMap::new();
+            row.insert("mesh".to_string(), Value::Str(mesh.label()));
+            row.insert("dp".to_string(), num(dp as f64));
+            row.insert("pp".to_string(), num(pp as f64));
+            row.insert("mp".to_string(), num(mp as f64));
+            row.insert(
+                "kind".to_string(),
+                Value::Str(if kind == MpKind::Sequence { "sp" } else { "tp" }.to_string()),
+            );
+            row.insert("world".to_string(), num(mesh.world_size() as f64));
+            row.insert("micros".to_string(), num(micros as f64));
+            row.insert("mean_ns".to_string(), num(t.mean_ns));
+            row.insert("min_ns".to_string(), num(t.min_ns));
+            row.insert("bubble_fraction".to_string(), num(bubble));
+            row.insert("ring_p2p_bytes".to_string(), num(snap.ring_p2p as f64));
+            row.insert("all_reduce_bytes".to_string(), num(snap.all_reduce as f64));
+            row.insert("boundary_pipeline_bytes".to_string(), num(snap.pipeline as f64));
+            row.insert("boundary_all_gather_bytes".to_string(), num(snap.all_gather as f64));
+            row.insert("boundary_scatter_bytes".to_string(), num(snap.scatter as f64));
+            row.insert("boundary_total_bytes".to_string(), num(bnd as f64));
+            rows.push(Value::Obj(row));
+        }
+    }
+
+    // the §3.2.2 claim, on measured bytes: SP boundaries strictly cheaper
+    // than TP at every pipelined shape
+    for (dp, pp, mp) in SHAPES {
+        let (Some(&sp), Some(&tp)) = (
+            boundary.get(&(dp, pp, mp, true)),
+            boundary.get(&(dp, pp, mp, false)),
+        ) else {
+            continue;
+        };
+        if pp > 1 && mp > 1 {
+            assert!(
+                sp < tp,
+                "{dp}x{pp}x{mp}: SP boundary bytes {sp} must be strictly below TP {tp}"
+            );
+        }
+    }
+    println!("(SP < TP boundary bytes asserted at every pipelined shape)");
+
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Value::Str("mesh_4d".to_string()));
+    top.insert("model".to_string(), Value::Str("bert-tiny".to_string()));
+    top.insert("seq_len".to_string(), num(seq_len as f64));
+    top.insert("micros".to_string(), num(micros as f64));
+    top.insert("cores".to_string(), num(cores as f64));
+    top.insert("iters".to_string(), num(iters as f64));
+    top.insert("rows".to_string(), Value::Arr(rows));
+    std::fs::write(&out_path, encode(&Value::Obj(top)))?;
+    println!("wrote {out_path}");
+    Ok(())
+}

@@ -68,6 +68,26 @@ impl NativeConfig {
             seed: 0,
         }
     }
+
+    /// Lower this config for a mesh's model axis (`exec::mesh`): the
+    /// manifest must carry ring=mp kernels under the sequence kind, or
+    /// tp=mp shard kernels under the tensor kind.  A TP axis that
+    /// violates Megatron's head-count cap keeps the base lowering — the
+    /// backend stays constructible and the mesh constructor reports the
+    /// real §4.2 error.
+    pub fn for_mesh(mut self, mesh: &crate::parallel::topology::Mesh) -> NativeConfig {
+        use crate::parallel::topology::MpKind;
+        match mesh.kind {
+            MpKind::Sequence => self.ring = mesh.mp,
+            MpKind::Tensor => {
+                self.ring = 1;
+                if mesh.mp > 1 && self.model.heads % mesh.mp == 0 {
+                    self.tp = mesh.mp;
+                }
+            }
+        }
+        self
+    }
 }
 
 /// One registered artifact's kernel identity + lowering-time constants.

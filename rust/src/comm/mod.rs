@@ -393,15 +393,24 @@ impl Fabric {
     /// Megatron's pipeline boundary under tensor parallelism: scatter the
     /// activation (split along sequence), send, then all-gather on the
     /// receiving stage (paper §3.2.2 last paragraph).  Sequence
-    /// parallelism skips both the scatter and the gather.
+    /// parallelism skips both the scatter and the gather.  This is the
+    /// one-call analytic form of the executable boundary in `exec::mesh`;
+    /// the all-gather is metered on the same group-total convention as
+    /// [`Fabric::all_gather`] — (n-1) * C for chunks summing to C — so the
+    /// two agree byte-for-byte.
     pub fn pipeline_boundary_megatron(&self, act: &Tensor) {
         let c = act.bytes() as u64;
+        if self.n == 1 {
+            // degenerate group: a plain send, no split and no gather
+            self.meter.add(CommKind::Pipeline, c);
+            return;
+        }
         // scatter: the activation is split across the TP group before send
         self.meter.add(CommKind::Scatter, c);
         // each TP rank sends its 1/n slice to the next stage
         self.meter.add(CommKind::Pipeline, c);
-        // all-gather on the receiving side
-        self.meter.add(CommKind::AllGather, (self.n as u64 - 1) * c / self.n as u64);
+        // ring all-gather on the receiving side: group total (n-1) * C
+        self.meter.add(CommKind::AllGather, (self.n as u64 - 1) * c);
     }
 }
 
@@ -577,6 +586,25 @@ mod tests {
         // plan claims rank 1 consumes chunk 0, but rank 1 sent nothing
         let consumers = vec![vec![0, 1], vec![1]];
         assert!(f.reduce_chunks_home(parts, &consumers).is_err());
+    }
+
+    #[test]
+    fn megatron_boundary_accounting_matches_the_executable_convention() {
+        // The one-call analytic boundary must meter exactly what the
+        // executable mesh boundary (exec::mesh) meters: scatter C +
+        // pipeline C + ring all-gather group total (n-1)*C.
+        let m = Meter::new();
+        let f = Fabric::new(4, m.clone());
+        let act = Tensor::zeros(&[8, 16]); // 512 bytes
+        f.pipeline_boundary_megatron(&act);
+        assert_eq!(m.get(CommKind::Scatter), 512);
+        assert_eq!(m.get(CommKind::Pipeline), 512);
+        assert_eq!(m.get(CommKind::AllGather), 3 * 512);
+        // degenerate group: a plain send, no split and no gather
+        let m1 = Meter::new();
+        Fabric::new(1, m1.clone()).pipeline_boundary_megatron(&act);
+        assert_eq!(m1.get(CommKind::Pipeline), 512);
+        assert_eq!(m1.total_bytes(), 512);
     }
 
     #[test]

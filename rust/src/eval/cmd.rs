@@ -7,15 +7,17 @@ use anyhow::{bail, Result};
 use crate::attn::AttnPattern;
 use crate::backend::native::NativeConfig;
 use crate::comm::{Fabric, Meter};
-use crate::exec::DistRunner;
-use crate::model::params::ParamStore;
+use crate::exec::{DistRunner, MeshEngine, MeshRunner, MeshStep};
+use crate::parallel::pipeline::Schedule;
 use crate::parallel::sequence::SeqParEngine;
 use crate::parallel::tensorp::TensorParEngine;
+use crate::parallel::topology::{Mesh, MpKind};
+use crate::model::params::ParamStore;
 use crate::parallel::{Batch, Engine};
 use crate::runtime::Runtime;
 use crate::tensor::{io, ops};
 use crate::train::data::{Corpus, CorpusConfig};
-use crate::train::trainer::{TrainConfig, Trainer};
+use crate::train::trainer::{MeshTrainer, TrainConfig, Trainer};
 use crate::util::cli::Args;
 
 pub const HELP: &str = "\
@@ -58,6 +60,16 @@ COMMON FLAGS:
                       ring rank via exec::DistRunner (native backend
                       only; implies --ring N, since rank count must equal
                       the ring size the manifest was built for)
+  --mesh DPxPPxMP     execute a full 4D mesh training step (one OS thread
+                      per mesh coordinate via exec::MeshRunner): data x
+                      pipeline x model parallelism, where the model axis
+                      is a sequence ring (--engine seq, implies --ring MP)
+                      or the Megatron tensor baseline (--engine tensor,
+                      implies --tp MP).  E.g. --mesh 2x2x2 (8 threads)
+  --micros M          GPipe microbatches per mesh step (default 1); each
+                      microbatch is one manifest-shaped batch
+  --mesh-sim          run the mesh sequentially simulated (exec::MeshEngine)
+                      instead of threaded — byte-identical meters
   --seed N            corpus seed (train/verify; default 7)
   --experiment ID     fig3a|fig3b|fig4a|fig4b|fig5a|fig5b|fig7|fig8|fig9|
                       table4|tables (sweep)
@@ -86,6 +98,7 @@ fn native_config(args: &Args) -> Result<NativeConfig> {
     } else {
         args.usize_or("ring", 4)?
     };
+    let tp = args.usize_or("tp", 2)?;
     // --attn decides which sparse kernels the backend registers; the
     // standalone --linformer K flag (predates --attn) is still honoured
     // when no pattern asks for a different K.  NOTE: linformer_k > 0 now
@@ -99,16 +112,46 @@ fn native_config(args: &Args) -> Result<NativeConfig> {
     if linformer_k == 0 {
         linformer_k = args.usize_or("linformer", 0)?;
     }
-    Ok(NativeConfig {
+    let mut cfg = NativeConfig {
         model: crate::model::by_name(args.str_or("model", "bert-tiny"))?,
         batch: args.usize_or("batch", 2)?,
         seq_len: args.usize_or("seq-len", 32)?,
         ring,
-        tp: args.usize_or("tp", 2)?,
+        tp,
         linformer_k,
         block_w,
         seed: args.usize_or("init-seed", 0)? as u64,
-    })
+    };
+    // --mesh DPxPPxMP fixes the model-parallel axis through the one
+    // shared lowering rule (`NativeConfig::for_mesh`): ring=MP under
+    // --engine seq, tp=MP (ring unused, lowered at 1) under tensor.
+    // Explicit --ring/--tp that disagree with the mesh are refused.
+    if let Some((dp, pp, mp)) = args.triple_opt("mesh")? {
+        let kind = match args.str_or("engine", "seq") {
+            "seq" => Some(MpKind::Sequence),
+            "tensor" => Some(MpKind::Tensor),
+            _ => None, // train() reports the engine/mesh mismatch
+        };
+        if let Some(kind) = kind {
+            let lowered = cfg.for_mesh(&Mesh::new(dp, pp, mp, kind)?);
+            if args.has("ring") && cfg.ring != lowered.ring {
+                bail!(
+                    "--ring {} conflicts with --mesh {dp}x{pp}x{mp} (the mesh lowers ring={})",
+                    cfg.ring,
+                    lowered.ring
+                );
+            }
+            if args.has("tp") && cfg.tp != lowered.tp {
+                bail!(
+                    "--tp {} conflicts with --mesh {dp}x{pp}x{mp} (the mesh lowers tp={})",
+                    cfg.tp,
+                    lowered.tp
+                );
+            }
+            cfg = lowered;
+        }
+    }
+    Ok(cfg)
 }
 
 /// The `--attn` pattern (train/bench surface; default dense).
@@ -367,6 +410,45 @@ pub fn train(args: &Args) -> Result<()> {
         );
     }
     let meter = Meter::new();
+
+    // ---- 4D mesh execution (DP×PP×SP / DP×PP×TP) --------------------
+    if let Some((dp, pp, mp)) = args.triple_opt("mesh")? {
+        if threads > 0 {
+            bail!("--mesh is threaded already (one OS thread per coordinate); use --mesh-sim for the sequential simulation");
+        }
+        if !pattern.is_dense() {
+            bail!("--mesh supports --attn dense only (got --attn {})", pattern.label());
+        }
+        let kind = match engine_name.as_str() {
+            "seq" => MpKind::Sequence,
+            "tensor" => MpKind::Tensor,
+            other => bail!("--mesh needs --engine seq or tensor (got --engine {other})"),
+        };
+        let mesh = Mesh::new(dp, pp, mp, kind)?;
+        let micros = args.usize_or("micros", 1)?;
+        let runner: Box<dyn MeshStep + '_> = if args.has("mesh-sim") {
+            Box::new(MeshEngine::new(&rt, mesh, micros, meter.clone())?)
+        } else {
+            Box::new(MeshRunner::new(&rt, mesh, micros, meter.clone())?)
+        };
+        println!(
+            "mesh execution: {} ({} coordinates{}), micros={}, pipeline bubble {:.3}",
+            mesh.label(),
+            mesh.world_size(),
+            if args.has("mesh-sim") { ", sequential simulation" } else { ", one OS thread each" },
+            micros,
+            Schedule::gpipe(pp, micros).bubble_fraction(),
+        );
+        let mut trainer = MeshTrainer::new(runner.as_ref(), &params, cfg);
+        trainer.run(&mut params, || corpus.next_batch(), false)?;
+        let s = meter.snapshot();
+        println!(
+            "comm totals: ring_p2p={} all_reduce={} all_gather={} broadcast={} scatter={} pipeline={} ({} ops)",
+            s.ring_p2p, s.all_reduce, s.all_gather, s.broadcast, s.scatter, s.pipeline, s.ops
+        );
+        return Ok(());
+    }
+
     match engine_name.as_str() {
         "seq" if threads > 0 => {
             let e = DistRunner::with_pattern(&rt, meter.clone(), pattern)?;
@@ -400,8 +482,8 @@ pub fn train(args: &Args) -> Result<()> {
     }
     let s = meter.snapshot();
     println!(
-        "comm totals: ring_p2p={} all_reduce={} all_gather={} broadcast={} pipeline={} ({} ops)",
-        s.ring_p2p, s.all_reduce, s.all_gather, s.broadcast, s.pipeline, s.ops
+        "comm totals: ring_p2p={} all_reduce={} all_gather={} broadcast={} scatter={} pipeline={} ({} ops)",
+        s.ring_p2p, s.all_reduce, s.all_gather, s.broadcast, s.scatter, s.pipeline, s.ops
     );
     Ok(())
 }

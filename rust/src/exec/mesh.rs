@@ -1,0 +1,931 @@
+//! The executable 4D mesh: DP×PP×SP (and the DP×PP×TP baseline).
+//!
+//! `parallel::topology::Mesh` describes the rank layout analytically;
+//! this module makes the composed mesh *run*.  Every mesh coordinate
+//! `(dp, pp, mp)` executes the pipeline-stage slice of the model that
+//! `pp` owns, over the model-parallel group that `mp` indexes, on the
+//! data-parallel replica `dp`:
+//!
+//! * **mp axis** — the paper's contribution slot: a sequence-parallel
+//!   ring (`MpKind::Sequence`, chunks of `L/mp` tokens per rank) or the
+//!   Megatron tensor-parallel baseline (`MpKind::Tensor`, head/FFN
+//!   shards).  Both reuse the per-stage segments of
+//!   `parallel::{sequence, tensorp}` — the same code the pure engines
+//!   run.
+//! * **pp axis** — a real GPipe schedule ([`Schedule::gpipe`]): stage
+//!   boundaries carry activations forward and gradients backward once
+//!   per microbatch, with activations stashed per in-flight microbatch.
+//!   The paper's §3.2.2 observation is executable here: a sequence-
+//!   parallel stage sends its already-split `[B, L/mp, H]` chunk
+//!   directly, while the tensor-parallel baseline pays scatter + send +
+//!   all-gather (every TP rank holds the full sequence).
+//! * **dp axis** — gradient all-reduce across replicas (summed over
+//!   microbatches, averaged over replicas), through the same
+//!   `parallel::allreduce_named` the `DataParallel` wrapper uses.
+//!
+//! Two executions, one step logic, byte-identical meters:
+//!
+//! * [`MeshEngine`] — sequential simulation: every coordinate on the
+//!   calling thread, model-parallel groups as `Fabric` slot views,
+//!   boundaries as buffered local queues, schedule cells executed in
+//!   start-tick order.
+//! * [`MeshRunner`] — one OS thread per mesh coordinate over per-group
+//!   channel meshes (`comm::threaded`): ring exchanges, boundary sends
+//!   and the dp/mp all-reduces are real concurrent messages, each thread
+//!   executing its stage's projection of the same GPipe schedule.
+//!
+//! `rust/tests/mesh_equivalence.rs` pins threaded == sequential == the
+//! serial engine (loss, every gradient, meter parity);
+//! `rust/tests/mesh_props.rs` fuzzes factorizations and pins measured
+//! boundary bytes to `pipeline::boundary_totals` exactly.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::thread;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::attn::AttnPattern;
+use crate::comm::threaded::{mesh as comm_mesh, RingComm};
+use crate::comm::{Collective, CommKind, Fabric, Meter};
+use crate::model::params::ParamStore;
+use crate::parallel::pipeline::{Cell, Schedule};
+use crate::parallel::sequence::{self, LayerStash, StepShape};
+use crate::parallel::tensorp::{self, TpLayerStash, TpShape};
+use crate::parallel::topology::{Coord, Mesh, MpKind};
+use crate::parallel::{allreduce_named, Batch};
+use crate::runtime::{Executor, Runtime};
+use crate::tensor::{ops, Tensor};
+
+/// Result of one mesh training step over `dp * micros` microbatches.
+#[derive(Debug)]
+pub struct MeshOutput {
+    /// Mean over replicas of the per-replica loss (each the sum over its
+    /// microbatches) — equals the pure-SP loss at dp=pp=1, micros=1.
+    pub loss: f32,
+    pub mlm: f32,
+    pub sop: f32,
+    /// Per-replica total loss, in dp order.
+    pub replica_loss: Vec<f32>,
+    /// Gradients in GLOBAL layout: summed over microbatches, all-reduced
+    /// over the mesh, averaged over dp — ready for the optimizer.
+    pub grads: ParamStore,
+}
+
+/// One mesh execution backend (sequential simulation or threaded).
+pub trait MeshStep {
+    fn mesh(&self) -> Mesh;
+    fn micros(&self) -> usize;
+    /// `batches[dp][micro]` — one manifest-shaped batch per microbatch
+    /// per replica (the artifact shapes fix the per-microbatch batch
+    /// size, exactly as in `parallel::data::DataParallel`).
+    fn step(&self, params: &ParamStore, batches: &[Vec<Batch>]) -> Result<MeshOutput>;
+}
+
+/// Which pipeline stage owns parameter `name` (stage 0: embeddings,
+/// last: the loss heads, layers by contiguous blocks).
+fn stage_of(name: &str, layers_per_stage: usize, stages: usize) -> Option<usize> {
+    if name == "tok_emb" || name == "pos_emb" {
+        return Some(0);
+    }
+    if name.starts_with("mlm_") || name.starts_with("sop_") {
+        return Some(stages - 1);
+    }
+    let rest = name.strip_prefix("layer")?;
+    let idx: usize = rest.split('.').next()?.parse().ok()?;
+    let s = idx / layers_per_stage;
+    (s < stages).then_some(s)
+}
+
+/// Validated run-shape for a mesh execution, shared by both backends.
+struct MeshSpec {
+    mesh: Mesh,
+    micros: usize,
+    layers_per_stage: usize,
+    sp: Option<StepShape>,
+    tp: Option<TpShape>,
+    /// Sorted parameter names owned by each pipeline stage — a disjoint
+    /// cover of the manifest inventory (validated at construction).
+    owned: Vec<Vec<String>>,
+}
+
+impl MeshSpec {
+    fn new(rt: &Runtime, mesh: Mesh, micros: usize) -> Result<MeshSpec> {
+        let m = rt.manifest();
+        if micros == 0 {
+            bail!("a mesh step needs micros >= 1");
+        }
+        if m.linformer_k != 0 {
+            // either kind: the Linformer projections add parameters that
+            // have no pipeline-stage owner
+            bail!(
+                "mesh execution supports dense attention only \
+                 (manifest was lowered with linformer_k={})",
+                m.linformer_k
+            );
+        }
+        let layers_per_stage = mesh.stage_layers(m.layers)?;
+        let (sp, tp) = match mesh.kind {
+            MpKind::Sequence => {
+                if m.ring != mesh.mp {
+                    bail!(
+                        "manifest was lowered for ring={}, the mesh's sequence axis \
+                         wants mp={} — rebuild the backend with --ring {}",
+                        m.ring,
+                        mesh.mp,
+                        mesh.mp
+                    );
+                }
+                (Some(StepShape::from_manifest_with(m, AttnPattern::Dense)?), None)
+            }
+            MpKind::Tensor => {
+                let tsh = TpShape::from_manifest(m, mesh.mp)?;
+                if mesh.pp > 1 && (m.batch * m.seq_len) % mesh.mp != 0 {
+                    bail!(
+                        "the stage-boundary scatter needs mp={} to divide B*L={}",
+                        mesh.mp,
+                        m.batch * m.seq_len
+                    );
+                }
+                (None, Some(tsh))
+            }
+        };
+        let mut owned: Vec<Vec<String>> = vec![Vec::new(); mesh.pp];
+        for p in &m.params {
+            let s = stage_of(&p.name, layers_per_stage, mesh.pp).ok_or_else(|| {
+                anyhow!(
+                    "parameter {:?} has no pipeline-stage owner (mesh execution \
+                     covers the dense transformer inventory)",
+                    p.name
+                )
+            })?;
+            owned[s].push(p.name.clone());
+        }
+        for o in &mut owned {
+            o.sort();
+        }
+        Ok(MeshSpec { mesh, micros, layers_per_stage, sp, tp, owned })
+    }
+
+    /// Zero gradient buffers for stage `s` only — a rank holds grads for
+    /// its own stage's parameters, not the whole model (the GPipe memory
+    /// story; at pp=1 this is the full inventory).
+    fn stage_zeros(&self, params: &ParamStore, s: usize) -> ParamStore {
+        ParamStore {
+            values: self.owned[s]
+                .iter()
+                .map(|n| (n.clone(), Tensor::zeros(&params.values[n].shape)))
+                .collect(),
+        }
+    }
+
+    fn check_batches(&self, batches: &[Vec<Batch>]) -> Result<()> {
+        if batches.len() != self.mesh.dp {
+            bail!(
+                "mesh with dp={} needs {} replica batch lists, got {}",
+                self.mesh.dp,
+                self.mesh.dp,
+                batches.len()
+            );
+        }
+        for (r, b) in batches.iter().enumerate() {
+            if b.len() != self.micros {
+                bail!(
+                    "replica {r}: mesh with micros={} needs {} microbatches, got {}",
+                    self.micros,
+                    self.micros,
+                    b.len()
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One direction of one stage boundary, executed two ways: a buffered
+/// local queue (sequential simulation) or the direct channel edges of the
+/// pp-column communicator (threaded).  Every part sent is metered as
+/// [`CommKind::Pipeline`], so the two executions agree byte-for-byte.
+enum Link<'a> {
+    Queue { q: &'a RefCell<VecDeque<Vec<Tensor>>>, meter: &'a Meter },
+    Comm { comm: &'a RingComm, peer: usize },
+}
+
+impl<'a> Link<'a> {
+    fn send(&self, parts: Vec<Tensor>) -> Result<()> {
+        match self {
+            Link::Queue { q, meter } => {
+                for t in &parts {
+                    meter.add(CommKind::Pipeline, t.bytes() as u64);
+                }
+                q.borrow_mut().push_back(parts);
+                Ok(())
+            }
+            Link::Comm { comm, peer } => {
+                let [t]: [Tensor; 1] = parts
+                    .try_into()
+                    .map_err(|_| anyhow!("a per-rank link sends exactly one part"))?;
+                comm.send_to(*peer, t)
+            }
+        }
+    }
+
+    fn recv(&self) -> Result<Vec<Tensor>> {
+        match self {
+            Link::Queue { q, .. } => q
+                .borrow_mut()
+                .pop_front()
+                .ok_or_else(|| anyhow!("stage boundary queue empty — schedule violated causality")),
+            Link::Comm { comm, peer } => Ok(vec![comm.recv_from(*peer)?]),
+        }
+    }
+}
+
+fn need<'l, 'a>(link: Option<&'l Link<'a>>, what: &str) -> Result<&'l Link<'a>> {
+    link.ok_or_else(|| anyhow!("stage has no {what} link"))
+}
+
+/// A sequence-parallel pipeline stage: layers `[lo, hi)` over the mp-ring
+/// view, with per-microbatch activation stashes.
+struct SpStage<'a> {
+    ex: &'a dyn Executor,
+    sh: &'a StepShape,
+    params: &'a ParamStore,
+    view: &'a dyn Collective,
+    lo: usize,
+    hi: usize,
+    first: bool,
+    last: bool,
+    stash: Vec<Vec<LayerStash>>,
+    held: Vec<Option<Vec<Tensor>>>,
+    grads: Vec<ParamStore>,
+    mlm: f32,
+    sop: f32,
+}
+
+impl<'a> SpStage<'a> {
+    fn forward_micro(
+        &mut self,
+        u: usize,
+        batch: &Batch,
+        prev: Option<&Link>,
+        next: Option<&Link>,
+    ) -> Result<()> {
+        let ranks = self.view.local_ranks();
+        let mut x = if self.first {
+            sequence::sp_embed_fwd(self.ex, self.sh, self.params, batch, &ranks)?
+        } else {
+            // SP boundary: the already-split [B, Lc, H] chunks arrive
+            // directly — no scatter, no gather (paper §3.2.2)
+            need(prev, "inbound")?.recv()?
+        };
+        let mut sts = Vec::with_capacity(self.hi - self.lo);
+        for layer in self.lo..self.hi {
+            let (x_next, st) =
+                sequence::sp_layer_fwd(self.ex, self.view, self.sh, self.params, layer, x)?;
+            x = x_next;
+            sts.push(st);
+        }
+        if self.stash.len() != u {
+            bail!("stage ran forward microbatch {u} out of schedule order");
+        }
+        self.stash.push(sts);
+        if self.last {
+            self.held[u] = Some(x);
+        } else {
+            need(next, "outbound")?.send(x)?;
+        }
+        Ok(())
+    }
+
+    fn backward_micro(
+        &mut self,
+        u: usize,
+        batch: &Batch,
+        prev: Option<&Link>,
+        next: Option<&Link>,
+    ) -> Result<()> {
+        let ranks = self.view.local_ranks();
+        let mut dx = if self.last {
+            let x = self.held[u]
+                .take()
+                .ok_or_else(|| anyhow!("microbatch {u} has no held activation"))?;
+            let (mlm, sop, dx) = sequence::sp_heads_fwd_bwd(
+                self.ex, self.sh, self.params, batch, &x, &ranks, &mut self.grads,
+            )?;
+            self.mlm += mlm;
+            self.sop += sop;
+            dx
+        } else {
+            need(next, "inbound gradient")?.recv()?
+        };
+        let sts = std::mem::take(&mut self.stash[u]); // GPipe frees the stash here
+        for (i, layer) in (self.lo..self.hi).enumerate().rev() {
+            dx = sequence::sp_layer_bwd(
+                self.ex, self.view, self.sh, self.params, layer, &sts[i], &dx, &mut self.grads,
+            )?;
+        }
+        if self.first {
+            sequence::sp_embed_bwd(
+                self.ex, self.sh, self.params, batch, &dx, &ranks, &mut self.grads,
+            )?;
+        } else {
+            need(prev, "outbound gradient")?.send(dx)?;
+        }
+        Ok(())
+    }
+}
+
+/// A tensor-parallel pipeline stage (the Megatron baseline): every rank
+/// holds the full sequence (one replicated activation per view);
+/// boundaries pay scatter + send + all-gather.
+struct TpStage<'a> {
+    ex: &'a dyn Executor,
+    tsh: &'a TpShape,
+    params: &'a ParamStore,
+    view: &'a dyn Collective,
+    meter: &'a Meter,
+    lo: usize,
+    hi: usize,
+    first: bool,
+    last: bool,
+    stash: Vec<Vec<TpLayerStash>>,
+    held: Vec<Option<Tensor>>,
+    grads: Vec<ParamStore>,
+    mlm: f32,
+    sop: f32,
+}
+
+impl<'a> TpStage<'a> {
+    /// Megatron's boundary send: scatter the replicated [B*L, H]
+    /// activation to 1/mp row slices (metered [`CommKind::Scatter`]),
+    /// send each executed rank's slice to its peer in the adjacent stage.
+    fn send_boundary(&self, x: Tensor, link: &Link) -> Result<()> {
+        let t = self.view.world();
+        if t == 1 {
+            return link.send(vec![x]); // degenerate group: a plain send
+        }
+        let rows = self.tsh.b * self.tsh.l / t;
+        let parts = self
+            .view
+            .local_ranks()
+            .iter()
+            .map(|&d| {
+                let sl = ops::slice_dim0(&x, d * rows, (d + 1) * rows)?;
+                self.meter.add(CommKind::Scatter, sl.bytes() as u64);
+                Ok(sl)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        link.send(parts)
+    }
+
+    /// The receiving side's all-gather back to the full activation.
+    fn recv_boundary(&self, link: &Link) -> Result<Tensor> {
+        let mut parts = link.recv()?;
+        self.view.all_gather(&mut parts, 0)?; // no-op (and free) at mp=1
+        Ok(parts.swap_remove(0))
+    }
+
+    fn forward_micro(
+        &mut self,
+        u: usize,
+        batch: &Batch,
+        prev: Option<&Link>,
+        next: Option<&Link>,
+    ) -> Result<()> {
+        let mut x = if self.first {
+            tensorp::tp_embed_fwd(self.ex, self.tsh, self.params, batch)?
+        } else {
+            self.recv_boundary(need(prev, "inbound")?)?
+        };
+        let mut sts = Vec::with_capacity(self.hi - self.lo);
+        for layer in self.lo..self.hi {
+            let (x_next, st) =
+                tensorp::tp_layer_fwd(self.ex, self.view, self.tsh, self.params, layer, x)?;
+            x = x_next;
+            sts.push(st);
+        }
+        if self.stash.len() != u {
+            bail!("stage ran forward microbatch {u} out of schedule order");
+        }
+        self.stash.push(sts);
+        if self.last {
+            self.held[u] = Some(x);
+        } else {
+            self.send_boundary(x, need(next, "outbound")?)?;
+        }
+        Ok(())
+    }
+
+    fn backward_micro(
+        &mut self,
+        u: usize,
+        batch: &Batch,
+        prev: Option<&Link>,
+        next: Option<&Link>,
+    ) -> Result<()> {
+        let ranks = self.view.local_ranks();
+        let mut dx = if self.last {
+            let x = self.held[u]
+                .take()
+                .ok_or_else(|| anyhow!("microbatch {u} has no held activation"))?;
+            let (mlm, sop, dx) = tensorp::tp_heads_fwd_bwd(
+                self.ex, self.tsh, self.params, batch, &x, &ranks, &mut self.grads,
+            )?;
+            self.mlm += mlm;
+            self.sop += sop;
+            dx
+        } else {
+            self.recv_boundary(need(next, "inbound gradient")?)?
+        };
+        let sts = std::mem::take(&mut self.stash[u]);
+        for (i, layer) in (self.lo..self.hi).enumerate().rev() {
+            dx = tensorp::tp_layer_bwd(
+                self.ex, self.view, self.tsh, self.params, layer, &sts[i], &dx, &mut self.grads,
+            )?;
+        }
+        if self.first {
+            tensorp::tp_embed_bwd(
+                self.ex, self.tsh, self.params, batch, &dx, &ranks, &mut self.grads,
+            )?;
+        } else {
+            self.send_boundary(dx, need(prev, "outbound gradient")?)?;
+        }
+        Ok(())
+    }
+}
+
+/// One pipeline stage of one replica, either kind.
+enum Stage<'a> {
+    Sp(SpStage<'a>),
+    Tp(TpStage<'a>),
+}
+
+impl<'a> Stage<'a> {
+    fn new(
+        spec: &'a MeshSpec,
+        ex: &'a dyn Executor,
+        params: &'a ParamStore,
+        view: &'a dyn Collective,
+        meter: &'a Meter,
+        s: usize,
+    ) -> Stage<'a> {
+        let lo = s * spec.layers_per_stage;
+        let hi = lo + spec.layers_per_stage;
+        let first = s == 0;
+        let last = s + 1 == spec.mesh.pp;
+        let ln = view.local_ranks().len();
+        let grads: Vec<ParamStore> = (0..ln).map(|_| spec.stage_zeros(params, s)).collect();
+        match spec.mesh.kind {
+            MpKind::Sequence => Stage::Sp(SpStage {
+                ex,
+                sh: spec.sp.as_ref().expect("SP mesh has a StepShape"),
+                params,
+                view,
+                lo,
+                hi,
+                first,
+                last,
+                stash: Vec::new(),
+                held: (0..spec.micros).map(|_| None).collect(),
+                grads,
+                mlm: 0.0,
+                sop: 0.0,
+            }),
+            MpKind::Tensor => Stage::Tp(TpStage {
+                ex,
+                tsh: spec.tp.as_ref().expect("TP mesh has a TpShape"),
+                params,
+                view,
+                meter,
+                lo,
+                hi,
+                first,
+                last,
+                stash: Vec::new(),
+                held: (0..spec.micros).map(|_| None).collect(),
+                grads,
+                mlm: 0.0,
+                sop: 0.0,
+            }),
+        }
+    }
+
+    fn forward_micro(
+        &mut self,
+        u: usize,
+        batch: &Batch,
+        prev: Option<&Link>,
+        next: Option<&Link>,
+    ) -> Result<()> {
+        match self {
+            Stage::Sp(s) => s.forward_micro(u, batch, prev, next),
+            Stage::Tp(s) => s.forward_micro(u, batch, prev, next),
+        }
+    }
+
+    fn backward_micro(
+        &mut self,
+        u: usize,
+        batch: &Batch,
+        prev: Option<&Link>,
+        next: Option<&Link>,
+    ) -> Result<()> {
+        match self {
+            Stage::Sp(s) => s.backward_micro(u, batch, prev, next),
+            Stage::Tp(s) => s.backward_micro(u, batch, prev, next),
+        }
+    }
+
+    /// Close out the stage after all cells ran: SP all-reduces its owned
+    /// gradients across the mp ring (the seqpar convention — every ring
+    /// rank ends with the group sums); TP keeps per-rank shards, merged
+    /// host-side at assembly exactly like the pure engine.
+    fn finish(self, owned: &[String]) -> Result<(f32, f32, Vec<ParamStore>)> {
+        match self {
+            Stage::Sp(mut s) => {
+                if s.view.world() > 1 {
+                    allreduce_named(s.view, &mut s.grads, owned)?;
+                }
+                Ok((s.mlm, s.sop, s.grads))
+            }
+            Stage::Tp(s) => Ok((s.mlm, s.sop, s.grads)),
+        }
+    }
+}
+
+/// Merge replica 0's per-stage, per-rank stores (already dp-reduced) into
+/// one global-layout store, then average over dp.
+fn assemble(
+    spec: &MeshSpec,
+    params: &ParamStore,
+    stage_stores: Vec<Vec<ParamStore>>,
+) -> Result<ParamStore> {
+    let mut out = params.zeros_like();
+    for (s, stores) in stage_stores.iter().enumerate() {
+        match spec.mesh.kind {
+            MpKind::Sequence => {
+                // all ring ranks hold the same sums post all-reduce
+                for name in &spec.owned[s] {
+                    *out.get_mut(name)? = stores[0].values[name].clone();
+                }
+            }
+            MpKind::Tensor => {
+                // disjoint shards + rank-0-only replicated entries: exact
+                for name in &spec.owned[s] {
+                    for st in stores {
+                        ops::add_assign(out.get_mut(name)?, &st.values[name])?;
+                    }
+                }
+            }
+        }
+    }
+    if spec.mesh.dp > 1 {
+        for t in out.values.values_mut() {
+            ops::scale_assign(t, 1.0 / spec.mesh.dp as f32)?;
+        }
+    }
+    Ok(out)
+}
+
+fn output_from(
+    spec: &MeshSpec,
+    params: &ParamStore,
+    replica_mlm: Vec<f32>,
+    replica_sop: Vec<f32>,
+    stage_stores: Vec<Vec<ParamStore>>,
+) -> Result<MeshOutput> {
+    let dp = spec.mesh.dp as f32;
+    let mlm = replica_mlm.iter().sum::<f32>() / dp;
+    let sop = replica_sop.iter().sum::<f32>() / dp;
+    let replica_loss: Vec<f32> = replica_mlm
+        .iter()
+        .zip(&replica_sop)
+        .map(|(a, b)| a + b)
+        .collect();
+    Ok(MeshOutput {
+        loss: mlm + sop,
+        mlm,
+        sop,
+        replica_loss,
+        grads: assemble(spec, params, stage_stores)?,
+    })
+}
+
+/// Sequential mesh simulation: every coordinate on the calling thread,
+/// model-parallel groups as [`Fabric`] slot views, stage boundaries as
+/// buffered queues, GPipe cells executed in start-tick order.
+pub struct MeshEngine<'rt> {
+    rt: &'rt Runtime,
+    spec: MeshSpec,
+    pub meter: Arc<Meter>,
+}
+
+impl<'rt> MeshEngine<'rt> {
+    pub fn new(rt: &'rt Runtime, mesh: Mesh, micros: usize, meter: Arc<Meter>) -> Result<Self> {
+        Ok(MeshEngine { rt, spec: MeshSpec::new(rt, mesh, micros)?, meter })
+    }
+}
+
+impl<'rt> MeshStep for MeshEngine<'rt> {
+    fn mesh(&self) -> Mesh {
+        self.spec.mesh
+    }
+
+    fn micros(&self) -> usize {
+        self.spec.micros
+    }
+
+    fn step(&self, params: &ParamStore, batches: &[Vec<Batch>]) -> Result<MeshOutput> {
+        self.spec.check_batches(batches)?;
+        let ex = self.rt.backend();
+        let mesh = self.spec.mesh;
+        let (dp, pp, mp) = (mesh.dp, mesh.pp, mesh.mp);
+        let meter: &Meter = &self.meter;
+        let mp_view = Fabric::new(mp, self.meter.clone());
+        let dp_view = Fabric::new(dp, self.meter.clone());
+        // causal execution order: cells sorted by start tick (ties are
+        // dataflow-independent; stage order keeps it deterministic)
+        let mut cells: Vec<Cell> = Schedule::gpipe(pp, self.spec.micros).cells;
+        cells.sort_by_key(|c| (c.start, c.stage));
+
+        let mut replica_mlm = vec![0.0f32; dp];
+        let mut replica_sop = vec![0.0f32; dp];
+        let mut grads_by: Vec<Vec<Vec<ParamStore>>> = Vec::with_capacity(dp);
+        for r in 0..dp {
+            let fwd_q: Vec<RefCell<VecDeque<Vec<Tensor>>>> =
+                (0..pp.saturating_sub(1)).map(|_| RefCell::new(VecDeque::new())).collect();
+            let bwd_q: Vec<RefCell<VecDeque<Vec<Tensor>>>> =
+                (0..pp.saturating_sub(1)).map(|_| RefCell::new(VecDeque::new())).collect();
+            let mut stages: Vec<Stage> = (0..pp)
+                .map(|s| Stage::new(&self.spec, ex, params, &mp_view, meter, s))
+                .collect();
+            for c in &cells {
+                let s = c.stage;
+                let batch = &batches[r][c.micro];
+                if c.forward {
+                    let prev = (s > 0).then(|| Link::Queue { q: &fwd_q[s - 1], meter });
+                    let next = (s + 1 < pp).then(|| Link::Queue { q: &fwd_q[s], meter });
+                    stages[s].forward_micro(c.micro, batch, prev.as_ref(), next.as_ref())?;
+                } else {
+                    let prev = (s > 0).then(|| Link::Queue { q: &bwd_q[s - 1], meter });
+                    let next = (s + 1 < pp).then(|| Link::Queue { q: &bwd_q[s], meter });
+                    stages[s].backward_micro(c.micro, batch, prev.as_ref(), next.as_ref())?;
+                }
+            }
+            let mut per_stage = Vec::with_capacity(pp);
+            for (s, st) in stages.into_iter().enumerate() {
+                let (mlm, sop, g) = st.finish(&self.spec.owned[s])?;
+                replica_mlm[r] += mlm;
+                replica_sop[r] += sop;
+                per_stage.push(g);
+            }
+            grads_by.push(per_stage);
+        }
+
+        // dp gradient all-reduce: one reduce per (stage, mp-rank) group —
+        // the same per-rank traffic the threaded mesh meters
+        if dp > 1 {
+            for s in 0..pp {
+                for i in 0..mp {
+                    let mut slots: Vec<ParamStore> = (0..dp)
+                        .map(|r| std::mem::take(&mut grads_by[r][s][i]))
+                        .collect();
+                    allreduce_named(&dp_view, &mut slots, &self.spec.owned[s])?;
+                    for (r, g) in slots.into_iter().enumerate() {
+                        grads_by[r][s][i] = g;
+                    }
+                }
+            }
+        }
+
+        let stage_stores = grads_by.swap_remove(0);
+        output_from(&self.spec, params, replica_mlm, replica_sop, stage_stores)
+    }
+}
+
+/// The threaded 4D mesh runner: one OS thread per mesh coordinate, ring /
+/// all-reduce / boundary traffic as real channel messages, each thread
+/// executing its stage's projection of the GPipe schedule.
+pub struct MeshRunner<'rt> {
+    rt: &'rt Runtime,
+    spec: MeshSpec,
+    pub meter: Arc<Meter>,
+}
+
+impl<'rt> MeshRunner<'rt> {
+    /// Fails up front when the backend cannot cross threads (xla-pjrt).
+    pub fn new(rt: &'rt Runtime, mesh: Mesh, micros: usize, meter: Arc<Meter>) -> Result<Self> {
+        rt.sync_backend()?;
+        Ok(MeshRunner { rt, spec: MeshSpec::new(rt, mesh, micros)?, meter })
+    }
+}
+
+/// The per-coordinate body: run this stage's schedule cells over the
+/// coordinate's mp view, then reduce gradients across dp.
+#[allow(clippy::too_many_arguments)]
+fn run_coord(
+    ex: &dyn Executor,
+    spec: &MeshSpec,
+    params: &ParamStore,
+    replica: &[Batch],
+    coord: Coord,
+    mpc: &RingComm,
+    dpc: &RingComm,
+    ppc: &RingComm,
+    meter: &Meter,
+) -> Result<(f32, f32, ParamStore)> {
+    let stage_idx = coord.pp;
+    let stages = spec.mesh.pp;
+    let mut st = Stage::new(spec, ex, params, mpc, meter, stage_idx);
+    let prev = (stage_idx > 0).then(|| Link::Comm { comm: ppc, peer: stage_idx - 1 });
+    let next = (stage_idx + 1 < stages).then(|| Link::Comm { comm: ppc, peer: stage_idx + 1 });
+    // this stage's projection of the GPipe schedule, in start-tick order
+    let mut cells: Vec<Cell> = Schedule::gpipe(stages, spec.micros)
+        .cells
+        .into_iter()
+        .filter(|c| c.stage == stage_idx)
+        .collect();
+    cells.sort_by_key(|c| c.start);
+    for c in &cells {
+        if c.forward {
+            st.forward_micro(c.micro, &replica[c.micro], prev.as_ref(), next.as_ref())?;
+        } else {
+            st.backward_micro(c.micro, &replica[c.micro], prev.as_ref(), next.as_ref())?;
+        }
+    }
+    let (mlm, sop, mut g) = st.finish(&spec.owned[stage_idx])?;
+    if spec.mesh.dp > 1 {
+        allreduce_named(dpc, &mut g, &spec.owned[stage_idx])?;
+    }
+    Ok((mlm, sop, g.swap_remove(0)))
+}
+
+impl<'rt> MeshStep for MeshRunner<'rt> {
+    fn mesh(&self) -> Mesh {
+        self.spec.mesh
+    }
+
+    fn micros(&self) -> usize {
+        self.spec.micros
+    }
+
+    fn step(&self, params: &ParamStore, batches: &[Vec<Batch>]) -> Result<MeshOutput> {
+        self.spec.check_batches(batches)?;
+        let ex = self.rt.sync_backend()?;
+        let mesh = self.spec.mesh;
+        let (dp, pp, mp) = (mesh.dp, mesh.pp, mesh.mp);
+        let world = mesh.world_size();
+        let spec = &self.spec;
+        let meter: &Meter = &self.meter;
+
+        // carve the sub-communicators from the mesh: one channel group
+        // per (dp, pp) mp-ring, per (pp, mp) dp replica set, per (dp, mp)
+        // pp column.  Fresh channels every step keep the message schedule
+        // identical across steps, so results are bit-deterministic.
+        let mut mp_slot: Vec<Option<RingComm>> = (0..world).map(|_| None).collect();
+        let mut dp_slot: Vec<Option<RingComm>> = (0..world).map(|_| None).collect();
+        let mut pp_slot: Vec<Option<RingComm>> = (0..world).map(|_| None).collect();
+        for d in 0..dp {
+            for p in 0..pp {
+                for (i, c) in comm_mesh(mp, self.meter.clone()).into_iter().enumerate() {
+                    mp_slot[mesh.rank(Coord { dp: d, pp: p, mp: i })] = Some(c);
+                }
+            }
+        }
+        for p in 0..pp {
+            for m in 0..mp {
+                for (i, c) in comm_mesh(dp, self.meter.clone()).into_iter().enumerate() {
+                    dp_slot[mesh.rank(Coord { dp: i, pp: p, mp: m })] = Some(c);
+                }
+            }
+        }
+        for d in 0..dp {
+            for m in 0..mp {
+                for (i, c) in comm_mesh(pp, self.meter.clone()).into_iter().enumerate() {
+                    pp_slot[mesh.rank(Coord { dp: d, pp: i, mp: m })] = Some(c);
+                }
+            }
+        }
+
+        let results: Vec<(usize, Result<(f32, f32, ParamStore)>)> = thread::scope(|sc| {
+            let mut handles = Vec::with_capacity(world);
+            for rank in 0..world {
+                let coord = mesh.coord(rank).expect("rank in world");
+                let mpc = mp_slot[rank].take().expect("mp comm assigned");
+                let dpc = dp_slot[rank].take().expect("dp comm assigned");
+                let ppc = pp_slot[rank].take().expect("pp comm assigned");
+                let replica = &batches[coord.dp];
+                handles.push(sc.spawn(move || {
+                    let out =
+                        run_coord(ex, spec, params, replica, coord, &mpc, &dpc, &ppc, meter);
+                    (rank, out)
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join()
+                        .unwrap_or_else(|_| (usize::MAX, Err(anyhow!("mesh rank thread panicked"))))
+                })
+                .collect()
+        });
+
+        let mut replica_mlm = vec![0.0f32; dp];
+        let mut replica_sop = vec![0.0f32; dp];
+        let mut stage_stores: Vec<Vec<Option<ParamStore>>> =
+            (0..pp).map(|_| (0..mp).map(|_| None).collect()).collect();
+        let mut seen = vec![false; world];
+        for (rank, res) in results {
+            let out = res.map_err(|e| {
+                if rank == usize::MAX {
+                    e
+                } else {
+                    anyhow!("mesh coordinate {rank}: {e}")
+                }
+            })?;
+            if rank >= world || seen[rank] {
+                bail!("mesh runner joined an unexpected rank {rank}");
+            }
+            seen[rank] = true;
+            let c = mesh.coord(rank)?;
+            replica_mlm[c.dp] += out.0;
+            replica_sop[c.dp] += out.1;
+            if c.dp == 0 {
+                stage_stores[c.pp][c.mp] = Some(out.2);
+            }
+        }
+        let stage_stores: Vec<Vec<ParamStore>> = stage_stores
+            .into_iter()
+            .enumerate()
+            .map(|(s, row)| {
+                row.into_iter()
+                    .enumerate()
+                    .map(|(i, g)| {
+                        g.ok_or_else(|| anyhow!("stage {s} mp-rank {i} produced no gradients"))
+                    })
+                    .collect::<Result<Vec<_>>>()
+            })
+            .collect::<Result<_>>()?;
+        output_from(spec, params, replica_mlm, replica_sop, stage_stores)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeConfig;
+    use crate::exec::DistRunner;
+    use crate::train::data::{Corpus, CorpusConfig};
+
+    fn batches(rt: &Runtime, dp: usize, micros: usize, seed: u64) -> Vec<Vec<Batch>> {
+        let m = rt.manifest();
+        let mut c = Corpus::new(CorpusConfig::new(m.vocab, m.seq_len, m.batch), seed);
+        (0..dp)
+            .map(|_| (0..micros).map(|_| c.next_batch().unwrap()).collect())
+            .collect()
+    }
+
+    /// Smoke: at dp=pp=1 the threaded mesh IS the pure-SP threaded
+    /// runner (the full matrix lives in rust/tests/mesh_equivalence.rs).
+    #[test]
+    fn unit_mesh_matches_dist_runner_loss() {
+        let rt = Runtime::native(NativeConfig { ring: 2, ..NativeConfig::tiny() }).unwrap();
+        let params = ParamStore::synthetic(rt.manifest());
+        let b = batches(&rt, 1, 1, 11);
+
+        let mesh = Mesh::new(1, 1, 2, MpKind::Sequence).unwrap();
+        let runner = MeshRunner::new(&rt, mesh, 1, Meter::new()).unwrap();
+        let out = runner.step(&params, &b).unwrap();
+
+        let dist = DistRunner::new(&rt, Meter::new()).unwrap();
+        let want = dist.forward_backward(&params, &b[0][0]).unwrap();
+        assert!(
+            (out.loss - want.loss).abs() < 1e-5,
+            "mesh {} vs dist {}",
+            out.loss,
+            want.loss
+        );
+    }
+
+    #[test]
+    fn spec_rejects_bad_shapes() {
+        let rt = Runtime::native(NativeConfig { ring: 2, ..NativeConfig::tiny() }).unwrap();
+        // micros = 0
+        assert!(MeshRunner::new(&rt, Mesh::new(1, 1, 2, MpKind::Sequence).unwrap(), 0, Meter::new()).is_err());
+        // pp does not divide the layer count (bert-tiny has 2 layers)
+        assert!(MeshRunner::new(&rt, Mesh::new(1, 3, 2, MpKind::Sequence).unwrap(), 1, Meter::new()).is_err());
+        // SP mp must match the manifest ring
+        assert!(MeshRunner::new(&rt, Mesh::new(1, 1, 4, MpKind::Sequence).unwrap(), 1, Meter::new()).is_err());
+        // TP mp above the head count hits Megatron's cap (bert-tiny: 2)
+        assert!(MeshRunner::new(&rt, Mesh::new(1, 1, 4, MpKind::Tensor).unwrap(), 1, Meter::new()).is_err());
+        // batch-shape validation
+        let runner =
+            MeshRunner::new(&rt, Mesh::new(2, 1, 2, MpKind::Sequence).unwrap(), 2, Meter::new())
+                .unwrap();
+        let params = ParamStore::synthetic(rt.manifest());
+        let b = batches(&rt, 1, 2, 3); // one replica short
+        assert!(runner.step(&params, &b).is_err());
+    }
+}

@@ -23,10 +23,17 @@
 //! (and byte-for-byte meter agreement) between the two executions, and
 //! `benches/dist_speedup.rs` measures the wall-clock win.
 //!
+//! [`MeshRunner`] generalizes the same idea to the full 4D mesh
+//! (DP×PP×SP, plus the DP×PP×TP baseline): one OS thread per mesh
+//! coordinate, sub-communicators carved per mesh axis, a real GPipe
+//! microbatch pipeline across stages — see [`mesh`](self::MeshRunner).
+//!
 //! Requires a `Send + Sync` backend: the default native backend qualifies;
 //! the `backend-xla` PJRT backend (Rc-based, thread-local handles) is
 //! rejected at construction with a pointer at `--backend native`.
 
+mod mesh;
 mod runner;
 
+pub use mesh::{MeshEngine, MeshOutput, MeshRunner, MeshStep};
 pub use runner::DistRunner;

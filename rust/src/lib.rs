@@ -27,8 +27,11 @@
 //!   blockwise masks with comm-skipping) behind [`attn::AttnPattern`]
 //! * [`comm`] — the collective fabric (ring P2P, all-reduce, …) + meters,
 //!   sequential ([`comm::Fabric`]) and threaded ([`comm::threaded`])
-//! * [`exec`] — the threaded distributed runner: one OS thread per rank
-//!   over real ring P2P ([`exec::DistRunner`])
+//! * [`exec`] — the threaded distributed runners: one OS thread per rank
+//!   over real ring P2P ([`exec::DistRunner`]), and the executable 4D
+//!   mesh — DP×PP×SP and the DP×PP×TP baseline with a real GPipe
+//!   microbatch pipeline ([`exec::MeshRunner`] threaded,
+//!   [`exec::MeshEngine`] sequentially simulated, byte-identical meters)
 //! * [`runtime`] — the [`runtime::Executor`] trait, manifest contract,
 //!   artifact-name registry, and the [`runtime::Runtime`] backend enum
 //! * [`backend`] — the executors: `native` (pure rust) and `xla_pjrt`

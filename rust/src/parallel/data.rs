@@ -37,23 +37,20 @@ impl<'e, E: Engine> DataParallel<'e, E> {
         for b in batches {
             outs.push(self.inner.forward_backward(params, b)?);
         }
-        // gradient all-reduce per parameter through the metered fabric
-        let names: Vec<String> = outs[0].grads.values.keys().cloned().collect();
-        let mut reduced = outs[0].grads.zeros_like();
-        for name in &names {
-            let mut slots: Vec<_> = outs
-                .iter()
-                .map(|o| o.grads.values[name].clone())
-                .collect();
-            self.fabric.all_reduce_sum(&mut slots)?;
-            let mut g = slots.pop().unwrap();
-            ops::scale_assign(&mut g, 1.0 / n as f32)?;
-            *reduced.get_mut(name)? = g;
-        }
         let loss = outs.iter().map(|o| o.loss).sum::<f32>() / n as f32;
         let mlm = outs.iter().map(|o| o.mlm).sum::<f32>() / n as f32;
         let sop = outs.iter().map(|o| o.sop).sum::<f32>() / n as f32;
-        let hidden = outs.remove(0).hidden;
+        // gradient all-reduce per parameter through the metered fabric —
+        // the same shared reduce the mesh runner's dp axis uses
+        // (`parallel::allreduce_named`), then average over replicas.
+        let names: Vec<String> = outs[0].grads.values.keys().cloned().collect();
+        let hidden = outs[0].hidden.split_off(0);
+        let mut stores: Vec<ParamStore> = outs.into_iter().map(|o| o.grads).collect();
+        super::allreduce_named(&self.fabric, &mut stores, &names)?;
+        let mut reduced = stores.swap_remove(0);
+        for t in reduced.values.values_mut() {
+            ops::scale_assign(t, 1.0 / n as f32)?;
+        }
         Ok(StepOutput { loss, mlm, sop, grads: reduced, hidden })
     }
 }

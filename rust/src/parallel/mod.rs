@@ -60,6 +60,37 @@ pub trait Engine {
     fn forward_backward(&self, params: &ParamStore, batch: &Batch) -> Result<StepOutput>;
 }
 
+/// Shared helper: all-reduce (sum) the named tensors of per-rank gradient
+/// stores through a metered [`crate::comm::Collective`] view, in the given
+/// name order.  One call covers the whole group under the sequential
+/// `Fabric` view (`stores` holds every rank) or exactly this rank under a
+/// threaded per-rank view (`stores` holds one entry, the peers call the
+/// same collective).  Used by the sequence-parallel ring reduce, the
+/// data-parallel replica reduce, and the mesh runner's dp axis — one
+/// implementation, one accounting (2(n-1)·C group total per tensor).
+pub(crate) fn allreduce_named(
+    view: &dyn crate::comm::Collective,
+    stores: &mut [ParamStore],
+    names: &[String],
+) -> Result<()> {
+    for name in names {
+        let mut slots: Vec<Tensor> = stores
+            .iter_mut()
+            .map(|g| {
+                g.values
+                    .get_mut(name)
+                    .map(|t| std::mem::replace(t, Tensor::zeros(&[])))
+                    .ok_or_else(|| anyhow::anyhow!("all-reduce of unknown gradient {name:?}"))
+            })
+            .collect::<Result<_>>()?;
+        view.all_reduce_sum(&mut slots)?;
+        for (g, t) in stores.iter_mut().zip(slots) {
+            *g.values.get_mut(name).unwrap() = t;
+        }
+    }
+    Ok(())
+}
+
 /// Shared helper: execute a step artifact, resolving the name from the
 /// actual input tensors (mirror of aot.py naming).  Works against any
 /// [`crate::runtime::Executor`] — the name lookup is what catches a

@@ -127,44 +127,126 @@ pub(crate) struct RankOutput {
 /// Per-layer forward activations stashed for the backward pass (one entry
 /// per executed rank).  This is exactly the paper's activation memory:
 /// note there is NO stash of remote K/V chunks — they are re-circulated in
-/// backward, which is what makes the scheme memory-efficient.
-struct LayerStash {
-    x_in: Vec<Tensor>,
-    q: Vec<Tensor>,
-    k: Vec<Tensor>,
-    v: Vec<Tensor>,
-    attn: AttnStash,   // pattern-specific stash (probs, projected K̃/Ṽ)
-    ctx: Vec<Tensor>,  // attention context [B, Z, Lc, A]
-    pre1: Vec<Tensor>, // x + attn (LN1 input)
-    xm: Vec<Tensor>,   // LN1 output
-    pre2: Vec<Tensor>, // xm + mlp (LN2 input)
+/// backward, which is what makes the scheme memory-efficient.  Under
+/// pipeline parallelism (`exec::mesh`) each stage holds one of these per
+/// layer per in-flight microbatch — the GPipe activation profile.
+pub(crate) struct LayerStash {
+    pub(crate) x_in: Vec<Tensor>,
+    pub(crate) q: Vec<Tensor>,
+    pub(crate) k: Vec<Tensor>,
+    pub(crate) v: Vec<Tensor>,
+    pub(crate) attn: AttnStash, // pattern-specific stash (probs, projected K̃/Ṽ)
+    pub(crate) ctx: Vec<Tensor>, // attention context [B, Z, Lc, A]
+    pub(crate) pre1: Vec<Tensor>, // x + attn (LN1 input)
+    pub(crate) xm: Vec<Tensor>,  // LN1 output
+    pub(crate) pre2: Vec<Tensor>, // xm + mlp (LN2 input)
     // NOTE: the MLP hidden activation is NOT stashed — mlp_bwd
     // rematerializes it (§Perf iteration 2), matching Megatron's recompute.
 }
 
-/// One full forward+backward step of the sequence-parallel transformer,
-/// executed for the ranks of `view`.  This is the function every rank
-/// runs — sequentially simulated under the [`Fabric`] slot view, or on
-/// its own OS thread under a `RingComm` per-rank view — and it finishes
-/// with the cross-ring gradient all-reduce, so the returned grads are the
-/// global sums on every rank.
+/// Embedding forward for the executed `ranks`: token + per-chunk position
+/// embeddings over each rank's sequence chunk.  This is pipeline stage 0
+/// (or the whole model when there is no pipeline).
+pub(crate) fn sp_embed_fwd(
+    ex: &dyn Executor,
+    sh: &StepShape,
+    params: &ParamStore,
+    batch: &Batch,
+    ranks: &[usize],
+) -> Result<Vec<Tensor>> {
+    let ids_c = ops::chunk_dim1(&batch.ids, sh.n)?;
+    let tok = params.get("tok_emb")?;
+    let pos = params.get("pos_emb")?;
+    ranks
+        .iter()
+        .map(|&d| {
+            let pos_d = ops::slice_dim0(pos, d * sh.lc, (d + 1) * sh.lc)?;
+            call1_on(ex, "embed_fwd", &[&ids_c[d], tok, &pos_d])
+        })
+        .collect()
+}
+
+/// One transformer layer forward for the executed ranks.  Consumes the
+/// layer input (it moves into the returned stash) and yields the next
+/// activation.
 #[allow(clippy::needless_range_loop)] // loops index several rank-parallel vecs
-pub(crate) fn seqpar_step(
+pub(crate) fn sp_layer_fwd(
     ex: &dyn Executor,
     view: &dyn Collective,
     sh: &StepShape,
     params: &ParamStore,
+    layer: usize,
+    x: Vec<Tensor>,
+) -> Result<(Vec<Tensor>, LayerStash)> {
+    let ln = x.len();
+    let p_of = |name: &str| params.get(name);
+    let pf = |s: &str| format!("layer{layer}.{s}");
+    let (wq, bq) = (p_of(&pf("wq"))?, p_of(&pf("bq"))?);
+    let (wk, bk) = (p_of(&pf("wk"))?, p_of(&pf("bk"))?);
+    let (wv, bv) = (p_of(&pf("wv"))?, p_of(&pf("bv"))?);
+    let mut q = Vec::new();
+    let mut k = Vec::new();
+    let mut v = Vec::new();
+    for li in 0..ln {
+        // fused QKV projection + head split (1 call, was 6)
+        let out = call_on(ex, &sh.qkv_step, &[&x[li], wq, bq, wk, bk, wv, bv])?;
+        let [qd, kd, vd]: [Tensor; 3] =
+            out.try_into().map_err(|_| anyhow::anyhow!("qkv_proj arity"))?;
+        q.push(qd);
+        k.push(kd);
+        v.push(vd);
+    }
+    let (ctx, astash) = attn::forward_on(ex, view, sh, params, &q, &k, &v)?;
+    let (wo, bo) = (p_of(&pf("wo"))?, p_of(&pf("bo"))?);
+    let (g1, be1) = (p_of(&pf("ln1_g"))?, p_of(&pf("ln1_b"))?);
+    let mut pre1 = Vec::new();
+    let mut xm = Vec::new();
+    for li in 0..ln {
+        let flat = call1_on(ex, "from_heads", &[&ctx[li]])?;
+        let attn = call1_on(ex, "linear_fwd", &[&flat, wo, bo])?;
+        // fused residual-add + LayerNorm (also returns the pre-LN
+        // sum, the same stash the unfused path kept)
+        let out = call_on(ex, "add_ln_fwd", &[&x[li], &attn, g1, be1])?;
+        let [y, pre]: [Tensor; 2] =
+            out.try_into().map_err(|_| anyhow::anyhow!("add_ln arity"))?;
+        xm.push(y);
+        pre1.push(pre);
+    }
+    let (w1, b1) = (p_of(&pf("w1"))?, p_of(&pf("b1"))?);
+    let (w2, b2) = (p_of(&pf("w2"))?, p_of(&pf("b2"))?);
+    let (g2, be2) = (p_of(&pf("ln2_g"))?, p_of(&pf("ln2_b"))?);
+    let mut pre2 = Vec::new();
+    let mut x_next = Vec::new();
+    for li in 0..ln {
+        // fused MLP block (hidden activation rematerialized in bwd)
+        let m2 = call1_on(ex, "mlp_fwd", &[&xm[li], w1, b1, w2, b2])?;
+        let out = call_on(ex, "add_ln_fwd", &[&xm[li], &m2, g2, be2])?;
+        let [y, pre]: [Tensor; 2] =
+            out.try_into().map_err(|_| anyhow::anyhow!("add_ln arity"))?;
+        x_next.push(y);
+        pre2.push(pre);
+    }
+    Ok((x_next, LayerStash { x_in: x, q, k, v, attn: astash, ctx, pre1, xm, pre2 }))
+}
+
+/// MLM + SOP heads: loss forward and the head backward, producing the
+/// gradient w.r.t. the final hidden states.  Last pipeline stage only.
+/// Returns `(mlm, sop, dx)`: the executed ranks' MLM loss share, the SOP
+/// loss (non-zero only on the view that executes ring rank 0, which owns
+/// every sequence's CLS token), and dx per executed rank.
+#[allow(clippy::needless_range_loop)]
+pub(crate) fn sp_heads_fwd_bwd(
+    ex: &dyn Executor,
+    sh: &StepShape,
+    params: &ParamStore,
     batch: &Batch,
-) -> Result<RankOutput> {
+    x: &[Tensor],
+    ranks: &[usize],
+    grads: &mut [ParamStore],
+) -> Result<(f32, f32, Vec<Tensor>)> {
     let (n, b, lc) = (sh.n, sh.b, sh.lc);
-    let ranks = view.local_ranks();
     let ln = ranks.len();
     let p_of = |name: &str| params.get(name);
-
-    // ---- shard the batch along the sequence dimension ---------------
-    // (chunking is cheap; every rank slices the global batch the same way
-    // and keeps only its own chunks, indexed by GLOBAL rank)
-    let ids_c = ops::chunk_dim1(&batch.ids, n)?;
     let labels_c: Vec<Tensor> = ops::chunk_dim1(&batch.labels, n)?
         .into_iter()
         .map(|t| t.reshaped(&[b * lc]).unwrap())
@@ -173,79 +255,6 @@ pub(crate) fn seqpar_step(
         .into_iter()
         .map(|t| t.reshaped(&[b * lc]).unwrap())
         .collect();
-    let pos = p_of("pos_emb")?;
-    let pos_c: Vec<Tensor> = (0..n)
-        .map(|d| ops::slice_dim0(pos, d * lc, (d + 1) * lc))
-        .collect::<Result<_>>()?;
-
-    // ---- forward ----------------------------------------------------
-    let tok = p_of("tok_emb")?;
-    let mut x: Vec<Tensor> = ranks
-        .iter()
-        .map(|&d| call1_on(ex, "embed_fwd", &[&ids_c[d], tok, &pos_c[d]]))
-        .collect::<Result<_>>()?;
-
-    let mut stashes: Vec<LayerStash> = Vec::with_capacity(sh.layers);
-    for layer in 0..sh.layers {
-        let pf = |s: &str| format!("layer{layer}.{s}");
-        let (wq, bq) = (p_of(&pf("wq"))?, p_of(&pf("bq"))?);
-        let (wk, bk) = (p_of(&pf("wk"))?, p_of(&pf("bk"))?);
-        let (wv, bv) = (p_of(&pf("wv"))?, p_of(&pf("bv"))?);
-        let mut q = Vec::new();
-        let mut k = Vec::new();
-        let mut v = Vec::new();
-        for li in 0..ln {
-            // fused QKV projection + head split (1 call, was 6)
-            let out = call_on(ex, &sh.qkv_step, &[&x[li], wq, bq, wk, bk, wv, bv])?;
-            let [qd, kd, vd]: [Tensor; 3] =
-                out.try_into().map_err(|_| anyhow::anyhow!("qkv_proj arity"))?;
-            q.push(qd);
-            k.push(kd);
-            v.push(vd);
-        }
-        let (ctx, astash) = attn::forward_on(ex, view, sh, params, &q, &k, &v)?;
-        let (wo, bo) = (p_of(&pf("wo"))?, p_of(&pf("bo"))?);
-        let (g1, be1) = (p_of(&pf("ln1_g"))?, p_of(&pf("ln1_b"))?);
-        let mut pre1 = Vec::new();
-        let mut xm = Vec::new();
-        for li in 0..ln {
-            let flat = call1_on(ex, "from_heads", &[&ctx[li]])?;
-            let attn = call1_on(ex, "linear_fwd", &[&flat, wo, bo])?;
-            // fused residual-add + LayerNorm (also returns the pre-LN
-            // sum, the same stash the unfused path kept)
-            let out = call_on(ex, "add_ln_fwd", &[&x[li], &attn, g1, be1])?;
-            let [y, pre]: [Tensor; 2] =
-                out.try_into().map_err(|_| anyhow::anyhow!("add_ln arity"))?;
-            xm.push(y);
-            pre1.push(pre);
-        }
-        let (w1, b1) = (p_of(&pf("w1"))?, p_of(&pf("b1"))?);
-        let (w2, b2) = (p_of(&pf("w2"))?, p_of(&pf("b2"))?);
-        let (g2, be2) = (p_of(&pf("ln2_g"))?, p_of(&pf("ln2_b"))?);
-        let mut pre2 = Vec::new();
-        let mut x_next = Vec::new();
-        for li in 0..ln {
-            // fused MLP block (hidden activation rematerialized in bwd)
-            let m2 = call1_on(ex, "mlp_fwd", &[&xm[li], w1, b1, w2, b2])?;
-            let out = call_on(ex, "add_ln_fwd", &[&xm[li], &m2, g2, be2])?;
-            let [y, pre]: [Tensor; 2] =
-                out.try_into().map_err(|_| anyhow::anyhow!("add_ln arity"))?;
-            x_next.push(y);
-            pre2.push(pre);
-        }
-        stashes.push(LayerStash {
-            x_in: std::mem::replace(&mut x, x_next),
-            q, k, v, attn: astash, ctx, pre1, xm, pre2,
-        });
-    }
-
-    // ---- losses -------------------------------------------------------
-    // Every executed rank accumulates into its OWN grad store; the
-    // cross-ring all-reduce at the bottom combines them.  Under the
-    // sequential view this deliberately holds all n stores at once — the
-    // same per-rank gradient memory the real device group holds — where
-    // the old engine shortcut summed into one store and only metered.
-    let mut grads: Vec<ParamStore> = (0..ln).map(|_| params.zeros_like()).collect();
     let (mlm_w, mlm_b) = (p_of("mlm_w")?, p_of("mlm_b")?);
     let mut mlm_total = 0.0f32;
     let mut dx: Vec<Tensor> = Vec::with_capacity(ln);
@@ -273,117 +282,185 @@ pub(crate) fn seqpar_step(
         ops::add_assign(grads[li0].get_mut("sop_w")?, &dsw)?;
         ops::add_assign(grads[li0].get_mut("sop_b")?, &dsb)?;
     }
+    Ok((mlm_total, sop, dx))
+}
+
+/// One transformer layer backward for the executed ranks; `dx` is the
+/// gradient flowing into this layer's OUTPUT, the return value the
+/// gradient at its input.
+#[allow(clippy::needless_range_loop)]
+pub(crate) fn sp_layer_bwd(
+    ex: &dyn Executor,
+    view: &dyn Collective,
+    sh: &StepShape,
+    params: &ParamStore,
+    layer: usize,
+    st: &LayerStash,
+    dx: &[Tensor],
+    grads: &mut [ParamStore],
+) -> Result<Vec<Tensor>> {
+    let ln = dx.len();
+    let p_of = |name: &str| params.get(name);
+    let pf = |s: &str| format!("layer{layer}.{s}");
+    // LN2
+    let (g2, be2) = (p_of(&pf("ln2_g"))?, p_of(&pf("ln2_b"))?);
+    let mut d_pre2 = Vec::with_capacity(ln);
+    for li in 0..ln {
+        let out = call_on(ex, "ln_bwd", &[&st.pre2[li], g2, be2, &dx[li]])?;
+        let [dp, dg, db]: [Tensor; 3] =
+            out.try_into().map_err(|_| anyhow::anyhow!("ln_bwd arity"))?;
+        ops::add_assign(grads[li].get_mut(&pf("ln2_g"))?, &dg)?;
+        ops::add_assign(grads[li].get_mut(&pf("ln2_b"))?, &db)?;
+        d_pre2.push(dp);
+    }
+    // MLP (fused bwd: rematerializes the hidden activation inside)
+    let (w1, b1) = (p_of(&pf("w1"))?, p_of(&pf("b1"))?);
+    let (w2, b2) = (p_of(&pf("w2"))?, p_of(&pf("b2"))?);
+    let mut dxm = Vec::with_capacity(ln);
+    for li in 0..ln {
+        let out = call_on(ex, "mlp_bwd", &[&st.xm[li], w1, b1, w2, b2, &d_pre2[li]])?;
+        let [dxmlp, dw1, db1, dw2, db2]: [Tensor; 5] =
+            out.try_into().map_err(|_| anyhow::anyhow!("mlp_bwd arity"))?;
+        ops::add_assign(grads[li].get_mut(&pf("w1"))?, &dw1)?;
+        ops::add_assign(grads[li].get_mut(&pf("b1"))?, &db1)?;
+        ops::add_assign(grads[li].get_mut(&pf("w2"))?, &dw2)?;
+        ops::add_assign(grads[li].get_mut(&pf("b2"))?, &db2)?;
+        dxm.push(call1_on(ex, "add", &[&d_pre2[li], &dxmlp])?); // residual join
+    }
+    // LN1
+    let (g1, be1) = (p_of(&pf("ln1_g"))?, p_of(&pf("ln1_b"))?);
+    let mut d_pre1 = Vec::with_capacity(ln);
+    for li in 0..ln {
+        let out = call_on(ex, "ln_bwd", &[&st.pre1[li], g1, be1, &dxm[li]])?;
+        let [dp, dg, db]: [Tensor; 3] =
+            out.try_into().map_err(|_| anyhow::anyhow!("ln_bwd arity"))?;
+        ops::add_assign(grads[li].get_mut(&pf("ln1_g"))?, &dg)?;
+        ops::add_assign(grads[li].get_mut(&pf("ln1_b"))?, &db)?;
+        d_pre1.push(dp);
+    }
+    // attention out-projection
+    let (wo, bo) = (p_of(&pf("wo"))?, p_of(&pf("bo"))?);
+    let mut d_ctx = Vec::with_capacity(ln);
+    for li in 0..ln {
+        let flat = call1_on(ex, "from_heads", &[&st.ctx[li]])?;
+        let out = call_on(ex, "linear_bwd", &[&flat, wo, bo, &d_pre1[li]])?;
+        let [dflat, dwo, dbo]: [Tensor; 3] =
+            out.try_into().map_err(|_| anyhow::anyhow!("linear_bwd arity"))?;
+        ops::add_assign(grads[li].get_mut(&pf("wo"))?, &dwo)?;
+        ops::add_assign(grads[li].get_mut(&pf("bo"))?, &dbo)?;
+        d_ctx.push(call1_on(ex, &sh.to_heads_step, &[&dflat])?);
+    }
+    // attention backward (ring / projected / masked, per pattern)
+    let (dq, dk, dv) = attn::backward_on(
+        ex, view, sh, params, &st.attn, &d_ctx, &st.q, &st.k, &st.v, grads,
+    )?;
+    // fused qkv backward (1 call, was 6) + residual join
+    let (wq, wk, wv) = (p_of(&pf("wq"))?, p_of(&pf("wk"))?, p_of(&pf("wv"))?);
+    let mut new_dx = Vec::with_capacity(ln);
+    for li in 0..ln {
+        let out = call_on(
+            ex,
+            "qkv_proj_bwd",
+            &[&st.x_in[li], wq, wk, wv, &dq[li], &dk[li], &dv[li]],
+        )?;
+        let [dxp, dwq, dbq, dwk, dbk, dwv, dbv]: [Tensor; 7] = out
+            .try_into()
+            .map_err(|_| anyhow::anyhow!("qkv_proj_bwd arity"))?;
+        for (gname, g) in [
+            ("wq", dwq), ("bq", dbq), ("wk", dwk),
+            ("bk", dbk), ("wv", dwv), ("bv", dbv),
+        ] {
+            ops::add_assign(grads[li].get_mut(&pf(gname))?, &g)?;
+        }
+        let mut dx_d = d_pre1[li].clone();
+        ops::add_assign(&mut dx_d, &dxp)?;
+        new_dx.push(dx_d);
+    }
+    Ok(new_dx)
+}
+
+/// Embedding backward for the executed ranks (pipeline stage 0).
+#[allow(clippy::needless_range_loop)]
+pub(crate) fn sp_embed_bwd(
+    ex: &dyn Executor,
+    sh: &StepShape,
+    params: &ParamStore,
+    batch: &Batch,
+    dx: &[Tensor],
+    ranks: &[usize],
+    grads: &mut [ParamStore],
+) -> Result<()> {
+    let ids_c = ops::chunk_dim1(&batch.ids, sh.n)?;
+    let tok = params.get("tok_emb")?;
+    let pos = params.get("pos_emb")?;
+    for li in 0..ranks.len() {
+        let d = ranks[li];
+        let pos_d = ops::slice_dim0(pos, d * sh.lc, (d + 1) * sh.lc)?;
+        let out = call_on(ex, "embed_bwd", &[&ids_c[d], tok, &pos_d, &dx[li]])?;
+        let [dtok, dpos]: [Tensor; 2] =
+            out.try_into().map_err(|_| anyhow::anyhow!("embed_bwd arity"))?;
+        ops::add_assign(grads[li].get_mut("tok_emb")?, &dtok)?;
+        ops::add_into_dim0(grads[li].get_mut("pos_emb")?, &dpos, d * sh.lc)?;
+    }
+    Ok(())
+}
+
+/// One full forward+backward step of the sequence-parallel transformer,
+/// executed for the ranks of `view`.  This is the function every rank
+/// runs — sequentially simulated under the [`Fabric`] slot view, or on
+/// its own OS thread under a `RingComm` per-rank view — and it finishes
+/// with the cross-ring gradient all-reduce, so the returned grads are the
+/// global sums on every rank.
+///
+/// The body is the pipeline-free composition of the per-stage segments
+/// ([`sp_embed_fwd`] → [`sp_layer_fwd`]* → [`sp_heads_fwd_bwd`] →
+/// [`sp_layer_bwd`]* → [`sp_embed_bwd`]); `exec::mesh` runs the SAME
+/// segments split across GPipe pipeline stages.
+pub(crate) fn seqpar_step(
+    ex: &dyn Executor,
+    view: &dyn Collective,
+    sh: &StepShape,
+    params: &ParamStore,
+    batch: &Batch,
+) -> Result<RankOutput> {
+    let ranks = view.local_ranks();
+    let ln = ranks.len();
+
+    // ---- forward ----------------------------------------------------
+    let mut x = sp_embed_fwd(ex, sh, params, batch, &ranks)?;
+    let mut stashes: Vec<LayerStash> = Vec::with_capacity(sh.layers);
+    for layer in 0..sh.layers {
+        let (x_next, st) = sp_layer_fwd(ex, view, sh, params, layer, x)?;
+        x = x_next;
+        stashes.push(st);
+    }
+
+    // ---- losses -------------------------------------------------------
+    // Every executed rank accumulates into its OWN grad store; the
+    // cross-ring all-reduce at the bottom combines them.  Under the
+    // sequential view this deliberately holds all n stores at once — the
+    // same per-rank gradient memory the real device group holds — where
+    // the old engine shortcut summed into one store and only metered.
+    let mut grads: Vec<ParamStore> = (0..ln).map(|_| params.zeros_like()).collect();
+    let (mlm_total, sop, mut dx) =
+        sp_heads_fwd_bwd(ex, sh, params, batch, &x, &ranks, &mut grads)?;
 
     let hidden = x;
 
     // ---- backward ------------------------------------------------------
     for layer in (0..sh.layers).rev() {
-        let pf = |s: &str| format!("layer{layer}.{s}");
-        let st = &stashes[layer];
-        // LN2
-        let (g2, be2) = (p_of(&pf("ln2_g"))?, p_of(&pf("ln2_b"))?);
-        let mut d_pre2 = Vec::with_capacity(ln);
-        for li in 0..ln {
-            let out = call_on(ex, "ln_bwd", &[&st.pre2[li], g2, be2, &dx[li]])?;
-            let [dp, dg, db]: [Tensor; 3] =
-                out.try_into().map_err(|_| anyhow::anyhow!("ln_bwd arity"))?;
-            ops::add_assign(grads[li].get_mut(&pf("ln2_g"))?, &dg)?;
-            ops::add_assign(grads[li].get_mut(&pf("ln2_b"))?, &db)?;
-            d_pre2.push(dp);
-        }
-        // MLP (fused bwd: rematerializes the hidden activation inside)
-        let (w1, b1) = (p_of(&pf("w1"))?, p_of(&pf("b1"))?);
-        let (w2, b2) = (p_of(&pf("w2"))?, p_of(&pf("b2"))?);
-        let mut dxm = Vec::with_capacity(ln);
-        for li in 0..ln {
-            let out = call_on(ex, "mlp_bwd", &[&st.xm[li], w1, b1, w2, b2, &d_pre2[li]])?;
-            let [dxmlp, dw1, db1, dw2, db2]: [Tensor; 5] =
-                out.try_into().map_err(|_| anyhow::anyhow!("mlp_bwd arity"))?;
-            ops::add_assign(grads[li].get_mut(&pf("w1"))?, &dw1)?;
-            ops::add_assign(grads[li].get_mut(&pf("b1"))?, &db1)?;
-            ops::add_assign(grads[li].get_mut(&pf("w2"))?, &dw2)?;
-            ops::add_assign(grads[li].get_mut(&pf("b2"))?, &db2)?;
-            dxm.push(call1_on(ex, "add", &[&d_pre2[li], &dxmlp])?); // residual join
-        }
-        // LN1
-        let (g1, be1) = (p_of(&pf("ln1_g"))?, p_of(&pf("ln1_b"))?);
-        let mut d_pre1 = Vec::with_capacity(ln);
-        for li in 0..ln {
-            let out = call_on(ex, "ln_bwd", &[&st.pre1[li], g1, be1, &dxm[li]])?;
-            let [dp, dg, db]: [Tensor; 3] =
-                out.try_into().map_err(|_| anyhow::anyhow!("ln_bwd arity"))?;
-            ops::add_assign(grads[li].get_mut(&pf("ln1_g"))?, &dg)?;
-            ops::add_assign(grads[li].get_mut(&pf("ln1_b"))?, &db)?;
-            d_pre1.push(dp);
-        }
-        // attention out-projection
-        let (wo, bo) = (p_of(&pf("wo"))?, p_of(&pf("bo"))?);
-        let mut d_ctx = Vec::with_capacity(ln);
-        for li in 0..ln {
-            let flat = call1_on(ex, "from_heads", &[&st.ctx[li]])?;
-            let out = call_on(ex, "linear_bwd", &[&flat, wo, bo, &d_pre1[li]])?;
-            let [dflat, dwo, dbo]: [Tensor; 3] =
-                out.try_into().map_err(|_| anyhow::anyhow!("linear_bwd arity"))?;
-            ops::add_assign(grads[li].get_mut(&pf("wo"))?, &dwo)?;
-            ops::add_assign(grads[li].get_mut(&pf("bo"))?, &dbo)?;
-            d_ctx.push(call1_on(ex, &sh.to_heads_step, &[&dflat])?);
-        }
-        // attention backward (ring / projected / masked, per pattern)
-        let (dq, dk, dv) = attn::backward_on(
-            ex, view, sh, params, &st.attn, &d_ctx, &st.q, &st.k, &st.v, &mut grads,
-        )?;
-        // fused qkv backward (1 call, was 6) + residual join
-        let (wq, wk, wv) = (p_of(&pf("wq"))?, p_of(&pf("wk"))?, p_of(&pf("wv"))?);
-        let mut new_dx = Vec::with_capacity(ln);
-        for li in 0..ln {
-            let out = call_on(
-                ex,
-                "qkv_proj_bwd",
-                &[&st.x_in[li], wq, wk, wv, &dq[li], &dk[li], &dv[li]],
-            )?;
-            let [dxp, dwq, dbq, dwk, dbk, dwv, dbv]: [Tensor; 7] = out
-                .try_into()
-                .map_err(|_| anyhow::anyhow!("qkv_proj_bwd arity"))?;
-            for (gname, g) in [
-                ("wq", dwq), ("bq", dbq), ("wk", dwk),
-                ("bk", dbk), ("wv", dwv), ("bv", dbv),
-            ] {
-                ops::add_assign(grads[li].get_mut(&pf(gname))?, &g)?;
-            }
-            let mut dx_d = d_pre1[li].clone();
-            ops::add_assign(&mut dx_d, &dxp)?;
-            new_dx.push(dx_d);
-        }
-        dx = new_dx;
+        dx = sp_layer_bwd(ex, view, sh, params, layer, &stashes[layer], &dx, &mut grads)?;
     }
-
-    // embeddings
-    for li in 0..ln {
-        let d = ranks[li];
-        let out = call_on(ex, "embed_bwd", &[&ids_c[d], tok, &pos_c[d], &dx[li]])?;
-        let [dtok, dpos]: [Tensor; 2] =
-            out.try_into().map_err(|_| anyhow::anyhow!("embed_bwd arity"))?;
-        ops::add_assign(grads[li].get_mut("tok_emb")?, &dtok)?;
-        ops::add_into_dim0(grads[li].get_mut("pos_emb")?, &dpos, d * lc)?;
-    }
+    sp_embed_bwd(ex, sh, params, batch, &dx, &ranks, &mut grads)?;
 
     // Parameter-gradient all-reduce across the ring group: each rank
     // computed grads from its own tokens; after the reduce every rank
     // holds the global sum, ready for the optimizer.  Metered on the
     // canonical ring formula — 2(n-1)·C total per tensor, the same group
     // accounting Fabric and RingComm share (rust/tests/comm_volume.rs).
-    if n > 1 {
+    if sh.n > 1 {
         let names: Vec<String> = grads[0].values.keys().cloned().collect();
-        for name in &names {
-            let mut slots: Vec<Tensor> = grads
-                .iter_mut()
-                .map(|g| std::mem::replace(g.values.get_mut(name).unwrap(), Tensor::zeros(&[])))
-                .collect();
-            view.all_reduce_sum(&mut slots)?;
-            for (g, t) in grads.iter_mut().zip(slots) {
-                *g.values.get_mut(name).unwrap() = t;
-            }
-        }
+        super::allreduce_named(view, &mut grads, &names)?;
     }
 
     Ok(RankOutput {

@@ -12,52 +12,52 @@
 //! convergence comparison (Fig. 6) see identical parameter state across
 //! engines.
 //!
-//! Replicated computations (embeddings, LayerNorms, heads — identical on
-//! every rank since their inputs are replicated) are executed once in this
-//! sequential simulation; the cluster simulator charges their memory and
-//! time per-device, as Megatron does.
+//! Like the sequence engine, the per-rank step logic is written once
+//! against the [`Collective`] rank-set view as per-stage segments
+//! ([`tp_embed_fwd`] → [`tp_layer_fwd`]* → [`tp_heads_fwd_bwd`] →
+//! [`tp_layer_bwd`]* → [`tp_embed_bwd`]) and executed two ways: the
+//! sequential [`Fabric`] slot view ([`TensorParEngine`], all ranks on the
+//! calling thread) and the threaded per-rank view (`exec::mesh`, one OS
+//! thread per mesh coordinate, where the segments are additionally split
+//! across GPipe pipeline stages).
+//!
+//! Replicated computations (embeddings, LayerNorms, heads) produce
+//! identical values on every rank, so only the rank-0 copy of their
+//! parameter gradients is accumulated — the per-rank gradient stores sum
+//! exactly (shards are disjoint, replicated entries appear once) to the
+//! global gradient, with no extra collective, matching Megatron.
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::comm::Fabric;
+use crate::comm::{Collective, Fabric};
 use crate::model::params::ParamStore;
-use crate::runtime::Runtime;
+use crate::parallel::{call1_on, call_on};
+use crate::runtime::{Executor, Manifest, Runtime};
 use crate::tensor::{ops, Tensor};
 
-use super::{call, call1, Batch, Engine, StepOutput};
+use super::{Batch, Engine, StepOutput};
 
-struct LayerStash {
-    x_in: Tensor,
-    q: Vec<Tensor>,
-    k: Vec<Tensor>,
-    v: Vec<Tensor>,
-    p: Vec<Tensor>,
-    ctx: Vec<Tensor>,
-    pre1: Tensor,
-    xm: Tensor,
-    h: Vec<Tensor>,
-    pre2: Tensor,
-}
-
-pub struct TensorParEngine<'rt> {
-    rt: &'rt Runtime,
-    pub fabric: Fabric,
+/// Run-shape constants for the tensor-parallel step, derived once from
+/// the manifest and shared by every rank (sequential or threaded).
+#[derive(Clone, Debug)]
+pub(crate) struct TpShape {
     pub t: usize, // TP degree
-    b: usize,
-    l: usize,
-    layers: usize,
-    hidden: usize,
-    heads: usize,
-    head_dim: usize,
-    ffn: usize,
-    to_heads_step: String,
+    pub b: usize,
+    pub l: usize,
+    pub layers: usize,
+    pub hidden: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    pub heads: usize,
+    pub to_heads_step: String,
 }
 
-impl<'rt> TensorParEngine<'rt> {
+impl TpShape {
     /// `t == 1` is the serial engine (no splitting, no communication).
-    pub fn new(rt: &'rt Runtime, fabric: Fabric) -> Result<TensorParEngine<'rt>> {
-        let m = rt.manifest();
-        let t = fabric.n;
+    pub(crate) fn from_manifest(m: &Manifest, t: usize) -> Result<TpShape> {
+        if t == 0 {
+            bail!("tensor parallelism needs t >= 1");
+        }
         if m.heads % t != 0 {
             // This is exactly Megatron's scaling cap the paper exploits
             // (tensor parallel size <= number of attention heads).
@@ -76,17 +76,15 @@ impl<'rt> TensorParEngine<'rt> {
                 m.tp
             );
         }
-        Ok(TensorParEngine {
-            rt,
-            fabric,
+        Ok(TpShape {
             t,
             b: m.batch,
             l: m.seq_len,
             layers: m.layers,
             hidden: m.hidden,
-            heads: m.heads,
             head_dim: m.head_dim,
             ffn: m.ffn,
+            heads: m.heads,
             to_heads_step: format!("to_heads_b{}", m.batch),
         })
     }
@@ -110,6 +108,293 @@ impl<'rt> TensorParEngine<'rt> {
     }
 }
 
+/// Per-layer forward activations for the backward pass.  Replicated
+/// activations (identical on every rank) are stashed ONCE per view; the
+/// per-rank vectors hold only the genuinely sharded tensors, one entry
+/// per executed rank.
+pub(crate) struct TpLayerStash {
+    x_in: Tensor, // replicated layer input
+    q: Vec<Tensor>, // per-rank head shards
+    k: Vec<Tensor>,
+    v: Vec<Tensor>,
+    p: Vec<Tensor>,
+    ctx: Vec<Tensor>,
+    pre1: Tensor,
+    xm: Tensor,
+    h: Vec<Tensor>, // per-rank FFN shard activations
+    pre2: Tensor,
+}
+
+/// Embedding forward: replicated — every rank holds the same
+/// full-sequence activation (pipeline stage 0), so it is represented
+/// (and computed) ONCE per view: under the sequential slot view the
+/// ranks' copies would be bit-identical anyway, and a threaded per-rank
+/// view executes exactly one rank.
+pub(crate) fn tp_embed_fwd(
+    ex: &dyn Executor,
+    tsh: &TpShape,
+    params: &ParamStore,
+    batch: &Batch,
+) -> Result<Tensor> {
+    let pos = ops::slice_dim0(params.get("pos_emb")?, 0, tsh.l)?;
+    let tok = params.get("tok_emb")?;
+    call1_on(ex, "embed_fwd", &[&batch.ids, tok, &pos])
+}
+
+/// One transformer layer forward for the executed ranks: each rank runs
+/// its head/FFN shard, partial outputs are combined by the two ring
+/// all-reduces of Megatron's g operator.
+#[allow(clippy::needless_range_loop)] // loops index several rank-parallel vecs
+pub(crate) fn tp_layer_fwd(
+    ex: &dyn Executor,
+    view: &dyn Collective,
+    tsh: &TpShape,
+    params: &ParamStore,
+    layer: usize,
+    x: Tensor,
+) -> Result<(Tensor, TpLayerStash)> {
+    let ranks = view.local_ranks();
+    let ln = ranks.len();
+    let p_of = |name: &str| params.get(name);
+    let pf = |s: &str| format!("layer{layer}.{s}");
+    let zero_h = Tensor::zeros(&[tsh.hidden]);
+
+    let mut q = Vec::new();
+    let mut k = Vec::new();
+    let mut v = Vec::new();
+    let mut p = Vec::new();
+    let mut ctx = Vec::new();
+    let mut partial = Vec::new();
+    for li in 0..ln {
+        let d = ranks[li];
+        let (lo, hi) = tsh.head_cols(d);
+        let wq = ops::slice_last(p_of(&pf("wq"))?, lo, hi)?;
+        let bq = ops::slice_dim0(p_of(&pf("bq"))?, lo, hi)?;
+        let wk = ops::slice_last(p_of(&pf("wk"))?, lo, hi)?;
+        let bk = ops::slice_dim0(p_of(&pf("bk"))?, lo, hi)?;
+        let wv = ops::slice_last(p_of(&pf("wv"))?, lo, hi)?;
+        let bv = ops::slice_dim0(p_of(&pf("bv"))?, lo, hi)?;
+        let qd = call1_on(ex, &tsh.to_heads_step, &[&call1_on(ex, "linear_fwd", &[&x, &wq, &bq])?])?;
+        let kd = call1_on(ex, &tsh.to_heads_step, &[&call1_on(ex, "linear_fwd", &[&x, &wk, &bk])?])?;
+        let vd = call1_on(ex, &tsh.to_heads_step, &[&call1_on(ex, "linear_fwd", &[&x, &wv, &bv])?])?;
+        let s = call1_on(ex, "scores_step", &[&qd, &kd])?;
+        let pd = call1_on(ex, "softmax_fwd", &[&s])?;
+        let acc0 = Tensor::zeros(&qd.shape);
+        let cd = call1_on(ex, "av_step", &[&pd, &vd, &acc0])?;
+        let wo = ops::slice_dim0(p_of(&pf("wo"))?, lo, hi)?;
+        let flat = call1_on(ex, "from_heads", &[&cd])?;
+        partial.push(call1_on(ex, "linear_fwd", &[&flat, &wo, &zero_h])?);
+        q.push(qd);
+        k.push(kd);
+        v.push(vd);
+        p.push(pd);
+        ctx.push(cd);
+    }
+    // all-reduce the row-split output projection partials (g op)
+    view.all_reduce_sum(&mut partial)?;
+    // replicated epilogue, computed once per view (see tp_embed_fwd)
+    let attn = call1_on(ex, "bias_add", &[&partial[0], p_of(&pf("bo"))?])?;
+    let pre1 = call1_on(ex, "add", &[&x, &attn])?;
+    let xm = call1_on(ex, "ln_fwd", &[&pre1, p_of(&pf("ln1_g"))?, p_of(&pf("ln1_b"))?])?;
+    let mut hs = Vec::new();
+    let mut partial2 = Vec::new();
+    for li in 0..ln {
+        let d = ranks[li];
+        let (lo, hi) = tsh.ffn_cols(d);
+        let w1 = ops::slice_last(p_of(&pf("w1"))?, lo, hi)?;
+        let b1 = ops::slice_dim0(p_of(&pf("b1"))?, lo, hi)?;
+        let hd = call1_on(ex, "gelu_linear_fwd", &[&xm, &w1, &b1])?;
+        let w2 = ops::slice_dim0(p_of(&pf("w2"))?, lo, hi)?;
+        partial2.push(call1_on(ex, "linear_fwd", &[&hd, &w2, &zero_h])?);
+        hs.push(hd);
+    }
+    view.all_reduce_sum(&mut partial2)?;
+    let m2 = call1_on(ex, "bias_add", &[&partial2[0], p_of(&pf("b2"))?])?;
+    let pre2 = call1_on(ex, "add", &[&xm, &m2])?;
+    let x_next = call1_on(ex, "ln_fwd", &[&pre2, p_of(&pf("ln2_g"))?, p_of(&pf("ln2_b"))?])?;
+    Ok((x_next, TpLayerStash { x_in: x, q, k, v, p, ctx, pre1, xm, h: hs, pre2 }))
+}
+
+/// MLM + SOP heads (replicated, computed once per view — every rank
+/// holds the same final hidden states, so no broadcast is needed); the
+/// parameter gradients are accumulated on group rank 0 only.  Returns
+/// `(mlm, sop, dx)` with the losses counted once (zero on views that do
+/// not execute rank 0).
+pub(crate) fn tp_heads_fwd_bwd(
+    ex: &dyn Executor,
+    tsh: &TpShape,
+    params: &ParamStore,
+    batch: &Batch,
+    x: &Tensor,
+    ranks: &[usize],
+    grads: &mut [ParamStore],
+) -> Result<(f32, f32, Tensor)> {
+    let m = tsh.b * tsh.l;
+    let p_of = |name: &str| params.get(name);
+    let labels = batch.labels.clone().reshaped(&[m])?;
+    let mask = batch.mask.clone().reshaped(&[m])?;
+    // replicated full-vocab losses, computed once per view (the hottest
+    // kernel of the step — see tp_embed_fwd for why once is enough)
+    let out = call_on(ex, "mlm_loss", &[x, p_of("mlm_w")?, p_of("mlm_b")?, &labels, &mask])?;
+    let [mlm_lo, mut dxd, dw, db]: [Tensor; 4] =
+        out.try_into().map_err(|_| anyhow!("mlm_loss arity"))?;
+    let out = call_on(ex, "sop_loss", &[x, p_of("sop_w")?, p_of("sop_b")?, &batch.sop_labels])?;
+    let [sop_lo, dx0, dsw, dsb]: [Tensor; 4] =
+        out.try_into().map_err(|_| anyhow!("sop_loss arity"))?;
+    ops::add_assign(&mut dxd, &dx0)?;
+    let mut mlm = 0.0f32;
+    let mut sop = 0.0f32;
+    if let Some(li0) = ranks.iter().position(|&d| d == 0) {
+        mlm = mlm_lo.scalar_f32()?;
+        sop = sop_lo.scalar_f32()?;
+        ops::add_assign(grads[li0].get_mut("mlm_w")?, &dw)?;
+        ops::add_assign(grads[li0].get_mut("mlm_b")?, &db)?;
+        ops::add_assign(grads[li0].get_mut("sop_w")?, &dsw)?;
+        ops::add_assign(grads[li0].get_mut("sop_b")?, &dsb)?;
+    }
+    Ok((mlm, sop, dxd))
+}
+
+/// One transformer layer backward for the executed ranks; shard gradients
+/// land in each rank's store at their global offsets, replicated ones on
+/// group rank 0 only.
+#[allow(clippy::needless_range_loop)]
+pub(crate) fn tp_layer_bwd(
+    ex: &dyn Executor,
+    view: &dyn Collective,
+    tsh: &TpShape,
+    params: &ParamStore,
+    layer: usize,
+    st: &TpLayerStash,
+    dx: &Tensor,
+    grads: &mut [ParamStore],
+) -> Result<Tensor> {
+    let ranks = view.local_ranks();
+    let ln = ranks.len();
+    let li0 = ranks.iter().position(|&d| d == 0);
+    let p_of = |name: &str| params.get(name);
+    let pf = |s: &str| format!("layer{layer}.{s}");
+    let zero_h = Tensor::zeros(&[tsh.hidden]);
+
+    // LN2 backward (replicated, once per view — see tp_embed_fwd)
+    let out = call_on(ex, "ln_bwd", &[&st.pre2, p_of(&pf("ln2_g"))?, p_of(&pf("ln2_b"))?, dx])?;
+    let [d_pre2, dg2, db2]: [Tensor; 3] =
+        out.try_into().map_err(|_| anyhow!("ln_bwd arity"))?;
+    if let Some(li0) = li0 {
+        ops::add_assign(grads[li0].get_mut(&pf("ln2_g"))?, &dg2)?;
+        ops::add_assign(grads[li0].get_mut(&pf("ln2_b"))?, &db2)?;
+        ops::add_assign(grads[li0].get_mut(&pf("b2"))?, &ops::sum_rows(&d_pre2)?)?;
+    }
+    let mut dxm_partial = Vec::with_capacity(ln);
+    for li in 0..ln {
+        let d = ranks[li];
+        let (lo, hi) = tsh.ffn_cols(d);
+        let w2 = ops::slice_dim0(p_of(&pf("w2"))?, lo, hi)?;
+        let out = call_on(ex, "linear_bwd", &[&st.h[li], &w2, &zero_h, &d_pre2])?;
+        let [dh, dw2, _db2]: [Tensor; 3] =
+            out.try_into().map_err(|_| anyhow!("linear_bwd arity"))?;
+        ops::add_into_dim0(grads[li].get_mut(&pf("w2"))?, &dw2, lo)?;
+        let w1 = ops::slice_last(p_of(&pf("w1"))?, lo, hi)?;
+        let b1 = ops::slice_dim0(p_of(&pf("b1"))?, lo, hi)?;
+        let out = call_on(ex, "gelu_linear_bwd", &[&st.xm, &w1, &b1, &dh])?;
+        let [dxd, dw1, db1]: [Tensor; 3] =
+            out.try_into().map_err(|_| anyhow!("gelu_linear_bwd arity"))?;
+        ops::add_into_last(grads[li].get_mut(&pf("w1"))?, &dw1, lo)?;
+        ops::add_into_dim0(grads[li].get_mut(&pf("b1"))?, &db1, lo)?;
+        dxm_partial.push(dxd);
+    }
+    // all-reduce dx at the block input (f op backward) + residual
+    view.all_reduce_sum(&mut dxm_partial)?;
+    let dxm = call1_on(ex, "add", &[&dxm_partial[0], &d_pre2])?;
+
+    // LN1 backward (replicated)
+    let out = call_on(ex, "ln_bwd", &[&st.pre1, p_of(&pf("ln1_g"))?, p_of(&pf("ln1_b"))?, &dxm])?;
+    let [d_pre1, dg1, db1]: [Tensor; 3] =
+        out.try_into().map_err(|_| anyhow!("ln_bwd arity"))?;
+    if let Some(li0) = li0 {
+        ops::add_assign(grads[li0].get_mut(&pf("ln1_g"))?, &dg1)?;
+        ops::add_assign(grads[li0].get_mut(&pf("ln1_b"))?, &db1)?;
+        ops::add_assign(grads[li0].get_mut(&pf("bo"))?, &ops::sum_rows(&d_pre1)?)?;
+    }
+
+    let mut dx_partial = Vec::with_capacity(ln);
+    for li in 0..ln {
+        let d = ranks[li];
+        let (lo, hi) = tsh.head_cols(d);
+        let wo = ops::slice_dim0(p_of(&pf("wo"))?, lo, hi)?;
+        let flat = call1_on(ex, "from_heads", &[&st.ctx[li]])?;
+        let out = call_on(ex, "linear_bwd", &[&flat, &wo, &zero_h, &d_pre1])?;
+        let [dflat, dwo, _dbo]: [Tensor; 3] =
+            out.try_into().map_err(|_| anyhow!("linear_bwd arity"))?;
+        ops::add_into_dim0(grads[li].get_mut(&pf("wo"))?, &dwo, lo)?;
+        let d_ctx = call1_on(ex, &tsh.to_heads_step, &[&dflat])?;
+        let dp = call1_on(ex, "attn_dp_step", &[&d_ctx, &st.v[li]])?;
+        let ds = call1_on(ex, "softmax_bwd", &[&st.p[li], &dp])?;
+        let z0 = Tensor::zeros(&st.q[li].shape);
+        let dq = call1_on(ex, "attn_dq_step", &[&ds, &st.k[li], &z0])?;
+        let dk = call1_on(ex, "attn_dk_step", &[&ds, &st.q[li], &z0])?;
+        let dv = call1_on(ex, "attn_dv_step", &[&st.p[li], &d_ctx, &z0])?;
+        let mut dx_d: Option<Tensor> = None;
+        for (wname, bname, dt) in [("wq", "bq", &dq), ("wk", "bk", &dk), ("wv", "bv", &dv)] {
+            let w = ops::slice_last(p_of(&pf(wname))?, lo, hi)?;
+            let bb = ops::slice_dim0(p_of(&pf(bname))?, lo, hi)?;
+            let flat = call1_on(ex, "from_heads", &[dt])?;
+            let out = call_on(ex, "linear_bwd", &[&st.x_in, &w, &bb, &flat])?;
+            let [dxp, dw, dbp]: [Tensor; 3] =
+                out.try_into().map_err(|_| anyhow!("linear_bwd arity"))?;
+            ops::add_into_last(grads[li].get_mut(&pf(wname))?, &dw, lo)?;
+            ops::add_into_dim0(grads[li].get_mut(&pf(bname))?, &dbp, lo)?;
+            match &mut dx_d {
+                None => dx_d = Some(dxp),
+                Some(acc) => ops::add_assign(acc, &dxp)?,
+            }
+        }
+        dx_partial.push(dx_d.unwrap());
+    }
+    view.all_reduce_sum(&mut dx_partial)?;
+    call1_on(ex, "add", &[&dx_partial[0], &d_pre1])
+}
+
+/// Embedding backward (replicated — computed and accumulated only on the
+/// view that executes group rank 0).
+pub(crate) fn tp_embed_bwd(
+    ex: &dyn Executor,
+    tsh: &TpShape,
+    params: &ParamStore,
+    batch: &Batch,
+    dx: &Tensor,
+    ranks: &[usize],
+    grads: &mut [ParamStore],
+) -> Result<()> {
+    let Some(li0) = ranks.iter().position(|&d| d == 0) else {
+        return Ok(()); // replicated: identical on every rank, count once
+    };
+    let pos = ops::slice_dim0(params.get("pos_emb")?, 0, tsh.l)?;
+    let tok = params.get("tok_emb")?;
+    let out = call_on(ex, "embed_bwd", &[&batch.ids, tok, &pos, dx])?;
+    let [dtok, dpos]: [Tensor; 2] =
+        out.try_into().map_err(|_| anyhow!("embed_bwd arity"))?;
+    ops::add_assign(grads[li0].get_mut("tok_emb")?, &dtok)?;
+    ops::add_into_dim0(grads[li0].get_mut("pos_emb")?, &dpos, 0)?;
+    Ok(())
+}
+
+pub struct TensorParEngine<'rt> {
+    rt: &'rt Runtime,
+    pub fabric: Fabric,
+    pub t: usize, // TP degree
+    shape: TpShape,
+}
+
+impl<'rt> TensorParEngine<'rt> {
+    /// `t == 1` is the serial engine (no splitting, no communication).
+    pub fn new(rt: &'rt Runtime, fabric: Fabric) -> Result<TensorParEngine<'rt>> {
+        let t = fabric.n;
+        let shape = TpShape::from_manifest(rt.manifest(), t)?;
+        Ok(TensorParEngine { rt, fabric, t, shape })
+    }
+}
+
 impl<'rt> Engine for TensorParEngine<'rt> {
     fn name(&self) -> &'static str {
         if self.t == 1 { "serial" } else { "tensor-parallel" }
@@ -120,173 +405,39 @@ impl<'rt> Engine for TensorParEngine<'rt> {
     }
 
     fn forward_backward(&self, params: &ParamStore, batch: &Batch) -> Result<StepOutput> {
-        let rt = self.rt;
-        let (t, b, l, h) = (self.t, self.b, self.l, self.hidden);
-        let m = b * l;
-        let p_of = |name: &str| params.get(name);
-        let zero_h = Tensor::zeros(&[h]);
+        let ex = self.rt.backend();
+        let tsh = &self.shape;
+        let view: &dyn Collective = &self.fabric;
+        let ranks = view.local_ranks();
+        let ln = ranks.len();
 
-        let ids = &batch.ids;
-        let labels = batch.labels.clone().reshaped(&[m])?;
-        let mask = batch.mask.clone().reshaped(&[m])?;
-        let pos = ops::slice_dim0(p_of("pos_emb")?, 0, l)?;
-        let tok = p_of("tok_emb")?;
-
-        // ---- forward (x replicated across the TP group) -------------------
-        let mut x = call1(rt, "embed_fwd", &[ids, tok, &pos])?;
-        let mut stashes = Vec::with_capacity(self.layers);
-        for li in 0..self.layers {
-            let pf = |s: &str| format!("layer{li}.{s}");
-            let x_in = x.clone();
-            let mut q = Vec::new();
-            let mut k = Vec::new();
-            let mut v = Vec::new();
-            let mut ctx = Vec::new();
-            let mut p = Vec::new();
-            let mut partial = Vec::new();
-            for d in 0..t {
-                let (lo, hi) = self.head_cols(d);
-                let wq = ops::slice_last(p_of(&pf("wq"))?, lo, hi)?;
-                let bq = ops::slice_dim0(p_of(&pf("bq"))?, lo, hi)?;
-                let wk = ops::slice_last(p_of(&pf("wk"))?, lo, hi)?;
-                let bk = ops::slice_dim0(p_of(&pf("bk"))?, lo, hi)?;
-                let wv = ops::slice_last(p_of(&pf("wv"))?, lo, hi)?;
-                let bv = ops::slice_dim0(p_of(&pf("bv"))?, lo, hi)?;
-                let qd = call1(rt, &self.to_heads_step, &[&call1(rt, "linear_fwd", &[&x, &wq, &bq])?])?;
-                let kd = call1(rt, &self.to_heads_step, &[&call1(rt, "linear_fwd", &[&x, &wk, &bk])?])?;
-                let vd = call1(rt, &self.to_heads_step, &[&call1(rt, "linear_fwd", &[&x, &wv, &bv])?])?;
-                let s = call1(rt, "scores_step", &[&qd, &kd])?;
-                let pd = call1(rt, "softmax_fwd", &[&s])?;
-                let acc0 = Tensor::zeros(&qd.shape);
-                let cd = call1(rt, "av_step", &[&pd, &vd, &acc0])?;
-                let wo = ops::slice_dim0(p_of(&pf("wo"))?, lo, hi)?;
-                let flat = call1(rt, "from_heads", &[&cd])?;
-                partial.push(call1(rt, "linear_fwd", &[&flat, &wo, &zero_h])?);
-                q.push(qd); k.push(kd); v.push(vd); p.push(pd); ctx.push(cd);
-            }
-            // all-reduce the row-split output projection partials (g op)
-            self.fabric.all_reduce_sum(&mut partial)?;
-            let attn = call1(rt, "bias_add", &[&partial[0], p_of(&pf("bo"))?])?;
-            let pre1 = call1(rt, "add", &[&x, &attn])?;
-            let xm = call1(rt, "ln_fwd", &[&pre1, p_of(&pf("ln1_g"))?, p_of(&pf("ln1_b"))?])?;
-            let mut hs = Vec::new();
-            let mut partial2 = Vec::new();
-            for d in 0..t {
-                let (lo, hi) = self.ffn_cols(d);
-                let w1 = ops::slice_last(p_of(&pf("w1"))?, lo, hi)?;
-                let b1 = ops::slice_dim0(p_of(&pf("b1"))?, lo, hi)?;
-                let hd = call1(rt, "gelu_linear_fwd", &[&xm, &w1, &b1])?;
-                let w2 = ops::slice_dim0(p_of(&pf("w2"))?, lo, hi)?;
-                partial2.push(call1(rt, "linear_fwd", &[&hd, &w2, &zero_h])?);
-                hs.push(hd);
-            }
-            self.fabric.all_reduce_sum(&mut partial2)?;
-            let m2 = call1(rt, "bias_add", &[&partial2[0], p_of(&pf("b2"))?])?;
-            let pre2 = call1(rt, "add", &[&xm, &m2])?;
-            x = call1(rt, "ln_fwd", &[&pre2, p_of(&pf("ln2_g"))?, p_of(&pf("ln2_b"))?])?;
-            stashes.push(LayerStash { x_in, q, k, v, p, ctx, pre1, xm, h: hs, pre2 });
+        let mut x = tp_embed_fwd(ex, tsh, params, batch)?;
+        let mut stashes = Vec::with_capacity(tsh.layers);
+        for layer in 0..tsh.layers {
+            let (x_next, st) = tp_layer_fwd(ex, view, tsh, params, layer, x)?;
+            x = x_next;
+            stashes.push(st);
         }
 
-        // ---- heads (replicated) -------------------------------------------
-        let mut grads = params.zeros_like();
-        let out = call(rt, "mlm_loss", &[&x, p_of("mlm_w")?, p_of("mlm_b")?, &labels, &mask])?;
-        let [mlm_lo, mut dx, dw, db]: [Tensor; 4] =
-            out.try_into().map_err(|_| anyhow!("mlm_loss arity"))?;
-        let mlm = mlm_lo.scalar_f32()?;
-        ops::add_assign(grads.get_mut("mlm_w")?, &dw)?;
-        ops::add_assign(grads.get_mut("mlm_b")?, &db)?;
-        let out = call(rt, "sop_loss", &[&x, p_of("sop_w")?, p_of("sop_b")?, &batch.sop_labels])?;
-        let [sop_lo, dx0, dsw, dsb]: [Tensor; 4] =
-            out.try_into().map_err(|_| anyhow!("sop_loss arity"))?;
-        let sop = sop_lo.scalar_f32()?;
-        ops::add_assign(&mut dx, &dx0)?;
-        ops::add_assign(grads.get_mut("sop_w")?, &dsw)?;
-        ops::add_assign(grads.get_mut("sop_b")?, &dsb)?;
-
+        let mut grads: Vec<ParamStore> = (0..ln).map(|_| params.zeros_like()).collect();
+        let (mlm, sop, mut dx) =
+            tp_heads_fwd_bwd(ex, tsh, params, batch, &x, &ranks, &mut grads)?;
         let hidden = vec![x];
 
-        // ---- backward -------------------------------------------------------
-        for li in (0..self.layers).rev() {
-            let pf = |s: &str| format!("layer{li}.{s}");
-            let st = &stashes[li];
-            let out = call(rt, "ln_bwd", &[&st.pre2, p_of(&pf("ln2_g"))?, p_of(&pf("ln2_b"))?, &dx])?;
-            let [d_pre2, dg2, db2]: [Tensor; 3] =
-                out.try_into().map_err(|_| anyhow!("ln_bwd arity"))?;
-            ops::add_assign(grads.get_mut(&pf("ln2_g"))?, &dg2)?;
-            ops::add_assign(grads.get_mut(&pf("ln2_b"))?, &db2)?;
-            ops::add_assign(grads.get_mut(&pf("b2"))?, &ops::sum_rows(&d_pre2)?)?;
-            let mut dxm_partial = Vec::with_capacity(t);
-            for d in 0..t {
-                let (lo, hi) = self.ffn_cols(d);
-                let w2 = ops::slice_dim0(p_of(&pf("w2"))?, lo, hi)?;
-                let out = call(rt, "linear_bwd", &[&st.h[d], &w2, &zero_h, &d_pre2])?;
-                let [dh, dw2, _db2]: [Tensor; 3] =
-                    out.try_into().map_err(|_| anyhow!("linear_bwd arity"))?;
-                ops::add_into_dim0(grads.get_mut(&pf("w2"))?, &dw2, lo)?;
-                let w1 = ops::slice_last(p_of(&pf("w1"))?, lo, hi)?;
-                let b1 = ops::slice_dim0(p_of(&pf("b1"))?, lo, hi)?;
-                let out = call(rt, "gelu_linear_bwd", &[&st.xm, &w1, &b1, &dh])?;
-                let [dxd, dw1, db1]: [Tensor; 3] =
-                    out.try_into().map_err(|_| anyhow!("gelu_linear_bwd arity"))?;
-                ops::add_into_last(grads.get_mut(&pf("w1"))?, &dw1, lo)?;
-                ops::add_into_dim0(grads.get_mut(&pf("b1"))?, &db1, lo)?;
-                dxm_partial.push(dxd);
-            }
-            // all-reduce dx at the block input (f op backward) + residual
-            self.fabric.all_reduce_sum(&mut dxm_partial)?;
-            let dxm = call1(rt, "add", &[&dxm_partial[0], &d_pre2])?;
-
-            let out = call(rt, "ln_bwd", &[&st.pre1, p_of(&pf("ln1_g"))?, p_of(&pf("ln1_b"))?, &dxm])?;
-            let [d_pre1, dg1, db1]: [Tensor; 3] =
-                out.try_into().map_err(|_| anyhow!("ln_bwd arity"))?;
-            ops::add_assign(grads.get_mut(&pf("ln1_g"))?, &dg1)?;
-            ops::add_assign(grads.get_mut(&pf("ln1_b"))?, &db1)?;
-            ops::add_assign(grads.get_mut(&pf("bo"))?, &ops::sum_rows(&d_pre1)?)?;
-
-            let mut dx_partial = Vec::with_capacity(t);
-            for d in 0..t {
-                let (lo, hi) = self.head_cols(d);
-                let wo = ops::slice_dim0(p_of(&pf("wo"))?, lo, hi)?;
-                let flat = call1(rt, "from_heads", &[&st.ctx[d]])?;
-                let out = call(rt, "linear_bwd", &[&flat, &wo, &zero_h, &d_pre1])?;
-                let [dflat, dwo, _dbo]: [Tensor; 3] =
-                    out.try_into().map_err(|_| anyhow!("linear_bwd arity"))?;
-                ops::add_into_dim0(grads.get_mut(&pf("wo"))?, &dwo, lo)?;
-                let d_ctx = call1(rt, &self.to_heads_step, &[&dflat])?;
-                let dp = call1(rt, "attn_dp_step", &[&d_ctx, &st.v[d]])?;
-                let ds = call1(rt, "softmax_bwd", &[&st.p[d], &dp])?;
-                let z0 = Tensor::zeros(&st.q[d].shape);
-                let dq = call1(rt, "attn_dq_step", &[&ds, &st.k[d], &z0])?;
-                let dk = call1(rt, "attn_dk_step", &[&ds, &st.q[d], &z0])?;
-                let dv = call1(rt, "attn_dv_step", &[&st.p[d], &d_ctx, &z0])?;
-                let mut dx_d: Option<Tensor> = None;
-                for (wname, bname, dt) in [("wq", "bq", &dq), ("wk", "bk", &dk), ("wv", "bv", &dv)] {
-                    let w = ops::slice_last(p_of(&pf(wname))?, lo, hi)?;
-                    let bb = ops::slice_dim0(p_of(&pf(bname))?, lo, hi)?;
-                    let flat = call1(rt, "from_heads", &[dt])?;
-                    let out = call(rt, "linear_bwd", &[&st.x_in, &w, &bb, &flat])?;
-                    let [dxp, dw, dbp]: [Tensor; 3] =
-                        out.try_into().map_err(|_| anyhow!("linear_bwd arity"))?;
-                    ops::add_into_last(grads.get_mut(&pf(wname))?, &dw, lo)?;
-                    ops::add_into_dim0(grads.get_mut(&pf(bname))?, &dbp, lo)?;
-                    match &mut dx_d {
-                        None => dx_d = Some(dxp),
-                        Some(acc) => ops::add_assign(acc, &dxp)?,
-                    }
-                }
-                dx_partial.push(dx_d.unwrap());
-            }
-            self.fabric.all_reduce_sum(&mut dx_partial)?;
-            dx = call1(rt, "add", &[&dx_partial[0], &d_pre1])?;
+        for layer in (0..tsh.layers).rev() {
+            dx = tp_layer_bwd(ex, view, tsh, params, layer, &stashes[layer], &dx, &mut grads)?;
         }
+        tp_embed_bwd(ex, tsh, params, batch, &dx, &ranks, &mut grads)?;
 
-        // embeddings (replicated: identical on every rank, computed once)
-        let out = call(rt, "embed_bwd", &[ids, tok, &pos, &dx])?;
-        let [dtok, dpos]: [Tensor; 2] =
-            out.try_into().map_err(|_| anyhow!("embed_bwd arity"))?;
-        ops::add_assign(grads.get_mut("tok_emb")?, &dtok)?;
-        ops::add_into_dim0(grads.get_mut("pos_emb")?, &dpos, 0)?;
-
-        Ok(StepOutput { loss: mlm + sop, mlm, sop, grads, hidden })
+        // Host-side shard merge (exact: shards land at disjoint offsets,
+        // replicated entries appear only in rank 0's store) — no
+        // collective, matching Megatron's grad layout.
+        let mut g = grads.remove(0);
+        for other in grads {
+            for (name, t) in other.values {
+                ops::add_assign(g.get_mut(&name)?, &t)?;
+            }
+        }
+        Ok(StepOutput { loss: mlm + sop, mlm, sop, grads: g, hidden })
     }
 }

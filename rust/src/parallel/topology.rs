@@ -59,6 +59,32 @@ impl Mesh {
         (c.dp * self.pp + c.pp) * self.mp + c.mp
     }
 
+    /// Layers per pipeline stage; errors unless the stage count divides
+    /// the layer count evenly (GPipe stages must be balanced).
+    pub fn stage_layers(&self, layers: usize) -> Result<usize> {
+        if layers == 0 || layers % self.pp != 0 {
+            bail!(
+                "pipeline stages {} must divide the layer count {layers} evenly",
+                self.pp
+            );
+        }
+        Ok(layers / self.pp)
+    }
+
+    /// Compact "dp×pp×mp-kind" label for logs and bench rows.
+    pub fn label(&self) -> String {
+        format!(
+            "{}x{}x{}-{}",
+            self.dp,
+            self.pp,
+            self.mp,
+            match self.kind {
+                MpKind::Tensor => "tp",
+                MpKind::Sequence => "sp",
+            }
+        )
+    }
+
     /// All ranks sharing this rank's (dp, pp) — its model-parallel group
     /// (the ring, under sequence parallelism).
     pub fn mp_group(&self, rank: usize) -> Result<Vec<usize>> {
@@ -145,5 +171,19 @@ mod tests {
     #[test]
     fn zero_axis_rejected() {
         assert!(Mesh::new(0, 1, 1, MpKind::Tensor).is_err());
+    }
+
+    #[test]
+    fn stage_layers_requires_even_split() {
+        let m = Mesh::new(1, 2, 2, MpKind::Sequence).unwrap();
+        assert_eq!(m.stage_layers(4).unwrap(), 2);
+        assert!(m.stage_layers(3).is_err());
+        assert!(m.stage_layers(0).is_err());
+    }
+
+    #[test]
+    fn label_names_axes_and_kind() {
+        assert_eq!(Mesh::new(2, 2, 4, MpKind::Sequence).unwrap().label(), "2x2x4-sp");
+        assert_eq!(Mesh::new(1, 2, 2, MpKind::Tensor).unwrap().label(), "1x2x2-tp");
     }
 }

@@ -111,6 +111,12 @@ pub fn step_time(cluster: &Cluster, shape: &RunShape, strategy: Strategy) -> f64
             boundary_bytes_seqpar(shape.batch, shape.seq_len, shape.model.hidden, mp)
         }
     };
+    // Per-rank WIRE bytes per crossing: send/mp (each rank ships its 1/mp
+    // slice) plus this rank's share of the ring all-gather, gather/mp —
+    // with the group-total closed forms this is C for Megatron and C/mp
+    // for sequence parallelism.  The scatter is a local slice: the comm
+    // Meter charges it as §3.2.2 traffic volume, but it costs no link
+    // time, so it does not appear here.
     let bnd_bytes = (bnd.send + bnd.gather) as f64 / mp as f64;
     let boundary_time =
         (stages - 1) as f64 * (bnd_bytes / cluster.link_bw + cluster.latency) * 2.0; // fwd+bwd

@@ -1,7 +1,11 @@
 //! The training loop: engine-agnostic, logs the Fig. 6 loss curves.
+//! [`Trainer`] drives a flat [`Engine`]; [`MeshTrainer`] drives a 4D
+//! mesh backend (`exec::MeshStep`), feeding it `dp × micros`
+//! manifest-shaped microbatches per optimizer step.
 
 use anyhow::Result;
 
+use crate::exec::MeshStep;
 use crate::model::params::ParamStore;
 use crate::parallel::{Batch, Engine};
 
@@ -30,6 +34,32 @@ pub struct LogPoint {
     pub sop: f32,
     pub lr: f32,
     pub tokens_per_sec: f64,
+}
+
+/// Shared per-step epilogue for both loops: build the [`LogPoint`], log
+/// on the configured cadence, and record it on the curve.
+#[allow(clippy::too_many_arguments)]
+fn record_step(
+    name: &str,
+    cfg: &TrainConfig,
+    curve: &mut Vec<LogPoint>,
+    step: u64,
+    (loss, mlm, sop): (f32, f32, f32),
+    lr: f32,
+    tokens: f64,
+    dt: f64,
+    quiet: bool,
+) {
+    let point = LogPoint { step, loss, mlm, sop, lr, tokens_per_sec: tokens / dt.max(1e-9) };
+    if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+        if !quiet {
+            println!(
+                "[{name}] step {step:>5}  loss {:.4}  mlm {:.4}  sop {:.4}  lr {lr:.2e}  {:>8.0} tok/s",
+                point.loss, point.mlm, point.sop, point.tokens_per_sec
+            );
+        }
+        curve.push(point);
+    }
 }
 
 pub struct Trainer<'e, E: Engine> {
@@ -62,24 +92,76 @@ impl<'e, E: Engine> Trainer<'e, E> {
             let lr = lr_schedule(step, self.cfg.warmup, self.cfg.steps, self.cfg.peak_lr);
             self.adam.step(params, &out.grads, lr)?;
             let dt = t0.elapsed().as_secs_f64();
-            let point = LogPoint {
+            record_step(
+                self.engine.name(),
+                &self.cfg,
+                &mut curve,
                 step,
-                loss: out.loss,
-                mlm: out.mlm,
-                sop: out.sop,
+                (out.loss, out.mlm, out.sop),
                 lr,
-                tokens_per_sec: tokens / dt.max(1e-9),
-            };
-            if step % self.cfg.log_every == 0 || step + 1 == self.cfg.steps {
-                if !quiet {
-                    println!(
-                        "[{}] step {:>5}  loss {:.4}  mlm {:.4}  sop {:.4}  lr {:.2e}  {:>8.0} tok/s",
-                        self.engine.name(), step, point.loss, point.mlm, point.sop,
-                        lr, point.tokens_per_sec
-                    );
-                }
-                curve.push(point);
-            }
+                tokens,
+                dt,
+                quiet,
+            );
+        }
+        Ok(curve)
+    }
+}
+
+/// The mesh training loop: one optimizer step consumes `dp * micros`
+/// manifest-shaped microbatches (replicas × GPipe microbatches), pulled
+/// from `next_batch` in (replica-major, micro-minor) order so a run is
+/// fully determined by the corpus seed regardless of mesh factorization.
+pub struct MeshTrainer<'e> {
+    pub engine: &'e dyn MeshStep,
+    pub cfg: TrainConfig,
+    pub adam: Adam,
+}
+
+impl<'e> MeshTrainer<'e> {
+    pub fn new(engine: &'e dyn MeshStep, params: &ParamStore, cfg: TrainConfig) -> MeshTrainer<'e> {
+        MeshTrainer { engine, cfg, adam: Adam::new(params, AdamConfig::default()) }
+    }
+
+    pub fn run<F>(
+        &mut self,
+        params: &mut ParamStore,
+        mut next_batch: F,
+        quiet: bool,
+    ) -> Result<Vec<LogPoint>>
+    where
+        F: FnMut() -> Result<Batch>,
+    {
+        let mesh = self.engine.mesh();
+        let micros = self.engine.micros();
+        let label = format!("mesh-{}", mesh.label());
+        let mut curve = Vec::new();
+        for step in 0..self.cfg.steps {
+            let batches: Vec<Vec<Batch>> = (0..mesh.dp)
+                .map(|_| (0..micros).map(|_| next_batch()).collect::<Result<Vec<_>>>())
+                .collect::<Result<_>>()?;
+            // a mesh step consumes dp*micros microbatches of tokens
+            let tokens: f64 = batches
+                .iter()
+                .flatten()
+                .map(|b| b.ids.numel() as f64)
+                .sum();
+            let t0 = std::time::Instant::now();
+            let out = self.engine.step(params, &batches)?;
+            let lr = lr_schedule(step, self.cfg.warmup, self.cfg.steps, self.cfg.peak_lr);
+            self.adam.step(params, &out.grads, lr)?;
+            let dt = t0.elapsed().as_secs_f64();
+            record_step(
+                &label,
+                &self.cfg,
+                &mut curve,
+                step,
+                (out.loss, out.mlm, out.sop),
+                lr,
+                tokens,
+                dt,
+                quiet,
+            );
         }
         Ok(curve)
     }

@@ -71,6 +71,23 @@ impl Args {
         }
     }
 
+    /// 'x'-separated usize triple, e.g. `--mesh 2x2x4` (DP×PP×MP).
+    pub fn triple_opt(&self, key: &str) -> anyhow::Result<Option<(usize, usize, usize)>> {
+        let Some(v) = self.flags.get(key) else {
+            return Ok(None);
+        };
+        let parts: Vec<&str> = v.split('x').collect();
+        if parts.len() != 3 {
+            anyhow::bail!("--{key} expects AxBxC (e.g. 2x2x4), got {v:?}");
+        }
+        let p = |s: &str| {
+            s.trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("--{key}: bad axis {s:?} in {v:?}"))
+        };
+        Ok(Some((p(parts[0])?, p(parts[1])?, p(parts[2])?)))
+    }
+
     /// Comma-separated usize list, e.g. `--sizes 1,2,4,8`.
     pub fn usize_list_or(&self, key: &str, default: &[usize]) -> anyhow::Result<Vec<usize>> {
         match self.flags.get(key) {
@@ -114,6 +131,17 @@ mod tests {
         let a = args("--steps ten");
         let err = a.usize_or("steps", 0).unwrap_err().to_string();
         assert!(err.contains("--steps"), "{err}");
+    }
+
+    #[test]
+    fn parses_mesh_triples() {
+        let a = args("--mesh 2x2x4");
+        assert_eq!(a.triple_opt("mesh").unwrap(), Some((2, 2, 4)));
+        assert_eq!(a.triple_opt("absent").unwrap(), None);
+        for bad in ["2x2", "2x2x4x8", "axbxc", "2xx4"] {
+            let b = args(&format!("--mesh {bad}"));
+            assert!(b.triple_opt("mesh").is_err(), "{bad:?} should not parse");
+        }
     }
 
     #[test]

@@ -10,6 +10,30 @@
 
 use crate::util::rng::Rng;
 
+/// Uniform pick from a non-empty slice (generator helper for properties).
+pub fn pick<'a, T>(rng: &mut Rng, items: &'a [T]) -> &'a T {
+    assert!(!items.is_empty(), "pick from empty slice");
+    &items[rng.below(items.len() as u64) as usize]
+}
+
+/// The divisors of `n`, ascending (n >= 1).
+pub fn divisors(n: usize) -> Vec<usize> {
+    (1..=n).filter(|d| n % d == 0).collect()
+}
+
+/// A uniform-ish random 3-way factorization `(a, b, c)` with
+/// `a * b * c == world`: draw `a` from the divisors of `world`, `b` from
+/// the divisors of the remainder.  The mesh fuzz uses this to sample
+/// valid (dp, pp, mp) splits of a world size; invalid model shapes are
+/// rejected downstream via the constructors.
+pub fn factor3(rng: &mut Rng, world: usize) -> (usize, usize, usize) {
+    assert!(world >= 1);
+    let a = *pick(rng, &divisors(world));
+    let rest = world / a;
+    let b = *pick(rng, &divisors(rest));
+    (a, b, rest / b)
+}
+
 pub struct Prop {
     pub cases: usize,
     pub seed: u64,
@@ -76,5 +100,38 @@ mod tests {
     #[should_panic(expected = "property \"always fails\"")]
     fn reports_failing_case() {
         Prop::new(4, 2).check("always fails", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn factor3_products_match_the_world() {
+        Prop::new(64, 3).check("factor3 multiplies back", |rng| {
+            for world in [1usize, 2, 4, 6, 8, 12] {
+                let (a, b, c) = factor3(rng, world);
+                if a * b * c != world {
+                    return Err(format!("{a}*{b}*{c} != {world}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn divisors_are_exact() {
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+    }
+
+    #[test]
+    fn factor3_covers_nontrivial_splits() {
+        // over many draws of world=8 we must see a split with every axis > 1
+        let mut rng = Rng::new(9);
+        let mut saw_3d = false;
+        for _ in 0..200 {
+            let (a, b, c) = factor3(&mut rng, 8);
+            if a > 1 && b > 1 && c > 1 {
+                saw_3d = true;
+            }
+        }
+        assert!(saw_3d, "factor3 never produced a genuinely 3D split of 8");
     }
 }

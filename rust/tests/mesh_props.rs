@@ -1,0 +1,138 @@
+//! Property-based fuzz over the executable 4D mesh: random small run
+//! shapes and random mesh factorizations (invalid ones must be REJECTED
+//! by the constructors, valid ones must match the serial engine), plus
+//! the boundary-bytes ledger: the measured stage-boundary traffic must
+//! equal `pipeline::boundary_totals` EXACTLY, per collective kind —
+//! including the SP-skips-all-gather delta of paper §3.2.2.
+
+use seqpar::backend::native::NativeConfig;
+use seqpar::comm::{CommKind, Fabric, Meter};
+use seqpar::exec::{MeshEngine, MeshStep};
+use seqpar::model::params::ParamStore;
+use seqpar::parallel::pipeline::boundary_totals;
+use seqpar::parallel::tensorp::TensorParEngine;
+use seqpar::parallel::topology::{Mesh, MpKind};
+use seqpar::parallel::{Batch, Engine};
+use seqpar::runtime::Runtime;
+use seqpar::tensor::ops;
+use seqpar::train::data::{Corpus, CorpusConfig};
+use seqpar::util::prop::{self, Prop};
+
+const TOL: f32 = 1e-4;
+
+fn batches_for(rt: &Runtime, dp: usize, micros: usize, seed: u64) -> Vec<Vec<Batch>> {
+    let m = rt.manifest();
+    let mut c = Corpus::new(CorpusConfig::new(m.vocab, m.seq_len, m.batch), seed);
+    (0..dp)
+        .map(|_| (0..micros).map(|_| c.next_batch().unwrap()).collect())
+        .collect()
+}
+
+#[test]
+fn random_meshes_match_serial_and_pin_boundary_bytes() {
+    Prop::new(12, 0x4d_e511).check("mesh ~ serial + boundary ledger", |rng| {
+        // ---- sample a run shape + factorization ----------------------
+        let world = *prop::pick(rng, &[1usize, 2, 4]);
+        let (dp, pp, mp) = prop::factor3(rng, world);
+        let kind = if rng.below(2) == 0 { MpKind::Sequence } else { MpKind::Tensor };
+        let micros = 1 + rng.below(2) as usize;
+        let chunk = *prop::pick(rng, &[4usize, 8]);
+        let seq_len = mp * chunk; // always divisible by the mp axis
+
+        let mesh = Mesh::new(dp, pp, mp, kind).map_err(|e| e.to_string())?;
+        let cfg = NativeConfig { seq_len, ..NativeConfig::tiny() }.for_mesh(&mesh);
+        let rt = Runtime::native(cfg).map_err(|e| e.to_string())?;
+        let m = rt.manifest().clone();
+
+        // ---- invalid factorizations must be rejected -----------------
+        let layers_ok = m.layers % pp == 0;
+        let heads_ok = kind == MpKind::Sequence || m.heads % mp == 0;
+        let built = MeshEngine::new(&rt, mesh, micros, Meter::new());
+        if !layers_ok || !heads_ok {
+            if built.is_ok() {
+                return Err(format!(
+                    "mesh {} (layers_ok={layers_ok} heads_ok={heads_ok}) should be rejected",
+                    mesh.label()
+                ));
+            }
+            return Ok(()); // rejection path exercised
+        }
+        let _ = built.map_err(|e| format!("valid mesh {} rejected: {e}", mesh.label()))?;
+
+        // ---- grad parity vs the serial engine ------------------------
+        let params = ParamStore::synthetic(&m);
+        let batches = batches_for(&rt, dp, micros, 17 + world as u64);
+        let meter = Meter::new();
+        let eng = MeshEngine::new(&rt, mesh, micros, meter.clone()).map_err(|e| e.to_string())?;
+        let out = eng.step(&params, &batches).map_err(|e| e.to_string())?;
+
+        let serial = TensorParEngine::new(&rt, Fabric::new(1, Meter::new()))
+            .map_err(|e| e.to_string())?;
+        let mut ref_loss = 0.0f32;
+        let mut ref_grads = params.zeros_like();
+        for replica in &batches {
+            for b in replica {
+                let o = serial.forward_backward(&params, b).map_err(|e| e.to_string())?;
+                ref_loss += o.loss;
+                for (name, g) in &o.grads.values {
+                    ops::add_assign(ref_grads.get_mut(name).unwrap(), g).unwrap();
+                }
+            }
+        }
+        for t in ref_grads.values.values_mut() {
+            ops::scale_assign(t, 1.0 / dp as f32).unwrap();
+        }
+        ref_loss /= dp as f32;
+
+        if (out.loss - ref_loss).abs() >= TOL {
+            return Err(format!(
+                "{} micros={micros}: mesh loss {} vs serial {ref_loss}",
+                mesh.label(),
+                out.loss
+            ));
+        }
+        for (name, g) in &ref_grads.values {
+            let d = ops::max_abs_diff(&out.grads.values[name], g).unwrap();
+            if d >= TOL {
+                return Err(format!(
+                    "{} micros={micros}: grad {name} diverged, Δ={d}",
+                    mesh.label()
+                ));
+            }
+        }
+
+        // ---- boundary-bytes ledger vs the closed form ----------------
+        // The mesh meters Pipeline/AllGather/Scatter ONLY at stage
+        // boundaries, so the counters must equal the closed form exactly.
+        // `boundary_totals` is per pipeline; every dp replica runs its own.
+        let per = boundary_totals(kind, m.batch, m.seq_len, m.hidden, mp, pp, micros);
+        let (want_send, want_gather) = (per.send * dp as u64, per.gather * dp as u64);
+        let got_send = meter.get(CommKind::Pipeline);
+        let got_gather = meter.get(CommKind::AllGather);
+        let got_scatter = meter.get(CommKind::Scatter);
+        if got_send != want_send {
+            return Err(format!(
+                "{} micros={micros}: boundary send {got_send} != closed form {want_send}",
+                mesh.label()
+            ));
+        }
+        if got_gather != want_gather {
+            return Err(format!(
+                "{} micros={micros}: boundary gather {got_gather} != closed form {want_gather}",
+                mesh.label()
+            ));
+        }
+        // Megatron scatters exactly what it sends; SP never scatters.
+        let want_scatter = match kind {
+            MpKind::Tensor if mp > 1 => want_send,
+            _ => 0,
+        };
+        if got_scatter != want_scatter {
+            return Err(format!(
+                "{} micros={micros}: boundary scatter {got_scatter} != {want_scatter}",
+                mesh.label()
+            ));
+        }
+        Ok(())
+    });
+}
