@@ -50,15 +50,15 @@ pub struct BlockPlan {
     pub n: usize,
     pub lc: usize,
     pub w: usize,
-    /// reach[dst][src]: does query chunk dst need key chunk src?
+    /// `reach[dst][src]`: does query chunk dst need key chunk src?
     reach: Vec<Vec<bool>>,
-    /// hops[src] = max reachable dst − src (how far the chunk travels).
+    /// `hops[src]` = max reachable dst − src (how far the chunk travels).
     pub hops: Vec<usize>,
-    /// consumers[src]: ranks with reach[dst][src], ascending.
+    /// `consumers[src]`: ranks with `reach[dst][src]`, ascending.
     pub consumers: Vec<Vec<usize>>,
-    /// srcs[dst]: reachable key chunks, ascending (the concat layout).
+    /// `srcs[dst]`: reachable key chunks, ascending (the concat layout).
     srcs: Vec<Vec<usize>>,
-    /// masks[dst]: additive token mask `[Lc, width(dst)]` over the
+    /// `masks[dst]`: additive token mask `[Lc, width(dst)]` over the
     /// reachable concatenation.
     masks: Vec<Tensor>,
 }

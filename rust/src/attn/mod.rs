@@ -27,13 +27,23 @@
 //!   the full ring.  The `Meter` records the reduced volume; the
 //!   skip-aware closed form is pinned by `rust/tests/comm_volume.rs`.
 //!
+//! Orthogonal to the pattern, the SEQUENCE-PARALLEL STRATEGY
+//! ([`crate::parallel::sequence::SpStrategy`], `--sp ring|ulysses`)
+//! decides how cross-chunk attention data moves: the ring schedules
+//! above, or [`ulysses`] — DeepSpeed-Ulysses-style all-to-alls that
+//! re-shard q/k/v into whole-head shards so each rank runs full-sequence
+//! dense attention locally (dense pattern only; `8(n−1)` chunk-sends per
+//! layer vs the dense ring's `(2(n−1)+(4n−2))·n`).
+//!
 //! The per-rank step logic in `parallel::sequence::seqpar_step` dispatches
-//! through [`forward_on`]/[`backward_on`]; `rust/tests/dist_equivalence.rs`
-//! proves threaded == sequential == serial (ring of 1) for every pattern.
+//! through `forward_on`/`backward_on`; `rust/tests/dist_equivalence.rs`
+//! proves threaded == sequential == serial (ring of 1) for every pattern
+//! and strategy.
 
 pub mod block;
 pub mod dense;
 pub mod linformer;
+pub mod ulysses;
 
 use anyhow::{bail, Result};
 
@@ -117,6 +127,10 @@ pub(crate) enum AttnStash {
     Linformer { p: Vec<Tensor>, kt: Vec<Tensor>, vt: Vec<Tensor> },
     /// Probs over the reachable concatenation `[B, Z, Lc, r(d)·Lc]`.
     Block { p: Vec<Tensor> },
+    /// Ulysses head shards: probs `[B, Z/n, L, L]` plus the transposed
+    /// q/k/v `[B, Z/n, L, A]` — stashed so backward needs no re-exchange
+    /// (the memory-for-bandwidth trade the all-to-all schedule makes).
+    Ulysses { p: Vec<Tensor>, qg: Vec<Tensor>, kg: Vec<Tensor>, vg: Vec<Tensor> },
 }
 
 /// Attention forward for the view's ranks, dispatched on the shape's
@@ -131,6 +145,11 @@ pub(crate) fn forward_on(
     k: &[Tensor],
     v: &[Tensor],
 ) -> Result<(Vec<Tensor>, AttnStash)> {
+    if !sh.sp.is_ring() {
+        // Ulysses re-shards heads with all-to-alls; StepShape guarantees
+        // the pattern is dense when this branch is taken
+        return ulysses::forward_on(ex, view, sh, q, k, v);
+    }
     match sh.pattern {
         AttnPattern::Dense => {
             let (ctx, p) = dense::rsa_forward_on(ex, view, sh, q, k, v)?;
@@ -158,6 +177,12 @@ pub(crate) fn backward_on(
     v: &[Tensor],
     grads: &mut [ParamStore],
 ) -> Result<(Vec<Tensor>, Vec<Tensor>, Vec<Tensor>)> {
+    if let AttnStash::Ulysses { p, qg, kg, vg } = stash {
+        if !sh.pattern.is_dense() || sh.sp.is_ring() {
+            bail!("attention stash does not match pattern {:?}", sh.pattern);
+        }
+        return ulysses::backward_on(ex, view, sh, p, qg, kg, vg, d_ctx);
+    }
     match (sh.pattern, stash) {
         (AttnPattern::Dense, AttnStash::Dense { p }) => {
             dense::rsa_backward_on(ex, view, sh, d_ctx, q, p, k, v)

@@ -1,0 +1,125 @@
+//! Ulysses-style sequence parallelism: head-shard all-to-alls instead of
+//! ring rotation (DeepSpeed-Ulysses, Jacobs et al., 2023).
+//!
+//! Under the ring schedule every layer streams K/V chunks around the
+//! whole ring.  Ulysses replaces that with a tensor transpose: one
+//! [`Collective::all_to_all`] re-shards the already-projected q/k/v from
+//! sequence-split `[B, Z, Lc, A]` to head-split `[B, Z/n, L, A]`, each
+//! rank computes FULL-sequence dense attention for the `Z/n` heads it now
+//! owns (the same `scores_step`/`softmax`/`av_step` kernels the dense
+//! path uses, at head-sharded signatures), and a second all-to-all
+//! restores the sequence layout for the out-projection.
+//!
+//! Backward is the mirror image: the incoming `d_ctx` takes the forward
+//! transpose, the attention backward runs locally against the stashed
+//! head-shard q/k/v (no re-communication — the gathered tensors are the
+//! activation stash, which is the memory-for-bandwidth trade Ulysses
+//! makes), and dq/dk/dv take the reverse transpose home.  That is 8
+//! all-to-alls per layer — `8(n−1)` chunk-send equivalents in total,
+//! independent of the per-hop ring length, vs the dense ring's
+//! `(2(n−1) + (4n−2))·n` (closed forms pinned by
+//! `rust/tests/comm_volume.rs`).
+//!
+//! Layout invariants:
+//! * the forward exchange splits heads (dim 1) and concatenates sequence
+//!   chunks in rank order (dim 2); the reverse swaps the two dims, and
+//!   `all_to_all ∘ all_to_all` with swapped dims is the identity;
+//! * `n` must divide the head count — whole heads move, mirroring
+//!   Megatron's §4.2 tensor-parallel cap (validated at engine build).
+
+use anyhow::{bail, Result};
+
+use crate::comm::Collective;
+use crate::parallel::call1_on;
+use crate::parallel::sequence::StepShape;
+use crate::runtime::Executor;
+use crate::tensor::Tensor;
+
+use super::AttnStash;
+
+/// Head dim (1) ⇄ sequence dim (2) of the `[B, Z, Lc, A]` chunks.
+const HEAD_DIM: usize = 1;
+const SEQ_DIM: usize = 2;
+
+/// All-to-all the view's local chunks into head shards:
+/// `[B, Z, Lc, A]` → `[B, Z/n, L, A]`.
+fn to_head_shards(view: &dyn Collective, x: &[Tensor]) -> Result<Vec<Tensor>> {
+    let mut slots = x.to_vec();
+    view.all_to_all(&mut slots, HEAD_DIM, SEQ_DIM)?;
+    Ok(slots)
+}
+
+/// The reverse transpose: `[B, Z/n, L, A]` → `[B, Z, Lc, A]`.
+fn to_seq_chunks(view: &dyn Collective, mut x: Vec<Tensor>) -> Result<Vec<Tensor>> {
+    view.all_to_all(&mut x, SEQ_DIM, HEAD_DIM)?;
+    Ok(x)
+}
+
+/// Ulysses forward for the view's ranks: transpose q/k/v to head shards,
+/// full-sequence dense attention per shard, transpose the context back.
+pub(crate) fn forward_on(
+    ex: &dyn Executor,
+    view: &dyn Collective,
+    _sh: &StepShape,
+    q: &[Tensor],
+    k: &[Tensor],
+    v: &[Tensor],
+) -> Result<(Vec<Tensor>, AttnStash)> {
+    let ln = view.local_ranks().len();
+    if q.len() != ln || k.len() != ln || v.len() != ln {
+        bail!("ulysses forward: need {ln} local chunks, got {}/{}/{}", q.len(), k.len(), v.len());
+    }
+    let qg = to_head_shards(view, q)?;
+    let kg = to_head_shards(view, k)?;
+    let vg = to_head_shards(view, v)?;
+    let mut p = Vec::with_capacity(ln);
+    let mut ctx_g = Vec::with_capacity(ln);
+    for li in 0..ln {
+        let s = call1_on(ex, "scores_step", &[&qg[li], &kg[li]])?;
+        let pl = call1_on(ex, "softmax_fwd", &[&s])?;
+        let zero = Tensor::zeros(&qg[li].shape);
+        ctx_g.push(call1_on(ex, "av_step", &[&pl, &vg[li], &zero])?);
+        p.push(pl);
+    }
+    let ctx = to_seq_chunks(view, ctx_g)?;
+    Ok((ctx, AttnStash::Ulysses { p, qg, kg, vg }))
+}
+
+/// Ulysses backward: forward-transpose `d_ctx`, run the dense attention
+/// backward locally against the stashed head shards, reverse-transpose
+/// dq/dk/dv back to sequence chunks.  No parameter gradients — Ulysses
+/// owns no parameters of its own.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn backward_on(
+    ex: &dyn Executor,
+    view: &dyn Collective,
+    _sh: &StepShape,
+    p: &[Tensor],
+    qg: &[Tensor],
+    kg: &[Tensor],
+    vg: &[Tensor],
+    d_ctx: &[Tensor],
+) -> Result<(Vec<Tensor>, Vec<Tensor>, Vec<Tensor>)> {
+    let ln = view.local_ranks().len();
+    if d_ctx.len() != ln {
+        bail!("ulysses backward: need {ln} d_ctx chunks, got {}", d_ctx.len());
+    }
+    let dg = to_head_shards(view, d_ctx)?;
+    let mut dqg = Vec::with_capacity(ln);
+    let mut dkg = Vec::with_capacity(ln);
+    let mut dvg = Vec::with_capacity(ln);
+    for li in 0..ln {
+        let dp = call1_on(ex, "attn_dp_step", &[&dg[li], &vg[li]])?;
+        let zero_v = Tensor::zeros(&vg[li].shape);
+        dvg.push(call1_on(ex, "attn_dv_step", &[&p[li], &dg[li], &zero_v])?);
+        let ds = call1_on(ex, "softmax_bwd", &[&p[li], &dp])?;
+        let zero_q = Tensor::zeros(&qg[li].shape);
+        dqg.push(call1_on(ex, "attn_dq_step", &[&ds, &kg[li], &zero_q])?);
+        let zero_k = Tensor::zeros(&kg[li].shape);
+        dkg.push(call1_on(ex, "attn_dk_step", &[&ds, &qg[li], &zero_k])?);
+    }
+    let dq = to_seq_chunks(view, dqg)?;
+    let dk = to_seq_chunks(view, dkg)?;
+    let dv = to_seq_chunks(view, dvg)?;
+    Ok((dq, dk, dv))
+}

@@ -14,7 +14,7 @@
 //!   ring-attention backward GEMMs of `steps.py`;
 //! * static parameters that `aot.py` bakes into an artifact at lowering
 //!   time (the `to_heads`/`qkv_proj` head layout, the loss normalizers)
-//!   are baked into the per-artifact [`Kernel`] descriptor here.
+//!   are baked into the per-artifact `Kernel` descriptor here.
 //!
 //! Everything is plain row-major f32 on the host — no BLAS, no hidden
 //! kernel-level threading — which keeps the backend dependency-free and
@@ -51,6 +51,10 @@ pub struct NativeConfig {
     /// Blockwise-causal band width in TOKENS (0 = skip the masked-softmax
     /// artifacts; `--attn block:W`).
     pub block_w: usize,
+    /// Register the Ulysses head-shard attention kernels (`--sp ulysses`):
+    /// full-sequence dense attention at `[B, Z/ring, L, A]` chunk shapes.
+    /// Requires `ring` to divide the head count.
+    pub ulysses: bool,
     pub seed: u64,
 }
 
@@ -65,6 +69,7 @@ impl NativeConfig {
             tp: 2,
             linformer_k: 0,
             block_w: 0,
+            ulysses: false,
             seed: 0,
         }
     }
@@ -425,6 +430,23 @@ fn enumerate_linformer(reg: &mut Reg, cfg: &NativeConfig) -> Result<()> {
     Ok(())
 }
 
+/// Ulysses head-shard artifacts (`--sp ulysses`): after the q/k/v
+/// all-to-all each rank holds `Z/n` heads over the FULL sequence, so the
+/// dense attention step kernels are registered at `[B, Z/n, L, A]` chunk
+/// shapes (score rows `[L, L]`) — no new kernel semantics, just the
+/// head-sharded signatures (`attn::ulysses` reuses the dense steps).
+fn enumerate_ulysses(reg: &mut Reg, cfg: &NativeConfig) -> Result<()> {
+    let m = &cfg.model;
+    attention_steps(
+        reg,
+        cfg.batch,
+        m.heads / cfg.ring,
+        cfg.seq_len,
+        cfg.seq_len,
+        m.head_dim,
+    )
+}
+
 /// Blockwise-sparse artifacts: per-rank masked softmax over the reachable
 /// concatenation (widths depend on the plan, deduped by signature).  The
 /// score/context/backward step kernels reuse the dense chunk shapes.
@@ -433,7 +455,7 @@ fn enumerate_block(reg: &mut Reg, cfg: &NativeConfig) -> Result<()> {
     let lc = cfg.seq_len / cfg.ring;
     let z = m.heads;
     // widths only — the full plan (with its mask tensors) is built once,
-    // at engine construction (StepShape::from_manifest_with)
+    // at engine construction (StepShape::from_manifest_sp)
     for w in crate::attn::block::BlockPlan::distinct_widths_for(cfg.ring, lc, cfg.block_w) {
         let rows = [cfg.batch, z, lc, w];
         reg.add(
@@ -466,6 +488,16 @@ impl NativeBackend {
         if m.heads * m.head_dim != m.hidden {
             bail!("model {}: heads*head_dim != hidden", m.name);
         }
+        if cfg.ulysses && m.heads % cfg.ring != 0 {
+            // same cap as Megatron's §4.2 tp-over-heads bound: the
+            // all-to-all shards whole heads across the ring
+            bail!(
+                "ulysses sequence parallelism size {} must divide the head count {} \
+                 (the all-to-all shards whole attention heads)",
+                cfg.ring,
+                m.heads
+            );
+        }
         let mut reg = Reg::new();
         enumerate_seqpar(&mut reg, &cfg)?;
         enumerate_tensorpar(&mut reg, &cfg, cfg.tp)?;
@@ -475,6 +507,9 @@ impl NativeBackend {
         }
         if cfg.block_w > 0 {
             enumerate_block(&mut reg, &cfg)?;
+        }
+        if cfg.ulysses {
+            enumerate_ulysses(&mut reg, &cfg)?;
         }
         let mut params: Vec<ParamSpec> = model::param_spec(m, cfg.seq_len)
             .into_iter()
@@ -499,6 +534,7 @@ impl NativeBackend {
             tp: cfg.tp,
             linformer_k: cfg.linformer_k,
             block_w: cfg.block_w,
+            ulysses: cfg.ulysses,
             hidden: m.hidden,
             heads: m.heads,
             head_dim: m.head_dim,

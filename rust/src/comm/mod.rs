@@ -2,9 +2,11 @@
 //!
 //! This is the substrate the paper assumes (NCCL/Gloo rings over the Piz
 //! Daint interconnect) rebuilt in-process: ring point-to-point rotation,
-//! ring all-reduce (reduce-scatter + all-gather), all-gather, broadcast —
-//! every byte metered per collective kind so the §3.2.2 communication-cost
-//! analysis can be checked against measured traffic (rust/tests/comm_volume.rs).
+//! ring all-reduce (reduce-scatter + all-gather), all-gather, all-to-all
+//! (the Ulysses head-shard transpose), broadcast — every byte metered per
+//! collective kind so the §3.2.2 communication-cost analysis can be
+//! checked against measured traffic (rust/tests/comm_volume.rs; the full
+//! closed-form table lives in docs/ARCHITECTURE.md).
 //!
 //! Two implementations share the semantics behind the [`Collective`]
 //! trait:
@@ -36,6 +38,9 @@ pub enum CommKind {
     AllReduce,
     /// All-gather (pipeline boundary in Megatron's scheme).
     AllGather,
+    /// All-to-all (Ulysses-style head-shard transpose: each rank sends a
+    /// distinct 1/n piece of its tensor to every peer).
+    AllToAll,
     /// Root-to-all replication (parameter init / checkpoint restore).
     Broadcast,
     /// Scatter/split (pipeline boundary split before transmit).
@@ -50,6 +55,7 @@ pub struct Meter {
     pub ring_p2p_bytes: AtomicU64,
     pub all_reduce_bytes: AtomicU64,
     pub all_gather_bytes: AtomicU64,
+    pub all_to_all_bytes: AtomicU64,
     pub broadcast_bytes: AtomicU64,
     pub scatter_bytes: AtomicU64,
     pub pipeline_bytes: AtomicU64,
@@ -71,6 +77,7 @@ impl Meter {
             CommKind::RingP2p => &self.ring_p2p_bytes,
             CommKind::AllReduce => &self.all_reduce_bytes,
             CommKind::AllGather => &self.all_gather_bytes,
+            CommKind::AllToAll => &self.all_to_all_bytes,
             CommKind::Broadcast => &self.broadcast_bytes,
             CommKind::Scatter => &self.scatter_bytes,
             CommKind::Pipeline => &self.pipeline_bytes,
@@ -85,6 +92,7 @@ impl Meter {
         self.get(CommKind::RingP2p)
             + self.get(CommKind::AllReduce)
             + self.get(CommKind::AllGather)
+            + self.get(CommKind::AllToAll)
             + self.get(CommKind::Broadcast)
             + self.get(CommKind::Scatter)
             + self.get(CommKind::Pipeline)
@@ -94,6 +102,7 @@ impl Meter {
         self.ring_p2p_bytes.store(0, Ordering::Relaxed);
         self.all_reduce_bytes.store(0, Ordering::Relaxed);
         self.all_gather_bytes.store(0, Ordering::Relaxed);
+        self.all_to_all_bytes.store(0, Ordering::Relaxed);
         self.broadcast_bytes.store(0, Ordering::Relaxed);
         self.scatter_bytes.store(0, Ordering::Relaxed);
         self.pipeline_bytes.store(0, Ordering::Relaxed);
@@ -105,6 +114,7 @@ impl Meter {
             ring_p2p: self.get(CommKind::RingP2p),
             all_reduce: self.get(CommKind::AllReduce),
             all_gather: self.get(CommKind::AllGather),
+            all_to_all: self.get(CommKind::AllToAll),
             broadcast: self.get(CommKind::Broadcast),
             scatter: self.get(CommKind::Scatter),
             pipeline: self.get(CommKind::Pipeline),
@@ -118,6 +128,7 @@ pub struct MeterSnapshot {
     pub ring_p2p: u64,
     pub all_reduce: u64,
     pub all_gather: u64,
+    pub all_to_all: u64,
     pub broadcast: u64,
     pub scatter: u64,
     pub pipeline: u64,
@@ -129,6 +140,7 @@ impl MeterSnapshot {
         self.ring_p2p
             + self.all_reduce
             + self.all_gather
+            + self.all_to_all
             + self.broadcast
             + self.scatter
             + self.pipeline
@@ -177,6 +189,23 @@ pub trait Collective {
 
     /// Every slot replaced by global rank `root`'s slot.
     fn broadcast(&self, slots: &mut [Tensor], root: usize) -> Result<()>;
+
+    /// All-to-all transpose: every rank splits its slot into `world()`
+    /// equal pieces along `split_dim`, sends piece `j` to global rank
+    /// `j`, and replaces its slot with the rank-order concatenation of
+    /// the received pieces along `concat_dim`.  Applying it twice with
+    /// the dims swapped is the identity (the piece routing is symmetric),
+    /// which is exactly how the Ulysses attention backward undoes the
+    /// forward head-shard exchange.
+    ///
+    /// Metered once per group call under [`CommKind::AllToAll`] on the
+    /// group-total convention: each rank keeps its own piece and sends
+    /// `n-1`, so a C-byte slot costs `(n-1) * C` across the group —
+    /// byte- and op-identical between [`Fabric`] and the threaded
+    /// `RingComm` (all slots must be the same size, as with every
+    /// collective here).
+    fn all_to_all(&self, slots: &mut [Tensor], split_dim: usize, concat_dim: usize)
+        -> Result<()>;
 
     /// Skip-aware ring step for blockwise-sparse attention.  `live[d]`
     /// (indexed by GLOBAL rank, derived from the static block plan so
@@ -300,6 +329,38 @@ impl Fabric {
             }
         }
         self.meter.add(CommKind::Broadcast, (self.n as u64 - 1) * c);
+        Ok(())
+    }
+
+    /// All-to-all transpose (see [`Collective::all_to_all`]): slot `d`
+    /// becomes the rank-order concatenation of every rank's `d`-th piece.
+    /// Group-total metering: n ranks each send n-1 of their n pieces,
+    /// i.e. `(n-1) * C` for C-byte slots.
+    pub fn all_to_all(
+        &self,
+        slots: &mut [Tensor],
+        split_dim: usize,
+        concat_dim: usize,
+    ) -> Result<()> {
+        if slots.len() != self.n {
+            bail!("all_to_all: {} slots for {} devices", slots.len(), self.n);
+        }
+        if self.n == 1 {
+            return Ok(());
+        }
+        let c = slots[0].bytes() as u64;
+        if slots.iter().any(|s| s.bytes() as u64 != c) {
+            bail!("all_to_all: slots must be the same size on every rank");
+        }
+        let pieces: Vec<Vec<Tensor>> = slots
+            .iter()
+            .map(|s| ops::chunk_dim(s, split_dim, self.n))
+            .collect::<Result<_>>()?;
+        for (d, slot) in slots.iter_mut().enumerate() {
+            let refs: Vec<&Tensor> = pieces.iter().map(|row| &row[d]).collect();
+            *slot = ops::concat_dim(&refs, concat_dim)?;
+        }
+        self.meter.add(CommKind::AllToAll, (self.n as u64 - 1) * c);
         Ok(())
     }
 
@@ -440,6 +501,15 @@ impl Collective for Fabric {
         Fabric::broadcast(self, slots, root)
     }
 
+    fn all_to_all(
+        &self,
+        slots: &mut [Tensor],
+        split_dim: usize,
+        concat_dim: usize,
+    ) -> Result<()> {
+        Fabric::all_to_all(self, slots, split_dim, concat_dim)
+    }
+
     fn ring_shift_sparse(&self, slots: &mut [Tensor], live: &[bool]) -> Result<()> {
         Fabric::ring_shift_sparse(self, slots, live)
     }
@@ -521,6 +591,55 @@ mod tests {
         assert_eq!(m.get(CommKind::Broadcast), 2 * 2 * 4);
         assert_eq!(m.get(CommKind::AllGather), 0);
         assert_eq!(m.snapshot().broadcast, 2 * 2 * 4);
+    }
+
+    #[test]
+    fn all_to_all_transposes_pieces_in_rank_order() {
+        let m = Meter::new();
+        let f = Fabric::new(2, m.clone());
+        // rank d holds [[10d, 10d+1], [10d+2, 10d+3]]: split dim 0, concat dim 1
+        let mut s = vec![
+            Tensor::from_f32(&[2, 2], vec![0., 1., 2., 3.]).unwrap(),
+            Tensor::from_f32(&[2, 2], vec![10., 11., 12., 13.]).unwrap(),
+        ];
+        f.all_to_all(&mut s, 0, 1).unwrap();
+        // rank 0 gets row 0 of every rank, concatenated along dim 1
+        assert_eq!(s[0].shape, vec![1, 4]);
+        assert_eq!(s[0].f32s().unwrap(), &[0., 1., 10., 11.]);
+        assert_eq!(s[1].f32s().unwrap(), &[2., 3., 12., 13.]);
+        // group total: each rank keeps 1 piece and sends 1 => (n-1)*C
+        assert_eq!(m.get(CommKind::AllToAll), 16);
+        assert_eq!(m.snapshot().ops, 1);
+    }
+
+    #[test]
+    fn all_to_all_twice_is_identity() {
+        let m = Meter::new();
+        let f = Fabric::new(4, m.clone());
+        let mk = |d: usize| {
+            Tensor::from_f32(&[2, 4, 8], (0..64).map(|i| (d * 100 + i) as f32).collect())
+                .unwrap()
+        };
+        let orig: Vec<Tensor> = (0..4).map(mk).collect();
+        let mut s = orig.clone();
+        f.all_to_all(&mut s, 1, 2).unwrap(); // [2,4,8] -> [2,1,32]
+        assert_eq!(s[0].shape, vec![2, 1, 32]);
+        f.all_to_all(&mut s, 2, 1).unwrap(); // back to [2,4,8]
+        assert_eq!(s, orig, "all_to_all ∘ all_to_all (dims swapped) must be identity");
+        // each of the two calls moves (n-1)*C bytes
+        let c = orig[0].bytes() as u64;
+        assert_eq!(m.get(CommKind::AllToAll), 2 * 3 * c);
+    }
+
+    #[test]
+    fn all_to_all_rejects_bad_shapes() {
+        let f = Fabric::new(3, Meter::new());
+        // dim not divisible by n
+        let mut s: Vec<Tensor> = (0..3).map(|_| Tensor::zeros(&[2, 4])).collect();
+        assert!(f.all_to_all(&mut s, 1, 0).is_err());
+        // wrong slot count
+        let mut s: Vec<Tensor> = (0..2).map(|_| Tensor::zeros(&[3, 3])).collect();
+        assert!(f.all_to_all(&mut s, 0, 1).is_err());
     }
 
     #[test]

@@ -183,6 +183,48 @@ impl RingComm {
         }
     }
 
+    /// All-to-all transpose (see [`Collective::all_to_all`]): split the
+    /// local tensor into `n` pieces along `split_dim`, fire piece `j` at
+    /// rank `j` over the direct mesh edges (buffered, so the symmetric
+    /// send pattern cannot deadlock), then concatenate the received
+    /// pieces in global rank order along `concat_dim`.  Metered once (at
+    /// rank 0) as `(n-1) * C` — the Fabric group-total formula.
+    pub fn all_to_all(&self, local: Tensor, split_dim: usize, concat_dim: usize) -> Result<Tensor> {
+        if self.n == 1 {
+            return Ok(local);
+        }
+        let c = local.bytes() as u64;
+        let mut pieces: Vec<Option<Tensor>> =
+            ops::chunk_dim(&local, split_dim, self.n)?.into_iter().map(Some).collect();
+        for dst in 0..self.n {
+            if dst == self.rank {
+                continue;
+            }
+            let t = pieces[dst].take().expect("chunk_dim yields n pieces");
+            self.tx[dst]
+                .send(t)
+                .map_err(|_| anyhow!("rank {}: all_to_all peer {dst} hung up", self.rank))?;
+        }
+        let parts: Vec<Tensor> = (0..self.n)
+            .map(|src| {
+                if src == self.rank {
+                    pieces[src].take().ok_or_else(|| {
+                        anyhow!("rank {}: own all_to_all piece missing", self.rank)
+                    })
+                } else {
+                    self.rx[src].recv().map_err(|_| {
+                        anyhow!("rank {}: all_to_all recv from {src} failed", self.rank)
+                    })
+                }
+            })
+            .collect::<Result<_>>()?;
+        if self.rank == 0 {
+            self.meter.add(CommKind::AllToAll, (self.n as u64 - 1) * c);
+        }
+        let refs: Vec<&Tensor> = parts.iter().collect();
+        ops::concat_dim(&refs, concat_dim)
+    }
+
     fn ring_exchange_unmetered(&self, t: Tensor) -> Result<Tensor> {
         self.tx[self.next_rank()]
             .send(t)
@@ -260,6 +302,17 @@ impl Collective for RingComm {
     fn broadcast(&self, slots: &mut [Tensor], root: usize) -> Result<()> {
         let t = take_slot(self, slots)?;
         slots[0] = RingComm::broadcast(self, t, root)?;
+        Ok(())
+    }
+
+    fn all_to_all(
+        &self,
+        slots: &mut [Tensor],
+        split_dim: usize,
+        concat_dim: usize,
+    ) -> Result<()> {
+        let t = take_slot(self, slots)?;
+        slots[0] = RingComm::all_to_all(self, t, split_dim, concat_dim)?;
         Ok(())
     }
 
@@ -498,6 +551,67 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(fab_meter.snapshot(), thr_meter.snapshot());
+    }
+
+    /// Threaded all-to-all: same transpose result and the same metered
+    /// bytes (and op count) as the sequential Fabric.
+    #[test]
+    fn all_to_all_matches_fabric() {
+        let n = 4;
+        let mk = |d: usize| {
+            Tensor::from_f32(&[2, 4, 8], (0..64).map(|i| (d * 100 + i) as f32).collect())
+                .unwrap()
+        };
+
+        let fab_meter = Meter::new();
+        let fabric = crate::comm::Fabric::new(n, fab_meter.clone());
+        let mut want: Vec<Tensor> = (0..n).map(mk).collect();
+        fabric.all_to_all(&mut want, 1, 2).unwrap();
+
+        let thr_meter = Meter::new();
+        let comms = mesh(n, thr_meter.clone());
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|comm| {
+                std::thread::spawn(move || {
+                    let local = mk(comm.rank);
+                    (comm.rank, comm.all_to_all(local, 1, 2).unwrap())
+                })
+            })
+            .collect();
+        for h in handles {
+            let (rank, got) = h.join().unwrap();
+            assert_eq!(got, want[rank], "rank {rank} diverged from Fabric");
+        }
+        assert_eq!(fab_meter.snapshot(), thr_meter.snapshot());
+        assert_eq!(thr_meter.get(CommKind::AllToAll), 3 * 2 * 4 * 8 * 4);
+    }
+
+    /// Two threaded all-to-alls with the dims swapped restore the
+    /// original tensor on every rank (the backward-undoes-forward
+    /// property the Ulysses schedule relies on).
+    #[test]
+    fn all_to_all_round_trip_is_identity_threaded() {
+        let n = 2;
+        let comms = mesh(n, Meter::new());
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|comm| {
+                std::thread::spawn(move || {
+                    let orig = Tensor::from_f32(
+                        &[2, 2, 4],
+                        (0..16).map(|i| (comm.rank * 50 + i) as f32).collect(),
+                    )
+                    .unwrap();
+                    let once = comm.all_to_all(orig.clone(), 1, 2).unwrap();
+                    let back = comm.all_to_all(once, 2, 1).unwrap();
+                    assert_eq!(back, orig, "rank {}: round trip diverged", comm.rank);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 
     /// Threaded sparse ring shift: same chunk movement and the same

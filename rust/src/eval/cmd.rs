@@ -9,7 +9,7 @@ use crate::backend::native::NativeConfig;
 use crate::comm::{Fabric, Meter};
 use crate::exec::{DistRunner, MeshEngine, MeshRunner, MeshStep};
 use crate::parallel::pipeline::Schedule;
-use crate::parallel::sequence::SeqParEngine;
+use crate::parallel::sequence::{SeqParEngine, SpStrategy};
 use crate::parallel::tensorp::TensorParEngine;
 use crate::parallel::topology::{Mesh, MpKind};
 use crate::model::params::ParamStore;
@@ -56,6 +56,14 @@ COMMON FLAGS:
                       token-level causal band of W tokens and skips both
                       the kernels and the ring hops of fully masked
                       chunk pairs (see README \"Sparse attention\")
+  --sp STRATEGY       ring | ulysses — how --engine seq moves cross-chunk
+                      attention data (default ring).  ring rotates K/V
+                      chunks around the ring every layer (the paper's
+                      RSA); ulysses re-shards q/k/v into whole-head
+                      shards with all-to-alls and runs full-sequence
+                      attention locally (8 all-to-alls per layer, flat in
+                      the ring size; needs ring | head count and --attn
+                      dense; see README \"Choosing an SP strategy\")
   --threads N         run `train --engine seq` on N OS threads — one per
                       ring rank via exec::DistRunner (native backend
                       only; implies --ring N, since rank count must equal
@@ -120,6 +128,9 @@ fn native_config(args: &Args) -> Result<NativeConfig> {
         tp,
         linformer_k,
         block_w,
+        // --sp ulysses lowers the head-shard attention kernels on top of
+        // the ring set (the backend enforces ring | head count)
+        ulysses: !sp_strategy(args)?.is_ring(),
         seed: args.usize_or("init-seed", 0)? as u64,
     };
     // --mesh DPxPPxMP fixes the model-parallel axis through the one
@@ -157,6 +168,11 @@ fn native_config(args: &Args) -> Result<NativeConfig> {
 /// The `--attn` pattern (train/bench surface; default dense).
 pub fn attn_pattern(args: &Args) -> Result<AttnPattern> {
     AttnPattern::parse(args.str_or("attn", "dense"))
+}
+
+/// The `--sp` sequence-parallel strategy (train surface; default ring).
+pub fn sp_strategy(args: &Args) -> Result<SpStrategy> {
+    SpStrategy::parse(args.str_or("sp", "ring"))
 }
 
 /// Pick a backend per `--backend`; returns the artifact dir when the XLA
@@ -385,19 +401,10 @@ pub fn verify(args: &Args) -> Result<()> {
 }
 
 pub fn train(args: &Args) -> Result<()> {
-    let (rt, dir) = open_runtime(args)?;
-    let mut params = load_params(&rt, &dir)?;
-    let steps = args.usize_or("steps", 50)? as u64;
-    let seed = args.usize_or("seed", 7)? as u64;
+    // flag/engine compatibility first, so a bad combination is reported
+    // as such instead of as a backend-lowering error (e.g. the ulysses
+    // head-count cap firing for a --sp that a tensor engine ignores)
     let engine_name = args.str_or("engine", "seq").to_string();
-    let m = rt.manifest().clone();
-    let mut corpus = Corpus::new(CorpusConfig::new(m.vocab, m.seq_len, m.batch), seed);
-    let cfg = TrainConfig {
-        steps,
-        warmup: (steps / 10).max(1),
-        peak_lr: args.f64_or("lr", 1e-3)? as f32,
-        log_every: args.usize_or("log-every", 10)? as u64,
-    };
     let threads = args.usize_or("threads", 0)?;
     if threads > 0 && engine_name != "seq" {
         bail!("--threads applies to --engine seq (got --engine {engine_name})");
@@ -409,6 +416,23 @@ pub fn train(args: &Args) -> Result<()> {
             pattern.label()
         );
     }
+    let sp = sp_strategy(args)?;
+    if !sp.is_ring() && engine_name != "seq" {
+        bail!("--sp {} applies to --engine seq (got --engine {engine_name})", sp.label());
+    }
+
+    let (rt, dir) = open_runtime(args)?;
+    let mut params = load_params(&rt, &dir)?;
+    let steps = args.usize_or("steps", 50)? as u64;
+    let seed = args.usize_or("seed", 7)? as u64;
+    let m = rt.manifest().clone();
+    let mut corpus = Corpus::new(CorpusConfig::new(m.vocab, m.seq_len, m.batch), seed);
+    let cfg = TrainConfig {
+        steps,
+        warmup: (steps / 10).max(1),
+        peak_lr: args.f64_or("lr", 1e-3)? as f32,
+        log_every: args.usize_or("log-every", 10)? as u64,
+    };
     let meter = Meter::new();
 
     // ---- 4D mesh execution (DP×PP×SP / DP×PP×TP) --------------------
@@ -427,9 +451,9 @@ pub fn train(args: &Args) -> Result<()> {
         let mesh = Mesh::new(dp, pp, mp, kind)?;
         let micros = args.usize_or("micros", 1)?;
         let runner: Box<dyn MeshStep + '_> = if args.has("mesh-sim") {
-            Box::new(MeshEngine::new(&rt, mesh, micros, meter.clone())?)
+            Box::new(MeshEngine::with_strategy(&rt, mesh, micros, meter.clone(), sp)?)
         } else {
-            Box::new(MeshRunner::new(&rt, mesh, micros, meter.clone())?)
+            Box::new(MeshRunner::with_strategy(&rt, mesh, micros, meter.clone(), sp)?)
         };
         println!(
             "mesh execution: {} ({} coordinates{}), micros={}, pipeline bubble {:.3}",
@@ -443,19 +467,20 @@ pub fn train(args: &Args) -> Result<()> {
         trainer.run(&mut params, || corpus.next_batch(), false)?;
         let s = meter.snapshot();
         println!(
-            "comm totals: ring_p2p={} all_reduce={} all_gather={} broadcast={} scatter={} pipeline={} ({} ops)",
-            s.ring_p2p, s.all_reduce, s.all_gather, s.broadcast, s.scatter, s.pipeline, s.ops
+            "comm totals: ring_p2p={} all_reduce={} all_gather={} all_to_all={} broadcast={} scatter={} pipeline={} ({} ops)",
+            s.ring_p2p, s.all_reduce, s.all_gather, s.all_to_all, s.broadcast, s.scatter, s.pipeline, s.ops
         );
         return Ok(());
     }
 
     match engine_name.as_str() {
         "seq" if threads > 0 => {
-            let e = DistRunner::with_pattern(&rt, meter.clone(), pattern)?;
+            let e = DistRunner::with_strategy(&rt, meter.clone(), pattern, sp)?;
             println!(
-                "threaded execution: {} ranks, one OS thread each, attn {}",
+                "threaded execution: {} ranks, one OS thread each, attn {}, sp {}",
                 e.n,
-                pattern.label()
+                pattern.label(),
+                sp.label()
             );
             let mut trainer = Trainer::new(&e, &params, cfg);
             trainer.run(&mut params, || corpus.next_batch(), false)?;
@@ -464,7 +489,15 @@ pub fn train(args: &Args) -> Result<()> {
             if !pattern.is_dense() {
                 println!("attention pattern: {}", pattern.label());
             }
-            let e = SeqParEngine::with_pattern(&rt, Fabric::new(m.ring, meter.clone()), pattern)?;
+            if !sp.is_ring() {
+                println!("sequence-parallel strategy: {}", sp.label());
+            }
+            let e = SeqParEngine::with_strategy(
+                &rt,
+                Fabric::new(m.ring, meter.clone()),
+                pattern,
+                sp,
+            )?;
             let mut trainer = Trainer::new(&e, &params, cfg);
             trainer.run(&mut params, || corpus.next_batch(), false)?;
         }
@@ -482,8 +515,8 @@ pub fn train(args: &Args) -> Result<()> {
     }
     let s = meter.snapshot();
     println!(
-        "comm totals: ring_p2p={} all_reduce={} all_gather={} broadcast={} scatter={} pipeline={} ({} ops)",
-        s.ring_p2p, s.all_reduce, s.all_gather, s.broadcast, s.scatter, s.pipeline, s.ops
+        "comm totals: ring_p2p={} all_reduce={} all_gather={} all_to_all={} broadcast={} scatter={} pipeline={} ({} ops)",
+        s.ring_p2p, s.all_reduce, s.all_gather, s.all_to_all, s.broadcast, s.scatter, s.pipeline, s.ops
     );
     Ok(())
 }

@@ -51,7 +51,7 @@ use crate::comm::threaded::{mesh as comm_mesh, RingComm};
 use crate::comm::{Collective, CommKind, Fabric, Meter};
 use crate::model::params::ParamStore;
 use crate::parallel::pipeline::{Cell, Schedule};
-use crate::parallel::sequence::{self, LayerStash, StepShape};
+use crate::parallel::sequence::{self, LayerStash, SpStrategy, StepShape};
 use crate::parallel::tensorp::{self, TpLayerStash, TpShape};
 use crate::parallel::topology::{Coord, Mesh, MpKind};
 use crate::parallel::{allreduce_named, Batch};
@@ -111,7 +111,7 @@ struct MeshSpec {
 }
 
 impl MeshSpec {
-    fn new(rt: &Runtime, mesh: Mesh, micros: usize) -> Result<MeshSpec> {
+    fn new(rt: &Runtime, mesh: Mesh, micros: usize, sp: SpStrategy) -> Result<MeshSpec> {
         let m = rt.manifest();
         if micros == 0 {
             bail!("a mesh step needs micros >= 1");
@@ -137,9 +137,16 @@ impl MeshSpec {
                         mesh.mp
                     );
                 }
-                (Some(StepShape::from_manifest_with(m, AttnPattern::Dense)?), None)
+                (Some(StepShape::from_manifest_sp(m, AttnPattern::Dense, sp)?), None)
             }
             MpKind::Tensor => {
+                if !sp.is_ring() {
+                    bail!(
+                        "--sp {} applies to the sequence model axis (this mesh's \
+                         model axis is tensor-parallel)",
+                        sp.label()
+                    );
+                }
                 let tsh = TpShape::from_manifest(m, mesh.mp)?;
                 if mesh.pp > 1 && (m.batch * m.seq_len) % mesh.mp != 0 {
                     bail!(
@@ -624,7 +631,20 @@ pub struct MeshEngine<'rt> {
 
 impl<'rt> MeshEngine<'rt> {
     pub fn new(rt: &'rt Runtime, mesh: Mesh, micros: usize, meter: Arc<Meter>) -> Result<Self> {
-        Ok(MeshEngine { rt, spec: MeshSpec::new(rt, mesh, micros)?, meter })
+        MeshEngine::with_strategy(rt, mesh, micros, meter, SpStrategy::Ring)
+    }
+
+    /// Build the simulation with an explicit SP strategy for the
+    /// sequence model axis (`--sp`; [`SpStrategy::Ulysses`] runs the
+    /// head-shard all-to-alls inside each mp group).
+    pub fn with_strategy(
+        rt: &'rt Runtime,
+        mesh: Mesh,
+        micros: usize,
+        meter: Arc<Meter>,
+        sp: SpStrategy,
+    ) -> Result<Self> {
+        Ok(MeshEngine { rt, spec: MeshSpec::new(rt, mesh, micros, sp)?, meter })
     }
 }
 
@@ -717,8 +737,21 @@ pub struct MeshRunner<'rt> {
 impl<'rt> MeshRunner<'rt> {
     /// Fails up front when the backend cannot cross threads (xla-pjrt).
     pub fn new(rt: &'rt Runtime, mesh: Mesh, micros: usize, meter: Arc<Meter>) -> Result<Self> {
+        MeshRunner::with_strategy(rt, mesh, micros, meter, SpStrategy::Ring)
+    }
+
+    /// Build the runner with an explicit SP strategy for the sequence
+    /// model axis (`--sp`; [`SpStrategy::Ulysses`] runs the head-shard
+    /// all-to-alls as real channel messages inside each mp group).
+    pub fn with_strategy(
+        rt: &'rt Runtime,
+        mesh: Mesh,
+        micros: usize,
+        meter: Arc<Meter>,
+        sp: SpStrategy,
+    ) -> Result<Self> {
         rt.sync_backend()?;
-        Ok(MeshRunner { rt, spec: MeshSpec::new(rt, mesh, micros)?, meter })
+        Ok(MeshRunner { rt, spec: MeshSpec::new(rt, mesh, micros, sp)?, meter })
     }
 }
 
@@ -907,6 +940,55 @@ mod tests {
             out.loss,
             want.loss
         );
+    }
+
+    /// The Ulysses strategy runs under both mesh backends: the unit mesh
+    /// matches the pure threaded runner, and the sequential simulation
+    /// meters the identical all-to-all traffic.
+    #[test]
+    fn unit_mesh_runs_ulysses_strategy() {
+        let rt = Runtime::native(NativeConfig { ring: 2, ulysses: true, ..NativeConfig::tiny() })
+            .unwrap();
+        let params = ParamStore::synthetic(rt.manifest());
+        let b = batches(&rt, 1, 1, 11);
+        let mesh = Mesh::new(1, 1, 2, MpKind::Sequence).unwrap();
+
+        let thr_meter = Meter::new();
+        let runner =
+            MeshRunner::with_strategy(&rt, mesh, 1, thr_meter.clone(), SpStrategy::Ulysses)
+                .unwrap();
+        let out = runner.step(&params, &b).unwrap();
+
+        let dist =
+            DistRunner::with_strategy(&rt, Meter::new(), AttnPattern::Dense, SpStrategy::Ulysses)
+                .unwrap();
+        let want = dist.forward_backward(&params, &b[0][0]).unwrap();
+        assert!(
+            (out.loss - want.loss).abs() < 1e-5,
+            "mesh {} vs dist {}",
+            out.loss,
+            want.loss
+        );
+        assert!(thr_meter.get(CommKind::AllToAll) > 0, "mesh step moved no all-to-all bytes");
+        assert_eq!(thr_meter.get(CommKind::RingP2p), 0, "ulysses mesh rang the ring");
+
+        let sim_meter = Meter::new();
+        let engine =
+            MeshEngine::with_strategy(&rt, mesh, 1, sim_meter.clone(), SpStrategy::Ulysses)
+                .unwrap();
+        let sim = engine.step(&params, &b).unwrap();
+        assert!((sim.loss - out.loss).abs() < 1e-5, "sim {} vs threaded {}", sim.loss, out.loss);
+        assert_eq!(sim_meter.snapshot(), thr_meter.snapshot(), "mesh meters diverged");
+
+        // a tensor-parallel model axis refuses the flag
+        assert!(MeshRunner::with_strategy(
+            &rt,
+            Mesh::new(1, 1, 2, MpKind::Tensor).unwrap(),
+            1,
+            Meter::new(),
+            SpStrategy::Ulysses
+        )
+        .is_err());
     }
 
     #[test]

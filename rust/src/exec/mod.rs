@@ -9,7 +9,8 @@
 //! * [`DistRunner`] spawns **one OS thread per rank**; each thread owns
 //!   its shard of the batch and drives the full per-rank step
 //!   (`qkv → ring score accumulation → ring context → MLP →
-//!   hand-scheduled ring backward`) against its own
+//!   hand-scheduled ring backward`, or the Ulysses all-to-all schedule
+//!   under `--sp ulysses`) against its own
 //!   [`crate::comm::threaded::RingComm`];
 //! * ring exchanges are real P2P messages between concurrently running
 //!   threads, so RSA stages 1–2 (and the backward rings) overlap compute

@@ -8,7 +8,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::comm::threaded::mesh;
 use crate::comm::Meter;
 use crate::model::params::ParamStore;
-use crate::parallel::sequence::{seqpar_step, RankOutput, StepShape};
+use crate::parallel::sequence::{seqpar_step, RankOutput, SpStrategy, StepShape};
 use crate::parallel::{Batch, Engine, StepOutput};
 use crate::runtime::Runtime;
 
@@ -44,8 +44,23 @@ impl<'rt> DistRunner<'rt> {
         meter: Arc<Meter>,
         pattern: crate::attn::AttnPattern,
     ) -> Result<DistRunner<'rt>> {
+        DistRunner::with_strategy(rt, meter, pattern, SpStrategy::Ring)
+    }
+
+    /// Build the runner with an explicit attention pattern AND
+    /// sequence-parallel strategy (`--attn` / `--sp`): under
+    /// [`SpStrategy::Ulysses`] every ring exchange is replaced by the
+    /// all-to-all head-shard transposes, executed as real channel
+    /// messages between the rank threads with the same byte accounting
+    /// as the sequential engine.
+    pub fn with_strategy(
+        rt: &'rt Runtime,
+        meter: Arc<Meter>,
+        pattern: crate::attn::AttnPattern,
+        sp: SpStrategy,
+    ) -> Result<DistRunner<'rt>> {
         rt.sync_backend()?; // threaded execution needs a Send + Sync backend
-        let shape = StepShape::from_manifest_with(rt.manifest(), pattern)?;
+        let shape = StepShape::from_manifest_sp(rt.manifest(), pattern, sp)?;
         let n = shape.n;
         Ok(DistRunner { rt, n, meter, shape })
     }

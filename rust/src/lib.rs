@@ -20,13 +20,17 @@
 //! the Megatron tensor-parallel baseline, GPipe-style pipeline parallelism
 //! and data parallelism (4D).
 //!
-//! Module map (see DESIGN.md for the full inventory):
+//! Module map (docs/ARCHITECTURE.md ties each module to its paper
+//! section and tabulates the pinned communication closed forms):
 //!
 //! * [`tensor`] — host tensors + the SPT1 interchange format
 //! * [`attn`] — executable attention patterns (dense RSA, Linformer,
-//!   blockwise masks with comm-skipping) behind [`attn::AttnPattern`]
-//! * [`comm`] — the collective fabric (ring P2P, all-reduce, …) + meters,
-//!   sequential ([`comm::Fabric`]) and threaded ([`comm::threaded`])
+//!   blockwise masks with comm-skipping) behind [`attn::AttnPattern`],
+//!   plus the Ulysses all-to-all SP strategy
+//!   ([`parallel::sequence::SpStrategy`], `--sp ring|ulysses`)
+//! * [`comm`] — the collective fabric (ring P2P, all-reduce, all-to-all,
+//!   …) + meters, sequential ([`comm::Fabric`]) and threaded
+//!   ([`comm::threaded`])
 //! * [`exec`] — the threaded distributed runners: one OS thread per rank
 //!   over real ring P2P ([`exec::DistRunner`]), and the executable 4D
 //!   mesh — DP×PP×SP and the DP×PP×TP baseline with a real GPipe

@@ -59,13 +59,22 @@ pub const BERT_TINY: ModelConfig = ModelConfig {
     vocab: 1024, max_len: 256, ffn_mult: 4,
 };
 
+/// bert-tiny with its 128 hidden dims split over 4 heads instead of 2 —
+/// the Ulysses all-to-all strategy shards whole heads, so testing it at
+/// ring sizes up to 4 needs `4 | heads` (`--model bert-tiny-z4`).
+pub const BERT_TINY_Z4: ModelConfig = ModelConfig {
+    name: "bert-tiny-z4", layers: 2, hidden: 128, heads: 4, head_dim: 32,
+    vocab: 1024, max_len: 256, ffn_mult: 4,
+};
+
 pub fn by_name(name: &str) -> Result<ModelConfig> {
     Ok(match name {
         "bert-base" => BERT_BASE,
         "bert-large" => BERT_LARGE,
         "bert-small" => BERT_SMALL,
         "bert-tiny" => BERT_TINY,
-        _ => bail!("unknown model {name:?} (have bert-base/large/small/tiny)"),
+        "bert-tiny-z4" => BERT_TINY_Z4,
+        _ => bail!("unknown model {name:?} (have bert-base/large/small/tiny/tiny-z4)"),
     })
 }
 

@@ -5,7 +5,8 @@
 //! 1. [`Schedule`] computes the exact micro-batch timeline (which stage
 //!    runs which microbatch when, bubble fraction) — the timing input for
 //!    the Fig. 4 throughput comparison.
-//! 2. [`boundary_bytes`] accounts the stage-boundary activation traffic,
+//! 2. [`boundary_bytes_megatron`] / [`boundary_bytes_seqpar`] account the
+//!    stage-boundary activation traffic,
 //!    where the paper's observation lives: Megatron must SPLIT the
 //!    activation before sending and ALL-GATHER after (its tensor shards
 //!    all hold the full sequence), while sequence parallelism sends its

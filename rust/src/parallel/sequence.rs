@@ -2,8 +2,11 @@
 //!
 //! The input batch is chunked along the SEQUENCE dimension (`L/N` tokens
 //! per device); every device holds the full parameter set and runs the
-//! whole transformer on its own chunk.  Cross-chunk attention is computed
-//! by Ring Self-Attention (paper §3.1):
+//! whole transformer on its own chunk.  How cross-chunk attention data
+//! moves is the [`SpStrategy`] (`--sp ring|ulysses`): the default is
+//! Ring Self-Attention (paper §3.1); the alternative replaces the ring
+//! rotation with Ulysses-style all-to-alls ([`crate::attn::ulysses`]).
+//! The ring schedule:
 //!
 //! * forward stage 1 — key chunks rotate around the ring N-1 times; each
 //!   device accumulates its score rows `S^n ∈ R^{Lc×L}`;
@@ -13,7 +16,7 @@
 //!   and carrying `dKᵢ` home).  This is the "2 ring-P2P + gradient
 //!   accumulation" schedule of §3.2.2.
 //!
-//! The per-rank step logic ([`seqpar_step`]) is written once against the
+//! The per-rank step logic (`seqpar_step`) is written once against the
 //! [`Collective`] rank-set view and executed two ways:
 //!
 //! * [`SeqParEngine`] drives it over the sequential [`Fabric`] slot view —
@@ -43,6 +46,56 @@ use crate::tensor::{ops, Tensor};
 
 use super::{call1_on, call_on, Batch, Engine, StepOutput};
 
+/// Which sequence-parallel schedule moves the cross-chunk attention data
+/// (`train --sp ring|ulysses`).  Both shard the batch along the sequence
+/// dimension; they differ in HOW a rank sees the tokens it does not own:
+///
+/// * [`SpStrategy::Ring`] — the paper's Ring Self-Attention: K and V
+///   chunks rotate around the ring every layer (and the hand-scheduled
+///   backward rotates them again), so per-layer ring traffic grows with
+///   the ring size (`(2(n−1) + (4n−2))·n` chunk-sends — see
+///   `rust/tests/comm_volume.rs`);
+/// * [`SpStrategy::Ulysses`] — DeepSpeed-Ulysses (Jacobs et al., 2023):
+///   one [`Collective::all_to_all`] re-shards q/k/v from sequence-split
+///   `[B, Z, L/n, A]` to head-split `[B, Z/n, L, A]`, each rank runs
+///   full-sequence dense attention for its own head shard, and a second
+///   all-to-all restores the sequence layout.  8 all-to-alls per layer
+///   (q/k/v/ctx forward, their gradients backward) move `8(n−1)` chunk
+///   equivalents in total — flat in `n` where the ring grows linearly.
+///   Requires `n` to divide the head count (whole heads are sharded,
+///   mirroring Megatron's §4.2 tensor-parallel cap) and composes with
+///   dense attention only.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpStrategy {
+    /// Ring Self-Attention (the paper's §3 schedule) — the default.
+    Ring,
+    /// DeepSpeed-Ulysses head-shard all-to-alls.
+    Ulysses,
+}
+
+impl SpStrategy {
+    /// Parse the CLI surface: `ring | ulysses`.
+    pub fn parse(s: &str) -> Result<SpStrategy> {
+        match s {
+            "ring" => Ok(SpStrategy::Ring),
+            "ulysses" => Ok(SpStrategy::Ulysses),
+            other => bail!("unknown --sp {other:?} (ring | ulysses)"),
+        }
+    }
+
+    /// The CLI spelling of this strategy.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SpStrategy::Ring => "ring",
+            SpStrategy::Ulysses => "ulysses",
+        }
+    }
+
+    pub fn is_ring(&self) -> bool {
+        matches!(self, SpStrategy::Ring)
+    }
+}
+
 /// Run-shape constants + size-suffixed step names + the attention pattern,
 /// derived once from the manifest and shared by every rank (sequential or
 /// threaded).
@@ -56,16 +109,48 @@ pub(crate) struct StepShape {
     pub qkv_step: String,
     /// Which attention the step executes (see [`crate::attn`]).
     pub pattern: AttnPattern,
+    /// How cross-chunk attention data moves (ring rotation vs Ulysses
+    /// all-to-alls); validated against the manifest at construction.
+    pub sp: SpStrategy,
     /// Precomputed reachability/mask plan (Block pattern only); Arc'd so
     /// every rank thread shares the one set of mask tensors.
     pub plan: Option<Arc<BlockPlan>>,
 }
 
 impl StepShape {
-    /// Build the shape for a specific attention pattern, validating that
-    /// the manifest was lowered with the matching kernels registered.
-    pub(crate) fn from_manifest_with(m: &Manifest, pattern: AttnPattern) -> Result<StepShape> {
+    /// Build the shape for a specific attention pattern and SP strategy,
+    /// validating that the manifest was lowered with the matching kernels
+    /// registered (and, for Ulysses, that the ring divides the heads).
+    pub(crate) fn from_manifest_sp(
+        m: &Manifest,
+        pattern: AttnPattern,
+        sp: SpStrategy,
+    ) -> Result<StepShape> {
         let n = m.ring;
+        if sp == SpStrategy::Ulysses {
+            if !pattern.is_dense() {
+                bail!(
+                    "--sp ulysses composes with --attn dense only (got --attn {}); \
+                     the sparse patterns run under the ring strategy",
+                    pattern.label()
+                );
+            }
+            if m.heads % n != 0 {
+                // mirror of the Megatron §4.2 tp-over-heads cap: the
+                // all-to-all shards whole attention heads across the ring
+                bail!(
+                    "ulysses sequence parallelism size {n} must divide the head count {} \
+                     (the all-to-all shards whole attention heads)",
+                    m.heads
+                );
+            }
+            if n > 1 && !m.ulysses {
+                bail!(
+                    "manifest was lowered without the Ulysses head-shard kernels; \
+                     rebuild the backend with --sp ulysses"
+                );
+            }
+        }
         if m.seq_len % n != 0 {
             bail!("seq_len {} not divisible by ring size {n}", m.seq_len);
         }
@@ -101,6 +186,7 @@ impl StepShape {
             to_heads_step: format!("to_heads_b{}", m.batch),
             qkv_step: format!("qkv_proj_b{}", m.batch),
             pattern,
+            sp,
             plan,
         })
     }
@@ -130,6 +216,8 @@ pub(crate) struct RankOutput {
 /// backward, which is what makes the scheme memory-efficient.  Under
 /// pipeline parallelism (`exec::mesh`) each stage holds one of these per
 /// layer per in-flight microbatch — the GPipe activation profile.
+/// Under the Ulysses strategy `q`/`k`/`v` are left EMPTY — the head-shard
+/// copies live in the `AttnStash` instead (one copy either way).
 pub(crate) struct LayerStash {
     pub(crate) x_in: Vec<Tensor>,
     pub(crate) q: Vec<Tensor>,
@@ -197,6 +285,14 @@ pub(crate) fn sp_layer_fwd(
         v.push(vd);
     }
     let (ctx, astash) = attn::forward_on(ex, view, sh, params, &q, &k, &v)?;
+    if !sh.sp.is_ring() {
+        // Ulysses already stashed the head-shard q/k/v inside its
+        // AttnStash (its backward never touches the sequence layout);
+        // keeping both copies would double the dominant activation term.
+        q = Vec::new();
+        k = Vec::new();
+        v = Vec::new();
+    }
     let (wo, bo) = (p_of(&pf("wo"))?, p_of(&pf("bo"))?);
     let (g1, be1) = (p_of(&pf("ln1_g"))?, p_of(&pf("ln1_b"))?);
     let mut pre1 = Vec::new();
@@ -488,12 +584,25 @@ impl<'rt> SeqParEngine<'rt> {
     }
 
     /// Build the engine with a specific attention pattern (`--attn` on
-    /// the CLI); the manifest must have been lowered with the matching
-    /// kernels (linformer_k / block_w).
+    /// the CLI) under the default ring schedule; the manifest must have
+    /// been lowered with the matching kernels (linformer_k / block_w).
     pub fn with_pattern(
         rt: &'rt Runtime,
         fabric: Fabric,
         pattern: AttnPattern,
+    ) -> Result<SeqParEngine<'rt>> {
+        SeqParEngine::with_strategy(rt, fabric, pattern, SpStrategy::Ring)
+    }
+
+    /// Build the engine with an explicit attention pattern AND
+    /// sequence-parallel strategy (`--attn` / `--sp` on the CLI).
+    /// [`SpStrategy::Ulysses`] requires a dense pattern, a manifest
+    /// lowered with the head-shard kernels, and `n | heads`.
+    pub fn with_strategy(
+        rt: &'rt Runtime,
+        fabric: Fabric,
+        pattern: AttnPattern,
+        sp: SpStrategy,
     ) -> Result<SeqParEngine<'rt>> {
         let m = rt.manifest();
         let n = fabric.n;
@@ -503,13 +612,18 @@ impl<'rt> SeqParEngine<'rt> {
                 m.ring
             );
         }
-        let shape = StepShape::from_manifest_with(m, pattern)?;
+        let shape = StepShape::from_manifest_sp(m, pattern, sp)?;
         Ok(SeqParEngine { rt, fabric, n, shape })
     }
 
     /// The attention pattern this engine executes.
     pub fn pattern(&self) -> AttnPattern {
         self.shape.pattern
+    }
+
+    /// The sequence-parallel strategy this engine executes.
+    pub fn strategy(&self) -> SpStrategy {
+        self.shape.sp
     }
 
     /// Public API: dense Ring Self-Attention over pre-chunked q/k/v.

@@ -14,8 +14,8 @@
 //!
 //! Like the sequence engine, the per-rank step logic is written once
 //! against the [`Collective`] rank-set view as per-stage segments
-//! ([`tp_embed_fwd`] → [`tp_layer_fwd`]* → [`tp_heads_fwd_bwd`] →
-//! [`tp_layer_bwd`]* → [`tp_embed_bwd`]) and executed two ways: the
+//! (`tp_embed_fwd` → `tp_layer_fwd`* → `tp_heads_fwd_bwd` →
+//! `tp_layer_bwd`* → `tp_embed_bwd`) and executed two ways: the
 //! sequential [`Fabric`] slot view ([`TensorParEngine`], all ranks on the
 //! calling thread) and the threaded per-rank view (`exec::mesh`, one OS
 //! thread per mesh coordinate, where the segments are additionally split

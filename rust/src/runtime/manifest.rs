@@ -39,6 +39,9 @@ pub struct Manifest {
     /// Blockwise-causal band width in tokens (0 = no masked-softmax
     /// artifacts; optional in the JSON — aot.py predates it).
     pub block_w: usize,
+    /// Whether the Ulysses head-shard attention kernels were lowered
+    /// (`--sp ulysses`; optional in the JSON, defaults to false).
+    pub ulysses: bool,
     pub hidden: usize,
     pub heads: usize,
     pub head_dim: usize,
@@ -146,6 +149,7 @@ impl Manifest {
             tp: num("tp")?,
             linformer_k: num("linformer_k")?,
             block_w: v.get("block_w").and_then(|x| x.as_usize()).unwrap_or(0),
+            ulysses: v.get("ulysses").and_then(|x| x.as_bool()).unwrap_or(false),
             hidden: num("hidden")?,
             heads: num("heads")?,
             head_dim: num("head_dim")?,
@@ -186,8 +190,9 @@ mod tests {
         let m = Manifest::parse(SAMPLE).unwrap();
         assert_eq!(m.model, "bert-tiny");
         assert_eq!(m.ring, 4);
-        // block_w is optional (predates aot.py) and defaults to 0
+        // block_w / ulysses are optional (predate aot.py) with defaults
         assert_eq!(m.block_w, 0);
+        assert!(!m.ulysses);
         let a = &m.artifacts["add__32x128_32x128"];
         assert_eq!(a.inputs.len(), 2);
         assert_eq!(a.inputs[0].dims, vec![32, 128]);

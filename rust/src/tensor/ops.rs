@@ -180,7 +180,7 @@ pub fn scale_assign(dst: &mut Tensor, c: f32) -> Result<()> {
     Ok(())
 }
 
-/// Column-wise sum of a [M, N] tensor -> [N] (bias gradients).
+/// Column-wise sum of a `[M, N]` tensor -> `[N]` (bias gradients).
 pub fn sum_rows(t: &Tensor) -> Result<Tensor> {
     if t.shape.len() != 2 {
         bail!("sum_rows needs rank 2, got {:?}", t.shape);
@@ -206,6 +206,37 @@ pub fn max_abs_diff(a: &Tensor, b: &Tensor) -> Result<f32> {
         .zip(b.f32s()?)
         .map(|(x, y)| (x - y).abs())
         .fold(0.0, f32::max))
+}
+
+/// Split an f32 tensor into `n` equal chunks along dimension `dim` —
+/// the inverse of [`concat_dim`].  This is the transpose step of the
+/// all-to-all collective: each rank cuts its tensor into per-peer pieces
+/// before the exchange ([`crate::comm::Collective::all_to_all`]).
+pub fn chunk_dim(t: &Tensor, dim: usize, n: usize) -> Result<Vec<Tensor>> {
+    let nd = t.shape.len();
+    if dim >= nd {
+        bail!("chunk_dim {dim} out of rank {nd}");
+    }
+    let d = t.shape[dim];
+    if n == 0 || d % n != 0 {
+        bail!("dim {dim} size {d} not divisible into {n} chunks");
+    }
+    let dc = d / n;
+    let outer: usize = t.shape[..dim].iter().product();
+    let inner: usize = t.shape[dim + 1..].iter().product();
+    let src = t.f32s()?;
+    let mut shape = t.shape.clone();
+    shape[dim] = dc;
+    let mut chunks = Vec::with_capacity(n);
+    for c in 0..n {
+        let mut out = Vec::with_capacity(outer * dc * inner);
+        for o in 0..outer {
+            let base = (o * d + c * dc) * inner;
+            out.extend_from_slice(&src[base..base + dc * inner]);
+        }
+        chunks.push(Tensor::from_f32(&shape, out)?);
+    }
+    Ok(chunks)
 }
 
 /// Split a `[B, L, ...]`-shaped tensor into `n` chunks along dim 1.
@@ -296,6 +327,25 @@ mod tests {
         assert_eq!(c[0].i32s().unwrap(), &[0, 1, 4, 5]);
         assert_eq!(c[1].i32s().unwrap(), &[2, 3, 6, 7]);
         assert!(chunk_dim1(&t, 3).is_err());
+    }
+
+    #[test]
+    fn chunk_dim_splits_any_axis_and_inverts_concat() {
+        let t = Tensor::from_f32(&[2, 4, 3], (0..24).map(|i| i as f32).collect()).unwrap();
+        for dim in 0..3 {
+            let n = t.shape[dim];
+            let chunks = chunk_dim(&t, dim, n).unwrap();
+            assert_eq!(chunks.len(), n);
+            let refs: Vec<&Tensor> = chunks.iter().collect();
+            assert_eq!(concat_dim(&refs, dim).unwrap(), t, "dim {dim}");
+        }
+        // middle-axis values land in the right chunk
+        let c = chunk_dim(&t, 1, 2).unwrap();
+        assert_eq!(c[0].shape, vec![2, 2, 3]);
+        assert_eq!(c[1].f32s().unwrap()[0], 6.0); // t[0, 2, 0]
+        assert!(chunk_dim(&t, 3, 2).is_err());
+        assert!(chunk_dim(&t, 1, 3).is_err());
+        assert!(chunk_dim(&t, 1, 0).is_err());
     }
 
     #[test]

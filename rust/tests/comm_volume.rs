@@ -12,7 +12,8 @@ use seqpar::attn::{block::BlockPlan, AttnPattern};
 use seqpar::backend::native::NativeConfig;
 use seqpar::comm::{CommKind, Fabric, Meter};
 use seqpar::model::params::ParamStore;
-use seqpar::parallel::sequence::SeqParEngine;
+use seqpar::model::BERT_TINY_Z4;
+use seqpar::parallel::sequence::{SeqParEngine, SpStrategy};
 use seqpar::parallel::Engine;
 use seqpar::runtime::Runtime;
 use seqpar::train::data::{Corpus, CorpusConfig};
@@ -139,6 +140,53 @@ fn linformer_traffic_is_allreduce_only_and_l_independent() {
     // each metered on the canonical 2(n-1)·C group total
     let expect = 2 * (n - 1) * (4 * proj_bytes * m.layers as u64 + param_bytes);
     assert_eq!(meter.get(CommKind::AllReduce), expect, "linformer all-reduce accounting");
+}
+
+/// Ulysses all-to-all SP: NO ring traffic; the attention communication is
+/// exactly 8 all-to-alls of the local `[B, Z, Lc, A]` chunk per layer
+/// (q/k/v/ctx forward, their gradients backward), each metered on the
+/// `(n-1)·C` group total — `8(n−1)` chunk-sends per layer in total, flat
+/// in the per-hop ring length and strictly below the dense ring schedule.
+#[test]
+fn ulysses_traffic_matches_closed_form() {
+    // bert-tiny has 2 heads; Ulysses at ring 4 needs 4 | Z, so use the
+    // 4-head variant at the same hidden size
+    let cfg = NativeConfig { model: BERT_TINY_Z4, ulysses: true, ..NativeConfig::tiny() }; // ring = 4
+    let rt = Runtime::native(cfg).unwrap();
+    let m = rt.manifest().clone();
+    let params = ParamStore::synthetic(&m);
+    let batch = Corpus::new(CorpusConfig::new(m.vocab, m.seq_len, m.batch), 6)
+        .next_batch()
+        .unwrap();
+
+    let meter = Meter::new();
+    let engine = SeqParEngine::with_strategy(
+        &rt,
+        Fabric::new(m.ring, meter.clone()),
+        AttnPattern::Dense,
+        SpStrategy::Ulysses,
+    )
+    .unwrap();
+    let out = engine.forward_backward(&params, &batch).unwrap();
+
+    assert_eq!(meter.get(CommKind::RingP2p), 0, "ulysses must not ring-rotate K/V");
+    let n = m.ring as u64;
+    let chunk_bytes = (m.batch * m.heads * (m.seq_len / m.ring) * m.head_dim * 4) as u64;
+    let expect = 8 * (n - 1) * chunk_bytes * m.layers as u64;
+    assert_eq!(
+        meter.get(CommKind::AllToAll),
+        expect,
+        "ulysses all-to-all bytes diverged from the 8(n-1)-chunk closed form"
+    );
+    // strictly below the dense ring schedule at the same shape
+    let dense = (2 * (n - 1) + (4 * n - 2)) * n * chunk_bytes * m.layers as u64;
+    assert!(
+        expect < dense,
+        "ulysses volume {expect} not below the dense ring closed form {dense}"
+    );
+    // the parameter-gradient all-reduce is unchanged by the strategy
+    let param_bytes: u64 = out.grads.values.values().map(|t| t.bytes() as u64).sum();
+    assert_eq!(meter.get(CommKind::AllReduce), 2 * (n - 1) * param_bytes);
 }
 
 #[test]

@@ -17,7 +17,8 @@ use seqpar::backend::native::NativeConfig;
 use seqpar::comm::{CommKind, Fabric, Meter};
 use seqpar::exec::DistRunner;
 use seqpar::model::params::ParamStore;
-use seqpar::parallel::sequence::SeqParEngine;
+use seqpar::model::BERT_TINY_Z4;
+use seqpar::parallel::sequence::{SeqParEngine, SpStrategy};
 use seqpar::parallel::tensorp::TensorParEngine;
 use seqpar::parallel::{Batch, Engine, StepOutput};
 use seqpar::runtime::Runtime;
@@ -269,6 +270,176 @@ fn sparse_patterns_threaded_matches_sequential_and_serial() {
             }
         }
     }
+}
+
+/// Ulysses all-to-all SP holds the same three-way equivalence as the
+/// ring: for n ∈ {2, 4} the threaded runner, the sequential simulation,
+/// and the serial single-device engine agree on loss, every gradient and
+/// the hidden chunks; the threaded run is bit-deterministic; sequential
+/// vs threaded meters agree byte-for-byte per collective kind (including
+/// the new all-to-all counter); and the measured all-to-all volume is
+/// exactly the `8(n−1)`-chunk closed form with zero ring traffic.
+#[test]
+fn ulysses_threaded_matches_sequential_and_serial() {
+    // serial reference: single device, plain dense attention — Ulysses
+    // computes identical mathematics (full-sequence softmax per head)
+    let rt1 = Runtime::native(NativeConfig { model: BERT_TINY_Z4, ring: 1, ..NativeConfig::tiny() })
+        .unwrap();
+    let params1 = ParamStore::synthetic(rt1.manifest());
+    let batch = batch_for(&rt1, 29);
+    let serial = TensorParEngine::new(&rt1, Fabric::new(1, Meter::new())).unwrap();
+    let s = serial.forward_backward(&params1, &batch).unwrap();
+
+    for n in [2usize, 4] {
+        let tag = format!("ulysses n={n}");
+        let rt = Runtime::native(NativeConfig {
+            model: BERT_TINY_Z4,
+            ring: n,
+            ulysses: true,
+            ..NativeConfig::tiny()
+        })
+        .unwrap();
+        let m = rt.manifest().clone();
+        let params = ParamStore::synthetic(&m);
+        for (name, t) in &params.values {
+            assert_eq!(t, &params1.values[name], "{tag}: init param {name} differs");
+        }
+
+        let seq_meter = Meter::new();
+        let seq = SeqParEngine::with_strategy(
+            &rt,
+            Fabric::new(n, seq_meter.clone()),
+            AttnPattern::Dense,
+            SpStrategy::Ulysses,
+        )
+        .unwrap();
+        let q = seq.forward_backward(&params, &batch).unwrap();
+
+        let thr_meter = Meter::new();
+        let dist =
+            DistRunner::with_strategy(&rt, thr_meter.clone(), AttnPattern::Dense, SpStrategy::Ulysses)
+                .unwrap();
+        let t = dist.forward_backward(&params, &batch).unwrap();
+
+        // the ring strategy at the same shape computes the same step
+        let ring = SeqParEngine::new(&rt, Fabric::new(n, Meter::new())).unwrap();
+        let r = ring.forward_backward(&params, &batch).unwrap();
+        assert!(
+            (t.loss - r.loss).abs() < TOL,
+            "{tag}: ulysses loss {} vs ring loss {}",
+            t.loss,
+            r.loss
+        );
+        assert_grads_close(&format!("{tag} ulysses vs ring"), &t, &r, TOL);
+
+        assert!(
+            (t.loss - s.loss).abs() < TOL,
+            "{tag}: threaded loss {} vs serial {}",
+            t.loss,
+            s.loss
+        );
+        assert!(
+            (t.loss - q.loss).abs() < TOL,
+            "{tag}: threaded loss {} vs sequential {}",
+            t.loss,
+            q.loss
+        );
+        assert_grads_close(&format!("{tag} threaded vs serial"), &t, &s, TOL);
+        assert_grads_close(&format!("{tag} threaded vs sequential"), &t, &q, TOL);
+
+        // hidden chunks reassemble to the serial hidden states
+        assert_eq!(t.hidden.len(), n);
+        let lc = m.seq_len / n;
+        let chunks3d: Vec<_> = t
+            .hidden
+            .iter()
+            .map(|h| h.clone().reshaped(&[m.batch, lc, m.hidden]).unwrap())
+            .collect();
+        let refs: Vec<_> = chunks3d.iter().collect();
+        let full = ops::concat_dim(&refs, 1)
+            .unwrap()
+            .reshaped(&[m.batch * m.seq_len, m.hidden])
+            .unwrap();
+        let dh = ops::max_abs_diff(&full, &s.hidden[0]).unwrap();
+        assert!(dh < TOL, "{tag}: reassembled hidden vs serial Δ={dh}");
+
+        // bit-determinism across threaded runs
+        let t2 = dist.forward_backward(&params, &batch).unwrap();
+        assert_eq!(t.loss.to_bits(), t2.loss.to_bits(), "{tag}: loss not bit-stable");
+        for (name, g) in &t.grads.values {
+            assert_eq!(g, &t2.grads.values[name], "{tag}: grad {name} not bit-stable");
+        }
+
+        // comm profile: zero ring traffic, all-to-all on the closed form
+        assert_eq!(seq_meter.get(CommKind::RingP2p), 0, "{tag}: ulysses rang the ring");
+        let chunk_bytes = (m.batch * m.heads * lc * m.head_dim * 4) as u64;
+        assert_eq!(
+            seq_meter.get(CommKind::AllToAll),
+            8 * (n as u64 - 1) * chunk_bytes * m.layers as u64,
+            "{tag}: all-to-all bytes diverged from 8(n-1) chunks/layer"
+        );
+        // meter parity, byte-for-byte per collective kind
+        for kind in [
+            CommKind::RingP2p,
+            CommKind::AllReduce,
+            CommKind::AllGather,
+            CommKind::AllToAll,
+            CommKind::Broadcast,
+            CommKind::Pipeline,
+        ] {
+            assert_eq!(
+                seq_meter.get(kind),
+                thr_meter.get(kind),
+                "{tag}: {kind:?} bytes differ (sequential {} vs threaded {})",
+                seq_meter.get(kind),
+                thr_meter.get(kind)
+            );
+        }
+    }
+}
+
+/// The Ulysses head-divisibility cap mirrors the Megatron §4.2 tp-over-
+/// heads check: a ring that cannot shard whole heads is rejected up
+/// front, as are a manifest lowered without the head-shard kernels and a
+/// sparse pattern composed with the all-to-all strategy.
+#[test]
+fn ulysses_rejects_invalid_configs() {
+    // bert-tiny has 2 heads: ring 4 cannot shard whole heads — rejected
+    // at backend build with an error that names the cap
+    let err = Runtime::native(NativeConfig { ulysses: true, ..NativeConfig::tiny() })
+        .err()
+        .expect("ulysses ring=4 over 2 heads must be rejected");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("head count"), "unexpected rejection: {msg}");
+    // a manifest lowered WITHOUT the ulysses kernels is refused at
+    // engine build (sequential and threaded alike)
+    let rt = Runtime::native(NativeConfig { ring: 2, ..NativeConfig::tiny() }).unwrap();
+    assert!(SeqParEngine::with_strategy(
+        &rt,
+        Fabric::new(2, Meter::new()),
+        AttnPattern::Dense,
+        SpStrategy::Ulysses
+    )
+    .is_err());
+    assert!(
+        DistRunner::with_strategy(&rt, Meter::new(), AttnPattern::Dense, SpStrategy::Ulysses)
+            .is_err()
+    );
+    // sparse patterns do not compose with the all-to-all strategy
+    let rt = Runtime::native(NativeConfig {
+        ring: 2,
+        linformer_k: 8,
+        ulysses: true,
+        ..NativeConfig::tiny()
+    })
+    .unwrap();
+    assert!(SeqParEngine::with_strategy(
+        &rt,
+        Fabric::new(2, Meter::new()),
+        AttnPattern::Linformer { k: 8 },
+        SpStrategy::Ulysses
+    )
+    .is_err());
 }
 
 /// The runner refuses gracefully when the manifest ring size does not
