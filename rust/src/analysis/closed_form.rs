@@ -1,0 +1,121 @@
+//! Closed-form communication volumes, derived from the schedule
+//! definitions alone (no execution, no trace).
+//!
+//! These are the paper-§3.2.2-style hand formulas already pinned against
+//! measured meters in `rust/tests/comm_volume.rs` and
+//! `rust/tests/mesh_props.rs`, lifted into one callable place.  The
+//! analyzer's three-way check is: trace-derived bytes == these formulas
+//! == measured runtime meters, per [`CommKind`](crate::comm::CommKind),
+//! exactly.
+
+use crate::attn::block::BlockPlan;
+use crate::attn::AttnPattern;
+use crate::comm::MeterSnapshot;
+use crate::parallel::pipeline::boundary_totals;
+use crate::parallel::sequence::SpStrategy;
+use crate::parallel::topology::{Mesh, MpKind};
+use crate::runtime::Manifest;
+
+/// Total parameter-gradient payload: every manifest parameter, f32.
+pub fn param_bytes(m: &Manifest) -> u64 {
+    m.params.iter().map(|p| p.dims.iter().product::<usize>() as u64 * 4).sum()
+}
+
+/// One rank's K/V (or head-sharded) chunk: `[B, Z, L/n, A]` f32.
+fn chunk_bytes(m: &Manifest, n: usize) -> u64 {
+    (m.batch * m.heads * (m.seq_len / n) * m.head_dim * 4) as u64
+}
+
+/// Attention-schedule bytes for one full `seqpar_step` over `n` ranks
+/// and `layers` layers, EXCLUDING the parameter-gradient all-reduce —
+/// so the mesh form can scale it by micro-batches independently.
+fn sp_attention(m: &Manifest, pattern: AttnPattern, sp: SpStrategy, n: usize, layers: u64) -> MeterSnapshot {
+    let mut s = MeterSnapshot::default();
+    if n <= 1 {
+        return s; // every collective is a no-op at group size 1
+    }
+    let nn = n as u64;
+    let chunk = chunk_bytes(m, n);
+    match (sp, pattern) {
+        (SpStrategy::Ulysses, AttnPattern::Dense) => {
+            // 8 all-to-alls of the local chunk per layer (q/k/v/ctx
+            // forward + their grads backward), each (n-1)·chunk
+            s.all_to_all = 8 * (nn - 1) * chunk * layers;
+        }
+        (_, AttnPattern::Dense) => {
+            // forward: 2(n-1) k/v rotations; backward: (n-1)+n v/dv and
+            // (n-1)+n k/dk rotations — n·chunk group bytes per rotation
+            s.ring_p2p = (2 * (nn - 1) + (4 * nn - 2)) * nn * chunk * layers;
+        }
+        (_, AttnPattern::Block { w }) => {
+            let plan = BlockPlan::new(n, m.seq_len / n, w);
+            s.ring_p2p = plan.chunk_sends_per_layer() * chunk * layers;
+        }
+        (_, AttnPattern::Linformer { k }) => {
+            // 4 all-reduces of the projected [B, Z, k, A] per layer
+            // (K̃/Ṽ forward, their grads backward); no ring traffic
+            let proj = (m.batch * m.heads * k * m.head_dim * 4) as u64;
+            s.all_reduce = 2 * (nn - 1) * 4 * proj * layers;
+        }
+    }
+    s
+}
+
+/// Full `seqpar_step` closed form at group size `m.ring`: attention
+/// schedule + the parameter-gradient all-reduce.
+pub fn sp_step(m: &Manifest, pattern: AttnPattern, sp: SpStrategy) -> MeterSnapshot {
+    let n = m.ring;
+    let mut s = sp_attention(m, pattern, sp, n, m.layers as u64);
+    if n > 1 {
+        s.all_reduce += 2 * (n as u64 - 1) * param_bytes(m);
+    }
+    s
+}
+
+/// Full `tp_step` closed form at group size `t`: 4 all-reduces of the
+/// full `[B·L, H]` activation per layer (attention + FFN partials,
+/// forward and backward); gradients merge host-side — no collective.
+pub fn tp_step(m: &Manifest, t: usize) -> MeterSnapshot {
+    let mut s = MeterSnapshot::default();
+    if t > 1 {
+        let act = (m.batch * m.seq_len * m.hidden * 4) as u64;
+        s.all_reduce = 2 * (t as u64 - 1) * 4 * act * m.layers as u64;
+    }
+    s
+}
+
+/// Full DP×PP×MP mesh step closed form: stage-boundary traffic
+/// (`pipeline::boundary_totals`, per replica) + the model-parallel
+/// schedule per micro-batch per replica + the two gradient reductions
+/// (stage-owned params over the mp group, then every (stage, mp-rank)
+/// slot over the dp group).
+pub fn mesh_step(m: &Manifest, mesh: &Mesh, micros: usize, sp: SpStrategy) -> MeterSnapshot {
+    let (dp, pp, mp) = (mesh.dp as u64, mesh.pp, mesh.mp);
+    let per = boundary_totals(mesh.kind, m.batch, m.seq_len, m.hidden, mp, pp, micros);
+    let mut s = MeterSnapshot {
+        pipeline: per.send * dp,
+        all_gather: per.gather * dp,
+        ..MeterSnapshot::default()
+    };
+    if mesh.kind == MpKind::Tensor && mp > 1 {
+        s.scatter = per.send * dp;
+    }
+    let per_micro = match mesh.kind {
+        MpKind::Sequence => sp_attention(m, AttnPattern::Dense, sp, mp, m.layers as u64),
+        MpKind::Tensor => tp_step(m, mp),
+    };
+    s.ring_p2p += per_micro.ring_p2p * micros as u64 * dp;
+    s.all_to_all += per_micro.all_to_all * micros as u64 * dp;
+    s.all_reduce += per_micro.all_reduce * micros as u64 * dp;
+    // gradient reductions: each pipeline stage owns a disjoint slice of
+    // the parameters, so summing the per-stage reductions over all
+    // stages covers param_bytes exactly once per group
+    let pb = param_bytes(m);
+    if mesh.kind == MpKind::Sequence && mp > 1 {
+        s.all_reduce += 2 * (mp as u64 - 1) * pb * dp;
+    }
+    if dp > 1 {
+        s.all_reduce += 2 * (dp - 1) * pb * mp as u64;
+    }
+    s
+}

@@ -1,0 +1,400 @@
+//! `analysis` — the static collective-schedule verifier.
+//!
+//! Every step program in this repo (the `seqpar_step` ring/Ulysses ×
+//! dense/Linformer/block schedules, the `tp_step` Megatron baseline, and
+//! the full DP×PP×MP mesh step) is ordinary Rust driven through two
+//! traits: [`Executor`](crate::runtime::Executor) for kernels and
+//! [`Collective`](crate::comm::Collective) for communication.  This
+//! module abstract-interprets those SAME programs over two instruments
+//! that move no data:
+//!
+//! * [`ShapeExecutor`] — validates every kernel call against its
+//!   manifest registration and returns zero tensors in the registered
+//!   output shapes (shape/dtype soundness);
+//! * [`TraceCollective`] — a per-rank view that records each collective
+//!   as a [`TraceEvent`] (kind, routing parameters, exact bytes) and
+//!   rewrites only the slot SHAPE (match soundness).
+//!
+//! Three things are then proved statically, before any thread spawns:
+//!
+//! 1. **Match soundness / deadlock freedom** — all ranks of every carved
+//!    sub-communicator issue the identical collective sequence; a
+//!    mismatch yields a rank-by-rank first-divergence diff
+//!    ([`Divergence`]) instead of the runtime hang it would cause.
+//! 2. **Shape/dtype soundness** — a missing or mis-shaped kernel
+//!    registration is an `Err` naming the kernel, not a mid-step panic.
+//! 3. **Derived closed forms** — per-kind byte totals accumulate on a
+//!    meter under the exact runtime metering convention, and must equal
+//!    the hand formulas of [`closed_form`]; callers (the `analyze` CLI,
+//!    `rust/tests/analysis_props.rs`) close the triangle against
+//!    measured runtime meters.
+
+pub mod closed_form;
+pub mod shape_exec;
+pub mod trace;
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::attn::AttnPattern;
+use crate::comm::{CommKind, Meter, MeterSnapshot};
+use crate::exec::mesh::{Link, MeshSpec, Stage};
+use crate::parallel::pipeline::{Cell, Schedule};
+use crate::parallel::sequence::{seqpar_step, SpStrategy, StepShape};
+use crate::parallel::tensorp::{tp_step, TpShape};
+use crate::parallel::topology::{Coord, Mesh};
+use crate::parallel::allreduce_named;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+pub use shape_exec::{shape_batch, shape_params, ShapeExecutor};
+pub use trace::{check_uniform, Divergence, Trace, TraceCollective, TraceEvent};
+
+/// A human-readable name for the attention pattern (report labels).
+pub fn pattern_label(p: AttnPattern) -> String {
+    match p {
+        AttnPattern::Dense => "dense".to_string(),
+        AttnPattern::Linformer { k } => format!("linformer:{k}"),
+        AttnPattern::Block { w } => format!("block:{w}"),
+    }
+}
+
+/// The traces of one carved communicator group, ready for the
+/// uniformity check.
+pub struct TraceGroup {
+    pub name: String,
+    pub traces: Vec<Trace>,
+}
+
+/// Result of one static analysis run: per-group traces, trace-derived
+/// byte totals, and the independent closed-form prediction.
+pub struct Analysis {
+    pub label: String,
+    pub groups: Vec<TraceGroup>,
+    /// Byte totals accumulated by the trace views under the runtime
+    /// metering convention.
+    pub derived: MeterSnapshot,
+    /// The hand formulas of [`closed_form`] for the same config.
+    pub closed: MeterSnapshot,
+    /// Kernel calls validated by the [`ShapeExecutor`].
+    pub kernel_calls: u64,
+}
+
+impl Analysis {
+    /// Match soundness: every group's ranks issue identical schedules.
+    pub fn check_matched(&self) -> Result<(), Box<Divergence>> {
+        for g in &self.groups {
+            check_uniform(&g.name, &g.traces)?;
+        }
+        Ok(())
+    }
+
+    /// Derived-vs-closed-form byte check, per collective kind.
+    pub fn check_closed_forms(&self) -> Result<()> {
+        if !self.derived.same_bytes(&self.closed) {
+            bail!(
+                "{}: trace-derived bytes diverge from the closed forms\n{}",
+                self.label,
+                render_bytes(&self.derived, &self.closed, None)
+            );
+        }
+        Ok(())
+    }
+
+    /// All three static verdicts (shape soundness already held, or this
+    /// `Analysis` would not exist).
+    pub fn verify(&self) -> Result<()> {
+        self.check_matched().map_err(|d| anyhow!("{}: {d}", self.label))?;
+        self.check_closed_forms()
+    }
+
+    /// The full report: per-group trace summary, per-kind byte table
+    /// (with an optional measured column), verdicts.
+    pub fn report(&self, measured: Option<&MeterSnapshot>) -> String {
+        let mut out = format!("static schedule analysis: {}\n", self.label);
+        out.push_str(&format!(
+            "  kernel calls validated against the manifest: {}\n",
+            self.kernel_calls
+        ));
+        for g in &self.groups {
+            let events = g.traces.first().map(|t| t.events.len()).unwrap_or(0);
+            match check_uniform(&g.name, &g.traces) {
+                Ok(()) => out.push_str(&format!(
+                    "  {}: {} rank(s) x {} collective(s) — schedules match\n",
+                    g.name,
+                    g.traces.len(),
+                    events
+                )),
+                Err(d) => {
+                    out.push_str(&format!("  {}: MISMATCH\n", g.name));
+                    for line in d.to_string().lines() {
+                        out.push_str(&format!("    {line}\n"));
+                    }
+                }
+            }
+        }
+        out.push_str(&render_bytes(&self.derived, &self.closed, measured));
+        let verdict = match (self.check_matched().is_ok(), self.check_closed_forms().is_ok()) {
+            (true, true) => "PASS (deadlock-free, shape-sound, closed forms agree)",
+            (false, _) => "FAIL (collective schedules diverge — a real run would deadlock)",
+            (_, false) => "FAIL (trace bytes diverge from the closed forms)",
+        };
+        out.push_str(&format!("  verdict: {verdict}\n"));
+        out
+    }
+}
+
+fn kind_name(k: CommKind) -> &'static str {
+    match k {
+        CommKind::RingP2p => "ring_p2p",
+        CommKind::AllReduce => "all_reduce",
+        CommKind::AllGather => "all_gather",
+        CommKind::AllToAll => "all_to_all",
+        CommKind::Broadcast => "broadcast",
+        CommKind::Scatter => "scatter",
+        CommKind::Pipeline => "pipeline",
+    }
+}
+
+fn render_bytes(
+    derived: &MeterSnapshot,
+    closed: &MeterSnapshot,
+    measured: Option<&MeterSnapshot>,
+) -> String {
+    let mut out = String::from(match measured {
+        Some(_) => "  bytes by kind (derived | closed form | measured):\n",
+        None => "  bytes by kind (derived | closed form):\n",
+    });
+    for ((kind, d), (_, c)) in derived.kind_bytes().into_iter().zip(closed.kind_bytes()) {
+        let mut line = format!("    {:<10} {:>12} | {:>12}", kind_name(kind), d, c);
+        let mut ok = d == c;
+        if let Some(ms) = measured {
+            let m = ms.kind_bytes()[kind_bytes_index(kind)].1;
+            line.push_str(&format!(" | {m:>12}"));
+            ok &= d == m;
+        }
+        line.push_str(if ok { "  ok\n" } else { "  MISMATCH\n" });
+        out.push_str(&line);
+    }
+    out
+}
+
+fn kind_bytes_index(kind: CommKind) -> usize {
+    MeterSnapshot::default()
+        .kind_bytes()
+        .iter()
+        .position(|(k, _)| *k == kind)
+        .unwrap_or(0)
+}
+
+/// Statically analyze one `seqpar_step` (the pure SP engines and the
+/// `DistRunner` run exactly this) at the manifest's ring size.
+pub fn analyze_sp_step(rt: &Runtime, pattern: AttnPattern, sp: SpStrategy) -> Result<Analysis> {
+    let m = rt.manifest();
+    let sh = StepShape::from_manifest_sp(m, pattern, sp)?;
+    let ex = ShapeExecutor::new(m.clone());
+    let params = shape_params(m);
+    let batch = shape_batch(m)?;
+    let meter = Meter::new();
+    let mut traces = Vec::with_capacity(sh.n);
+    for rank in 0..sh.n {
+        let view = TraceCollective::new(sh.n, rank, meter.clone());
+        seqpar_step(&ex, &view, &sh, &params, &batch)
+            .map_err(|e| anyhow!("sp step, rank {rank}: {e}"))?;
+        traces.push(view.into_trace());
+    }
+    Ok(Analysis {
+        label: format!("sp step n={} sp={} attn={}", sh.n, sp.label(), pattern_label(pattern)),
+        groups: vec![TraceGroup { name: "ring group".to_string(), traces }],
+        derived: meter.snapshot(),
+        closed: closed_form::sp_step(m, pattern, sp),
+        kernel_calls: ex.calls(),
+    })
+}
+
+/// Statically analyze one `tp_step` (the tensor-parallel / serial
+/// engine) at TP degree `t`.
+pub fn analyze_tp_step(rt: &Runtime, t: usize) -> Result<Analysis> {
+    let m = rt.manifest();
+    let tsh = TpShape::from_manifest(m, t)?;
+    let ex = ShapeExecutor::new(m.clone());
+    let params = shape_params(m);
+    let batch = shape_batch(m)?;
+    let meter = Meter::new();
+    let mut traces = Vec::with_capacity(t);
+    for rank in 0..t {
+        let view = TraceCollective::new(t, rank, meter.clone());
+        tp_step(&ex, &view, &tsh, &params, &batch)
+            .map_err(|e| anyhow!("tp step, rank {rank}: {e}"))?;
+        traces.push(view.into_trace());
+    }
+    Ok(Analysis {
+        label: format!("tp step t={t}"),
+        groups: vec![TraceGroup { name: "tp group".to_string(), traces }],
+        derived: meter.snapshot(),
+        closed: closed_form::tp_step(m, t),
+        kernel_calls: ex.calls(),
+    })
+}
+
+/// Statically analyze one full mesh step: every coordinate's stage runs
+/// over per-rank trace views, pipeline boundaries over metered local
+/// queues, GPipe cells in global causal order — the union of what
+/// `MeshEngine` and `MeshRunner` execute, with per-group traces.
+pub fn analyze_mesh(rt: &Runtime, mesh: Mesh, micros: usize, sp: SpStrategy) -> Result<Analysis> {
+    let spec = MeshSpec::new(rt, mesh, micros, sp)?;
+    let m = rt.manifest();
+    let ex = ShapeExecutor::new(m.clone());
+    let params = shape_params(m);
+    let batch = shape_batch(m)?;
+    let meter = Meter::new();
+    let (dp, pp, mp) = (mesh.dp, mesh.pp, mesh.mp);
+    let world = mesh.world_size();
+
+    // per-coordinate trace views for the two collective axes, indexed by
+    // global rank (the pp axis communicates through Link queues below)
+    let mut mp_views = Vec::with_capacity(world);
+    let mut dp_views = Vec::with_capacity(world);
+    for rank in 0..world {
+        let c = mesh.coord(rank)?;
+        mp_views.push(TraceCollective::new(mp, c.mp, meter.clone()));
+        dp_views.push(TraceCollective::new(dp, c.dp, meter.clone()));
+    }
+
+    // one boundary-queue pair per (replica, mp rank, stage boundary)
+    let nb = pp.saturating_sub(1);
+    let q_at = |d: usize, i: usize, b: usize| (d * mp + i) * nb + b;
+    let fwd_q: Vec<RefCell<VecDeque<Vec<Tensor>>>> =
+        (0..dp * mp * nb).map(|_| RefCell::new(VecDeque::new())).collect();
+    let bwd_q: Vec<RefCell<VecDeque<Vec<Tensor>>>> =
+        (0..dp * mp * nb).map(|_| RefCell::new(VecDeque::new())).collect();
+
+    let mut stages: Vec<Stage> = Vec::with_capacity(world);
+    for rank in 0..world {
+        let c = mesh.coord(rank)?;
+        stages.push(Stage::new(&spec, &ex, &params, &mp_views[rank], &meter, c.pp)?);
+    }
+
+    // causal execution order across ALL coordinates: cells sorted by
+    // start tick (exactly the MeshEngine order), each cell executed for
+    // every (dp, mp) coordinate of its stage
+    let mut cells: Vec<Cell> = Schedule::gpipe(pp, micros).cells;
+    cells.sort_by_key(|c| (c.start, c.stage));
+    for c in &cells {
+        let s = c.stage;
+        for d in 0..dp {
+            for i in 0..mp {
+                let rank = mesh.rank(Coord { dp: d, pp: s, mp: i });
+                let run = |q: &[RefCell<VecDeque<Vec<Tensor>>>],
+                           st: &mut Stage|
+                 -> Result<()> {
+                    let prev =
+                        (s > 0).then(|| Link::Queue { q: &q[q_at(d, i, s - 1)], meter: &meter });
+                    let next =
+                        (s + 1 < pp).then(|| Link::Queue { q: &q[q_at(d, i, s)], meter: &meter });
+                    if c.forward {
+                        st.forward_micro(c.micro, &batch, prev.as_ref(), next.as_ref())
+                    } else {
+                        st.backward_micro(c.micro, &batch, prev.as_ref(), next.as_ref())
+                    }
+                };
+                run(if c.forward { &fwd_q } else { &bwd_q }, &mut stages[rank]).map_err(|e| {
+                    anyhow!(
+                        "mesh {} coordinate (dp={d}, pp={s}, mp={i}), micro {} {}: {e}",
+                        mesh.label(),
+                        c.micro,
+                        if c.forward { "forward" } else { "backward" }
+                    )
+                })?;
+            }
+        }
+    }
+    // static liveness: every boundary payload must have been consumed
+    for (name, qs) in [("forward", &fwd_q), ("backward", &bwd_q)] {
+        if let Some(idx) = qs.iter().position(|q| !q.borrow().is_empty()) {
+            bail!(
+                "mesh {}: {name} boundary queue {idx} not drained — the schedule \
+                 produced more sends than receives",
+                mesh.label()
+            );
+        }
+    }
+
+    // close out the stages (SP: mp-group grad all-reduce), then the dp
+    // gradient reduction per (stage, mp rank) — mirroring run_coord
+    let mut finished: Vec<Vec<crate::model::params::ParamStore>> = Vec::with_capacity(world);
+    for (rank, st) in stages.into_iter().enumerate() {
+        let c = mesh.coord(rank)?;
+        let (_, _, g) = st
+            .finish(&spec.owned[c.pp])
+            .map_err(|e| anyhow!("mesh {} rank {rank} finish: {e}", mesh.label()))?;
+        finished.push(g);
+    }
+    if dp > 1 {
+        for (rank, g) in finished.iter_mut().enumerate() {
+            let c = mesh.coord(rank)?;
+            allreduce_named(&dp_views[rank], g, &spec.owned[c.pp])
+                .map_err(|e| anyhow!("mesh {} rank {rank} dp reduce: {e}", mesh.label()))?;
+        }
+    }
+
+    // carve the per-group traces: mp groups by (dp, pp), dp groups by
+    // (pp, mp) — the same sub-communicators the threaded runner builds
+    let mp_traces: Vec<Trace> = mp_views.into_iter().map(TraceCollective::into_trace).collect();
+    let dp_traces: Vec<Trace> = dp_views.into_iter().map(TraceCollective::into_trace).collect();
+    let mut groups = Vec::new();
+    let mut mp_by_rank: Vec<Option<Trace>> = mp_traces.into_iter().map(Some).collect();
+    for d in 0..dp {
+        for p in 0..pp {
+            let traces = (0..mp)
+                .map(|i| {
+                    mp_by_rank[mesh.rank(Coord { dp: d, pp: p, mp: i })]
+                        .take()
+                        .ok_or_else(|| anyhow!("mp trace taken twice"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            groups.push(TraceGroup { name: format!("mp group (dp={d}, pp={p})"), traces });
+        }
+    }
+    let mut dp_by_rank: Vec<Option<Trace>> = dp_traces.into_iter().map(Some).collect();
+    for p in 0..pp {
+        for i in 0..mp {
+            let traces = (0..dp)
+                .map(|d| {
+                    dp_by_rank[mesh.rank(Coord { dp: d, pp: p, mp: i })]
+                        .take()
+                        .ok_or_else(|| anyhow!("dp trace taken twice"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            groups.push(TraceGroup { name: format!("dp group (pp={p}, mp={i})"), traces });
+        }
+    }
+
+    Ok(Analysis {
+        label: format!("mesh {} micros={micros} sp={}", mesh.label(), sp.label()),
+        groups,
+        derived: meter.snapshot(),
+        closed: closed_form::mesh_step(m, &mesh, micros, sp),
+        kernel_calls: ex.calls(),
+    })
+}
+
+/// Cheap pre-flight for `train`: run the static analysis and verify.
+/// Returns a one-line summary on success; on any failure the error
+/// carries the COMPLETE static report.
+pub fn preflight(built: Result<Analysis>) -> Result<String> {
+    let a = built.map_err(|e| anyhow!("static schedule analysis rejected this config: {e}"))?;
+    match a.verify() {
+        Ok(()) => Ok(format!(
+            "static analysis ok: {} — {} group(s) matched, {} kernel call(s) shape-checked, \
+             {} comm bytes derived",
+            a.label,
+            a.groups.len(),
+            a.kernel_calls,
+            a.derived.total()
+        )),
+        Err(e) => Err(anyhow!("{}static schedule analysis FAILED: {e}", a.report(None))),
+    }
+}

@@ -1,0 +1,129 @@
+//! The shape instrument: an [`Executor`] that validates and propagates
+//! shapes without computing.
+//!
+//! Every `call` resolves the kernel in the [`Manifest`], runs the SAME
+//! arity/shape/dtype validation as the real backends, and returns
+//! zero-filled outputs in the registered output shapes.  A missing or
+//! mis-shaped registration therefore surfaces as a clean `Err` naming
+//! the kernel — before any thread is spawned or any f32 touched.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{anyhow, Result};
+
+use crate::model::params::ParamStore;
+use crate::parallel::Batch;
+use crate::runtime::{validate_inputs, Executor, Manifest, RuntimeStats};
+use crate::tensor::{DType, Tensor};
+
+/// Shape-only symbolic executor over a manifest snapshot.
+pub struct ShapeExecutor {
+    manifest: Manifest,
+    calls: AtomicU64,
+}
+
+impl ShapeExecutor {
+    pub fn new(manifest: Manifest) -> ShapeExecutor {
+        ShapeExecutor { manifest, calls: AtomicU64::new(0) }
+    }
+
+    /// Kernel calls validated so far.
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+}
+
+impl Executor for ShapeExecutor {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn call(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("{name}: not in manifest (shape analysis)"))?;
+        validate_inputs(name, spec, inputs)?;
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        spec.outputs
+            .iter()
+            .map(|io| match io.dtype {
+                DType::F32 => Ok(Tensor::zeros(&io.dims)),
+                DType::I32 => Tensor::from_i32(&io.dims, vec![0; io.dims.iter().product()]),
+            })
+            .collect()
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        RuntimeStats { compiles: 0, calls: self.calls(), compile_nanos: 0, exec_nanos: 0 }
+    }
+}
+
+/// Zero parameters in the manifest-registered shapes — enough for shape
+/// flow; no seeding, no RNG.
+pub fn shape_params(m: &Manifest) -> ParamStore {
+    let mut store = ParamStore { values: Default::default() };
+    for p in &m.params {
+        store.values.insert(p.name.clone(), Tensor::zeros(&p.dims));
+    }
+    store
+}
+
+/// An all-zeros batch in the run shape `[B, L]` — token values never
+/// matter to shape flow (embedding lookups are never executed).
+pub fn shape_batch(m: &Manifest) -> Result<Batch> {
+    let (b, l) = (m.batch, m.seq_len);
+    Ok(Batch {
+        ids: Tensor::from_i32(&[b, l], vec![0; b * l])?,
+        labels: Tensor::from_i32(&[b, l], vec![0; b * l])?,
+        mask: Tensor::zeros(&[b, l]),
+        sop_labels: Tensor::from_i32(&[b], vec![0; b])?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeConfig;
+    use crate::runtime::Runtime;
+
+    #[test]
+    fn shape_executor_validates_like_the_backend() {
+        let rt = Runtime::native(NativeConfig::tiny()).unwrap();
+        let ex = ShapeExecutor::new(rt.manifest().clone());
+        let err = ex.call("nope__2x2", &[]).unwrap_err().to_string();
+        assert!(err.contains("not in manifest"), "{err}");
+
+        let name = rt.manifest().artifacts.keys().next().unwrap().clone();
+        let err = ex.call(&name, &[]).unwrap_err().to_string();
+        assert!(err.contains("inputs"), "{err}");
+        assert_eq!(ex.calls(), 0, "failed calls are not counted");
+    }
+
+    #[test]
+    fn outputs_take_registered_shapes() {
+        let rt = Runtime::native(NativeConfig::tiny()).unwrap();
+        let ex = ShapeExecutor::new(rt.manifest().clone());
+        let name = rt.manifest().artifacts.keys().next().unwrap().clone();
+        let spec = rt.manifest().artifacts[&name].clone();
+        let inputs: Vec<Tensor> = spec
+            .inputs
+            .iter()
+            .map(|io| match io.dtype {
+                DType::F32 => Tensor::zeros(&io.dims),
+                DType::I32 => {
+                    Tensor::from_i32(&io.dims, vec![0; io.dims.iter().product()]).unwrap()
+                }
+            })
+            .collect();
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let out = ex.call(&name, &refs).unwrap();
+        assert_eq!(out.len(), spec.outputs.len());
+        for (t, io) in out.iter().zip(&spec.outputs) {
+            assert_eq!(t.shape, io.dims);
+            assert_eq!(t.dtype(), io.dtype);
+        }
+        assert_eq!(ex.calls(), 1);
+    }
+}

@@ -1,0 +1,390 @@
+//! The trace instrument: a [`Collective`] that records WHAT a rank's
+//! schedule would send instead of sending it.
+//!
+//! [`TraceCollective`] is a single-rank view (like the threaded
+//! `RingComm`: one slot, one global rank) whose collectives append a
+//! [`TraceEvent`] — kind, routing parameters, exact payload bytes — and
+//! rewrite the slot's SHAPE exactly as the real fabric would (all-gather
+//! concatenates, all-to-all re-shards, a skipped sparse hop leaves the
+//! empty placeholder).  No payload ever moves; the values are whatever
+//! zeros the [`super::ShapeExecutor`] produced.
+//!
+//! Metering mirrors the per-rank convention of `comm::threaded::RingComm`
+//! byte-for-byte: ring P2P is metered at each sender, the formula
+//! collectives once per group call (at rank 0 / the root) on the
+//! canonical group totals.  Abstract-interpreting every rank of a group
+//! therefore lands the SAME per-kind byte totals as either real
+//! execution — that is what makes the derived closed forms comparable to
+//! measured meters exactly (`rust/tests/analysis_props.rs`).
+
+use std::cell::RefCell;
+use std::fmt;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::comm::{Collective, CommKind, Meter};
+use crate::tensor::{ops, Tensor};
+
+/// One collective call as one rank's schedule would issue it: the kind,
+/// every routing parameter that must agree across the group, and the
+/// exact payload size.  Two ranks deadlock-match iff their event
+/// sequences are equal element-wise.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TraceEvent {
+    /// One ring hop: this rank's chunk moves to rank+1.
+    RingShift { bytes: u64 },
+    /// Group all-reduce of a `bytes`-sized tensor.
+    AllReduce { bytes: u64 },
+    /// Group all-gather along `dim` of a `bytes`-sized local chunk.
+    AllGather { dim: usize, bytes: u64 },
+    /// Replication from `root` of a `bytes`-sized tensor.
+    Broadcast { root: usize, bytes: u64 },
+    /// Head-shard transpose of a `bytes`-sized local tensor.
+    AllToAll { split_dim: usize, concat_dim: usize, bytes: u64 },
+    /// Skip-aware ring hop under the shared liveness plan.
+    RingShiftSparse { live: Vec<bool>, bytes: u64 },
+    /// Sparse gradient homing under the shared consumer plan
+    /// (`chunk_bytes` = one contribution's payload).
+    ReduceChunksHome { consumers: Vec<Vec<usize>>, chunk_bytes: u64 },
+}
+
+impl fmt::Display for TraceEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TraceEvent::RingShift { bytes } => write!(f, "ring_shift[{bytes}B]"),
+            TraceEvent::AllReduce { bytes } => write!(f, "all_reduce[{bytes}B]"),
+            TraceEvent::AllGather { dim, bytes } => write!(f, "all_gather(dim={dim})[{bytes}B]"),
+            TraceEvent::Broadcast { root, bytes } => write!(f, "broadcast(root={root})[{bytes}B]"),
+            TraceEvent::AllToAll { split_dim, concat_dim, bytes } => {
+                write!(f, "all_to_all({split_dim}->{concat_dim})[{bytes}B]")
+            }
+            TraceEvent::RingShiftSparse { live, bytes } => {
+                let mask: String =
+                    live.iter().map(|&l| if l { '1' } else { '0' }).collect();
+                write!(f, "ring_shift_sparse(live={mask})[{bytes}B]")
+            }
+            TraceEvent::ReduceChunksHome { consumers, chunk_bytes } => {
+                write!(f, "reduce_chunks_home({consumers:?})[{chunk_bytes}B/chunk]")
+            }
+        }
+    }
+}
+
+/// One rank's recorded collective schedule.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub rank: usize,
+    pub events: Vec<TraceEvent>,
+}
+
+/// First point where the traces of one communicator group disagree —
+/// the static image of the classic mismatched-collective hang.
+#[derive(Debug)]
+pub struct Divergence {
+    /// Which carved group diverged (e.g. "ring", "mp group (dp=0, pp=1)").
+    pub group: String,
+    /// Index of the first non-matching event.
+    pub index: usize,
+    /// What every rank issues at `index` (`None` = its schedule ended).
+    pub per_rank: Vec<(usize, Option<TraceEvent>)>,
+}
+
+impl fmt::Display for Divergence {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "collective schedules diverge in {} at event #{} \
+             (ranks agree on the first {} events):",
+            self.group, self.index, self.index
+        )?;
+        for (rank, ev) in &self.per_rank {
+            match ev {
+                Some(ev) => writeln!(f, "  rank {rank}: {ev}")?,
+                None => writeln!(f, "  rank {rank}: (end of schedule)")?,
+            }
+        }
+        write!(
+            f,
+            "a real run would deadlock here: some ranks enter a collective \
+             the others never issue"
+        )
+    }
+}
+
+impl std::error::Error for Divergence {}
+
+/// Match-soundness check for one communicator group: every rank must
+/// issue the identical collective sequence.  Returns the rank-by-rank
+/// first-divergence diff otherwise.
+pub fn check_uniform(group: &str, traces: &[Trace]) -> Result<(), Box<Divergence>> {
+    let Some(first) = traces.first() else { return Ok(()) };
+    let longest = traces.iter().map(|t| t.events.len()).max().unwrap_or(0);
+    for i in 0..longest {
+        let agree = traces.iter().all(|t| t.events.get(i) == first.events.get(i));
+        if !agree {
+            return Err(Box::new(Divergence {
+                group: group.to_string(),
+                index: i,
+                per_rank: traces
+                    .iter()
+                    .map(|t| (t.rank, t.events.get(i).cloned()))
+                    .collect(),
+            }));
+        }
+    }
+    Ok(())
+}
+
+/// The trace view: executes exactly one global rank of an `n`-rank group,
+/// records every collective, moves no data.
+pub struct TraceCollective {
+    n: usize,
+    rank: usize,
+    meter: Arc<Meter>,
+    events: RefCell<Vec<TraceEvent>>,
+}
+
+impl TraceCollective {
+    pub fn new(n: usize, rank: usize, meter: Arc<Meter>) -> TraceCollective {
+        assert!(rank < n, "trace rank {rank} out of group size {n}");
+        TraceCollective { n, rank, meter, events: RefCell::new(Vec::new()) }
+    }
+
+    /// Consume the view, yielding the recorded schedule.
+    pub fn into_trace(self) -> Trace {
+        Trace { rank: self.rank, events: self.events.into_inner() }
+    }
+
+    /// Append an event directly (tests use this to seed a deliberately
+    /// skewed schedule; the analyzer itself only records through the
+    /// collective calls).
+    pub fn push_event(&self, ev: TraceEvent) {
+        self.events.borrow_mut().push(ev);
+    }
+
+    fn one_slot<'s>(&self, slots: &'s mut [Tensor], op: &str) -> Result<&'s mut Tensor> {
+        if slots.len() != 1 {
+            bail!(
+                "rank {}: {op} on a per-rank trace view needs exactly 1 slot, got {}",
+                self.rank,
+                slots.len()
+            );
+        }
+        Ok(&mut slots[0])
+    }
+}
+
+impl Collective for TraceCollective {
+    fn world(&self) -> usize {
+        self.n
+    }
+
+    fn local_ranks(&self) -> Vec<usize> {
+        vec![self.rank]
+    }
+
+    fn ring_shift(&self, slots: &mut [Tensor]) -> Result<()> {
+        let t = self.one_slot(slots, "ring_shift")?;
+        let bytes = t.bytes() as u64;
+        self.push_event(TraceEvent::RingShift { bytes });
+        if self.n > 1 {
+            // per-send convention: each rank meters its own outgoing chunk
+            self.meter.add(CommKind::RingP2p, bytes);
+        }
+        // the incoming chunk has the sender's shape == ours (SPMD); the
+        // slot already holds a correctly-shaped placeholder
+        Ok(())
+    }
+
+    fn all_reduce_sum(&self, slots: &mut [Tensor]) -> Result<()> {
+        let t = self.one_slot(slots, "all_reduce_sum")?;
+        let c = t.bytes() as u64;
+        self.push_event(TraceEvent::AllReduce { bytes: c });
+        if self.n > 1 && self.rank == 0 {
+            self.meter.add(CommKind::AllReduce, 2 * (self.n as u64 - 1) * c);
+        }
+        Ok(())
+    }
+
+    fn all_gather(&self, slots: &mut [Tensor], dim: usize) -> Result<()> {
+        let t = self.one_slot(slots, "all_gather")?;
+        let c = t.bytes() as u64;
+        self.push_event(TraceEvent::AllGather { dim, bytes: c });
+        if self.n == 1 {
+            return Ok(());
+        }
+        if dim >= t.shape.len() {
+            bail!("rank {}: all_gather dim {dim} out of rank-{} tensor", self.rank, t.shape.len());
+        }
+        // result shape: n same-shaped chunks concatenated along `dim`
+        // (match soundness separately proves the group is symmetric)
+        let gathered: Vec<&Tensor> = (0..self.n).map(|_| &*t).collect();
+        let out = ops::concat_dim(&gathered, dim)?;
+        if self.rank == 0 {
+            self.meter.add(CommKind::AllGather, (self.n as u64 - 1) * self.n as u64 * c);
+        }
+        slots[0] = out;
+        Ok(())
+    }
+
+    fn broadcast(&self, slots: &mut [Tensor], root: usize) -> Result<()> {
+        let t = self.one_slot(slots, "broadcast")?;
+        if root >= self.n {
+            bail!("rank {}: broadcast root {root} out of {}", self.rank, self.n);
+        }
+        let c = t.bytes() as u64;
+        self.push_event(TraceEvent::Broadcast { root, bytes: c });
+        if self.n > 1 && self.rank == root {
+            self.meter.add(CommKind::Broadcast, (self.n as u64 - 1) * c);
+        }
+        Ok(())
+    }
+
+    fn all_to_all(&self, slots: &mut [Tensor], split_dim: usize, concat_dim: usize) -> Result<()> {
+        let t = self.one_slot(slots, "all_to_all")?;
+        let c = t.bytes() as u64;
+        self.push_event(TraceEvent::AllToAll { split_dim, concat_dim, bytes: c });
+        if self.n == 1 {
+            return Ok(());
+        }
+        // re-shard the SHAPE: 1/n along split_dim, ×n along concat_dim
+        // (chunk_dim validates divisibility exactly like the fabrics)
+        let pieces = ops::chunk_dim(t, split_dim, self.n)?;
+        let piece = &pieces[self.rank];
+        let received: Vec<&Tensor> = (0..self.n).map(|_| piece).collect();
+        let out = ops::concat_dim(&received, concat_dim)?;
+        if self.rank == 0 {
+            self.meter.add(CommKind::AllToAll, (self.n as u64 - 1) * c);
+        }
+        slots[0] = out;
+        Ok(())
+    }
+
+    fn ring_shift_sparse(&self, slots: &mut [Tensor], live: &[bool]) -> Result<()> {
+        let t = self.one_slot(slots, "ring_shift_sparse")?;
+        if live.len() != self.n {
+            bail!("rank {}: {} live flags for {} ranks", self.rank, live.len(), self.n);
+        }
+        let bytes = t.bytes() as u64;
+        self.push_event(TraceEvent::RingShiftSparse { live: live.to_vec(), bytes });
+        if self.n == 1 {
+            return Ok(());
+        }
+        if live[self.rank] {
+            self.meter.add(CommKind::RingP2p, bytes);
+        }
+        let prev = (self.rank + self.n - 1) % self.n;
+        if !live[prev] {
+            // dead hop: the fabrics leave an empty placeholder the plan
+            // guarantees is never read — reproduce it so shape flow agrees
+            slots[0] = Tensor::zeros(&[]);
+        }
+        Ok(())
+    }
+
+    fn reduce_chunks_home(
+        &self,
+        mut parts: Vec<Vec<Option<Tensor>>>,
+        consumers: &[Vec<usize>],
+    ) -> Result<Vec<Tensor>> {
+        if parts.len() != 1 {
+            bail!("rank {}: per-rank trace view holds 1 part row, got {}", self.rank, parts.len());
+        }
+        if consumers.len() != self.n {
+            bail!("rank {}: {} consumer lists for {} ranks", self.rank, consumers.len(), self.n);
+        }
+        let mine = parts.pop().unwrap_or_default();
+        if mine.len() != self.n {
+            bail!("rank {}: {} chunk parts for {} ranks", self.rank, mine.len(), self.n);
+        }
+        // the same plan-agreement validation the fabrics run
+        for (src, part) in mine.iter().enumerate() {
+            if part.is_some() != consumers[src].contains(&self.rank) {
+                bail!(
+                    "rank {}: contribution set disagrees with the consumer plan for chunk {src}",
+                    self.rank
+                );
+            }
+        }
+        let chunk_bytes = mine
+            .iter()
+            .flatten()
+            .map(|t| t.bytes() as u64)
+            .max()
+            .unwrap_or(0);
+        self.push_event(TraceEvent::ReduceChunksHome {
+            consumers: consumers.to_vec(),
+            chunk_bytes,
+        });
+        // per-send convention: every off-home contribution is one metered
+        // chunk-send at its producer (= this rank)
+        let mut home_shape: Option<Vec<usize>> = mine
+            .iter()
+            .flatten()
+            .next()
+            .map(|t| t.shape.clone());
+        for (src, part) in mine.into_iter().enumerate() {
+            if let Some(t) = part {
+                if src == self.rank {
+                    home_shape = Some(t.shape.clone());
+                } else {
+                    self.meter.add(CommKind::RingP2p, t.bytes() as u64);
+                }
+            }
+        }
+        if consumers[self.rank].is_empty() {
+            bail!("rank {}: chunk {} has no consumers", self.rank, self.rank);
+        }
+        // every contribution to our home chunk has our chunk's shape
+        let shape = home_shape.ok_or_else(|| {
+            anyhow::anyhow!("rank {}: no contributions to derive the home-chunk shape", self.rank)
+        })?;
+        Ok(vec![Tensor::zeros(&shape)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_traces_pass_and_skew_is_located() {
+        let meter = Meter::new();
+        let mk = |rank: usize| {
+            let v = TraceCollective::new(2, rank, meter.clone());
+            v.push_event(TraceEvent::RingShift { bytes: 64 });
+            v.push_event(TraceEvent::AllReduce { bytes: 128 });
+            v
+        };
+        let a = mk(0);
+        let b = mk(1);
+        assert!(check_uniform("ring", &[a.into_trace(), b.into_trace()]).is_ok());
+
+        let a = mk(0);
+        let b = mk(1);
+        b.push_event(TraceEvent::AllReduce { bytes: 4 }); // the skew
+        let d = check_uniform("ring", &[a.into_trace(), b.into_trace()]).unwrap_err();
+        assert_eq!(d.index, 2);
+        assert!(d.per_rank[0].1.is_none(), "rank 0 ended");
+        assert_eq!(d.per_rank[1].1, Some(TraceEvent::AllReduce { bytes: 4 }));
+        let text = d.to_string();
+        assert!(text.contains("rank 0: (end of schedule)"), "{text}");
+        assert!(text.contains("rank 1: all_reduce[4B]"), "{text}");
+    }
+
+    #[test]
+    fn all_to_all_reshapes_without_moving_bytes() {
+        let meter = Meter::new();
+        let v = TraceCollective::new(4, 1, meter.clone());
+        let mut slots = vec![Tensor::zeros(&[2, 4, 8, 16])];
+        v.all_to_all(&mut slots, 1, 2).unwrap();
+        assert_eq!(slots[0].shape, vec![2, 1, 32, 16]);
+        // metered at rank 0 only
+        assert_eq!(meter.get(CommKind::AllToAll), 0);
+        let v0 = TraceCollective::new(4, 0, meter.clone());
+        let mut slots = vec![Tensor::zeros(&[2, 4, 8, 16])];
+        v0.all_to_all(&mut slots, 1, 2).unwrap();
+        assert_eq!(meter.get(CommKind::AllToAll), 3 * 2 * 4 * 8 * 16 * 4);
+    }
+}

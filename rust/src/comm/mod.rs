@@ -145,6 +145,28 @@ impl MeterSnapshot {
             + self.scatter
             + self.pipeline
     }
+
+    /// Per-kind byte totals in a fixed order, for rendering and for
+    /// byte-level comparison.  `ops` is deliberately excluded: the
+    /// sequential `Fabric` meters one group-total add where the threaded
+    /// `RingComm` meters per-rank adds, so op COUNTS differ between the
+    /// fabrics even though every byte total agrees.
+    pub fn kind_bytes(&self) -> [(CommKind, u64); 7] {
+        [
+            (CommKind::RingP2p, self.ring_p2p),
+            (CommKind::AllReduce, self.all_reduce),
+            (CommKind::AllGather, self.all_gather),
+            (CommKind::AllToAll, self.all_to_all),
+            (CommKind::Broadcast, self.broadcast),
+            (CommKind::Scatter, self.scatter),
+            (CommKind::Pipeline, self.pipeline),
+        ]
+    }
+
+    /// Byte-exact equality per collective kind, ignoring op counts.
+    pub fn same_bytes(&self, other: &MeterSnapshot) -> bool {
+        self.kind_bytes() == other.kind_bytes()
+    }
 }
 
 /// A rank-set view of the collective fabric — the abstraction the

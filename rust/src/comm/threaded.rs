@@ -42,31 +42,26 @@ pub struct RingComm {
 
 /// Build the full mesh for `n` ranks.
 pub fn mesh(n: usize, meter: Arc<Meter>) -> Vec<RingComm> {
-    // channels[i][j] carries i -> j
-    let mut senders: Vec<Vec<Option<Sender<Tensor>>>> = (0..n)
-        .map(|_| (0..n).map(|_| None).collect())
-        .collect();
-    let mut receivers: Vec<Vec<Option<Receiver<Tensor>>>> = (0..n)
-        .map(|_| (0..n).map(|_| None).collect())
-        .collect();
+    // channels[i][j] carries i -> j; both matrices are filled in strict
+    // construction order, so the layout holds without placeholder Options:
+    // tx[i][j] is pushed on iteration (i, j), and rx[j] gains its source-i
+    // receiver on the same iteration — ascending i for every j.
+    let mut senders: Vec<Vec<Sender<Tensor>>> = (0..n).map(|_| Vec::with_capacity(n)).collect();
+    let mut receivers: Vec<Vec<Receiver<Tensor>>> =
+        (0..n).map(|_| Vec::with_capacity(n)).collect();
     for i in 0..n {
         for j in 0..n {
             let (tx, rx) = channel();
-            senders[i][j] = Some(tx);
-            receivers[j][i] = Some(rx); // at j, indexed by source i
+            senders[i].push(tx);
+            receivers[j].push(rx); // at j, indexed by source i
         }
     }
-    let mut comms = Vec::with_capacity(n);
-    for (rank, (srow, rrow)) in senders.drain(..).zip(receivers.drain(..)).enumerate() {
-        comms.push(RingComm {
-            rank,
-            n,
-            meter: meter.clone(),
-            tx: srow.into_iter().map(Option::unwrap).collect(),
-            rx: rrow.into_iter().map(Option::unwrap).collect(),
-        });
-    }
-    comms
+    senders
+        .into_iter()
+        .zip(receivers)
+        .enumerate()
+        .map(|(rank, (tx, rx))| RingComm { rank, n, meter: meter.clone(), tx, rx })
+        .collect()
 }
 
 impl RingComm {
@@ -200,7 +195,9 @@ impl RingComm {
             if dst == self.rank {
                 continue;
             }
-            let t = pieces[dst].take().expect("chunk_dim yields n pieces");
+            let t = pieces[dst]
+                .take()
+                .ok_or_else(|| anyhow!("rank {}: all_to_all split lost piece {dst}", self.rank))?;
             self.tx[dst]
                 .send(t)
                 .map_err(|_| anyhow!("rank {}: all_to_all peer {dst} hung up", self.rank))?;
@@ -362,7 +359,9 @@ impl Collective for RingComm {
         if consumers.len() != self.n {
             bail!("rank {}: {} consumer lists for {} ranks", self.rank, consumers.len(), self.n);
         }
-        let mut mine = parts.pop().unwrap();
+        let mut mine = parts
+            .pop()
+            .ok_or_else(|| anyhow!("rank {}: reduce_chunks_home lost its part row", self.rank))?;
         if mine.len() != self.n {
             bail!("rank {}: {} chunk parts for {} ranks", self.rank, mine.len(), self.n);
         }

@@ -1,12 +1,13 @@
 //! CLI subcommand implementations.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Result};
 
+use crate::analysis::{self, Analysis, TraceEvent};
 use crate::attn::AttnPattern;
 use crate::backend::native::NativeConfig;
-use crate::comm::{Fabric, Meter};
+use crate::comm::{Fabric, Meter, MeterSnapshot};
 use crate::exec::{DistRunner, MeshEngine, MeshRunner, MeshStep};
 use crate::parallel::pipeline::Schedule;
 use crate::parallel::sequence::{SeqParEngine, SpStrategy};
@@ -30,6 +31,16 @@ COMMANDS:
   info      print manifest + runtime summary
   verify    check RSA == serial == tensor-parallel (and goldens, if any)
   train     train with --engine seq|tensor|serial (Fig. 6 convergence)
+  analyze   statically verify the collective schedule: abstract-interpret
+            the step program over symbolic comm traces + a shape-only
+            executor, prove deadlock-freedom (all ranks issue identical
+            collective sequences), lint every kernel call against the
+            manifest, and cross-check trace-derived byte totals against
+            the closed forms AND a measured one-step runtime meter.
+            Takes the train flags (--engine/--attn/--sp/--mesh/--micros).
+            --grid sweeps the whole equivalence-grid config matrix;
+            --skew R injects a divergent collective on rank R to
+            demonstrate the rank-by-rank divergence report
   sweep     regenerate a paper figure/table via the cluster simulator
   help      this text
 
@@ -223,7 +234,7 @@ pub fn info(args: &Args) -> Result<()> {
 }
 
 /// Load the golden batch exported by aot.py (artifact-backed runs only).
-pub fn golden_batch(rt: &Runtime, dir: &PathBuf) -> Result<Batch> {
+pub fn golden_batch(rt: &Runtime, dir: &Path) -> Result<Batch> {
     let g = |name: &str| -> Result<_> {
         let rel = rt
             .manifest()
@@ -326,7 +337,7 @@ fn verify_cross_engine(
 /// Golden comparison against the python-exported chain outputs (only
 /// available when an artifact directory supplied the goldens).  Reuses
 /// the seq-par step output the caller already computed.
-fn verify_goldens(rt: &Runtime, dir: &PathBuf, out: &crate::parallel::StepOutput) -> Result<()> {
+fn verify_goldens(rt: &Runtime, dir: &Path, out: &crate::parallel::StepOutput) -> Result<()> {
     let m = rt.manifest().clone();
     let tol = 2e-3f32;
     let n = m.ring;
@@ -450,6 +461,9 @@ pub fn train(args: &Args) -> Result<()> {
         };
         let mesh = Mesh::new(dp, pp, mp, kind)?;
         let micros = args.usize_or("micros", 1)?;
+        // static pre-flight: a bad combination gets the analyzer's report
+        // (schedule + shapes + closed forms) instead of a runtime error
+        println!("{}", analysis::preflight(analysis::analyze_mesh(&rt, mesh, micros, sp))?);
         let runner: Box<dyn MeshStep + '_> = if args.has("mesh-sim") {
             Box::new(MeshEngine::with_strategy(&rt, mesh, micros, meter.clone(), sp)?)
         } else {
@@ -471,6 +485,18 @@ pub fn train(args: &Args) -> Result<()> {
             s.ring_p2p, s.all_reduce, s.all_gather, s.all_to_all, s.broadcast, s.scatter, s.pipeline, s.ops
         );
         return Ok(());
+    }
+
+    // static pre-flight for the single-axis engines (same verifier the
+    // `analyze` subcommand runs; serial has no collectives to check)
+    match engine_name.as_str() {
+        "seq" => {
+            println!("{}", analysis::preflight(analysis::analyze_sp_step(&rt, pattern, sp))?);
+        }
+        "tensor" => {
+            println!("{}", analysis::preflight(analysis::analyze_tp_step(&rt, m.tp))?);
+        }
+        _ => {}
     }
 
     match engine_name.as_str() {
@@ -523,4 +549,259 @@ pub fn train(args: &Args) -> Result<()> {
 
 pub fn sweep(args: &Args) -> Result<()> {
     crate::eval::sweep::run(args)
+}
+
+// ------------------------------------------------------------------------
+// analyze — the static collective-schedule verifier (crate::analysis)
+// ------------------------------------------------------------------------
+
+/// Which step program a flag set selects — shared by the single-config
+/// report, the measured cross-check leg, and the train pre-flight.
+enum AnalyzeMode {
+    Sp(AttnPattern, SpStrategy),
+    Tp(usize),
+    Mesh(Mesh, usize, SpStrategy),
+}
+
+fn analyze_mode(args: &Args, rt: &Runtime) -> Result<AnalyzeMode> {
+    let engine_name = args.str_or("engine", "seq");
+    let pattern = attn_pattern(args)?;
+    let sp = sp_strategy(args)?;
+    if let Some((dp, pp, mp)) = args.triple_opt("mesh")? {
+        let kind = match engine_name {
+            "seq" => MpKind::Sequence,
+            "tensor" => MpKind::Tensor,
+            other => bail!("--mesh needs --engine seq or tensor (got --engine {other})"),
+        };
+        return Ok(AnalyzeMode::Mesh(
+            Mesh::new(dp, pp, mp, kind)?,
+            args.usize_or("micros", 1)?,
+            sp,
+        ));
+    }
+    Ok(match engine_name {
+        "seq" => AnalyzeMode::Sp(pattern, sp),
+        "tensor" => AnalyzeMode::Tp(rt.manifest().tp),
+        "serial" => AnalyzeMode::Tp(1),
+        other => bail!("unknown --engine {other:?} (seq|tensor|serial)"),
+    })
+}
+
+fn build_analysis(rt: &Runtime, mode: &AnalyzeMode) -> Result<Analysis> {
+    match mode {
+        AnalyzeMode::Sp(pattern, sp) => analysis::analyze_sp_step(rt, *pattern, *sp),
+        AnalyzeMode::Tp(t) => analysis::analyze_tp_step(rt, *t),
+        AnalyzeMode::Mesh(mesh, micros, sp) => analysis::analyze_mesh(rt, *mesh, *micros, *sp),
+    }
+}
+
+/// The measured leg of the three-way check: run the REAL engine for one
+/// step on a fresh meter and return its per-kind byte totals.
+fn measured_step(rt: &Runtime, mode: &AnalyzeMode, seed: u64) -> Result<MeterSnapshot> {
+    let m = rt.manifest().clone();
+    let params = ParamStore::synthetic(&m);
+    let mut corpus = Corpus::new(CorpusConfig::new(m.vocab, m.seq_len, m.batch), seed);
+    let meter = Meter::new();
+    match mode {
+        AnalyzeMode::Sp(pattern, sp) => {
+            let e =
+                SeqParEngine::with_strategy(rt, Fabric::new(m.ring, meter.clone()), *pattern, *sp)?;
+            e.forward_backward(&params, &corpus.next_batch()?)?;
+        }
+        AnalyzeMode::Tp(t) => {
+            let e = TensorParEngine::new(rt, Fabric::new(*t, meter.clone()))?;
+            e.forward_backward(&params, &corpus.next_batch()?)?;
+        }
+        AnalyzeMode::Mesh(mesh, micros, sp) => {
+            let e = MeshEngine::with_strategy(rt, *mesh, *micros, meter.clone(), *sp)?;
+            let mut batches: Vec<Vec<Batch>> = Vec::with_capacity(mesh.dp);
+            for _ in 0..mesh.dp {
+                let mut row = Vec::with_capacity(*micros);
+                for _ in 0..*micros {
+                    row.push(corpus.next_batch()?);
+                }
+                batches.push(row);
+            }
+            e.step(&params, &batches)?;
+        }
+    }
+    Ok(meter.snapshot())
+}
+
+pub fn analyze(args: &Args) -> Result<()> {
+    if args.has("grid") {
+        return analyze_grid();
+    }
+    let (rt, _dir) = open_runtime(args)?;
+    let mode = analyze_mode(args, &rt)?;
+    let mut a = match build_analysis(&rt, &mode) {
+        Ok(a) => a,
+        Err(e) => {
+            println!("REJECT (static): {e:#}");
+            return Err(e);
+        }
+    };
+    if let Some(r) = args.usize_opt("skew")? {
+        // deliberately corrupt rank r's schedule so the divergence diff
+        // can be inspected (the negative test is analysis_props.rs)
+        let g = a
+            .groups
+            .first_mut()
+            .ok_or_else(|| anyhow::anyhow!("no trace groups to skew"))?;
+        let t = g.traces.get_mut(r).ok_or_else(|| {
+            anyhow::anyhow!("--skew {r}: group {:?} has only {} ranks", g.name, g.traces.len())
+        })?;
+        t.events.push(TraceEvent::AllReduce { bytes: 4 });
+        print!("{}", a.report(None));
+        bail!("--skew {r}: injected divergent collective was statically detected (as intended)");
+    }
+    let measured = measured_step(&rt, &mode, args.usize_or("seed", 7)? as u64)?;
+    print!("{}", a.report(Some(&measured)));
+    a.verify()?;
+    if !a.derived.same_bytes(&measured) {
+        bail!("analyzer-derived bytes diverge from the measured runtime meter");
+    }
+    println!("ANALYZE OK");
+    Ok(())
+}
+
+/// One grid row end to end: build, statically verify, cross-check the
+/// derived bytes against a measured one-step meter.
+fn grid_row_outcome(row: &GridRow) -> Result<()> {
+    let rt = row.rt.as_ref().map_err(|e| anyhow::anyhow!("{e:#}"))?;
+    let a = build_analysis(rt, &row.mode)?;
+    a.verify()?;
+    let measured = measured_step(rt, &row.mode, 7)?;
+    if !a.derived.same_bytes(&measured) {
+        bail!(
+            "derived bytes diverge from the measured meter\n{}",
+            a.report(Some(&measured))
+        );
+    }
+    Ok(())
+}
+
+/// One row of the `analyze --grid` sweep.
+struct GridRow {
+    name: String,
+    /// The static analyzer is EXPECTED to reject this combination — the
+    /// grid asserts it does (and fails if it passes instead).
+    expect_reject: bool,
+    rt: Result<Runtime>,
+    mode: AnalyzeMode,
+}
+
+/// Sweep the equivalence-grid config matrix — the CI lint step.  Every
+/// valid combination must pass all three static checks AND match a
+/// measured one-step meter; every invalid combination must be rejected
+/// statically (not by a runtime panic).
+fn analyze_grid() -> Result<()> {
+    // one run shape for the whole grid: bert-tiny-z4 (4 heads) keeps
+    // every mp in {1,2,4} compatible with both SP strategies and TP
+    let cfg = |ring: usize, tp: usize, pattern: AttnPattern, ulysses: bool| -> Result<Runtime> {
+        let (linformer_k, block_w) = pattern.native_knobs();
+        Runtime::native(NativeConfig {
+            model: crate::model::by_name("bert-tiny-z4")?,
+            batch: 2,
+            seq_len: 32,
+            ring,
+            tp,
+            linformer_k,
+            block_w,
+            ulysses,
+            seed: 0,
+        })
+    };
+    let strategies = [SpStrategy::Ring, SpStrategy::Ulysses];
+    let patterns = [AttnPattern::Dense, AttnPattern::Linformer { k: 8 }, AttnPattern::Block { w: 8 }];
+    let mut rows: Vec<GridRow> = Vec::new();
+
+    // pure SP steps at ring 4 (what DistRunner / SeqParEngine execute)
+    for sp in strategies {
+        for pattern in patterns {
+            rows.push(GridRow {
+                name: format!("step ring=4 sp={} attn={}", sp.label(), analysis::pattern_label(pattern)),
+                // ulysses re-shards whole heads and needs dense attention
+                expect_reject: !sp.is_ring() && pattern != AttnPattern::Dense,
+                rt: cfg(4, 1, pattern, !sp.is_ring()),
+                mode: AnalyzeMode::Sp(pattern, sp),
+            });
+        }
+    }
+    // the Megatron TP baseline step
+    rows.push(GridRow {
+        name: "step tp=2".to_string(),
+        expect_reject: false,
+        rt: cfg(1, 2, AttnPattern::Dense, false),
+        mode: AnalyzeMode::Tp(2),
+    });
+    // full mesh steps: every factorization of world=4 plus 2x2x2
+    let meshes = [(1, 1, 4), (2, 1, 2), (1, 2, 2), (2, 2, 2)];
+    for sp in strategies {
+        for pattern in patterns {
+            for (dp, pp, mp) in meshes {
+                for kind in [MpKind::Sequence, MpKind::Tensor] {
+                    let mesh = Mesh::new(dp, pp, mp, kind)?;
+                    // same lowering rule the train path uses: ring=mp for a
+                    // sequence model axis, tp=mp for a tensor one
+                    let (linformer_k, block_w) = pattern.native_knobs();
+                    let nc = NativeConfig {
+                        model: crate::model::by_name("bert-tiny-z4")?,
+                        batch: 2,
+                        seq_len: 32,
+                        ring: 4,
+                        tp: 2,
+                        linformer_k,
+                        block_w,
+                        ulysses: !sp.is_ring(),
+                        seed: 0,
+                    }
+                    .for_mesh(&mesh);
+                    let kl = if kind == MpKind::Sequence { "sp" } else { "tp" };
+                    rows.push(GridRow {
+                        name: format!(
+                            "mesh {dp}x{pp}x{mp}-{kl} micros=2 sp={} attn={}",
+                            sp.label(),
+                            analysis::pattern_label(pattern)
+                        ),
+                        // linformer adds stage-ownerless projection params;
+                        // a tensor model axis has no SP strategy to vary
+                        expect_reject: linformer_k != 0
+                            || (kind == MpKind::Tensor && !sp.is_ring()),
+                        rt: Runtime::native(nc),
+                        mode: AnalyzeMode::Mesh(mesh, 2, sp),
+                    });
+                }
+            }
+        }
+    }
+
+    let mut failures = 0usize;
+    let (mut passed, mut rejected) = (0usize, 0usize);
+    for row in rows {
+        match (grid_row_outcome(&row), row.expect_reject) {
+            (Ok(()), false) => {
+                passed += 1;
+                println!("PASS    {}", row.name);
+            }
+            (Err(e), true) => {
+                rejected += 1;
+                println!("REJECT  {} (static): {e:#}", row.name);
+            }
+            (Ok(()), true) => {
+                failures += 1;
+                println!("FAIL    {} — expected a static rejection, got a pass", row.name);
+            }
+            (Err(e), false) => {
+                failures += 1;
+                println!("FAIL    {} — {e:#}", row.name);
+            }
+        }
+    }
+    println!("grid: {passed} passed, {rejected} statically rejected (expected), {failures} failed");
+    if failures > 0 {
+        bail!("{failures} grid config(s) failed static analysis");
+    }
+    println!("ANALYZE GRID OK");
+    Ok(())
 }

@@ -98,20 +98,22 @@ fn stage_of(name: &str, layers_per_stage: usize, stages: usize) -> Option<usize>
     (s < stages).then_some(s)
 }
 
-/// Validated run-shape for a mesh execution, shared by both backends.
-struct MeshSpec {
-    mesh: Mesh,
-    micros: usize,
+/// Validated run-shape for a mesh execution, shared by both backends
+/// (and by the static analyzer, which abstract-interprets the same
+/// stages over trace views — `crate::analysis`).
+pub(crate) struct MeshSpec {
+    pub(crate) mesh: Mesh,
+    pub(crate) micros: usize,
     layers_per_stage: usize,
     sp: Option<StepShape>,
     tp: Option<TpShape>,
     /// Sorted parameter names owned by each pipeline stage — a disjoint
     /// cover of the manifest inventory (validated at construction).
-    owned: Vec<Vec<String>>,
+    pub(crate) owned: Vec<Vec<String>>,
 }
 
 impl MeshSpec {
-    fn new(rt: &Runtime, mesh: Mesh, micros: usize, sp: SpStrategy) -> Result<MeshSpec> {
+    pub(crate) fn new(rt: &Runtime, mesh: Mesh, micros: usize, sp: SpStrategy) -> Result<MeshSpec> {
         let m = rt.manifest();
         if micros == 0 {
             bail!("a mesh step needs micros >= 1");
@@ -214,7 +216,7 @@ impl MeshSpec {
 /// local queue (sequential simulation) or the direct channel edges of the
 /// pp-column communicator (threaded).  Every part sent is metered as
 /// [`CommKind::Pipeline`], so the two executions agree byte-for-byte.
-enum Link<'a> {
+pub(crate) enum Link<'a> {
     Queue { q: &'a RefCell<VecDeque<Vec<Tensor>>>, meter: &'a Meter },
     Comm { comm: &'a RingComm, peer: usize },
 }
@@ -255,7 +257,7 @@ fn need<'l, 'a>(link: Option<&'l Link<'a>>, what: &str) -> Result<&'l Link<'a>> 
 
 /// A sequence-parallel pipeline stage: layers `[lo, hi)` over the mp-ring
 /// view, with per-microbatch activation stashes.
-struct SpStage<'a> {
+pub(crate) struct SpStage<'a> {
     ex: &'a dyn Executor,
     sh: &'a StepShape,
     params: &'a ParamStore,
@@ -347,7 +349,7 @@ impl<'a> SpStage<'a> {
 /// A tensor-parallel pipeline stage (the Megatron baseline): every rank
 /// holds the full sequence (one replicated activation per view);
 /// boundaries pay scatter + send + all-gather.
-struct TpStage<'a> {
+pub(crate) struct TpStage<'a> {
     ex: &'a dyn Executor,
     tsh: &'a TpShape,
     params: &'a ParamStore,
@@ -464,30 +466,32 @@ impl<'a> TpStage<'a> {
 }
 
 /// One pipeline stage of one replica, either kind.
-enum Stage<'a> {
+pub(crate) enum Stage<'a> {
     Sp(SpStage<'a>),
     Tp(TpStage<'a>),
 }
 
 impl<'a> Stage<'a> {
-    fn new(
+    pub(crate) fn new(
         spec: &'a MeshSpec,
         ex: &'a dyn Executor,
         params: &'a ParamStore,
         view: &'a dyn Collective,
         meter: &'a Meter,
         s: usize,
-    ) -> Stage<'a> {
+    ) -> Result<Stage<'a>> {
         let lo = s * spec.layers_per_stage;
         let hi = lo + spec.layers_per_stage;
         let first = s == 0;
         let last = s + 1 == spec.mesh.pp;
         let ln = view.local_ranks().len();
         let grads: Vec<ParamStore> = (0..ln).map(|_| spec.stage_zeros(params, s)).collect();
-        match spec.mesh.kind {
+        Ok(match spec.mesh.kind {
             MpKind::Sequence => Stage::Sp(SpStage {
                 ex,
-                sh: spec.sp.as_ref().expect("SP mesh has a StepShape"),
+                sh: spec.sp.as_ref().ok_or_else(|| {
+                    anyhow!("stage {s}: sequence-kind mesh spec lost its StepShape")
+                })?,
                 params,
                 view,
                 lo,
@@ -502,7 +506,9 @@ impl<'a> Stage<'a> {
             }),
             MpKind::Tensor => Stage::Tp(TpStage {
                 ex,
-                tsh: spec.tp.as_ref().expect("TP mesh has a TpShape"),
+                tsh: spec.tp.as_ref().ok_or_else(|| {
+                    anyhow!("stage {s}: tensor-kind mesh spec lost its TpShape")
+                })?,
                 params,
                 view,
                 meter,
@@ -516,10 +522,10 @@ impl<'a> Stage<'a> {
                 mlm: 0.0,
                 sop: 0.0,
             }),
-        }
+        })
     }
 
-    fn forward_micro(
+    pub(crate) fn forward_micro(
         &mut self,
         u: usize,
         batch: &Batch,
@@ -532,7 +538,7 @@ impl<'a> Stage<'a> {
         }
     }
 
-    fn backward_micro(
+    pub(crate) fn backward_micro(
         &mut self,
         u: usize,
         batch: &Batch,
@@ -549,7 +555,7 @@ impl<'a> Stage<'a> {
     /// gradients across the mp ring (the seqpar convention — every ring
     /// rank ends with the group sums); TP keeps per-rank shards, merged
     /// host-side at assembly exactly like the pure engine.
-    fn finish(self, owned: &[String]) -> Result<(f32, f32, Vec<ParamStore>)> {
+    pub(crate) fn finish(self, owned: &[String]) -> Result<(f32, f32, Vec<ParamStore>)> {
         match self {
             Stage::Sp(mut s) => {
                 if s.view.world() > 1 {
@@ -680,7 +686,7 @@ impl<'rt> MeshStep for MeshEngine<'rt> {
                 (0..pp.saturating_sub(1)).map(|_| RefCell::new(VecDeque::new())).collect();
             let mut stages: Vec<Stage> = (0..pp)
                 .map(|s| Stage::new(&self.spec, ex, params, &mp_view, meter, s))
-                .collect();
+                .collect::<Result<_>>()?;
             for c in &cells {
                 let s = c.stage;
                 let batch = &batches[r][c.micro];
@@ -771,7 +777,7 @@ fn run_coord(
 ) -> Result<(f32, f32, ParamStore)> {
     let stage_idx = coord.pp;
     let stages = spec.mesh.pp;
-    let mut st = Stage::new(spec, ex, params, mpc, meter, stage_idx);
+    let mut st = Stage::new(spec, ex, params, mpc, meter, stage_idx)?;
     let prev = (stage_idx > 0).then(|| Link::Comm { comm: ppc, peer: stage_idx - 1 });
     let next = (stage_idx + 1 < stages).then(|| Link::Comm { comm: ppc, peer: stage_idx + 1 });
     // this stage's projection of the GPipe schedule, in start-tick order
@@ -842,13 +848,25 @@ impl<'rt> MeshStep for MeshRunner<'rt> {
             }
         }
 
+        // resolve every coordinate's communicators BEFORE spawning, so a
+        // carving bug is a clean Err naming the rank, not a thread panic
+        let mut slots: Vec<(Coord, RingComm, RingComm, RingComm)> = Vec::with_capacity(world);
+        for rank in 0..world {
+            let coord = mesh.coord(rank)?;
+            let take = |slot: &mut Vec<Option<RingComm>>, axis: &str| {
+                slot[rank]
+                    .take()
+                    .ok_or_else(|| anyhow!("mesh rank {rank}: no {axis} communicator was carved"))
+            };
+            let mpc = take(&mut mp_slot, "mp")?;
+            let dpc = take(&mut dp_slot, "dp")?;
+            let ppc = take(&mut pp_slot, "pp")?;
+            slots.push((coord, mpc, dpc, ppc));
+        }
+
         let results: Vec<(usize, Result<(f32, f32, ParamStore)>)> = thread::scope(|sc| {
             let mut handles = Vec::with_capacity(world);
-            for rank in 0..world {
-                let coord = mesh.coord(rank).expect("rank in world");
-                let mpc = mp_slot[rank].take().expect("mp comm assigned");
-                let dpc = dp_slot[rank].take().expect("dp comm assigned");
-                let ppc = pp_slot[rank].take().expect("pp comm assigned");
+            for (rank, (coord, mpc, dpc, ppc)) in slots.into_iter().enumerate() {
                 let replica = &batches[coord.dp];
                 handles.push(sc.spawn(move || {
                     let out =

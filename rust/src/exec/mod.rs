@@ -33,7 +33,7 @@
 //! the `backend-xla` PJRT backend (Rc-based, thread-local handles) is
 //! rejected at construction with a pointer at `--backend native`.
 
-mod mesh;
+pub(crate) mod mesh;
 mod runner;
 
 pub use mesh::{MeshEngine, MeshOutput, MeshRunner, MeshStep};

@@ -127,7 +127,10 @@ impl<'rt> DistRunner<'rt> {
             if h.len() != 1 {
                 bail!("rank {rank}: expected 1 hidden chunk, got {}", h.len());
             }
-            hidden.push(h.pop().unwrap());
+            hidden.push(
+                h.pop()
+                    .ok_or_else(|| anyhow!("rank {rank}: hidden chunk vanished after join"))?,
+            );
             if rank == 0 {
                 // ranks agree up to f32 reduction-order rounding; rank 0's
                 // copy has a fixed accumulation order (deterministic bits),

@@ -24,6 +24,10 @@
 //! section and tabulates the pinned communication closed forms):
 //!
 //! * [`tensor`] — host tensors + the SPT1 interchange format
+//! * [`analysis`] — the static collective-schedule verifier: abstract
+//!   interpretation of every step program over symbolic comm traces and
+//!   a shape-only executor (deadlock/shape linting + derived closed
+//!   forms, `cargo run -- analyze`)
 //! * [`attn`] — executable attention patterns (dense RSA, Linformer,
 //!   blockwise masks with comm-skipping) behind [`attn::AttnPattern`],
 //!   plus the Ulysses all-to-all SP strategy
@@ -49,6 +53,7 @@
 //! * [`eval`] — experiment harness regenerating every figure and table
 //! * [`util`] — offline-build substrates: JSON, CLI, PRNG, mini-proptest
 
+pub mod analysis;
 pub mod attn;
 pub mod backend;
 pub mod comm;

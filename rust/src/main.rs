@@ -6,6 +6,7 @@
 //! seqpar info                         # manifest + runtime summary
 //! seqpar verify                       # rust engines vs python goldens
 //! seqpar train [--engine seq|tensor|serial] [--steps N] ...
+//! seqpar analyze [--grid]             # static collective-schedule verifier
 //! seqpar sweep --experiment fig3a ... # simulator-backed paper figures
 //! ```
 //!
@@ -22,6 +23,7 @@ fn main() -> Result<()> {
         "info" => seqpar::eval::cmd::info(&args),
         "verify" => seqpar::eval::cmd::verify(&args),
         "train" => seqpar::eval::cmd::train(&args),
+        "analyze" => seqpar::eval::cmd::analyze(&args),
         "sweep" => seqpar::eval::cmd::sweep(&args),
         "help" | _ => {
             print!("{}", seqpar::eval::cmd::HELP);

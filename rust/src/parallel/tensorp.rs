@@ -379,6 +379,40 @@ pub(crate) fn tp_embed_bwd(
     Ok(())
 }
 
+/// One full tensor-parallel step over whatever ranks `view` executes:
+/// embed → layers (2 forward + 2 backward activation all-reduces each) →
+/// heads → backward — the step program both the engine and the static
+/// analyzer (`crate::analysis`) interpret.  Returns `(mlm, sop, final
+/// hidden, per-local-rank grads)`; the shard merge stays with the caller
+/// because it is host-side (no collective) and view-dependent.
+pub(crate) fn tp_step(
+    ex: &dyn Executor,
+    view: &dyn Collective,
+    tsh: &TpShape,
+    params: &ParamStore,
+    batch: &Batch,
+) -> Result<(f32, f32, Tensor, Vec<ParamStore>)> {
+    let ranks = view.local_ranks();
+    let ln = ranks.len();
+
+    let mut x = tp_embed_fwd(ex, tsh, params, batch)?;
+    let mut stashes = Vec::with_capacity(tsh.layers);
+    for layer in 0..tsh.layers {
+        let (x_next, st) = tp_layer_fwd(ex, view, tsh, params, layer, x)?;
+        x = x_next;
+        stashes.push(st);
+    }
+
+    let mut grads: Vec<ParamStore> = (0..ln).map(|_| params.zeros_like()).collect();
+    let (mlm, sop, mut dx) = tp_heads_fwd_bwd(ex, tsh, params, batch, &x, &ranks, &mut grads)?;
+
+    for layer in (0..tsh.layers).rev() {
+        dx = tp_layer_bwd(ex, view, tsh, params, layer, &stashes[layer], &dx, &mut grads)?;
+    }
+    tp_embed_bwd(ex, tsh, params, batch, &dx, &ranks, &mut grads)?;
+    Ok((mlm, sop, x, grads))
+}
+
 pub struct TensorParEngine<'rt> {
     rt: &'rt Runtime,
     pub fabric: Fabric,
@@ -406,28 +440,8 @@ impl<'rt> Engine for TensorParEngine<'rt> {
 
     fn forward_backward(&self, params: &ParamStore, batch: &Batch) -> Result<StepOutput> {
         let ex = self.rt.backend();
-        let tsh = &self.shape;
-        let view: &dyn Collective = &self.fabric;
-        let ranks = view.local_ranks();
-        let ln = ranks.len();
-
-        let mut x = tp_embed_fwd(ex, tsh, params, batch)?;
-        let mut stashes = Vec::with_capacity(tsh.layers);
-        for layer in 0..tsh.layers {
-            let (x_next, st) = tp_layer_fwd(ex, view, tsh, params, layer, x)?;
-            x = x_next;
-            stashes.push(st);
-        }
-
-        let mut grads: Vec<ParamStore> = (0..ln).map(|_| params.zeros_like()).collect();
-        let (mlm, sop, mut dx) =
-            tp_heads_fwd_bwd(ex, tsh, params, batch, &x, &ranks, &mut grads)?;
+        let (mlm, sop, x, mut grads) = tp_step(ex, &self.fabric, &self.shape, params, batch)?;
         let hidden = vec![x];
-
-        for layer in (0..tsh.layers).rev() {
-            dx = tp_layer_bwd(ex, view, tsh, params, layer, &stashes[layer], &dx, &mut grads)?;
-        }
-        tp_embed_bwd(ex, tsh, params, batch, &dx, &ranks, &mut grads)?;
 
         // Host-side shard merge (exact: shards land at disjoint offsets,
         // replicated entries appear only in rank 0's store) — no

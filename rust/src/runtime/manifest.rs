@@ -54,20 +54,63 @@ pub struct Manifest {
     pub goldens: BTreeMap<String, String>,
 }
 
-fn io_spec(v: &Value) -> Result<IoSpec> {
-    let dims = v
-        .req("dims")?
-        .as_arr()
-        .ok_or_else(|| anyhow!("dims not an array"))?
+/// Typed field access that names the key AND the offending JSON type —
+/// a malformed manifest should say what is wrong where, not panic later.
+fn str_field(v: &Value, key: &str) -> Result<String> {
+    let f = v.req(key)?;
+    f.as_str()
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("key {key:?}: expected a string, got {}", f.type_name()))
+}
+
+fn dims_field(v: &Value, key: &str) -> Result<Vec<usize>> {
+    let f = v.req(key)?;
+    f.as_arr()
+        .ok_or_else(|| anyhow!("key {key:?}: expected an array, got {}", f.type_name()))?
         .iter()
-        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
-        .collect::<Result<Vec<_>>>()?;
+        .enumerate()
+        .map(|(i, d)| {
+            d.as_usize().ok_or_else(|| {
+                anyhow!("{key}[{i}]: expected a non-negative whole number, got {}", d.type_name())
+            })
+        })
+        .collect()
+}
+
+fn io_spec(v: &Value) -> Result<IoSpec> {
+    let dims = dims_field(v, "dims")?;
     let dtype = match v.req("dtype")?.as_str() {
         Some("f32") => DType::F32,
         Some("i32") => DType::I32,
-        other => bail!("unknown dtype {other:?}"),
+        other => bail!("unknown dtype {other:?} (f32|i32)"),
     };
     Ok(IoSpec { dims, dtype })
+}
+
+fn io_list(spec: &Value, key: &str) -> Result<Vec<IoSpec>> {
+    let f = spec.req(key)?;
+    f.as_arr()
+        .ok_or_else(|| anyhow!("{key}: expected an array, got {}", f.type_name()))?
+        .iter()
+        .enumerate()
+        .map(|(i, io)| io_spec(io).with_context(|| format!("{key}[{i}]")))
+        .collect()
+}
+
+fn artifact_spec(spec: &Value) -> Result<ArtifactSpec> {
+    Ok(ArtifactSpec {
+        file: str_field(spec, "file")?,
+        inputs: io_list(spec, "inputs")?,
+        outputs: io_list(spec, "outputs")?,
+    })
+}
+
+fn param_spec(p: &Value) -> Result<ParamSpec> {
+    Ok(ParamSpec {
+        name: str_field(p, "name")?,
+        dims: dims_field(p, "dims")?,
+        file: str_field(p, "file")?,
+    })
 }
 
 impl Manifest {
@@ -80,54 +123,33 @@ impl Manifest {
     pub fn parse(text: &str) -> Result<Manifest> {
         let v = json::parse(text).map_err(|e| anyhow!("{e}"))?;
         let num = |k: &str| -> Result<usize> {
-            v.req(k)?
-                .as_usize()
-                .ok_or_else(|| anyhow!("manifest key {k} not a number"))
+            let f = v.req(k)?;
+            f.as_usize().ok_or_else(|| {
+                anyhow!(
+                    "manifest key {k:?}: expected a non-negative whole number, got {}",
+                    f.type_name()
+                )
+            })
         };
+        let artifacts_v = v.req("artifacts")?;
         let mut artifacts = BTreeMap::new();
-        for (name, spec) in v
-            .req("artifacts")?
+        for (name, spec) in artifacts_v
             .as_obj()
-            .ok_or_else(|| anyhow!("artifacts not an object"))?
+            .ok_or_else(|| anyhow!("artifacts: expected an object, got {}", artifacts_v.type_name()))?
         {
-            let inputs = spec
-                .req("inputs")?
-                .as_arr()
-                .ok_or_else(|| anyhow!("inputs not an array"))?
-                .iter()
-                .map(io_spec)
-                .collect::<Result<Vec<_>>>()?;
-            let outputs = spec
-                .req("outputs")?
-                .as_arr()
-                .ok_or_else(|| anyhow!("outputs not an array"))?
-                .iter()
-                .map(io_spec)
-                .collect::<Result<Vec<_>>>()?;
-            let file = spec
-                .req("file")?
-                .as_str()
-                .ok_or_else(|| anyhow!("file not a string"))?
-                .to_string();
-            artifacts.insert(name.clone(), ArtifactSpec { file, inputs, outputs });
+            let built = artifact_spec(spec)
+                .with_context(|| format!("manifest artifact {name:?}"))?;
+            artifacts.insert(name.clone(), built);
         }
+        let params_v = v.req("params")?;
         let mut params = Vec::new();
-        for p in v
-            .req("params")?
+        for (i, p) in params_v
             .as_arr()
-            .ok_or_else(|| anyhow!("params not an array"))?
+            .ok_or_else(|| anyhow!("params: expected an array, got {}", params_v.type_name()))?
+            .iter()
+            .enumerate()
         {
-            params.push(ParamSpec {
-                name: p.req("name")?.as_str().unwrap_or_default().to_string(),
-                dims: p
-                    .req("dims")?
-                    .as_arr()
-                    .ok_or_else(|| anyhow!("param dims"))?
-                    .iter()
-                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
-                    .collect::<Result<Vec<_>>>()?,
-                file: p.req("file")?.as_str().unwrap_or_default().to_string(),
-            });
+            params.push(param_spec(p).with_context(|| format!("manifest params[{i}]"))?);
         }
         let mut goldens = BTreeMap::new();
         if let Some(g) = v.get("goldens").and_then(|g| g.as_obj()) {
@@ -204,5 +226,25 @@ mod tests {
     #[test]
     fn missing_key_is_an_error() {
         assert!(Manifest::parse(r#"{"model": "x"}"#).is_err());
+    }
+
+    #[test]
+    fn malformed_fields_error_with_context() {
+        // a negative dim must be refused, naming artifact + field + index
+        let neg_dim = SAMPLE.replacen("[32, 128]", "[-32, 128]", 1);
+        let e = format!("{:#}", Manifest::parse(&neg_dim).unwrap_err());
+        assert!(e.contains("add__32x128_32x128"), "{e}");
+        assert!(e.contains("dims[0]"), "{e}");
+
+        // a param whose name is not a string is an error, not ""
+        let bad_name = SAMPLE.replace(r#""name": "tok_emb""#, r#""name": 7"#);
+        let e = format!("{:#}", Manifest::parse(&bad_name).unwrap_err());
+        assert!(e.contains("params[0]"), "{e}");
+        assert!(e.contains("expected a string"), "{e}");
+
+        // a fractional scalar must not silently truncate
+        let frac = SAMPLE.replace(r#""ring": 4"#, r#""ring": 4.5"#);
+        let e = format!("{:#}", Manifest::parse(&frac).unwrap_err());
+        assert!(e.contains("ring"), "{e}");
     }
 }

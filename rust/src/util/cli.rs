@@ -62,6 +62,18 @@ impl Args {
         }
     }
 
+    /// Present-or-absent usize flag (`--skew 2`): `None` when the flag was
+    /// not given, an error when it was given but does not parse.
+    pub fn usize_opt(&self, key: &str) -> anyhow::Result<Option<usize>> {
+        match self.flags.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
     pub fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
         match self.flags.get(key) {
             None => Ok(default),

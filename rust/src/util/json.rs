@@ -39,8 +39,26 @@ impl Value {
         }
     }
 
+    /// Strict integral access: `Some` only for non-negative whole numbers
+    /// that fit in `usize` — `-1`, `2.5` or `1e300` return `None` instead
+    /// of silently truncating (manifest dims must be exact).
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|f| f as usize)
+        match self.as_f64() {
+            Some(f) if f >= 0.0 && f.fract() == 0.0 && f <= usize::MAX as f64 => Some(f as usize),
+            _ => None,
+        }
+    }
+
+    /// The JSON type of this value — for "expected X, got Y" errors.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Null => "null",
+            Value::Bool(_) => "a bool",
+            Value::Num(_) => "a number",
+            Value::Str(_) => "a string",
+            Value::Arr(_) => "an array",
+            Value::Obj(_) => "an object",
+        }
     }
 
     pub fn as_bool(&self) -> Option<bool> {
@@ -339,6 +357,17 @@ mod tests {
         assert_eq!(parse("true").unwrap(), Value::Bool(true));
         assert_eq!(parse("null").unwrap(), Value::Null);
         assert_eq!(parse(r#""a\nb""#).unwrap(), Value::Str("a\nb".into()));
+    }
+
+    #[test]
+    fn usize_access_is_strict() {
+        assert_eq!(Value::Num(42.0).as_usize(), Some(42));
+        assert_eq!(Value::Num(0.0).as_usize(), Some(0));
+        // truncation hazards all refuse instead of rounding
+        assert_eq!(Value::Num(-1.0).as_usize(), None);
+        assert_eq!(Value::Num(2.5).as_usize(), None);
+        assert_eq!(Value::Num(1e300).as_usize(), None);
+        assert_eq!(Value::Str("3".into()).as_usize(), None);
     }
 
     #[test]

@@ -1,0 +1,222 @@
+//! Property-based fuzz over the static analyzer (`seqpar::analysis`):
+//! for every sampled configuration the trace-derived per-kind byte
+//! totals must equal a REAL engine run's meter EXACTLY (the closed-form
+//! leg is checked inside `Analysis::verify`), invalid combinations must
+//! be rejected by the analyzer and the engine ALIKE (never a panic),
+//! and a deliberately skewed schedule must produce the per-rank
+//! first-divergence diff instead of the deadlock it models.
+
+use seqpar::analysis::{self, TraceEvent};
+use seqpar::attn::AttnPattern;
+use seqpar::backend::native::NativeConfig;
+use seqpar::comm::{Fabric, Meter};
+use seqpar::exec::{MeshEngine, MeshStep};
+use seqpar::model::params::ParamStore;
+use seqpar::model::BERT_TINY_Z4;
+use seqpar::parallel::sequence::{SeqParEngine, SpStrategy};
+use seqpar::parallel::topology::{Mesh, MpKind};
+use seqpar::parallel::{Batch, Engine};
+use seqpar::runtime::Runtime;
+use seqpar::train::data::{Corpus, CorpusConfig};
+use seqpar::util::prop::{self, Prop};
+
+/// bert-tiny-z4 (4 heads) keeps every ring/mp in {1,2,4} compatible
+/// with both SP strategies and with TP head sharding.
+fn runtime_for(
+    ring: usize,
+    seq_len: usize,
+    pattern: AttnPattern,
+    sp: SpStrategy,
+) -> Result<Runtime, String> {
+    let (linformer_k, block_w) = pattern.native_knobs();
+    Runtime::native(NativeConfig {
+        model: BERT_TINY_Z4,
+        batch: 2,
+        seq_len,
+        ring,
+        tp: 1,
+        linformer_k,
+        block_w,
+        ulysses: !sp.is_ring(),
+        seed: 0,
+    })
+    .map_err(|e| e.to_string())
+}
+
+fn batch_for(rt: &Runtime, seed: u64) -> Result<Batch, String> {
+    let m = rt.manifest();
+    Corpus::new(CorpusConfig::new(m.vocab, m.seq_len, m.batch), seed)
+        .next_batch()
+        .map_err(|e| e.to_string())
+}
+
+/// analyzer derived bytes == measured engine bytes, per collective kind,
+/// over random (ring, sp strategy, attention pattern); invalid combos
+/// (Ulysses re-shards whole heads, so it needs dense attention) must be
+/// rejected statically by BOTH the analyzer and the engine constructor.
+#[test]
+fn sp_step_analyzer_bytes_equal_measured_bytes() {
+    Prop::new(14, 0xa11a_515).check("sp analyzer ~ measured", |rng| {
+        let ring = *prop::pick(rng, &[1usize, 2, 4]);
+        let sp = *prop::pick(rng, &[SpStrategy::Ring, SpStrategy::Ulysses]);
+        let pattern = *prop::pick(
+            rng,
+            &[AttnPattern::Dense, AttnPattern::Linformer { k: 8 }, AttnPattern::Block { w: 8 }],
+        );
+        let seq_len = ring * *prop::pick(rng, &[8usize, 16]);
+        let invalid = !sp.is_ring() && pattern != AttnPattern::Dense;
+
+        let rt = match runtime_for(ring, seq_len, pattern, sp) {
+            Ok(rt) => rt,
+            // some invalid combos may already fail at manifest build —
+            // that is a static rejection too
+            Err(_) if invalid => return Ok(()),
+            Err(e) => return Err(format!("valid config rejected at build: {e}")),
+        };
+        let analyzed = analysis::analyze_sp_step(&rt, pattern, sp);
+        let meter = Meter::new();
+        let engine = SeqParEngine::with_strategy(&rt, Fabric::new(ring, meter.clone()), pattern, sp);
+
+        if invalid {
+            if analyzed.is_ok() {
+                return Err(format!(
+                    "ring={ring} sp={} attn={:?}: analyzer should reject",
+                    sp.label(),
+                    pattern
+                ));
+            }
+            if engine.is_ok() {
+                return Err(format!(
+                    "ring={ring} sp={} attn={:?}: engine should reject",
+                    sp.label(),
+                    pattern
+                ));
+            }
+            return Ok(()); // rejection path exercised, consistently
+        }
+
+        let a = analyzed.map_err(|e| format!("analyzer rejected a valid config: {e:#}"))?;
+        a.verify().map_err(|e| format!("{e:#}"))?;
+
+        let params = ParamStore::synthetic(rt.manifest());
+        let batch = batch_for(&rt, 11 + ring as u64)?;
+        engine
+            .map_err(|e| e.to_string())?
+            .forward_backward(&params, &batch)
+            .map_err(|e| e.to_string())?;
+        let measured = meter.snapshot();
+        if !a.derived.same_bytes(&measured) {
+            return Err(format!(
+                "ring={ring}: derived bytes != measured bytes\n{}",
+                a.report(Some(&measured))
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Same invariant over random mesh factorizations: the analyzer's
+/// abstract interpretation of the full DP×PP×MP step must meter the
+/// exact bytes the threaded `MeshEngine` moves, and both must agree on
+/// which factorizations are valid.
+#[test]
+fn mesh_analyzer_bytes_equal_measured_bytes() {
+    Prop::new(10, 0x5e_9a27).check("mesh analyzer ~ measured", |rng| {
+        let world = *prop::pick(rng, &[1usize, 2, 4]);
+        let (dp, pp, mp) = prop::factor3(rng, world);
+        let kind = if rng.below(2) == 0 { MpKind::Sequence } else { MpKind::Tensor };
+        let sp = *prop::pick(rng, &[SpStrategy::Ring, SpStrategy::Ulysses]);
+        let pattern =
+            *prop::pick(rng, &[AttnPattern::Dense, AttnPattern::Linformer { k: 8 }, AttnPattern::Block { w: 8 }]);
+        let micros = 1 + rng.below(2) as usize;
+        let seq_len = mp * *prop::pick(rng, &[8usize, 16]);
+
+        let mesh = Mesh::new(dp, pp, mp, kind).map_err(|e| e.to_string())?;
+        let (linformer_k, block_w) = pattern.native_knobs();
+        let cfg = NativeConfig {
+            model: BERT_TINY_Z4,
+            batch: 2,
+            seq_len,
+            ring: 4,
+            tp: 2,
+            linformer_k,
+            block_w,
+            ulysses: !sp.is_ring(),
+            seed: 0,
+        }
+        .for_mesh(&mesh);
+        let rt = Runtime::native(cfg).map_err(|e| e.to_string())?;
+
+        let analyzed = analysis::analyze_mesh(&rt, mesh, micros, sp);
+        let meter = Meter::new();
+        let engine = MeshEngine::with_strategy(&rt, mesh, micros, meter.clone(), sp);
+
+        // the analyzer and the engine must agree on validity: both go
+        // through the same spec, so a one-sided rejection is a bug
+        match (&analyzed, &engine) {
+            (Err(_), Err(_)) => return Ok(()), // e.g. linformer on a mesh, pp ∤ layers
+            (Err(e), Ok(_)) => {
+                return Err(format!(
+                    "{} micros={micros}: analyzer rejected what the engine accepts: {e:#}",
+                    mesh.label()
+                ))
+            }
+            (Ok(_), Err(e)) => {
+                return Err(format!(
+                    "{} micros={micros}: engine rejected what the analyzer accepts: {e}",
+                    mesh.label()
+                ))
+            }
+            (Ok(_), Ok(_)) => {}
+        }
+        let a = analyzed.map_err(|e| format!("{e:#}"))?;
+        a.verify().map_err(|e| format!("{e:#}"))?;
+
+        let m = rt.manifest().clone();
+        let params = ParamStore::synthetic(&m);
+        let mut corpus = Corpus::new(CorpusConfig::new(m.vocab, m.seq_len, m.batch), 17 + world as u64);
+        let batches: Vec<Vec<Batch>> = (0..dp)
+            .map(|_| (0..micros).map(|_| corpus.next_batch().unwrap()).collect())
+            .collect();
+        engine
+            .map_err(|e| e.to_string())?
+            .step(&params, &batches)
+            .map_err(|e| e.to_string())?;
+        let measured = meter.snapshot();
+        if !a.derived.same_bytes(&measured) {
+            return Err(format!(
+                "{} micros={micros} sp={}: derived bytes != measured bytes\n{}",
+                mesh.label(),
+                sp.label(),
+                a.report(Some(&measured))
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Negative path: skew ONE rank's schedule by one extra collective and
+/// the analyzer must localise the divergence — group, event index, what
+/// each rank issues — instead of letting a real run hang.
+#[test]
+fn skewed_schedule_is_statically_rejected_with_a_rank_diff() {
+    let rt = runtime_for(4, 32, AttnPattern::Dense, SpStrategy::Ring).unwrap();
+    let mut a = analysis::analyze_sp_step(&rt, AttnPattern::Dense, SpStrategy::Ring).unwrap();
+    a.verify().expect("the untouched schedule must pass");
+
+    // rank 1 issues one all-reduce the other ranks never post
+    a.groups[0].traces[1].events.push(TraceEvent::AllReduce { bytes: 4 });
+
+    let d = a.check_matched().expect_err("the skew must be detected");
+    let msg = d.to_string();
+    assert!(msg.contains("rank 1: all_reduce[4B]"), "{msg}");
+    assert!(msg.contains("rank 0: (end of schedule)"), "{msg}");
+    assert!(msg.contains("deadlock"), "{msg}");
+    assert!(a.verify().is_err(), "verify must fail on a skewed schedule");
+
+    // and the rendered report carries the diff + a failing verdict
+    let report = a.report(None);
+    assert!(report.contains("MISMATCH"), "{report}");
+    assert!(report.contains("FAIL"), "{report}");
+    assert!(report.contains("deadlock"), "{report}");
+}

@@ -105,6 +105,55 @@ fn manifest_rejects_truncation() {
 }
 
 #[test]
+fn malformed_manifest_errors_name_file_key_and_type() {
+    // regression for the unwrap()-era parser: every malformation below
+    // used to either panic or silently coerce.  The error chain must say
+    // WHERE (artifact/param + field) and WHAT (expected vs actual type).
+    let base = r#"{
+        "model": "bert-tiny", "batch": 2, "seq_len": 64, "ring": 4, "tp": 2,
+        "linformer_k": 0, "hidden": 128, "heads": 2, "head_dim": 64,
+        "ffn": 512, "layers": 2, "vocab": 1024, "seed": 0,
+        "artifacts": {
+            "add__32x128_32x128": {
+                "file": "add.hlo.txt",
+                "inputs": [{"dims": [32, 128], "dtype": "f32"}],
+                "outputs": [{"dims": [32, 128], "dtype": "f32"}]
+            }
+        },
+        "params": [{"name": "tok_emb", "dims": [1024, 128],
+                    "file": "params/tok_emb.tensor"}],
+        "goldens": {}
+    }"#;
+    assert!(Manifest::parse(base).is_ok(), "the base document must be valid");
+
+    // (mutation, fragments the error chain must contain)
+    let cases: Vec<(String, Vec<&str>)> = vec![
+        // negative dim: silently became a huge usize under `f as usize`
+        (
+            base.replacen("[32, 128]", "[-32, 128]", 1),
+            vec!["add__32x128_32x128", "dims[0]"],
+        ),
+        // fractional scalar: silently truncated
+        (base.replace("\"ring\": 4,", "\"ring\": 4.25,"), vec!["ring", "whole number"]),
+        // numeric scalar of the wrong JSON type
+        (base.replace("\"batch\": 2,", "\"batch\": \"2\","), vec!["batch", "got a string"]),
+        // non-string param name: silently became ""
+        (base.replace("\"name\": \"tok_emb\"", "\"name\": 7"), vec!["params[0]", "name"]),
+        // non-string artifact file path
+        (base.replace("\"file\": \"add.hlo.txt\"", "\"file\": null"), vec!["add__", "file"]),
+        // artifact io spec with a bogus dtype
+        (base.replacen("\"dtype\": \"f32\"", "\"dtype\": \"f16\"", 1), vec!["dtype", "f16"]),
+    ];
+    for (doc, want) in cases {
+        let err = Manifest::parse(&doc).expect_err("mutation should be rejected");
+        let chain = format!("{err:#}");
+        for frag in want {
+            assert!(chain.contains(frag), "error {chain:?} should mention {frag:?}");
+        }
+    }
+}
+
+#[test]
 fn open_without_feature_or_artifacts_fails_helpfully() {
     // Without backend-xla, Runtime::open must explain itself; with it,
     // opening a missing directory must fail on the manifest.
