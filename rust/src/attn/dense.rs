@@ -41,6 +41,7 @@ pub(crate) fn rsa_forward_on(
     let mut parts: Vec<Vec<Option<Tensor>>> = (0..ln).map(|_| vec![None; n]).collect();
     let mut k_slots: Vec<Tensor> = k.to_vec();
     for t in 0..n {
+        let sp = crate::obs::begin();
         for (li, &d) in ranks.iter().enumerate() {
             let src = (d + n - t) % n;
             parts[li][src] = Some(call1_on(ex, "scores_step", &[&q[li], &k_slots[li]])?);
@@ -48,6 +49,7 @@ pub(crate) fn rsa_forward_on(
         if t + 1 < n {
             view.ring_shift(&mut k_slots)?;
         }
+        sp.end_phase_idx("rsa_qk_hop", t);
     }
     let mut p = Vec::with_capacity(ln);
     for li in 0..ln {
@@ -60,6 +62,7 @@ pub(crate) fn rsa_forward_on(
     let mut v_slots: Vec<Tensor> = v.to_vec();
     let mut acc: Vec<Tensor> = q.iter().map(|t| Tensor::zeros(&t.shape)).collect();
     for t in 0..n {
+        let sp = crate::obs::begin();
         for (li, &d) in ranks.iter().enumerate() {
             let src = (d + n - t) % n;
             let p_i = ops::slice_last(&p[li], src * sh.lc, (src + 1) * sh.lc)?;
@@ -68,6 +71,7 @@ pub(crate) fn rsa_forward_on(
         if t + 1 < n {
             view.ring_shift(&mut v_slots)?;
         }
+        sp.end_phase_idx("rsa_av_hop", t);
     }
     Ok((acc, p))
 }
@@ -94,6 +98,7 @@ pub(crate) fn rsa_backward_on(
     let mut dv_slots: Vec<Tensor> = v.iter().map(|t| Tensor::zeros(&t.shape)).collect();
     let mut dp_parts: Vec<Vec<Option<Tensor>>> = (0..ln).map(|_| vec![None; n]).collect();
     for t in 0..n {
+        let sp = crate::obs::begin();
         for (li, &d) in ranks.iter().enumerate() {
             let src = (d + n - t) % n;
             dp_parts[li][src] =
@@ -110,6 +115,7 @@ pub(crate) fn rsa_backward_on(
             view.ring_shift(&mut v_slots)?;
         }
         view.ring_shift(&mut dv_slots)?;
+        sp.end_phase_idx("rsa_bwd_v_hop", t);
     }
     // ---- local softmax backward over full rows ---------------------
     let mut ds = Vec::with_capacity(ln);
@@ -124,6 +130,7 @@ pub(crate) fn rsa_backward_on(
     let mut dk_slots: Vec<Tensor> = k.iter().map(|t| Tensor::zeros(&t.shape)).collect();
     let mut dq: Vec<Tensor> = q.iter().map(|t| Tensor::zeros(&t.shape)).collect();
     for t in 0..n {
+        let sp = crate::obs::begin();
         for (li, &d) in ranks.iter().enumerate() {
             let src = (d + n - t) % n;
             let ds_i = ops::slice_last(&ds[li], src * sh.lc, (src + 1) * sh.lc)?;
@@ -136,6 +143,7 @@ pub(crate) fn rsa_backward_on(
             view.ring_shift(&mut k_slots)?;
         }
         view.ring_shift(&mut dk_slots)?;
+        sp.end_phase_idx("rsa_bwd_k_hop", t);
     }
     Ok((dq, dk_slots, dv_slots))
 }

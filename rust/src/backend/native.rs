@@ -21,10 +21,9 @@
 //! deterministic.  The backend itself is `Send + Sync` (stats are atomic),
 //! so `exec::DistRunner` can drive one kernel stream per rank thread.
 
-use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
-use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -137,7 +136,9 @@ pub struct NativeBackend {
     // one instance can serve every rank thread of exec::DistRunner.
     calls: AtomicU64,
     exec_nanos: AtomicU64,
-    used: Mutex<BTreeSet<String>>,
+    // name -> (calls, total dispatch nanos); keys double as the distinct-
+    // kernel set behind cached_executables().
+    kernel_log: Mutex<BTreeMap<String, (u64, u64)>>,
 }
 
 // ---------------------------------------------------------------- registry
@@ -551,7 +552,7 @@ impl NativeBackend {
             kernels: reg.kernels,
             calls: AtomicU64::new(0),
             exec_nanos: AtomicU64::new(0),
-            used: Mutex::new(BTreeSet::new()),
+            kernel_log: Mutex::new(BTreeMap::new()),
         })
     }
 
@@ -571,7 +572,21 @@ impl NativeBackend {
     /// Number of distinct kernels dispatched so far (the native analogue
     /// of the XLA backend's compiled-executable cache).
     pub fn cached_executables(&self) -> usize {
-        self.used.lock().unwrap().len()
+        self.kernel_log.lock().unwrap().len()
+    }
+
+    /// Per-kernel (calls, total dispatch time) breakdown, unsorted.
+    pub fn kernel_stats(&self) -> Vec<crate::runtime::KernelStat> {
+        self.kernel_log
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, &(calls, total_ns))| crate::runtime::KernelStat {
+                name: name.clone(),
+                calls,
+                total_ns,
+            })
+            .collect()
     }
 
     pub fn call(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
@@ -585,8 +600,10 @@ impl NativeBackend {
             .kernels
             .get(name)
             .ok_or_else(|| anyhow!("artifact {name:?} has no native kernel"))?;
-        let t0 = Instant::now();
+        let sp = crate::obs::begin();
+        let sw = crate::obs::Stopwatch::start();
         let out = dispatch(kernel, inputs).map_err(|e| anyhow!("{name}: {e}"))?;
+        let dur = sw.elapsed_ns();
         if out.len() != spec.outputs.len() {
             bail!("{name}: kernel returned {} outputs, manifest says {}", out.len(), spec.outputs.len());
         }
@@ -598,14 +615,16 @@ impl NativeBackend {
                 );
             }
         }
+        let bytes: u64 = inputs.iter().map(|t| t.bytes() as u64).sum::<u64>()
+            + out.iter().map(|t| t.bytes() as u64).sum::<u64>();
+        sp.end_kernel(name, bytes);
         self.calls.fetch_add(1, Ordering::Relaxed);
-        self.exec_nanos
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.exec_nanos.fetch_add(dur, Ordering::Relaxed);
         {
-            let mut used = self.used.lock().unwrap();
-            if !used.contains(name) {
-                used.insert(name.to_string());
-            }
+            let mut log = self.kernel_log.lock().unwrap();
+            let slot = log.entry(name.to_string()).or_insert((0, 0));
+            slot.0 += 1;
+            slot.1 += dur;
         }
         Ok(out)
     }

@@ -60,6 +60,16 @@ pub struct Meter {
     pub scatter_bytes: AtomicU64,
     pub pipeline_bytes: AtomicU64,
     pub ops: AtomicU64,
+    // Per-kind op counts (one increment per `add` call — the anchor of
+    // the runtime trace invariant: `crate::obs` emits exactly one comm
+    // event per metered op, so trace event counts equal these).
+    pub ring_p2p_ops: AtomicU64,
+    pub all_reduce_ops: AtomicU64,
+    pub all_gather_ops: AtomicU64,
+    pub all_to_all_ops: AtomicU64,
+    pub broadcast_ops: AtomicU64,
+    pub scatter_ops: AtomicU64,
+    pub pipeline_ops: AtomicU64,
 }
 
 impl Meter {
@@ -69,7 +79,19 @@ impl Meter {
 
     pub fn add(&self, kind: CommKind, bytes: u64) {
         self.ops.fetch_add(1, Ordering::Relaxed);
+        self.ops_counter(kind).fetch_add(1, Ordering::Relaxed);
         self.counter(kind).fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Meter the op AND close `sp` as the matching [`crate::obs`] comm
+    /// event.  The runtime fabrics route every metered collective
+    /// through this, which is what makes per-kind trace event counts ==
+    /// per-kind op counts hold by construction (asserted by
+    /// [`crate::obs::cross_check`]); `sp` must have been begun when the
+    /// collective started so the event's duration covers it.
+    pub fn add_traced(&self, kind: CommKind, bytes: u64, sp: crate::obs::Span) {
+        self.add(kind, bytes);
+        sp.end_comm(kind, bytes);
     }
 
     fn counter(&self, kind: CommKind) -> &AtomicU64 {
@@ -84,8 +106,42 @@ impl Meter {
         }
     }
 
+    fn ops_counter(&self, kind: CommKind) -> &AtomicU64 {
+        match kind {
+            CommKind::RingP2p => &self.ring_p2p_ops,
+            CommKind::AllReduce => &self.all_reduce_ops,
+            CommKind::AllGather => &self.all_gather_ops,
+            CommKind::AllToAll => &self.all_to_all_ops,
+            CommKind::Broadcast => &self.broadcast_ops,
+            CommKind::Scatter => &self.scatter_ops,
+            CommKind::Pipeline => &self.pipeline_ops,
+        }
+    }
+
     pub fn get(&self, kind: CommKind) -> u64 {
         self.counter(kind).load(Ordering::Relaxed)
+    }
+
+    /// Op count for one kind (number of `add` calls, NOT bytes).
+    pub fn get_ops(&self, kind: CommKind) -> u64 {
+        self.ops_counter(kind).load(Ordering::Relaxed)
+    }
+
+    /// Per-kind op counts in the fixed kind order.  Note the counts are
+    /// convention-dependent (the sequential `Fabric` meters one
+    /// group-total add per collective; the threaded `RingComm` meters
+    /// ring sends per rank but formula collectives once at rank 0/root),
+    /// so compare them against traces from the SAME fabric only.
+    pub fn kind_ops(&self) -> [(CommKind, u64); 7] {
+        [
+            (CommKind::RingP2p, self.get_ops(CommKind::RingP2p)),
+            (CommKind::AllReduce, self.get_ops(CommKind::AllReduce)),
+            (CommKind::AllGather, self.get_ops(CommKind::AllGather)),
+            (CommKind::AllToAll, self.get_ops(CommKind::AllToAll)),
+            (CommKind::Broadcast, self.get_ops(CommKind::Broadcast)),
+            (CommKind::Scatter, self.get_ops(CommKind::Scatter)),
+            (CommKind::Pipeline, self.get_ops(CommKind::Pipeline)),
+        ]
     }
 
     pub fn total_bytes(&self) -> u64 {
@@ -107,6 +163,13 @@ impl Meter {
         self.scatter_bytes.store(0, Ordering::Relaxed);
         self.pipeline_bytes.store(0, Ordering::Relaxed);
         self.ops.store(0, Ordering::Relaxed);
+        self.ring_p2p_ops.store(0, Ordering::Relaxed);
+        self.all_reduce_ops.store(0, Ordering::Relaxed);
+        self.all_gather_ops.store(0, Ordering::Relaxed);
+        self.all_to_all_ops.store(0, Ordering::Relaxed);
+        self.broadcast_ops.store(0, Ordering::Relaxed);
+        self.scatter_ops.store(0, Ordering::Relaxed);
+        self.pipeline_ops.store(0, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> MeterSnapshot {
@@ -280,9 +343,10 @@ impl Fabric {
         if self.n == 1 {
             return Ok(()); // nothing moves, no bytes
         }
+        let sp = crate::obs::begin();
         let bytes: u64 = slots.iter().map(|t| t.bytes() as u64).sum();
         slots.rotate_right(1);
-        self.meter.add(CommKind::RingP2p, bytes);
+        self.meter.add_traced(CommKind::RingP2p, bytes, sp);
         Ok(())
     }
 
@@ -296,6 +360,7 @@ impl Fabric {
         if self.n == 1 {
             return Ok(());
         }
+        let sp = crate::obs::begin();
         let c = slots[0].bytes() as u64;
         let (first, rest) = slots.split_at_mut(1);
         for s in rest.iter() {
@@ -305,7 +370,7 @@ impl Fabric {
             *s = first[0].clone();
         }
         let n = self.n as u64;
-        self.meter.add(CommKind::AllReduce, 2 * (n - 1) * c);
+        self.meter.add_traced(CommKind::AllReduce, 2 * (n - 1) * c, sp);
         Ok(())
     }
 
@@ -319,6 +384,7 @@ impl Fabric {
         if self.n == 1 {
             return Ok(());
         }
+        let sp = crate::obs::begin();
         let bytes: u64 = slots.iter().map(|t| t.bytes() as u64).sum();
         let refs: Vec<&Tensor> = slots.iter().collect();
         let full = ops::concat_dim(&refs, dim)?;
@@ -326,7 +392,7 @@ impl Fabric {
             *s = full.clone();
         }
         // ring all-gather: every device forwards n-1 chunks => (n-1) * sum(C)
-        self.meter.add(CommKind::AllGather, (self.n as u64 - 1) * bytes);
+        self.meter.add_traced(CommKind::AllGather, (self.n as u64 - 1) * bytes, sp);
         Ok(())
     }
 
@@ -343,6 +409,7 @@ impl Fabric {
         if self.n == 1 {
             return Ok(());
         }
+        let sp = crate::obs::begin();
         let c = slots[root].bytes() as u64;
         let src = slots[root].clone();
         for (i, s) in slots.iter_mut().enumerate() {
@@ -350,7 +417,7 @@ impl Fabric {
                 *s = src.clone();
             }
         }
-        self.meter.add(CommKind::Broadcast, (self.n as u64 - 1) * c);
+        self.meter.add_traced(CommKind::Broadcast, (self.n as u64 - 1) * c, sp);
         Ok(())
     }
 
@@ -370,6 +437,7 @@ impl Fabric {
         if self.n == 1 {
             return Ok(());
         }
+        let sp = crate::obs::begin();
         let c = slots[0].bytes() as u64;
         if slots.iter().any(|s| s.bytes() as u64 != c) {
             bail!("all_to_all: slots must be the same size on every rank");
@@ -382,7 +450,7 @@ impl Fabric {
             let refs: Vec<&Tensor> = pieces.iter().map(|row| &row[d]).collect();
             *slot = ops::concat_dim(&refs, concat_dim)?;
         }
-        self.meter.add(CommKind::AllToAll, (self.n as u64 - 1) * c);
+        self.meter.add_traced(CommKind::AllToAll, (self.n as u64 - 1) * c, sp);
         Ok(())
     }
 
@@ -401,6 +469,7 @@ impl Fabric {
         if self.n == 1 {
             return Ok(());
         }
+        let sp = crate::obs::begin();
         let bytes: u64 = slots
             .iter()
             .zip(live)
@@ -417,7 +486,7 @@ impl Fabric {
             }
         }
         if bytes > 0 {
-            self.meter.add(CommKind::RingP2p, bytes);
+            self.meter.add_traced(CommKind::RingP2p, bytes, sp);
         }
         Ok(())
     }
@@ -438,6 +507,7 @@ impl Fabric {
                 self.n
             );
         }
+        let sp = crate::obs::begin();
         let mut bytes = 0u64;
         let mut out = Vec::with_capacity(self.n);
         for src in 0..self.n {
@@ -462,7 +532,7 @@ impl Fabric {
             })?);
         }
         if bytes > 0 {
-            self.meter.add(CommKind::RingP2p, bytes);
+            self.meter.add_traced(CommKind::RingP2p, bytes, sp);
         }
         Ok(out)
     }
@@ -470,7 +540,8 @@ impl Fabric {
     /// Point-to-point send between pipeline stages (metered separately so
     /// the Fig. 4 pipeline-communication comparison can read it off).
     pub fn pipeline_send(&self, t: &Tensor) {
-        self.meter.add(CommKind::Pipeline, t.bytes() as u64);
+        let sp = crate::obs::begin();
+        self.meter.add_traced(CommKind::Pipeline, t.bytes() as u64, sp);
     }
 
     /// Megatron's pipeline boundary under tensor parallelism: scatter the
@@ -485,15 +556,15 @@ impl Fabric {
         let c = act.bytes() as u64;
         if self.n == 1 {
             // degenerate group: a plain send, no split and no gather
-            self.meter.add(CommKind::Pipeline, c);
+            self.meter.add_traced(CommKind::Pipeline, c, crate::obs::begin());
             return;
         }
         // scatter: the activation is split across the TP group before send
-        self.meter.add(CommKind::Scatter, c);
+        self.meter.add_traced(CommKind::Scatter, c, crate::obs::begin());
         // each TP rank sends its 1/n slice to the next stage
-        self.meter.add(CommKind::Pipeline, c);
+        self.meter.add_traced(CommKind::Pipeline, c, crate::obs::begin());
         // ring all-gather on the receiving side: group total (n-1) * C
-        self.meter.add(CommKind::AllGather, (self.n as u64 - 1) * c);
+        self.meter.add_traced(CommKind::AllGather, (self.n as u64 - 1) * c, crate::obs::begin());
     }
 }
 
@@ -755,5 +826,20 @@ mod tests {
         assert_eq!(m.total_bytes(), 100);
         m.reset();
         assert_eq!(m.total_bytes(), 0);
+    }
+
+    #[test]
+    fn per_kind_op_counts_track_adds() {
+        let m = Meter::new();
+        m.add(CommKind::RingP2p, 10);
+        m.add(CommKind::RingP2p, 10);
+        m.add(CommKind::AllToAll, 5);
+        assert_eq!(m.get_ops(CommKind::RingP2p), 2);
+        assert_eq!(m.get_ops(CommKind::AllToAll), 1);
+        assert_eq!(m.get_ops(CommKind::Broadcast), 0);
+        // the aggregate op counter is the sum of the per-kind ones
+        assert_eq!(m.kind_ops().iter().map(|(_, o)| o).sum::<u64>(), m.snapshot().ops);
+        m.reset();
+        assert_eq!(m.kind_ops().iter().map(|(_, o)| o).sum::<u64>(), 0);
     }
 }

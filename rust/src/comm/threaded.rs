@@ -77,14 +77,17 @@ impl RingComm {
     /// Send-before-receive is safe because channels are buffered — this is
     /// the same non-blocking-send assumption NCCL's ring makes.
     pub fn ring_exchange(&self, t: Tensor) -> Result<Tensor> {
+        let sp = crate::obs::begin();
         let bytes = t.bytes() as u64;
         self.tx[self.next_rank()]
             .send(t)
             .map_err(|_| anyhow!("rank {}: ring peer hung up", self.rank))?;
+        let w = crate::obs::wait_begin();
         let got = self.rx[self.prev_rank()]
             .recv()
             .map_err(|_| anyhow!("rank {}: ring recv failed", self.rank))?;
-        self.meter.add(CommKind::RingP2p, bytes);
+        w.end();
+        self.meter.add_traced(CommKind::RingP2p, bytes, sp);
         Ok(got)
     }
 
@@ -103,6 +106,7 @@ impl RingComm {
         // NOTE: rank r accumulates in arrival order r, r-1, ..., r+1, so
         // the per-rank sums agree up to f32 reduction-order rounding, not
         // bit-for-bit (each rank's own result IS bit-deterministic).
+        let sp = crate::obs::begin();
         let c = local.bytes() as u64;
         let mut travelling = local.clone();
         let mut acc = local;
@@ -113,7 +117,7 @@ impl RingComm {
         // now every rank has the full sum in acc (after n-1 steps each rank
         // saw every chunk exactly once)
         if self.rank == 0 {
-            self.meter.add(CommKind::AllReduce, 2 * (self.n as u64 - 1) * c);
+            self.meter.add_traced(CommKind::AllReduce, 2 * (self.n as u64 - 1) * c, sp);
         }
         Ok(acc)
     }
@@ -125,6 +129,7 @@ impl RingComm {
         if self.n == 1 {
             return Ok(local);
         }
+        let sp = crate::obs::begin();
         let mut parts: Vec<Option<Tensor>> = (0..self.n).map(|_| None).collect();
         let mut held = local.clone();
         parts[self.rank] = Some(local);
@@ -143,7 +148,7 @@ impl RingComm {
             .collect::<Result<_>>()?;
         if self.rank == 0 {
             let total: u64 = owned.iter().map(|t| t.bytes() as u64).sum();
-            self.meter.add(CommKind::AllGather, (self.n as u64 - 1) * total);
+            self.meter.add_traced(CommKind::AllGather, (self.n as u64 - 1) * total, sp);
         }
         let refs: Vec<&Tensor> = owned.iter().collect();
         ops::concat_dim(&refs, dim)
@@ -161,6 +166,7 @@ impl RingComm {
             return Ok(local);
         }
         if self.rank == root {
+            let sp = crate::obs::begin();
             let c = local.bytes() as u64;
             for dst in 0..self.n {
                 if dst != root {
@@ -169,12 +175,15 @@ impl RingComm {
                         .map_err(|_| anyhow!("rank {}: broadcast peer {dst} hung up", self.rank))?;
                 }
             }
-            self.meter.add(CommKind::Broadcast, (self.n as u64 - 1) * c);
+            self.meter.add_traced(CommKind::Broadcast, (self.n as u64 - 1) * c, sp);
             Ok(local)
         } else {
-            self.rx[root]
+            let w = crate::obs::wait_begin();
+            let got = self.rx[root]
                 .recv()
-                .map_err(|_| anyhow!("rank {}: broadcast recv from {root} failed", self.rank))
+                .map_err(|_| anyhow!("rank {}: broadcast recv from {root} failed", self.rank))?;
+            w.end();
+            Ok(got)
         }
     }
 
@@ -188,6 +197,7 @@ impl RingComm {
         if self.n == 1 {
             return Ok(local);
         }
+        let sp = crate::obs::begin();
         let c = local.bytes() as u64;
         let mut pieces: Vec<Option<Tensor>> =
             ops::chunk_dim(&local, split_dim, self.n)?.into_iter().map(Some).collect();
@@ -209,14 +219,17 @@ impl RingComm {
                         anyhow!("rank {}: own all_to_all piece missing", self.rank)
                     })
                 } else {
-                    self.rx[src].recv().map_err(|_| {
+                    let w = crate::obs::wait_begin();
+                    let got = self.rx[src].recv().map_err(|_| {
                         anyhow!("rank {}: all_to_all recv from {src} failed", self.rank)
-                    })
+                    });
+                    w.end();
+                    got
                 }
             })
             .collect::<Result<_>>()?;
         if self.rank == 0 {
-            self.meter.add(CommKind::AllToAll, (self.n as u64 - 1) * c);
+            self.meter.add_traced(CommKind::AllToAll, (self.n as u64 - 1) * c, sp);
         }
         let refs: Vec<&Tensor> = parts.iter().collect();
         ops::concat_dim(&refs, concat_dim)
@@ -226,23 +239,32 @@ impl RingComm {
         self.tx[self.next_rank()]
             .send(t)
             .map_err(|_| anyhow!("rank {}: ring peer hung up", self.rank))?;
-        self.rx[self.prev_rank()]
+        let w = crate::obs::wait_begin();
+        let got = self.rx[self.prev_rank()]
             .recv()
-            .map_err(|_| anyhow!("rank {}: ring recv failed", self.rank))
+            .map_err(|_| anyhow!("rank {}: ring recv failed", self.rank));
+        w.end();
+        got
     }
 
     /// Direct P2P (pipeline stages).
     pub fn send_to(&self, dst: usize, t: Tensor) -> Result<()> {
-        self.meter.add(CommKind::Pipeline, t.bytes() as u64);
+        let sp = crate::obs::begin();
+        let bytes = t.bytes() as u64;
         self.tx[dst]
             .send(t)
-            .map_err(|_| anyhow!("rank {}: send to {dst} failed", self.rank))
+            .map_err(|_| anyhow!("rank {}: send to {dst} failed", self.rank))?;
+        self.meter.add_traced(CommKind::Pipeline, bytes, sp);
+        Ok(())
     }
 
     pub fn recv_from(&self, src: usize) -> Result<Tensor> {
-        self.rx[src]
+        let w = crate::obs::wait_begin();
+        let got = self.rx[src]
             .recv()
-            .map_err(|_| anyhow!("rank {}: recv from {src} failed", self.rank))
+            .map_err(|_| anyhow!("rank {}: recv from {src} failed", self.rank));
+        w.end();
+        got
     }
 }
 
@@ -327,16 +349,20 @@ impl Collective for RingComm {
             return Ok(());
         }
         if live[self.rank] {
+            let sp = crate::obs::begin();
             let bytes = t.bytes() as u64;
             self.tx[self.next_rank()]
                 .send(t)
                 .map_err(|_| anyhow!("rank {}: ring peer hung up", self.rank))?;
-            self.meter.add(CommKind::RingP2p, bytes);
+            self.meter.add_traced(CommKind::RingP2p, bytes, sp);
         }
         slots[0] = if live[self.prev_rank()] {
-            self.rx[self.prev_rank()]
+            let w = crate::obs::wait_begin();
+            let got = self.rx[self.prev_rank()]
                 .recv()
-                .map_err(|_| anyhow!("rank {}: ring recv failed", self.rank))?
+                .map_err(|_| anyhow!("rank {}: ring recv failed", self.rank))?;
+            w.end();
+            got
         } else {
             Tensor::zeros(&[]) // dead hop: placeholder, never read
         };
@@ -376,10 +402,12 @@ impl Collective for RingComm {
                 continue;
             }
             if let Some(t) = mine[src].take() {
-                self.meter.add(CommKind::RingP2p, t.bytes() as u64);
+                let sp = crate::obs::begin();
+                let bytes = t.bytes() as u64;
                 self.tx[src]
                     .send(t)
                     .map_err(|_| anyhow!("rank {}: grad delivery to {src} failed", self.rank))?;
+                self.meter.add_traced(CommKind::RingP2p, bytes, sp);
             }
         }
         // collect phase: my own chunk, ascending consumer order
@@ -390,9 +418,12 @@ impl Collective for RingComm {
                     .take()
                     .ok_or_else(|| anyhow!("rank {}: missing own contribution", self.rank))?
             } else {
-                self.rx[dst]
+                let w = crate::obs::wait_begin();
+                let got = self.rx[dst]
                     .recv()
-                    .map_err(|_| anyhow!("rank {}: grad recv from {dst} failed", self.rank))?
+                    .map_err(|_| anyhow!("rank {}: grad recv from {dst} failed", self.rank))?;
+                w.end();
+                got
             };
             match &mut acc {
                 None => acc = Some(t),

@@ -4,8 +4,10 @@
 //! `cargo bench` targets (Cargo.toml `[[bench]]`, `harness = false`) use
 //! this to time the real hot paths and to regenerate the paper's
 //! figures/tables (benches print the same rows the paper reports).
+//! Samples come off [`crate::obs::Stopwatch`] so bench numbers, trainer
+//! tok/s and backend kernel stats all share one clock discipline.
 
-use std::time::Instant;
+use crate::obs::Stopwatch;
 
 #[derive(Clone, Copy, Debug)]
 pub struct BenchStats {
@@ -48,9 +50,9 @@ pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchStats {
     }
     let mut samples: Vec<f64> = Vec::with_capacity(iters);
     for _ in 0..iters {
-        let t0 = Instant::now();
+        let sw = Stopwatch::start();
         f();
-        samples.push(t0.elapsed().as_nanos() as f64);
+        samples.push(sw.elapsed_ns() as f64);
     }
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let mean = samples.iter().sum::<f64>() / samples.len() as f64;

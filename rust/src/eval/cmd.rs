@@ -42,6 +42,14 @@ COMMANDS:
             --skew R injects a divergent collective on rank R to
             demonstrate the rank-by-rank divergence report
   sweep     regenerate a paper figure/table via the cluster simulator
+  trace     run a short traced training (default --steps 1) and print the
+            measured metrics report: step wall time, per-kind comm
+            wait/transfer attribution, top-k kernels by total time,
+            tokens/sec and (on a mesh) the measured pipeline bubble.
+            Takes the train flags.  --out FILE writes the report JSON
+            (the BENCH_obs.json payload), --trace FILE also dumps the
+            Chrome trace.  --validate FILE instead schema-checks an
+            existing Chrome-trace file and summarizes it
   help      this text
 
 BACKEND FLAGS:
@@ -89,6 +97,15 @@ COMMON FLAGS:
                       microbatch is one manifest-shaped batch
   --mesh-sim          run the mesh sequentially simulated (exec::MeshEngine)
                       instead of threaded — byte-identical meters
+  --trace FILE        (train/trace) record every runtime span — kernels,
+                      collectives with bytes + channel-wait time, ring
+                      hops, GPipe cells, optimizer — and write Chrome
+                      trace-format JSON, one pid per rank (open in
+                      Perfetto or chrome://tracing).  Per-comm-kind event
+                      counts and bytes are checked against the run's
+                      meter at exit and must match exactly
+  --top-k N           (trace) kernel table size (default 10)
+  --out FILE          (trace) write the metrics report JSON
   --seed N            corpus seed (train/verify; default 7)
   --experiment ID     fig3a|fig3b|fig4a|fig4b|fig5a|fig5b|fig7|fig8|fig9|
                       table4|tables (sweep)
@@ -445,6 +462,14 @@ pub fn train(args: &Args) -> Result<()> {
         log_every: args.usize_or("log-every", 10)? as u64,
     };
     let meter = Meter::new();
+    // --trace: record every span of the run; finish_trace() checks the
+    // event-for-op invariant against `meter` and writes the Chrome JSON.
+    // The recorder must start AFTER the static pre-flight: the analyzer
+    // replays the real (instrumented) step programs against its own
+    // symbolic meter, and those replayed spans must not leak into the
+    // runtime trace or the cross-check against `meter` would fail.
+    let trace_path = args.str_opt("trace").map(PathBuf::from);
+    let start_recorder = || trace_path.as_ref().map(|_| crate::obs::Recorder::start());
 
     // ---- 4D mesh execution (DP×PP×SP / DP×PP×TP) --------------------
     if let Some((dp, pp, mp)) = args.triple_opt("mesh")? {
@@ -478,13 +503,14 @@ pub fn train(args: &Args) -> Result<()> {
             Schedule::gpipe(pp, micros).bubble_fraction(),
         );
         let mut trainer = MeshTrainer::new(runner.as_ref(), &params, cfg);
+        let rec = start_recorder();
         trainer.run(&mut params, || corpus.next_batch(), false)?;
         let s = meter.snapshot();
         println!(
             "comm totals: ring_p2p={} all_reduce={} all_gather={} all_to_all={} broadcast={} scatter={} pipeline={} ({} ops)",
             s.ring_p2p, s.all_reduce, s.all_gather, s.all_to_all, s.broadcast, s.scatter, s.pipeline, s.ops
         );
-        return Ok(());
+        return finish_trace(rec, trace_path.as_deref(), &meter);
     }
 
     // static pre-flight for the single-axis engines (same verifier the
@@ -499,6 +525,7 @@ pub fn train(args: &Args) -> Result<()> {
         _ => {}
     }
 
+    let rec = start_recorder();
     match engine_name.as_str() {
         "seq" if threads > 0 => {
             let e = DistRunner::with_strategy(&rt, meter.clone(), pattern, sp)?;
@@ -544,11 +571,197 @@ pub fn train(args: &Args) -> Result<()> {
         "comm totals: ring_p2p={} all_reduce={} all_gather={} all_to_all={} broadcast={} scatter={} pipeline={} ({} ops)",
         s.ring_p2p, s.all_reduce, s.all_gather, s.all_to_all, s.broadcast, s.scatter, s.pipeline, s.ops
     );
-    Ok(())
+    finish_trace(rec, trace_path.as_deref(), &meter)
 }
 
 pub fn sweep(args: &Args) -> Result<()> {
     crate::eval::sweep::run(args)
+}
+
+// ------------------------------------------------------------------------
+// trace — runtime observability: measured metrics + Chrome-trace export
+// ------------------------------------------------------------------------
+
+/// Shared `--trace` epilogue for a recorded run: stop the recorder,
+/// enforce the event-for-op invariant against the run's live meter
+/// (`crate::obs::cross_check`), and write the Chrome trace.
+fn finish_trace(
+    rec: Option<crate::obs::Recorder>,
+    path: Option<&Path>,
+    meter: &Meter,
+) -> Result<()> {
+    let (Some(rec), Some(path)) = (rec, path) else {
+        return Ok(());
+    };
+    let events = rec.finish();
+    let rows = crate::obs::cross_check(&events, meter)?;
+    crate::obs::write_chrome_trace(path, &events)?;
+    let ranks = events.iter().map(|e| e.rank).max().map_or(0, |r| r + 1);
+    println!(
+        "trace: {} events over {} rank(s) -> {} (meter cross-check OK over {} comm kinds)",
+        events.len(),
+        ranks,
+        path.display(),
+        rows.iter().filter(|r| r.trace_events > 0).count(),
+    );
+    Ok(())
+}
+
+/// `trace` — run a short traced training (default one step) and print
+/// the measured `crate::obs::MetricsReport`: step wall time, per-kind
+/// comm wait/transfer attribution, top-k kernels, tokens/sec and the
+/// measured pipeline bubble (mesh runs).  `--out` serializes the report
+/// (the BENCH_obs.json payload), `--trace FILE` additionally dumps the
+/// Chrome trace, `--validate FILE` schema-checks an existing trace
+/// instead of running anything.
+pub fn trace(args: &Args) -> Result<()> {
+    if let Some(file) = args.str_opt("validate") {
+        return validate_trace_file(Path::new(file));
+    }
+    let engine_name = args.str_or("engine", "seq").to_string();
+    let threads = args.usize_or("threads", 0)?;
+    let pattern = attn_pattern(args)?;
+    let sp = sp_strategy(args)?;
+    let (rt, dir) = open_runtime(args)?;
+    let mut params = load_params(&rt, &dir)?;
+    let steps = args.usize_or("steps", 1)? as u64;
+    let seed = args.usize_or("seed", 7)? as u64;
+    let m = rt.manifest().clone();
+    let mut corpus = Corpus::new(CorpusConfig::new(m.vocab, m.seq_len, m.batch), seed);
+    let cfg = TrainConfig {
+        steps,
+        warmup: (steps / 10).max(1),
+        peak_lr: args.f64_or("lr", 1e-3)? as f32,
+        log_every: u64::MAX,
+    };
+    let meter = Meter::new();
+    let rec = crate::obs::Recorder::start();
+    let label;
+    let tokens_per_step;
+    if let Some((dp, pp, mp)) = args.triple_opt("mesh")? {
+        let kind = match engine_name.as_str() {
+            "seq" => MpKind::Sequence,
+            "tensor" => MpKind::Tensor,
+            other => bail!("--mesh needs --engine seq or tensor (got --engine {other})"),
+        };
+        let mesh = Mesh::new(dp, pp, mp, kind)?;
+        let micros = args.usize_or("micros", 1)?;
+        let runner: Box<dyn MeshStep + '_> = if args.has("mesh-sim") {
+            Box::new(MeshEngine::with_strategy(&rt, mesh, micros, meter.clone(), sp)?)
+        } else {
+            Box::new(MeshRunner::with_strategy(&rt, mesh, micros, meter.clone(), sp)?)
+        };
+        let mut t = MeshTrainer::new(runner.as_ref(), &params, cfg);
+        t.run(&mut params, || corpus.next_batch(), true)?;
+        label = format!("mesh-{} micros={micros} sp={}", mesh.label(), sp.label());
+        tokens_per_step = (mesh.dp * micros * m.batch * m.seq_len) as u64;
+    } else {
+        tokens_per_step = (m.batch * m.seq_len) as u64;
+        match engine_name.as_str() {
+            "seq" if threads > 0 => {
+                let e = DistRunner::with_strategy(&rt, meter.clone(), pattern, sp)?;
+                let mut t = Trainer::new(&e, &params, cfg);
+                t.run(&mut params, || corpus.next_batch(), true)?;
+                label =
+                    format!("seq threaded n={} attn={} sp={}", e.n, pattern.label(), sp.label());
+            }
+            "seq" => {
+                let e = SeqParEngine::with_strategy(
+                    &rt,
+                    Fabric::new(m.ring, meter.clone()),
+                    pattern,
+                    sp,
+                )?;
+                let mut t = Trainer::new(&e, &params, cfg);
+                t.run(&mut params, || corpus.next_batch(), true)?;
+                label = format!(
+                    "seq sequential n={} attn={} sp={}",
+                    m.ring,
+                    pattern.label(),
+                    sp.label()
+                );
+            }
+            "tensor" => {
+                let e = TensorParEngine::new(&rt, Fabric::new(m.tp, meter.clone()))?;
+                let mut t = Trainer::new(&e, &params, cfg);
+                t.run(&mut params, || corpus.next_batch(), true)?;
+                label = format!("tensor tp={}", m.tp);
+            }
+            "serial" => {
+                let e = TensorParEngine::new(&rt, Fabric::new(1, meter.clone()))?;
+                let mut t = Trainer::new(&e, &params, cfg);
+                t.run(&mut params, || corpus.next_batch(), true)?;
+                label = "serial".to_string();
+            }
+            other => bail!("unknown --engine {other:?} (seq|tensor|serial)"),
+        }
+    }
+    let events = rec.finish();
+    let rows = crate::obs::cross_check(&events, &meter)?;
+    let top_k = args.usize_or("top-k", 10)?;
+    let report =
+        crate::obs::MetricsReport::build(&events, steps as usize, tokens_per_step * steps, top_k);
+    println!("traced run: {label}");
+    print!("{report}");
+    println!(
+        "trace/meter cross-check OK: {} comm kinds, {} comm events",
+        rows.iter().filter(|r| r.trace_events > 0).count(),
+        rows.iter().map(|r| r.trace_events).sum::<u64>(),
+    );
+    // the backend's own per-kernel accounting — same clock as the spans
+    let mut ks = rt.kernel_stats();
+    if !ks.is_empty() {
+        ks.sort_by(|a, b| b.total_ns.cmp(&a.total_ns).then(a.name.cmp(&b.name)));
+        println!(
+            "top-{} kernels by total time (backend {}):",
+            top_k.min(ks.len()),
+            rt.backend_name()
+        );
+        for k in ks.iter().take(top_k) {
+            println!(
+                "  {:<26} {:>8} calls  {:>12}",
+                k.name,
+                k.calls,
+                crate::eval::bench::fmt_ns(k.total_ns as f64)
+            );
+        }
+    }
+    if let Some(p) = args.str_opt("trace") {
+        crate::obs::write_chrome_trace(Path::new(p), &events)?;
+        println!("trace: wrote {} events to {p}", events.len());
+    }
+    if let Some(out) = args.str_opt("out") {
+        let mut doc = report.to_json();
+        if let crate::util::json::Value::Obj(map) = &mut doc {
+            map.insert("run".to_string(), crate::util::json::Value::Str(label.clone()));
+        }
+        std::fs::write(out, crate::util::json::encode(&doc))?;
+        println!("metrics: wrote {out}");
+    }
+    Ok(())
+}
+
+/// `trace --validate FILE`: parse + schema-check an existing
+/// Chrome-trace JSON file and summarize it.
+fn validate_trace_file(path: &Path) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    let doc = crate::util::json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    let chk = crate::obs::validate_chrome_trace(&doc)?;
+    println!(
+        "{}: {} records ({} complete events, {} metadata) across {} rank(s)",
+        path.display(),
+        chk.events,
+        chk.complete,
+        chk.meta,
+        chk.pids.len()
+    );
+    for (cat, count) in &chk.cats {
+        println!("  {cat:<10} {count}");
+    }
+    println!("TRACE VALIDATE OK");
+    Ok(())
 }
 
 // ------------------------------------------------------------------------

@@ -226,7 +226,8 @@ impl<'a> Link<'a> {
         match self {
             Link::Queue { q, meter } => {
                 for t in &parts {
-                    meter.add(CommKind::Pipeline, t.bytes() as u64);
+                    let sp = crate::obs::begin();
+                    meter.add_traced(CommKind::Pipeline, t.bytes() as u64, sp);
                 }
                 q.borrow_mut().push_back(parts);
                 Ok(())
@@ -381,8 +382,9 @@ impl<'a> TpStage<'a> {
             .local_ranks()
             .iter()
             .map(|&d| {
+                let sp = crate::obs::begin();
                 let sl = ops::slice_dim0(&x, d * rows, (d + 1) * rows)?;
-                self.meter.add(CommKind::Scatter, sl.bytes() as u64);
+                self.meter.add_traced(CommKind::Scatter, sl.bytes() as u64, sp);
                 Ok(sl)
             })
             .collect::<Result<Vec<_>>>()?;
@@ -690,6 +692,7 @@ impl<'rt> MeshStep for MeshEngine<'rt> {
             for c in &cells {
                 let s = c.stage;
                 let batch = &batches[r][c.micro];
+                let sp = crate::obs::begin();
                 if c.forward {
                     let prev = (s > 0).then(|| Link::Queue { q: &fwd_q[s - 1], meter });
                     let next = (s + 1 < pp).then(|| Link::Queue { q: &fwd_q[s], meter });
@@ -699,6 +702,7 @@ impl<'rt> MeshStep for MeshEngine<'rt> {
                     let next = (s + 1 < pp).then(|| Link::Queue { q: &bwd_q[s], meter });
                     stages[s].backward_micro(c.micro, batch, prev.as_ref(), next.as_ref())?;
                 }
+                sp.end_cell(s, c.micro, c.forward);
             }
             let mut per_stage = Vec::with_capacity(pp);
             for (s, st) in stages.into_iter().enumerate() {
@@ -788,15 +792,19 @@ fn run_coord(
         .collect();
     cells.sort_by_key(|c| c.start);
     for c in &cells {
+        let sp = crate::obs::begin();
         if c.forward {
             st.forward_micro(c.micro, &replica[c.micro], prev.as_ref(), next.as_ref())?;
         } else {
             st.backward_micro(c.micro, &replica[c.micro], prev.as_ref(), next.as_ref())?;
         }
+        sp.end_cell(stage_idx, c.micro, c.forward);
     }
     let (mlm, sop, mut g) = st.finish(&spec.owned[stage_idx])?;
     if spec.mesh.dp > 1 {
+        let sp = crate::obs::begin();
         allreduce_named(dpc, &mut g, &spec.owned[stage_idx])?;
+        sp.end_phase("grad_allreduce");
     }
     Ok((mlm, sop, g.swap_remove(0)))
 }
@@ -864,13 +872,16 @@ impl<'rt> MeshStep for MeshRunner<'rt> {
             slots.push((coord, mpc, dpc, ppc));
         }
 
+        let fh = crate::obs::fork();
         let results: Vec<(usize, Result<(f32, f32, ParamStore)>)> = thread::scope(|sc| {
             let mut handles = Vec::with_capacity(world);
             for (rank, (coord, mpc, dpc, ppc)) in slots.into_iter().enumerate() {
                 let replica = &batches[coord.dp];
                 handles.push(sc.spawn(move || {
+                    crate::obs::adopt(fh, rank);
                     let out =
                         run_coord(ex, spec, params, replica, coord, &mpc, &dpc, &ppc, meter);
+                    crate::obs::flush();
                     (rank, out)
                 }));
             }

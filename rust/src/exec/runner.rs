@@ -79,14 +79,17 @@ impl<'rt> DistRunner<'rt> {
         let shape = &self.shape;
         let comms = mesh(self.n, self.meter.clone());
 
+        let fh = crate::obs::fork();
         let results: Vec<(usize, Result<RankOutput>)> = thread::scope(|s| {
             let handles: Vec<_> = comms
                 .into_iter()
                 .map(|comm| {
                     s.spawn(move || {
                         let rank = comm.rank;
+                        crate::obs::adopt(fh, rank);
                         // &(dyn Executor + Sync) coerces to &dyn Executor
                         let out = seqpar_step(ex, &comm, shape, params, batch);
+                        crate::obs::flush();
                         (rank, out)
                     })
                 })

@@ -45,6 +45,10 @@
 //! * [`backend`] — the executors: `native` (pure rust) and `xla_pjrt`
 //!   (PJRT artifact runner, feature-gated)
 //! * [`model`] — transformer config, parameter store (+ seeded init)
+//! * [`obs`] — runtime observability: per-rank span recorder, Chrome-trace
+//!   export (`train --trace`), per-step metrics + measured comm/compute/
+//!   bubble attribution (`trace` subcommand), cross-checked event-for-op
+//!   against the [`comm`] meters
 //! * [`parallel`] — the engines: sequence (RSA), tensor (Megatron),
 //!   pipeline (GPipe), data; and the 4D topology
 //! * [`train`] — Adam, LR schedule, losses bookkeeping, synthetic corpus
@@ -60,6 +64,7 @@ pub mod comm;
 pub mod eval;
 pub mod exec;
 pub mod model;
+pub mod obs;
 pub mod parallel;
 pub mod runtime;
 pub mod simulator;

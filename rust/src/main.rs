@@ -8,6 +8,7 @@
 //! seqpar train [--engine seq|tensor|serial] [--steps N] ...
 //! seqpar analyze [--grid]             # static collective-schedule verifier
 //! seqpar sweep --experiment fig3a ... # simulator-backed paper figures
+//! seqpar trace [--out BENCH_obs.json] # measured metrics + Chrome trace
 //! ```
 //!
 //! Run `seqpar help` for the full flag reference.
@@ -25,6 +26,7 @@ fn main() -> Result<()> {
         "train" => seqpar::eval::cmd::train(&args),
         "analyze" => seqpar::eval::cmd::analyze(&args),
         "sweep" => seqpar::eval::cmd::sweep(&args),
+        "trace" => seqpar::eval::cmd::trace(&args),
         "help" | _ => {
             print!("{}", seqpar::eval::cmd::HELP);
             Ok(())

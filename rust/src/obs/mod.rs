@@ -1,0 +1,1067 @@
+//! Runtime observability: per-rank span timelines, Chrome-trace export
+//! and measured comm/compute/bubble attribution.
+//!
+//! The static [`crate::analysis`] layer proves what bytes *must* move;
+//! this module measures where a step's wall-clock actually *goes*.  It is
+//! a span recorder with three design constraints:
+//!
+//! * **Zero heap work when disabled.**  [`begin`] is a single relaxed
+//!   atomic load when recording is off; every `end_*` on a dead
+//!   [`Span`] is a no-op.  The overhead contract is asserted by
+//!   `benches/obs_overhead.rs` (spans-per-step × disabled-span cost must
+//!   stay under step-time noise).
+//! * **One clock discipline.**  All timestamps are nanoseconds since a
+//!   process-wide monotonic epoch ([`now_ns`]); the [`Stopwatch`] used by
+//!   the trainer, the bench harness and the native backend reads the
+//!   same clock, so every reported duration is comparable.
+//! * **Trace events are metering-anchored.**  Every comm event is
+//!   emitted exactly where the [`crate::comm::Meter`] records the op
+//!   ([`crate::comm::Meter::add_traced`]), so per-[`CommKind`] event
+//!   counts and byte totals equal the meter's per-kind op/byte counters
+//!   *by construction*, under both the sequential `Fabric` and the
+//!   threaded `RingComm` conventions.  [`cross_check`] asserts it.
+//!
+//! # Thread model
+//!
+//! Recording is scoped by a [`Recorder`] session (a global lock — one
+//! session at a time; tests serialize through it).  Events are buffered
+//! thread-locally — no locking on the hot path — and merged into a
+//! global sink at rank join: rank threads spawned by `exec::DistRunner`
+//! / `exec::MeshRunner` inherit the session through a [`ForkHandle`]
+//! captured on the spawning thread ([`fork`]), tag themselves with their
+//! global rank ([`adopt`]), and [`flush`] their buffer before the scope
+//! joins.  Threads that never adopted the live session record nothing,
+//! so concurrent un-instrumented work cannot contaminate a trace.
+//!
+//! Blocking channel receives on the threaded path wrap themselves in a
+//! [`Waiter`], which accumulates *wait* nanoseconds into the thread's
+//! counter; a comm span reports `dur − wait` as transfer/compute and
+//! `wait` as time spent blocked on a peer.
+//!
+//! # Exports
+//!
+//! [`chrome_trace`] renders events in Chrome trace format (one pid per
+//! rank, `ph:"X"` complete events, args carrying bytes/kind) for
+//! Perfetto / `chrome://tracing`; [`validate_chrome_trace`] schema-checks
+//! a parsed file.  [`MetricsReport`] aggregates a trace into step wall
+//! time, per-kind comm busy/wait totals, top-k kernels and the measured
+//! GPipe bubble fraction ([`bubble_fraction`]), which converges on the
+//! closed form `(s-1)/(m+s-1)` from [`crate::parallel::pipeline`].
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::{CommKind, Meter};
+use crate::util::json::{encode, Value};
+
+// ---------------------------------------------------------------------
+// Global state
+// ---------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+/// Current live session id (0 = none).  Monotonic: never reused.
+static SESSION_ID: AtomicU64 = AtomicU64::new(0);
+static SESSION_CTR: AtomicU64 = AtomicU64::new(0);
+/// One recording session at a time (tests serialize through this).
+static SESSION_LOCK: Mutex<()> = Mutex::new(());
+/// Rank buffers merged here at flush.
+static SINK: Mutex<Vec<Event>> = Mutex::new(Vec::new());
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+#[derive(Default)]
+struct Tls {
+    session: u64,
+    rank: usize,
+    wait_ns: u64,
+    events: Vec<Event>,
+}
+
+thread_local! {
+    static TLS: RefCell<Tls> = RefCell::new(Tls::default());
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Nanoseconds since the process-wide monotonic epoch (pinned on first
+/// use).  Every duration in the crate — spans, trainer step times, bench
+/// iterations, backend kernel stats — derives from this one clock.
+pub fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// Is a recording session live?  (Cheap: one relaxed atomic load.)
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------
+// Events
+// ---------------------------------------------------------------------
+
+/// What a span measured.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// One `Executor::call`: artifact name + total input/output bytes.
+    Kernel { name: String, bytes: u64 },
+    /// One metered collective op: kind, payload bytes (the meter's own
+    /// accounting convention), and nanoseconds spent blocked on a
+    /// channel recv inside the op (0 on the sequential fabric).
+    Comm { kind: CommKind, bytes: u64, wait_ns: u64 },
+    /// A named algorithm phase (`sp_embed_fwd`, `ring_hop`, `optimizer`,
+    /// `step`, …); `index` disambiguates repeats (hop t, layer l).
+    Phase { name: &'static str, index: Option<usize> },
+    /// One GPipe cell (stage, microbatch, direction); `wait_ns` is recv
+    /// blocking inside the cell so `dur − wait` is true busy time.
+    Cell { stage: usize, micro: usize, forward: bool, wait_ns: u64 },
+}
+
+/// One recorded span: `[t0_ns, t0_ns + dur_ns]` on rank `rank`'s
+/// timeline (ranks map to Chrome-trace pids).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Event {
+    pub rank: usize,
+    pub t0_ns: u64,
+    pub dur_ns: u64,
+    pub kind: EventKind,
+}
+
+impl Event {
+    /// Display name (also the Chrome-trace event name).
+    pub fn name(&self) -> String {
+        match &self.kind {
+            EventKind::Kernel { name, .. } => name.clone(),
+            EventKind::Comm { kind, .. } => format!("{kind:?}"),
+            EventKind::Phase { name, index: None } => (*name).to_string(),
+            EventKind::Phase { name, index: Some(i) } => format!("{name}:{i}"),
+            EventKind::Cell { stage, micro, forward, .. } => {
+                format!("cell s{stage} m{micro} {}", if *forward { "fwd" } else { "bwd" })
+            }
+        }
+    }
+
+    fn cat(&self) -> &'static str {
+        match self.kind {
+            EventKind::Kernel { .. } => "kernel",
+            EventKind::Comm { .. } => "comm",
+            EventKind::Phase { .. } => "phase",
+            EventKind::Cell { .. } => "cell",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Spans
+// ---------------------------------------------------------------------
+
+/// An open span.  Obtain with [`begin`]; close with exactly one `end_*`.
+/// A span begun outside a live session (or on a thread that did not
+/// [`adopt`] it) is dead: ending it does nothing, dropping it is free.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    live: bool,
+    t0: u64,
+    wait0: u64,
+}
+
+/// Open a span.  When recording is disabled this is one atomic load and
+/// no heap work; the returned span is dead.
+pub fn begin() -> Span {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return Span { live: false, t0: 0, wait0: 0 };
+    }
+    let sid = SESSION_ID.load(Ordering::Relaxed);
+    TLS.with(|t| {
+        let t = t.borrow();
+        if sid == 0 || t.session != sid {
+            return Span { live: false, t0: 0, wait0: 0 };
+        }
+        Span { live: true, t0: now_ns(), wait0: t.wait_ns }
+    })
+}
+
+impl Span {
+    fn push(self, kind_of: impl FnOnce(u64) -> EventKind) {
+        if !self.live {
+            return;
+        }
+        let now = now_ns();
+        TLS.with(|t| {
+            let mut t = t.borrow_mut();
+            let wait = t.wait_ns.saturating_sub(self.wait0);
+            let ev = Event {
+                rank: t.rank,
+                t0_ns: self.t0,
+                dur_ns: now.saturating_sub(self.t0),
+                kind: kind_of(wait),
+            };
+            t.events.push(ev);
+        });
+    }
+
+    /// Close as a kernel-call event.
+    pub fn end_kernel(self, name: &str, bytes: u64) {
+        if !self.live {
+            return;
+        }
+        let name = name.to_string();
+        self.push(|_| EventKind::Kernel { name, bytes });
+    }
+
+    /// Close as a collective event; the wait split is the growth of the
+    /// thread's [`Waiter`] counter while the span was open.
+    pub fn end_comm(self, kind: CommKind, bytes: u64) {
+        self.push(|wait_ns| EventKind::Comm { kind, bytes, wait_ns });
+    }
+
+    /// Close as an algorithm phase.
+    pub fn end_phase(self, name: &'static str) {
+        self.push(|_| EventKind::Phase { name, index: None });
+    }
+
+    /// Close as an indexed phase (ring hop t, layer l, …).
+    pub fn end_phase_idx(self, name: &'static str, index: usize) {
+        self.push(|_| EventKind::Phase { name, index: Some(index) });
+    }
+
+    /// Close as a GPipe cell (stage, microbatch, direction).
+    pub fn end_cell(self, stage: usize, micro: usize, forward: bool) {
+        self.push(|wait_ns| EventKind::Cell { stage, micro, forward, wait_ns });
+    }
+}
+
+/// Accumulates time spent blocked on a channel recv into the thread's
+/// wait counter, so enclosing comm/cell spans can report a wait-vs-work
+/// split.  Dead (one atomic load) outside a live session.
+#[derive(Clone, Copy, Debug)]
+pub struct Waiter {
+    live: bool,
+    t0: u64,
+}
+
+/// Start timing a blocking wait.
+pub fn wait_begin() -> Waiter {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return Waiter { live: false, t0: 0 };
+    }
+    let sid = SESSION_ID.load(Ordering::Relaxed);
+    let live = sid != 0 && TLS.with(|t| t.borrow().session == sid);
+    Waiter { live, t0: if live { now_ns() } else { 0 } }
+}
+
+impl Waiter {
+    /// The wait is over; credit it to the thread's wait counter.
+    pub fn end(self) {
+        if !self.live {
+            return;
+        }
+        let dt = now_ns().saturating_sub(self.t0);
+        TLS.with(|t| t.borrow_mut().wait_ns += dt);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Stopwatch — the one timer (trainer, bench harness, backend stats)
+// ---------------------------------------------------------------------
+
+/// A plain stopwatch over the [`now_ns`] clock.  Always runs (it does
+/// not record events and needs no session) — this is the unified
+/// replacement for the ad-hoc `Instant::now()` timers.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    t0: u64,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch { t0: now_ns() }
+    }
+
+    pub fn elapsed_ns(&self) -> u64 {
+        now_ns().saturating_sub(self.t0)
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed_ns() as f64 / 1e9
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sessions
+// ---------------------------------------------------------------------
+
+/// A live recording session.  Holds the global session lock (so
+/// concurrent tests serialize), enables recording on construction and
+/// disables it on [`Recorder::finish`] / drop.  The calling thread is
+/// rank 0; spawned rank threads join via [`fork`] / [`adopt`] /
+/// [`flush`].
+pub struct Recorder {
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl Recorder {
+    /// Begin recording.  Blocks until any other session has finished.
+    pub fn start() -> Recorder {
+        let guard = lock(&SESSION_LOCK);
+        let id = SESSION_CTR.fetch_add(1, Ordering::Relaxed) + 1;
+        lock(&SINK).clear();
+        TLS.with(|t| {
+            let mut t = t.borrow_mut();
+            t.session = id;
+            t.rank = 0;
+            t.wait_ns = 0;
+            t.events.clear();
+        });
+        SESSION_ID.store(id, Ordering::SeqCst);
+        ENABLED.store(true, Ordering::SeqCst);
+        Recorder { _lock: guard }
+    }
+
+    /// Stop recording and return every event, merged across ranks and
+    /// sorted by `(rank, t0)`.
+    pub fn finish(self) -> Vec<Event> {
+        flush();
+        ENABLED.store(false, Ordering::SeqCst);
+        SESSION_ID.store(0, Ordering::SeqCst);
+        let mut events = std::mem::take(&mut *lock(&SINK));
+        events.sort_by(|a, b| (a.rank, a.t0_ns).cmp(&(b.rank, b.t0_ns)));
+        events
+    }
+}
+
+impl Drop for Recorder {
+    fn drop(&mut self) {
+        ENABLED.store(false, Ordering::SeqCst);
+        SESSION_ID.store(0, Ordering::SeqCst);
+    }
+}
+
+/// A capability to record into the current session from another thread.
+/// Capture on the session thread with [`fork`]; pass into the spawned
+/// closure; redeem with [`adopt`].
+#[derive(Clone, Copy, Debug)]
+pub struct ForkHandle {
+    session: u64,
+}
+
+/// Capture the calling thread's session (dead handle if none live).
+pub fn fork() -> ForkHandle {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return ForkHandle { session: 0 };
+    }
+    let sid = SESSION_ID.load(Ordering::Relaxed);
+    let mine = TLS.with(|t| t.borrow().session);
+    ForkHandle { session: if sid != 0 && mine == sid { sid } else { 0 } }
+}
+
+/// Join the handle's session as global rank `rank` (one pid per rank in
+/// the exported trace).  A dead or stale handle leaves the thread
+/// un-adopted: it records nothing.
+pub fn adopt(h: ForkHandle, rank: usize) {
+    if h.session == 0 || h.session != SESSION_ID.load(Ordering::Relaxed) {
+        return;
+    }
+    TLS.with(|t| {
+        let mut t = t.borrow_mut();
+        t.session = h.session;
+        t.rank = rank;
+        t.wait_ns = 0;
+        t.events.clear();
+    });
+}
+
+/// Merge this thread's buffered events into the session sink.  Rank
+/// closures call this right before their scope joins; [`Recorder::finish`]
+/// calls it for the session thread.
+pub fn flush() {
+    TLS.with(|t| {
+        let mut t = t.borrow_mut();
+        if t.session != 0
+            && t.session == SESSION_ID.load(Ordering::Relaxed)
+            && !t.events.is_empty()
+        {
+            lock(&SINK).append(&mut t.events);
+        } else {
+            t.events.clear();
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Chrome-trace export
+// ---------------------------------------------------------------------
+
+fn num(v: f64) -> Value {
+    Value::Num(v)
+}
+
+fn s(v: impl Into<String>) -> Value {
+    Value::Str(v.into())
+}
+
+fn obj(pairs: Vec<(&str, Value)>) -> Value {
+    Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Render events in Chrome trace format (the object form with a
+/// `traceEvents` array): one pid per rank with a `process_name`
+/// metadata record, `ph:"X"` complete events with microsecond
+/// timestamps, and args carrying bytes / kind / wait so Perfetto can
+/// render the ring pipeline.
+pub fn chrome_trace(events: &[Event]) -> Value {
+    let mut out: Vec<Value> = Vec::with_capacity(events.len() + 8);
+    let mut ranks: Vec<usize> = events.iter().map(|e| e.rank).collect();
+    ranks.sort_unstable();
+    ranks.dedup();
+    for r in &ranks {
+        out.push(obj(vec![
+            ("name", s("process_name")),
+            ("ph", s("M")),
+            ("pid", num(*r as f64)),
+            ("tid", num(0.0)),
+            ("args", obj(vec![("name", s(format!("rank {r}")))])),
+        ]));
+    }
+    for e in events {
+        let args = match &e.kind {
+            EventKind::Kernel { bytes, .. } => obj(vec![("bytes", num(*bytes as f64))]),
+            EventKind::Comm { kind, bytes, wait_ns } => obj(vec![
+                ("kind", s(format!("{kind:?}"))),
+                ("bytes", num(*bytes as f64)),
+                ("wait_us", num(*wait_ns as f64 / 1e3)),
+            ]),
+            EventKind::Phase { .. } => obj(vec![]),
+            EventKind::Cell { stage, micro, forward, wait_ns } => obj(vec![
+                ("stage", num(*stage as f64)),
+                ("micro", num(*micro as f64)),
+                ("forward", Value::Bool(*forward)),
+                ("wait_us", num(*wait_ns as f64 / 1e3)),
+            ]),
+        };
+        out.push(obj(vec![
+            ("name", s(e.name())),
+            ("cat", s(e.cat())),
+            ("ph", s("X")),
+            ("ts", num(e.t0_ns as f64 / 1e3)),
+            ("dur", num(e.dur_ns as f64 / 1e3)),
+            ("pid", num(e.rank as f64)),
+            ("tid", num(0.0)),
+            ("args", args),
+        ]));
+    }
+    obj(vec![("traceEvents", Value::Arr(out)), ("displayTimeUnit", s("ms"))])
+}
+
+/// Serialize a Chrome trace for `events` to `path`.
+pub fn write_chrome_trace(path: &Path, events: &[Event]) -> Result<()> {
+    let json = encode(&chrome_trace(events));
+    std::fs::write(path, json)
+        .with_context(|| format!("writing trace to {}", path.display()))?;
+    Ok(())
+}
+
+/// Summary of a validated Chrome-trace file.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct TraceCheck {
+    /// Total records in `traceEvents`.
+    pub events: usize,
+    /// `ph:"X"` complete events.
+    pub complete: usize,
+    /// `ph:"M"` metadata records.
+    pub meta: usize,
+    /// Distinct pids (ranks), ascending.
+    pub pids: Vec<usize>,
+    /// Complete-event count per `cat`.
+    pub cats: BTreeMap<String, usize>,
+}
+
+/// Schema-check a parsed Chrome-trace document: a `traceEvents` array
+/// whose records each carry a string `name`/`ph`, numeric `pid`, numeric
+/// `ts` and, for `ph:"X"`, a non-negative numeric `dur`.
+pub fn validate_chrome_trace(doc: &Value) -> Result<TraceCheck> {
+    let events = doc
+        .req("traceEvents")
+        .context("chrome trace: root must be an object with a traceEvents key")?
+        .as_arr()
+        .context("chrome trace: traceEvents must be an array")?;
+    let mut check = TraceCheck::default();
+    for (i, e) in events.iter().enumerate() {
+        let at = || format!("traceEvents[{i}]");
+        if e.as_obj().is_none() {
+            bail!("{}: must be an object, got {}", at(), e.type_name());
+        }
+        let name = e.req("name").with_context(at)?;
+        if name.as_str().is_none() {
+            bail!("{}: name must be a string", at());
+        }
+        let ph = e
+            .req("ph")
+            .with_context(at)?
+            .as_str()
+            .with_context(|| format!("{}: ph must be a string", at()))?
+            .to_string();
+        let pid = e
+            .req("pid")
+            .with_context(at)?
+            .as_usize()
+            .with_context(|| format!("{}: pid must be a non-negative integer", at()))?;
+        check.events += 1;
+        match ph.as_str() {
+            "X" => {
+                e.req("ts")
+                    .with_context(at)?
+                    .as_f64()
+                    .with_context(|| format!("{}: ts must be numeric", at()))?;
+                let dur = e
+                    .req("dur")
+                    .with_context(at)?
+                    .as_f64()
+                    .with_context(|| format!("{}: dur must be numeric", at()))?;
+                if dur < 0.0 {
+                    bail!("{}: dur must be non-negative, got {dur}", at());
+                }
+                check.complete += 1;
+                if let Some(cat) = e.get("cat").and_then(|c| c.as_str()) {
+                    *check.cats.entry(cat.to_string()).or_insert(0) += 1;
+                }
+                if !check.pids.contains(&pid) {
+                    check.pids.push(pid);
+                }
+            }
+            "M" => check.meta += 1,
+            other => bail!("{}: unsupported ph {other:?} (expected X or M)", at()),
+        }
+    }
+    check.pids.sort_unstable();
+    Ok(check)
+}
+
+// ---------------------------------------------------------------------
+// Metrics
+// ---------------------------------------------------------------------
+
+/// Per-[`CommKind`] aggregate over a trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CommAgg {
+    pub kind: CommKind,
+    /// Trace event count == the meter's per-kind op count.
+    pub events: u64,
+    /// Payload bytes == the meter's per-kind byte counter.
+    pub bytes: u64,
+    /// Total span time (includes wait).
+    pub busy_ns: u64,
+    /// Time blocked on channel recvs inside the spans.
+    pub wait_ns: u64,
+}
+
+/// Per-kernel aggregate over a trace's kernel events.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KernelAgg {
+    pub name: String,
+    pub calls: u64,
+    pub total_ns: u64,
+}
+
+/// A trace distilled: wall time, throughput, comm attribution, top-k
+/// kernels and measured pipeline bubble.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsReport {
+    /// Steps the trace covers.
+    pub steps: usize,
+    /// Wall time: the sum of `step` phase spans when present, else the
+    /// whole event window.
+    pub wall_ns: u64,
+    /// `tokens / wall` (0 when either is unknown).
+    pub tokens_per_sec: f64,
+    /// Per-kind comm totals, fixed meter order, kinds with events only.
+    pub comm: Vec<CommAgg>,
+    /// Kernel totals, descending total time, truncated to top-k.
+    pub kernels: Vec<KernelAgg>,
+    /// Total kernel time across ALL kernels (not just top-k).
+    pub kernel_ns: u64,
+    /// Measured GPipe bubble fraction, when the trace has cell events.
+    pub bubble: Option<f64>,
+}
+
+/// Measured pipeline bubble fraction from GPipe cell events:
+/// `1 − Σ busy / (lanes × window)` where busy excludes recv wait, the
+/// window spans first cell start to last cell end, and a lane is one
+/// RANK that recorded cells (on the threaded mesh every pp×mp×dp
+/// coordinate runs its stage's schedule, so lanes are ranks, not
+/// stages — keying by stage would double-count busy whenever mp or dp
+/// exceeds 1).  With uniform forward cells and uniform backward cells
+/// this converges on `(s−1)/(m+s−1)` — the closed form pinned by
+/// `crate::parallel::pipeline::Schedule::bubble_fraction` — independent
+/// of the backward/forward cost ratio.  Compute it from single-step
+/// traces; a multi-step window includes optimizer time between waves.
+pub fn bubble_fraction(events: &[Event]) -> Option<f64> {
+    let mut busy: BTreeMap<usize, u64> = BTreeMap::new();
+    let mut t_min = u64::MAX;
+    let mut t_max = 0u64;
+    for e in events {
+        if let EventKind::Cell { wait_ns, .. } = e.kind {
+            *busy.entry(e.rank).or_insert(0) += e.dur_ns.saturating_sub(wait_ns);
+            t_min = t_min.min(e.t0_ns);
+            t_max = t_max.max(e.t0_ns + e.dur_ns);
+        }
+    }
+    if busy.is_empty() || t_max <= t_min {
+        return None;
+    }
+    let window = (t_max - t_min) as f64;
+    let lanes = busy.len() as f64;
+    let total: u64 = busy.values().sum();
+    Some((1.0 - total as f64 / (lanes * window)).clamp(0.0, 1.0))
+}
+
+impl MetricsReport {
+    /// Aggregate `events` into a report.  `tokens` is the total token
+    /// count processed over `steps` (for throughput); `top_k` bounds the
+    /// kernel table.
+    pub fn build(events: &[Event], steps: usize, tokens: u64, top_k: usize) -> MetricsReport {
+        let mut comm: BTreeMap<usize, CommAgg> = BTreeMap::new();
+        let mut kernels: BTreeMap<String, KernelAgg> = BTreeMap::new();
+        let mut step_ns = 0u64;
+        let mut have_steps = false;
+        let mut t_min = u64::MAX;
+        let mut t_max = 0u64;
+        let mut kernel_ns = 0u64;
+        for e in events {
+            t_min = t_min.min(e.t0_ns);
+            t_max = t_max.max(e.t0_ns + e.dur_ns);
+            match &e.kind {
+                EventKind::Comm { kind, bytes, wait_ns } => {
+                    let a = comm.entry(kind_index(*kind)).or_insert(CommAgg {
+                        kind: *kind,
+                        events: 0,
+                        bytes: 0,
+                        busy_ns: 0,
+                        wait_ns: 0,
+                    });
+                    a.events += 1;
+                    a.bytes += bytes;
+                    a.busy_ns += e.dur_ns;
+                    a.wait_ns += wait_ns;
+                }
+                EventKind::Kernel { name, .. } => {
+                    let a = kernels.entry(name.clone()).or_insert(KernelAgg {
+                        name: name.clone(),
+                        calls: 0,
+                        total_ns: 0,
+                    });
+                    a.calls += 1;
+                    a.total_ns += e.dur_ns;
+                    kernel_ns += e.dur_ns;
+                }
+                EventKind::Phase { name, .. } if *name == "step" => {
+                    have_steps = true;
+                    step_ns += e.dur_ns;
+                }
+                _ => {}
+            }
+        }
+        let wall_ns = if have_steps {
+            step_ns
+        } else if t_max > t_min {
+            t_max - t_min
+        } else {
+            0
+        };
+        let mut kernels: Vec<KernelAgg> = kernels.into_values().collect();
+        kernels.sort_by(|a, b| b.total_ns.cmp(&a.total_ns).then(a.name.cmp(&b.name)));
+        kernels.truncate(top_k);
+        MetricsReport {
+            steps,
+            wall_ns,
+            tokens_per_sec: if wall_ns > 0 {
+                tokens as f64 / (wall_ns as f64 / 1e9)
+            } else {
+                0.0
+            },
+            comm: comm.into_values().collect(),
+            kernels,
+            kernel_ns,
+            bubble: bubble_fraction(events),
+        }
+    }
+
+    /// Render the report as a JSON tree (the `BENCH_obs.json` payload).
+    pub fn to_json(&self) -> Value {
+        let comm = self
+            .comm
+            .iter()
+            .map(|a| {
+                (
+                    format!("{:?}", a.kind),
+                    obj(vec![
+                        ("events", num(a.events as f64)),
+                        ("bytes", num(a.bytes as f64)),
+                        ("busy_ns", num(a.busy_ns as f64)),
+                        ("wait_ns", num(a.wait_ns as f64)),
+                    ]),
+                )
+            })
+            .collect();
+        let kernels = self
+            .kernels
+            .iter()
+            .map(|k| {
+                obj(vec![
+                    ("name", s(k.name.clone())),
+                    ("calls", num(k.calls as f64)),
+                    ("total_ns", num(k.total_ns as f64)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("steps", num(self.steps as f64)),
+            ("wall_ns", num(self.wall_ns as f64)),
+            ("tokens_per_sec", num(self.tokens_per_sec)),
+            ("kernel_ns", num(self.kernel_ns as f64)),
+            ("comm", Value::Obj(comm)),
+            ("kernels_top", Value::Arr(kernels)),
+            (
+                "bubble",
+                self.bubble.map(Value::Num).unwrap_or(Value::Null),
+            ),
+        ])
+    }
+}
+
+impl std::fmt::Display for MetricsReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "steps: {}   wall: {:.3} ms   tokens/sec: {:.0}",
+            self.steps,
+            self.wall_ns as f64 / 1e6,
+            self.tokens_per_sec
+        )?;
+        writeln!(f, "kernel time (all ranks): {:.3} ms", self.kernel_ns as f64 / 1e6)?;
+        if let Some(b) = self.bubble {
+            writeln!(f, "measured pipeline bubble: {b:.4}")?;
+        }
+        if !self.comm.is_empty() {
+            writeln!(
+                f,
+                "{:<10} {:>8} {:>14} {:>12} {:>12}",
+                "comm", "events", "bytes", "busy ms", "wait ms"
+            )?;
+            for a in &self.comm {
+                writeln!(
+                    f,
+                    "{:<10} {:>8} {:>14} {:>12.3} {:>12.3}",
+                    format!("{:?}", a.kind),
+                    a.events,
+                    a.bytes,
+                    a.busy_ns as f64 / 1e6,
+                    a.wait_ns as f64 / 1e6
+                )?;
+            }
+        }
+        if !self.kernels.is_empty() {
+            writeln!(f, "{:<26} {:>8} {:>12} {:>8}", "kernel (top-k)", "calls", "total ms", "share")?;
+            for k in &self.kernels {
+                writeln!(
+                    f,
+                    "{:<26} {:>8} {:>12.3} {:>7.1}%",
+                    k.name,
+                    k.calls,
+                    k.total_ns as f64 / 1e6,
+                    if self.kernel_ns > 0 {
+                        100.0 * k.total_ns as f64 / self.kernel_ns as f64
+                    } else {
+                        0.0
+                    }
+                )?;
+            }
+        }
+        Ok(())
+    }
+}
+
+fn kind_index(kind: CommKind) -> usize {
+    match kind {
+        CommKind::RingP2p => 0,
+        CommKind::AllReduce => 1,
+        CommKind::AllGather => 2,
+        CommKind::AllToAll => 3,
+        CommKind::Broadcast => 4,
+        CommKind::Scatter => 5,
+        CommKind::Pipeline => 6,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Trace/meter cross-check — the measured-vs-metered invariant
+// ---------------------------------------------------------------------
+
+/// One row of the trace/meter comparison.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CommCheckRow {
+    pub kind: CommKind,
+    pub trace_events: u64,
+    pub trace_bytes: u64,
+    pub meter_ops: u64,
+    pub meter_bytes: u64,
+}
+
+/// Compare a trace's per-[`CommKind`] event counts and byte totals
+/// against a [`Meter`]'s per-kind op and byte counters.  They must be
+/// EQUAL: every comm event is emitted at the op's metering point
+/// ([`Meter::add_traced`]), so any divergence means an instrumentation
+/// bug.  Returns the comparison table; errors on the first mismatch.
+pub fn cross_check(events: &[Event], meter: &Meter) -> Result<Vec<CommCheckRow>> {
+    let mut trace: BTreeMap<usize, (u64, u64)> = BTreeMap::new();
+    for e in events {
+        if let EventKind::Comm { kind, bytes, .. } = e.kind {
+            let t = trace.entry(kind_index(kind)).or_insert((0, 0));
+            t.0 += 1;
+            t.1 += bytes;
+        }
+    }
+    let mut rows = Vec::new();
+    for (kind, meter_ops) in meter.kind_ops() {
+        let (trace_events, trace_bytes) =
+            trace.get(&kind_index(kind)).copied().unwrap_or((0, 0));
+        let meter_bytes = meter.get(kind);
+        let row = CommCheckRow { kind, trace_events, trace_bytes, meter_ops, meter_bytes };
+        if trace_events != meter_ops {
+            bail!(
+                "trace/meter mismatch for {kind:?}: {trace_events} trace events vs {meter_ops} metered ops"
+            );
+        }
+        if trace_bytes != meter_bytes {
+            bail!(
+                "trace/meter mismatch for {kind:?}: {trace_bytes} trace bytes vs {meter_bytes} metered bytes"
+            );
+        }
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        // no session: spans are dead, waiters free
+        let sp = begin();
+        assert!(!sp.live);
+        sp.end_phase("nothing");
+        let w = wait_begin();
+        w.end();
+        flush();
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn session_records_merges_and_sorts() {
+        let rec = Recorder::start();
+        assert!(enabled());
+        let sp = begin();
+        sp.end_phase("step");
+        // rank thread joins via fork/adopt/flush
+        let h = fork();
+        std::thread::scope(|scope| {
+            scope.spawn(move || {
+                adopt(h, 3);
+                let sp = begin();
+                sp.end_kernel("matmul", 128);
+                flush();
+            });
+        });
+        let events = rec.finish();
+        assert!(!enabled());
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].rank, 0);
+        assert_eq!(events[1].rank, 3);
+        assert_eq!(
+            events[1].kind,
+            EventKind::Kernel { name: "matmul".into(), bytes: 128 }
+        );
+        // a fresh session starts clean
+        let rec2 = Recorder::start();
+        assert!(rec2.finish().is_empty());
+    }
+
+    #[test]
+    fn unadopted_threads_do_not_contaminate() {
+        let rec = Recorder::start();
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                // never adopted: everything it does is invisible
+                let sp = begin();
+                sp.end_phase("ghost");
+                flush();
+            });
+        });
+        assert!(rec.finish().is_empty());
+    }
+
+    #[test]
+    fn waiter_splits_comm_time() {
+        let rec = Recorder::start();
+        let sp = begin();
+        let w = wait_begin();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        w.end();
+        sp.end_comm(CommKind::RingP2p, 64);
+        let events = rec.finish();
+        assert_eq!(events.len(), 1);
+        match events[0].kind {
+            EventKind::Comm { kind, bytes, wait_ns } => {
+                assert_eq!(kind, CommKind::RingP2p);
+                assert_eq!(bytes, 64);
+                assert!(wait_ns >= 1_000_000, "wait {wait_ns}ns should cover the sleep");
+                assert!(events[0].dur_ns >= wait_ns);
+            }
+            ref other => panic!("expected comm event, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn chrome_trace_roundtrips_and_validates() {
+        let events = vec![
+            Event {
+                rank: 0,
+                t0_ns: 1_000,
+                dur_ns: 2_000,
+                kind: EventKind::Phase { name: "sp_embed_fwd", index: None },
+            },
+            Event {
+                rank: 1,
+                t0_ns: 1_500,
+                dur_ns: 500,
+                kind: EventKind::Comm { kind: CommKind::AllToAll, bytes: 256, wait_ns: 100 },
+            },
+            Event {
+                rank: 1,
+                t0_ns: 2_500,
+                dur_ns: 700,
+                kind: EventKind::Cell { stage: 1, micro: 0, forward: true, wait_ns: 0 },
+            },
+        ];
+        let doc = chrome_trace(&events);
+        let parsed = crate::util::json::parse(&encode(&doc)).unwrap();
+        let check = validate_chrome_trace(&parsed).unwrap();
+        assert_eq!(check.complete, 3);
+        assert_eq!(check.meta, 2); // one process_name per rank
+        assert_eq!(check.pids, vec![0, 1]);
+        assert_eq!(check.cats.get("comm"), Some(&1));
+        // malformed: ph X without dur
+        let bad = obj(vec![(
+            "traceEvents",
+            Value::Arr(vec![obj(vec![
+                ("name", s("x")),
+                ("ph", s("X")),
+                ("ts", num(0.0)),
+                ("pid", num(0.0)),
+            ])]),
+        )]);
+        assert!(validate_chrome_trace(&bad).is_err());
+    }
+
+    #[test]
+    fn report_aggregates_comm_kernels_and_bubble() {
+        let mk_cell = |stage: usize, micro: usize, t0: u64, dur: u64| Event {
+            rank: stage,
+            t0_ns: t0,
+            dur_ns: dur,
+            kind: EventKind::Cell { stage, micro, forward: true, wait_ns: 0 },
+        };
+        // 2 stages, 2 micros, unit cells in the GPipe dataflow layout:
+        // stage 0 busy [0,2), stage 1 busy [1,3) => window 3, busy 4,
+        // bubble = 1 - 4/6 = (s-1)/(m+s-1) = 1/3.
+        let events = vec![
+            mk_cell(0, 0, 0, 1),
+            mk_cell(0, 1, 1, 1),
+            mk_cell(1, 0, 1, 1),
+            mk_cell(1, 1, 2, 1),
+            Event {
+                rank: 0,
+                t0_ns: 0,
+                dur_ns: 3,
+                kind: EventKind::Phase { name: "step", index: None },
+            },
+            Event {
+                rank: 0,
+                t0_ns: 0,
+                dur_ns: 2,
+                kind: EventKind::Kernel { name: "matmul".into(), bytes: 64 },
+            },
+            Event {
+                rank: 0,
+                t0_ns: 2,
+                dur_ns: 1,
+                kind: EventKind::Kernel { name: "softmax_fwd".into(), bytes: 32 },
+            },
+            Event {
+                rank: 1,
+                t0_ns: 0,
+                dur_ns: 2,
+                kind: EventKind::Comm { kind: CommKind::Pipeline, bytes: 128, wait_ns: 1 },
+            },
+        ];
+        let r = MetricsReport::build(&events, 1, 0, 1);
+        assert_eq!(r.wall_ns, 3);
+        let b = r.bubble.unwrap();
+        assert!((b - 1.0 / 3.0).abs() < 1e-9, "bubble {b}");
+        assert_eq!(r.kernel_ns, 3);
+        assert_eq!(r.kernels.len(), 1, "top-k truncates");
+        assert_eq!(r.kernels[0].name, "matmul");
+        assert_eq!(r.comm.len(), 1);
+        assert_eq!(r.comm[0].events, 1);
+        assert_eq!(r.comm[0].bytes, 128);
+        assert_eq!(r.comm[0].wait_ns, 1);
+        // json tree renders without panicking and keeps the keys
+        let j = r.to_json();
+        assert!(j.req("comm").is_ok());
+        assert_eq!(j.req("steps").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn cross_check_catches_divergence() {
+        let meter = Meter::new();
+        meter.add(CommKind::RingP2p, 100);
+        let good = vec![Event {
+            rank: 0,
+            t0_ns: 0,
+            dur_ns: 1,
+            kind: EventKind::Comm { kind: CommKind::RingP2p, bytes: 100, wait_ns: 0 },
+        }];
+        let rows = cross_check(&good, &meter).unwrap();
+        let ring = rows.iter().find(|r| r.kind == CommKind::RingP2p).unwrap();
+        assert_eq!(ring.trace_events, 1);
+        assert_eq!(ring.meter_ops, 1);
+        assert_eq!(ring.trace_bytes, 100);
+        // missing event: count mismatch
+        assert!(cross_check(&[], &meter).is_err());
+        // byte mismatch
+        let bad = vec![Event {
+            rank: 0,
+            t0_ns: 0,
+            dur_ns: 1,
+            kind: EventKind::Comm { kind: CommKind::RingP2p, bytes: 99, wait_ns: 0 },
+        }];
+        assert!(cross_check(&bad, &meter).is_err());
+    }
+
+    #[test]
+    fn stopwatch_is_monotonic() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed_ns();
+        let b = sw.elapsed_ns();
+        assert!(b >= a);
+        assert!(sw.elapsed_secs() >= 0.0);
+    }
+}

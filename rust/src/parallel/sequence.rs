@@ -523,10 +523,14 @@ pub(crate) fn seqpar_step(
     let ln = ranks.len();
 
     // ---- forward ----------------------------------------------------
+    let sp = crate::obs::begin();
     let mut x = sp_embed_fwd(ex, sh, params, batch, &ranks)?;
+    sp.end_phase("sp_embed_fwd");
     let mut stashes: Vec<LayerStash> = Vec::with_capacity(sh.layers);
     for layer in 0..sh.layers {
+        let sp = crate::obs::begin();
         let (x_next, st) = sp_layer_fwd(ex, view, sh, params, layer, x)?;
+        sp.end_phase_idx("sp_layer_fwd", layer);
         x = x_next;
         stashes.push(st);
     }
@@ -538,16 +542,22 @@ pub(crate) fn seqpar_step(
     // same per-rank gradient memory the real device group holds — where
     // the old engine shortcut summed into one store and only metered.
     let mut grads: Vec<ParamStore> = (0..ln).map(|_| params.zeros_like()).collect();
+    let sp = crate::obs::begin();
     let (mlm_total, sop, mut dx) =
         sp_heads_fwd_bwd(ex, sh, params, batch, &x, &ranks, &mut grads)?;
+    sp.end_phase("sp_heads_fwd_bwd");
 
     let hidden = x;
 
     // ---- backward ------------------------------------------------------
     for layer in (0..sh.layers).rev() {
+        let sp = crate::obs::begin();
         dx = sp_layer_bwd(ex, view, sh, params, layer, &stashes[layer], &dx, &mut grads)?;
+        sp.end_phase_idx("sp_layer_bwd", layer);
     }
+    let sp = crate::obs::begin();
     sp_embed_bwd(ex, sh, params, batch, &dx, &ranks, &mut grads)?;
+    sp.end_phase("sp_embed_bwd");
 
     // Parameter-gradient all-reduce across the ring group: each rank
     // computed grads from its own tokens; after the reduce every rank
@@ -555,8 +565,10 @@ pub(crate) fn seqpar_step(
     // canonical ring formula — 2(n-1)·C total per tensor, the same group
     // accounting Fabric and RingComm share (rust/tests/comm_volume.rs).
     if sh.n > 1 {
+        let sp = crate::obs::begin();
         let names: Vec<String> = grads[0].values.keys().cloned().collect();
         super::allreduce_named(view, &mut grads, &names)?;
+        sp.end_phase("grad_allreduce");
     }
 
     Ok(RankOutput {

@@ -395,21 +395,31 @@ pub(crate) fn tp_step(
     let ranks = view.local_ranks();
     let ln = ranks.len();
 
+    let sp = crate::obs::begin();
     let mut x = tp_embed_fwd(ex, tsh, params, batch)?;
+    sp.end_phase("tp_embed_fwd");
     let mut stashes = Vec::with_capacity(tsh.layers);
     for layer in 0..tsh.layers {
+        let sp = crate::obs::begin();
         let (x_next, st) = tp_layer_fwd(ex, view, tsh, params, layer, x)?;
+        sp.end_phase_idx("tp_layer_fwd", layer);
         x = x_next;
         stashes.push(st);
     }
 
     let mut grads: Vec<ParamStore> = (0..ln).map(|_| params.zeros_like()).collect();
+    let sp = crate::obs::begin();
     let (mlm, sop, mut dx) = tp_heads_fwd_bwd(ex, tsh, params, batch, &x, &ranks, &mut grads)?;
+    sp.end_phase("tp_heads_fwd_bwd");
 
     for layer in (0..tsh.layers).rev() {
+        let sp = crate::obs::begin();
         dx = tp_layer_bwd(ex, view, tsh, params, layer, &stashes[layer], &dx, &mut grads)?;
+        sp.end_phase_idx("tp_layer_bwd", layer);
     }
+    let sp = crate::obs::begin();
     tp_embed_bwd(ex, tsh, params, batch, &dx, &ranks, &mut grads)?;
+    sp.end_phase("tp_embed_bwd");
     Ok((mlm, sop, x, grads))
 }
 

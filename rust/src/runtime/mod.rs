@@ -37,6 +37,16 @@ pub struct RuntimeStats {
     pub exec_nanos: u64,
 }
 
+/// Per-kernel dispatch totals — the `trace` subcommand renders these as
+/// the "top-k kernels by total time" table.  Backends that do not track
+/// per-kernel time return an empty vec (the default).
+#[derive(Clone, Debug)]
+pub struct KernelStat {
+    pub name: String,
+    pub calls: u64,
+    pub total_ns: u64,
+}
+
 /// An executor runs manifest-described step artifacts.
 ///
 /// The contract every backend upholds: `call` validates inputs against the
@@ -63,6 +73,12 @@ pub trait Executor {
     /// Distinct executables compiled / kernels dispatched so far.
     fn cached_executables(&self) -> usize {
         0
+    }
+
+    /// Per-kernel call/time breakdown, unsorted.  Backends without
+    /// per-kernel accounting keep the empty default.
+    fn kernel_stats(&self) -> Vec<KernelStat> {
+        Vec::new()
     }
 }
 
@@ -170,6 +186,10 @@ impl Runtime {
     pub fn cached_executables(&self) -> usize {
         self.backend().cached_executables()
     }
+
+    pub fn kernel_stats(&self) -> Vec<KernelStat> {
+        self.backend().kernel_stats()
+    }
 }
 
 impl Executor for NativeBackend {
@@ -187,6 +207,10 @@ impl Executor for NativeBackend {
 
     fn cached_executables(&self) -> usize {
         NativeBackend::cached_executables(self)
+    }
+
+    fn kernel_stats(&self) -> Vec<KernelStat> {
+        NativeBackend::kernel_stats(self)
     }
 }
 

@@ -87,11 +87,15 @@ impl<'e, E: Engine> Trainer<'e, E> {
         for step in 0..self.cfg.steps {
             let batch = next_batch()?;
             let tokens = (batch.ids.numel()) as f64;
-            let t0 = std::time::Instant::now();
+            let sw = crate::obs::Stopwatch::start();
+            let step_sp = crate::obs::begin();
             let out = self.engine.forward_backward(params, &batch)?;
             let lr = lr_schedule(step, self.cfg.warmup, self.cfg.steps, self.cfg.peak_lr);
+            let opt_sp = crate::obs::begin();
             self.adam.step(params, &out.grads, lr)?;
-            let dt = t0.elapsed().as_secs_f64();
+            opt_sp.end_phase("optimizer");
+            step_sp.end_phase_idx("step", step as usize);
+            let dt = sw.elapsed_secs();
             record_step(
                 self.engine.name(),
                 &self.cfg,
@@ -146,11 +150,15 @@ impl<'e> MeshTrainer<'e> {
                 .flatten()
                 .map(|b| b.ids.numel() as f64)
                 .sum();
-            let t0 = std::time::Instant::now();
+            let sw = crate::obs::Stopwatch::start();
+            let step_sp = crate::obs::begin();
             let out = self.engine.step(params, &batches)?;
             let lr = lr_schedule(step, self.cfg.warmup, self.cfg.steps, self.cfg.peak_lr);
+            let opt_sp = crate::obs::begin();
             self.adam.step(params, &out.grads, lr)?;
-            let dt = t0.elapsed().as_secs_f64();
+            opt_sp.end_phase("optimizer");
+            step_sp.end_phase_idx("step", step as usize);
+            let dt = sw.elapsed_secs();
             record_step(
                 &label,
                 &self.cfg,

@@ -18,6 +18,7 @@ use seqpar::comm::{CommKind, Fabric, Meter};
 use seqpar::exec::DistRunner;
 use seqpar::model::params::ParamStore;
 use seqpar::model::BERT_TINY_Z4;
+use seqpar::obs;
 use seqpar::parallel::sequence::{SeqParEngine, SpStrategy};
 use seqpar::parallel::tensorp::TensorParEngine;
 use seqpar::parallel::{Batch, Engine, StepOutput};
@@ -440,6 +441,100 @@ fn ulysses_rejects_invalid_configs() {
         SpStrategy::Ulysses
     )
     .is_err());
+}
+
+fn phase_names(events: &[obs::Event], rank: usize) -> Vec<String> {
+    events
+        .iter()
+        .filter(|e| e.rank == rank && matches!(e.kind, obs::EventKind::Phase { .. }))
+        .map(|e| e.name())
+        .collect()
+}
+
+fn kernel_totals(events: &[obs::Event]) -> (usize, u64) {
+    let mut count = 0usize;
+    let mut bytes = 0u64;
+    for e in events {
+        if let obs::EventKind::Kernel { bytes: b, .. } = &e.kind {
+            count += 1;
+            bytes += *b;
+        }
+    }
+    (count, bytes)
+}
+
+fn comm_bytes(events: &[obs::Event], kind: CommKind) -> u64 {
+    events
+        .iter()
+        .filter_map(|e| match &e.kind {
+            obs::EventKind::Comm { kind: k, bytes, .. } if *k == kind => Some(*bytes),
+            _ => None,
+        })
+        .sum()
+}
+
+/// Trace-shape parity: the threaded runner and the sequential simulation
+/// record the same program.  One `seqpar_step` is one phase sequence
+/// wherever it runs, so every threaded rank's ordered phase list must
+/// equal the sequential rank-0 list; kernel event count/bytes and the
+/// per-kind traced comm bytes must agree run-to-run (comm event COUNTS
+/// legitimately differ — one group-total event on the sequential fabric
+/// vs per-message events threaded — which is exactly what the
+/// trace↔meter cross-check pins on each side).
+#[test]
+fn threaded_and_sequential_trace_shapes_agree() {
+    let n = 4;
+    let rt = runtime(n);
+    let params = ParamStore::synthetic(rt.manifest());
+    let batch = batch_for(&rt, 47);
+
+    let seq_meter = Meter::new();
+    let seq = SeqParEngine::new(&rt, Fabric::new(n, seq_meter.clone())).unwrap();
+    let rec = obs::Recorder::start();
+    seq.forward_backward(&params, &batch).unwrap();
+    let seq_events = rec.finish();
+    obs::cross_check(&seq_events, &seq_meter).unwrap();
+
+    let thr_meter = Meter::new();
+    let dist = DistRunner::new(&rt, thr_meter.clone()).unwrap();
+    let rec = obs::Recorder::start();
+    dist.forward_backward(&params, &batch).unwrap();
+    let thr_events = rec.finish();
+    obs::cross_check(&thr_events, &thr_meter).unwrap();
+
+    // the sequential simulation records the whole program as rank 0
+    let want = phase_names(&seq_events, 0);
+    assert!(!want.is_empty(), "sequential run recorded no phases");
+    for r in 0..n {
+        assert_eq!(
+            phase_names(&thr_events, r),
+            want,
+            "rank {r}: phase sequence diverged from the sequential program"
+        );
+    }
+
+    // same math executed ⇒ same kernel-event count and traced bytes
+    assert_eq!(
+        kernel_totals(&seq_events),
+        kernel_totals(&thr_events),
+        "kernel (count, bytes) differ between sequential and threaded traces"
+    );
+
+    // per-kind comm bytes in the traces agree
+    for kind in [
+        CommKind::RingP2p,
+        CommKind::AllReduce,
+        CommKind::AllGather,
+        CommKind::AllToAll,
+        CommKind::Broadcast,
+        CommKind::Pipeline,
+    ] {
+        assert_eq!(
+            comm_bytes(&seq_events, kind),
+            comm_bytes(&thr_events, kind),
+            "{kind:?}: traced bytes differ between sequential and threaded"
+        );
+    }
 }
 
 /// The runner refuses gracefully when the manifest ring size does not

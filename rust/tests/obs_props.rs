@@ -1,0 +1,185 @@
+//! Integration properties of the runtime-observability layer (`obs::`).
+//!
+//! Two pinned invariants from the design:
+//!
+//! * trace ↔ meter: for every SP strategy × attention pattern × ring
+//!   size, on BOTH fabrics, the recorded comm events agree with the
+//!   `Meter` exactly — per-kind event count == op count, per-kind traced
+//!   bytes == metered bytes (`obs::cross_check`);
+//! * measured bubble: the GPipe bubble fraction computed from recorded
+//!   cell timings on the threaded mesh converges on the closed form
+//!   `(s−1)/(m+s−1)` pinned by `parallel::pipeline::Schedule`.
+//!
+//! Plus hygiene: engine traces export schema-valid Chrome JSON, and
+//! spans opened outside a recording session leave nothing behind.
+
+use seqpar::attn::AttnPattern;
+use seqpar::backend::native::NativeConfig;
+use seqpar::comm::{Fabric, Meter};
+use seqpar::exec::{DistRunner, MeshRunner, MeshStep};
+use seqpar::model::params::ParamStore;
+use seqpar::model::BERT_TINY_Z4;
+use seqpar::obs;
+use seqpar::parallel::pipeline::Schedule;
+use seqpar::parallel::sequence::{SeqParEngine, SpStrategy};
+use seqpar::parallel::topology::{Mesh, MpKind};
+use seqpar::parallel::{Batch, Engine};
+use seqpar::runtime::Runtime;
+use seqpar::train::data::{Corpus, CorpusConfig};
+use seqpar::util::json;
+
+fn batch_for(rt: &Runtime, seed: u64) -> Batch {
+    let m = rt.manifest();
+    Corpus::new(CorpusConfig::new(m.vocab, m.seq_len, m.batch), seed)
+        .next_batch()
+        .unwrap()
+}
+
+/// Every runtime meter site emits its comm event through
+/// `Meter::add_traced`, so the trace and the meter cannot drift — pin it
+/// across the full strategy × pattern × ring-size × fabric matrix.
+#[test]
+fn trace_matches_meter_across_strategies_and_patterns() {
+    let cases = [
+        (SpStrategy::Ring, AttnPattern::Dense),
+        (SpStrategy::Ring, AttnPattern::Linformer { k: 8 }),
+        (SpStrategy::Ring, AttnPattern::Block { w: 8 }),
+        (SpStrategy::Ulysses, AttnPattern::Dense),
+    ];
+    for (sp, pattern) in cases {
+        let (linformer_k, block_w) = pattern.native_knobs();
+        for n in [2usize, 4] {
+            let tag = format!("sp={} attn={} n={n}", sp.label(), pattern.label());
+            // ulysses shards whole heads: use the 4-head tiny model so
+            // n=4 divides (same configs as dist_equivalence.rs)
+            let rt = if sp.is_ring() {
+                Runtime::native(NativeConfig {
+                    ring: n,
+                    linformer_k,
+                    block_w,
+                    ..NativeConfig::tiny()
+                })
+            } else {
+                Runtime::native(NativeConfig {
+                    model: BERT_TINY_Z4,
+                    ring: n,
+                    ulysses: true,
+                    ..NativeConfig::tiny()
+                })
+            }
+            .unwrap();
+            let params = ParamStore::synthetic(rt.manifest());
+            let batch = batch_for(&rt, 59);
+
+            // sequential fabric: one group-total event per collective
+            let meter = Meter::new();
+            let eng =
+                SeqParEngine::with_strategy(&rt, Fabric::new(n, meter.clone()), pattern, sp)
+                    .unwrap();
+            let rec = obs::Recorder::start();
+            eng.forward_backward(&params, &batch).unwrap();
+            let events = rec.finish();
+            let rows = obs::cross_check(&events, &meter)
+                .unwrap_or_else(|e| panic!("{tag} sequential: {e:#}"));
+            assert!(
+                rows.iter().any(|r| r.trace_events > 0),
+                "{tag} sequential: no comm events traced"
+            );
+
+            // threaded fabric: per-message ring events, formula
+            // collectives metered once at rank 0 / the root
+            let meter = Meter::new();
+            let dist = DistRunner::with_strategy(&rt, meter.clone(), pattern, sp).unwrap();
+            let rec = obs::Recorder::start();
+            dist.forward_backward(&params, &batch).unwrap();
+            let events = rec.finish();
+            let rows = obs::cross_check(&events, &meter)
+                .unwrap_or_else(|e| panic!("{tag} threaded: {e:#}"));
+            assert!(
+                rows.iter().any(|r| r.trace_events > 0),
+                "{tag} threaded: no comm events traced"
+            );
+        }
+    }
+}
+
+/// The bubble measured from recorded cell spans on the threaded mesh
+/// (busy = dur − recv-wait, per stage, over the cell window) lands on
+/// the analytical GPipe fraction `(s−1)/(m+s−1)` — generously toleranced
+/// because bert-tiny cells run in microseconds on a shared CI box.
+#[test]
+fn measured_bubble_matches_gpipe_closed_form() {
+    let (pp, micros) = (2usize, 4usize);
+    let mesh = Mesh::new(1, pp, 2, MpKind::Sequence).unwrap();
+    let rt = Runtime::native(NativeConfig::tiny().for_mesh(&mesh)).unwrap();
+    let params = ParamStore::synthetic(rt.manifest());
+    let m = rt.manifest();
+    let mut corpus = Corpus::new(CorpusConfig::new(m.vocab, m.seq_len, m.batch), 83);
+    let batches: Vec<Vec<Batch>> = (0..mesh.dp)
+        .map(|_| (0..micros).map(|_| corpus.next_batch().unwrap()).collect())
+        .collect();
+
+    let meter = Meter::new();
+    let runner = MeshRunner::new(&rt, mesh, micros, meter.clone()).unwrap();
+    let rec = obs::Recorder::start();
+    runner.step(&params, &batches).unwrap();
+    let events = rec.finish();
+
+    // the mesh path holds the same trace↔meter invariant
+    obs::cross_check(&events, &meter).unwrap();
+
+    let measured = obs::bubble_fraction(&events)
+        .expect("threaded mesh step must record cell events");
+    let want = Schedule::gpipe(pp, micros).bubble_fraction();
+    assert!(
+        (measured - want).abs() < 0.2,
+        "measured bubble {measured:.4} vs closed form {want:.4} (pp={pp} micros={micros})"
+    );
+
+    // the report surfaces the same number
+    let report = obs::MetricsReport::build(&events, 1, 0, 5);
+    assert_eq!(report.bubble, obs::bubble_fraction(&events));
+}
+
+/// A real engine trace round-trips through the Chrome-trace encoder and
+/// the hand-rolled JSON parser, and passes the schema validator with one
+/// pid per rank.
+#[test]
+fn engine_trace_exports_valid_chrome_json() {
+    let n = 2;
+    let rt = Runtime::native(NativeConfig { ring: n, ..NativeConfig::tiny() }).unwrap();
+    let params = ParamStore::synthetic(rt.manifest());
+    let batch = batch_for(&rt, 7);
+
+    let dist = DistRunner::new(&rt, Meter::new()).unwrap();
+    let rec = obs::Recorder::start();
+    dist.forward_backward(&params, &batch).unwrap();
+    let events = rec.finish();
+    assert!(!events.is_empty());
+
+    let doc = json::parse(&json::encode(&obs::chrome_trace(&events))).unwrap();
+    let check = obs::validate_chrome_trace(&doc).unwrap();
+    assert_eq!(check.complete, events.len(), "one X record per recorded event");
+    assert_eq!(check.pids, (0..n).collect::<Vec<_>>(), "one pid per rank");
+    assert_eq!(check.meta, n, "one process_name record per rank");
+    assert!(check.cats.contains_key("kernel"), "cats: {:?}", check.cats);
+    assert!(check.cats.contains_key("comm"), "cats: {:?}", check.cats);
+    assert!(check.cats.contains_key("phase"), "cats: {:?}", check.cats);
+}
+
+/// Recording is strictly opt-in: a full threaded step executed with no
+/// live session leaves zero events behind for the next session to see.
+#[test]
+fn steps_outside_a_session_record_nothing() {
+    let rt = Runtime::native(NativeConfig { ring: 2, ..NativeConfig::tiny() }).unwrap();
+    let params = ParamStore::synthetic(rt.manifest());
+    let batch = batch_for(&rt, 3);
+    let dist = DistRunner::new(&rt, Meter::new()).unwrap();
+
+    // no Recorder: every span taken during this step is dead
+    dist.forward_backward(&params, &batch).unwrap();
+
+    let rec = obs::Recorder::start();
+    let events = rec.finish();
+    assert!(events.is_empty(), "stale events leaked into a fresh session: {events:?}");
+}
