@@ -52,6 +52,30 @@ fn main() -> anyhow::Result<()> {
         fmt_ns(noise)
     );
 
+    // ---- microcost: a dead memory charge + churn note, session off --------
+    // (`obs::mem` plants a `Charge` at every stash/param choke point and
+    // a `note_alloc` in every `Tensor` constructor; with no `MemSession`
+    // live both must collapse to a relaxed load, same budget as spans)
+    assert!(!seqpar::obs::mem::enabled(), "no MemSession may be live in this bench");
+    let dead_mem = bench(10, 200, || {
+        for i in 0..SPANS {
+            std::hint::black_box(i);
+            let c = seqpar::obs::mem::Charge::new(0, seqpar::obs::mem::Category::Activation, 4096);
+            std::hint::black_box(&c);
+            seqpar::obs::mem::note_alloc(4096);
+        }
+    });
+    dead_mem.report(&format!("disabled-charge loop ({SPANS} iters)"));
+    let mem_delta = (dead_mem.p50_ns - bare.p50_ns).max(0.0);
+    println!("  -> disabled charge costs {} each", fmt_ns(mem_delta / SPANS as f64));
+    assert!(
+        mem_delta <= noise + SPANS as f64 * 5.0,
+        "disabled memory charges are not free: loop p50 {} vs bare {} (noise budget {})",
+        fmt_ns(dead_mem.p50_ns),
+        fmt_ns(bare.p50_ns),
+        fmt_ns(noise)
+    );
+
     // ---- end-to-end: a fully instrumented threaded step, recording off ----
     // (every kernel call, ring message and phase boundary crosses the
     // dead path; this is the number `train` without --trace pays)

@@ -29,6 +29,7 @@ use std::collections::BTreeSet;
 use anyhow::{bail, Result};
 
 use crate::comm::Collective;
+use crate::obs::mem;
 use crate::parallel::call1_on;
 use crate::parallel::sequence::StepShape;
 use crate::runtime::Executor;
@@ -197,6 +198,14 @@ pub(crate) fn forward_on(
     let steps = plan.steps();
     let mut parts: Vec<Vec<Option<Tensor>>> = (0..ln).map(|_| vec![None; n]).collect();
     let mut k_slots: Vec<Tensor> = k.to_vec();
+    // Ring-buffer residency is reported only (no closed-form contract —
+    // occupancy depends on which hops are live, so `sp_expect` leaves
+    // `ring_buf` unvalidated for the block pattern).
+    let k_charges: Vec<mem::Charge> = ranks
+        .iter()
+        .enumerate()
+        .map(|(li, &d)| mem::Charge::new(d, mem::Category::RingBuf, k_slots[li].bytes() as u64))
+        .collect();
     for t in 0..steps {
         for (li, &d) in ranks.iter().enumerate() {
             let src = (d + n - t) % n;
@@ -216,8 +225,14 @@ pub(crate) fn forward_on(
         let s = ops::concat_last(&refs)?;
         p.push(call1_on(ex, "masked_softmax_fwd", &[&s, plan.mask(ranks[li])])?);
     }
+    drop(k_charges); // K slots retire before the V rotation begins
     // ---- stage 2: ring-AV over the same live hops -------------------
     let mut v_slots: Vec<Tensor> = v.to_vec();
+    let _v_charges: Vec<mem::Charge> = ranks
+        .iter()
+        .enumerate()
+        .map(|(li, &d)| mem::Charge::new(d, mem::Category::RingBuf, v_slots[li].bytes() as u64))
+        .collect();
     let mut acc: Vec<Tensor> = q.iter().map(|t| Tensor::zeros(&t.shape)).collect();
     for t in 0..steps {
         for (li, &d) in ranks.iter().enumerate() {
@@ -255,6 +270,13 @@ pub(crate) fn backward_on(
     // ---- ring pass of V: dP parts + per-consumer dV partials --------
     let steps = plan.steps();
     let mut v_slots: Vec<Tensor> = v.to_vec();
+    // reported-only residency: one visiting V chunk per rank (the dV
+    // partials go straight home rather than riding an accumulator)
+    let vpass_charges: Vec<mem::Charge> = ranks
+        .iter()
+        .enumerate()
+        .map(|(li, &d)| mem::Charge::new(d, mem::Category::RingBuf, v_slots[li].bytes() as u64))
+        .collect();
     let mut dp_parts: Vec<Vec<Option<Tensor>>> = (0..ln).map(|_| vec![None; n]).collect();
     let mut dv_parts: Vec<Vec<Option<Tensor>>> = (0..ln).map(|_| vec![None; n]).collect();
     for t in 0..steps {
@@ -274,6 +296,7 @@ pub(crate) fn backward_on(
         }
     }
     let dv = view.reduce_chunks_home(dv_parts, &plan.consumers)?;
+    drop(vpass_charges);
     // ---- local softmax backward over the reachable columns ----------
     let mut ds = Vec::with_capacity(ln);
     for li in 0..ln {
@@ -284,6 +307,11 @@ pub(crate) fn backward_on(
     }
     // ---- ring pass of K: dQ accumulation + per-consumer dK partials -
     let mut k_slots: Vec<Tensor> = k.to_vec();
+    let _kpass_charges: Vec<mem::Charge> = ranks
+        .iter()
+        .enumerate()
+        .map(|(li, &d)| mem::Charge::new(d, mem::Category::RingBuf, k_slots[li].bytes() as u64))
+        .collect();
     let mut dk_parts: Vec<Vec<Option<Tensor>>> = (0..ln).map(|_| vec![None; n]).collect();
     let mut dq: Vec<Tensor> = q.iter().map(|t| Tensor::zeros(&t.shape)).collect();
     for t in 0..steps {

@@ -14,6 +14,7 @@
 use anyhow::{bail, Result};
 
 use crate::comm::Collective;
+use crate::obs::mem;
 use crate::parallel::call1_on;
 use crate::parallel::sequence::StepShape;
 use crate::runtime::Executor;
@@ -40,6 +41,12 @@ pub(crate) fn rsa_forward_on(
     // score parts indexed by ORIGIN chunk so concat restores global order
     let mut parts: Vec<Vec<Option<Tensor>>> = (0..ln).map(|_| vec![None; n]).collect();
     let mut k_slots: Vec<Tensor> = k.to_vec();
+    // each rank keeps exactly one visiting K chunk in its ring buffer
+    let k_charges: Vec<mem::Charge> = ranks
+        .iter()
+        .enumerate()
+        .map(|(li, &d)| mem::Charge::new(d, mem::Category::RingBuf, k_slots[li].bytes() as u64))
+        .collect();
     for t in 0..n {
         let sp = crate::obs::begin();
         for (li, &d) in ranks.iter().enumerate() {
@@ -58,8 +65,14 @@ pub(crate) fn rsa_forward_on(
         let s = ops::concat_last(&refs)?;
         p.push(call1_on(ex, "softmax_fwd", &[&s])?);
     }
+    drop(k_charges); // K slots retire before the V rotation begins
     // ---- stage 2: Ring-AV (Eq. 4) --------------------------------
     let mut v_slots: Vec<Tensor> = v.to_vec();
+    let _v_charges: Vec<mem::Charge> = ranks
+        .iter()
+        .enumerate()
+        .map(|(li, &d)| mem::Charge::new(d, mem::Category::RingBuf, v_slots[li].bytes() as u64))
+        .collect();
     let mut acc: Vec<Tensor> = q.iter().map(|t| Tensor::zeros(&t.shape)).collect();
     for t in 0..n {
         let sp = crate::obs::begin();
@@ -96,6 +109,19 @@ pub(crate) fn rsa_backward_on(
     // ---- ring pass of V: dP parts + dV accumulators ride along ----
     let mut v_slots: Vec<Tensor> = v.to_vec();
     let mut dv_slots: Vec<Tensor> = v.iter().map(|t| Tensor::zeros(&t.shape)).collect();
+    // the backward ring-buffer peak: one data chunk + one gradient
+    // accumulator chunk in flight per rank (2·B·Z·Lc·A floats — the
+    // value mem_validation pins)
+    let vpass_charges: Vec<mem::Charge> = ranks
+        .iter()
+        .enumerate()
+        .flat_map(|(li, &d)| {
+            [
+                mem::Charge::new(d, mem::Category::RingBuf, v_slots[li].bytes() as u64),
+                mem::Charge::new(d, mem::Category::RingBuf, dv_slots[li].bytes() as u64),
+            ]
+        })
+        .collect();
     let mut dp_parts: Vec<Vec<Option<Tensor>>> = (0..ln).map(|_| vec![None; n]).collect();
     for t in 0..n {
         let sp = crate::obs::begin();
@@ -117,6 +143,7 @@ pub(crate) fn rsa_backward_on(
         view.ring_shift(&mut dv_slots)?;
         sp.end_phase_idx("rsa_bwd_v_hop", t);
     }
+    drop(vpass_charges); // delivered dVs are flow now, not ring residency
     // ---- local softmax backward over full rows ---------------------
     let mut ds = Vec::with_capacity(ln);
     for li in 0..ln {
@@ -128,6 +155,16 @@ pub(crate) fn rsa_backward_on(
     // ---- ring pass of K: dQ accumulation + dK accumulators ---------
     let mut k_slots: Vec<Tensor> = k.to_vec();
     let mut dk_slots: Vec<Tensor> = k.iter().map(|t| Tensor::zeros(&t.shape)).collect();
+    let _kpass_charges: Vec<mem::Charge> = ranks
+        .iter()
+        .enumerate()
+        .flat_map(|(li, &d)| {
+            [
+                mem::Charge::new(d, mem::Category::RingBuf, k_slots[li].bytes() as u64),
+                mem::Charge::new(d, mem::Category::RingBuf, dk_slots[li].bytes() as u64),
+            ]
+        })
+        .collect();
     let mut dq: Vec<Tensor> = q.iter().map(|t| Tensor::zeros(&t.shape)).collect();
     for t in 0..n {
         let sp = crate::obs::begin();

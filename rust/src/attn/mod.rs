@@ -133,6 +133,22 @@ pub(crate) enum AttnStash {
     Ulysses { p: Vec<Tensor>, qg: Vec<Tensor>, kg: Vec<Tensor>, vg: Vec<Tensor> },
 }
 
+impl AttnStash {
+    /// Total stash bytes held for the `li`-th executed rank — the
+    /// pattern-dependent part of the `obs::mem` AttnStash category.
+    pub(crate) fn bytes_at(&self, li: usize) -> usize {
+        match self {
+            AttnStash::Dense { p } | AttnStash::Block { p } => p[li].bytes(),
+            AttnStash::Linformer { p, kt, vt } => {
+                p[li].bytes() + kt[li].bytes() + vt[li].bytes()
+            }
+            AttnStash::Ulysses { p, qg, kg, vg } => {
+                p[li].bytes() + qg[li].bytes() + kg[li].bytes() + vg[li].bytes()
+            }
+        }
+    }
+}
+
 /// Attention forward for the view's ranks, dispatched on the shape's
 /// pattern.  `q/k/v[li]` is the local chunk of the li-th executed rank;
 /// returns the per-rank context plus the pattern's backward stash.

@@ -20,6 +20,11 @@
 //! kernel-level threading — which keeps the backend dependency-free and
 //! deterministic.  The backend itself is `Send + Sync` (stats are atomic),
 //! so `exec::DistRunner` can drive one kernel stream per rank thread.
+//!
+//! Memory accounting: every kernel output materializes through the
+//! `Tensor` constructors, which report allocation CHURN to
+//! [`crate::obs::mem::note_alloc`]; live/peak RESIDENCY is charged at the
+//! stash/param choke points in the engines, not per kernel call.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};

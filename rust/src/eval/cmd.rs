@@ -45,11 +45,16 @@ COMMANDS:
   trace     run a short traced training (default --steps 1) and print the
             measured metrics report: step wall time, per-kind comm
             wait/transfer attribution, top-k kernels by total time,
-            tokens/sec and (on a mesh) the measured pipeline bubble.
+            tokens/sec, (on a mesh) the measured pipeline bubble, and
+            the per-rank memory table — measured peak bytes by category
+            (params/grads/optimizer/activation/attn_stash/ring_buf/
+            pipe_stash; see README \"Memory profiling\").
             Takes the train flags.  --out FILE writes the report JSON
-            (the BENCH_obs.json payload), --trace FILE also dumps the
-            Chrome trace.  --validate FILE instead schema-checks an
-            existing Chrome-trace file and summarizes it
+            (the BENCH_obs.json payload, with a \"mem\" key), --trace
+            FILE also dumps the Chrome trace with its ph:\"C\" memory
+            counter track.  --validate FILE instead schema-checks an
+            existing Chrome-trace file OR a BENCH_mem.json memory
+            profile (dispatched on its mem_rows key) and summarizes it
   help      this text
 
 BACKEND FLAGS:
@@ -103,7 +108,11 @@ COMMON FLAGS:
                       trace-format JSON, one pid per rank (open in
                       Perfetto or chrome://tracing).  Per-comm-kind event
                       counts and bytes are checked against the run's
-                      meter at exit and must match exactly
+                      meter at exit and must match exactly.  A memory-
+                      accounting session rides along: the trace gains a
+                      ph:\"C\" \"memory\" counter track (live bytes by
+                      category under each rank's timeline) and the run
+                      prints the per-rank peak table at exit
   --top-k N           (trace) kernel table size (default 10)
   --out FILE          (trace) write the metrics report JSON
   --seed N            corpus seed (train/verify; default 7)
@@ -470,6 +479,11 @@ pub fn train(args: &Args) -> Result<()> {
     // runtime trace or the cross-check against `meter` would fail.
     let trace_path = args.str_opt("trace").map(PathBuf::from);
     let start_recorder = || trace_path.as_ref().map(|_| crate::obs::Recorder::start());
+    // --trace also opens a memory-accounting session: every tensor-
+    // lifetime charge in the step lands in per-rank live/peak accounts,
+    // exported into the same Chrome trace as a ph:"C" "memory" counter
+    // track (one pid per rank) and printed as the per-rank peak table.
+    let start_mem = || trace_path.as_ref().map(|_| crate::obs::mem::MemSession::start());
 
     // ---- 4D mesh execution (DP×PP×SP / DP×PP×TP) --------------------
     if let Some((dp, pp, mp)) = args.triple_opt("mesh")? {
@@ -504,13 +518,14 @@ pub fn train(args: &Args) -> Result<()> {
         );
         let mut trainer = MeshTrainer::new(runner.as_ref(), &params, cfg);
         let rec = start_recorder();
+        let mem_ses = start_mem();
         trainer.run(&mut params, || corpus.next_batch(), false)?;
         let s = meter.snapshot();
         println!(
             "comm totals: ring_p2p={} all_reduce={} all_gather={} all_to_all={} broadcast={} scatter={} pipeline={} ({} ops)",
             s.ring_p2p, s.all_reduce, s.all_gather, s.all_to_all, s.broadcast, s.scatter, s.pipeline, s.ops
         );
-        return finish_trace(rec, trace_path.as_deref(), &meter);
+        return finish_trace(rec, mem_ses, trace_path.as_deref(), &meter);
     }
 
     // static pre-flight for the single-axis engines (same verifier the
@@ -526,6 +541,7 @@ pub fn train(args: &Args) -> Result<()> {
     }
 
     let rec = start_recorder();
+    let mem_ses = start_mem();
     match engine_name.as_str() {
         "seq" if threads > 0 => {
             let e = DistRunner::with_strategy(&rt, meter.clone(), pattern, sp)?;
@@ -571,7 +587,7 @@ pub fn train(args: &Args) -> Result<()> {
         "comm totals: ring_p2p={} all_reduce={} all_gather={} all_to_all={} broadcast={} scatter={} pipeline={} ({} ops)",
         s.ring_p2p, s.all_reduce, s.all_gather, s.all_to_all, s.broadcast, s.scatter, s.pipeline, s.ops
     );
-    finish_trace(rec, trace_path.as_deref(), &meter)
+    finish_trace(rec, mem_ses, trace_path.as_deref(), &meter)
 }
 
 pub fn sweep(args: &Args) -> Result<()> {
@@ -584,9 +600,11 @@ pub fn sweep(args: &Args) -> Result<()> {
 
 /// Shared `--trace` epilogue for a recorded run: stop the recorder,
 /// enforce the event-for-op invariant against the run's live meter
-/// (`crate::obs::cross_check`), and write the Chrome trace.
+/// (`crate::obs::cross_check`), and write the Chrome trace — with the
+/// ph:"C" memory counter track when a `MemSession` rode along.
 fn finish_trace(
     rec: Option<crate::obs::Recorder>,
+    mem_ses: Option<crate::obs::mem::MemSession>,
     path: Option<&Path>,
     meter: &Meter,
 ) -> Result<()> {
@@ -594,8 +612,9 @@ fn finish_trace(
         return Ok(());
     };
     let events = rec.finish();
+    let mem = mem_ses.map(|s| s.finish());
     let rows = crate::obs::cross_check(&events, meter)?;
-    crate::obs::write_chrome_trace(path, &events)?;
+    crate::obs::write_chrome_trace_with_counters(path, &events, mem.as_ref())?;
     let ranks = events.iter().map(|e| e.rank).max().map_or(0, |r| r + 1);
     println!(
         "trace: {} events over {} rank(s) -> {} (meter cross-check OK over {} comm kinds)",
@@ -604,6 +623,16 @@ fn finish_trace(
         path.display(),
         rows.iter().filter(|r| r.trace_events > 0).count(),
     );
+    if let Some(report) = &mem {
+        println!(
+            "memory: {} counter sample(s), max per-rank peak {} B, churn {} tensors / {} B",
+            report.samples.len(),
+            report.max_peak_total(),
+            report.churn_tensors,
+            report.churn_bytes,
+        );
+        print!("{report}");
+    }
     Ok(())
 }
 
@@ -636,6 +665,10 @@ pub fn trace(args: &Args) -> Result<()> {
     };
     let meter = Meter::new();
     let rec = crate::obs::Recorder::start();
+    // the memory accountant rides along unconditionally here: `trace`
+    // IS the observability report, and the per-rank peak table is part
+    // of it (the train surface gates the session on --trace instead)
+    let mem_ses = crate::obs::mem::MemSession::start();
     let label;
     let tokens_per_step;
     if let Some((dp, pp, mp)) = args.triple_opt("mesh")? {
@@ -697,6 +730,7 @@ pub fn trace(args: &Args) -> Result<()> {
         }
     }
     let events = rec.finish();
+    let mem_report = mem_ses.finish();
     let rows = crate::obs::cross_check(&events, &meter)?;
     let top_k = args.usize_or("top-k", 10)?;
     let report =
@@ -707,6 +741,14 @@ pub fn trace(args: &Args) -> Result<()> {
         "trace/meter cross-check OK: {} comm kinds, {} comm events",
         rows.iter().filter(|r| r.trace_events > 0).count(),
         rows.iter().map(|r| r.trace_events).sum::<u64>(),
+    );
+    println!("memory peaks by rank (measured, bytes):");
+    print!("{mem_report}");
+    println!(
+        "memory: max per-rank peak {} B, churn {} tensors / {} B",
+        mem_report.max_peak_total(),
+        mem_report.churn_tensors,
+        mem_report.churn_bytes,
     );
     // the backend's own per-kernel accounting — same clock as the spans
     let mut ks = rt.kernel_stats();
@@ -727,13 +769,18 @@ pub fn trace(args: &Args) -> Result<()> {
         }
     }
     if let Some(p) = args.str_opt("trace") {
-        crate::obs::write_chrome_trace(Path::new(p), &events)?;
-        println!("trace: wrote {} events to {p}", events.len());
+        crate::obs::write_chrome_trace_with_counters(Path::new(p), &events, Some(&mem_report))?;
+        println!(
+            "trace: wrote {} events + {} memory counter record(s) to {p}",
+            events.len(),
+            mem_report.samples.len()
+        );
     }
     if let Some(out) = args.str_opt("out") {
         let mut doc = report.to_json();
         if let crate::util::json::Value::Obj(map) = &mut doc {
             map.insert("run".to_string(), crate::util::json::Value::Str(label.clone()));
+            map.insert("mem".to_string(), mem_report.to_json());
         }
         std::fs::write(out, crate::util::json::encode(&doc))?;
         println!("metrics: wrote {out}");
@@ -741,20 +788,29 @@ pub fn trace(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `trace --validate FILE`: parse + schema-check an existing
-/// Chrome-trace JSON file and summarize it.
+/// `trace --validate FILE`: parse + schema-check an existing JSON file
+/// and summarize it.  Dispatches on shape: a root `mem_rows` key means
+/// a `BENCH_mem.json` memory profile (checked by
+/// `obs::mem::validate_bench_mem`); anything else is a Chrome trace.
 fn validate_trace_file(path: &Path) -> Result<()> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
     let doc = crate::util::json::parse(&text)
         .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    if doc.get("mem_rows").is_some() {
+        let summary = crate::obs::mem::validate_bench_mem(&doc)?;
+        println!("{}: {summary}", path.display());
+        println!("MEM VALIDATE OK");
+        return Ok(());
+    }
     let chk = crate::obs::validate_chrome_trace(&doc)?;
     println!(
-        "{}: {} records ({} complete events, {} metadata) across {} rank(s)",
+        "{}: {} records ({} complete events, {} metadata, {} memory counters) across {} rank(s)",
         path.display(),
         chk.events,
         chk.complete,
         chk.meta,
+        chk.counters,
         chk.pids.len()
     );
     for (cat, count) in &chk.cats {

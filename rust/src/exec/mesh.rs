@@ -50,6 +50,7 @@ use crate::attn::AttnPattern;
 use crate::comm::threaded::{mesh as comm_mesh, RingComm};
 use crate::comm::{Collective, CommKind, Fabric, Meter};
 use crate::model::params::ParamStore;
+use crate::obs::mem;
 use crate::parallel::pipeline::{Cell, Schedule};
 use crate::parallel::sequence::{self, LayerStash, SpStrategy, StepShape};
 use crate::parallel::tensorp::{self, TpLayerStash, TpShape};
@@ -268,8 +269,12 @@ pub(crate) struct SpStage<'a> {
     first: bool,
     last: bool,
     stash: Vec<Vec<LayerStash>>,
-    held: Vec<Option<Vec<Tensor>>>,
+    /// Last stage's held forward output per in-flight microbatch, with
+    /// its per-rank PipeStash charges (the GPipe activation residency).
+    held: Vec<Option<(Vec<Tensor>, Vec<mem::Charge>)>>,
     grads: Vec<ParamStore>,
+    /// Residency charges for the per-rank stage gradient stores.
+    _grad_charges: Vec<mem::Charge>,
     mlm: f32,
     sop: f32,
 }
@@ -302,7 +307,14 @@ impl<'a> SpStage<'a> {
         }
         self.stash.push(sts);
         if self.last {
-            self.held[u] = Some(x);
+            let charges = ranks
+                .iter()
+                .enumerate()
+                .map(|(li, &d)| {
+                    mem::Charge::new(d, mem::Category::PipeStash, x[li].bytes() as u64)
+                })
+                .collect();
+            self.held[u] = Some((x, charges));
         } else {
             need(next, "outbound")?.send(x)?;
         }
@@ -318,7 +330,7 @@ impl<'a> SpStage<'a> {
     ) -> Result<()> {
         let ranks = self.view.local_ranks();
         let mut dx = if self.last {
-            let x = self.held[u]
+            let (x, _held_charges) = self.held[u]
                 .take()
                 .ok_or_else(|| anyhow!("microbatch {u} has no held activation"))?;
             let (mlm, sop, dx) = sequence::sp_heads_fwd_bwd(
@@ -361,8 +373,12 @@ pub(crate) struct TpStage<'a> {
     first: bool,
     last: bool,
     stash: Vec<Vec<TpLayerStash>>,
-    held: Vec<Option<Tensor>>,
+    /// Replicated held output per in-flight microbatch: every executed
+    /// rank keeps a full-sequence copy, so one charge per rank.
+    held: Vec<Option<(Tensor, Vec<mem::Charge>)>>,
     grads: Vec<ParamStore>,
+    /// Residency charges for the per-rank stage gradient stores.
+    _grad_charges: Vec<mem::Charge>,
     mlm: f32,
     sop: f32,
 }
@@ -422,7 +438,13 @@ impl<'a> TpStage<'a> {
         }
         self.stash.push(sts);
         if self.last {
-            self.held[u] = Some(x);
+            let charges = self
+                .view
+                .local_ranks()
+                .iter()
+                .map(|&d| mem::Charge::new(d, mem::Category::PipeStash, x.bytes() as u64))
+                .collect();
+            self.held[u] = Some((x, charges));
         } else {
             self.send_boundary(x, need(next, "outbound")?)?;
         }
@@ -438,7 +460,7 @@ impl<'a> TpStage<'a> {
     ) -> Result<()> {
         let ranks = self.view.local_ranks();
         let mut dx = if self.last {
-            let x = self.held[u]
+            let (x, _held_charges) = self.held[u]
                 .take()
                 .ok_or_else(|| anyhow!("microbatch {u} has no held activation"))?;
             let (mlm, sop, dx) = tensorp::tp_heads_fwd_bwd(
@@ -488,6 +510,15 @@ impl<'a> Stage<'a> {
         let last = s + 1 == spec.mesh.pp;
         let ln = view.local_ranks().len();
         let grads: Vec<ParamStore> = (0..ln).map(|_| spec.stage_zeros(params, s)).collect();
+        // each rank's gradient store covers this stage's owned params only
+        let grad_charges: Vec<mem::Charge> = view
+            .local_ranks()
+            .iter()
+            .enumerate()
+            .map(|(li, &d)| {
+                mem::Charge::new(d, mem::Category::Grads, grads[li].total_bytes() as u64)
+            })
+            .collect();
         Ok(match spec.mesh.kind {
             MpKind::Sequence => Stage::Sp(SpStage {
                 ex,
@@ -503,6 +534,7 @@ impl<'a> Stage<'a> {
                 stash: Vec::new(),
                 held: (0..spec.micros).map(|_| None).collect(),
                 grads,
+                _grad_charges: grad_charges,
                 mlm: 0.0,
                 sop: 0.0,
             }),
@@ -521,6 +553,7 @@ impl<'a> Stage<'a> {
                 stash: Vec::new(),
                 held: (0..spec.micros).map(|_| None).collect(),
                 grads,
+                _grad_charges: grad_charges,
                 mlm: 0.0,
                 sop: 0.0,
             }),
@@ -687,11 +720,17 @@ impl<'rt> MeshStep for MeshEngine<'rt> {
             let bwd_q: Vec<RefCell<VecDeque<Vec<Tensor>>>> =
                 (0..pp.saturating_sub(1)).map(|_| RefCell::new(VecDeque::new())).collect();
             let mut stages: Vec<Stage> = (0..pp)
-                .map(|s| Stage::new(&self.spec, ex, params, &mp_view, meter, s))
+                .map(|s| {
+                    // aim the stage's charges at its coordinates' global
+                    // lanes: rank(Coord{r, s, i}) = ((r*pp)+s)*mp + i
+                    mem::set_lane_base(((r * pp) + s) * mp);
+                    Stage::new(&self.spec, ex, params, &mp_view, meter, s)
+                })
                 .collect::<Result<_>>()?;
             for c in &cells {
                 let s = c.stage;
                 let batch = &batches[r][c.micro];
+                mem::set_lane_base(((r * pp) + s) * mp);
                 let sp = crate::obs::begin();
                 if c.forward {
                     let prev = (s > 0).then(|| Link::Queue { q: &fwd_q[s - 1], meter });
@@ -713,6 +752,7 @@ impl<'rt> MeshStep for MeshEngine<'rt> {
             }
             grads_by.push(per_stage);
         }
+        mem::set_lane_base(0); // back to the session thread's default lanes
 
         // dp gradient all-reduce: one reduce per (stage, mp-rank) group —
         // the same per-rank traffic the threaded mesh meters
@@ -873,12 +913,16 @@ impl<'rt> MeshStep for MeshRunner<'rt> {
         }
 
         let fh = crate::obs::fork();
+        let mfh = mem::fork();
         let results: Vec<(usize, Result<(f32, f32, ParamStore)>)> = thread::scope(|sc| {
             let mut handles = Vec::with_capacity(world);
             for (rank, (coord, mpc, dpc, ppc)) in slots.into_iter().enumerate() {
                 let replica = &batches[coord.dp];
                 handles.push(sc.spawn(move || {
                     crate::obs::adopt(fh, rank);
+                    // this thread's charges name ranks within its mp view
+                    // ([coord.mp]), so base + coord.mp = the global rank
+                    mem::adopt(mfh, rank - coord.mp);
                     let out =
                         run_coord(ex, spec, params, replica, coord, &mpc, &dpc, &ppc, meter);
                     crate::obs::flush();

@@ -80,6 +80,7 @@ impl<'rt> DistRunner<'rt> {
         let comms = mesh(self.n, self.meter.clone());
 
         let fh = crate::obs::fork();
+        let mfh = crate::obs::mem::fork();
         let results: Vec<(usize, Result<RankOutput>)> = thread::scope(|s| {
             let handles: Vec<_> = comms
                 .into_iter()
@@ -87,6 +88,8 @@ impl<'rt> DistRunner<'rt> {
                     s.spawn(move || {
                         let rank = comm.rank;
                         crate::obs::adopt(fh, rank);
+                        // charges name the global rank, so lane base 0
+                        crate::obs::mem::adopt(mfh, 0);
                         // &(dyn Executor + Sync) coerces to &dyn Executor
                         let out = seqpar_step(ex, &comm, shape, params, batch);
                         crate::obs::flush();

@@ -1,0 +1,740 @@
+//! Per-rank tensor-lifetime memory accounting.
+//!
+//! The simulator's ledger ([`crate::simulator::memory`]) *predicts* what
+//! each device must hold; this module *measures* it on the real engines.
+//! Accounting is by RAII [`Charge`]s planted at the allocation choke
+//! points — parameter/gradient stores, the per-layer activation stashes
+//! (`parallel::sequence::LayerStash`, `parallel::tensorp::TpLayerStash`),
+//! the ring k/v slot buffers (`attn::dense`, `attn::block`), GPipe's
+//! held activations (`exec::mesh`) and the Adam state — each tagged with
+//! a lane (global rank) and a [`Category`].  A charge adds to the lane's
+//! live ledger on construction and releases on drop, so the per-category
+//! high-water mark is measured, not modeled.  The contract
+//! `tests/mem_validation.rs` asserts: measured per-rank category peaks
+//! EQUAL `simulator::memory::sp_expect`'s closed forms, element-exactly.
+//!
+//! Design constraints mirror the span recorder in [`crate::obs`]:
+//!
+//! * **Zero heap work when disabled.**  [`Charge::new`] and
+//!   [`note_alloc`] are one relaxed atomic load when no session is live
+//!   (`benches/obs_overhead.rs` asserts the dead path stays inside the
+//!   timer's noise band).
+//! * **Session-scoped, thread-adopted.**  A [`MemSession`] holds a
+//!   global lock (one at a time; tests serialize through it).  Rank
+//!   threads join via [`fork`] / [`adopt`], tagging themselves with a
+//!   lane BASE so a rank-local index maps to a global lane; threads that
+//!   never adopted the live session account nothing, and a charge whose
+//!   session ended before it dropped releases nothing (no underflow
+//!   across sessions).
+//! * **Peaks are per (lane, category).**  The reported `peak_total` is
+//!   the SUM of category peaks — an upper bound that coincides with the
+//!   true simultaneous peak here because every validated category is at
+//!   its maximum while the last backward layer runs.
+//!
+//! Surfaces: [`MemReport::to_json`] (the `BENCH_mem.json` rows),
+//! [`counter_records`] (Chrome-trace `"ph":"C"` memory tracks, one per
+//! lane pid, merged by [`crate::obs::chrome_trace_with_counters`]) and
+//! [`validate_bench_mem`] (the `trace --validate` schema check).
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Value;
+
+// ---------------------------------------------------------------------
+// Categories
+// ---------------------------------------------------------------------
+
+/// Number of accounting categories (== `Category::ALL.len()`).
+pub const NCAT: usize = 7;
+/// Highest lane count a session can track (global ranks; 4D-mesh shapes
+/// in this repo are ≤ 16 ranks, 64 leaves headroom).
+pub const MAX_LANES: usize = 64;
+
+/// What a tracked allocation is FOR.  One ledger column per category,
+/// so the measured peak decomposes the same way the simulator's
+/// breakdown does.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Category {
+    /// Replicated model parameters (`ParamStore`).
+    Params,
+    /// Gradient accumulators (`ParamStore::zeros_like`).
+    Grads,
+    /// Adam m + v state.
+    Optimizer,
+    /// Residual-stream stash: x_in / pre1 / xm / pre2 per layer.
+    Activation,
+    /// Attention stash: q/k/v/ctx plus the pattern's score stash.
+    AttnStash,
+    /// In-flight ring k/v + gradient slot chunks.
+    RingBuf,
+    /// GPipe held activations awaiting a backward microbatch.
+    PipeStash,
+}
+
+impl Category {
+    pub const ALL: [Category; NCAT] = [
+        Category::Params,
+        Category::Grads,
+        Category::Optimizer,
+        Category::Activation,
+        Category::AttnStash,
+        Category::RingBuf,
+        Category::PipeStash,
+    ];
+
+    /// Stable snake_case name (JSON keys, trace counter args).
+    pub fn label(self) -> &'static str {
+        match self {
+            Category::Params => "params",
+            Category::Grads => "grads",
+            Category::Optimizer => "optimizer",
+            Category::Activation => "activation",
+            Category::AttnStash => "attn_stash",
+            Category::RingBuf => "ring_buf",
+            Category::PipeStash => "pipe_stash",
+        }
+    }
+
+    fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+// ---------------------------------------------------------------------
+// Global state
+// ---------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+/// Current live session id (0 = none).  Monotonic: never reused, so a
+/// charge created in session k can never release into session k+1.
+static SESSION_ID: AtomicU64 = AtomicU64::new(0);
+static SESSION_CTR: AtomicU64 = AtomicU64::new(0);
+/// One accounting session at a time (tests serialize through this).
+static MEM_LOCK: Mutex<()> = Mutex::new(());
+static SAMPLES: Mutex<Vec<Sample>> = Mutex::new(Vec::new());
+static CHURN_BYTES: AtomicU64 = AtomicU64::new(0);
+static CHURN_TENSORS: AtomicU64 = AtomicU64::new(0);
+
+/// Keep the counter timeline bounded on long runs; the live/peak
+/// ledgers are exact regardless (only the sampled TIMELINE truncates).
+const SAMPLE_CAP: usize = 1 << 16;
+
+struct Ledger {
+    live: Vec<[AtomicU64; NCAT]>,
+    peak: Vec<[AtomicU64; NCAT]>,
+}
+
+fn ledger() -> &'static Ledger {
+    static LEDGER: OnceLock<Ledger> = OnceLock::new();
+    LEDGER.get_or_init(|| Ledger {
+        live: (0..MAX_LANES).map(|_| std::array::from_fn(|_| AtomicU64::new(0))).collect(),
+        peak: (0..MAX_LANES).map(|_| std::array::from_fn(|_| AtomicU64::new(0))).collect(),
+    })
+}
+
+thread_local! {
+    /// (adopted session id, lane base): `Charge::new(rank, ..)` charges
+    /// lane `base + rank`.
+    static MEM_TLS: Cell<(u64, usize)> = const { Cell::new((0, 0)) };
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Is an accounting session live?  (One relaxed atomic load.)
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Did the calling thread adopt the LIVE session?
+fn adopted() -> Option<u64> {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let sid = SESSION_ID.load(Ordering::Relaxed);
+    let (mine, _) = MEM_TLS.with(|t| t.get());
+    if sid != 0 && mine == sid {
+        Some(sid)
+    } else {
+        None
+    }
+}
+
+/// Record one tensor materialization (allocation CHURN — total bytes
+/// ever produced, as opposed to the live/peak residency the charges
+/// track).  Called from the `Tensor` constructors; reported, never
+/// validated against closed forms.
+pub fn note_alloc(bytes: usize) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    if adopted().is_none() {
+        return;
+    }
+    CHURN_BYTES.fetch_add(bytes as u64, Ordering::Relaxed);
+    CHURN_TENSORS.fetch_add(1, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------
+// Charges
+// ---------------------------------------------------------------------
+
+/// One live allocation on one lane's ledger: adds `bytes` to the lane's
+/// `(category)` live count on construction, releases on drop, and bumps
+/// the per-(lane, category) high-water mark.  Dead (a few atomic loads,
+/// no ledger traffic) outside a live adopted session.  Hold it exactly
+/// as long as the tensors it covers are reachable — typically as a
+/// field of the stash it accounts or an `_`-prefixed local binding.
+#[derive(Debug)]
+pub struct Charge {
+    /// Session the charge counted into (0 = dead).
+    session: u64,
+    lane: usize,
+    cat: Category,
+    bytes: u64,
+}
+
+impl Charge {
+    /// Charge `bytes` to `base + rank` (the thread's adopted lane base
+    /// plus a rank-local index) under `cat`.
+    pub fn new(rank: usize, cat: Category, bytes: u64) -> Charge {
+        let dead = Charge { session: 0, lane: 0, cat, bytes: 0 };
+        let Some(sid) = adopted() else { return dead };
+        let (_, base) = MEM_TLS.with(|t| t.get());
+        let lane = base + rank;
+        if lane >= MAX_LANES || bytes == 0 {
+            return dead;
+        }
+        let lg = ledger();
+        let now = lg.live[lane][cat.idx()].fetch_add(bytes, Ordering::AcqRel) + bytes;
+        lg.peak[lane][cat.idx()].fetch_max(now, Ordering::AcqRel);
+        push_sample(lane);
+        Charge { session: sid, lane, cat, bytes }
+    }
+}
+
+impl Drop for Charge {
+    fn drop(&mut self) {
+        if self.session == 0 || self.session != SESSION_ID.load(Ordering::Relaxed) {
+            // dead, or the session it counted into already finished —
+            // its ledger was snapshot/reset, nothing to release
+            return;
+        }
+        ledger().live[self.lane][self.cat.idx()].fetch_sub(self.bytes, Ordering::AcqRel);
+        push_sample(self.lane);
+    }
+}
+
+fn push_sample(lane: usize) {
+    let lg = ledger();
+    let mut live = [0u64; NCAT];
+    for (c, slot) in lg.live[lane].iter().enumerate() {
+        live[c] = slot.load(Ordering::Relaxed);
+    }
+    let mut samples = lock(&SAMPLES);
+    if samples.len() < SAMPLE_CAP {
+        samples.push(Sample { ts_ns: super::now_ns(), lane, live });
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sessions
+// ---------------------------------------------------------------------
+
+/// One point of a lane's live-bytes timeline (drives the Chrome-trace
+/// `"ph":"C"` counter track).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Sample {
+    pub ts_ns: u64,
+    pub lane: usize,
+    /// Live bytes per category (``Category::ALL`` order) at `ts_ns`.
+    pub live: [u64; NCAT],
+}
+
+/// A live accounting session.  Holds the global session lock, resets
+/// and enables the ledgers on construction, disables on
+/// [`MemSession::finish`] / drop.  The calling thread adopts lane base
+/// 0; spawned rank threads join via [`fork`] / [`adopt`].
+pub struct MemSession {
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl MemSession {
+    /// Begin accounting.  Blocks until any other session has finished.
+    pub fn start() -> MemSession {
+        let guard = lock(&MEM_LOCK);
+        let id = SESSION_CTR.fetch_add(1, Ordering::Relaxed) + 1;
+        let lg = ledger();
+        for lane in lg.live.iter().chain(lg.peak.iter()) {
+            for slot in lane {
+                slot.store(0, Ordering::Relaxed);
+            }
+        }
+        CHURN_BYTES.store(0, Ordering::Relaxed);
+        CHURN_TENSORS.store(0, Ordering::Relaxed);
+        lock(&SAMPLES).clear();
+        MEM_TLS.with(|t| t.set((id, 0)));
+        SESSION_ID.store(id, Ordering::SeqCst);
+        ENABLED.store(true, Ordering::SeqCst);
+        MemSession { _lock: guard }
+    }
+
+    /// Stop accounting and snapshot every lane that charged anything.
+    pub fn finish(self) -> MemReport {
+        ENABLED.store(false, Ordering::SeqCst);
+        SESSION_ID.store(0, Ordering::SeqCst);
+        let lg = ledger();
+        let mut lanes = Vec::new();
+        for lane in 0..MAX_LANES {
+            let mut peak = [0u64; NCAT];
+            let mut live = [0u64; NCAT];
+            let mut any = false;
+            for c in 0..NCAT {
+                peak[c] = lg.peak[lane][c].load(Ordering::Relaxed);
+                live[c] = lg.live[lane][c].load(Ordering::Relaxed);
+                any |= peak[c] > 0;
+            }
+            if any {
+                lanes.push(LaneMem { lane, live, peak });
+            }
+        }
+        let mut samples = std::mem::take(&mut *lock(&SAMPLES));
+        samples.sort_by(|a, b| (a.lane, a.ts_ns).cmp(&(b.lane, b.ts_ns)));
+        MemReport {
+            lanes,
+            churn_bytes: CHURN_BYTES.load(Ordering::Relaxed),
+            churn_tensors: CHURN_TENSORS.load(Ordering::Relaxed),
+            samples,
+        }
+    }
+}
+
+impl Drop for MemSession {
+    fn drop(&mut self) {
+        ENABLED.store(false, Ordering::SeqCst);
+        SESSION_ID.store(0, Ordering::SeqCst);
+    }
+}
+
+/// A capability to account into the current session from another
+/// thread.  Capture on the session thread with [`fork`]; redeem on the
+/// spawned thread with [`adopt`].
+#[derive(Clone, Copy, Debug)]
+pub struct MemFork {
+    session: u64,
+}
+
+/// Capture the calling thread's session (dead handle if none live).
+pub fn fork() -> MemFork {
+    MemFork { session: adopted().unwrap_or(0) }
+}
+
+/// Join the handle's session with lane base `lane_base`: this thread's
+/// `Charge::new(rank, ..)` lands on lane `lane_base + rank`.  A dead or
+/// stale handle leaves the thread un-adopted (it accounts nothing).
+pub fn adopt(h: MemFork, lane_base: usize) {
+    if h.session == 0 || h.session != SESSION_ID.load(Ordering::Relaxed) {
+        return;
+    }
+    MEM_TLS.with(|t| t.set((h.session, lane_base)));
+}
+
+/// Move the calling thread's lane base (sequential engines that emulate
+/// several coordinates on one thread re-aim their charges with this;
+/// the adopted session is untouched).
+pub fn set_lane_base(base: usize) {
+    MEM_TLS.with(|t| {
+        let (sid, _) = t.get();
+        t.set((sid, base));
+    });
+}
+
+// ---------------------------------------------------------------------
+// Reports
+// ---------------------------------------------------------------------
+
+/// One lane's ledger snapshot at session end.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LaneMem {
+    /// Global rank (pid in the exported trace).
+    pub lane: usize,
+    /// Live bytes per category at `finish` — non-zero means something
+    /// out-lived the session (a leak, or a deliberately held charge).
+    pub live: [u64; NCAT],
+    /// High-water mark per category over the session.
+    pub peak: [u64; NCAT],
+}
+
+impl LaneMem {
+    /// Peak bytes of one category.
+    pub fn peak(&self, cat: Category) -> u64 {
+        self.peak[cat.idx()]
+    }
+
+    /// Sum of category peaks — the per-lane peak the SP<TP comparison
+    /// and `BENCH_mem.json` report.
+    pub fn peak_total(&self) -> u64 {
+        self.peak.iter().sum()
+    }
+}
+
+/// A finished session: per-lane peaks plus allocation churn and the
+/// sampled live-bytes timeline.
+#[derive(Clone, Debug, Default)]
+pub struct MemReport {
+    /// Lanes that charged anything, ascending.
+    pub lanes: Vec<LaneMem>,
+    /// Total bytes ever materialized by `Tensor` constructors while the
+    /// session was live (churn, not residency).
+    pub churn_bytes: u64,
+    /// Tensor constructions counted into `churn_bytes`.
+    pub churn_tensors: u64,
+    /// Live-bytes timeline, sorted by (lane, ts).
+    pub samples: Vec<Sample>,
+}
+
+impl MemReport {
+    /// The snapshot for one lane, if it charged anything.
+    pub fn lane(&self, lane: usize) -> Option<&LaneMem> {
+        self.lanes.iter().find(|l| l.lane == lane)
+    }
+
+    /// Largest per-lane peak total (the worst device — what the paper's
+    /// Tables 1–2 bound).
+    pub fn max_peak_total(&self) -> u64 {
+        self.lanes.iter().map(|l| l.peak_total()).max().unwrap_or(0)
+    }
+
+    /// JSON tree: per-lane category peaks + totals + churn (the shape
+    /// embedded in `BENCH_mem.json` rows and `trace --out`).
+    pub fn to_json(&self) -> Value {
+        let lanes = self
+            .lanes
+            .iter()
+            .map(|l| {
+                let peaks = Category::ALL
+                    .iter()
+                    .map(|&c| (c.label().to_string(), Value::Num(l.peak(c) as f64)))
+                    .collect();
+                Value::Obj(
+                    [
+                        ("lane".to_string(), Value::Num(l.lane as f64)),
+                        ("peak".to_string(), Value::Obj(peaks)),
+                        ("peak_total".to_string(), Value::Num(l.peak_total() as f64)),
+                    ]
+                    .into_iter()
+                    .collect(),
+                )
+            })
+            .collect();
+        Value::Obj(
+            [
+                ("lanes".to_string(), Value::Arr(lanes)),
+                ("churn_bytes".to_string(), Value::Num(self.churn_bytes as f64)),
+                ("churn_tensors".to_string(), Value::Num(self.churn_tensors as f64)),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+}
+
+impl std::fmt::Display for MemReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "{:<6} {:>12} {:>12} {:>12} {:>12} {:>12} {:>10} {:>10} {:>12}",
+            "lane",
+            "params",
+            "grads",
+            "optimizer",
+            "activation",
+            "attn_stash",
+            "ring_buf",
+            "pipe_stash",
+            "peak_total"
+        )?;
+        for l in &self.lanes {
+            writeln!(
+                f,
+                "{:<6} {:>12} {:>12} {:>12} {:>12} {:>12} {:>10} {:>10} {:>12}",
+                l.lane,
+                l.peak(Category::Params),
+                l.peak(Category::Grads),
+                l.peak(Category::Optimizer),
+                l.peak(Category::Activation),
+                l.peak(Category::AttnStash),
+                l.peak(Category::RingBuf),
+                l.peak(Category::PipeStash),
+                l.peak_total()
+            )?;
+        }
+        writeln!(
+            f,
+            "alloc churn: {} bytes over {} tensors",
+            self.churn_bytes, self.churn_tensors
+        )
+    }
+}
+
+/// Chrome-trace counter records (`"ph":"C"`, name `"memory"`, one track
+/// per lane pid) for the report's sampled timeline; args carry the
+/// per-category live-byte series so the trace viewer stacks them.
+pub fn counter_records(report: &MemReport) -> Vec<Value> {
+    report
+        .samples
+        .iter()
+        .map(|sp| {
+            let args = Category::ALL
+                .iter()
+                .map(|&c| (c.label().to_string(), Value::Num(sp.live[c.idx()] as f64)))
+                .collect();
+            Value::Obj(
+                [
+                    ("name".to_string(), Value::Str("memory".to_string())),
+                    ("cat".to_string(), Value::Str("mem".to_string())),
+                    ("ph".to_string(), Value::Str("C".to_string())),
+                    ("ts".to_string(), Value::Num(sp.ts_ns as f64 / 1e3)),
+                    ("pid".to_string(), Value::Num(sp.lane as f64)),
+                    ("tid".to_string(), Value::Num(0.0)),
+                    ("args".to_string(), Value::Obj(args)),
+                ]
+                .into_iter()
+                .collect(),
+            )
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// BENCH_mem.json schema validation (trace --validate)
+// ---------------------------------------------------------------------
+
+/// Schema-check a parsed `BENCH_mem.json` document (dispatched by the
+/// `trace --validate` CLI when the file carries a `mem_rows` key).
+/// Each row must name a strategy/pattern, carry `n ≥ 1`, a
+/// `peak_per_rank` array of that many non-negative numbers whose max
+/// equals `peak_max`, and per-category peaks under known labels; every
+/// recorded in-bench assert must have held.  Returns a one-line summary.
+pub fn validate_bench_mem(doc: &Value) -> Result<String> {
+    let rows = doc
+        .req("mem_rows")
+        .context("BENCH_mem: root must carry a mem_rows array")?
+        .as_arr()
+        .context("BENCH_mem: mem_rows must be an array")?;
+    if rows.is_empty() {
+        bail!("BENCH_mem: mem_rows is empty");
+    }
+    for (i, row) in rows.iter().enumerate() {
+        let at = || format!("mem_rows[{i}]");
+        for key in ["strategy", "pattern"] {
+            row.req(key)
+                .with_context(at)?
+                .as_str()
+                .with_context(|| format!("{}: {key} must be a string", at()))?;
+        }
+        let n = row
+            .req("n")
+            .with_context(at)?
+            .as_usize()
+            .with_context(|| format!("{}: n must be a non-negative integer", at()))?;
+        if n == 0 {
+            bail!("{}: n must be >= 1", at());
+        }
+        let peaks = row
+            .req("peak_per_rank")
+            .with_context(at)?
+            .as_arr()
+            .with_context(|| format!("{}: peak_per_rank must be an array", at()))?;
+        if peaks.len() != n {
+            bail!("{}: peak_per_rank has {} entries, expected n={n}", at(), peaks.len());
+        }
+        let mut max = 0f64;
+        for (j, p) in peaks.iter().enumerate() {
+            let v = p
+                .as_f64()
+                .with_context(|| format!("{}: peak_per_rank[{j}] must be numeric", at()))?;
+            if v < 0.0 {
+                bail!("{}: peak_per_rank[{j}] must be non-negative", at());
+            }
+            max = max.max(v);
+        }
+        let peak_max = row
+            .req("peak_max")
+            .with_context(at)?
+            .as_f64()
+            .with_context(|| format!("{}: peak_max must be numeric", at()))?;
+        if peak_max != max {
+            bail!("{}: peak_max {peak_max} != max(peak_per_rank) {max}", at());
+        }
+        if let Some(cats) = row.get("categories") {
+            let cats = cats
+                .as_obj()
+                .with_context(|| format!("{}: categories must be an object", at()))?;
+            let known: Vec<&str> = Category::ALL.iter().map(|c| c.label()).collect();
+            for (k, v) in cats {
+                if !known.contains(&k.as_str()) {
+                    bail!("{}: unknown category {k:?}", at());
+                }
+                v.as_f64()
+                    .with_context(|| format!("{}: categories.{k} must be numeric", at()))?;
+            }
+        }
+    }
+    let mut asserts_ok = 0usize;
+    if let Some(asserts) = doc.get("asserts") {
+        let asserts = asserts.as_obj().context("BENCH_mem: asserts must be an object")?;
+        for (k, v) in asserts {
+            match v.as_bool() {
+                Some(true) => asserts_ok += 1,
+                Some(false) => bail!("BENCH_mem: recorded assert {k:?} FAILED"),
+                None => bail!("BENCH_mem: asserts.{k} must be a bool"),
+            }
+        }
+    }
+    Ok(format!("{} mem rows, {} recorded asserts", rows.len(), asserts_ok))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_charges_are_dead() {
+        // no session: charges and churn notes touch no ledger
+        let c = Charge::new(0, Category::Params, 4096);
+        assert_eq!(c.session, 0);
+        drop(c);
+        note_alloc(128);
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn session_tracks_live_and_peak() {
+        let ses = MemSession::start();
+        assert!(enabled());
+        {
+            let _a = Charge::new(0, Category::Activation, 100);
+            {
+                let _b = Charge::new(0, Category::Activation, 50);
+                // both live: peak sees 150
+            }
+            let _c = Charge::new(0, Category::AttnStash, 30);
+        }
+        note_alloc(64);
+        note_alloc(64);
+        let report = ses.finish();
+        assert!(!enabled());
+        assert_eq!(report.lanes.len(), 1);
+        let lane = report.lane(0).unwrap();
+        assert_eq!(lane.peak(Category::Activation), 150);
+        assert_eq!(lane.peak(Category::AttnStash), 30);
+        assert_eq!(lane.peak_total(), 180);
+        assert_eq!(lane.live, [0u64; NCAT], "all charges dropped");
+        assert_eq!(report.churn_bytes, 128);
+        assert_eq!(report.churn_tensors, 2);
+        assert!(report.samples.len() >= 3, "each charge/release samples");
+        assert_eq!(report.max_peak_total(), 180);
+    }
+
+    #[test]
+    fn fork_adopt_maps_lanes_and_blocks_strangers() {
+        let ses = MemSession::start();
+        let h = fork();
+        std::thread::scope(|scope| {
+            scope.spawn(move || {
+                adopt(h, 2);
+                let _c = Charge::new(1, Category::RingBuf, 77); // lane 3
+            });
+            scope.spawn(|| {
+                // never adopted: invisible
+                let c = Charge::new(0, Category::Params, 999);
+                assert_eq!(c.session, 0);
+            });
+        });
+        let report = ses.finish();
+        assert_eq!(report.lanes.len(), 1);
+        assert_eq!(report.lanes[0].lane, 3);
+        assert_eq!(report.lanes[0].peak(Category::RingBuf), 77);
+    }
+
+    #[test]
+    fn lane_base_moves_sequential_charges() {
+        let ses = MemSession::start();
+        let _p = Charge::new(0, Category::Params, 10); // lane 0
+        set_lane_base(5);
+        let _q = Charge::new(1, Category::Params, 20); // lane 6
+        set_lane_base(0);
+        let report = ses.finish();
+        let lanes: Vec<usize> = report.lanes.iter().map(|l| l.lane).collect();
+        assert_eq!(lanes, vec![0, 6]);
+    }
+
+    #[test]
+    fn cross_session_drop_does_not_underflow() {
+        let ses = MemSession::start();
+        let held = Charge::new(0, Category::Grads, 40);
+        let report = ses.finish();
+        assert_eq!(report.lanes[0].peak(Category::Grads), 40);
+        // a fresh session must not see the stale release
+        let ses2 = MemSession::start();
+        drop(held);
+        let report2 = ses2.finish();
+        assert!(report2.lanes.is_empty(), "stale drop leaked into a new session");
+    }
+
+    #[test]
+    fn counter_records_carry_category_series() {
+        let ses = MemSession::start();
+        {
+            let _c = Charge::new(0, Category::PipeStash, 123);
+        }
+        let report = ses.finish();
+        let recs = counter_records(&report);
+        assert!(recs.len() >= 2);
+        let first = &recs[0];
+        assert_eq!(first.req("ph").unwrap().as_str(), Some("C"));
+        assert_eq!(first.req("name").unwrap().as_str(), Some("memory"));
+        assert_eq!(
+            first.req("args").unwrap().req("pipe_stash").unwrap().as_f64(),
+            Some(123.0)
+        );
+    }
+
+    #[test]
+    fn bench_mem_schema_validates() {
+        let doc = crate::util::json::parse(
+            r#"{
+              "mem_rows": [
+                {"strategy": "ring", "pattern": "dense", "n": 2,
+                 "peak_per_rank": [100, 90], "peak_max": 100,
+                 "categories": {"params": 40, "attn_stash": 60}}
+              ],
+              "asserts": {"sp_peak_below_tp": true}
+            }"#,
+        )
+        .unwrap();
+        let summary = validate_bench_mem(&doc).unwrap();
+        assert!(summary.contains("1 mem rows"), "{summary}");
+        // peak_max must equal the rank max
+        let bad = crate::util::json::parse(
+            r#"{"mem_rows": [{"strategy": "ring", "pattern": "dense", "n": 1,
+                "peak_per_rank": [5], "peak_max": 6}]}"#,
+        )
+        .unwrap();
+        assert!(validate_bench_mem(&bad).is_err());
+        // failed recorded asserts are an error
+        let failed = crate::util::json::parse(
+            r#"{"mem_rows": [{"strategy": "ring", "pattern": "dense", "n": 1,
+                "peak_per_rank": [5], "peak_max": 5}],
+                "asserts": {"sp_peak_below_tp": false}}"#,
+        )
+        .unwrap();
+        assert!(validate_bench_mem(&failed).is_err());
+    }
+}

@@ -60,6 +60,8 @@ use anyhow::{bail, Context, Result};
 use crate::comm::{CommKind, Meter};
 use crate::util::json::{encode, Value};
 
+pub mod mem;
+
 // ---------------------------------------------------------------------
 // Global state
 // ---------------------------------------------------------------------
@@ -467,6 +469,34 @@ pub fn write_chrome_trace(path: &Path, events: &[Event]) -> Result<()> {
     Ok(())
 }
 
+/// [`chrome_trace`] plus the memory-counter track: appends one
+/// `"ph":"C"` record per [`mem::MemReport`] sample (name `"memory"`,
+/// pid = lane, args = per-category live bytes) so the trace viewer
+/// shows a stacked memory counter under each rank's span timeline.
+pub fn chrome_trace_with_counters(events: &[Event], mem: Option<&mem::MemReport>) -> Value {
+    let mut doc = chrome_trace(events);
+    if let Some(report) = mem {
+        if let Value::Obj(map) = &mut doc {
+            if let Some(Value::Arr(records)) = map.get_mut("traceEvents") {
+                records.extend(mem::counter_records(report));
+            }
+        }
+    }
+    doc
+}
+
+/// Serialize a Chrome trace with memory counters to `path`.
+pub fn write_chrome_trace_with_counters(
+    path: &Path,
+    events: &[Event],
+    mem: Option<&mem::MemReport>,
+) -> Result<()> {
+    let json = encode(&chrome_trace_with_counters(events, mem));
+    std::fs::write(path, json)
+        .with_context(|| format!("writing trace to {}", path.display()))?;
+    Ok(())
+}
+
 /// Summary of a validated Chrome-trace file.
 #[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct TraceCheck {
@@ -476,6 +506,8 @@ pub struct TraceCheck {
     pub complete: usize,
     /// `ph:"M"` metadata records.
     pub meta: usize,
+    /// `ph:"C"` counter records (the memory track).
+    pub counters: usize,
     /// Distinct pids (ranks), ascending.
     pub pids: Vec<usize>,
     /// Complete-event count per `cat`.
@@ -484,7 +516,9 @@ pub struct TraceCheck {
 
 /// Schema-check a parsed Chrome-trace document: a `traceEvents` array
 /// whose records each carry a string `name`/`ph`, numeric `pid`, numeric
-/// `ts` and, for `ph:"X"`, a non-negative numeric `dur`.
+/// `ts` and, for `ph:"X"`, a non-negative numeric `dur`; `ph:"C"`
+/// counter records (the memory track) must carry numeric `ts` and an
+/// object `args` whose values are all numeric series points.
 pub fn validate_chrome_trace(doc: &Value) -> Result<TraceCheck> {
     let events = doc
         .req("traceEvents")
@@ -536,7 +570,27 @@ pub fn validate_chrome_trace(doc: &Value) -> Result<TraceCheck> {
                 }
             }
             "M" => check.meta += 1,
-            other => bail!("{}: unsupported ph {other:?} (expected X or M)", at()),
+            "C" => {
+                e.req("ts")
+                    .with_context(at)?
+                    .as_f64()
+                    .with_context(|| format!("{}: ts must be numeric", at()))?;
+                let args = e
+                    .req("args")
+                    .with_context(at)?
+                    .as_obj()
+                    .with_context(|| format!("{}: counter args must be an object", at()))?;
+                for (k, v) in args {
+                    if v.as_f64().is_none() {
+                        bail!("{}: counter series {k:?} must be numeric", at());
+                    }
+                }
+                check.counters += 1;
+                if !check.pids.contains(&pid) {
+                    check.pids.push(pid);
+                }
+            }
+            other => bail!("{}: unsupported ph {other:?} (expected X, M or C)", at()),
         }
     }
     check.pids.sort_unstable();
@@ -969,6 +1023,41 @@ mod tests {
             ])]),
         )]);
         assert!(validate_chrome_trace(&bad).is_err());
+    }
+
+    #[test]
+    fn counter_track_roundtrips_and_validates() {
+        let report = mem::MemReport {
+            lanes: vec![],
+            churn_bytes: 0,
+            churn_tensors: 0,
+            samples: vec![mem::Sample { ts_ns: 2_000, lane: 1, live: [0, 0, 0, 128, 64, 0, 0] }],
+        };
+        let events = vec![Event {
+            rank: 1,
+            t0_ns: 1_000,
+            dur_ns: 500,
+            kind: EventKind::Phase { name: "step", index: None },
+        }];
+        let doc = chrome_trace_with_counters(&events, Some(&report));
+        let parsed = crate::util::json::parse(&encode(&doc)).unwrap();
+        let check = validate_chrome_trace(&parsed).unwrap();
+        assert_eq!(check.complete, 1);
+        assert_eq!(check.counters, 1, "the memory sample becomes a ph:C record");
+        // a counter with a non-numeric series point must be rejected
+        let bad = obj(vec![(
+            "traceEvents",
+            Value::Arr(vec![obj(vec![
+                ("name", s("memory")),
+                ("ph", s("C")),
+                ("ts", num(0.0)),
+                ("pid", num(0.0)),
+                ("args", obj(vec![("params", s("lots"))])),
+            ])]),
+        )]);
+        assert!(validate_chrome_trace(&bad).is_err());
+        // without a report the document is unchanged plain chrome_trace
+        assert_eq!(chrome_trace_with_counters(&events, None), chrome_trace(&events));
     }
 
     #[test]

@@ -41,6 +41,7 @@ use anyhow::{bail, Result};
 use crate::attn::{self, block::BlockPlan, AttnPattern, AttnStash};
 use crate::comm::{Collective, Fabric};
 use crate::model::params::ParamStore;
+use crate::obs::mem;
 use crate::runtime::{Executor, Manifest, Runtime};
 use crate::tensor::{ops, Tensor};
 
@@ -230,6 +231,9 @@ pub(crate) struct LayerStash {
     pub(crate) pre2: Vec<Tensor>, // xm + mlp (LN2 input)
     // NOTE: the MLP hidden activation is NOT stashed — mlp_bwd
     // rematerializes it (§Perf iteration 2), matching Megatron's recompute.
+    /// Per-rank residency charges (`obs::mem`) covering exactly the
+    /// tensors above; releasing the stash releases the accounted bytes.
+    pub(crate) _charges: Vec<mem::Charge>,
 }
 
 /// Embedding forward for the executed `ranks`: token + per-chunk position
@@ -322,7 +326,24 @@ pub(crate) fn sp_layer_fwd(
         x_next.push(y);
         pre2.push(pre);
     }
-    Ok((x_next, LayerStash { x_in: x, q, k, v, attn: astash, ctx, pre1, xm, pre2 }))
+    // Residency charges for everything this stash keeps alive, attributed
+    // to the executed rank that owns each chunk: the residual-chain
+    // activations (x_in/pre1/xm/pre2 — the closed form's `4·tok·h` per
+    // layer) and the attention stash (q/k/v/ctx plus the pattern-specific
+    // probs; under Ulysses q/k/v are empty and the head-shard copies in
+    // the AttnStash carry the same bytes).
+    let ranks = view.local_ranks();
+    let mut charges = Vec::with_capacity(2 * ln);
+    for li in 0..ln {
+        let d = ranks[li];
+        let act = x[li].bytes() + pre1[li].bytes() + xm[li].bytes() + pre2[li].bytes();
+        let qkv: usize =
+            [&q, &k, &v].iter().map(|t| t.get(li).map_or(0, |c| c.bytes())).sum();
+        let stash_b = qkv + ctx[li].bytes() + astash.bytes_at(li);
+        charges.push(mem::Charge::new(d, mem::Category::Activation, act as u64));
+        charges.push(mem::Charge::new(d, mem::Category::AttnStash, stash_b as u64));
+    }
+    Ok((x_next, LayerStash { x_in: x, q, k, v, attn: astash, ctx, pre1, xm, pre2, _charges: charges }))
 }
 
 /// MLM + SOP heads: loss forward and the head backward, producing the
@@ -522,6 +543,13 @@ pub(crate) fn seqpar_step(
     let ranks = view.local_ranks();
     let ln = ranks.len();
 
+    // Every rank holds the full replicated parameter set for the whole
+    // step (the sequence-parallel memory trade the paper's Table 2 makes).
+    let _param_charges: Vec<mem::Charge> = ranks
+        .iter()
+        .map(|&d| mem::Charge::new(d, mem::Category::Params, params.total_bytes() as u64))
+        .collect();
+
     // ---- forward ----------------------------------------------------
     let sp = crate::obs::begin();
     let mut x = sp_embed_fwd(ex, sh, params, batch, &ranks)?;
@@ -542,6 +570,11 @@ pub(crate) fn seqpar_step(
     // same per-rank gradient memory the real device group holds — where
     // the old engine shortcut summed into one store and only metered.
     let mut grads: Vec<ParamStore> = (0..ln).map(|_| params.zeros_like()).collect();
+    let _grad_charges: Vec<mem::Charge> = ranks
+        .iter()
+        .enumerate()
+        .map(|(li, &d)| mem::Charge::new(d, mem::Category::Grads, grads[li].total_bytes() as u64))
+        .collect();
     let sp = crate::obs::begin();
     let (mlm_total, sop, mut dx) =
         sp_heads_fwd_bwd(ex, sh, params, batch, &x, &ranks, &mut grads)?;

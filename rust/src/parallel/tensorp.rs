@@ -31,6 +31,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::comm::{Collective, Fabric};
 use crate::model::params::ParamStore;
+use crate::obs::mem;
 use crate::parallel::{call1_on, call_on};
 use crate::runtime::{Executor, Manifest, Runtime};
 use crate::tensor::{ops, Tensor};
@@ -123,6 +124,9 @@ pub(crate) struct TpLayerStash {
     xm: Tensor,
     h: Vec<Tensor>, // per-rank FFN shard activations
     pre2: Tensor,
+    /// Per-rank residency charges (`obs::mem`): each device holds its own
+    /// copy of the replicated tensors plus its head/FFN shards.
+    _charges: Vec<mem::Charge>,
 }
 
 /// Embedding forward: replicated — every rank holds the same
@@ -212,7 +216,23 @@ pub(crate) fn tp_layer_fwd(
     let m2 = call1_on(ex, "bias_add", &[&partial2[0], p_of(&pf("b2"))?])?;
     let pre2 = call1_on(ex, "add", &[&xm, &m2])?;
     let x_next = call1_on(ex, "ln_fwd", &[&pre2, p_of(&pf("ln2_g"))?, p_of(&pf("ln2_b"))?])?;
-    Ok((x_next, TpLayerStash { x_in: x, q, k, v, p, ctx, pre1, xm, h: hs, pre2 }))
+    // Residency charges: the replicated stash tensors are computed once
+    // per view but every real device keeps its own copy, so each executed
+    // rank is charged the full replicated set plus its own shards.
+    let mut charges = Vec::with_capacity(2 * ln);
+    let repl = x.bytes() + pre1.bytes() + xm.bytes() + pre2.bytes();
+    for li in 0..ln {
+        let d = ranks[li];
+        charges.push(mem::Charge::new(
+            d,
+            mem::Category::Activation,
+            (repl + hs[li].bytes()) as u64,
+        ));
+        let shard =
+            q[li].bytes() + k[li].bytes() + v[li].bytes() + p[li].bytes() + ctx[li].bytes();
+        charges.push(mem::Charge::new(d, mem::Category::AttnStash, shard as u64));
+    }
+    Ok((x_next, TpLayerStash { x_in: x, q, k, v, p, ctx, pre1, xm, h: hs, pre2, _charges: charges }))
 }
 
 /// MLM + SOP heads (replicated, computed once per view — every rank
@@ -395,6 +415,15 @@ pub(crate) fn tp_step(
     let ranks = view.local_ranks();
     let ln = ranks.len();
 
+    // This implementation keeps the full parameter store host-side on
+    // every rank and slices shards on demand, so each rank is charged the
+    // replicated total (identical to the sequence engine's Params charge —
+    // the measured SP-vs-TP peak gap comes from activations, not params).
+    let _param_charges: Vec<mem::Charge> = ranks
+        .iter()
+        .map(|&d| mem::Charge::new(d, mem::Category::Params, params.total_bytes() as u64))
+        .collect();
+
     let sp = crate::obs::begin();
     let mut x = tp_embed_fwd(ex, tsh, params, batch)?;
     sp.end_phase("tp_embed_fwd");
@@ -408,6 +437,11 @@ pub(crate) fn tp_step(
     }
 
     let mut grads: Vec<ParamStore> = (0..ln).map(|_| params.zeros_like()).collect();
+    let _grad_charges: Vec<mem::Charge> = ranks
+        .iter()
+        .enumerate()
+        .map(|(li, &d)| mem::Charge::new(d, mem::Category::Grads, grads[li].total_bytes() as u64))
+        .collect();
     let sp = crate::obs::begin();
     let (mlm, sop, mut dx) = tp_heads_fwd_bwd(ex, tsh, params, batch, &x, &ranks, &mut grads)?;
     sp.end_phase("tp_heads_fwd_bwd");

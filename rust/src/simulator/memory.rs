@@ -16,6 +16,8 @@
 //! ledger too.
 
 use super::{RunShape, Strategy};
+use crate::attn::AttnPattern;
+use crate::model::ModelConfig;
 
 const F32: u64 = 4;
 /// weight + grad + Adam m + Adam v
@@ -87,8 +89,8 @@ fn params_per_device(shape: &RunShape, strategy: Strategy) -> u64 {
     let heads = v * h + v + 2 * h + 2;
     let boundary = emb.max(heads);
     match strategy {
-        Strategy::Sequence { .. } => {
-            // all parameters replicated
+        Strategy::Sequence { .. } | Strategy::Ulysses { .. } => {
+            // all parameters replicated (both SP strategies)
             boundary + layers * per_layer_full
         }
         Strategy::Tensor { n } => {
@@ -114,17 +116,23 @@ pub fn layer_stash_elems(shape: &RunShape, strategy: Strategy) -> u64 {
     let b = shape.batch as u64;
     let l = shape.seq_len as u64;
     match strategy {
-        Strategy::Sequence { n } => {
+        Strategy::Sequence { n } | Strategy::Ulysses { n } => {
+            // Ulysses holds the SAME element count head-sharded: q/k/v/p
+            // carry Z/N heads over the FULL length L instead of Z heads
+            // over the chunk Lc, and Z/N·L == Z·Lc.  Pinned by
+            // `ulysses_stash_matches_ring` below.
             let n = n as u64;
             let lc = l / n;
             let tok = b * lc; // tokens on this device
-            // x_in + q + k + v + p + ctx + pre1 + xm + h + pre2
+            // x_in + q + k + v + p + ctx + pre1 + xm + pre2.  The MLP
+            // hidden is NOT stashed — the engines rematerialize it in
+            // backward (`mlp_bwd`) — so it is a transient, not a stash
+            // field (see `transient_elems`).
             tok * h                 // x_in
                 + 3 * b * z * lc * a // q, k, v
                 + b * z * lc * l     // p (rows Lc, FULL width L)
                 + b * z * lc * a     // ctx
-                + 3 * tok * h        // pre1, xm, pre2
-                + tok * f // h
+                + 3 * tok * h // pre1, xm, pre2
         }
         Strategy::Tensor { n } => {
             let n = n as u64;
@@ -148,19 +156,23 @@ pub fn layer_stash_elems(shape: &RunShape, strategy: Strategy) -> u64 {
 fn transient_elems(shape: &RunShape, strategy: Strategy) -> u64 {
     let m = &shape.model;
     let v = m.vocab as u64;
-    let (z, h) = (m.heads as u64, m.hidden as u64);
+    let (z, h, f) = (m.heads as u64, m.hidden as u64, m.ffn() as u64);
     let b = shape.batch as u64;
     let l = shape.seq_len as u64;
     let micros = shape.micros.max(1) as u64;
-    let (tok, logit_cols, score_rows) = match strategy {
-        Strategy::Sequence { n } => {
+    // Under SP the MLP hidden is rematerialized in backward (it is not a
+    // `LayerStash` field), so it appears here as a short-lived tensor;
+    // under TP it IS stashed (`TpLayerStash::h`) and is counted in
+    // `layer_stash_elems` instead.
+    let (tok, logit_cols, score_rows, mlp_hidden) = match strategy {
+        Strategy::Sequence { n } | Strategy::Ulysses { n } => {
             let lc = l / n as u64;
-            (b * lc, v, b * z * lc * l)
+            (b * lc, v, b * z * lc * l, b * lc * f)
         }
-        Strategy::Tensor { n } => (b * l, v / n as u64, b * z / n as u64 * l * l),
+        Strategy::Tensor { n } => (b * l, v / n as u64, b * z / n as u64 * l * l, 0),
     };
-    // logits + dlogits (one microbatch) + dP + dx
-    2 * (tok / micros) * logit_cols + score_rows + tok * h
+    // logits + dlogits (one microbatch) + dP + dx + rematerialized hidden
+    2 * (tok / micros) * logit_cols + score_rows + tok * h + mlp_hidden
 }
 
 /// Full per-device breakdown for a run shape under a strategy.
@@ -171,7 +183,7 @@ pub fn breakdown(shape: &RunShape, strategy: Strategy) -> MemoryBreakdown {
         activations: layers * layer_stash_elems(shape, strategy) * F32
             // embedding output held alongside the stashes
             + match strategy {
-                Strategy::Sequence { n } => {
+                Strategy::Sequence { n } | Strategy::Ulysses { n } => {
                     (shape.batch * shape.seq_len / n * shape.model.hidden) as u64 * F32
                 }
                 Strategy::Tensor { .. } => {
@@ -185,6 +197,139 @@ pub fn breakdown(shape: &RunShape, strategy: Strategy) -> MemoryBreakdown {
 /// Peak bytes on the worst device.
 pub fn peak_bytes(shape: &RunShape, strategy: Strategy) -> u64 {
     breakdown(shape, strategy).total()
+}
+
+// ---------------------------------------------------------------------------
+// Measured-vs-closed-form contract (obs::mem validation)
+// ---------------------------------------------------------------------------
+
+/// Total parameter ELEMENTS the native backend registers for a model at
+/// `seq_len`: the `crate::model::param_spec` sum plus, when the run uses
+/// `linformer:K`, the shared E_k/E_v projections (`[K, L]` each) that
+/// `backend::native` appends to the manifest.  Unlike the internal
+/// `params_per_device` (which charges the worst PIPELINE stage), this
+/// is the exact replicated total a single-stage SP rank holds — what
+/// `obs::mem` measures for the params/grads categories.
+pub fn params_total_elems(m: &ModelConfig, seq_len: usize, linformer_k: usize) -> u64 {
+    let (h, f, v) = (m.hidden as u64, m.ffn() as u64, m.vocab as u64);
+    let l = seq_len as u64;
+    let layers = m.layers as u64;
+    let per_layer = 4 * h * h + 4 * h + h * f + f + f * h + h + 4 * h;
+    let mut total = (v * h + l * h) + layers * per_layer + (v * h + v + 2 * h + 2);
+    if linformer_k > 0 {
+        total += 2 * linformer_k as u64 * l;
+    }
+    total
+}
+
+/// Width (in tokens) of rank `dst`'s stashed probability rows under
+/// `block:W` with `n` chunks of `lc` tokens — `reach(dst) · lc`, where
+/// the chunk-level reachability mirrors `attn::block`'s plan: chunk
+/// `src` is reachable from `dst` iff some token pair falls inside the
+/// causal window.
+pub fn block_stash_width(dst: usize, n: usize, lc: usize, w: usize) -> u64 {
+    let reach = (0..n)
+        .filter(|&src| src == dst || (src < dst && (dst - src - 1) * lc + 1 <= w.saturating_sub(1)))
+        .count() as u64;
+    reach * lc as u64
+}
+
+/// Expected per-rank PEAK bytes per `obs::mem` accounting category for
+/// the real SP engines.  `tests/mem_validation.rs` and
+/// `benches/mem_profile.rs` assert measured peaks EQUAL these —
+/// element-count exactness, the memory analogue of PR 6's comm-byte
+/// closed forms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MemExpect {
+    /// Replicated parameter bytes (`ParamStore::total_bytes`).
+    pub params: u64,
+    /// Gradient-accumulator bytes (`zeros_like`: same spec as params).
+    pub grads: u64,
+    /// Adam state bytes (m + v = 2 × params).
+    pub optimizer: u64,
+    /// Residual-stream stash: x_in + pre1 + xm + pre2, per layer.
+    pub activation: u64,
+    /// Attention stash: q/k/v/ctx plus the pattern's score stash (and
+    /// Linformer's K̃/Ṽ), per layer.
+    pub attn_stash: u64,
+    /// Ring-buffer peak (in-flight k/v + gradient slots).  `None` means
+    /// the category is reported but not validated (block-sparse keeps a
+    /// schedule-dependent number of slots in flight).
+    pub ring_buf: Option<u64>,
+}
+
+impl MemExpect {
+    /// Sum of every validated category (`ring_buf` included when pinned).
+    pub fn validated_total(&self) -> u64 {
+        self.params
+            + self.grads
+            + self.optimizer
+            + self.activation
+            + self.attn_stash
+            + self.ring_buf.unwrap_or(0)
+    }
+}
+
+/// Closed-form per-category peak for rank `rank` of an n-way SP run.
+/// Covers the SP strategies only (TP enters the contract only through
+/// the SP-peak < TP-peak inequality); `rank` matters only for `block:W`,
+/// whose stash width varies per chunk.
+pub fn sp_expect(
+    shape: &RunShape,
+    strategy: Strategy,
+    pattern: AttnPattern,
+    rank: usize,
+) -> MemExpect {
+    assert!(
+        !matches!(strategy, Strategy::Tensor { .. }),
+        "sp_expect covers SP strategies only"
+    );
+    let m = &shape.model;
+    let (h, z, a) = (m.hidden as u64, m.heads as u64, m.head_dim as u64);
+    let b = shape.batch as u64;
+    let l = shape.seq_len as u64;
+    let n = strategy.n() as u64;
+    let lc = l / n;
+    let tok = b * lc;
+    let layers = m.layers as u64;
+    let linformer_k = match pattern {
+        AttnPattern::Linformer { k } => k,
+        _ => 0,
+    };
+    let params = params_total_elems(m, shape.seq_len, linformer_k) * F32;
+    // q + k + v + ctx — identical element counts for ring (Z heads × Lc
+    // rows) and Ulysses (Z/N heads × L rows).
+    let qkv_ctx = 4 * b * z * lc * a;
+    let pattern_elems = match pattern {
+        AttnPattern::Dense => b * z * lc * l,
+        AttnPattern::Linformer { k } => {
+            let k = k as u64;
+            b * z * lc * k + 2 * b * z * k * a
+        }
+        AttnPattern::Block { w } => b * z * lc * block_stash_width(rank, n as usize, lc as usize, w),
+    };
+    let ring_buf = match pattern {
+        // the dense ring's backward holds exactly two chunk-sized slot
+        // sets in flight per rank (v+dv, then k+dk); the all-to-all
+        // schedule never touches the ring buffers
+        AttnPattern::Dense => {
+            if matches!(strategy, Strategy::Ulysses { .. }) {
+                Some(0)
+            } else {
+                Some(2 * b * z * lc * a * F32)
+            }
+        }
+        AttnPattern::Linformer { .. } => Some(0),
+        AttnPattern::Block { .. } => None,
+    };
+    MemExpect {
+        params,
+        grads: params,
+        optimizer: 2 * params,
+        activation: layers * 4 * tok * h * F32,
+        attn_stash: layers * (qkv_ctx + pattern_elems) * F32,
+        ring_buf,
+    }
 }
 
 #[cfg(test)]
@@ -303,5 +448,101 @@ mod tests {
         let f = breakdown(&flat, Strategy::Sequence { n: 4 });
         let p = breakdown(&piped, Strategy::Sequence { n: 4 });
         assert!(p.activations < f.activations / 2);
+    }
+
+    #[test]
+    fn ulysses_stash_matches_ring() {
+        // The head-sharded Ulysses stash (Z/N heads × full L) holds the
+        // same element count as the ring stash (Z heads × chunk Lc), so
+        // the whole breakdown is shared between the two SP strategies.
+        let shape = RunShape::new(BERT_BASE, 8, 512);
+        for n in [1usize, 2, 4] {
+            assert_eq!(
+                layer_stash_elems(&shape, Strategy::Sequence { n }),
+                layer_stash_elems(&shape, Strategy::Ulysses { n }),
+                "stash elems diverge at n={n}"
+            );
+            assert_eq!(
+                breakdown(&shape, Strategy::Sequence { n }),
+                breakdown(&shape, Strategy::Ulysses { n }),
+                "breakdown diverges at n={n}"
+            );
+        }
+        // Ulysses additionally needs the head count divisible.
+        assert!(Strategy::Ulysses { n: 4 }.feasible(&BERT_BASE, 512));
+        assert!(!Strategy::Ulysses { n: 8 }.feasible(&BERT_BASE, 512), "12 heads % 8 != 0");
+        assert!(Strategy::Sequence { n: 8 }.feasible(&BERT_BASE, 512), "ring has no head cap");
+    }
+
+    #[test]
+    fn params_formula_matches_spec() {
+        // params_total_elems must equal the element sum of the manifest
+        // the native backend actually registers.
+        for l in [128usize, 512] {
+            let spec_sum: u64 = crate::model::param_spec(&BERT_BASE, l)
+                .iter()
+                .map(|(_, dims)| dims.iter().product::<usize>() as u64)
+                .sum();
+            assert_eq!(params_total_elems(&BERT_BASE, l, 0), spec_sum);
+            // linformer adds the two [K, L] projections
+            assert_eq!(
+                params_total_elems(&BERT_BASE, l, 32),
+                spec_sum + 2 * 32 * l as u64
+            );
+        }
+    }
+
+    #[test]
+    fn sp_expect_pins_category_forms() {
+        use crate::attn::AttnPattern;
+        let shape = RunShape::new(BERT_BASE, 2, 512);
+        let (b, z, a, h) = (2u64, 12u64, 64u64, 768u64);
+        let (l, n) = (512u64, 4usize);
+        let lc = l / n as u64;
+        let strat = Strategy::Sequence { n };
+        let dense = sp_expect(&shape, strat, AttnPattern::Dense, 0);
+        // params/grads/optimizer tie to the manifest sum
+        assert_eq!(dense.params, params_total_elems(&BERT_BASE, 512, 0) * F32);
+        assert_eq!(dense.grads, dense.params);
+        assert_eq!(dense.optimizer, 2 * dense.params);
+        // activation: 4 residual-stream tensors per layer
+        assert_eq!(dense.activation, 12 * 4 * b * lc * h * F32);
+        // dense attn stash: q/k/v/ctx + full-width probs
+        assert_eq!(
+            dense.attn_stash,
+            12 * (4 * b * z * lc * a + b * z * lc * l) * F32
+        );
+        assert_eq!(dense.ring_buf, Some(2 * b * z * lc * a * F32));
+        // ulysses: same stash, no ring buffers
+        let uly = sp_expect(&shape, Strategy::Ulysses { n }, AttnPattern::Dense, 0);
+        assert_eq!(uly.attn_stash, dense.attn_stash);
+        assert_eq!(uly.activation, dense.activation);
+        assert_eq!(uly.ring_buf, Some(0));
+        // linformer: K-width probs + projected K̃/Ṽ, no ring buffers,
+        // and the E_k/E_v parameters join the replicated params
+        let k = 64u64;
+        let lin = sp_expect(&shape, strat, AttnPattern::Linformer { k: 64 }, 0);
+        assert_eq!(
+            lin.attn_stash,
+            12 * (4 * b * z * lc * a + b * z * lc * k + 2 * b * z * k * a) * F32
+        );
+        assert_eq!(lin.params, dense.params + 2 * k * l * F32);
+        assert_eq!(lin.ring_buf, Some(0));
+        assert!(lin.attn_stash < dense.attn_stash, "K < L must shrink the stash");
+        // block: causal reach — width grows with rank, hits full L on the
+        // last rank when the window spans the sequence
+        let w = l as usize;
+        for d in 0..n {
+            assert_eq!(block_stash_width(d, n, lc as usize, w), (d as u64 + 1) * lc);
+        }
+        let blk_last = sp_expect(&shape, strat, AttnPattern::Block { w }, n - 1);
+        assert_eq!(
+            blk_last.attn_stash,
+            12 * (4 * b * z * lc * a + b * z * lc * l) * F32,
+            "full-reach last rank matches the dense width"
+        );
+        assert_eq!(blk_last.ring_buf, None, "block ring-buf is reported, not validated");
+        let blk_first = sp_expect(&shape, strat, AttnPattern::Block { w }, 0);
+        assert!(blk_first.attn_stash < blk_last.attn_stash, "reach grows with rank");
     }
 }

@@ -59,14 +59,23 @@ impl Default for Cluster {
 pub enum Strategy {
     /// Megatron tensor parallelism of size n (must divide heads & FFN).
     Tensor { n: usize },
-    /// Sequence parallelism of size n (must divide the sequence length).
+    /// Ring sequence parallelism of size n (must divide the sequence
+    /// length).
     Sequence { n: usize },
+    /// Ulysses all-to-all sequence parallelism of size n.  Memory is
+    /// identical to ring SP (the head-sharded stash holds the same
+    /// element count as the sequence-sharded one — pinned by a unit
+    /// test in [`memory`]); only the collective schedule differs, so
+    /// [`timing`] gives it its own comm arm while [`memory`] shares the
+    /// `Sequence` forms.  Feasibility additionally needs the head count
+    /// divisible (heads are resharded across ranks mid-attention).
+    Ulysses { n: usize },
 }
 
 impl Strategy {
     pub fn n(&self) -> usize {
         match self {
-            Strategy::Tensor { n } | Strategy::Sequence { n } => *n,
+            Strategy::Tensor { n } | Strategy::Sequence { n } | Strategy::Ulysses { n } => *n,
         }
     }
 
@@ -76,6 +85,9 @@ impl Strategy {
         match self {
             Strategy::Tensor { n } => cfg.heads % n == 0 && cfg.ffn() % n == 0 && *n <= cfg.heads,
             Strategy::Sequence { n } => seq_len % n == 0,
+            Strategy::Ulysses { n } => {
+                seq_len % n == 0 && cfg.heads % n == 0 && *n <= cfg.heads
+            }
         }
     }
 }

@@ -60,7 +60,7 @@ pub fn max_seq_len(
     step: usize,
 ) -> usize {
     let step = match strategy {
-        Strategy::Sequence { n } => step.max(1).next_multiple_of(n),
+        Strategy::Sequence { n } | Strategy::Ulysses { n } => step.max(1).next_multiple_of(n),
         _ => step.max(1),
     };
     let shape = |l: usize| {

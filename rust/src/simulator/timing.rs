@@ -18,11 +18,12 @@ fn layer_flops(shape: &RunShape, strategy: Strategy) -> f64 {
     let b = shape.batch as f64;
     let l = shape.seq_len as f64;
     match strategy {
-        Strategy::Sequence { n } => {
+        Strategy::Sequence { n } | Strategy::Ulysses { n } => {
             let n = n as f64;
             let tok = b * l / n;
             // qkv + out proj on the chunk; attention spans the FULL row
-            // (the ring brings every key/value chunk through the device)
+            // (the ring brings every key/value chunk through the device;
+            // Ulysses computes Z/N whole heads over L×L — same flops)
             2.0 * tok * h * h * 4.0
                 + 2.0 * b * z * (l / n) * l * a * 2.0  // scores + AV
                 + 2.0 * tok * h * f * 2.0 // mlp
@@ -55,6 +56,18 @@ fn layer_comm_bytes(shape: &RunShape, strategy: Strategy) -> f64 {
             let chunk = b * z * (l / n_) * a * 4.0;
             8.0 * (n_ - 1.0) * chunk
         }
+        Strategy::Ulysses { n } => {
+            let n_ = n as f64;
+            if n == 1 {
+                return 0.0;
+            }
+            // 8 all-to-alls of the local chunk per layer (q/k/v/ctx fwd +
+            // grads bwd): group total 8(N-1)·chunk (analysis::closed_form),
+            // so each device ships 8(N-1)/N·chunk — strictly below the
+            // ring's 8(N-1)·chunk per device.
+            let chunk = b * z * (l / n_) * a * 4.0;
+            8.0 * (n_ - 1.0) / n_ * chunk
+        }
         Strategy::Tensor { n } => {
             let n_ = n as f64;
             if n == 1 {
@@ -71,7 +84,7 @@ fn layer_comm_bytes(shape: &RunShape, strategy: Strategy) -> f64 {
 /// Per-layer collective COUNT (latency term).
 fn layer_comm_msgs(_shape: &RunShape, strategy: Strategy) -> f64 {
     match strategy {
-        Strategy::Sequence { n } => {
+        Strategy::Sequence { n } | Strategy::Ulysses { n } => {
             if n == 1 { 0.0 } else { 8.0 * (n - 1) as f64 }
         }
         Strategy::Tensor { n } => {
@@ -107,7 +120,7 @@ pub fn step_time(cluster: &Cluster, shape: &RunShape, strategy: Strategy) -> f64
         Strategy::Tensor { .. } => {
             boundary_bytes_megatron(shape.batch, shape.seq_len, shape.model.hidden, mp)
         }
-        Strategy::Sequence { .. } => {
+        Strategy::Sequence { .. } | Strategy::Ulysses { .. } => {
             boundary_bytes_seqpar(shape.batch, shape.seq_len, shape.model.hidden, mp)
         }
     };
@@ -173,6 +186,25 @@ mod tests {
             let ratio = sp / tp;
             assert!((0.6..1.6).contains(&ratio), "n={n}: SP/TP ratio {ratio}");
         }
+    }
+
+    #[test]
+    fn ulysses_no_slower_than_ring() {
+        // Same flops and message count, strictly fewer per-device bytes
+        // (8(N-1)/N vs 8(N-1) chunks), so the analytic step time can
+        // only improve.
+        let c = cluster();
+        let shape = RunShape::new(BERT_BASE, 16, 512);
+        for n in [2usize, 4] {
+            let uly = step_time(&c, &shape, Strategy::Ulysses { n });
+            let ring = step_time(&c, &shape, Strategy::Sequence { n });
+            assert!(uly <= ring, "n={n}: ulysses {uly}s vs ring {ring}s");
+        }
+        assert_eq!(
+            step_time(&c, &shape, Strategy::Ulysses { n: 1 }),
+            step_time(&c, &shape, Strategy::Sequence { n: 1 }),
+            "serial: identical model"
+        );
     }
 
     #[test]

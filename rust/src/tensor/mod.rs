@@ -31,11 +31,17 @@ pub struct Tensor {
 
 impl Tensor {
     // ---------------------------------------------------------- constructors
+    //
+    // Every materializing constructor notes its bytes with
+    // `obs::mem::note_alloc` — the allocation-CHURN counter (total bytes
+    // ever produced; kernel outputs funnel through these too).  `scalar`
+    // and `reshaped` are exempt: one is noise, the other zero-copy.
+    // Live/peak RESIDENCY is tracked separately by `obs::mem::Charge`s
+    // at the stash/param choke points.
     pub fn zeros(shape: &[usize]) -> Tensor {
-        Tensor {
-            shape: shape.to_vec(),
-            data: TData::F32(vec![0.0; shape.iter().product()]),
-        }
+        let n: usize = shape.iter().product();
+        crate::obs::mem::note_alloc(n * 4);
+        Tensor { shape: shape.to_vec(), data: TData::F32(vec![0.0; n]) }
     }
 
     pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
@@ -43,6 +49,7 @@ impl Tensor {
         if data.len() != n {
             bail!("shape {shape:?} needs {n} elements, got {}", data.len());
         }
+        crate::obs::mem::note_alloc(n * 4);
         Ok(Tensor { shape: shape.to_vec(), data: TData::F32(data) })
     }
 
@@ -51,6 +58,7 @@ impl Tensor {
         if data.len() != n {
             bail!("shape {shape:?} needs {n} elements, got {}", data.len());
         }
+        crate::obs::mem::note_alloc(n * 4);
         Ok(Tensor { shape: shape.to_vec(), data: TData::I32(data) })
     }
 
@@ -62,6 +70,7 @@ impl Tensor {
     pub fn randn(shape: &[usize], std: f32, rng: &mut crate::util::rng::Rng) -> Tensor {
         let n: usize = shape.iter().product();
         let data = (0..n).map(|_| rng.normal() as f32 * std).collect();
+        crate::obs::mem::note_alloc(n * 4);
         Tensor { shape: shape.to_vec(), data: TData::F32(data) }
     }
 

@@ -45,6 +45,13 @@ impl Adam {
         (&self.m, &self.v, self.t)
     }
 
+    /// Bytes held by the two moment stores — the `obs::mem` Optimizer
+    /// category (exactly `2×` the parameter bytes, the closed form
+    /// `simulator::memory` uses).
+    pub fn state_bytes(&self) -> usize {
+        self.m.total_bytes() + self.v.total_bytes()
+    }
+
     /// Rebuild from a checkpoint (see `train::checkpoint`).
     pub fn from_state(cfg: AdamConfig, m: ParamStore, v: ParamStore, t: u64) -> Adam {
         Adam { cfg, m, v, t }

@@ -83,6 +83,18 @@ impl<'e, E: Engine> Trainer<'e, E> {
     where
         F: FnMut() -> Result<Batch>,
     {
+        // Adam's moment stores are replicated like the params: every
+        // simulated device holds a copy for the whole run (the `2×params`
+        // Optimizer row of `simulator::memory`).
+        let _opt_charges: Vec<crate::obs::mem::Charge> = (0..self.engine.group_size())
+            .map(|d| {
+                crate::obs::mem::Charge::new(
+                    d,
+                    crate::obs::mem::Category::Optimizer,
+                    self.adam.state_bytes() as u64,
+                )
+            })
+            .collect();
         let mut curve = Vec::new();
         for step in 0..self.cfg.steps {
             let batch = next_batch()?;
@@ -139,6 +151,16 @@ impl<'e> MeshTrainer<'e> {
         let mesh = self.engine.mesh();
         let micros = self.engine.micros();
         let label = format!("mesh-{}", mesh.label());
+        // replicated Adam state, one copy per mesh coordinate
+        let _opt_charges: Vec<crate::obs::mem::Charge> = (0..mesh.world_size())
+            .map(|d| {
+                crate::obs::mem::Charge::new(
+                    d,
+                    crate::obs::mem::Category::Optimizer,
+                    self.adam.state_bytes() as u64,
+                )
+            })
+            .collect();
         let mut curve = Vec::new();
         for step in 0..self.cfg.steps {
             let batches: Vec<Vec<Batch>> = (0..mesh.dp)

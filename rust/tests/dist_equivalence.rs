@@ -537,6 +537,72 @@ fn threaded_and_sequential_trace_shapes_agree() {
     }
 }
 
+/// Memory parity: sequential simulation and threaded execution charge
+/// the SAME per-rank memory.  One step of each runs under its own
+/// `obs::mem` session; every (lane, category) high-water mark must
+/// match byte-for-byte — across both SP strategies and the sparse
+/// patterns — because the per-rank tensor lifetimes are decided by the
+/// dataflow, not by where the ranks run.
+#[test]
+fn threaded_and_sequential_memory_peaks_agree() {
+    for n in [2usize, 4] {
+        let cases = [
+            (
+                "dense",
+                NativeConfig { ring: n, ..NativeConfig::tiny() },
+                AttnPattern::Dense,
+                SpStrategy::Ring,
+            ),
+            (
+                "linformer:8",
+                NativeConfig { ring: n, linformer_k: 8, ..NativeConfig::tiny() },
+                AttnPattern::Linformer { k: 8 },
+                SpStrategy::Ring,
+            ),
+            (
+                "block:8",
+                NativeConfig { ring: n, block_w: 8, ..NativeConfig::tiny() },
+                AttnPattern::Block { w: 8 },
+                SpStrategy::Ring,
+            ),
+            (
+                "ulysses",
+                NativeConfig { model: BERT_TINY_Z4, ring: n, ulysses: true, ..NativeConfig::tiny() },
+                AttnPattern::Dense,
+                SpStrategy::Ulysses,
+            ),
+        ];
+        for (label, cfg, pattern, sp) in cases {
+            let tag = format!("{label} n={n}");
+            let rt = Runtime::native(cfg).unwrap();
+            let params = ParamStore::synthetic(rt.manifest());
+            let batch = batch_for(&rt, 53);
+
+            let seq = SeqParEngine::with_strategy(&rt, Fabric::new(n, Meter::new()), pattern, sp)
+                .unwrap();
+            let ses = obs::mem::MemSession::start();
+            seq.forward_backward(&params, &batch).unwrap();
+            let a = ses.finish();
+
+            let dist = DistRunner::with_strategy(&rt, Meter::new(), pattern, sp).unwrap();
+            let ses = obs::mem::MemSession::start();
+            dist.forward_backward(&params, &batch).unwrap();
+            let b = ses.finish();
+
+            assert_eq!(a.lanes.len(), n, "{tag}: sequential run charged the wrong lane count");
+            assert_eq!(b.lanes.len(), n, "{tag}: threaded run charged the wrong lane count");
+            for (la, lb) in a.lanes.iter().zip(&b.lanes) {
+                assert_eq!(la.lane, lb.lane, "{tag}: lane sets differ");
+                assert_eq!(
+                    la.peak, lb.peak,
+                    "{tag}: lane {} per-category peaks differ (sequential vs threaded)",
+                    la.lane
+                );
+            }
+        }
+    }
+}
+
 /// The runner refuses gracefully when the manifest ring size does not
 /// divide the sequence — same contract as the sequential engine.
 #[test]

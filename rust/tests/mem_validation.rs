@@ -1,0 +1,160 @@
+//! Integration: MEASURED per-rank memory peaks equal the simulator's
+//! closed forms, category by category, byte for byte.
+//!
+//! One training step (forward + backward + Adam) of the sequential
+//! `SeqParEngine` runs under an `obs::mem` accounting session; every
+//! rank's high-water mark per category must EQUAL
+//! `simulator::memory::sp_expect` — the memory analogue of the
+//! comm-byte closed forms the meter tests pin.  Covered surface:
+//!
+//! * `--sp ring`  × dense / linformer:K / block:W, n ∈ {1, 2, 4};
+//! * `--sp ulysses` × dense, n ∈ {1, 2, 4} (bert-tiny-z4 — Ulysses
+//!   shards whole heads, so n must divide the head count).
+//!
+//! `ring_buf` is asserted only where `sp_expect` pins it (dense ring:
+//! exactly two in-flight chunk slot sets; Ulysses / Linformer: zero);
+//! block-sparse ring residency is schedule-dependent and stays
+//! report-only.  `pipe_stash` must be zero on these flat engines, and
+//! no lane may hold live bytes after the session — every charge is
+//! RAII-scoped to the tensors it covers.
+
+use seqpar::attn::AttnPattern;
+use seqpar::backend::native::NativeConfig;
+use seqpar::comm::{Fabric, Meter};
+use seqpar::model::params::ParamStore;
+use seqpar::model::BERT_TINY_Z4;
+use seqpar::obs::mem::{Category, MemReport, MemSession, NCAT};
+use seqpar::parallel::sequence::{SeqParEngine, SpStrategy};
+use seqpar::runtime::Runtime;
+use seqpar::simulator::memory::sp_expect;
+use seqpar::simulator::{RunShape, Strategy};
+use seqpar::train::data::{Corpus, CorpusConfig};
+use seqpar::train::trainer::{TrainConfig, Trainer};
+
+/// One accounted training step on the sequential SP engine; returns the
+/// finished session report plus the run shape the closed forms take.
+fn measure(cfg: NativeConfig, pattern: AttnPattern, sp: SpStrategy) -> (MemReport, RunShape) {
+    let n = cfg.ring;
+    let rt = Runtime::native(cfg).unwrap();
+    let m = rt.manifest().clone();
+    let mut params = ParamStore::synthetic(&m);
+    let mut corpus = Corpus::new(CorpusConfig::new(m.vocab, m.seq_len, m.batch), 11);
+    let engine = SeqParEngine::with_strategy(&rt, Fabric::new(n, Meter::new()), pattern, sp)
+        .unwrap();
+    let shape = RunShape::new(seqpar::model::by_name(&m.model).unwrap(), m.batch, m.seq_len);
+
+    let ses = MemSession::start();
+    let mut tr = Trainer::new(
+        &engine,
+        &params,
+        TrainConfig { steps: 1, warmup: 0, peak_lr: 1e-3, log_every: 1 },
+    );
+    tr.run(&mut params, || corpus.next_batch(), true).unwrap();
+    (ses.finish(), shape)
+}
+
+/// Measured peaks == closed forms for every rank, category by category.
+fn assert_expected(
+    tag: &str,
+    report: &MemReport,
+    shape: &RunShape,
+    strategy: Strategy,
+    pattern: AttnPattern,
+) {
+    let n = strategy.n();
+    assert_eq!(
+        report.lanes.len(),
+        n,
+        "{tag}: expected {n} charged lanes, got {:?}",
+        report.lanes.iter().map(|l| l.lane).collect::<Vec<_>>()
+    );
+    for d in 0..n {
+        let exp = sp_expect(shape, strategy, pattern, d);
+        let lane = report
+            .lane(d)
+            .unwrap_or_else(|| panic!("{tag}: rank {d} charged nothing"));
+        assert_eq!(lane.peak(Category::Params), exp.params, "{tag}: rank {d} params");
+        assert_eq!(lane.peak(Category::Grads), exp.grads, "{tag}: rank {d} grads");
+        assert_eq!(lane.peak(Category::Optimizer), exp.optimizer, "{tag}: rank {d} optimizer");
+        assert_eq!(lane.peak(Category::Activation), exp.activation, "{tag}: rank {d} activation");
+        assert_eq!(lane.peak(Category::AttnStash), exp.attn_stash, "{tag}: rank {d} attn_stash");
+        if let Some(rb) = exp.ring_buf {
+            assert_eq!(lane.peak(Category::RingBuf), rb, "{tag}: rank {d} ring_buf");
+        }
+        assert_eq!(lane.peak(Category::PipeStash), 0, "{tag}: rank {d} pipe_stash (flat engine)");
+        assert_eq!(lane.live, [0u64; NCAT], "{tag}: rank {d} held live bytes past the session");
+    }
+    // churn is report-only, but a real step must have materialized tensors
+    assert!(report.churn_tensors > 0, "{tag}: no allocation churn recorded");
+}
+
+#[test]
+fn ring_dense_peaks_match_closed_forms() {
+    for n in [1usize, 2, 4] {
+        let (report, shape) =
+            measure(NativeConfig { ring: n, ..NativeConfig::tiny() }, AttnPattern::Dense, SpStrategy::Ring);
+        assert_expected(
+            &format!("ring dense n={n}"),
+            &report,
+            &shape,
+            Strategy::Sequence { n },
+            AttnPattern::Dense,
+        );
+    }
+}
+
+#[test]
+fn ring_linformer_peaks_match_closed_forms() {
+    let k = 8usize;
+    for n in [1usize, 2, 4] {
+        let (report, shape) = measure(
+            NativeConfig { ring: n, linformer_k: k, ..NativeConfig::tiny() },
+            AttnPattern::Linformer { k },
+            SpStrategy::Ring,
+        );
+        assert_expected(
+            &format!("ring linformer:{k} n={n}"),
+            &report,
+            &shape,
+            Strategy::Sequence { n },
+            AttnPattern::Linformer { k },
+        );
+    }
+}
+
+#[test]
+fn ring_block_peaks_match_closed_forms() {
+    let w = 8usize;
+    for n in [1usize, 2, 4] {
+        let (report, shape) = measure(
+            NativeConfig { ring: n, block_w: w, ..NativeConfig::tiny() },
+            AttnPattern::Block { w },
+            SpStrategy::Ring,
+        );
+        assert_expected(
+            &format!("ring block:{w} n={n}"),
+            &report,
+            &shape,
+            Strategy::Sequence { n },
+            AttnPattern::Block { w },
+        );
+    }
+}
+
+#[test]
+fn ulysses_dense_peaks_match_closed_forms() {
+    for n in [1usize, 2, 4] {
+        let (report, shape) = measure(
+            NativeConfig { model: BERT_TINY_Z4, ring: n, ulysses: true, ..NativeConfig::tiny() },
+            AttnPattern::Dense,
+            SpStrategy::Ulysses,
+        );
+        assert_expected(
+            &format!("ulysses dense n={n}"),
+            &report,
+            &shape,
+            Strategy::Ulysses { n },
+            AttnPattern::Dense,
+        );
+    }
+}

@@ -213,6 +213,54 @@ fn threaded_mesh_is_deterministic() {
     }
 }
 
+/// Memory parity on the 4D mesh: the sequential `MeshEngine` aims its
+/// charges at global lanes with `obs::mem::set_lane_base`, the threaded
+/// `MeshRunner` with per-thread lane adoption — both must record the
+/// SAME per-(lane, category) high-water marks, for every mesh shape and
+/// micro count, because the held-activation and stash lifetimes are
+/// fixed by the GPipe schedule, not by the execution style.
+#[test]
+fn mesh_threaded_and_sequential_memory_peaks_agree() {
+    for (dp, pp, mp) in MESHES {
+        let mesh = Mesh::new(dp, pp, mp, MpKind::Sequence).unwrap();
+        let rt = runtime_for(&mesh);
+        let params = ParamStore::synthetic(rt.manifest());
+        for micros in [1usize, 2] {
+            let tag = format!("{} micros={micros}", mesh.label());
+            let batches = batches_for(&rt, dp, micros, 61);
+
+            let eng = MeshEngine::new(&rt, mesh, micros, Meter::new()).unwrap();
+            let ses = seqpar::obs::mem::MemSession::start();
+            eng.step(&params, &batches).unwrap();
+            let a = ses.finish();
+
+            let run = MeshRunner::new(&rt, mesh, micros, Meter::new()).unwrap();
+            let ses = seqpar::obs::mem::MemSession::start();
+            run.step(&params, &batches).unwrap();
+            let b = ses.finish();
+
+            assert_eq!(
+                a.lanes.len(),
+                mesh.world_size(),
+                "{tag}: sequential run charged the wrong lane count"
+            );
+            assert_eq!(
+                b.lanes.len(),
+                mesh.world_size(),
+                "{tag}: threaded run charged the wrong lane count"
+            );
+            for (la, lb) in a.lanes.iter().zip(&b.lanes) {
+                assert_eq!(la.lane, lb.lane, "{tag}: lane sets differ");
+                assert_eq!(
+                    la.peak, lb.peak,
+                    "{tag}: lane {} per-category peaks differ (sequential vs threaded)",
+                    la.lane
+                );
+            }
+        }
+    }
+}
+
 /// The §3.2.2 stage-boundary claim, measured: at equal mesh shape, SP
 /// boundaries move strictly fewer bytes than the TP baseline — SP sends
 /// its already-split chunk (Pipeline only), TP pays scatter + all-gather
