@@ -31,12 +31,13 @@ fn main() {
         // paper closed form: both equal 8(N-1)·BZ(L/N)A elements
         let chunk = (64 * 12 * (512 / n) * 64 * 4) as u64;
         let sp_bytes = 8 * (n as u64 - 1) * chunk;
-        let sp_t = timing::step_time(&cluster, &shape, sp);
+        let sp_t = timing::step_time(&cluster, &shape, sp).expect("n >= 2 is non-degenerate");
         let tp_feasible = BERT_BASE.heads % n == 0;
         let (tp_bytes, ratio) = if tp_feasible {
             let c = (64 * 512 * 768 * 4) as u64;
             let tp_bytes = 8 * (n as u64 - 1) * c / n as u64;
-            let tp_t = timing::step_time(&cluster, &shape, Strategy::Tensor { n });
+            let tp_t = timing::step_time(&cluster, &shape, Strategy::Tensor { n })
+                .expect("n >= 2 is non-degenerate");
             (tp_bytes.to_string(), format!("{:.3}", sp_t / tp_t))
         } else {
             ("—".into(), "—".into())
@@ -69,7 +70,8 @@ fn main() {
     for micros in [1usize, 2, 4, 8, 16, 32] {
         let s = Schedule::gpipe(4, micros);
         let shape = RunShape::new(BERT_BASE, 32, 512).with_pipeline(4, micros);
-        let tps = timing::tokens_per_sec(&cluster, &shape, Strategy::Sequence { n: 4 });
+        let tps = timing::tokens_per_sec(&cluster, &shape, Strategy::Sequence { n: 4 })
+            .expect("micros >= 1 is non-degenerate");
         println!("{micros:>8} {:>10.3} {tps:>14.0}", s.bubble_fraction());
     }
 

@@ -7,12 +7,19 @@
 //! * `seq-sim`  — `SeqParEngine`, all n ranks simulated on one thread
 //!                over the `Fabric` slot view;
 //! * `threaded` — `exec::DistRunner`, one OS thread per rank over real
-//!                ring P2P.
+//!                ring P2P;
+//! * `overlap`  — the same runner with `--overlap` (double-buffered
+//!                ring: isend the next chunk, compute on the current
+//!                one, wait at the last moment).
 //!
 //! seq-sim and threaded run the SAME per-rank step code and the same
 //! total compute; the ratio between them is pure execution-layer win
-//! (cores × overlap).  Results land in `BENCH_dist.json` for the perf
-//! trajectory.
+//! (cores × overlap).  On top of the wall-clock rows, one traced run
+//! per schedule splits ring-P2p span time into hidden vs blocked
+//! (`obs::` wait attribution) and reports the overlap efficiency
+//! `hidden / busy`; at n ≥ 4 the double-buffered ring must spend
+//! strictly less time blocked on recv than the serialized ring.
+//! Results land in `BENCH_dist.json` for the perf trajectory.
 //!
 //!     cargo bench --bench dist_speedup
 //!     cargo bench --bench dist_speedup -- --iters 3 --warmup 1   # CI smoke
@@ -21,13 +28,15 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use seqpar::backend::native::NativeConfig;
-use seqpar::comm::{Fabric, Meter};
+use seqpar::comm::{CommKind, Fabric, Meter};
 use seqpar::eval::bench::{bench, fmt_ns};
 use seqpar::exec::DistRunner;
 use seqpar::model::params::ParamStore;
+use seqpar::obs;
+use seqpar::parallel::Batch;
 use seqpar::parallel::sequence::SeqParEngine;
 use seqpar::parallel::tensorp::TensorParEngine;
 use seqpar::parallel::Engine;
@@ -38,6 +47,30 @@ use seqpar::util::json::{encode, Value};
 
 fn num(v: f64) -> Value {
     Value::Num(v)
+}
+
+/// Run `iters` traced steps and split the recorded ring-P2p span time
+/// into total span time (busy) and channel-blocked time (wait), summed
+/// over all ranks and hops.  Runs outside the timed loops so the
+/// recorder never skews the wall-clock rows.
+fn ring_p2p_wait(
+    runner: &DistRunner,
+    params: &ParamStore,
+    batch: &Batch,
+    iters: usize,
+) -> Result<(u64, u64)> {
+    let rec = obs::Recorder::start();
+    for _ in 0..iters {
+        std::hint::black_box(runner.forward_backward(params, batch)?);
+    }
+    let (mut busy, mut wait) = (0u64, 0u64);
+    for e in rec.finish() {
+        if let obs::EventKind::Comm { kind: CommKind::RingP2p, wait_ns, .. } = e.kind {
+            busy += e.dur_ns;
+            wait += wait_ns;
+        }
+    }
+    Ok((busy, wait))
 }
 
 fn main() -> Result<()> {
@@ -56,8 +89,8 @@ fn main() -> Result<()> {
         "dist_speedup @ bert-tiny (L={seq_len}, {cores} cores, {iters} iters + {warmup} warmup)"
     );
     println!(
-        "{:>4} {:>14} {:>14} {:>14} {:>10}",
-        "n", "serial", "seq-sim", "threaded", "speedup"
+        "{:>4} {:>14} {:>14} {:>14} {:>14} {:>10} {:>8}",
+        "n", "serial", "seq-sim", "threaded", "overlap", "speedup", "ov-eff"
     );
 
     let mut rows: Vec<Value> = Vec::new();
@@ -88,14 +121,43 @@ fn main() -> Result<()> {
             std::hint::black_box(dist.forward_backward(&params, &batch).unwrap());
         });
 
+        let dist_ov = DistRunner::new(&rt, Meter::new())?.overlap(true);
+        let v = bench(warmup, iters, || {
+            std::hint::black_box(dist_ov.forward_backward(&params, &batch).unwrap());
+        });
+
+        // wait attribution: one traced run per ring schedule
+        let (_, blk_wait) = ring_p2p_wait(&dist, &params, &batch, iters)?;
+        let (ov_busy, ov_wait) = ring_p2p_wait(&dist_ov, &params, &batch, iters)?;
+        let overlap_eff = if ov_busy > 0 {
+            ov_busy.saturating_sub(ov_wait) as f64 / ov_busy as f64
+        } else {
+            0.0 // n = 1: no ring hops, nothing to hide
+        };
+        if n >= 2 {
+            ensure!(
+                overlap_eff > 0.0,
+                "n={n}: double-buffered ring hid no comm time \
+                 (busy {ov_busy}ns, blocked {ov_wait}ns)"
+            );
+        }
+        if n >= 4 {
+            ensure!(
+                ov_wait < blk_wait,
+                "n={n}: overlap ring blocked {ov_wait}ns on recv, \
+                 not below the serialized ring's {blk_wait}ns"
+            );
+        }
+
         // seq-sim and threaded do identical work; this ratio is the
         // execution-layer speedup the threaded runner buys.
         let speedup = q.mean_ns / t.mean_ns;
         println!(
-            "{n:>4} {:>14} {:>14} {:>14} {speedup:>9.2}x",
+            "{n:>4} {:>14} {:>14} {:>14} {:>14} {speedup:>9.2}x {overlap_eff:>8.4}",
             fmt_ns(s.mean_ns),
             fmt_ns(q.mean_ns),
             fmt_ns(t.mean_ns),
+            fmt_ns(v.mean_ns),
         );
 
         let mut row = BTreeMap::new();
@@ -103,10 +165,24 @@ fn main() -> Result<()> {
         row.insert("serial_mean_ns".to_string(), num(s.mean_ns));
         row.insert("seqsim_mean_ns".to_string(), num(q.mean_ns));
         row.insert("threaded_mean_ns".to_string(), num(t.mean_ns));
+        row.insert("overlap_mean_ns".to_string(), num(v.mean_ns));
         row.insert("serial_min_ns".to_string(), num(s.min_ns));
         row.insert("seqsim_min_ns".to_string(), num(q.min_ns));
         row.insert("threaded_min_ns".to_string(), num(t.min_ns));
+        row.insert("overlap_min_ns".to_string(), num(v.min_ns));
         row.insert("threaded_speedup_vs_seqsim".to_string(), num(speedup));
+        row.insert(
+            "blocking_ring_wait_ns".to_string(),
+            num(blk_wait as f64 / iters as f64),
+        );
+        row.insert(
+            "overlap_ring_wait_ns".to_string(),
+            num(ov_wait as f64 / iters as f64),
+        );
+        row.insert(
+            "overlap_efficiency".to_string(),
+            if ov_busy > 0 { num(overlap_eff) } else { Value::Null },
+        );
         rows.push(Value::Obj(row));
     }
 

@@ -14,7 +14,12 @@
 //!   n ∈ {1, 2, 4} for both `--sp` strategies: wall-clock per step plus
 //!   the measured `ring_p2p` / `all_to_all` bytes, each pinned EXACTLY to
 //!   its closed form, with the two strategies' losses agreeing within
-//!   1e-4 (they compute the same step).
+//!   1e-4 (they compute the same step).  Each row also carries the
+//!   `obs::` overlap-efficiency metric (hidden comm time / total comm
+//!   time) from one traced step — on the eager sequential fabric no
+//!   collective ever blocks, so the metric pins to 1.0 wherever the
+//!   strategy communicates at all (null where it records no comm span
+//!   at all, e.g. the ring at n = 1).
 //!
 //!     cargo bench --bench ulysses_vs_ring
 //!     cargo bench --bench ulysses_vs_ring -- --iters 2 --warmup 1   # CI smoke
@@ -31,6 +36,7 @@ use seqpar::comm::{CommKind, Fabric, Meter};
 use seqpar::eval::bench::{bench, fmt_ns};
 use seqpar::model::params::ParamStore;
 use seqpar::model::BERT_TINY_Z4;
+use seqpar::obs;
 use seqpar::parallel::sequence::{SeqParEngine, SpStrategy};
 use seqpar::parallel::Engine;
 use seqpar::runtime::Runtime;
@@ -90,8 +96,8 @@ fn main() -> Result<()> {
     // ---- section 2: executable steps (bert-tiny-z4, both strategies) ---
     println!("\nexecutable (bert-tiny-z4, L=32):");
     println!(
-        "{:>4} {:>8} {:>12} {:>14} {:>14} {:>10}",
-        "n", "sp", "step", "ring_p2p", "all_to_all", "loss"
+        "{:>4} {:>8} {:>12} {:>14} {:>14} {:>10} {:>8}",
+        "n", "sp", "step", "ring_p2p", "all_to_all", "loss", "ov-eff"
     );
     let mut exec_rows: Vec<Value> = Vec::new();
     let mut loss_by: BTreeMap<(usize, &str), f32> = BTreeMap::new();
@@ -116,6 +122,13 @@ fn main() -> Result<()> {
                 sp,
             )?;
             let loss = engine.forward_backward(&params, &batch)?.loss;
+
+            // one traced step feeds the obs:: hidden-vs-wait attribution
+            let rec = obs::Recorder::start();
+            engine.forward_backward(&params, &batch)?;
+            let overlap_eff =
+                obs::MetricsReport::build(&rec.finish(), 1, 0, 0).overlap_efficiency();
+
             meter.reset();
             let stat = bench(warmup, iters, || {
                 std::hint::black_box(engine.forward_backward(&params, &batch).unwrap());
@@ -145,8 +158,10 @@ fn main() -> Result<()> {
             }
             loss_by.insert((n, sp.label()), loss);
 
+            let eff_str =
+                overlap_eff.map(|e| format!("{e:.4}")).unwrap_or_else(|| "-".to_string());
             println!(
-                "{n:>4} {:>8} {:>12} {ring_p2p:>13}B {a2a:>13}B {loss:>10.4}",
+                "{n:>4} {:>8} {:>12} {ring_p2p:>13}B {a2a:>13}B {loss:>10.4} {eff_str:>8}",
                 sp.label(),
                 fmt_ns(stat.mean_ns),
             );
@@ -157,6 +172,10 @@ fn main() -> Result<()> {
             row.insert("ring_p2p_bytes".to_string(), num(ring_p2p as f64));
             row.insert("all_to_all_bytes".to_string(), num(a2a as f64));
             row.insert("loss".to_string(), num(loss as f64));
+            row.insert(
+                "overlap_efficiency".to_string(),
+                overlap_eff.map(num).unwrap_or(Value::Null),
+            );
             exec_rows.push(Value::Obj(row));
         }
         // the two strategies execute the same training step

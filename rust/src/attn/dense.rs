@@ -10,15 +10,50 @@
 //!
 //! Ring convention: after `t` shifts device `d` holds the chunk originally
 //! owned by `(d - t) mod n`.
+//!
+//! With `StepShape::overlap` on, every DATA ring (K and V, forward and
+//! backward) double-buffers: the shift of chunk t+1 is posted before the
+//! compute on chunk t and awaited after, so the hop hides behind the
+//! kernels on the threaded runner.  The dV/dK accumulator rings stay
+//! blocking — their payload is produced by the very compute the data
+//! shift hides behind.  Bytes, trace events and results are identical to
+//! the blocking schedule (rust/tests/dist_equivalence.rs pins all three).
 
 use anyhow::{bail, Result};
 
-use crate::comm::Collective;
+use crate::comm::{Collective, ShiftHandle};
 use crate::obs::mem;
 use crate::parallel::call1_on;
 use crate::parallel::sequence::StepShape;
 use crate::runtime::Executor;
 use crate::tensor::{ops, Tensor};
+
+/// A data-ring shift in flight: the completion handle plus the ring-buffer
+/// residency of the chunk being received while the owner computes (the
+/// double buffer's second slot — `simulator::memory::sp_expect` grows its
+/// ring_buf closed form by exactly this chunk when overlap is on).
+struct PendingShift {
+    handle: ShiftHandle,
+    _inflight: Vec<mem::Charge>,
+}
+
+/// Post the send/recv of the currently-held `slots` BEFORE the caller
+/// computes on them (`Collective::ring_shift_post`).  Eager on the
+/// sequential [`Fabric`] view, a real nonblocking isend on the threaded
+/// per-rank view — identical bytes and trace either way.
+fn post_shift(
+    view: &dyn Collective,
+    ranks: &[usize],
+    slots: &[Tensor],
+) -> Result<PendingShift> {
+    let handle = view.ring_shift_post(slots)?;
+    let _inflight = ranks
+        .iter()
+        .enumerate()
+        .map(|(li, &d)| mem::Charge::new(d, mem::Category::RingBuf, slots[li].bytes() as u64))
+        .collect();
+    Ok(PendingShift { handle, _inflight })
+}
 
 /// RSA stages 1+2 for the view's ranks.  `q/k/v[li]` is the local chunk of
 /// the li-th executed rank.  Returns (ctx, p) per executed rank.
@@ -49,11 +84,18 @@ pub(crate) fn rsa_forward_on(
         .collect();
     for t in 0..n {
         let sp = crate::obs::begin();
+        // double buffer: chunk t+1 is already on the wire while the
+        // scores for chunk t run (Ring Attention's overlap schedule)
+        let posted = (sh.overlap && t + 1 < n)
+            .then(|| post_shift(view, &ranks, &k_slots))
+            .transpose()?;
         for (li, &d) in ranks.iter().enumerate() {
             let src = (d + n - t) % n;
             parts[li][src] = Some(call1_on(ex, "scores_step", &[&q[li], &k_slots[li]])?);
         }
-        if t + 1 < n {
+        if let Some(p) = posted {
+            k_slots = view.ring_shift_wait(p.handle)?;
+        } else if t + 1 < n {
             view.ring_shift(&mut k_slots)?;
         }
         sp.end_phase_idx("rsa_qk_hop", t);
@@ -76,12 +118,17 @@ pub(crate) fn rsa_forward_on(
     let mut acc: Vec<Tensor> = q.iter().map(|t| Tensor::zeros(&t.shape)).collect();
     for t in 0..n {
         let sp = crate::obs::begin();
+        let posted = (sh.overlap && t + 1 < n)
+            .then(|| post_shift(view, &ranks, &v_slots))
+            .transpose()?;
         for (li, &d) in ranks.iter().enumerate() {
             let src = (d + n - t) % n;
             let p_i = ops::slice_last(&p[li], src * sh.lc, (src + 1) * sh.lc)?;
             acc[li] = call1_on(ex, "av_step", &[&p_i, &v_slots[li], &acc[li]])?;
         }
-        if t + 1 < n {
+        if let Some(pd) = posted {
+            v_slots = view.ring_shift_wait(pd.handle)?;
+        } else if t + 1 < n {
             view.ring_shift(&mut v_slots)?;
         }
         sp.end_phase_idx("rsa_av_hop", t);
@@ -125,6 +172,13 @@ pub(crate) fn rsa_backward_on(
     let mut dp_parts: Vec<Vec<Option<Tensor>>> = (0..ln).map(|_| vec![None; n]).collect();
     for t in 0..n {
         let sp = crate::obs::begin();
+        // Only the DATA ring double-buffers; the dV accumulators must
+        // absorb this step's contribution before they can move, so their
+        // shift stays blocking AFTER the wait (per-edge FIFO then keeps
+        // the v-before-dv message order every peer expects).
+        let posted = (sh.overlap && t + 1 < n)
+            .then(|| post_shift(view, &ranks, &v_slots))
+            .transpose()?;
         for (li, &d) in ranks.iter().enumerate() {
             let src = (d + n - t) % n;
             dp_parts[li][src] =
@@ -137,7 +191,9 @@ pub(crate) fn rsa_backward_on(
         // just return them home, pure wasted traffic); the dV
         // accumulators take all n — the last shift delivers each dV_i
         // to its home rank (§3.2.2).
-        if t + 1 < n {
+        if let Some(pd) = posted {
+            v_slots = view.ring_shift_wait(pd.handle)?;
+        } else if t + 1 < n {
             view.ring_shift(&mut v_slots)?;
         }
         view.ring_shift(&mut dv_slots)?;
@@ -168,6 +224,9 @@ pub(crate) fn rsa_backward_on(
     let mut dq: Vec<Tensor> = q.iter().map(|t| Tensor::zeros(&t.shape)).collect();
     for t in 0..n {
         let sp = crate::obs::begin();
+        let posted = (sh.overlap && t + 1 < n)
+            .then(|| post_shift(view, &ranks, &k_slots))
+            .transpose()?;
         for (li, &d) in ranks.iter().enumerate() {
             let src = (d + n - t) % n;
             let ds_i = ops::slice_last(&ds[li], src * sh.lc, (src + 1) * sh.lc)?;
@@ -176,7 +235,9 @@ pub(crate) fn rsa_backward_on(
         }
         // Same asymmetry as the V pass: K data shifts n-1 times, the
         // dK accumulators ride all n shifts home.
-        if t + 1 < n {
+        if let Some(pd) = posted {
+            k_slots = view.ring_shift_wait(pd.handle)?;
+        } else if t + 1 < n {
             view.ring_shift(&mut k_slots)?;
         }
         view.ring_shift(&mut dk_slots)?;

@@ -232,6 +232,48 @@ impl MeterSnapshot {
     }
 }
 
+/// A pending nonblocking ring shift, returned by
+/// [`Collective::ring_shift_post`] and redeemed by
+/// [`Collective::ring_shift_wait`].
+///
+/// The handle is plain data so the `Collective` trait stays object-safe.
+/// On the sequential [`Fabric`] (and every other view that keeps the
+/// default eager implementation) the shift completes inside `post` and
+/// `ready` already holds the rotated slots; on the threaded
+/// [`threaded::RingComm`] `post` only enqueues the send (`ready` is
+/// `None`) and `wait` performs the blocking receive, closes the open
+/// comm span and meters the bytes — so metering and trace events are
+/// byte- and op-identical to the blocking [`Collective::ring_shift`]
+/// under BOTH fabrics, they just land at `wait` time.
+#[derive(Debug)]
+pub struct ShiftHandle {
+    /// Rotated slots, already present when the shift completed eagerly.
+    ready: Option<Vec<Tensor>>,
+    /// Payload bytes of the posted send (0 on the eager path — the
+    /// blocking shift already metered them).
+    bytes: u64,
+    /// The comm span opened at post time (threaded path only); closed by
+    /// `ring_shift_wait` so its duration covers post → completion.
+    sp: Option<crate::obs::Span>,
+}
+
+impl ShiftHandle {
+    /// An already-completed shift (the eager/default path).
+    pub fn ready(slots: Vec<Tensor>) -> ShiftHandle {
+        ShiftHandle { ready: Some(slots), bytes: 0, sp: None }
+    }
+
+    /// An in-flight shift: `bytes` posted, span open until the wait.
+    pub fn pending(bytes: u64, sp: crate::obs::Span) -> ShiftHandle {
+        ShiftHandle { ready: None, bytes, sp: Some(sp) }
+    }
+
+    /// Destructure for the waiting side.
+    pub fn into_parts(self) -> (Option<Vec<Tensor>>, u64, Option<crate::obs::Span>) {
+        (self.ready, self.bytes, self.sp)
+    }
+}
+
 /// A rank-set view of the collective fabric — the abstraction the
 /// per-rank step logic in `parallel::sequence` is written against, so the
 /// SAME code runs either sequentially simulated or genuinely threaded.
@@ -264,6 +306,36 @@ pub trait Collective {
     /// One ring step: every rank's slot moves to rank+1 (mod n); the slot
     /// of rank-1 arrives.
     fn ring_shift(&self, slots: &mut [Tensor]) -> Result<()>;
+
+    /// Post (but do not complete) one ring step of `slots` — the
+    /// nonblocking half of a double-buffered schedule: post the shift of
+    /// chunk t, compute on chunk t, then [`Collective::ring_shift_wait`]
+    /// for chunk t+1 to arrive.  The default implementation is EAGER and
+    /// semantically identical to [`Collective::ring_shift`] (clone, shift,
+    /// hand the rotated slots back through the handle), so the sequential
+    /// [`Fabric`] and the static `analysis::TraceCollective` meter the
+    /// same bytes and emit the same trace events with or without overlap
+    /// — which is why every pinned comm closed form is unchanged.  The
+    /// threaded `RingComm` overrides both halves with a real
+    /// `isend`/`irecv` pair.
+    fn ring_shift_post(&self, slots: &[Tensor]) -> Result<ShiftHandle> {
+        let mut moved = slots.to_vec();
+        self.ring_shift(&mut moved)?;
+        Ok(ShiftHandle::ready(moved))
+    }
+
+    /// Complete a posted ring shift, returning the rotated slots.  On the
+    /// threaded fabric this is where the blocking receive happens and
+    /// where the op is metered/traced (exactly once per hop, same bytes
+    /// as the blocking shift).
+    fn ring_shift_wait(&self, handle: ShiftHandle) -> Result<Vec<Tensor>> {
+        let (ready, _, _) = handle.into_parts();
+        ready.ok_or_else(|| {
+            anyhow::anyhow!(
+                "ring_shift_wait: pending handle on an eager fabric (posted elsewhere?)"
+            )
+        })
+    }
 
     /// Every slot replaced by the elementwise sum over all global ranks.
     fn all_reduce_sum(&self, slots: &mut [Tensor]) -> Result<()>;
@@ -817,6 +889,35 @@ mod tests {
         Fabric::new(1, m1.clone()).pipeline_boundary_megatron(&act);
         assert_eq!(m1.get(CommKind::Pipeline), 512);
         assert_eq!(m1.total_bytes(), 512);
+    }
+
+    #[test]
+    fn posted_shift_is_eager_and_byte_identical_on_the_fabric() {
+        // the default post/wait pair must be indistinguishable from the
+        // blocking shift: same rotation, same metered bytes, same op count
+        let m = Meter::new();
+        let f = Fabric::new(4, m.clone());
+        let s = slots(4, 8);
+        let h = Collective::ring_shift_post(&f, &s).unwrap();
+        let rotated = Collective::ring_shift_wait(&f, h).unwrap();
+        assert_eq!(rotated[1].f32s().unwrap()[0], 1.0);
+        assert_eq!(rotated[0].f32s().unwrap()[0], 4.0);
+        let m2 = Meter::new();
+        let f2 = Fabric::new(4, m2.clone());
+        let mut s2 = slots(4, 8);
+        f2.ring_shift(&mut s2).unwrap();
+        assert_eq!(rotated, s2);
+        assert_eq!(m.snapshot(), m2.snapshot(), "post/wait must meter like the blocking shift");
+    }
+
+    #[test]
+    fn wait_rejects_foreign_pending_handle() {
+        // a pending handle can only be redeemed by the fabric that posted
+        // it; the eager fabric never produces one, so receiving one is an
+        // error, not a hang
+        let f = Fabric::new(2, Meter::new());
+        let h = ShiftHandle::pending(64, crate::obs::begin());
+        assert!(Collective::ring_shift_wait(&f, h).is_err());
     }
 
     #[test]

@@ -29,7 +29,19 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::tensor::{ops, Tensor};
 
-use super::{Collective, CommKind, Meter};
+use super::{Collective, CommKind, Meter, ShiftHandle};
+
+/// A posted nonblocking receive: redeem with [`RingComm::irecv_wait`].
+/// The channel mesh buffers every message, so posting is free — the
+/// handle just fixes which edge (and which op, for error context) the
+/// wait will drain.
+#[derive(Debug)]
+pub struct RecvHandle {
+    /// Source global rank.
+    pub src: usize,
+    /// Operation label used in disconnect errors.
+    op: &'static str,
+}
 
 /// Per-rank communicator handle; owned by that rank's thread.
 pub struct RingComm {
@@ -73,20 +85,55 @@ impl RingComm {
         (self.rank + self.n - 1) % self.n
     }
 
+    /// A peer's channel end disconnected — its rank thread dropped the
+    /// `RingComm`, almost always because it panicked or erred mid-step.
+    /// Naming the peer and the op here is what lets `DistRunner` /
+    /// `MeshRunner` report WHICH rank died instead of a bare recv error.
+    fn disconnect_err(&self, peer: usize, op: &str) -> anyhow::Error {
+        anyhow!(
+            "rank {}: {op} with rank {peer} failed — peer disconnected \
+             (rank {peer}'s thread panicked or erred mid-step)",
+            self.rank
+        )
+    }
+
+    /// Nonblocking send of `t` to global rank `dst`.  Channels are
+    /// buffered, so this never blocks — the same non-blocking-send
+    /// assumption NCCL's ring makes.  Returns the posted payload bytes;
+    /// metering is the CALLER's job (at completion of the surrounding
+    /// op), so a posted send is metered exactly once however it is used.
+    pub fn isend(&self, dst: usize, t: Tensor, op: &'static str) -> Result<u64> {
+        let bytes = t.bytes() as u64;
+        self.tx[dst].send(t).map_err(|_| self.disconnect_err(dst, op))?;
+        Ok(bytes)
+    }
+
+    /// Post a receive from global rank `src`.  Posting is free on the
+    /// buffered mesh; the returned handle fixes the edge the matching
+    /// [`RingComm::irecv_wait`] will drain (and the op label its
+    /// disconnect error carries).
+    pub fn irecv(&self, src: usize, op: &'static str) -> RecvHandle {
+        RecvHandle { src, op }
+    }
+
+    /// Complete a posted receive: block (under an `obs::Waiter`, so the
+    /// time counts as wait, not work) until the message arrives.
+    pub fn irecv_wait(&self, h: RecvHandle) -> Result<Tensor> {
+        let w = crate::obs::wait_begin();
+        let got = self.rx[h.src]
+            .recv()
+            .map_err(|_| self.disconnect_err(h.src, h.op));
+        w.end();
+        got
+    }
+
     /// One ring exchange: send `t` to rank+1, receive from rank-1.
     /// Send-before-receive is safe because channels are buffered — this is
     /// the same non-blocking-send assumption NCCL's ring makes.
     pub fn ring_exchange(&self, t: Tensor) -> Result<Tensor> {
         let sp = crate::obs::begin();
-        let bytes = t.bytes() as u64;
-        self.tx[self.next_rank()]
-            .send(t)
-            .map_err(|_| anyhow!("rank {}: ring peer hung up", self.rank))?;
-        let w = crate::obs::wait_begin();
-        let got = self.rx[self.prev_rank()]
-            .recv()
-            .map_err(|_| anyhow!("rank {}: ring recv failed", self.rank))?;
-        w.end();
+        let bytes = self.isend(self.next_rank(), t, "ring shift")?;
+        let got = self.irecv_wait(self.irecv(self.prev_rank(), "ring shift"))?;
         self.meter.add_traced(CommKind::RingP2p, bytes, sp);
         Ok(got)
     }
@@ -178,11 +225,7 @@ impl RingComm {
             self.meter.add_traced(CommKind::Broadcast, (self.n as u64 - 1) * c, sp);
             Ok(local)
         } else {
-            let w = crate::obs::wait_begin();
-            let got = self.rx[root]
-                .recv()
-                .map_err(|_| anyhow!("rank {}: broadcast recv from {root} failed", self.rank))?;
-            w.end();
+            let got = self.irecv_wait(self.irecv(root, "broadcast"))?;
             Ok(got)
         }
     }
@@ -219,12 +262,7 @@ impl RingComm {
                         anyhow!("rank {}: own all_to_all piece missing", self.rank)
                     })
                 } else {
-                    let w = crate::obs::wait_begin();
-                    let got = self.rx[src].recv().map_err(|_| {
-                        anyhow!("rank {}: all_to_all recv from {src} failed", self.rank)
-                    });
-                    w.end();
-                    got
+                    self.irecv_wait(self.irecv(src, "all_to_all"))
                 }
             })
             .collect::<Result<_>>()?;
@@ -236,35 +274,23 @@ impl RingComm {
     }
 
     fn ring_exchange_unmetered(&self, t: Tensor) -> Result<Tensor> {
-        self.tx[self.next_rank()]
-            .send(t)
-            .map_err(|_| anyhow!("rank {}: ring peer hung up", self.rank))?;
-        let w = crate::obs::wait_begin();
-        let got = self.rx[self.prev_rank()]
-            .recv()
-            .map_err(|_| anyhow!("rank {}: ring recv failed", self.rank));
-        w.end();
-        got
+        self.isend(self.next_rank(), t, "ring exchange")?;
+        self.irecv_wait(self.irecv(self.prev_rank(), "ring exchange"))
     }
 
-    /// Direct P2P (pipeline stages).
+    /// Direct P2P (pipeline stages).  The send itself is nonblocking
+    /// (`isend` on the buffered mesh), so a stage boundary send already
+    /// overlaps with whatever the sender computes next; it is metered at
+    /// post time because delivery is guaranteed once enqueued.
     pub fn send_to(&self, dst: usize, t: Tensor) -> Result<()> {
         let sp = crate::obs::begin();
-        let bytes = t.bytes() as u64;
-        self.tx[dst]
-            .send(t)
-            .map_err(|_| anyhow!("rank {}: send to {dst} failed", self.rank))?;
+        let bytes = self.isend(dst, t, "pipeline send")?;
         self.meter.add_traced(CommKind::Pipeline, bytes, sp);
         Ok(())
     }
 
     pub fn recv_from(&self, src: usize) -> Result<Tensor> {
-        let w = crate::obs::wait_begin();
-        let got = self.rx[src]
-            .recv()
-            .map_err(|_| anyhow!("rank {}: recv from {src} failed", self.rank));
-        w.end();
-        got
+        self.irecv_wait(self.irecv(src, "pipeline recv"))
     }
 }
 
@@ -304,6 +330,45 @@ impl Collective for RingComm {
         let t = take_slot(self, slots)?;
         slots[0] = self.ring_exchange(t)?;
         Ok(())
+    }
+
+    /// The real nonblocking half: clone the held chunk, `isend` it to the
+    /// next rank and open the comm span — then the caller computes on the
+    /// held chunk while the message is in flight.  The hop is metered at
+    /// `ring_shift_wait`, exactly once and with the same bytes as the
+    /// blocking [`RingComm::ring_exchange`], so meters and traces stay
+    /// byte- and op-identical with overlap on.
+    fn ring_shift_post(&self, slots: &[Tensor]) -> Result<ShiftHandle> {
+        if slots.len() != 1 {
+            bail!(
+                "rank {}: per-rank view holds exactly 1 slot, got {}",
+                self.rank,
+                slots.len()
+            );
+        }
+        if self.n == 1 {
+            return Ok(ShiftHandle::ready(slots.to_vec()));
+        }
+        let sp = crate::obs::begin();
+        let bytes = self.isend(self.next_rank(), slots[0].clone(), "ring shift")?;
+        Ok(ShiftHandle::pending(bytes, sp))
+    }
+
+    /// Complete the posted shift: `irecv` the predecessor's chunk (the
+    /// message usually arrived long ago — the wait split under `obs::`
+    /// is what the overlap-efficiency metric reads), then meter/trace the
+    /// hop with the bytes recorded at post time.
+    fn ring_shift_wait(&self, handle: ShiftHandle) -> Result<Vec<Tensor>> {
+        let (ready, bytes, sp) = handle.into_parts();
+        if let Some(slots) = ready {
+            return Ok(slots); // n == 1: nothing was in flight
+        }
+        let sp = sp.ok_or_else(|| {
+            anyhow!("rank {}: ring_shift_wait on a handle with no open span", self.rank)
+        })?;
+        let got = self.irecv_wait(self.irecv(self.prev_rank(), "ring shift"))?;
+        self.meter.add_traced(CommKind::RingP2p, bytes, sp);
+        Ok(vec![got])
     }
 
     fn all_reduce_sum(&self, slots: &mut [Tensor]) -> Result<()> {
@@ -350,19 +415,11 @@ impl Collective for RingComm {
         }
         if live[self.rank] {
             let sp = crate::obs::begin();
-            let bytes = t.bytes() as u64;
-            self.tx[self.next_rank()]
-                .send(t)
-                .map_err(|_| anyhow!("rank {}: ring peer hung up", self.rank))?;
+            let bytes = self.isend(self.next_rank(), t, "sparse ring shift")?;
             self.meter.add_traced(CommKind::RingP2p, bytes, sp);
         }
         slots[0] = if live[self.prev_rank()] {
-            let w = crate::obs::wait_begin();
-            let got = self.rx[self.prev_rank()]
-                .recv()
-                .map_err(|_| anyhow!("rank {}: ring recv failed", self.rank))?;
-            w.end();
-            got
+            self.irecv_wait(self.irecv(self.prev_rank(), "sparse ring shift"))?
         } else {
             Tensor::zeros(&[]) // dead hop: placeholder, never read
         };
@@ -418,12 +475,7 @@ impl Collective for RingComm {
                     .take()
                     .ok_or_else(|| anyhow!("rank {}: missing own contribution", self.rank))?
             } else {
-                let w = crate::obs::wait_begin();
-                let got = self.rx[dst]
-                    .recv()
-                    .map_err(|_| anyhow!("rank {}: grad recv from {dst} failed", self.rank))?;
-                w.end();
-                got
+                self.irecv_wait(self.irecv(dst, "grad delivery"))?
             };
             match &mut acc {
                 None => acc = Some(t),
@@ -720,6 +772,88 @@ mod tests {
             assert_eq!(got, want[rank], "rank {rank} home grad diverged");
         }
         assert_eq!(thr_meter.get(CommKind::RingP2p), fab_meter.get(CommKind::RingP2p));
+    }
+
+    /// Double-buffered rotation via post/wait: every rank posts the send
+    /// of its held chunk, "computes" on it, then waits — the final chunk
+    /// placement and the metered bytes must equal the blocking rotation.
+    #[test]
+    fn posted_ring_rotation_matches_blocking() {
+        let n = 4;
+        let blocking = Meter::new();
+        {
+            let comms = mesh(n, blocking.clone());
+            let handles: Vec<_> = comms
+                .into_iter()
+                .map(|comm| {
+                    std::thread::spawn(move || {
+                        let mut s =
+                            vec![Tensor::from_f32(&[2], vec![comm.rank as f32; 2]).unwrap()];
+                        for _ in 0..comm.n - 1 {
+                            Collective::ring_shift(&comm, &mut s).unwrap();
+                        }
+                        (comm.rank, s.pop().unwrap())
+                    })
+                })
+                .collect();
+            for h in handles {
+                let (rank, held) = h.join().unwrap();
+                assert_eq!(held.f32s().unwrap()[0] as usize, (rank + 1) % n);
+            }
+        }
+        let posted = Meter::new();
+        let comms = mesh(n, posted.clone());
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|comm| {
+                std::thread::spawn(move || {
+                    let mut held =
+                        vec![Tensor::from_f32(&[2], vec![comm.rank as f32; 2]).unwrap()];
+                    for _ in 0..comm.n - 1 {
+                        let h = Collective::ring_shift_post(&comm, &held).unwrap();
+                        // compute on `held` happens here, overlapped
+                        held = Collective::ring_shift_wait(&comm, h).unwrap();
+                    }
+                    (comm.rank, held.pop().unwrap())
+                })
+            })
+            .collect();
+        for h in handles {
+            let (rank, held) = h.join().unwrap();
+            assert_eq!(held.f32s().unwrap()[0] as usize, (rank + 1) % n);
+        }
+        assert_eq!(posted.snapshot(), blocking.snapshot(), "overlap must not change metering");
+    }
+
+    /// n=1 post/wait degenerates to a free identity, like the blocking
+    /// shift.
+    #[test]
+    fn posted_shift_single_rank_is_free() {
+        let meter = Meter::new();
+        let mut comms = mesh(1, meter.clone());
+        let comm = comms.pop().unwrap();
+        let s = vec![Tensor::from_f32(&[2], vec![5.0; 2]).unwrap()];
+        let h = Collective::ring_shift_post(&comm, &s).unwrap();
+        let got = Collective::ring_shift_wait(&comm, h).unwrap();
+        assert_eq!(got, s);
+        assert_eq!(meter.snapshot().total(), 0);
+    }
+
+    /// A dead peer surfaces as a contextful error naming the peer rank
+    /// and the op — not a hang, not a bare "recv failed".
+    #[test]
+    fn disconnect_error_names_peer_and_op() {
+        let meter = Meter::new();
+        let mut comms = mesh(2, meter);
+        let c1 = comms.pop().unwrap();
+        let c0 = comms.pop().unwrap();
+        drop(c1); // rank 1 "dies": all its channel ends disconnect
+        let t = Tensor::from_f32(&[2], vec![1.0; 2]).unwrap();
+        let err = c0.ring_exchange(t).unwrap_err().to_string();
+        assert!(err.contains("rank 0"), "missing own rank: {err}");
+        assert!(err.contains("rank 1"), "missing peer rank: {err}");
+        assert!(err.contains("ring shift"), "missing op: {err}");
+        assert!(err.contains("disconnected"), "missing cause: {err}");
     }
 
     #[test]

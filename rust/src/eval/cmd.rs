@@ -88,6 +88,15 @@ COMMON FLAGS:
                       attention locally (8 all-to-alls per layer, flat in
                       the ring size; needs ring | head count and --attn
                       dense; see README \"Choosing an SP strategy\")
+  --overlap           (train/trace, --engine seq) double-buffer the
+                      attention ring: post each K/V chunk shift
+                      nonblocking and compute on the held chunk while it
+                      is in flight.  Numerically identical to the
+                      blocking schedule and meters exactly the same
+                      bytes; on the threaded runners the recv wait moves
+                      off the critical path (see the overlap_efficiency
+                      field in `trace --out` reports).  Costs one extra
+                      in-flight K/V chunk of ring-buffer memory per rank
   --threads N         run `train --engine seq` on N OS threads — one per
                       ring rank via exec::DistRunner (native backend
                       only; implies --ring N, since rank count must equal
@@ -320,8 +329,8 @@ fn verify_cross_engine(
     let chunks3d: Vec<_> = a
         .hidden
         .iter()
-        .map(|h| h.clone().reshaped(&[m.batch, lc, m.hidden]).unwrap())
-        .collect();
+        .map(|h| h.clone().reshaped(&[m.batch, lc, m.hidden]))
+        .collect::<Result<_>>()?;
     let refs: Vec<_> = chunks3d.iter().collect();
     let full = ops::concat_dim(&refs, 1)?
         .reshaped(&[m.batch * m.seq_len, m.hidden])?;
@@ -457,6 +466,10 @@ pub fn train(args: &Args) -> Result<()> {
     if !sp.is_ring() && engine_name != "seq" {
         bail!("--sp {} applies to --engine seq (got --engine {engine_name})", sp.label());
     }
+    let overlap = args.has("overlap");
+    if overlap && engine_name != "seq" {
+        bail!("--overlap applies to --engine seq (got --engine {engine_name})");
+    }
 
     let (rt, dir) = open_runtime(args)?;
     let mut params = load_params(&rt, &dir)?;
@@ -504,10 +517,13 @@ pub fn train(args: &Args) -> Result<()> {
         // (schedule + shapes + closed forms) instead of a runtime error
         println!("{}", analysis::preflight(analysis::analyze_mesh(&rt, mesh, micros, sp))?);
         let runner: Box<dyn MeshStep + '_> = if args.has("mesh-sim") {
-            Box::new(MeshEngine::with_strategy(&rt, mesh, micros, meter.clone(), sp)?)
+            Box::new(MeshEngine::with_strategy(&rt, mesh, micros, meter.clone(), sp)?.overlap(overlap))
         } else {
-            Box::new(MeshRunner::with_strategy(&rt, mesh, micros, meter.clone(), sp)?)
+            Box::new(MeshRunner::with_strategy(&rt, mesh, micros, meter.clone(), sp)?.overlap(overlap))
         };
+        if overlap {
+            println!("comm/compute overlap: double-buffered ring shifts");
+        }
         println!(
             "mesh execution: {} ({} coordinates{}), micros={}, pipeline bubble {:.3}",
             mesh.label(),
@@ -544,12 +560,13 @@ pub fn train(args: &Args) -> Result<()> {
     let mem_ses = start_mem();
     match engine_name.as_str() {
         "seq" if threads > 0 => {
-            let e = DistRunner::with_strategy(&rt, meter.clone(), pattern, sp)?;
+            let e = DistRunner::with_strategy(&rt, meter.clone(), pattern, sp)?.overlap(overlap);
             println!(
-                "threaded execution: {} ranks, one OS thread each, attn {}, sp {}",
+                "threaded execution: {} ranks, one OS thread each, attn {}, sp {}{}",
                 e.n,
                 pattern.label(),
-                sp.label()
+                sp.label(),
+                if overlap { ", double-buffered ring" } else { "" }
             );
             let mut trainer = Trainer::new(&e, &params, cfg);
             trainer.run(&mut params, || corpus.next_batch(), false)?;
@@ -561,12 +578,16 @@ pub fn train(args: &Args) -> Result<()> {
             if !sp.is_ring() {
                 println!("sequence-parallel strategy: {}", sp.label());
             }
+            if overlap {
+                println!("comm/compute overlap: double-buffered ring shifts");
+            }
             let e = SeqParEngine::with_strategy(
                 &rt,
                 Fabric::new(m.ring, meter.clone()),
                 pattern,
                 sp,
-            )?;
+            )?
+            .overlap(overlap);
             let mut trainer = Trainer::new(&e, &params, cfg);
             trainer.run(&mut params, || corpus.next_batch(), false)?;
         }
@@ -651,6 +672,10 @@ pub fn trace(args: &Args) -> Result<()> {
     let threads = args.usize_or("threads", 0)?;
     let pattern = attn_pattern(args)?;
     let sp = sp_strategy(args)?;
+    let overlap = args.has("overlap");
+    if overlap && engine_name != "seq" {
+        bail!("--overlap applies to --engine seq (got --engine {engine_name})");
+    }
     let (rt, dir) = open_runtime(args)?;
     let mut params = load_params(&rt, &dir)?;
     let steps = args.usize_or("steps", 1)? as u64;
@@ -680,23 +705,33 @@ pub fn trace(args: &Args) -> Result<()> {
         let mesh = Mesh::new(dp, pp, mp, kind)?;
         let micros = args.usize_or("micros", 1)?;
         let runner: Box<dyn MeshStep + '_> = if args.has("mesh-sim") {
-            Box::new(MeshEngine::with_strategy(&rt, mesh, micros, meter.clone(), sp)?)
+            Box::new(MeshEngine::with_strategy(&rt, mesh, micros, meter.clone(), sp)?.overlap(overlap))
         } else {
-            Box::new(MeshRunner::with_strategy(&rt, mesh, micros, meter.clone(), sp)?)
+            Box::new(MeshRunner::with_strategy(&rt, mesh, micros, meter.clone(), sp)?.overlap(overlap))
         };
         let mut t = MeshTrainer::new(runner.as_ref(), &params, cfg);
         t.run(&mut params, || corpus.next_batch(), true)?;
-        label = format!("mesh-{} micros={micros} sp={}", mesh.label(), sp.label());
+        label = format!(
+            "mesh-{} micros={micros} sp={}{}",
+            mesh.label(),
+            sp.label(),
+            if overlap { " overlap" } else { "" }
+        );
         tokens_per_step = (mesh.dp * micros * m.batch * m.seq_len) as u64;
     } else {
         tokens_per_step = (m.batch * m.seq_len) as u64;
         match engine_name.as_str() {
             "seq" if threads > 0 => {
-                let e = DistRunner::with_strategy(&rt, meter.clone(), pattern, sp)?;
+                let e = DistRunner::with_strategy(&rt, meter.clone(), pattern, sp)?.overlap(overlap);
                 let mut t = Trainer::new(&e, &params, cfg);
                 t.run(&mut params, || corpus.next_batch(), true)?;
-                label =
-                    format!("seq threaded n={} attn={} sp={}", e.n, pattern.label(), sp.label());
+                label = format!(
+                    "seq threaded n={} attn={} sp={}{}",
+                    e.n,
+                    pattern.label(),
+                    sp.label(),
+                    if overlap { " overlap" } else { "" }
+                );
             }
             "seq" => {
                 let e = SeqParEngine::with_strategy(
@@ -704,14 +739,16 @@ pub fn trace(args: &Args) -> Result<()> {
                     Fabric::new(m.ring, meter.clone()),
                     pattern,
                     sp,
-                )?;
+                )?
+                .overlap(overlap);
                 let mut t = Trainer::new(&e, &params, cfg);
                 t.run(&mut params, || corpus.next_batch(), true)?;
                 label = format!(
-                    "seq sequential n={} attn={} sp={}",
+                    "seq sequential n={} attn={} sp={}{}",
                     m.ring,
                     pattern.label(),
-                    sp.label()
+                    sp.label(),
+                    if overlap { " overlap" } else { "" }
                 );
             }
             "tensor" => {

@@ -53,7 +53,8 @@ pub fn fig3(cluster: &Cluster, model: ModelConfig) -> Vec<ScalingRow> {
                 cluster,
                 &RunShape::new(model, sp_max.max(1), l),
                 sp,
-            );
+            )
+            .expect("sweep grid sizes are non-degenerate");
             let (tp_max, tp_tps) = if tps.contains(&n) {
                 let tp = Strategy::Tensor { n };
                 let mb = search::max_batch(cluster, model, l, 1, 1, tp);
@@ -61,7 +62,8 @@ pub fn fig3(cluster: &Cluster, model: ModelConfig) -> Vec<ScalingRow> {
                     cluster,
                     &RunShape::new(model, mb.max(1), l),
                     tp,
-                );
+                )
+                .expect("sweep grid sizes are non-degenerate");
                 (Some(mb), Some(t))
             } else {
                 (None, None)
@@ -92,12 +94,14 @@ pub fn fig4(cluster: &Cluster, model: ModelConfig) -> Vec<ScalingRow> {
                 cluster,
                 &RunShape::new(model, sp_max.max(1), l).with_pipeline(stages, micros),
                 sp,
-            );
+            )
+            .expect("fig4 stages/micros are non-degenerate");
             let tp_tps = timing::tokens_per_sec(
                 cluster,
                 &RunShape::new(model, tp_max.max(1), l).with_pipeline(stages, micros),
                 tp,
-            );
+            )
+            .expect("fig4 stages/micros are non-degenerate");
             ScalingRow {
                 n: stages,
                 tp_max_batch: Some(tp_max),
@@ -186,7 +190,10 @@ pub fn table4(cluster: &Cluster, model: ModelConfig) -> Vec<WeakScalingRow> {
             if bytes <= cluster.gpu_mem {
                 (
                     Some(bytes as f64 / (1 << 20) as f64),
-                    Some(timing::tokens_per_sec(cluster, &shape, tp)),
+                    Some(
+                        timing::tokens_per_sec(cluster, &shape, tp)
+                            .expect("table4 shapes are non-degenerate"),
+                    ),
                 )
             } else {
                 (None, None) // OOM — exactly what Table 4 reports at n=8
@@ -203,6 +210,7 @@ pub fn table4(cluster: &Cluster, model: ModelConfig) -> Vec<WeakScalingRow> {
             sp_mem_mb: sp_bytes as f64 / (1 << 20) as f64,
             sp_tokens_per_sec: if sp_fit {
                 timing::tokens_per_sec(cluster, &shape, sp)
+                    .expect("table4 shapes are non-degenerate")
             } else {
                 0.0
             },

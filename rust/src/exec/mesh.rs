@@ -217,6 +217,12 @@ impl MeshSpec {
 /// local queue (sequential simulation) or the direct channel edges of the
 /// pp-column communicator (threaded).  Every part sent is metered as
 /// [`CommKind::Pipeline`], so the two executions agree byte-for-byte.
+///
+/// The threaded edge is `RingComm::send_to` — a nonblocking isend — so a
+/// stage's boundary send returns immediately and its next schedule cell
+/// computes while the adjacent stage drains the channel: GPipe boundary
+/// traffic overlaps micro-batch compute by construction, the same
+/// primitive the dense ring loops double-buffer with under `--overlap`.
 pub(crate) enum Link<'a> {
     Queue { q: &'a RefCell<VecDeque<Vec<Tensor>>>, meter: &'a Meter },
     Comm { comm: &'a RingComm, peer: usize },
@@ -687,6 +693,17 @@ impl<'rt> MeshEngine<'rt> {
     ) -> Result<Self> {
         Ok(MeshEngine { rt, spec: MeshSpec::new(rt, mesh, micros, sp)?, meter })
     }
+
+    /// Enable comm/compute overlap in the sequence axis' dense ring loops
+    /// (`--overlap`; no-op for a tensor model axis).  Eager under the
+    /// sequential simulation — the knob exists so both backends run the
+    /// SAME `StepShape` and stay meter-identical.
+    pub fn overlap(mut self, on: bool) -> Self {
+        if let Some(sh) = self.spec.sp.as_mut() {
+            sh.overlap = on;
+        }
+        self
+    }
 }
 
 impl<'rt> MeshStep for MeshEngine<'rt> {
@@ -782,6 +799,9 @@ pub struct MeshRunner<'rt> {
     rt: &'rt Runtime,
     spec: MeshSpec,
     pub meter: Arc<Meter>,
+    /// Fault injection for the failure-path tests: this mesh rank's
+    /// thread panics at the start of the next step.
+    inject_fault: Option<usize>,
 }
 
 impl<'rt> MeshRunner<'rt> {
@@ -801,7 +821,25 @@ impl<'rt> MeshRunner<'rt> {
         sp: SpStrategy,
     ) -> Result<Self> {
         rt.sync_backend()?;
-        Ok(MeshRunner { rt, spec: MeshSpec::new(rt, mesh, micros, sp)?, meter })
+        Ok(MeshRunner { rt, spec: MeshSpec::new(rt, mesh, micros, sp)?, meter, inject_fault: None })
+    }
+
+    /// Enable comm/compute overlap in the sequence axis' dense ring loops
+    /// (`--overlap`; no-op for a tensor model axis): each mp-ring thread
+    /// posts the shift of chunk t+1 before computing on chunk t.  Same
+    /// results, bytes and trace events as the blocking schedule.
+    pub fn overlap(mut self, on: bool) -> Self {
+        if let Some(sh) = self.spec.sp.as_mut() {
+            sh.overlap = on;
+        }
+        self
+    }
+
+    /// TESTING the failure path: make mesh rank `rank`'s thread panic at
+    /// the start of every subsequent step — peers must error out with the
+    /// disconnect named and the join must report this rank, not hang.
+    pub fn inject_fault(&mut self, rank: usize) {
+        self.inject_fault = Some(rank);
     }
 }
 
@@ -914,7 +952,8 @@ impl<'rt> MeshStep for MeshRunner<'rt> {
 
         let fh = crate::obs::fork();
         let mfh = mem::fork();
-        let results: Vec<(usize, Result<(f32, f32, ParamStore)>)> = thread::scope(|sc| {
+        let inject = self.inject_fault;
+        let results: Vec<(usize, bool, Result<(f32, f32, ParamStore)>)> = thread::scope(|sc| {
             let mut handles = Vec::with_capacity(world);
             for (rank, (coord, mpc, dpc, ppc)) in slots.into_iter().enumerate() {
                 let replica = &batches[coord.dp];
@@ -923,34 +962,46 @@ impl<'rt> MeshStep for MeshRunner<'rt> {
                     // this thread's charges name ranks within its mp view
                     // ([coord.mp]), so base + coord.mp = the global rank
                     mem::adopt(mfh, rank - coord.mp);
+                    if inject == Some(rank) {
+                        panic!("injected fault on mesh rank {rank} (MeshRunner::inject_fault)");
+                    }
                     let out =
                         run_coord(ex, spec, params, replica, coord, &mpc, &dpc, &ppc, meter);
                     crate::obs::flush();
                     (rank, out)
                 }));
             }
+            // Handles are in rank order; join EVERY one so a dead rank
+            // becomes a named error, never a hang (its dropped channel
+            // endpoints error out the peers' blocked recvs).
             handles
                 .into_iter()
-                .map(|h| {
-                    h.join()
-                        .unwrap_or_else(|_| (usize::MAX, Err(anyhow!("mesh rank thread panicked"))))
+                .enumerate()
+                .map(|(rank, h)| match h.join() {
+                    Ok((r, out)) => (r, false, out),
+                    Err(_) => {
+                        (rank, true, Err(anyhow!("mesh rank {rank}: thread panicked mid-step")))
+                    }
                 })
                 .collect()
         });
+
+        // A panicked rank is the root cause; its peers' "peer
+        // disconnected" errors are downstream symptoms of the same death.
+        if let Some((rank, ..)) = results.iter().find(|(_, panicked, _)| *panicked) {
+            bail!(
+                "mesh rank {rank}: thread panicked mid-step; its peers saw the \
+                 disconnect and unwound (panic payload on stderr)"
+            );
+        }
 
         let mut replica_mlm = vec![0.0f32; dp];
         let mut replica_sop = vec![0.0f32; dp];
         let mut stage_stores: Vec<Vec<Option<ParamStore>>> =
             (0..pp).map(|_| (0..mp).map(|_| None).collect()).collect();
         let mut seen = vec![false; world];
-        for (rank, res) in results {
-            let out = res.map_err(|e| {
-                if rank == usize::MAX {
-                    e
-                } else {
-                    anyhow!("mesh coordinate {rank}: {e}")
-                }
-            })?;
+        for (rank, _, res) in results {
+            let out = res.map_err(|e| anyhow!("mesh coordinate {rank}: {e}"))?;
             if rank >= world || seen[rank] {
                 bail!("mesh runner joined an unexpected rank {rank}");
             }

@@ -27,6 +27,9 @@ pub struct DistRunner<'rt> {
     pub n: usize,
     pub meter: Arc<Meter>,
     shape: StepShape,
+    /// Fault injection for the failure-path tests: this rank's thread
+    /// panics at the start of the next step.
+    inject_fault: Option<usize>,
 }
 
 impl<'rt> DistRunner<'rt> {
@@ -62,7 +65,25 @@ impl<'rt> DistRunner<'rt> {
         rt.sync_backend()?; // threaded execution needs a Send + Sync backend
         let shape = StepShape::from_manifest_sp(rt.manifest(), pattern, sp)?;
         let n = shape.n;
-        Ok(DistRunner { rt, n, meter, shape })
+        Ok(DistRunner { rt, n, meter, shape, inject_fault: None })
+    }
+
+    /// Enable comm/compute overlap in the dense ring loops (`--overlap`):
+    /// each rank thread posts the shift of chunk t+1 before computing on
+    /// chunk t and waits after.  Results, metered bytes and trace events
+    /// are identical to the blocking schedule — only wait time moves
+    /// (rust/tests/dist_equivalence.rs pins the equivalence).
+    pub fn overlap(mut self, on: bool) -> Self {
+        self.shape.overlap = on;
+        self
+    }
+
+    /// TESTING the failure path: make rank `rank`'s thread panic at the
+    /// start of every subsequent step.  Its ring peers must surface the broken
+    /// channels as contextful "peer disconnected" errors and the join
+    /// must report the dead rank by number instead of hanging.
+    pub fn inject_fault(&mut self, rank: usize) {
+        self.inject_fault = Some(rank);
     }
 
     /// One forward+backward step, wall-clock parallel across ranks.
@@ -81,7 +102,8 @@ impl<'rt> DistRunner<'rt> {
 
         let fh = crate::obs::fork();
         let mfh = crate::obs::mem::fork();
-        let results: Vec<(usize, Result<RankOutput>)> = thread::scope(|s| {
+        let inject = self.inject_fault;
+        let results: Vec<(usize, bool, Result<RankOutput>)> = thread::scope(|s| {
             let handles: Vec<_> = comms
                 .into_iter()
                 .map(|comm| {
@@ -90,6 +112,9 @@ impl<'rt> DistRunner<'rt> {
                         crate::obs::adopt(fh, rank);
                         // charges name the global rank, so lane base 0
                         crate::obs::mem::adopt(mfh, 0);
+                        if inject == Some(rank) {
+                            panic!("injected fault on rank {rank} (DistRunner::inject_fault)");
+                        }
                         // &(dyn Executor + Sync) coerces to &dyn Executor
                         let out = seqpar_step(ex, &comm, shape, params, batch);
                         crate::obs::flush();
@@ -97,24 +122,35 @@ impl<'rt> DistRunner<'rt> {
                     })
                 })
                 .collect();
+            // Handles are in rank order; joining EVERY one — panicked or
+            // not — is what turns a dead rank into a reportable error
+            // instead of a hung runner (a panicking rank drops its
+            // channel endpoints, so its peers' blocked recvs return
+            // "peer disconnected" errors and those threads unwind too).
             handles
                 .into_iter()
-                .map(|h| {
-                    h.join()
-                        .unwrap_or_else(|_| (usize::MAX, Err(anyhow!("rank thread panicked"))))
+                .enumerate()
+                .map(|(rank, h)| match h.join() {
+                    Ok((r, out)) => (r, false, out),
+                    Err(_) => {
+                        (rank, true, Err(anyhow!("rank {rank}: thread panicked mid-step")))
+                    }
                 })
                 .collect()
         });
 
+        // A panicked rank is the root cause; its ring peers' "peer
+        // disconnected" errors are downstream symptoms of the same death.
+        if let Some((rank, ..)) = results.iter().find(|(_, panicked, _)| *panicked) {
+            bail!(
+                "rank {rank}: thread panicked mid-step; its ring peers saw the \
+                 disconnect and unwound (panic payload on stderr)"
+            );
+        }
+
         let mut by_rank: Vec<Option<RankOutput>> = (0..self.n).map(|_| None).collect();
-        for (rank, res) in results {
-            let out = res.map_err(|e| {
-                if rank == usize::MAX {
-                    e
-                } else {
-                    anyhow!("rank {rank}: {e}")
-                }
-            })?;
+        for (rank, _, res) in results {
+            let out = res.map_err(|e| anyhow!("rank {rank}: {e}"))?;
             if rank >= self.n || by_rank[rank].is_some() {
                 bail!("runner joined an unexpected rank {rank}");
             }

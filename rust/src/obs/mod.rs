@@ -615,6 +615,14 @@ pub struct CommAgg {
     pub wait_ns: u64,
 }
 
+impl CommAgg {
+    /// Span time NOT spent blocked on a channel recv — communication the
+    /// schedule hid behind compute (plus local copy/protocol work).
+    pub fn hidden_ns(&self) -> u64 {
+        self.busy_ns.saturating_sub(self.wait_ns)
+    }
+}
+
 /// Per-kernel aggregate over a trace's kernel events.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct KernelAgg {
@@ -746,6 +754,21 @@ impl MetricsReport {
         }
     }
 
+    /// Overlap efficiency: the fraction of total comm span time the
+    /// schedule hid from the critical path, `Σ(busy − wait) / Σ busy`
+    /// over every comm kind.  A posted (nonblocking) shift whose payload
+    /// arrived during compute waits ~0ns, so its span counts as hidden;
+    /// a blocking shift's span is dominated by recv wait.  `None` when
+    /// the trace has no comm span time to attribute.
+    pub fn overlap_efficiency(&self) -> Option<f64> {
+        let busy: u64 = self.comm.iter().map(|a| a.busy_ns).sum();
+        if busy == 0 {
+            return None;
+        }
+        let hidden: u64 = self.comm.iter().map(|a| a.hidden_ns()).sum();
+        Some(hidden as f64 / busy as f64)
+    }
+
     /// Render the report as a JSON tree (the `BENCH_obs.json` payload).
     pub fn to_json(&self) -> Value {
         let comm = self
@@ -785,6 +808,12 @@ impl MetricsReport {
                 "bubble",
                 self.bubble.map(Value::Num).unwrap_or(Value::Null),
             ),
+            (
+                "overlap_efficiency",
+                self.overlap_efficiency()
+                    .map(Value::Num)
+                    .unwrap_or(Value::Null),
+            ),
         ])
     }
 }
@@ -801,6 +830,9 @@ impl std::fmt::Display for MetricsReport {
         writeln!(f, "kernel time (all ranks): {:.3} ms", self.kernel_ns as f64 / 1e6)?;
         if let Some(b) = self.bubble {
             writeln!(f, "measured pipeline bubble: {b:.4}")?;
+        }
+        if let Some(eff) = self.overlap_efficiency() {
+            writeln!(f, "comm overlap efficiency: {eff:.4}")?;
         }
         if !self.comm.is_empty() {
             writeln!(
@@ -1112,10 +1144,16 @@ mod tests {
         assert_eq!(r.comm[0].events, 1);
         assert_eq!(r.comm[0].bytes, 128);
         assert_eq!(r.comm[0].wait_ns, 1);
+        // one comm span of 2ns, 1ns blocked => half the comm time hidden
+        let eff = r.overlap_efficiency().unwrap();
+        assert!((eff - 0.5).abs() < 1e-9, "overlap efficiency {eff}");
         // json tree renders without panicking and keeps the keys
         let j = r.to_json();
         assert!(j.req("comm").is_ok());
         assert_eq!(j.req("steps").unwrap().as_usize(), Some(1));
+        assert!(j.req("overlap_efficiency").is_ok());
+        // a comm-free report has nothing to attribute
+        assert!(MetricsReport::build(&[], 1, 0, 1).overlap_efficiency().is_none());
     }
 
     #[test]

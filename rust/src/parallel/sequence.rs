@@ -116,6 +116,13 @@ pub(crate) struct StepShape {
     /// Precomputed reachability/mask plan (Block pattern only); Arc'd so
     /// every rank thread shares the one set of mask tensors.
     pub plan: Option<Arc<BlockPlan>>,
+    /// Double-buffer the dense ring loops: post the shift of chunk t+1
+    /// before computing on chunk t, wait after (`Collective::
+    /// ring_shift_post` / `ring_shift_wait`).  Byte- and
+    /// schedule-identical to the blocking ring — under the sequential
+    /// [`Fabric`] the post is eager, under the threaded `RingComm` the
+    /// recv is deferred so the hop hides behind the kernels.
+    pub overlap: bool,
 }
 
 impl StepShape {
@@ -189,6 +196,7 @@ impl StepShape {
             pattern,
             sp,
             plan,
+            overlap: false,
         })
     }
 }
@@ -366,12 +374,12 @@ pub(crate) fn sp_heads_fwd_bwd(
     let p_of = |name: &str| params.get(name);
     let labels_c: Vec<Tensor> = ops::chunk_dim1(&batch.labels, n)?
         .into_iter()
-        .map(|t| t.reshaped(&[b * lc]).unwrap())
-        .collect();
+        .map(|t| t.reshaped(&[b * lc]))
+        .collect::<Result<_>>()?;
     let mask_c: Vec<Tensor> = ops::chunk_dim1(&batch.mask, n)?
         .into_iter()
-        .map(|t| t.reshaped(&[b * lc]).unwrap())
-        .collect();
+        .map(|t| t.reshaped(&[b * lc]))
+        .collect::<Result<_>>()?;
     let (mlm_w, mlm_b) = (p_of("mlm_w")?, p_of("mlm_b")?);
     let mut mlm_total = 0.0f32;
     let mut dx: Vec<Tensor> = Vec::with_capacity(ln);
@@ -659,6 +667,16 @@ impl<'rt> SeqParEngine<'rt> {
         }
         let shape = StepShape::from_manifest_sp(m, pattern, sp)?;
         Ok(SeqParEngine { rt, fabric, n, shape })
+    }
+
+    /// Enable/disable comm/compute overlap in the dense ring loops
+    /// (`--overlap`).  The sequential engine's posts resolve eagerly, so
+    /// this is a semantic no-op here — it exists so the flag reaches the
+    /// SAME `StepShape` the threaded runner uses and the two executions
+    /// stay schedule- and meter-identical.
+    pub fn overlap(mut self, on: bool) -> Self {
+        self.shape.overlap = on;
+        self
     }
 
     /// The attention pattern this engine executes.

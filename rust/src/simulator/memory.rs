@@ -273,12 +273,29 @@ impl MemExpect {
 /// Closed-form per-category peak for rank `rank` of an n-way SP run.
 /// Covers the SP strategies only (TP enters the contract only through
 /// the SP-peak < TP-peak inequality); `rank` matters only for `block:W`,
-/// whose stash width varies per chunk.
+/// whose stash width varies per chunk.  Blocking ring schedule; see
+/// [`sp_expect_overlap`] for the double-buffered variant.
 pub fn sp_expect(
     shape: &RunShape,
     strategy: Strategy,
     pattern: AttnPattern,
     rank: usize,
+) -> MemExpect {
+    sp_expect_overlap(shape, strategy, pattern, rank, false)
+}
+
+/// [`sp_expect`] with the comm/compute-overlap knob: double-buffering
+/// keeps ONE extra chunk-sized slot in flight per rank while a posted
+/// data shift is outstanding, so the dense ring's peak grows from 2
+/// chunks (backward: v + dv resident) to 3 (v + dv + the incoming v).
+/// The all-to-all and Linformer schedules never touch the ring buffers,
+/// so their forms are overlap-invariant.
+pub fn sp_expect_overlap(
+    shape: &RunShape,
+    strategy: Strategy,
+    pattern: AttnPattern,
+    rank: usize,
+    overlap: bool,
 ) -> MemExpect {
     assert!(
         !matches!(strategy, Strategy::Tensor { .. }),
@@ -310,13 +327,16 @@ pub fn sp_expect(
     };
     let ring_buf = match pattern {
         // the dense ring's backward holds exactly two chunk-sized slot
-        // sets in flight per rank (v+dv, then k+dk); the all-to-all
+        // sets in flight per rank (v+dv, then k+dk) — three when a
+        // double-buffered data shift is also outstanding; the all-to-all
         // schedule never touches the ring buffers
         AttnPattern::Dense => {
             if matches!(strategy, Strategy::Ulysses { .. }) {
                 Some(0)
             } else {
-                Some(2 * b * z * lc * a * F32)
+                // a ring of 1 has no hop to post, so overlap adds nothing
+                let slots = if overlap && n > 1 { 3 } else { 2 };
+                Some(slots * b * z * lc * a * F32)
             }
         }
         AttnPattern::Linformer { .. } => Some(0),
@@ -513,11 +533,22 @@ mod tests {
             12 * (4 * b * z * lc * a + b * z * lc * l) * F32
         );
         assert_eq!(dense.ring_buf, Some(2 * b * z * lc * a * F32));
-        // ulysses: same stash, no ring buffers
+        // double-buffered ring: +1 chunk in flight, everything else fixed
+        let dense_ov = sp_expect_overlap(&shape, strat, AttnPattern::Dense, 0, true);
+        assert_eq!(dense_ov.ring_buf, Some(3 * b * z * lc * a * F32));
+        assert_eq!(dense_ov.attn_stash, dense.attn_stash);
+        assert_eq!(dense_ov.activation, dense.activation);
+        assert_eq!(dense_ov.params, dense.params);
+        // ulysses: same stash, no ring buffers (overlap-invariant)
         let uly = sp_expect(&shape, Strategy::Ulysses { n }, AttnPattern::Dense, 0);
         assert_eq!(uly.attn_stash, dense.attn_stash);
         assert_eq!(uly.activation, dense.activation);
         assert_eq!(uly.ring_buf, Some(0));
+        assert_eq!(
+            sp_expect_overlap(&shape, Strategy::Ulysses { n }, AttnPattern::Dense, 0, true)
+                .ring_buf,
+            Some(0)
+        );
         // linformer: K-width probs + projected K̃/Ṽ, no ring buffers,
         // and the E_k/E_v parameters join the replicated params
         let k = 64u64;

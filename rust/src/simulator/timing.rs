@@ -7,6 +7,8 @@
 //! the serial BERT-Base point lands near Table 4's measured ~9.9k tok/s,
 //! then never touched per-experiment.
 
+use anyhow::{bail, Result};
+
 use super::{Cluster, RunShape, Strategy};
 use crate::parallel::pipeline::{boundary_bytes_megatron, boundary_bytes_seqpar, Schedule};
 
@@ -94,7 +96,21 @@ fn layer_comm_msgs(_shape: &RunShape, strategy: Strategy) -> f64 {
 }
 
 /// Seconds for one optimizer step (fwd + bwd over all layers + pipeline).
-pub fn step_time(cluster: &Cluster, shape: &RunShape, strategy: Strategy) -> f64 {
+///
+/// Degenerate shapes (`pipeline == 0`, `micros == 0`, a strategy with
+/// `n() == 0`) are rejected with an error rather than silently producing
+/// NaN/∞ curves that would leak into the BENCH JSON artifacts.
+pub fn step_time(cluster: &Cluster, shape: &RunShape, strategy: Strategy) -> Result<f64> {
+    let mp = strategy.n();
+    if mp == 0 {
+        bail!("degenerate strategy {strategy:?}: model-parallel size 0 (need n >= 1)");
+    }
+    if shape.pipeline == 0 {
+        bail!("degenerate run shape: pipeline=0 (a run has at least 1 stage)");
+    }
+    if shape.micros == 0 {
+        bail!("degenerate run shape: micros=0 (a step has at least 1 microbatch)");
+    }
     let layers = shape.model.layers as f64;
     let achieved = cluster.peak_flops * cluster.efficiency;
     // backward ~ 2x forward flops
@@ -103,19 +119,18 @@ pub fn step_time(cluster: &Cluster, shape: &RunShape, strategy: Strategy) -> f64
         + layer_comm_msgs(shape, strategy) * cluster.latency;
     let per_layer = compute_per_layer + comm_per_layer;
 
-    if shape.pipeline <= 1 {
-        return layers * per_layer;
+    if shape.pipeline == 1 {
+        return Ok(layers * per_layer);
     }
     // GPipe: per-microbatch stage time, bubble from the schedule, plus the
     // stage-boundary traffic (where SP saves Megatron's split+gather).
     let stages = shape.pipeline;
-    let micros = shape.micros.max(1);
+    let micros = shape.micros;
     let stage_layers = layers / stages as f64;
     let micro_stage_time = stage_layers * per_layer / micros as f64;
     let sched = Schedule::gpipe(stages, micros);
     let ticks = sched.makespan(2) as f64 / 3.0; // fwd=1 bwd=2 normalized
     let pipe_time = ticks * micro_stage_time;
-    let mp = strategy.n();
     let bnd = match strategy {
         Strategy::Tensor { .. } => {
             boundary_bytes_megatron(shape.batch, shape.seq_len, shape.model.hidden, mp)
@@ -133,13 +148,14 @@ pub fn step_time(cluster: &Cluster, shape: &RunShape, strategy: Strategy) -> f64
     let bnd_bytes = (bnd.send + bnd.gather) as f64 / mp as f64;
     let boundary_time =
         (stages - 1) as f64 * (bnd_bytes / cluster.link_bw + cluster.latency) * 2.0; // fwd+bwd
-    pipe_time + boundary_time
+    Ok(pipe_time + boundary_time)
 }
 
-/// Tokens processed per second for the GLOBAL batch.
-pub fn tokens_per_sec(cluster: &Cluster, shape: &RunShape, strategy: Strategy) -> f64 {
+/// Tokens processed per second for the GLOBAL batch.  Errors on the same
+/// degenerate shapes as [`step_time`].
+pub fn tokens_per_sec(cluster: &Cluster, shape: &RunShape, strategy: Strategy) -> Result<f64> {
     let tokens = (shape.batch * shape.seq_len) as f64;
-    tokens / step_time(cluster, shape, strategy)
+    Ok(tokens / step_time(cluster, shape, strategy)?)
 }
 
 #[cfg(test)]
@@ -155,7 +171,7 @@ mod tests {
     fn serial_baseline_near_table4() {
         // Table 4 row 1: parallel size 1, batch 64, L=512 → ~9.9k tokens/s.
         let shape = RunShape::new(BERT_BASE, 64, 512);
-        let tps = tokens_per_sec(&cluster(), &shape, Strategy::Sequence { n: 1 });
+        let tps = tokens_per_sec(&cluster(), &shape, Strategy::Sequence { n: 1 }).unwrap();
         assert!(
             (5_000.0..20_000.0).contains(&tps),
             "serial BERT-Base {tps} tok/s should be near the paper's ~9.9k"
@@ -167,9 +183,9 @@ mod tests {
         // Table 4: 2 devices ~1.5x, 4 devices ~2.1x (sub-linear but rising)
         let c = cluster();
         let shape = |b| RunShape::new(BERT_BASE, b, 512);
-        let t1 = tokens_per_sec(&c, &shape(64), Strategy::Sequence { n: 1 });
-        let t2 = tokens_per_sec(&c, &shape(128), Strategy::Sequence { n: 2 });
-        let t4 = tokens_per_sec(&c, &shape(256), Strategy::Sequence { n: 4 });
+        let t1 = tokens_per_sec(&c, &shape(64), Strategy::Sequence { n: 1 }).unwrap();
+        let t2 = tokens_per_sec(&c, &shape(128), Strategy::Sequence { n: 2 }).unwrap();
+        let t4 = tokens_per_sec(&c, &shape(256), Strategy::Sequence { n: 4 }).unwrap();
         assert!(t2 > 1.2 * t1, "2-device weak scaling {t2} vs {t1}");
         assert!(t4 > t2, "4-device {t4} vs {t2}");
         assert!(t2 < 2.0 * t1, "comm must cost something");
@@ -181,8 +197,8 @@ mod tests {
         let c = cluster();
         let shape = RunShape::new(BERT_BASE, 16, 512);
         for n in [2usize, 4] {
-            let sp = tokens_per_sec(&c, &shape, Strategy::Sequence { n });
-            let tp = tokens_per_sec(&c, &shape, Strategy::Tensor { n });
+            let sp = tokens_per_sec(&c, &shape, Strategy::Sequence { n }).unwrap();
+            let tp = tokens_per_sec(&c, &shape, Strategy::Tensor { n }).unwrap();
             let ratio = sp / tp;
             assert!((0.6..1.6).contains(&ratio), "n={n}: SP/TP ratio {ratio}");
         }
@@ -196,13 +212,13 @@ mod tests {
         let c = cluster();
         let shape = RunShape::new(BERT_BASE, 16, 512);
         for n in [2usize, 4] {
-            let uly = step_time(&c, &shape, Strategy::Ulysses { n });
-            let ring = step_time(&c, &shape, Strategy::Sequence { n });
+            let uly = step_time(&c, &shape, Strategy::Ulysses { n }).unwrap();
+            let ring = step_time(&c, &shape, Strategy::Sequence { n }).unwrap();
             assert!(uly <= ring, "n={n}: ulysses {uly}s vs ring {ring}s");
         }
         assert_eq!(
-            step_time(&c, &shape, Strategy::Ulysses { n: 1 }),
-            step_time(&c, &shape, Strategy::Sequence { n: 1 }),
+            step_time(&c, &shape, Strategy::Ulysses { n: 1 }).unwrap(),
+            step_time(&c, &shape, Strategy::Sequence { n: 1 }).unwrap(),
             "serial: identical model"
         );
     }
@@ -214,8 +230,8 @@ mod tests {
         let c = cluster();
         for stages in [2usize, 4, 8] {
             let shape = RunShape::new(BERT_BASE, 32, 512).with_pipeline(stages, 8);
-            let sp = step_time(&c, &shape, Strategy::Sequence { n: 4 });
-            let tp = step_time(&c, &shape, Strategy::Tensor { n: 4 });
+            let sp = step_time(&c, &shape, Strategy::Sequence { n: 4 }).unwrap();
+            let tp = step_time(&c, &shape, Strategy::Tensor { n: 4 }).unwrap();
             assert!(
                 sp <= tp,
                 "stages={stages}: SP {sp}s should not exceed TP {tp}s"
@@ -229,8 +245,37 @@ mod tests {
         let few = RunShape::new(BERT_BASE, 32, 512).with_pipeline(4, 2);
         let many = RunShape::new(BERT_BASE, 32, 512).with_pipeline(4, 16);
         assert!(
-            step_time(&c, &many, Strategy::Sequence { n: 4 })
-                < step_time(&c, &few, Strategy::Sequence { n: 4 })
+            step_time(&c, &many, Strategy::Sequence { n: 4 }).unwrap()
+                < step_time(&c, &few, Strategy::Sequence { n: 4 }).unwrap()
         );
+    }
+
+    #[test]
+    fn degenerate_shapes_error_not_nan() {
+        // stages=0, micros=0 and mp=0 used to divide straight through and
+        // emit NaN curves; they must be clean errors now.
+        let c = cluster();
+        let mut stages0 = RunShape::new(BERT_BASE, 8, 512);
+        stages0.pipeline = 0;
+        let err = step_time(&c, &stages0, Strategy::Sequence { n: 2 }).unwrap_err();
+        assert!(err.to_string().contains("pipeline=0"), "got: {err}");
+
+        let mut micros0 = RunShape::new(BERT_BASE, 8, 512).with_pipeline(2, 4);
+        micros0.micros = 0;
+        let err = step_time(&c, &micros0, Strategy::Sequence { n: 2 }).unwrap_err();
+        assert!(err.to_string().contains("micros=0"), "got: {err}");
+
+        let shape = RunShape::new(BERT_BASE, 8, 512);
+        for strat in [
+            Strategy::Sequence { n: 0 },
+            Strategy::Ulysses { n: 0 },
+            Strategy::Tensor { n: 0 },
+        ] {
+            let err = step_time(&c, &shape, strat).unwrap_err();
+            assert!(err.to_string().contains("model-parallel size 0"), "got: {err}");
+            assert!(tokens_per_sec(&c, &shape, strat).is_err());
+        }
+        // the guards must not reject healthy shapes
+        assert!(step_time(&c, &shape, Strategy::Sequence { n: 2 }).unwrap().is_finite());
     }
 }

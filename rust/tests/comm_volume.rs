@@ -64,6 +64,46 @@ fn ring_traffic_matches_closed_form() {
     );
 }
 
+/// Comm/compute overlap must not change a single metered byte: the
+/// double-buffered schedule posts the same shifts the blocking schedule
+/// issues (one per hop, metered at completion), so the pinned closed
+/// form above holds verbatim with `--overlap` on.
+#[test]
+fn overlap_ring_traffic_matches_same_closed_form() {
+    let rt = runtime();
+    let m = rt.manifest().clone();
+    let params = ParamStore::synthetic(&m);
+    let batch = Corpus::new(CorpusConfig::new(m.vocab, m.seq_len, m.batch), 1)
+        .next_batch()
+        .unwrap();
+
+    let blocking = Meter::new();
+    SeqParEngine::new(&rt, Fabric::new(m.ring, blocking.clone()))
+        .unwrap()
+        .forward_backward(&params, &batch)
+        .unwrap();
+
+    let overlapped = Meter::new();
+    SeqParEngine::new(&rt, Fabric::new(m.ring, overlapped.clone()))
+        .unwrap()
+        .overlap(true)
+        .forward_backward(&params, &batch)
+        .unwrap();
+
+    let n = m.ring as u64;
+    let chunk_bytes = (m.batch * m.heads * (m.seq_len / m.ring) * m.head_dim * 4) as u64;
+    let expect = (2 * (n - 1) + (4 * n - 2)) * n * chunk_bytes * m.layers as u64;
+    assert_eq!(
+        overlapped.get(CommKind::RingP2p),
+        expect,
+        "overlap changed the ring closed form"
+    );
+    assert!(
+        overlapped.snapshot().same_bytes(&blocking.snapshot()),
+        "overlap changed a metered byte count somewhere"
+    );
+}
+
 /// Blockwise-sparse attention: the measured ring volume matches the
 /// skip-aware closed form `4·Σh(src) + 2·Σ(consumers(src)−1)` chunk-sends
 /// per layer and is STRICTLY below dense RSA's `(2(n−1) + (4n−2))·n` —

@@ -603,6 +603,159 @@ fn threaded_and_sequential_memory_peaks_agree() {
     }
 }
 
+/// Comm/compute overlap (`--overlap`, the double-buffered ring) is
+/// correctness-preserving: for n ∈ {2, 4, 8} the overlapped threaded
+/// runner computes bit-identical results to the blocking threaded
+/// runner, matches the sequential simulation and the serial engine
+/// within tolerance, stays bit-deterministic run-to-run, and meters
+/// byte-identical traffic per collective kind.  Posting a shift early
+/// moves only WHEN the bytes travel, never what is computed.
+#[test]
+fn overlap_threaded_matches_sequential_and_serial() {
+    for n in [2usize, 4, 8] {
+        let rt = runtime(n);
+        let params = ParamStore::synthetic(rt.manifest());
+        let batch = batch_for(&rt, 21);
+
+        let serial = TensorParEngine::new(&rt, Fabric::new(1, Meter::new())).unwrap();
+        let s = serial.forward_backward(&params, &batch).unwrap();
+
+        let seq_meter = Meter::new();
+        let seq = SeqParEngine::new(&rt, Fabric::new(n, seq_meter.clone()))
+            .unwrap()
+            .overlap(true);
+        let q = seq.forward_backward(&params, &batch).unwrap();
+
+        let thr_meter = Meter::new();
+        let dist = DistRunner::new(&rt, thr_meter.clone()).unwrap().overlap(true);
+        let t = dist.forward_backward(&params, &batch).unwrap();
+
+        // the overlapped schedule computes on the same held chunks in the
+        // same order as the blocking one — identical bits, not just close
+        let blocking = DistRunner::new(&rt, Meter::new()).unwrap();
+        let r = blocking.forward_backward(&params, &batch).unwrap();
+        assert_eq!(t.loss.to_bits(), r.loss.to_bits(), "n={n}: overlap moved the loss bits");
+        for (name, g) in &t.grads.values {
+            assert_eq!(g, &r.grads.values[name], "n={n}: overlap moved grad {name}");
+        }
+        for (d, (ho, hb)) in t.hidden.iter().zip(&r.hidden).enumerate() {
+            assert_eq!(ho, hb, "n={n}: overlap moved hidden chunk {d}");
+        }
+
+        // three-way equivalence, same as the blocking suite
+        assert!(
+            (t.loss - s.loss).abs() < TOL,
+            "n={n}: overlapped loss {} vs serial {}",
+            t.loss,
+            s.loss
+        );
+        assert!(
+            (t.loss - q.loss).abs() < TOL,
+            "n={n}: overlapped threaded loss {} vs sequential {}",
+            t.loss,
+            q.loss
+        );
+        assert_grads_close(&format!("n={n} overlap threaded vs serial"), &t, &s, TOL);
+        assert_grads_close(&format!("n={n} overlap threaded vs sequential"), &t, &q, TOL);
+
+        // bit-determinism holds with shifts in flight during compute
+        let t2 = dist.forward_backward(&params, &batch).unwrap();
+        assert_eq!(t.loss.to_bits(), t2.loss.to_bits(), "n={n}: overlap loss not bit-stable");
+        for (name, g) in &t.grads.values {
+            assert_eq!(g, &t2.grads.values[name], "n={n}: overlap grad {name} not bit-stable");
+        }
+
+        // meter parity: the overlapped sequential simulation and the
+        // overlapped threaded run record byte-identical traffic
+        for kind in [
+            CommKind::RingP2p,
+            CommKind::AllReduce,
+            CommKind::AllGather,
+            CommKind::AllToAll,
+            CommKind::Broadcast,
+            CommKind::Pipeline,
+        ] {
+            assert_eq!(
+                seq_meter.get(kind),
+                thr_meter.get(kind),
+                "n={n}: {kind:?} bytes differ with overlap on (sequential {} vs threaded {})",
+                seq_meter.get(kind),
+                thr_meter.get(kind)
+            );
+        }
+    }
+}
+
+/// Memory parity under overlap: the in-flight double-buffer chunk is
+/// charged to the same `ring_buf` lane account by the sequential
+/// simulation and the threaded runner, so every (lane, category)
+/// high-water mark matches byte-for-byte — the overlapped analogue of
+/// `threaded_and_sequential_memory_peaks_agree` (the 2→3-chunk closed
+/// form itself is pinned in rust/tests/mem_validation.rs).
+#[test]
+fn overlap_memory_peaks_agree() {
+    for n in [2usize, 4] {
+        let rt = runtime(n);
+        let params = ParamStore::synthetic(rt.manifest());
+        let batch = batch_for(&rt, 53);
+
+        let seq = SeqParEngine::new(&rt, Fabric::new(n, Meter::new()))
+            .unwrap()
+            .overlap(true);
+        let ses = obs::mem::MemSession::start();
+        seq.forward_backward(&params, &batch).unwrap();
+        let a = ses.finish();
+
+        let dist = DistRunner::new(&rt, Meter::new()).unwrap().overlap(true);
+        let ses = obs::mem::MemSession::start();
+        dist.forward_backward(&params, &batch).unwrap();
+        let b = ses.finish();
+
+        assert_eq!(a.lanes.len(), n, "n={n}: sequential overlap charged the wrong lane count");
+        assert_eq!(b.lanes.len(), n, "n={n}: threaded overlap charged the wrong lane count");
+        for (la, lb) in a.lanes.iter().zip(&b.lanes) {
+            assert_eq!(la.lane, lb.lane, "n={n}: lane sets differ");
+            assert_eq!(
+                la.peak, lb.peak,
+                "n={n}: lane {} per-category peaks differ under overlap",
+                la.lane
+            );
+        }
+    }
+}
+
+/// A rank panic mid-step must not hang the ring.  The dying rank's
+/// channel endpoints drop; every peer blocked on a recv from it gets a
+/// contextful "peer disconnected" error and unwinds; the runner joins
+/// ALL threads and reports the panicked rank by number as the root
+/// cause — never a peer left blocked forever on a recv with nobody
+/// alive to send.
+#[test]
+fn rank_panic_is_reported_not_hung() {
+    for overlap in [false, true] {
+        let n = 4;
+        let rt = runtime(n);
+        let params = ParamStore::synthetic(rt.manifest());
+        let batch = batch_for(&rt, 61);
+
+        let mut dist = DistRunner::new(&rt, Meter::new()).unwrap().overlap(overlap);
+        dist.inject_fault(2);
+        let err = dist
+            .forward_backward(&params, &batch)
+            .err()
+            .expect("a dead rank must fail the step, not hang it");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("rank 2"),
+            "overlap={overlap}: error must name the dead rank: {msg}"
+        );
+        assert!(
+            msg.contains("panicked"),
+            "overlap={overlap}: error must say the rank panicked: {msg}"
+        );
+    }
+}
+
 /// The runner refuses gracefully when the manifest ring size does not
 /// divide the sequence — same contract as the sequential engine.
 #[test]

@@ -9,7 +9,9 @@
 //!
 //! * `--sp ring`  × dense / linformer:K / block:W, n ∈ {1, 2, 4};
 //! * `--sp ulysses` × dense, n ∈ {1, 2, 4} (bert-tiny-z4 — Ulysses
-//!   shards whole heads, so n must divide the head count).
+//!   shards whole heads, so n must divide the head count);
+//! * `--overlap` × dense ring and ulysses, n ∈ {1, 2, 4} — the
+//!   double-buffered ring's grown `ring_buf` form (2 → 3 chunk slots).
 //!
 //! `ring_buf` is asserted only where `sp_expect` pins it (dense ring:
 //! exactly two in-flight chunk slot sets; Ulysses / Linformer: zero);
@@ -26,7 +28,7 @@ use seqpar::model::BERT_TINY_Z4;
 use seqpar::obs::mem::{Category, MemReport, MemSession, NCAT};
 use seqpar::parallel::sequence::{SeqParEngine, SpStrategy};
 use seqpar::runtime::Runtime;
-use seqpar::simulator::memory::sp_expect;
+use seqpar::simulator::memory::{sp_expect, sp_expect_overlap};
 use seqpar::simulator::{RunShape, Strategy};
 use seqpar::train::data::{Corpus, CorpusConfig};
 use seqpar::train::trainer::{TrainConfig, Trainer};
@@ -34,13 +36,24 @@ use seqpar::train::trainer::{TrainConfig, Trainer};
 /// One accounted training step on the sequential SP engine; returns the
 /// finished session report plus the run shape the closed forms take.
 fn measure(cfg: NativeConfig, pattern: AttnPattern, sp: SpStrategy) -> (MemReport, RunShape) {
+    measure_overlap(cfg, pattern, sp, false)
+}
+
+/// [`measure`] with the comm/compute-overlap knob (`--overlap`).
+fn measure_overlap(
+    cfg: NativeConfig,
+    pattern: AttnPattern,
+    sp: SpStrategy,
+    overlap: bool,
+) -> (MemReport, RunShape) {
     let n = cfg.ring;
     let rt = Runtime::native(cfg).unwrap();
     let m = rt.manifest().clone();
     let mut params = ParamStore::synthetic(&m);
     let mut corpus = Corpus::new(CorpusConfig::new(m.vocab, m.seq_len, m.batch), 11);
     let engine = SeqParEngine::with_strategy(&rt, Fabric::new(n, Meter::new()), pattern, sp)
-        .unwrap();
+        .unwrap()
+        .overlap(overlap);
     let shape = RunShape::new(seqpar::model::by_name(&m.model).unwrap(), m.batch, m.seq_len);
 
     let ses = MemSession::start();
@@ -61,6 +74,18 @@ fn assert_expected(
     strategy: Strategy,
     pattern: AttnPattern,
 ) {
+    assert_expected_overlap(tag, report, shape, strategy, pattern, false)
+}
+
+/// [`assert_expected`] against the overlap-aware closed forms.
+fn assert_expected_overlap(
+    tag: &str,
+    report: &MemReport,
+    shape: &RunShape,
+    strategy: Strategy,
+    pattern: AttnPattern,
+    overlap: bool,
+) {
     let n = strategy.n();
     assert_eq!(
         report.lanes.len(),
@@ -69,7 +94,11 @@ fn assert_expected(
         report.lanes.iter().map(|l| l.lane).collect::<Vec<_>>()
     );
     for d in 0..n {
-        let exp = sp_expect(shape, strategy, pattern, d);
+        let exp = if overlap {
+            sp_expect_overlap(shape, strategy, pattern, d, true)
+        } else {
+            sp_expect(shape, strategy, pattern, d)
+        };
         let lane = report
             .lane(d)
             .unwrap_or_else(|| panic!("{tag}: rank {d} charged nothing"));
@@ -137,6 +166,49 @@ fn ring_block_peaks_match_closed_forms() {
             &shape,
             Strategy::Sequence { n },
             AttnPattern::Block { w },
+        );
+    }
+}
+
+/// `--overlap` (double-buffered ring): the dense ring's measured
+/// `ring_buf` peak grows by exactly ONE in-flight chunk per rank —
+/// 2 → 3 chunk slots, `sp_expect_overlap`'s grown closed form — while
+/// every other category stays on the blocking form byte-for-byte.  A
+/// ring of 1 has no hop to post, so its peak stays at the blocking
+/// form; Ulysses never touches the ring buffers with or without the
+/// knob.
+#[test]
+fn overlap_peaks_match_grown_closed_forms() {
+    for n in [1usize, 2, 4] {
+        let (report, shape) = measure_overlap(
+            NativeConfig { ring: n, ..NativeConfig::tiny() },
+            AttnPattern::Dense,
+            SpStrategy::Ring,
+            true,
+        );
+        assert_expected_overlap(
+            &format!("overlap ring dense n={n}"),
+            &report,
+            &shape,
+            Strategy::Sequence { n },
+            AttnPattern::Dense,
+            true,
+        );
+    }
+    for n in [1usize, 2, 4] {
+        let (report, shape) = measure_overlap(
+            NativeConfig { model: BERT_TINY_Z4, ring: n, ulysses: true, ..NativeConfig::tiny() },
+            AttnPattern::Dense,
+            SpStrategy::Ulysses,
+            true,
+        );
+        assert_expected_overlap(
+            &format!("overlap ulysses dense n={n}"),
+            &report,
+            &shape,
+            Strategy::Ulysses { n },
+            AttnPattern::Dense,
+            true,
         );
     }
 }

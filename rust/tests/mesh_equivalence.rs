@@ -261,6 +261,87 @@ fn mesh_threaded_and_sequential_memory_peaks_agree() {
     }
 }
 
+/// Comm/compute overlap on the full 4D mesh: for every SP mesh shape,
+/// the overlapped threaded `MeshRunner` computes bit-identical results
+/// to its blocking self, matches the overlapped sequential `MeshEngine`,
+/// and both meter byte-identical traffic — the ring primitive composes
+/// with GPipe stage boundaries without moving a float or a byte.
+#[test]
+fn overlap_mesh_matches_blocking_and_sequential() {
+    for (dp, pp, mp) in MESHES {
+        let mesh = Mesh::new(dp, pp, mp, MpKind::Sequence).unwrap();
+        let rt = runtime_for(&mesh);
+        let params = ParamStore::synthetic(rt.manifest());
+        let micros = 2;
+        let tag = format!("{} micros={micros} overlap", mesh.label());
+        let batches = batches_for(&rt, dp, micros, 71);
+
+        let blocking = MeshRunner::new(&rt, mesh, micros, Meter::new()).unwrap();
+        let want = blocking.step(&params, &batches).unwrap();
+
+        let thr_meter = Meter::new();
+        let run = MeshRunner::new(&rt, mesh, micros, thr_meter.clone())
+            .unwrap()
+            .overlap(true);
+        let b = run.step(&params, &batches).unwrap();
+        assert_eq!(b.loss.to_bits(), want.loss.to_bits(), "{tag}: overlap moved the loss bits");
+        for (name, g) in &b.grads.values {
+            assert_eq!(g, &want.grads.values[name], "{tag}: overlap moved grad {name}");
+        }
+
+        let seq_meter = Meter::new();
+        let eng = MeshEngine::new(&rt, mesh, micros, seq_meter.clone())
+            .unwrap()
+            .overlap(true);
+        let a = eng.step(&params, &batches).unwrap();
+        assert!(
+            (a.loss - b.loss).abs() < TOL,
+            "{tag}: sequential loss {} vs threaded {}",
+            a.loss,
+            b.loss
+        );
+        assert_grads_close(&format!("{tag} sequential vs threaded"), &a.grads, &b.grads, TOL);
+
+        for ck in [
+            CommKind::RingP2p,
+            CommKind::AllReduce,
+            CommKind::AllGather,
+            CommKind::Broadcast,
+            CommKind::Scatter,
+            CommKind::Pipeline,
+        ] {
+            assert_eq!(
+                seq_meter.get(ck),
+                thr_meter.get(ck),
+                "{tag}: {ck:?} bytes differ with overlap on (sequential {} vs threaded {})",
+                seq_meter.get(ck),
+                thr_meter.get(ck)
+            );
+        }
+    }
+}
+
+/// A mesh-coordinate panic mid-step must not hang the world: peers on
+/// the ring, pipeline and dp axes see broken channels as contextful
+/// disconnect errors and unwind; the runner joins every thread and
+/// names the panicked mesh rank as the root cause.
+#[test]
+fn mesh_rank_panic_is_reported_not_hung() {
+    let mesh = Mesh::new(2, 1, 2, MpKind::Sequence).unwrap();
+    let rt = runtime_for(&mesh);
+    let params = ParamStore::synthetic(rt.manifest());
+    let batches = batches_for(&rt, 2, 1, 99);
+    let mut run = MeshRunner::new(&rt, mesh, 1, Meter::new()).unwrap();
+    run.inject_fault(1);
+    let err = run
+        .step(&params, &batches)
+        .err()
+        .expect("a dead mesh rank must fail the step, not hang it");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("rank 1"), "error must name the dead rank: {msg}");
+    assert!(msg.contains("panicked"), "error must say the rank panicked: {msg}");
+}
+
 /// The §3.2.2 stage-boundary claim, measured: at equal mesh shape, SP
 /// boundaries move strictly fewer bytes than the TP baseline — SP sends
 /// its already-split chunk (Pipeline only), TP pays scatter + all-gather

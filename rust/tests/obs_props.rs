@@ -167,6 +167,86 @@ fn engine_trace_exports_valid_chrome_json() {
     assert!(check.cats.contains_key("phase"), "cats: {:?}", check.cats);
 }
 
+/// Degenerate report inputs must degrade gracefully, not panic — the
+/// `trace` subcommand reaches every one of these through its flags:
+/// `--top-k 0`, a top-k larger than the kernel table, and `--validate`
+/// against a trace with no events or no steps.
+#[test]
+fn metrics_report_handles_degenerate_inputs() {
+    let n = 2;
+    let rt = Runtime::native(NativeConfig { ring: n, ..NativeConfig::tiny() }).unwrap();
+    let params = ParamStore::synthetic(rt.manifest());
+    let batch = batch_for(&rt, 7);
+    let dist = DistRunner::new(&rt, Meter::new()).unwrap();
+    let rec = obs::Recorder::start();
+    dist.forward_backward(&params, &batch).unwrap();
+    let events = rec.finish();
+
+    // --top-k 0: the kernel table empties, the totals survive
+    let r0 = obs::MetricsReport::build(&events, 1, 64, 0);
+    assert!(r0.kernels.is_empty(), "top-k 0 must truncate the whole table");
+    assert!(r0.kernel_ns > 0, "kernel totals must not depend on top-k");
+    let _ = format!("{r0}"); // Display renders without a kernel table
+    assert!(r0.to_json().req("kernels_top").is_ok());
+
+    // top-k far beyond the kernel count: everything, no padding, no panic
+    let rbig = obs::MetricsReport::build(&events, 1, 64, 100_000);
+    assert!(!rbig.kernels.is_empty());
+    assert!(rbig.kernels.len() < 100_000);
+    assert_eq!(rbig.kernel_ns, r0.kernel_ns);
+
+    // an event-free trace: zeros and Nones, never NaN or panic
+    let empty = obs::MetricsReport::build(&[], 0, 0, 10);
+    assert_eq!(empty.wall_ns, 0);
+    assert_eq!(empty.tokens_per_sec, 0.0);
+    assert!(empty.bubble.is_none());
+    assert!(empty.overlap_efficiency().is_none());
+    let _ = format!("{empty}");
+    let doc = empty.to_json();
+    assert!(doc.req("overlap_efficiency").is_ok());
+
+    // --validate on a zero-event Chrome trace: schema-valid, zero counts
+    let doc = json::parse(&json::encode(&obs::chrome_trace(&[]))).unwrap();
+    let chk = obs::validate_chrome_trace(&doc).unwrap();
+    assert_eq!(chk.complete, 0);
+    assert!(chk.pids.is_empty());
+}
+
+/// Overlap efficiency is wired end to end: a traced run aggregates
+/// hidden-vs-wait comm time into `MetricsReport::overlap_efficiency`.
+/// On the sequential fabric every collective resolves eagerly (no
+/// channel waits), so the whole comm span time counts as hidden and the
+/// metric pins to exactly 1.0; a threaded run reports some fraction in
+/// [0, 1].
+#[test]
+fn overlap_efficiency_is_reported() {
+    let n = 4;
+    let rt = Runtime::native(NativeConfig { ring: n, ..NativeConfig::tiny() }).unwrap();
+    let params = ParamStore::synthetic(rt.manifest());
+    let batch = batch_for(&rt, 31);
+
+    let eng = SeqParEngine::new(&rt, Fabric::new(n, Meter::new()))
+        .unwrap()
+        .overlap(true);
+    let rec = obs::Recorder::start();
+    eng.forward_backward(&params, &batch).unwrap();
+    let report = obs::MetricsReport::build(&rec.finish(), 1, 64, 5);
+    assert_eq!(
+        report.overlap_efficiency(),
+        Some(1.0),
+        "the eager fabric never blocks on a channel"
+    );
+
+    let dist = DistRunner::new(&rt, Meter::new()).unwrap().overlap(true);
+    let rec = obs::Recorder::start();
+    dist.forward_backward(&params, &batch).unwrap();
+    let report = obs::MetricsReport::build(&rec.finish(), 1, 64, 5);
+    let eff = report
+        .overlap_efficiency()
+        .expect("threaded run records comm spans");
+    assert!((0.0..=1.0).contains(&eff), "efficiency {eff} out of range");
+}
+
 /// Recording is strictly opt-in: a full threaded step executed with no
 /// live session leaves zero events behind for the next session to see.
 #[test]
