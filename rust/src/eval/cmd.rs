@@ -8,7 +8,9 @@ use crate::analysis::{self, Analysis, TraceEvent};
 use crate::attn::AttnPattern;
 use crate::backend::native::NativeConfig;
 use crate::comm::{Fabric, Meter, MeterSnapshot};
-use crate::exec::{DistRunner, MeshEngine, MeshRunner, MeshStep};
+use crate::exec::{
+    DistRunner, Elastic, ElasticConfig, MeshEngine, MeshRunner, MeshStep, RecoverPolicy, Topo,
+};
 use crate::parallel::pipeline::Schedule;
 use crate::parallel::sequence::{SeqParEngine, SpStrategy};
 use crate::parallel::tensorp::TensorParEngine;
@@ -122,6 +124,22 @@ COMMON FLAGS:
                       ph:\"C\" \"memory\" counter track (live bytes by
                       category under each rank's timeline) and the run
                       prints the per-rank peak table at exit
+  --recover MODE      none | reshard (train; default none) — what to do
+                      when a rank dies mid-step.  none surfaces the
+                      contextful failure (dead rank named, peers unwound,
+                      no hang).  reshard snapshots training state through
+                      an in-memory checkpoint, re-carves the largest
+                      valid topology from the survivors (same
+                      divisibility caps as startup), re-runs the static
+                      preflight on the new schedule, and resumes — see
+                      README \"Elastic recovery\".  Needs a threaded run:
+                      --threads N or --mesh DxPxM
+  --inject-rank R     (train, threaded runs) kill rank R's thread at the
+                      start of step --inject-step to exercise the failure
+                      path: --recover none reports the dead rank and
+                      exits; --recover reshard re-carves and runs to
+                      completion
+  --inject-step N     the 0-based step --inject-rank dies at (default 0)
   --top-k N           (trace) kernel table size (default 10)
   --out FILE          (trace) write the metrics report JSON
   --seed N            corpus seed (train/verify; default 7)
@@ -471,6 +489,25 @@ pub fn train(args: &Args) -> Result<()> {
         bail!("--overlap applies to --engine seq (got --engine {engine_name})");
     }
 
+    // ---- elastic recovery (--recover) --------------------------------
+    // reshard routes the whole run through exec::recovery::Elastic (it
+    // rebuilds runtimes per re-carve, so it owns the loop); none keeps
+    // the normal paths, optionally with a fault injected to demo the
+    // contextful failure report.
+    if RecoverPolicy::parse(args.str_or("recover", "none"))? == RecoverPolicy::Reshard {
+        return train_elastic(args);
+    }
+    let inject_rank = args.usize_opt("inject-rank")?;
+    let inject_step = args.usize_or("inject-step", 0)? as u64;
+    if inject_rank.is_some()
+        && !(threads > 0 || (args.triple_opt("mesh")?.is_some() && !args.has("mesh-sim")))
+    {
+        bail!(
+            "--inject-rank needs a threaded failure domain: --threads N or \
+             --mesh DxPxM without --mesh-sim (rank death is a thread dying)"
+        );
+    }
+
     let (rt, dir) = open_runtime(args)?;
     let mut params = load_params(&rt, &dir)?;
     let steps = args.usize_or("steps", 50)? as u64;
@@ -519,7 +556,16 @@ pub fn train(args: &Args) -> Result<()> {
         let runner: Box<dyn MeshStep + '_> = if args.has("mesh-sim") {
             Box::new(MeshEngine::with_strategy(&rt, mesh, micros, meter.clone(), sp)?.overlap(overlap))
         } else {
-            Box::new(MeshRunner::with_strategy(&rt, mesh, micros, meter.clone(), sp)?.overlap(overlap))
+            let mut r =
+                MeshRunner::with_strategy(&rt, mesh, micros, meter.clone(), sp)?.overlap(overlap);
+            if let Some(rank) = inject_rank {
+                println!(
+                    "fault injection: mesh rank {rank} dies at step {inject_step} \
+                     (--recover none: the failure is reported, not recovered)"
+                );
+                r.inject_fault_at(rank, inject_step);
+            }
+            Box::new(r)
         };
         if overlap {
             println!("comm/compute overlap: double-buffered ring shifts");
@@ -560,7 +606,14 @@ pub fn train(args: &Args) -> Result<()> {
     let mem_ses = start_mem();
     match engine_name.as_str() {
         "seq" if threads > 0 => {
-            let e = DistRunner::with_strategy(&rt, meter.clone(), pattern, sp)?.overlap(overlap);
+            let mut e = DistRunner::with_strategy(&rt, meter.clone(), pattern, sp)?.overlap(overlap);
+            if let Some(rank) = inject_rank {
+                println!(
+                    "fault injection: rank {rank} dies at step {inject_step} \
+                     (--recover none: the failure is reported, not recovered)"
+                );
+                e.inject_fault_at(rank, inject_step);
+            }
             println!(
                 "threaded execution: {} ranks, one OS thread each, attn {}, sp {}{}",
                 e.n,
@@ -609,6 +662,104 @@ pub fn train(args: &Args) -> Result<()> {
         s.ring_p2p, s.all_reduce, s.all_gather, s.all_to_all, s.broadcast, s.scatter, s.pipeline, s.ops
     );
     finish_trace(rec, mem_ses, trace_path.as_deref(), &meter)
+}
+
+/// `train --recover reshard`: route the run through the elastic driver
+/// ([`crate::exec::recovery`]).  The driver owns runtime construction —
+/// it re-lowers a fresh runtime for every re-carved topology — so this
+/// path builds an [`ElasticConfig`] from the native run-shape flags
+/// instead of calling [`open_runtime`].  The driver also re-runs the
+/// same static-analysis preflight `train` startup uses before every
+/// (re)incarnation of the step loop.
+fn train_elastic(args: &Args) -> Result<()> {
+    let engine_name = args.str_or("engine", "seq");
+    let threads = args.usize_or("threads", 0)?;
+    let pattern = attn_pattern(args)?;
+    let sp = sp_strategy(args)?;
+    let overlap = args.has("overlap");
+    if args.str_or("backend", "auto") == "xla" {
+        bail!("--recover reshard re-lowers a runtime per re-carve; it needs --backend native");
+    }
+    if args.has("mesh-sim") {
+        bail!(
+            "--recover reshard drives the threaded runners (rank death is a \
+             thread dying); drop --mesh-sim"
+        );
+    }
+    let topo = if let Some((dp, pp, mp)) = args.triple_opt("mesh")? {
+        if threads > 0 {
+            bail!("--mesh is threaded already (one OS thread per coordinate); drop --threads");
+        }
+        let kind = match engine_name {
+            "seq" => MpKind::Sequence,
+            "tensor" => MpKind::Tensor,
+            other => bail!("--mesh needs --engine seq or tensor (got --engine {other})"),
+        };
+        Topo::Mesh { mesh: Mesh::new(dp, pp, mp, kind)?, micros: args.usize_or("micros", 1)? }
+    } else if threads > 0 && engine_name == "seq" {
+        Topo::Flat { n: threads }
+    } else {
+        bail!(
+            "--recover reshard needs a threaded failure domain: --engine seq \
+             --threads N, or --mesh DxPxM (rank death only surfaces on the \
+             threaded runners)"
+        );
+    };
+    if args.str_opt("trace").is_some() {
+        bail!(
+            "--trace is not supported with --recover reshard: the comm meter \
+             restarts at each recovery, so a whole-run trace cannot cross-check \
+             against it (trace a clean resume from the recovery point instead)"
+        );
+    }
+    let nc = native_config(args)?;
+    let steps = args.usize_or("steps", 50)? as u64;
+    let cfg = ElasticConfig {
+        model: nc.model,
+        batch: nc.batch,
+        seq_len: nc.seq_len,
+        pattern,
+        sp,
+        overlap,
+        policy: RecoverPolicy::Reshard,
+        data_seed: args.usize_or("seed", 7)? as u64,
+        init_seed: nc.seed,
+        train: TrainConfig {
+            steps,
+            warmup: (steps / 10).max(1),
+            peak_lr: args.f64_or("lr", 1e-3)? as f32,
+            log_every: args.usize_or("log-every", 10)? as u64,
+        },
+        topo,
+        quiet: false,
+    };
+    println!(
+        "elastic training: {} with --recover reshard (survivor re-carve on rank death)",
+        topo.label()
+    );
+    let mut run = Elastic::new(cfg);
+    if let Some(rank) = args.usize_opt("inject-rank")? {
+        let at = args.usize_or("inject-step", 0)? as u64;
+        println!("fault injection: rank {rank} dies at step {at}");
+        run = run.fault_at(at, rank);
+    }
+    let out = run.run()?;
+    for ev in &out.recoveries {
+        println!("recovery: {ev}");
+    }
+    println!(
+        "elastic run complete: {} step(s), {} recover{}, final topology {}",
+        steps,
+        out.recoveries.len(),
+        if out.recoveries.len() == 1 { "y" } else { "ies" },
+        out.final_topo.label()
+    );
+    let s = &out.post_meter;
+    println!(
+        "comm totals since last re-carve: ring_p2p={} all_reduce={} all_gather={} all_to_all={} broadcast={} scatter={} pipeline={} ({} ops)",
+        s.ring_p2p, s.all_reduce, s.all_gather, s.all_to_all, s.broadcast, s.scatter, s.pipeline, s.ops
+    );
+    Ok(())
 }
 
 pub fn sweep(args: &Args) -> Result<()> {

@@ -41,6 +41,7 @@
 
 use std::cell::RefCell;
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread;
 
@@ -49,6 +50,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::attn::AttnPattern;
 use crate::comm::threaded::{mesh as comm_mesh, RingComm};
 use crate::comm::{Collective, CommKind, Fabric, Meter};
+use crate::exec::recovery::RankFailure;
 use crate::model::params::ParamStore;
 use crate::obs::mem;
 use crate::parallel::pipeline::{Cell, Schedule};
@@ -799,9 +801,12 @@ pub struct MeshRunner<'rt> {
     rt: &'rt Runtime,
     spec: MeshSpec,
     pub meter: Arc<Meter>,
-    /// Fault injection for the failure-path tests: this mesh rank's
-    /// thread panics at the start of the next step.
-    inject_fault: Option<usize>,
+    /// Fault injection for the failure-path tests: `(rank, from_step)` —
+    /// the mesh rank's thread panics at the start of every step whose
+    /// 0-based index on this runner is >= `from_step`.
+    inject_fault: Option<(usize, u64)>,
+    /// Steps started on this runner; drives step-targeted injection.
+    steps_run: AtomicU64,
 }
 
 impl<'rt> MeshRunner<'rt> {
@@ -821,7 +826,13 @@ impl<'rt> MeshRunner<'rt> {
         sp: SpStrategy,
     ) -> Result<Self> {
         rt.sync_backend()?;
-        Ok(MeshRunner { rt, spec: MeshSpec::new(rt, mesh, micros, sp)?, meter, inject_fault: None })
+        Ok(MeshRunner {
+            rt,
+            spec: MeshSpec::new(rt, mesh, micros, sp)?,
+            meter,
+            inject_fault: None,
+            steps_run: AtomicU64::new(0),
+        })
     }
 
     /// Enable comm/compute overlap in the sequence axis' dense ring loops
@@ -839,7 +850,14 @@ impl<'rt> MeshRunner<'rt> {
     /// the start of every subsequent step — peers must error out with the
     /// disconnect named and the join must report this rank, not hang.
     pub fn inject_fault(&mut self, rank: usize) {
-        self.inject_fault = Some(rank);
+        self.inject_fault_at(rank, 0);
+    }
+
+    /// Step-targeted fault injection: mesh rank `rank` panics at the
+    /// start of the step with 0-based index `step` (counted per runner)
+    /// and every step after it — the chaos suite's deterministic trigger.
+    pub fn inject_fault_at(&mut self, rank: usize, step: u64) {
+        self.inject_fault = Some((rank, step));
     }
 }
 
@@ -952,7 +970,11 @@ impl<'rt> MeshStep for MeshRunner<'rt> {
 
         let fh = crate::obs::fork();
         let mfh = mem::fork();
-        let inject = self.inject_fault;
+        let step_idx = self.steps_run.fetch_add(1, Ordering::Relaxed);
+        let inject = match self.inject_fault {
+            Some((rank, from)) if step_idx >= from => Some(rank),
+            _ => None,
+        };
         let results: Vec<(usize, bool, Result<(f32, f32, ParamStore)>)> = thread::scope(|sc| {
             let mut handles = Vec::with_capacity(world);
             for (rank, (coord, mpc, dpc, ppc)) in slots.into_iter().enumerate() {
@@ -988,11 +1010,10 @@ impl<'rt> MeshStep for MeshRunner<'rt> {
 
         // A panicked rank is the root cause; its peers' "peer
         // disconnected" errors are downstream symptoms of the same death.
+        // Returned as the structured [`RankFailure`] so `exec::recovery`
+        // can downcast and reshard instead of string-matching.
         if let Some((rank, ..)) = results.iter().find(|(_, panicked, _)| *panicked) {
-            bail!(
-                "mesh rank {rank}: thread panicked mid-step; its peers saw the \
-                 disconnect and unwound (panic payload on stderr)"
-            );
+            return Err(RankFailure::mesh(*rank, world).into());
         }
 
         let mut replica_mlm = vec![0.0f32; dp];

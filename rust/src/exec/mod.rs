@@ -29,12 +29,22 @@
 //! coordinate, sub-communicators carved per mesh axis, a real GPipe
 //! microbatch pipeline across stages — see [`mesh`](self::MeshRunner).
 //!
+//! [`recovery`] closes the loop on rank death: when either runner
+//! surfaces a [`RankFailure`], the [`Elastic`] driver snapshots training
+//! state through an in-memory checkpoint, re-carves a valid topology
+//! from the survivors, and resumes — bit-equivalent to a clean resume
+//! from the same checkpoint (`rust/tests/chaos_props.rs`).
+//!
 //! Requires a `Send + Sync` backend: the default native backend qualifies;
 //! the `backend-xla` PJRT backend (Rc-based, thread-local handles) is
 //! rejected at construction with a pointer at `--backend native`.
 
 pub(crate) mod mesh;
+pub mod recovery;
 mod runner;
 
 pub use mesh::{MeshEngine, MeshOutput, MeshRunner, MeshStep};
+pub use recovery::{
+    Elastic, ElasticConfig, ElasticOutcome, RankFailure, RecoverPolicy, RecoveryEvent, Topo,
+};
 pub use runner::DistRunner;

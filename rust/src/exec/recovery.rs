@@ -1,0 +1,737 @@
+//! `exec::recovery` — elastic recovery from rank failure.
+//!
+//! PR 9 made a dying rank *detectable*: a panicked thread drops its
+//! channel endpoints, its peers' blocked recvs error with the dead rank
+//! named, and the runner joins everything and reports a [`RankFailure`].
+//! The checkpoint layer (PR 4) proved training state resumes bitwise
+//! across mesh factorizations.  This module is the bridge: when a step
+//! fails, [`Elastic`] snapshots the (untouched) training state through an
+//! in-memory [`Checkpoint`], re-carves the largest valid topology from
+//! the surviving world size, re-runs the same static-analysis preflight
+//! `train` startup uses, and resumes the step loop on the new topology.
+//!
+//! ## Failure model
+//!
+//! A rank dies by panicking mid-step (in production: a device falling off
+//! the fabric; in tests: `inject_fault_at`).  The optimizer never applies
+//! a partial step — the runner joins all survivors and returns an error
+//! before any update — so the host-side state (params, Adam moments,
+//! data-loader cursor) at the failed step IS the recovery point.  Params
+//! and moments are host-resident in global layout (every rank's view is
+//! carved at use time), so "resharding" is re-lowering the runtime for
+//! the new topology; no tensor surgery is needed.
+//!
+//! ## Re-carve rules
+//!
+//! The new world is `old world - 1` (the dead rank is gone; survivors
+//! are re-used).  [`carve_topo`] searches world sizes downward and keeps
+//! the same caps the constructors enforce:
+//!
+//! * flat ring: `n | seq_len`, plus `n | heads` under Ulysses;
+//! * mesh: `pp | layers`; a sequence model axis needs `mp | seq_len`
+//!   (plus `mp | heads` under Ulysses); a tensor model axis needs
+//!   `mp | heads` (Megatron's §4.2 cap) and `mp | B·L` when `pp > 1`.
+//!
+//! Within one world size the model-parallel axis is kept as large as the
+//! caps allow (the paper's axis), then data parallel, pipeline last.
+//!
+//! ## The recovered == clean contract
+//!
+//! A recovered run must be bit-equivalent to checkpointing at the failed
+//! step and cleanly resuming on the re-carved topology: same losses, same
+//! grads, same optimizer state, and byte-for-byte meter parity on the
+//! post-recovery steps (the meter is restarted at recovery so the two
+//! are comparable).  `rust/tests/chaos_props.rs` fuzzes (failure step ×
+//! factorization × SP strategy × pattern × overlap) against this
+//! contract via `util::state_hash`.
+
+use std::fmt;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::analysis;
+use crate::attn::AttnPattern;
+use crate::backend::native::NativeConfig;
+use crate::comm::{Meter, MeterSnapshot};
+use crate::exec::{DistRunner, MeshRunner, MeshStep};
+use crate::model::params::ParamStore;
+use crate::model::ModelConfig;
+use crate::parallel::sequence::SpStrategy;
+use crate::parallel::topology::{Mesh, MpKind};
+use crate::parallel::Batch;
+use crate::runtime::Runtime;
+use crate::train::checkpoint::Checkpoint;
+use crate::train::data::{Corpus, CorpusConfig};
+use crate::train::optim::{lr_schedule, Adam, AdamConfig};
+use crate::train::trainer::{record_step, LogPoint, TrainConfig};
+use crate::util::prop::divisors;
+
+// ---------------------------------------------------------------------
+// The structured failure
+// ---------------------------------------------------------------------
+
+/// A rank died mid-step.  Both runners return this (through `anyhow`) so
+/// the elastic driver can `downcast_ref` instead of string-matching; the
+/// `Display` text is exactly the PR-9 message the failure-path tests pin.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RankFailure {
+    /// The dead rank: flat ring rank, or linearized mesh rank.
+    pub rank: usize,
+    /// World size of the group the rank died in.
+    pub world: usize,
+    /// Whether the failure surfaced from the 4D mesh runner.
+    pub on_mesh: bool,
+}
+
+impl RankFailure {
+    pub(crate) fn ring(rank: usize, world: usize) -> RankFailure {
+        RankFailure { rank, world, on_mesh: false }
+    }
+
+    pub(crate) fn mesh(rank: usize, world: usize) -> RankFailure {
+        RankFailure { rank, world, on_mesh: true }
+    }
+}
+
+impl fmt::Display for RankFailure {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.on_mesh {
+            write!(
+                f,
+                "mesh rank {}: thread panicked mid-step; its peers saw the \
+                 disconnect and unwound (panic payload on stderr)",
+                self.rank
+            )
+        } else {
+            write!(
+                f,
+                "rank {}: thread panicked mid-step; its ring peers saw the \
+                 disconnect and unwound (panic payload on stderr)",
+                self.rank
+            )
+        }
+    }
+}
+
+impl std::error::Error for RankFailure {}
+
+// ---------------------------------------------------------------------
+// Policy + topology
+// ---------------------------------------------------------------------
+
+/// What to do when a rank dies (`--recover`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecoverPolicy {
+    /// Propagate the contextful failure (the PR-9 behavior).
+    None,
+    /// Re-carve the surviving world and resume from in-memory state.
+    Reshard,
+}
+
+impl RecoverPolicy {
+    /// Parse the CLI surface: `none | reshard`.
+    pub fn parse(s: &str) -> Result<RecoverPolicy> {
+        match s {
+            "none" => Ok(RecoverPolicy::None),
+            "reshard" => Ok(RecoverPolicy::Reshard),
+            other => bail!("unknown --recover {other:?} (none | reshard)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            RecoverPolicy::None => "none",
+            RecoverPolicy::Reshard => "reshard",
+        }
+    }
+}
+
+/// The topology one elastic incarnation runs on.
+#[derive(Clone, Copy, Debug)]
+pub enum Topo {
+    /// A flat SP ring driven by [`DistRunner`] (`--threads N`).
+    Flat { n: usize },
+    /// A 4D mesh driven by [`MeshRunner`] (`--mesh DxPxM`).
+    Mesh { mesh: Mesh, micros: usize },
+}
+
+impl Topo {
+    pub fn world(&self) -> usize {
+        match self {
+            Topo::Flat { n } => *n,
+            Topo::Mesh { mesh, .. } => mesh.world_size(),
+        }
+    }
+
+    /// Batches one optimizer step consumes on this topology.
+    pub fn batches_per_step(&self) -> u64 {
+        match self {
+            Topo::Flat { .. } => 1,
+            Topo::Mesh { mesh, micros } => (mesh.dp * micros) as u64,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Topo::Flat { n } => format!("ring-{n}"),
+            Topo::Mesh { mesh, micros } => format!("mesh-{}@{micros}", mesh.label()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Re-carving
+// ---------------------------------------------------------------------
+
+/// The divisibility caps a carved topology must satisfy — the same ones
+/// the runner constructors enforce (Megatron head cap, SP chunking,
+/// GPipe stage split).
+#[derive(Clone, Copy, Debug)]
+pub struct Caps {
+    pub layers: usize,
+    pub heads: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    /// Ulysses SP also shards heads: adds `n | heads` (flat ring) or
+    /// `mp | heads` (mesh sequence axis).
+    pub ulysses: bool,
+}
+
+impl Caps {
+    pub fn of(cfg: &ElasticConfig) -> Caps {
+        Caps {
+            layers: cfg.model.layers,
+            heads: cfg.model.heads,
+            seq_len: cfg.seq_len,
+            batch: cfg.batch,
+            ulysses: !cfg.sp.is_ring(),
+        }
+    }
+
+    fn ring_ok(&self, n: usize) -> bool {
+        n >= 1 && self.seq_len % n == 0 && (!self.ulysses || self.heads % n == 0)
+    }
+}
+
+/// Largest valid flat ring size `<= survivors`.
+pub fn carve_flat(survivors: usize, caps: &Caps) -> Option<usize> {
+    (1..=survivors).rev().find(|&n| caps.ring_ok(n))
+}
+
+/// Best valid mesh factorization with world size `<= survivors`
+/// (`factor3`-style search over (dp, pp, mp) triples, made exhaustive and
+/// deterministic): world sizes are tried largest-first; within one world
+/// size the model-parallel axis is kept as large as the caps allow, then
+/// dp, with pp soaking the remainder.
+pub fn carve_mesh(survivors: usize, kind: MpKind, caps: &Caps) -> Option<Mesh> {
+    for w in (1..=survivors).rev() {
+        for mp in divisors(w).into_iter().rev() {
+            let mp_ok = match kind {
+                MpKind::Sequence => caps.ring_ok(mp),
+                MpKind::Tensor => mp == 1 || caps.heads % mp == 0,
+            };
+            if !mp_ok {
+                continue;
+            }
+            for dp in divisors(w / mp).into_iter().rev() {
+                let pp = w / mp / dp;
+                if caps.layers % pp != 0 {
+                    continue;
+                }
+                if matches!(kind, MpKind::Tensor)
+                    && pp > 1
+                    && (caps.batch * caps.seq_len) % mp != 0
+                {
+                    continue;
+                }
+                if let Ok(m) = Mesh::new(dp, pp, mp, kind) {
+                    return Some(m);
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Re-carve `old`'s topology family for `survivors` ranks, or `None` when
+/// no valid shape exists (e.g. zero survivors).
+pub fn carve_topo(survivors: usize, caps: &Caps, old: &Topo) -> Option<Topo> {
+    if survivors == 0 {
+        return None;
+    }
+    match old {
+        Topo::Flat { .. } => carve_flat(survivors, caps).map(|n| Topo::Flat { n }),
+        Topo::Mesh { mesh, micros } => carve_mesh(survivors, mesh.kind, caps)
+            .map(|m| Topo::Mesh { mesh: m, micros: *micros }),
+    }
+}
+
+// ---------------------------------------------------------------------
+// The elastic driver
+// ---------------------------------------------------------------------
+
+/// Everything an elastic run needs to (re)build runtimes and data streams
+/// from scratch — the run is a pure function of this config plus the
+/// fault schedule.
+#[derive(Clone, Copy, Debug)]
+pub struct ElasticConfig {
+    pub model: ModelConfig,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub pattern: AttnPattern,
+    pub sp: SpStrategy,
+    pub overlap: bool,
+    pub policy: RecoverPolicy,
+    /// Corpus seed: identifies the batch stream.
+    pub data_seed: u64,
+    /// Manifest / parameter-init seed.
+    pub init_seed: u64,
+    pub train: TrainConfig,
+    pub topo: Topo,
+    pub quiet: bool,
+}
+
+/// One recovery, as reported on the outcome and printed by the CLI.
+#[derive(Clone, Debug)]
+pub struct RecoveryEvent {
+    /// Global step the failure hit (the step that was re-run).
+    pub step: u64,
+    pub failed_rank: usize,
+    pub old_world: usize,
+    pub new_world: usize,
+    pub old_label: String,
+    pub new_label: String,
+}
+
+impl fmt::Display for RecoveryEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "step {}: rank {} of {} died; re-carved {} -> {} ({} survivor(s))",
+            self.step,
+            self.failed_rank,
+            self.old_world,
+            self.old_label,
+            self.new_label,
+            self.new_world
+        )
+    }
+}
+
+/// What an elastic run hands back: the curve, the final training state
+/// (for state-hash comparison), the recovery record, and the meter
+/// snapshot covering the steps since the last (re)carve.
+pub struct ElasticOutcome {
+    pub curve: Vec<LogPoint>,
+    pub recoveries: Vec<RecoveryEvent>,
+    /// The in-memory checkpoint captured at each failure, in order — the
+    /// chaos suite resumes its clean comparison leg from these.
+    pub checkpoints: Vec<Checkpoint>,
+    pub params: ParamStore,
+    pub adam: Adam,
+    /// Data-loader cursor after the last step.
+    pub cursor: u64,
+    /// Gradients of the final completed step.
+    pub last_grads: Option<ParamStore>,
+    pub final_topo: Topo,
+    /// Byte accounting since the last (re)carve — the meter restarts at
+    /// every recovery so post-recovery traffic is comparable
+    /// byte-for-byte with a clean run resumed from the same checkpoint.
+    pub post_meter: MeterSnapshot,
+}
+
+/// The elastic step loop.  Build with [`Elastic::new`], optionally add a
+/// deterministic fault schedule ([`Elastic::fault_at`]) or a resume point
+/// ([`Elastic::resume_from`]), then [`Elastic::run`].
+pub struct Elastic {
+    cfg: ElasticConfig,
+    /// (global step, rank): the rank dies at the start of that step.
+    faults: Vec<(u64, usize)>,
+    start: Option<Checkpoint>,
+}
+
+impl Elastic {
+    pub fn new(cfg: ElasticConfig) -> Elastic {
+        Elastic { cfg, faults: Vec::new(), start: None }
+    }
+
+    /// Schedule rank `rank` to die at the start of global step `step`
+    /// (on whatever topology is live then; ranks >= the live world are
+    /// ignored, mirroring a failure of a machine not in the job).
+    pub fn fault_at(mut self, step: u64, rank: usize) -> Elastic {
+        self.faults.push((step, rank));
+        self
+    }
+
+    /// Resume from an in-memory checkpoint instead of fresh synthetic
+    /// state — the clean leg of the recovered==clean contract, and the
+    /// CLI resume path after `checkpoint::load`.
+    pub fn resume_from(mut self, ckpt: Checkpoint) -> Elastic {
+        self.start = Some(ckpt);
+        self
+    }
+
+    /// Drive the step loop to `cfg.train.steps`, recovering per policy.
+    pub fn run(mut self) -> Result<ElasticOutcome> {
+        let cfg = self.cfg;
+        if matches!(cfg.topo, Topo::Mesh { .. }) && !cfg.pattern.is_dense() {
+            bail!(
+                "mesh elastic runs support the dense pattern only (got --attn {})",
+                cfg.pattern.label()
+            );
+        }
+        let caps = Caps::of(&cfg);
+        let corpus_cfg = CorpusConfig::new(cfg.model.vocab, cfg.seq_len, cfg.batch);
+        let total = cfg.train.steps;
+
+        let mut topo = cfg.topo;
+        let first_rt = runtime_for(&cfg, &topo)?;
+        let (mut params, mut adam, mut step, cursor0) = match self.start {
+            Some(ck) => {
+                let (p, m, v, s, c) = ck.unpack();
+                (p, Adam::from_state(AdamConfig::default(), m, v, s), s, c)
+            }
+            None => {
+                let p = ParamStore::synthetic(first_rt.manifest());
+                let a = Adam::new(&p, AdamConfig::default());
+                (p, a, 0u64, 0u64)
+            }
+        };
+        drop(first_rt);
+        let mut corpus = Corpus::at_cursor(corpus_cfg.clone(), cfg.data_seed, cursor0)?;
+
+        let mut curve: Vec<LogPoint> = Vec::new();
+        let mut recoveries: Vec<RecoveryEvent> = Vec::new();
+        let mut checkpoints: Vec<Checkpoint> = Vec::new();
+        let mut last_grads: Option<ParamStore> = None;
+        let mut meter = Meter::new();
+
+        'incarnation: loop {
+            let rt = runtime_for(&cfg, &topo)?;
+            // the same static-analysis gate `train` startup runs: the
+            // re-carved schedule must verify before the loop (re)enters
+            let report = preflight_topo(&rt, &cfg, &topo)?;
+            if !cfg.quiet {
+                println!("[elastic] {report}");
+            }
+            let mut runner = StepRunner::build(&rt, &cfg, &topo, meter.clone())?;
+            let start_step = step;
+            // arm the earliest pending fault that can hit this
+            // incarnation; a machine dies once, so the fault is consumed
+            // when its failure is recovered from
+            let armed: Option<(u64, usize)> = self
+                .faults
+                .iter()
+                .filter(|(fs, fr)| *fs >= start_step && *fr < topo.world())
+                .min_by_key(|(fs, _)| *fs)
+                .copied();
+            if let Some((fstep, frank)) = armed {
+                runner.inject(frank, fstep - start_step);
+            }
+            let label = format!("elastic-{}", topo.label());
+
+            while step < total {
+                let cursor_before = corpus.drawn();
+                let batches = draw(&mut corpus, &topo)?;
+                let tokens = batches.tokens();
+                let sw = crate::obs::Stopwatch::start();
+                let step_sp = crate::obs::begin();
+                match runner.step(&params, &batches) {
+                    Ok((loss, mlm, sop, grads)) => {
+                        let lr = lr_schedule(step, cfg.train.warmup, total, cfg.train.peak_lr);
+                        let opt_sp = crate::obs::begin();
+                        adam.step(&mut params, &grads, lr)?;
+                        opt_sp.end_phase("optimizer");
+                        step_sp.end_phase_idx("step", step as usize);
+                        let dt = sw.elapsed_secs();
+                        record_step(
+                            &label,
+                            &cfg.train,
+                            &mut curve,
+                            step,
+                            (loss, mlm, sop),
+                            lr,
+                            tokens,
+                            dt,
+                            cfg.quiet,
+                        );
+                        last_grads = Some(grads);
+                        step += 1;
+                    }
+                    Err(e) => {
+                        let failure = match e.downcast_ref::<RankFailure>() {
+                            Some(f) if cfg.policy == RecoverPolicy::Reshard => *f,
+                            // --recover none (or a non-failure error):
+                            // propagate the PR-9 contextful report
+                            _ => return Err(e),
+                        };
+                        let rec_sp = crate::obs::begin();
+                        // consume the fault that fired — the dead machine
+                        // stays dead; it must not re-kill the next topology
+                        if let Some(ch) = armed {
+                            if let Some(pos) = self.faults.iter().position(|f| *f == ch) {
+                                self.faults.remove(pos);
+                            }
+                        }
+                        // the failed step applied no update: state at this
+                        // step's entry IS the recovery point
+                        let ck = Checkpoint::capture(step, &params, &adam, cursor_before);
+                        let survivors = topo.world() - 1;
+                        let new_topo =
+                            carve_topo(survivors, &caps, &topo).ok_or_else(|| {
+                                anyhow!(
+                                    "recovery failed at step {step}: no valid topology for \
+                                     {survivors} survivor(s) (seq_len {}, heads {}, layers {}) \
+                                     after: {failure}",
+                                    caps.seq_len,
+                                    caps.heads,
+                                    caps.layers
+                                )
+                            })?;
+                        let event = RecoveryEvent {
+                            step,
+                            failed_rank: failure.rank,
+                            old_world: topo.world(),
+                            new_world: new_topo.world(),
+                            old_label: topo.label(),
+                            new_label: new_topo.label(),
+                        };
+                        if !cfg.quiet {
+                            println!("[elastic] {event}");
+                        }
+                        recoveries.push(event);
+                        checkpoints.push(ck);
+                        // rewind the data stream to the failed step's
+                        // entry; the new topology re-draws from there
+                        // (its batches-per-step may differ)
+                        corpus =
+                            Corpus::at_cursor(corpus_cfg.clone(), cfg.data_seed, cursor_before)?;
+                        // fresh meter: post-recovery byte accounting must
+                        // equal a clean run resumed from `ck`
+                        meter = Meter::new();
+                        topo = new_topo;
+                        rec_sp.end_phase("recovery");
+                        continue 'incarnation;
+                    }
+                }
+            }
+            break;
+        }
+
+        Ok(ElasticOutcome {
+            curve,
+            recoveries,
+            checkpoints,
+            cursor: corpus.drawn(),
+            last_grads,
+            final_topo: topo,
+            post_meter: meter.snapshot(),
+            params,
+            adam,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Incarnation plumbing
+// ---------------------------------------------------------------------
+
+/// Build the runtime for a topology: the flat ring lowers ring-`n`
+/// kernels; a mesh lowers its model axis via [`NativeConfig::for_mesh`].
+fn runtime_for(cfg: &ElasticConfig, topo: &Topo) -> Result<Runtime> {
+    let (linformer_k, block_w) = match cfg.pattern {
+        AttnPattern::Dense => (0, 0),
+        AttnPattern::Linformer { k } => (k, 0),
+        AttnPattern::Block { w } => (0, w),
+    };
+    let base = NativeConfig {
+        model: cfg.model,
+        batch: cfg.batch,
+        seq_len: cfg.seq_len,
+        ring: match topo {
+            Topo::Flat { n } => *n,
+            Topo::Mesh { .. } => 1,
+        },
+        tp: 1,
+        linformer_k,
+        block_w,
+        ulysses: !cfg.sp.is_ring(),
+        seed: cfg.init_seed,
+    };
+    let nc = match topo {
+        Topo::Flat { .. } => base,
+        Topo::Mesh { mesh, .. } => base.for_mesh(mesh),
+    };
+    Runtime::native(nc)
+}
+
+/// The `train`-startup preflight, applied to whatever topology is live.
+fn preflight_topo(rt: &Runtime, cfg: &ElasticConfig, topo: &Topo) -> Result<String> {
+    match topo {
+        Topo::Flat { .. } => {
+            analysis::preflight(analysis::analyze_sp_step(rt, cfg.pattern, cfg.sp))
+        }
+        Topo::Mesh { mesh, micros } => {
+            analysis::preflight(analysis::analyze_mesh(rt, *mesh, *micros, cfg.sp))
+        }
+    }
+}
+
+/// One incarnation's runner, unified over the two threaded backends.
+enum StepRunner<'rt> {
+    Flat(DistRunner<'rt>),
+    Mesh(MeshRunner<'rt>),
+}
+
+impl<'rt> StepRunner<'rt> {
+    fn build(
+        rt: &'rt Runtime,
+        cfg: &ElasticConfig,
+        topo: &Topo,
+        meter: Arc<Meter>,
+    ) -> Result<StepRunner<'rt>> {
+        match topo {
+            Topo::Flat { .. } => {
+                let r = DistRunner::with_strategy(rt, meter, cfg.pattern, cfg.sp)?
+                    .overlap(cfg.overlap);
+                Ok(StepRunner::Flat(r))
+            }
+            Topo::Mesh { mesh, micros } => {
+                let r = MeshRunner::with_strategy(rt, *mesh, *micros, meter, cfg.sp)?
+                    .overlap(cfg.overlap);
+                Ok(StepRunner::Mesh(r))
+            }
+        }
+    }
+
+    fn inject(&mut self, rank: usize, step: u64) {
+        match self {
+            StepRunner::Flat(r) => r.inject_fault_at(rank, step),
+            StepRunner::Mesh(r) => r.inject_fault_at(rank, step),
+        }
+    }
+
+    fn step(
+        &self,
+        params: &ParamStore,
+        batches: &StepBatches,
+    ) -> Result<(f32, f32, f32, ParamStore)> {
+        match (self, batches) {
+            (StepRunner::Flat(r), StepBatches::Flat(b)) => {
+                let out = r.forward_backward(params, b)?;
+                Ok((out.loss, out.mlm, out.sop, out.grads))
+            }
+            (StepRunner::Mesh(r), StepBatches::Mesh(bs)) => {
+                let out = MeshStep::step(r, params, bs)?;
+                Ok((out.loss, out.mlm, out.sop, out.grads))
+            }
+            _ => bail!("elastic runner/batch topology mismatch"),
+        }
+    }
+}
+
+/// One step's batches, shaped for the live topology.
+enum StepBatches {
+    Flat(Batch),
+    Mesh(Vec<Vec<Batch>>),
+}
+
+impl StepBatches {
+    fn tokens(&self) -> f64 {
+        match self {
+            StepBatches::Flat(b) => b.ids.numel() as f64,
+            StepBatches::Mesh(bs) => {
+                bs.iter().flatten().map(|b| b.ids.numel() as f64).sum()
+            }
+        }
+    }
+}
+
+/// Draw one optimizer step's batches (mesh: replica-major, micro-minor —
+/// the `MeshTrainer` order, so a run is determined by the corpus seed).
+fn draw(corpus: &mut Corpus, topo: &Topo) -> Result<StepBatches> {
+    match topo {
+        Topo::Flat { .. } => Ok(StepBatches::Flat(corpus.next_batch()?)),
+        Topo::Mesh { mesh, micros } => {
+            let b: Vec<Vec<Batch>> = (0..mesh.dp)
+                .map(|_| {
+                    (0..*micros)
+                        .map(|_| corpus.next_batch())
+                        .collect::<Result<Vec<_>>>()
+                })
+                .collect::<Result<_>>()?;
+            Ok(StepBatches::Mesh(b))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn caps(seq_len: usize, heads: usize, layers: usize, ulysses: bool) -> Caps {
+        Caps { layers, heads, seq_len, batch: 2, ulysses }
+    }
+
+    #[test]
+    fn flat_carve_prefers_largest_valid_ring() {
+        // survivors 3, seq_len 32: 3 does not divide 32, 2 does
+        assert_eq!(carve_flat(3, &caps(32, 2, 2, false)), Some(2));
+        // survivors 4 is directly valid
+        assert_eq!(carve_flat(4, &caps(32, 2, 2, false)), Some(4));
+        assert_eq!(carve_flat(0, &caps(32, 2, 2, false)), None);
+    }
+
+    #[test]
+    fn flat_carve_respects_the_ulysses_head_cap() {
+        // ulysses on a 2-head model: n must divide 2, so survivors 3 -> 2
+        assert_eq!(carve_flat(3, &caps(32, 2, 2, true)), Some(2));
+        // 4-head model: survivors 3 -> 2 (3 divides neither 32 nor 4)
+        assert_eq!(carve_flat(3, &caps(32, 4, 2, true)), Some(2));
+    }
+
+    #[test]
+    fn mesh_carve_keeps_the_model_axis_large() {
+        // 3 survivors of a sequence mesh on seq_len 32: w=3 only factors
+        // as mp=1 (3 ∤ 32), pp ∈ {1, 3} but layers=2 rejects pp=3 -> 3x1x1
+        let m = carve_mesh(3, MpKind::Sequence, &caps(32, 2, 2, false)).unwrap();
+        assert_eq!((m.dp, m.pp, m.mp), (3, 1, 1));
+        // 4 survivors: mp=4 divides 32 and is preferred over dp
+        let m = carve_mesh(4, MpKind::Sequence, &caps(32, 2, 2, false)).unwrap();
+        assert_eq!((m.dp, m.pp, m.mp), (1, 1, 4));
+    }
+
+    #[test]
+    fn mesh_carve_respects_the_megatron_head_cap() {
+        // tensor axis on a 2-head model: mp ∈ {1, 2}; survivors 4 -> mp=2
+        let m = carve_mesh(4, MpKind::Tensor, &caps(32, 2, 2, false)).unwrap();
+        assert_eq!(m.mp, 2);
+        assert_eq!(m.dp * m.pp * m.mp, 4);
+        // heads=3 rejects mp ∈ {2, 4}; the largest world still wins via
+        // data parallelism (world beats model-axis width in the search)
+        let m = carve_mesh(4, MpKind::Tensor, &caps(32, 3, 2, false)).unwrap();
+        assert_eq!((m.dp, m.pp, m.mp), (4, 1, 1));
+    }
+
+    #[test]
+    fn carve_topo_zero_survivors_is_none() {
+        let c = caps(32, 2, 2, false);
+        assert!(carve_topo(0, &c, &Topo::Flat { n: 1 }).is_none());
+    }
+
+    #[test]
+    fn rank_failure_display_matches_the_pinned_messages() {
+        let flat = RankFailure::ring(2, 4).to_string();
+        assert!(flat.starts_with("rank 2: thread panicked mid-step"), "{flat}");
+        let mesh = RankFailure::mesh(1, 4).to_string();
+        assert!(mesh.starts_with("mesh rank 1: thread panicked mid-step"), "{mesh}");
+    }
+
+    #[test]
+    fn recover_policy_parses_both_spellings() {
+        assert_eq!(RecoverPolicy::parse("none").unwrap(), RecoverPolicy::None);
+        assert_eq!(RecoverPolicy::parse("reshard").unwrap(), RecoverPolicy::Reshard);
+        assert!(RecoverPolicy::parse("magic").is_err());
+    }
+}

@@ -1,5 +1,6 @@
 //! The multi-threaded distributed runner: one OS thread per rank.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread;
 
@@ -7,6 +8,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::comm::threaded::mesh;
 use crate::comm::Meter;
+use crate::exec::recovery::RankFailure;
 use crate::model::params::ParamStore;
 use crate::parallel::sequence::{seqpar_step, RankOutput, SpStrategy, StepShape};
 use crate::parallel::{Batch, Engine, StepOutput};
@@ -27,9 +29,12 @@ pub struct DistRunner<'rt> {
     pub n: usize,
     pub meter: Arc<Meter>,
     shape: StepShape,
-    /// Fault injection for the failure-path tests: this rank's thread
-    /// panics at the start of the next step.
-    inject_fault: Option<usize>,
+    /// Fault injection for the failure-path tests: `(rank, from_step)` —
+    /// the rank's thread panics at the start of every step whose 0-based
+    /// index on this runner is >= `from_step`.
+    inject_fault: Option<(usize, u64)>,
+    /// Steps started on this runner; drives step-targeted injection.
+    steps_run: AtomicU64,
 }
 
 impl<'rt> DistRunner<'rt> {
@@ -65,7 +70,14 @@ impl<'rt> DistRunner<'rt> {
         rt.sync_backend()?; // threaded execution needs a Send + Sync backend
         let shape = StepShape::from_manifest_sp(rt.manifest(), pattern, sp)?;
         let n = shape.n;
-        Ok(DistRunner { rt, n, meter, shape, inject_fault: None })
+        Ok(DistRunner {
+            rt,
+            n,
+            meter,
+            shape,
+            inject_fault: None,
+            steps_run: AtomicU64::new(0),
+        })
     }
 
     /// Enable comm/compute overlap in the dense ring loops (`--overlap`):
@@ -83,7 +95,15 @@ impl<'rt> DistRunner<'rt> {
     /// channels as contextful "peer disconnected" errors and the join
     /// must report the dead rank by number instead of hanging.
     pub fn inject_fault(&mut self, rank: usize) {
-        self.inject_fault = Some(rank);
+        self.inject_fault_at(rank, 0);
+    }
+
+    /// Step-targeted fault injection: rank `rank` panics at the start of
+    /// the step with 0-based index `step` (counted per runner) and every
+    /// step after it.  `exec::recovery`'s chaos suite uses this to kill a
+    /// rank at a fuzzed point in the run.
+    pub fn inject_fault_at(&mut self, rank: usize, step: u64) {
+        self.inject_fault = Some((rank, step));
     }
 
     /// One forward+backward step, wall-clock parallel across ranks.
@@ -102,7 +122,11 @@ impl<'rt> DistRunner<'rt> {
 
         let fh = crate::obs::fork();
         let mfh = crate::obs::mem::fork();
-        let inject = self.inject_fault;
+        let step_idx = self.steps_run.fetch_add(1, Ordering::Relaxed);
+        let inject = match self.inject_fault {
+            Some((rank, from)) if step_idx >= from => Some(rank),
+            _ => None,
+        };
         let results: Vec<(usize, bool, Result<RankOutput>)> = thread::scope(|s| {
             let handles: Vec<_> = comms
                 .into_iter()
@@ -141,11 +165,10 @@ impl<'rt> DistRunner<'rt> {
 
         // A panicked rank is the root cause; its ring peers' "peer
         // disconnected" errors are downstream symptoms of the same death.
+        // Returned as the structured [`RankFailure`] so `exec::recovery`
+        // can downcast and reshard instead of string-matching.
         if let Some((rank, ..)) = results.iter().find(|(_, panicked, _)| *panicked) {
-            bail!(
-                "rank {rank}: thread panicked mid-step; its ring peers saw the \
-                 disconnect and unwound (panic payload on stderr)"
-            );
+            return Err(RankFailure::ring(*rank, self.n).into());
         }
 
         let mut by_rank: Vec<Option<RankOutput>> = (0..self.n).map(|_| None).collect();

@@ -650,6 +650,9 @@ pub struct MetricsReport {
     pub kernel_ns: u64,
     /// Measured GPipe bubble fraction, when the trace has cell events.
     pub bubble: Option<f64>,
+    /// Elastic recoveries the trace covers (one `recovery` phase span is
+    /// recorded per re-carve by `exec::recovery`).
+    pub recoveries: u64,
 }
 
 /// Measured pipeline bubble fraction from GPipe cell events:
@@ -695,6 +698,7 @@ impl MetricsReport {
         let mut t_min = u64::MAX;
         let mut t_max = 0u64;
         let mut kernel_ns = 0u64;
+        let mut recoveries = 0u64;
         for e in events {
             t_min = t_min.min(e.t0_ns);
             t_max = t_max.max(e.t0_ns + e.dur_ns);
@@ -726,6 +730,9 @@ impl MetricsReport {
                     have_steps = true;
                     step_ns += e.dur_ns;
                 }
+                EventKind::Phase { name, .. } if *name == "recovery" => {
+                    recoveries += 1;
+                }
                 _ => {}
             }
         }
@@ -751,6 +758,7 @@ impl MetricsReport {
             kernels,
             kernel_ns,
             bubble: bubble_fraction(events),
+            recoveries,
         }
     }
 
@@ -802,6 +810,7 @@ impl MetricsReport {
             ("wall_ns", num(self.wall_ns as f64)),
             ("tokens_per_sec", num(self.tokens_per_sec)),
             ("kernel_ns", num(self.kernel_ns as f64)),
+            ("recoveries", num(self.recoveries as f64)),
             ("comm", Value::Obj(comm)),
             ("kernels_top", Value::Arr(kernels)),
             (
@@ -830,6 +839,9 @@ impl std::fmt::Display for MetricsReport {
         writeln!(f, "kernel time (all ranks): {:.3} ms", self.kernel_ns as f64 / 1e6)?;
         if let Some(b) = self.bubble {
             writeln!(f, "measured pipeline bubble: {b:.4}")?;
+        }
+        if self.recoveries > 0 {
+            writeln!(f, "elastic recoveries: {}", self.recoveries)?;
         }
         if let Some(eff) = self.overlap_efficiency() {
             writeln!(f, "comm overlap efficiency: {eff:.4}")?;

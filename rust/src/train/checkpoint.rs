@@ -1,16 +1,24 @@
-//! Checkpointing: save/restore parameters + Adam state + step counter.
+//! Checkpointing: save/restore parameters + Adam state + step counter +
+//! data-loader cursor.
 //!
 //! Layout (SPT1 tensors + a small JSON index):
 //!
 //! ```text
-//! <dir>/checkpoint.json        {"step": N, "params": [names...]}
+//! <dir>/checkpoint.json        {"step": N, "data_cursor": D, "params": [names...]}
 //! <dir>/params/<name>.tensor
 //! <dir>/adam_m/<name>.tensor
 //! <dir>/adam_v/<name>.tensor
 //! ```
 //!
 //! Engines are stateless, so a checkpoint fully determines the run; the
-//! resume test asserts bit-identical continuation.
+//! resume test asserts bit-identical continuation.  `data_cursor` is the
+//! number of batches the data loader had already produced — without it a
+//! mid-epoch resume would restart the batch stream from the epoch head and
+//! silently retrain on consumed data.
+//!
+//! [`Checkpoint::capture`] / [`Checkpoint::unpack`] form the in-memory
+//! save/load path: elastic recovery (exec::recovery) snapshots and restores
+//! training state through the same struct without a disk round-trip.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -19,14 +27,45 @@ use anyhow::{bail, Context, Result};
 
 use crate::model::params::ParamStore;
 use crate::tensor::io;
+use crate::train::optim::Adam;
 use crate::util::json::{self, Value};
 
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub struct Checkpoint {
     pub step: u64,
     pub params: ParamStore,
     pub adam_m: ParamStore,
     pub adam_v: ParamStore,
+    /// Batches the data loader had produced when this checkpoint was taken.
+    pub data_cursor: u64,
+}
+
+impl Checkpoint {
+    /// In-memory save: snapshot the full training state (params, Adam
+    /// moments, step, data cursor) without touching disk.  `save()` on the
+    /// result produces exactly the on-disk layout; recovery skips that.
+    pub fn capture(
+        step: u64,
+        params: &ParamStore,
+        adam: &Adam,
+        data_cursor: u64,
+    ) -> Checkpoint {
+        let (m, v, _t) = adam.state();
+        Checkpoint {
+            step,
+            params: params.clone(),
+            adam_m: m.clone(),
+            adam_v: v.clone(),
+            data_cursor,
+        }
+    }
+
+    /// In-memory load: split the checkpoint back into live training state.
+    /// The Adam step count is restored from `step` (the trainer advances
+    /// them in lockstep, which `capture` relies on too).
+    pub fn unpack(self) -> (ParamStore, ParamStore, ParamStore, u64, u64) {
+        (self.params, self.adam_m, self.adam_v, self.step, self.data_cursor)
+    }
 }
 
 fn save_store(dir: &Path, sub: &str, store: &ParamStore) -> Result<()> {
@@ -56,6 +95,7 @@ pub fn save(dir: &Path, ckpt: &Checkpoint) -> Result<()> {
     save_store(dir, "adam_v", &ckpt.adam_v)?;
     let mut obj = BTreeMap::new();
     obj.insert("step".to_string(), Value::Num(ckpt.step as f64));
+    obj.insert("data_cursor".to_string(), Value::Num(ckpt.data_cursor as f64));
     obj.insert(
         "params".to_string(),
         Value::Arr(
@@ -78,6 +118,9 @@ pub fn load(dir: &Path) -> Result<Checkpoint> {
         .req("step")?
         .as_f64()
         .ok_or_else(|| anyhow::anyhow!("bad step"))? as u64;
+    // absent in pre-cursor checkpoints: those were only ever taken at epoch
+    // boundaries in spirit, so resume-from-stream-head is the best reading
+    let data_cursor = v.get("data_cursor").and_then(Value::as_f64).unwrap_or(0.0) as u64;
     let names: Vec<String> = v
         .req("params")?
         .as_arr()
@@ -97,6 +140,7 @@ pub fn load(dir: &Path) -> Result<Checkpoint> {
         params: load_store(dir, "params", &names)?,
         adam_m: load_store(dir, "adam_m", &names)?,
         adam_v: load_store(dir, "adam_v", &names)?,
+        data_cursor,
     })
 }
 
@@ -123,13 +167,37 @@ mod tests {
             params: store(1),
             adam_m: store(2),
             adam_v: store(3),
+            data_cursor: 17,
         };
         save(&dir, &ckpt).unwrap();
         let back = load(&dir).unwrap();
         assert_eq!(back.step, 42);
+        assert_eq!(back.data_cursor, 17);
         assert_eq!(back.params.values, ckpt.params.values);
         assert_eq!(back.adam_m.values, ckpt.adam_m.values);
         assert_eq!(back.adam_v.values, ckpt.adam_v.values);
+    }
+
+    #[test]
+    fn pre_cursor_checkpoints_default_to_zero() {
+        // a checkpoint written before data_cursor existed must still load
+        let dir = std::env::temp_dir().join("seqpar_ckpt_legacy");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ckpt = Checkpoint {
+            step: 3,
+            params: store(1),
+            adam_m: store(2),
+            adam_v: store(3),
+            data_cursor: 99,
+        };
+        save(&dir, &ckpt).unwrap();
+        let text = std::fs::read_to_string(dir.join("checkpoint.json")).unwrap();
+        let stripped = text.replace("\"data_cursor\":99,", "");
+        assert_ne!(stripped, text, "fixture must actually drop the field");
+        std::fs::write(dir.join("checkpoint.json"), stripped).unwrap();
+        let back = load(&dir).unwrap();
+        assert_eq!(back.data_cursor, 0);
+        assert_eq!(back.step, 3);
     }
 
     #[test]
@@ -142,7 +210,13 @@ mod tests {
     fn dotted_names_are_file_safe() {
         let dir = std::env::temp_dir().join("seqpar_ckpt_dots");
         let _ = std::fs::remove_dir_all(&dir);
-        let ckpt = Checkpoint { step: 0, params: store(5), adam_m: store(6), adam_v: store(7) };
+        let ckpt = Checkpoint {
+            step: 0,
+            params: store(5),
+            adam_m: store(6),
+            adam_v: store(7),
+            data_cursor: 0,
+        };
         save(&dir, &ckpt).unwrap();
         assert!(dir.join("params/layer0_wq.tensor").exists());
         assert!(load(&dir).is_ok());

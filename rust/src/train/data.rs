@@ -50,12 +50,33 @@ pub struct Corpus {
     cfg: CorpusConfig,
     rng: Rng,
     harm: f64,
+    /// Batches drawn so far — the data-loader cursor.  The stream is a pure
+    /// function of (cfg, seed), so (seed, drawn) fully addresses a position:
+    /// a checkpoint stores `drawn` and resume replays that many draws.
+    drawn: u64,
 }
 
 impl Corpus {
     pub fn new(cfg: CorpusConfig, seed: u64) -> Corpus {
         let harm = harmonic(cfg.vocab - N_SPECIAL as usize, cfg.zipf_s);
-        Corpus { cfg, rng: Rng::new(seed), harm }
+        Corpus { cfg, rng: Rng::new(seed), harm, drawn: 0 }
+    }
+
+    /// Rebuild a corpus positioned `cursor` batches into the stream by
+    /// replaying the draws from a fresh seed.  O(cursor) but exact: the
+    /// resumed stream continues with the same remaining batches the
+    /// original would have produced (no epoch restart).
+    pub fn at_cursor(cfg: CorpusConfig, seed: u64, cursor: u64) -> Result<Corpus> {
+        let mut c = Corpus::new(cfg, seed);
+        for _ in 0..cursor {
+            c.next_batch()?;
+        }
+        Ok(c)
+    }
+
+    /// The data-loader cursor: how many batches this corpus has produced.
+    pub fn drawn(&self) -> u64 {
+        self.drawn
     }
 
     fn sample_token(&mut self, prev: i32) -> i32 {
@@ -136,6 +157,7 @@ impl Corpus {
             }
             ids.extend_from_slice(&seq);
         }
+        self.drawn += 1;
         Ok(Batch {
             ids: Tensor::from_i32(&[b, l], ids)?,
             labels: Tensor::from_i32(&[b, l], labels)?,
@@ -208,6 +230,25 @@ mod tests {
         let mut a = corpus();
         let mut b = corpus();
         assert_eq!(a.next_batch().unwrap().ids, b.next_batch().unwrap().ids);
+    }
+
+    #[test]
+    fn at_cursor_resumes_the_stream_exactly() {
+        let mut full = corpus();
+        for _ in 0..5 {
+            full.next_batch().unwrap();
+        }
+        assert_eq!(full.drawn(), 5);
+        let mut resumed =
+            Corpus::at_cursor(CorpusConfig::new(1024, 64, 4), 42, 5).unwrap();
+        assert_eq!(resumed.drawn(), 5);
+        for _ in 0..3 {
+            let a = full.next_batch().unwrap();
+            let b = resumed.next_batch().unwrap();
+            assert_eq!(a.ids, b.ids);
+            assert_eq!(a.labels, b.labels);
+            assert_eq!(a.sop_labels, b.sop_labels);
+        }
     }
 
     #[test]

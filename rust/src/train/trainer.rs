@@ -37,9 +37,10 @@ pub struct LogPoint {
 }
 
 /// Shared per-step epilogue for both loops: build the [`LogPoint`], log
-/// on the configured cadence, and record it on the curve.
+/// on the configured cadence, and record it on the curve.  Also used by
+/// `exec::recovery`'s elastic loop so recovered runs log identically.
 #[allow(clippy::too_many_arguments)]
-fn record_step(
+pub(crate) fn record_step(
     name: &str,
     cfg: &TrainConfig,
     curve: &mut Vec<LogPoint>,

@@ -4,9 +4,12 @@
 //! deps, so the conveniences a networked project would pull from crates.io
 //! are implemented here: a JSON parser ([`json`]), a CLI argument parser
 //! ([`cli`]), a deterministic PRNG ([`rng`]), and a miniature
-//! property-testing harness ([`prop`]) standing in for proptest.
+//! property-testing harness ([`prop`]) standing in for proptest, plus a
+//! deterministic training-state fingerprint ([`state_hash`]) used by the
+//! checkpoint-resume and chaos-recovery equivalence tests.
 
 pub mod cli;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod state_hash;

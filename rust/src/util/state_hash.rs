@@ -1,0 +1,173 @@
+//! Deterministic training-state hash.
+//!
+//! One `u64` fingerprint over (params, grads, optimizer moments, data
+//! cursor): the chaos suite's "recovered == clean" contract and the
+//! checkpoint-resume tests compare a single pinned hash per scenario
+//! instead of ad-hoc per-tensor loops.  The hash is FNV-1a over a
+//! canonical byte stream — sorted parameter names, shapes, and raw
+//! little-endian element bits — so equal hashes mean bit-identical state,
+//! not merely approximately-equal state.
+//!
+//! Not a cryptographic hash and not portable across dtype layout changes;
+//! it only needs to be deterministic within one build, which is all the
+//! equivalence tests require.
+
+use crate::model::params::ParamStore;
+use crate::tensor::{TData, Tensor};
+use crate::train::optim::Adam;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental FNV-1a hasher over a canonical byte stream.
+#[derive(Clone, Copy, Debug)]
+pub struct StateHash(u64);
+
+impl Default for StateHash {
+    fn default() -> Self {
+        StateHash::new()
+    }
+}
+
+impl StateHash {
+    pub fn new() -> StateHash {
+        StateHash(FNV_OFFSET)
+    }
+
+    pub fn bytes(&mut self, data: &[u8]) -> &mut Self {
+        for &b in data {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+        self
+    }
+
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.bytes(&v.to_le_bytes())
+    }
+
+    pub fn str(&mut self, s: &str) -> &mut Self {
+        // length prefix keeps ("ab","c") distinct from ("a","bc")
+        self.u64(s.len() as u64);
+        self.bytes(s.as_bytes())
+    }
+
+    pub fn tensor(&mut self, t: &Tensor) -> &mut Self {
+        self.u64(t.shape.len() as u64);
+        for &d in &t.shape {
+            self.u64(d as u64);
+        }
+        match &t.data {
+            TData::F32(v) => {
+                self.u64(0);
+                for x in v {
+                    self.bytes(&x.to_bits().to_le_bytes());
+                }
+            }
+            TData::I32(v) => {
+                self.u64(1);
+                for x in v {
+                    self.bytes(&x.to_le_bytes());
+                }
+            }
+        }
+        self
+    }
+
+    /// Hash a whole store under a label.  BTreeMap iteration is already
+    /// name-sorted, so the stream is canonical.
+    pub fn store(&mut self, label: &str, s: &ParamStore) -> &mut Self {
+        self.str(label);
+        self.u64(s.values.len() as u64);
+        for (name, t) in &s.values {
+            self.str(name);
+            self.tensor(t);
+        }
+        self
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// The canonical training-state fingerprint: params + Adam moments + Adam
+/// step + data-loader cursor.  Two runs with equal hashes here will produce
+/// bit-identical futures (engines are stateless; this is the whole state).
+pub fn train_state_hash(params: &ParamStore, adam: &Adam, data_cursor: u64) -> u64 {
+    let (m, v, t) = adam.state();
+    let mut h = StateHash::new();
+    h.store("params", params)
+        .store("adam_m", m)
+        .store("adam_v", v)
+        .u64(t)
+        .u64(data_cursor);
+    h.finish()
+}
+
+/// Fingerprint of raw stores (params / moments already split out of an
+/// optimizer, e.g. from a loaded checkpoint) plus scalar cursors.
+pub fn stores_hash(stores: &[(&str, &ParamStore)], scalars: &[u64]) -> u64 {
+    let mut h = StateHash::new();
+    for (label, s) in stores {
+        h.store(label, s);
+    }
+    for &v in scalars {
+        h.u64(v);
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn store(seed: u64) -> ParamStore {
+        let mut rng = Rng::new(seed);
+        let mut s = ParamStore::default();
+        s.values
+            .insert("a.w".into(), Tensor::randn(&[4, 4], 0.1, &mut rng));
+        s.values
+            .insert("b".into(), Tensor::randn(&[4], 0.1, &mut rng));
+        s
+    }
+
+    #[test]
+    fn equal_state_equal_hash() {
+        let a = stores_hash(&[("p", &store(7))], &[3]);
+        let b = stores_hash(&[("p", &store(7))], &[3]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn any_perturbation_changes_the_hash() {
+        let base = stores_hash(&[("p", &store(7))], &[3]);
+        // different values
+        assert_ne!(base, stores_hash(&[("p", &store(8))], &[3]));
+        // different scalar cursor
+        assert_ne!(base, stores_hash(&[("p", &store(7))], &[4]));
+        // different label
+        assert_ne!(base, stores_hash(&[("q", &store(7))], &[3]));
+        // single-element bit flip
+        let mut s = store(7);
+        if let TData::F32(v) = &mut s.values.get_mut("a.w").unwrap().data {
+            v[5] += 1e-7;
+        }
+        assert_ne!(base, stores_hash(&[("p", &s)], &[3]));
+    }
+
+    #[test]
+    fn shape_is_part_of_the_identity() {
+        let mut flat = ParamStore::default();
+        flat.values
+            .insert("w".into(), Tensor::from_f32(&[4], vec![1.0; 4]).unwrap());
+        let mut sq = ParamStore::default();
+        sq.values
+            .insert("w".into(), Tensor::from_f32(&[2, 2], vec![1.0; 4]).unwrap());
+        assert_ne!(
+            stores_hash(&[("p", &flat)], &[]),
+            stores_hash(&[("p", &sq)], &[])
+        );
+    }
+}

@@ -1,0 +1,388 @@
+//! Chaos property-fuzz suite for elastic recovery (`exec::recovery`).
+//!
+//! The contract under test: a run that loses a rank mid-step, re-carves
+//! the surviving world and resumes MUST be equivalent to checkpointing
+//! at the failed step and cleanly resuming on the re-carved topology —
+//! same losses (1e-4), same gradients (1e-4), same optimizer state, the
+//! same training-state fingerprint down to the bit
+//! (`util::state_hash::train_state_hash`), and byte-for-byte comm-meter
+//! parity on the post-recovery steps.
+//!
+//! Cases are fuzzed over (failure step × mesh factorization × SP
+//! strategy × attention pattern × overlap) from a deterministic seed.
+//! `CHAOS_CASES` / `CHAOS_SEED` env vars override the sweep size and
+//! seed (the CI chaos job runs the fixed default plus a small
+//! randomized sweep); failures print the case for replay.
+
+use seqpar::attn::AttnPattern;
+use seqpar::exec::{Elastic, ElasticConfig, ElasticOutcome, RankFailure, RecoverPolicy, Topo};
+use seqpar::model::BERT_TINY_Z4;
+use seqpar::parallel::sequence::SpStrategy;
+use seqpar::parallel::topology::{Mesh, MpKind};
+use seqpar::tensor::ops;
+use seqpar::train::checkpoint::{self, Checkpoint};
+use seqpar::train::trainer::TrainConfig;
+use seqpar::util::prop::{pick, Prop};
+use seqpar::util::rng::Rng;
+use seqpar::util::state_hash::train_state_hash;
+
+const TOL: f32 = 1e-4;
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// One fuzzed chaos case — everything needed to reproduce it is in the
+/// Debug print the assertions carry.
+#[derive(Clone, Copy, Debug)]
+struct Case {
+    topo: Topo,
+    pattern: AttnPattern,
+    sp: SpStrategy,
+    overlap: bool,
+    steps: u64,
+    fail_step: u64,
+    fail_rank: usize,
+}
+
+impl Case {
+    fn config(&self) -> ElasticConfig {
+        ElasticConfig {
+            // 4 heads: admits ulysses at every ring/mp size drawn below
+            model: BERT_TINY_Z4,
+            batch: 2,
+            seq_len: 32,
+            pattern: self.pattern,
+            sp: self.sp,
+            overlap: self.overlap,
+            policy: RecoverPolicy::Reshard,
+            data_seed: 7,
+            init_seed: 0,
+            train: TrainConfig {
+                steps: self.steps,
+                warmup: 1,
+                peak_lr: 1e-3,
+                log_every: 1, // log every step: the curves are compared
+            },
+            topo: self.topo,
+            quiet: true,
+        }
+    }
+}
+
+fn draw_case(rng: &mut Rng) -> Case {
+    // strategy first: ulysses pins the pattern to dense
+    let sp = *pick(rng, &[SpStrategy::Ring, SpStrategy::Ulysses]);
+    let on_mesh = rng.below(2) == 1;
+    let pattern = if on_mesh || !sp.is_ring() {
+        // the mesh runners and the ulysses schedule are dense-only
+        AttnPattern::Dense
+    } else {
+        *pick(
+            rng,
+            &[AttnPattern::Dense, AttnPattern::Linformer { k: 8 }, AttnPattern::Block { w: 8 }],
+        )
+    };
+    let topo = if on_mesh {
+        let (dp, pp, mp) = *pick(rng, &[(2, 1, 2), (1, 2, 2), (1, 1, 4), (2, 2, 2)]);
+        let micros = 1 + rng.below(2) as usize;
+        Topo::Mesh { mesh: Mesh::new(dp, pp, mp, MpKind::Sequence).unwrap(), micros }
+    } else {
+        Topo::Flat { n: *pick(rng, &[2usize, 4]) }
+    };
+    let steps = 3 + rng.below(3); // 3..=5 optimizer steps
+    Case {
+        topo,
+        pattern,
+        sp,
+        overlap: rng.below(2) == 1,
+        steps,
+        fail_step: rng.below(steps),
+        fail_rank: rng.below(topo.world() as u64) as usize,
+    }
+}
+
+/// Run the faulty leg, then the clean leg from the recovery checkpoint,
+/// and hold the recovered==clean contract between them.
+fn check_recovery(case: &Case) -> Result<(), String> {
+    let tag = format!("{case:?}");
+    let cfg = case.config();
+
+    // faulty leg: inject the fault, recover, run to completion
+    let faulty: ElasticOutcome = Elastic::new(cfg)
+        .fault_at(case.fail_step, case.fail_rank)
+        .run()
+        .map_err(|e| format!("{tag}: faulty leg failed: {e:#}"))?;
+    if faulty.recoveries.len() != 1 {
+        return Err(format!("{tag}: expected 1 recovery, saw {}", faulty.recoveries.len()));
+    }
+    let event = &faulty.recoveries[0];
+    if event.step != case.fail_step || event.failed_rank != case.fail_rank {
+        return Err(format!("{tag}: recovery event mismatch: {event}"));
+    }
+    if event.old_world != case.topo.world() || event.new_world != faulty.final_topo.world() {
+        return Err(format!("{tag}: recovery event worlds mismatch: {event}"));
+    }
+    if faulty.final_topo.world() >= case.topo.world() {
+        return Err(format!(
+            "{tag}: re-carve did not shrink the world ({} -> {})",
+            case.topo.world(),
+            faulty.final_topo.world()
+        ));
+    }
+    let ckpt = faulty.checkpoints[0].clone();
+    if ckpt.step != case.fail_step {
+        return Err(format!("{tag}: checkpoint at step {}, not {}", ckpt.step, case.fail_step));
+    }
+
+    // clean leg: resume from the same checkpoint on the re-carved
+    // topology — no faults, same total step budget
+    let mut clean_cfg = cfg;
+    clean_cfg.topo = faulty.final_topo;
+    let clean: ElasticOutcome = Elastic::new(clean_cfg)
+        .resume_from(ckpt)
+        .run()
+        .map_err(|e| format!("{tag}: clean leg failed: {e:#}"))?;
+    if !clean.recoveries.is_empty() {
+        return Err(format!("{tag}: clean leg recovered?"));
+    }
+
+    // losses: the faulty curve from the failed step on == the clean curve
+    let suffix: Vec<_> = faulty.curve.iter().filter(|p| p.step >= case.fail_step).collect();
+    if suffix.len() != clean.curve.len() {
+        return Err(format!(
+            "{tag}: curve suffix {} points vs clean {}",
+            suffix.len(),
+            clean.curve.len()
+        ));
+    }
+    for (f, c) in suffix.iter().zip(&clean.curve) {
+        if f.step != c.step {
+            return Err(format!("{tag}: curve step {} vs {}", f.step, c.step));
+        }
+        for (name, a, b) in
+            [("loss", f.loss, c.loss), ("mlm", f.mlm, c.mlm), ("sop", f.sop, c.sop)]
+        {
+            if (a - b).abs() > TOL {
+                return Err(format!("{tag}: step {} {name} {a} vs clean {b}", f.step));
+            }
+        }
+    }
+
+    // gradients of the final step: every tensor within tolerance
+    let (fg, cg) = match (&faulty.last_grads, &clean.last_grads) {
+        (Some(f), Some(c)) => (f, c),
+        _ => return Err(format!("{tag}: a leg finished without gradients")),
+    };
+    for (name, g) in &cg.values {
+        let d = ops::max_abs_diff(&fg.values[name], g).map_err(|e| format!("{tag}: {e}"))?;
+        if d > TOL {
+            return Err(format!("{tag}: final grad {name} diverged, Δ={d}"));
+        }
+    }
+
+    // params + optimizer moments within tolerance...
+    for (store_tag, a, b) in [
+        ("param", &faulty.params, &clean.params),
+        ("adam_m", faulty.adam.state().0, clean.adam.state().0),
+        ("adam_v", faulty.adam.state().1, clean.adam.state().1),
+    ] {
+        for (name, t) in &b.values {
+            let d = ops::max_abs_diff(&a.values[name], t).map_err(|e| format!("{tag}: {e}"))?;
+            if d > TOL {
+                return Err(format!("{tag}: final {store_tag} {name} diverged, Δ={d}"));
+            }
+        }
+    }
+    // ...and in fact identical to the bit, data cursor included: both
+    // legs executed the same dataflow from the same state
+    if faulty.cursor != clean.cursor {
+        return Err(format!("{tag}: cursor {} vs clean {}", faulty.cursor, clean.cursor));
+    }
+    let fh = train_state_hash(&faulty.params, &faulty.adam, faulty.cursor);
+    let ch = train_state_hash(&clean.params, &clean.adam, clean.cursor);
+    if fh != ch {
+        return Err(format!("{tag}: state hash {fh:#x} vs clean {ch:#x}"));
+    }
+
+    // byte-for-byte meter parity on the post-recovery steps (the faulty
+    // leg's meter restarts at the re-carve for exactly this comparison)
+    if faulty.post_meter != clean.post_meter {
+        return Err(format!(
+            "{tag}: post-recovery meters differ: {:?} vs {:?}",
+            faulty.post_meter, clean.post_meter
+        ));
+    }
+    Ok(())
+}
+
+/// The fixed cornerstone cases, always run: one flat ring and one
+/// pipelined mesh, fault mid-run.
+#[test]
+fn recovered_equals_clean_flat_ring_fixed_case() {
+    check_recovery(&Case {
+        topo: Topo::Flat { n: 4 },
+        pattern: AttnPattern::Dense,
+        sp: SpStrategy::Ring,
+        overlap: false,
+        steps: 4,
+        fail_step: 1,
+        fail_rank: 2,
+    })
+    .unwrap();
+}
+
+#[test]
+fn recovered_equals_clean_mesh_fixed_case() {
+    check_recovery(&Case {
+        topo: Topo::Mesh { mesh: Mesh::new(2, 1, 2, MpKind::Sequence).unwrap(), micros: 2 },
+        pattern: AttnPattern::Dense,
+        sp: SpStrategy::Ring,
+        overlap: true,
+        steps: 4,
+        fail_step: 2,
+        fail_rank: 1,
+    })
+    .unwrap();
+}
+
+/// A failure at step 0 recovers from pristine state (the checkpoint is
+/// the init itself); ulysses re-carves under its head cap.
+#[test]
+fn recovered_equals_clean_ulysses_failure_at_step_zero() {
+    check_recovery(&Case {
+        topo: Topo::Flat { n: 4 },
+        pattern: AttnPattern::Dense,
+        sp: SpStrategy::Ulysses,
+        overlap: false,
+        steps: 3,
+        fail_step: 0,
+        fail_rank: 0,
+    })
+    .unwrap();
+}
+
+/// The randomized sweep: (failure step × factorization × SP strategy ×
+/// pattern × overlap) from a deterministic seed.  CHAOS_CASES /
+/// CHAOS_SEED override; each failed case prints its full Case for
+/// replay.
+#[test]
+fn recovered_equals_clean_fuzzed() {
+    let cases = env_u64("CHAOS_CASES", 4) as usize;
+    let seed = env_u64("CHAOS_SEED", 0xc4a0_5001);
+    Prop::new(cases, seed).check("recovered == clean resume", |rng| {
+        let case = draw_case(rng);
+        check_recovery(&case)
+    });
+}
+
+/// `--recover none` (the default policy): the injected failure must
+/// surface as the typed, contextful PR-9 report — dead rank named, no
+/// hang, downcastable `RankFailure` — and NOT trigger a re-carve.
+#[test]
+fn recover_none_propagates_the_contextful_failure() {
+    for topo in [
+        Topo::Flat { n: 4 },
+        Topo::Mesh { mesh: Mesh::new(2, 1, 2, MpKind::Sequence).unwrap(), micros: 1 },
+    ] {
+        let case = Case {
+            topo,
+            pattern: AttnPattern::Dense,
+            sp: SpStrategy::Ring,
+            overlap: false,
+            steps: 3,
+            fail_step: 1,
+            fail_rank: 1,
+        };
+        let mut cfg = case.config();
+        cfg.policy = RecoverPolicy::None;
+        let err = Elastic::new(cfg)
+            .fault_at(case.fail_step, case.fail_rank)
+            .run()
+            .err()
+            .expect("policy none must propagate the failure, not recover");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("rank 1"), "must name the dead rank: {msg}");
+        assert!(msg.contains("panicked"), "must say the rank panicked: {msg}");
+        let failure = err
+            .downcast_ref::<RankFailure>()
+            .expect("the propagated error must stay downcastable");
+        assert_eq!(failure.rank, 1);
+        assert_eq!(failure.world, case.topo.world());
+    }
+}
+
+/// A fault aimed past the end of the run (or at a rank outside the
+/// world) never fires: the run completes cleanly with zero recoveries.
+#[test]
+fn unfired_faults_leave_the_run_untouched() {
+    let case = Case {
+        topo: Topo::Flat { n: 2 },
+        pattern: AttnPattern::Dense,
+        sp: SpStrategy::Ring,
+        overlap: false,
+        steps: 2,
+        fail_step: 0,
+        fail_rank: 0,
+    };
+    let out = Elastic::new(case.config())
+        .fault_at(99, 0) // past the end
+        .fault_at(0, 7) // rank outside the 2-rank world
+        .run()
+        .unwrap();
+    assert!(out.recoveries.is_empty(), "no fault fired, nothing to recover");
+    assert_eq!(out.curve.len(), 2);
+}
+
+/// Mid-epoch resume equivalence through the DISK checkpoint path: run A
+/// trains 4 uninterrupted steps; run B trains 2 steps, saves a
+/// checkpoint (data cursor included), reloads it, and trains the
+/// remaining 2.  Final state hashes must agree — this is the regression
+/// test for the data-loader cursor that checkpoints previously dropped
+/// (a resumed run would silently replay the epoch from batch 0).
+#[test]
+fn mid_epoch_disk_resume_matches_uninterrupted_run() {
+    let case = Case {
+        topo: Topo::Flat { n: 4 },
+        pattern: AttnPattern::Dense,
+        sp: SpStrategy::Ring,
+        overlap: false,
+        steps: 4,
+        fail_step: 0, // unused: no fault is injected below
+        fail_rank: 0,
+    };
+    let cfg = case.config();
+
+    // leg A: uninterrupted
+    let a = Elastic::new(cfg).run().unwrap();
+
+    // leg B: stop after 2 steps...
+    let mut half = cfg;
+    half.train.steps = 2;
+    let b1 = Elastic::new(half).run().unwrap();
+    assert_eq!(b1.cursor, 2, "flat topology draws one batch per step");
+
+    // ...checkpoint to disk, cursor included...
+    let dir = std::env::temp_dir().join("seqpar_chaos_mid_epoch_resume");
+    let _ = std::fs::remove_dir_all(&dir);
+    let ck = Checkpoint::capture(2, &b1.params, &b1.adam, b1.cursor);
+    checkpoint::save(&dir, &ck).unwrap();
+    let loaded = checkpoint::load(&dir).unwrap();
+    assert_eq!(loaded.data_cursor, 2, "cursor lost in the disk round-trip");
+
+    // ...and resume to the full 4 steps
+    let b2 = Elastic::new(cfg).resume_from(loaded).run().unwrap();
+
+    assert_eq!(
+        train_state_hash(&a.params, &a.adam, a.cursor),
+        train_state_hash(&b2.params, &b2.adam, b2.cursor),
+        "mid-epoch disk resume diverged from the uninterrupted run"
+    );
+    // the resumed curve is the uninterrupted curve's suffix
+    let a_suffix: Vec<_> = a.curve.iter().filter(|p| p.step >= 2).collect();
+    assert_eq!(a_suffix.len(), b2.curve.len());
+    for (x, y) in a_suffix.iter().zip(&b2.curve) {
+        assert_eq!(x.step, y.step);
+        assert!((x.loss - y.loss).abs() <= TOL, "step {}: {} vs {}", x.step, x.loss, y.loss);
+    }
+}

@@ -15,7 +15,7 @@
 use seqpar::attn::AttnPattern;
 use seqpar::backend::native::NativeConfig;
 use seqpar::comm::{CommKind, Fabric, Meter};
-use seqpar::exec::DistRunner;
+use seqpar::exec::{DistRunner, RankFailure};
 use seqpar::model::params::ParamStore;
 use seqpar::model::BERT_TINY_Z4;
 use seqpar::obs;
@@ -753,6 +753,55 @@ fn rank_panic_is_reported_not_hung() {
             msg.contains("panicked"),
             "overlap={overlap}: error must say the rank panicked: {msg}"
         );
+    }
+}
+
+/// The failure contract holds under every step schedule, not just the
+/// dense ring: Linformer (all-reduce mid-flight), block-sparse (rings
+/// with skipped hops), and Ulysses (all-to-alls mid-flight), each with
+/// overlap on and off.  In every case the peers of the dead rank see the
+/// disconnect, the join reports rank 2 by number, and the error carries
+/// the typed `RankFailure` the elastic driver downcasts for.
+#[test]
+fn rank_panic_is_reported_under_every_schedule() {
+    let n = 4;
+    let cases: [(AttnPattern, SpStrategy); 3] = [
+        (AttnPattern::Linformer { k: 8 }, SpStrategy::Ring),
+        (AttnPattern::Block { w: 8 }, SpStrategy::Ring),
+        (AttnPattern::Dense, SpStrategy::Ulysses),
+    ];
+    for (pattern, sp) in cases {
+        for overlap in [false, true] {
+            let tag = format!("attn={} sp={} overlap={overlap}", pattern.label(), sp.label());
+            let (linformer_k, block_w) = pattern.native_knobs();
+            // ulysses shards whole heads: the 4-head tiny variant admits n=4
+            let rt = Runtime::native(NativeConfig {
+                model: BERT_TINY_Z4,
+                ring: n,
+                linformer_k,
+                block_w,
+                ulysses: !sp.is_ring(),
+                ..NativeConfig::tiny()
+            })
+            .unwrap();
+            let params = ParamStore::synthetic(rt.manifest());
+            let batch = batch_for(&rt, 67);
+            let mut dist = DistRunner::with_strategy(&rt, Meter::new(), pattern, sp)
+                .unwrap()
+                .overlap(overlap);
+            dist.inject_fault(2);
+            let err = dist
+                .forward_backward(&params, &batch)
+                .err()
+                .unwrap_or_else(|| panic!("{tag}: a dead rank must fail the step, not hang it"));
+            let msg = format!("{err:#}");
+            assert!(msg.contains("rank 2"), "{tag}: error must name the dead rank: {msg}");
+            assert!(msg.contains("panicked"), "{tag}: error must say it panicked: {msg}");
+            let failure = err
+                .downcast_ref::<RankFailure>()
+                .unwrap_or_else(|| panic!("{tag}: error must downcast to RankFailure"));
+            assert_eq!((failure.rank, failure.world, failure.on_mesh), (2, n, false), "{tag}");
+        }
     }
 }
 

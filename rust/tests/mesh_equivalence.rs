@@ -27,15 +27,16 @@ use seqpar::backend::native::NativeConfig;
 use seqpar::comm::{CommKind, Fabric, Meter};
 use seqpar::exec::{DistRunner, MeshEngine, MeshOutput, MeshRunner, MeshStep};
 use seqpar::model::params::ParamStore;
-use seqpar::parallel::sequence::SeqParEngine;
 use seqpar::parallel::tensorp::TensorParEngine;
 use seqpar::parallel::topology::{Mesh, MpKind};
 use seqpar::parallel::{Batch, Engine};
 use seqpar::runtime::Runtime;
 use seqpar::tensor::ops;
+use seqpar::parallel::sequence::{SeqParEngine, SpStrategy};
 use seqpar::train::checkpoint::{self, Checkpoint};
 use seqpar::train::data::{Corpus, CorpusConfig};
 use seqpar::train::optim::{Adam, AdamConfig};
+use seqpar::util::state_hash::train_state_hash;
 
 const TOL: f32 = 1e-4;
 
@@ -342,6 +343,37 @@ fn mesh_rank_panic_is_reported_not_hung() {
     assert!(msg.contains("panicked"), "error must say the rank panicked: {msg}");
 }
 
+/// Same contract under the Ulysses SP strategy, overlap on and off: a
+/// rank dying with all-to-alls mid-flight inside its mp group must
+/// surface as the contextful disconnect report, not a hang — the a2a
+/// exchange partners block on recvs the dead rank will never serve.
+#[test]
+fn mesh_ulysses_rank_panic_is_reported_not_hung() {
+    for overlap in [false, true] {
+        let mesh = Mesh::new(2, 1, 2, MpKind::Sequence).unwrap();
+        // bert-tiny has 2 heads: mp=2 divides them, so the backend lowers
+        // the head-shard a2a kernels on the sequence axis
+        let rt = Runtime::native(NativeConfig {
+            ulysses: true,
+            ..NativeConfig::tiny().for_mesh(&mesh)
+        })
+        .unwrap();
+        let params = ParamStore::synthetic(rt.manifest());
+        let batches = batches_for(&rt, 2, 1, 103);
+        let mut run = MeshRunner::with_strategy(&rt, mesh, 1, Meter::new(), SpStrategy::Ulysses)
+            .unwrap()
+            .overlap(overlap);
+        run.inject_fault(1);
+        let err = run
+            .step(&params, &batches)
+            .err()
+            .expect("a dead mesh rank must fail the ulysses step, not hang it");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("rank 1"), "overlap={overlap}: must name the dead rank: {msg}");
+        assert!(msg.contains("panicked"), "overlap={overlap}: must say it panicked: {msg}");
+    }
+}
+
 /// The §3.2.2 stage-boundary claim, measured: at equal mesh shape, SP
 /// boundaries move strictly fewer bytes than the TP baseline — SP sends
 /// its already-split chunk (Pipeline only), TP pays scatter + all-gather
@@ -416,11 +448,21 @@ fn checkpoint_roundtrip_across_mesh_factorizations() {
     let dir = std::env::temp_dir().join("seqpar_mesh_ckpt_roundtrip");
     let _ = std::fs::remove_dir_all(&dir);
     let (am, av, at) = adam.state();
+    // the corpus fed 2 steps × dp(2) × micros(2) = 8 batches so far
     checkpoint::save(
         &dir,
-        &Checkpoint { step: at, params: params.clone(), adam_m: am.clone(), adam_v: av.clone() },
+        &Checkpoint {
+            step: at,
+            params: params.clone(),
+            adam_m: am.clone(),
+            adam_v: av.clone(),
+            data_cursor: 8,
+        },
     )
     .unwrap();
+    // one number certifies params + both Adam moments + the cursor —
+    // taken now, before either continuation advances the live state
+    let live_hash = train_state_hash(&params, &adam, 8);
 
     // step k+1 on mesh B — shared batch for both continuations
     let b_batches = step_batches(mesh_b.dp);
@@ -433,11 +475,18 @@ fn checkpoint_roundtrip_across_mesh_factorizations() {
     // path 2: restore from disk, then the same step
     let ck = checkpoint::load(&dir).unwrap();
     assert_eq!(ck.step, 2);
+    assert_eq!(ck.data_cursor, 8, "data-loader cursor lost in the round-trip");
     let mut params_disk = ck.params;
     for (name, t) in &params.values {
         assert_eq!(t, &params_disk.values[name], "restored param {name} differs");
     }
     let mut adam_disk = Adam::from_state(AdamConfig::default(), ck.adam_m, ck.adam_v, ck.step);
+    // the restored training state is the save-time state, to the bit
+    assert_eq!(
+        live_hash,
+        train_state_hash(&params_disk, &adam_disk, ck.data_cursor),
+        "restored state hash differs from the live state at save time"
+    );
     let out = runner_b.step(&params_disk, &b_batches).unwrap();
     adam_disk.step(&mut params_disk, &out.grads, 1e-3).unwrap();
 
@@ -447,6 +496,13 @@ fn checkpoint_roundtrip_across_mesh_factorizations() {
             "param {name} not bitwise identical after the cross-mesh resume"
         );
     }
+    // and the full post-step state agrees as one hash (mesh B consumed
+    // dp(1) × micros(2) more batches: cursor 10 on both continuations)
+    assert_eq!(
+        train_state_hash(&params_mem, &adam, 10),
+        train_state_hash(&params_disk, &adam_disk, 10),
+        "post-resume state hash diverged between the two continuations"
+    );
 }
 
 /// Loss bookkeeping sanity: the replica losses the mesh reports sum to
